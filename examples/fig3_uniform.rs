@@ -1,0 +1,32 @@
+//! Figure 3 reproduction: precision vs online speedup on the synthetic
+//! **uniform** dataset (coordinates i.i.d. U[−1, 1)), K = 5 and 10.
+//!
+//! ```text
+//! cargo run --release --example fig3_uniform [-- --n 2000 --dim 4096 --full]
+//! ```
+
+use bandit_mips::cli::Args;
+use bandit_mips::data::synthetic::uniform_dataset;
+use bandit_mips::experiments::precision_speedup::{format_points, run_sweep, SweepConfig};
+
+fn main() {
+    let args = Args::parse_with(&["full"]);
+    let (n, dim, queries) = if args.has("full") {
+        (10_000, 30_000, 20)
+    } else {
+        (args.get("n", 2000usize), args.get("dim", 4096usize), args.get("queries", 12usize))
+    };
+    let ds = uniform_dataset(n, dim, 3033);
+    println!("== Figure 3: uniform synthetic, n={n}, N={dim} ==");
+    for k in [5usize, 10] {
+        let cfg = SweepConfig { k, queries, ..Default::default() };
+        println!("\n-- top-{k} --");
+        let pts = run_sweep(&ds, &cfg, None);
+        println!("{}", format_points(&pts));
+        std::fs::create_dir_all("results").ok();
+        let path = format!("results/fig3_k{k}.csv");
+        if bandit_mips::experiments::csv::sweep_csv(&path, &pts).is_ok() {
+            println!("(data written to {path})");
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! End-to-end serving driver — the full system on a real small workload.
+//!
+//! Pipeline exercised (all three layers compose):
+//!
+//! 1. **Data substrate**: synthetic Zipf-skewed implicit ratings →
+//!    implicit ALS → inner-product-preserving lift to the serving
+//!    dimension (the Figure-4 "Netflix-like" pipeline).
+//! 2. **Coordinator (L3)**: router → dynamic batcher → worker pool,
+//!    replaying a Poisson arrival trace of genuine user-factor queries
+//!    with mixed per-query (ε, δ) tiers.
+//! 3. **Runtime**: if `artifacts/` exists (built by `make artifacts`
+//!    from the L2 JAX model calling the L1 Pallas kernel), exact
+//!    re-scoring audits run through the PJRT executable; otherwise the
+//!    native engine.
+//!
+//! Reports throughput, latency percentiles, flop savings, and an
+//! accuracy audit (precision of served results vs ground truth on a
+//! sample). Recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```text
+//! cargo run --release --example serving_e2e [-- --items 2000 --dim 512 \
+//!     --queries 2000 --rate 500 --workers 2]
+//! ```
+
+use bandit_mips::algos::ground_truth;
+use bandit_mips::cli::Args;
+use bandit_mips::coordinator::{Backend, Coordinator, CoordinatorConfig, QueryRequest};
+use bandit_mips::data::{mf, workload};
+use bandit_mips::metrics::precision_at_k;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    bandit_mips::cli::init_logger();
+    let args = Args::parse_with(&["native"]);
+    let items = args.get("items", 2000usize);
+    let dim = args.get("dim", 512usize);
+    let n_queries = args.get("queries", 2000usize);
+    let rate = args.get("rate", 500.0f64);
+    let workers = args.get("workers", 2usize);
+
+    println!("== serving_e2e: MF recommender serving through the full stack ==");
+
+    // 1. Build the "real small workload": MF embeddings from synthetic
+    //    skewed implicit feedback.
+    let t0 = Instant::now();
+    let mfd = mf::netflix_like(items, dim, 20260710);
+    println!(
+        "built netflix-like dataset: {} item embeddings in R^{} \
+         (ALS rank 32, lifted), {} user queries, in {:?}",
+        mfd.dataset.n(),
+        mfd.dataset.dim(),
+        mfd.user_queries.len(),
+        t0.elapsed()
+    );
+
+    // 2. Coordinator with PJRT backend when artifacts exist.
+    let artifact_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let use_pjrt = !args.has("native")
+        && artifact_dir.join(format!("exact_b256_d{dim}.hlo.txt")).exists();
+    let backend = if use_pjrt {
+        println!("backend: PJRT (AOT artifacts from {})", artifact_dir.display());
+        Backend::Pjrt { artifact_dir: artifact_dir.clone() }
+    } else {
+        println!("backend: native (no exact_b*_d{dim} artifact found or --native)");
+        Backend::Native
+    };
+    let coord = Coordinator::new(
+        mfd.dataset.vectors.clone(),
+        CoordinatorConfig {
+            workers,
+            max_batch: 32,
+            batch_timeout: Duration::from_millis(2),
+            queue_capacity: 8192,
+            backend,
+            ..Default::default()
+        },
+    )?;
+
+    // 3. Poisson trace over genuine user factors with mixed (ε, δ) tiers.
+    let wl = workload::WorkloadConfig {
+        rate,
+        count: n_queries,
+        k: 10,
+        tiers: vec![(0.02, 0.05, 0.2), (0.05, 0.1, 0.5), (0.2, 0.2, 0.3)],
+        seed: 99,
+    };
+    let mut trace = workload::poisson_trace(&mfd.dataset, &wl);
+    // Replace synthetic query vectors with genuine user factors.
+    for (i, t) in trace.iter_mut().enumerate() {
+        t.vector = mfd.user_queries[i % mfd.user_queries.len()].clone();
+    }
+
+    println!(
+        "replaying {} queries at {:.0} qps (tiers: tight/default/fast ε) …",
+        trace.len(),
+        rate
+    );
+    let start = Instant::now();
+    let mut pending = Vec::with_capacity(trace.len());
+    let mut dropped = 0u64;
+    for t in &trace {
+        if let Some(sleep) = Duration::from_secs_f64(t.arrival).checked_sub(start.elapsed())
+        {
+            std::thread::sleep(sleep);
+        }
+        match coord.submit(QueryRequest::bounded_me(
+            t.vector.clone(),
+            t.k,
+            t.epsilon,
+            t.delta,
+        )) {
+            Ok(rx) => pending.push((t, rx)),
+            Err(_) => dropped += 1,
+        }
+    }
+    let mut responses = Vec::with_capacity(pending.len());
+    for (t, rx) in pending {
+        responses.push((t, rx.recv()?));
+    }
+    let wall = start.elapsed();
+
+    // 4. Report.
+    let m = coord.metrics();
+    let naive_flops_per_q = (mfd.dataset.n() * mfd.dataset.dim()) as f64;
+    let mean_flops = m.flops as f64 / m.queries.max(1) as f64;
+    println!("\n-- serving report --");
+    println!(
+        "served {}/{} queries ({} dropped by backpressure) in {:.2?} → {:.0} qps",
+        m.queries,
+        n_queries,
+        dropped,
+        wall,
+        m.queries as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency: service p50={:.3} ms p90={:.3} ms p99={:.3} ms; \
+         queue p99={:.3} ms; mean batch {:.2}",
+        m.service.0 * 1e3,
+        m.service.1 * 1e3,
+        m.service.2 * 1e3,
+        m.queue_wait.2 * 1e3,
+        m.mean_batch_size
+    );
+    println!(
+        "flops: mean {:.3e}/query = {:.1}× below naive ({:.3e})",
+        mean_flops,
+        naive_flops_per_q / mean_flops,
+        naive_flops_per_q
+    );
+
+    // Accuracy audit on a sample of served queries.
+    let audit = 50.min(responses.len());
+    let mut prec_sum = 0.0;
+    for (t, resp) in responses.iter().take(audit) {
+        let truth = ground_truth(&mfd.dataset.vectors, &t.vector, t.k);
+        prec_sum += precision_at_k(&truth, &resp.indices);
+    }
+    println!(
+        "accuracy audit: mean precision@10 over {audit} sampled queries = {:.3}",
+        prec_sum / audit as f64
+    );
+
+    coord.shutdown();
+    Ok(())
+}

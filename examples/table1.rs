@@ -1,0 +1,37 @@
+//! Table 1 reproduction (measured): preprocessing time, query time,
+//! query flops, precision, and the guarantee column for every method on
+//! one common dataset. The paper's table is analytic; this prints the
+//! measured counterpart (EXPERIMENTS.md shows them side by side).
+//!
+//! ```text
+//! cargo run --release --example table1 [-- --n 1000 --dim 1024 --full]
+//! ```
+
+use bandit_mips::cli::Args;
+use bandit_mips::data::synthetic::gaussian_dataset;
+use bandit_mips::experiments::table1::{format_rows, run, Table1Config};
+
+fn main() {
+    let args = Args::parse_with(&["full"]);
+    let (n, dim) = if args.has("full") {
+        (10_000, 8192)
+    } else {
+        (args.get("n", 1000usize), args.get("dim", 1024usize))
+    };
+    let ds = gaussian_dataset(n, dim, 77);
+    println!("== Table 1 (measured): n={n}, N={dim}, K=5, 10 queries ==\n");
+    let rows = run(&ds, &Table1Config::default());
+    println!("{}", format_rows(&rows));
+    std::fs::create_dir_all("results").ok();
+    if bandit_mips::experiments::csv::table1_csv("results/table1.csv", &rows).is_ok() {
+        println!("(data written to results/table1.csv)");
+    }
+    println!(
+        "paper's analytic columns for reference:\n\
+         BOUNDEDME: prep 0, query O(n·√N/ε·√log(1/δ)), ε-optimal w.p. 1−δ\n\
+         GREEDY:    prep O(Nn log n), query O(BN), no general guarantee\n\
+         LSH:       prep O(Nnab), query O(nN b / 2^a), angle-dependent prob.\n\
+         PCA:       prep O(N²n), query O(nN / 2^d), none\n\
+         RPT:       prep O(LNn log n), query O(L log n)+rank, not controllable"
+    );
+}

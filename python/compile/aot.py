@@ -1,0 +1,108 @@
+"""AOT lowering: JAX (L2 + L1) → HLO *text* artifacts for the rust runtime.
+
+Interchange is HLO text, NOT a serialized ``HloModuleProto``: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact naming (parsed by ``rust/src/runtime/mod.rs``):
+
+* ``exact_b{B}_d{D}.hlo.txt``   — inputs ``V[B,D] f32, q[D] f32``
+* ``partial_b{B}_c{C}.hlo.txt`` — inputs ``V[B,C] f32, q[C] f32``
+
+Usage::
+
+    python -m compile.aot --outdir ../artifacts \
+        [--exact 256x512,256x4096] [--partial 128x256]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_exact(b: int, d: int, flat: bool = True) -> str:
+    """Lower exact scoring at shape ``[b, d]``.
+
+    ``flat=True`` (default) emits the single-tile variant, which is what
+    the CPU PJRT backend executes efficiently; ``flat=False`` keeps the
+    TPU-style (128, 512) tiling (sequential slice loop on CPU).
+    """
+    spec_v = jax.ShapeDtypeStruct((b, d), jnp.float32)
+    spec_q = jax.ShapeDtypeStruct((d,), jnp.float32)
+    fn = model.exact_scores_flat if flat else model.exact_scores
+    return to_hlo_text(jax.jit(fn).lower(spec_v, spec_q))
+
+
+def lower_partial(b: int, c: int) -> str:
+    spec_v = jax.ShapeDtypeStruct((b, c), jnp.float32)
+    spec_q = jax.ShapeDtypeStruct((c,), jnp.float32)
+    return to_hlo_text(jax.jit(model.partial_scores).lower(spec_v, spec_q))
+
+
+def parse_shapes(spec: str) -> list[tuple[int, int]]:
+    """``"256x512,128x64"`` → ``[(256, 512), (128, 64)]``."""
+    out = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        a, b = part.lower().split("x")
+        out.append((int(a), int(b)))
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--exact",
+        default="256x512,256x4096,2048x512",
+        help="comma-separated BxD shape buckets for exact scoring",
+    )
+    ap.add_argument(
+        "--partial",
+        default="128x256",
+        help="comma-separated BxC shape buckets for partial scoring",
+    )
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.outdir, exist_ok=True)
+    written = []
+    for b, d in parse_shapes(args.exact):
+        path = os.path.join(args.outdir, f"exact_b{b}_d{d}.hlo.txt")
+        text = lower_exact(b, d)
+        with open(path, "w") as f:
+            f.write(text)
+        written.append((path, len(text)))
+    for b, c in parse_shapes(args.partial):
+        path = os.path.join(args.outdir, f"partial_b{b}_c{c}.hlo.txt")
+        text = lower_partial(b, c)
+        with open(path, "w") as f:
+            f.write(text)
+        written.append((path, len(text)))
+
+    for path, size in written:
+        print(f"wrote {size:>8} chars to {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

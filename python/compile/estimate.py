@@ -1,0 +1,143 @@
+"""Analytical TPU resource model for the L1 kernel (DESIGN.md
+§Hardware-Adaptation).
+
+Pallas runs in interpret mode on this image's CPU, so real-TPU
+performance cannot be *measured*; this module *estimates* it from first
+principles: VMEM footprint of the BlockSpec tiling, HBM traffic, and the
+roofline-implied bound (bandwidth vs MXU/VPU compute) for the blocked
+mat-vec `V[B, C] @ q[C]`.
+
+Numbers default to TPU v4-lite-ish constants; they parameterize so the
+DESIGN.md table can show sensitivity. Exercised by
+``python/tests/test_estimate.py`` and printable via::
+
+    python -m compile.estimate [--block-b 128 --block-c 512]
+"""
+
+from __future__ import annotations
+
+import argparse
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class TpuParams:
+    """Hardware constants for the estimate."""
+
+    vmem_bytes: int = 16 * 2**20  # ~16 MiB VMEM per core
+    hbm_gbps: float = 1200.0  # HBM bandwidth, GB/s
+    vpu_flops: float = 4.0e12  # f32 VPU peak, FLOP/s
+    mxu_flops: float = 137.0e12  # bf16 MXU peak, FLOP/s
+    clock_ghz: float = 1.05
+
+
+@dataclass(frozen=True)
+class KernelEstimate:
+    """Estimated execution profile of one `block_scores` call."""
+
+    block_b: int
+    block_c: int
+    grid: tuple
+    vmem_per_step_bytes: int
+    vmem_utilization: float
+    hbm_bytes: int
+    flops: int
+    arithmetic_intensity: float  # FLOP per HBM byte
+    bandwidth_bound: bool
+    est_seconds: float
+    est_flops_per_sec: float
+    roofline_fraction: float
+
+
+def estimate_block_scores(
+    b: int,
+    c: int,
+    *,
+    block_b: int = 128,
+    block_c: int = 512,
+    dtype_bytes: int = 4,
+    double_buffer: bool = True,
+    tpu: TpuParams = TpuParams(),
+) -> KernelEstimate:
+    """Estimate the kernel's resource profile at shape ``[b, c]``.
+
+    The kernel is a mat-vec: 2·b·c FLOPs over b·c + c + b words of HBM
+    traffic — arithmetic intensity ≈ 2/dtype_bytes FLOP/byte, firmly
+    bandwidth-bound on any TPU. The estimate therefore reports the
+    bandwidth roofline and the VMEM feasibility of the chosen BlockSpec.
+    """
+    block_b = min(block_b, b)
+    block_c = min(block_c, c)
+    grid = (max(b // max(block_b, 1), 1), max(c // max(block_c, 1), 1))
+
+    slab = block_b * block_c * dtype_bytes  # V tile
+    qslice = block_c * dtype_bytes
+    acc = block_b * 4  # f32 accumulator
+    vmem = (slab + qslice) * (2 if double_buffer else 1) + acc
+
+    hbm = (b * c + c * grid[0] + b) * dtype_bytes  # V once, q per row-block, out
+    flops = 2 * b * c
+    intensity = flops / hbm
+
+    t_bw = hbm / (tpu.hbm_gbps * 1e9)
+    t_compute = flops / tpu.vpu_flops  # mat-vec rides the VPU (no MXU reuse)
+    est_seconds = max(t_bw, t_compute)
+
+    return KernelEstimate(
+        block_b=block_b,
+        block_c=block_c,
+        grid=grid,
+        vmem_per_step_bytes=vmem,
+        vmem_utilization=vmem / tpu.vmem_bytes,
+        hbm_bytes=hbm,
+        flops=flops,
+        arithmetic_intensity=intensity,
+        bandwidth_bound=t_bw >= t_compute,
+        est_seconds=est_seconds,
+        est_flops_per_sec=flops / est_seconds,
+        roofline_fraction=(flops / est_seconds)
+        / min(tpu.vpu_flops, intensity * tpu.hbm_gbps * 1e9),
+    )
+
+
+def sweep_block_sizes(b: int, c: int, tpu: TpuParams = TpuParams()):
+    """Feasible (block_b, block_c) settings sorted by estimated time."""
+    candidates = []
+    for bb in (8, 32, 128, 256, 512):
+        for bc in (128, 256, 512, 1024, 2048):
+            if bb > b or bc > c:
+                continue
+            e = estimate_block_scores(b, c, block_b=bb, block_c=bc, tpu=tpu)
+            if e.vmem_utilization <= 0.9:
+                candidates.append(e)
+    return sorted(candidates, key=lambda e: (e.est_seconds, -e.vmem_utilization))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--b", type=int, default=10_000)
+    ap.add_argument("--c", type=int, default=100_000)
+    ap.add_argument("--block-b", type=int, default=128)
+    ap.add_argument("--block-c", type=int, default=512)
+    args = ap.parse_args(argv)
+
+    e = estimate_block_scores(args.b, args.c, block_b=args.block_b, block_c=args.block_c)
+    print(f"block_scores V[{args.b},{args.c}] @ q  (tile {e.block_b}x{e.block_c})")
+    print(f"  grid                {e.grid}")
+    print(f"  VMEM/step           {e.vmem_per_step_bytes/2**20:.2f} MiB "
+          f"({100*e.vmem_utilization:.1f}% of VMEM)")
+    print(f"  HBM traffic         {e.hbm_bytes/2**30:.3f} GiB")
+    print(f"  arithmetic intensity {e.arithmetic_intensity:.2f} FLOP/B "
+          f"({'bandwidth' if e.bandwidth_bound else 'compute'}-bound)")
+    print(f"  est. time           {e.est_seconds*1e3:.3f} ms "
+          f"({e.est_flops_per_sec/1e12:.2f} TFLOP/s, "
+          f"{100*e.roofline_fraction:.0f}% of roofline)")
+    print("\nbest tilings:")
+    for cand in sweep_block_sizes(args.b, args.c)[:5]:
+        print(f"  {cand.block_b:>4}x{cand.block_c:<5} est {cand.est_seconds*1e3:8.3f} ms"
+              f"  vmem {100*cand.vmem_utilization:5.1f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: blocked (partial) inner products.
+
+The compute hot-spot of the whole system is "score a block of vectors
+against a (slice of a) query": the exact re-ranking path uses the full
+width, and a BOUNDEDME elimination round is the same kernel over a
+coordinate slab (one *pull batch* per arm — see DESIGN.md
+§Hardware-Adaptation for how the paper's per-coordinate pulls become
+dense slabs via a per-query permutation).
+
+TPU thinking (the paper's cost model is scalar MACs; the TPU unit is an
+(8,128) VPU lane / MXU pass):
+
+* the grid tiles arms x coords into ``(block_b, block_c)`` VMEM slabs;
+* each grid step computes a dense mat-vec on the slab — contiguous HBM
+  reads, MXU-friendly;
+* the coordinate dimension is the *reduction* (minor) grid axis, so the
+  output block stays resident in VMEM while a row of slabs streams
+  through (double-buffered by Pallas).
+
+VMEM budget at the default (128, 512) f32 tile: 256 KiB for the slab +
+2 KiB for the query slice + 0.5 KiB accumulator, x2 for double
+buffering — comfortably inside ~16 MiB VMEM.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the rust
+runtime loads. Real-TPU perf is *estimated* in DESIGN.md, not measured.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matvec_kernel(v_ref, q_ref, o_ref):
+    """One grid step: o[bb] (+)= V[bb, bc] @ q[bc]."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Dense slab mat-vec; f32 accumulate (MXU pass on real TPU).
+    o_ref[...] += jnp.dot(
+        v_ref[...], q_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(total: int, want: int) -> int:
+    """Largest divisor of ``total`` that is <= ``want`` (>= 1)."""
+    b = min(want, total)
+    while total % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_c"))
+def block_scores(v, q, *, block_b: int = 128, block_c: int = 512):
+    """Inner products of every row of ``v [B, C]`` with ``q [C]`` -> ``[B]``.
+
+    Used both as the *exact* scorer (C = full dimension) and as the
+    *partial* scorer (C = one pull-batch slab). Shapes must tile; the
+    block sizes are clamped to divisors so odd shapes still work (tests
+    sweep them via hypothesis).
+    """
+    b, c = v.shape
+    assert q.shape == (c,), f"q shape {q.shape} != ({c},)"
+    bb = _pick_block(b, block_b)
+    bc = _pick_block(c, block_c)
+    grid = (b // bb, c // bc)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((bc,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(v, q)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the Pallas kernels (the correctness ground truth).
+
+Everything here is the obvious one-liner; the pytest suite asserts the
+Pallas implementations match these to float tolerance across a
+hypothesis-driven shape/dtype sweep.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def block_scores_ref(v, q):
+    """Reference for ``partial_dot.block_scores``: ``V @ q`` in f32."""
+    return jnp.dot(v.astype(jnp.float32), q.astype(jnp.float32))
+
+
+def topk_ref(scores, k: int):
+    """Reference top-k (descending) over a 1-D score vector."""
+    idx = jnp.argsort(-scores)[:k]
+    return scores[idx], idx

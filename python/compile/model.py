@@ -1,0 +1,65 @@
+"""L2: the JAX compute graph the rust coordinator executes via PJRT.
+
+Two entry points, both funnelling into the L1 Pallas kernel
+(:mod:`compile.kernels.partial_dot`):
+
+* :func:`exact_scores` — full-width inner products of a block of data
+  vectors against a query (the exact re-rank / naive backend);
+* :func:`partial_scores` — one BOUNDEDME pull batch: partial inner
+  products over a coordinate slab.
+
+Both are pure functions of fixed-shape f32 arrays so they AOT-lower
+cleanly (see :mod:`compile.aot`). Python never runs at serve time — the
+rust runtime loads the lowered HLO text.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.partial_dot import block_scores
+
+
+def exact_scores(v, q):
+    """Exact inner products: ``v [B, D] f32, q [D] f32 -> [B] f32``.
+
+    Returns a 1-tuple so the lowered computation has the tuple root the
+    rust loader unwraps with ``to_tuple1``.
+    """
+    return (block_scores(v, q),)
+
+
+def exact_scores_flat(v, q):
+    """`exact_scores` with a single-step grid (whole array as one tile).
+
+    On the CPU PJRT backend the interpret-mode Pallas grid lowers to a
+    sequential slice loop in HLO, which executes far slower than one
+    fused dot; artifacts destined for CPU serving use this flat variant
+    (grid (1,1) ⇒ a single XLA dot). On a real TPU the tiled
+    `exact_scores` is the right lowering (VMEM-sized slabs).
+    """
+    b, d = v.shape
+    return (block_scores(v, q, block_b=b, block_c=d),)
+
+
+def partial_scores(v_blk, q_blk):
+    """Partial sums over a coordinate slab: ``[B, C], [C] -> [B]``.
+
+    One elimination round pulls each surviving arm for a contiguous run
+    of (pre-permuted) coordinates; this is that run, batched across
+    arms. The caller accumulates across rounds and divides by the pull
+    count for the empirical mean.
+    """
+    return (block_scores(v_blk, q_blk, block_b=128, block_c=256),)
+
+
+def exact_scores_topk(v, q, k: int):
+    """Exact scores fused with a top-k selection (scores + indices).
+
+    Kept for completeness of the L2 surface (the serving path currently
+    ranks on the rust side where K is dynamic per request).
+    """
+    scores = block_scores(v, q)
+    top_scores, top_idx = jax.lax.top_k(scores, k)
+    return (top_scores, top_idx.astype(jnp.int32))

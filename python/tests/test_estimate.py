@@ -1,0 +1,58 @@
+"""Tests for the analytical TPU resource model."""
+
+import pytest
+
+from compile.estimate import (
+    KernelEstimate,
+    TpuParams,
+    estimate_block_scores,
+    sweep_block_sizes,
+)
+
+
+class TestEstimate:
+    def test_default_tile_fits_vmem(self):
+        e = estimate_block_scores(10_000, 100_000)
+        assert e.vmem_utilization < 0.1  # (128,512) f32 double-buffered ≈ 0.5 MiB
+        assert e.grid[0] >= 1 and e.grid[1] >= 1
+
+    def test_matvec_is_bandwidth_bound(self):
+        e = estimate_block_scores(10_000, 100_000)
+        assert e.bandwidth_bound
+        # intensity of f32 mat-vec ≈ 2 FLOP / 4 B = 0.5
+        assert 0.4 < e.arithmetic_intensity < 0.6
+
+    def test_roofline_fraction_near_one(self):
+        # The estimate *is* the roofline model, so the fraction is ~1 by
+        # construction — this pins the algebra.
+        e = estimate_block_scores(4096, 8192)
+        assert 0.95 < e.roofline_fraction <= 1.0001
+
+    def test_time_scales_linearly_in_data(self):
+        small = estimate_block_scores(1000, 10_000)
+        big = estimate_block_scores(2000, 10_000)
+        assert big.est_seconds == pytest.approx(2 * small.est_seconds, rel=0.05)
+
+    def test_blocks_clamped_to_shape(self):
+        e = estimate_block_scores(16, 64, block_b=128, block_c=512)
+        assert e.block_b == 16 and e.block_c == 64
+
+    def test_vmem_grows_with_tile(self):
+        a = estimate_block_scores(4096, 4096, block_b=32, block_c=128)
+        b = estimate_block_scores(4096, 4096, block_b=256, block_c=1024)
+        assert b.vmem_per_step_bytes > a.vmem_per_step_bytes
+
+    def test_sweep_returns_feasible_sorted(self):
+        cands = sweep_block_sizes(4096, 16384)
+        assert cands, "no feasible tilings?"
+        assert all(isinstance(c, KernelEstimate) for c in cands)
+        assert all(c.vmem_utilization <= 0.9 for c in cands)
+        times = [c.est_seconds for c in cands]
+        assert times == sorted(times)
+
+    def test_custom_hardware_params(self):
+        slow = TpuParams(hbm_gbps=100.0)
+        fast = TpuParams(hbm_gbps=2000.0)
+        es = estimate_block_scores(4096, 4096, tpu=slow)
+        ef = estimate_block_scores(4096, 4096, tpu=fast)
+        assert es.est_seconds > ef.est_seconds

@@ -1,0 +1,116 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle.
+
+This is the core correctness signal for everything the rust runtime
+executes — the AOT artifacts are lowered from exactly these functions.
+Hypothesis sweeps shapes/dtypes; fixed tests pin the shape buckets that
+ship as artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.partial_dot import block_scores, _pick_block
+from compile.kernels.ref import block_scores_ref, topk_ref
+
+
+def rand(shape, seed, dtype=np.float32, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+class TestPickBlock:
+    def test_divisor(self):
+        assert _pick_block(100, 8) == 5
+        assert _pick_block(128, 128) == 128
+        assert _pick_block(7, 4) == 1
+        assert _pick_block(12, 6) == 6
+
+    def test_never_zero(self):
+        for total in range(1, 40):
+            for want in range(1, 40):
+                b = _pick_block(total, want)
+                assert 1 <= b <= total and total % b == 0
+
+
+class TestBlockScoresFixed:
+    """Pin the artifact shape buckets exactly."""
+
+    @pytest.mark.parametrize("b,d", [(256, 512), (256, 4096), (128, 256)])
+    def test_artifact_buckets(self, b, d):
+        v = rand((b, d), seed=b + d)
+        q = rand((d,), seed=d)
+        got = np.asarray(block_scores(jnp.asarray(v), jnp.asarray(q)))
+        want = np.asarray(block_scores_ref(jnp.asarray(v), jnp.asarray(q)))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_tiny(self):
+        v = jnp.asarray([[1.0, 2.0], [3.0, 4.0]], dtype=jnp.float32)
+        q = jnp.asarray([1.0, -1.0], dtype=jnp.float32)
+        got = np.asarray(block_scores(v, q))
+        np.testing.assert_allclose(got, [-1.0, -1.0], atol=1e-6)
+
+    def test_zero_query(self):
+        v = rand((64, 32), seed=1)
+        q = np.zeros(32, dtype=np.float32)
+        got = np.asarray(block_scores(jnp.asarray(v), jnp.asarray(q)))
+        np.testing.assert_allclose(got, np.zeros(64), atol=0)
+
+    def test_block_sizes_do_not_change_result(self):
+        v = rand((96, 192), seed=2)
+        q = rand((192,), seed=3)
+        base = np.asarray(block_scores(jnp.asarray(v), jnp.asarray(q)))
+        for bb in (1, 3, 32, 96):
+            for bc in (1, 64, 192):
+                got = np.asarray(
+                    block_scores(jnp.asarray(v), jnp.asarray(q), block_b=bb, block_c=bc)
+                )
+                np.testing.assert_allclose(got, base, rtol=1e-4, atol=1e-4)
+
+    def test_large_magnitudes(self):
+        v = rand((32, 64), seed=4, scale=1e3)
+        q = rand((64,), seed=5, scale=1e3)
+        got = np.asarray(block_scores(jnp.asarray(v), jnp.asarray(q)))
+        want = v.astype(np.float64) @ q.astype(np.float64)
+        np.testing.assert_allclose(got, want, rtol=1e-3)
+
+
+class TestBlockScoresHypothesis:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        b=st.integers(min_value=1, max_value=64),
+        d=st.integers(min_value=1, max_value=300),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref_any_shape(self, b, d, seed):
+        v = rand((b, d), seed=seed)
+        q = rand((d,), seed=seed ^ 0xFFFF)
+        got = np.asarray(block_scores(jnp.asarray(v), jnp.asarray(q)))
+        want = np.asarray(block_scores_ref(jnp.asarray(v), jnp.asarray(q)))
+        assert got.shape == (b,)
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(min_value=1, max_value=32),
+        d=st.integers(min_value=1, max_value=128),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_bf16_inputs_accumulate_f32(self, b, d, seed):
+        v32 = rand((b, d), seed=seed)
+        q32 = rand((d,), seed=seed ^ 0xABC)
+        v = jnp.asarray(v32, dtype=jnp.bfloat16).astype(jnp.float32)
+        q = jnp.asarray(q32, dtype=jnp.bfloat16).astype(jnp.float32)
+        got = np.asarray(block_scores(v, q))
+        want = np.asarray(block_scores_ref(v, q))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+class TestTopKRef:
+    def test_topk_descending(self):
+        s = jnp.asarray([0.1, 5.0, -1.0, 3.0], dtype=jnp.float32)
+        vals, idx = topk_ref(s, 2)
+        np.testing.assert_allclose(np.asarray(vals), [5.0, 3.0])
+        np.testing.assert_array_equal(np.asarray(idx), [1, 3])

@@ -1,0 +1,54 @@
+//! Ablation A2: the concentration bound and the pull order — the two
+//! design choices DESIGN.md calls out.
+//!
+//! * bound: the paper's m(u) (Bardenet–Maillard without replacement) vs
+//!   classical Hoeffding sample sizes, across ε — quantifying "never
+//!   more than N pulls".
+//! * pull order: Permuted (paper-faithful gathers) vs BlockShuffled
+//!   (TPU/cache-friendly slabs) vs Sequential, measuring wall-clock per
+//!   query at equal flop counts.
+
+use bandit_mips::algos::{BoundedMeIndex, MipsIndex, MipsParams};
+use bandit_mips::bandit::{hoeffding_sample_size, m_bounded, PullOrder};
+use bandit_mips::benchkit::{Bencher, Reporter};
+use bandit_mips::data::synthetic::gaussian_dataset;
+
+fn main() {
+    let b = Bencher::quick();
+    let mut r = Reporter::new();
+
+    // Bound comparison table.
+    println!("-- m(u) vs Hoeffding sample sizes (N = 100000, δ = 0.1) --");
+    println!("{:<10} {:>12} {:>12} {:>8}", "ε", "m(u)", "Hoeffding", "ratio");
+    for eps in [0.3, 0.1, 0.03, 0.01, 0.003, 0.001] {
+        let m = m_bounded(eps, 0.1, 100_000, 1.0);
+        let h = hoeffding_sample_size(eps, 0.1, 1.0);
+        println!("{eps:<10} {m:>12} {h:>12} {:>7.1}x", h as f64 / m as f64);
+    }
+
+    // Cost of evaluating the bound itself (it sits in the round loop).
+    r.bench(&b, "bounds/m_bounded eval", || m_bounded(0.05, 0.1, 100_000, 1.0));
+    r.bench(&b, "bounds/hoeffding eval", || hoeffding_sample_size(0.05, 0.1, 1.0));
+
+    // Pull-order ablation: same algorithm, different memory behaviour.
+    let ds = gaussian_dataset(1500, 4096, 21);
+    let q = ds.sample_query(2);
+    let p = MipsParams { k: 5, epsilon: 0.05, delta: 0.1, seed: 3 };
+    for (order, label) in [
+        (PullOrder::Permuted, "permuted (paper)"),
+        (PullOrder::BlockShuffled(64), "block-shuffled w=64"),
+        (PullOrder::BlockShuffled(512), "block-shuffled w=512"),
+        (PullOrder::Sequential, "sequential"),
+    ] {
+        let idx = BoundedMeIndex::with_order(ds.vectors.clone(), order);
+        let mut flops = 0;
+        r.bench(&b, &format!("pull_order/{label}"), || {
+            let res = idx.query(&q, &p);
+            flops = res.flops;
+            res.indices[0]
+        });
+        println!("    flops = {flops}");
+    }
+
+    r.finish("ablation A2: bounds + pull order");
+}

@@ -1,0 +1,58 @@
+//! Ablation A3 (Remark 1): extreme-point filtering — preprocessing cost
+//! vs per-query savings vs recall, across data geometry (isotropic
+//! Gaussian has ~all points extreme; low-rank data has few).
+
+use bandit_mips::algos::hull::{BoundedMeHullIndex, ExtremePointFilter};
+use bandit_mips::algos::{ground_truth, BoundedMeIndex, MipsIndex, MipsParams};
+use bandit_mips::benchkit::{Bencher, Reporter};
+use bandit_mips::data::synthetic::{gaussian_dataset, low_rank_dataset};
+use bandit_mips::metrics::precision_at_k;
+
+fn main() {
+    let b = Bencher::quick();
+    let mut r = Reporter::new();
+    let n = 800;
+
+    for (label, ds) in [
+        ("gaussian(iso)", gaussian_dataset(n, 256, 1)),
+        ("low_rank(r=4)", low_rank_dataset(n, 256, 4, 0.02, 2)),
+        ("low_rank(r=16)", low_rank_dataset(n, 256, 16, 0.02, 3)),
+    ] {
+        // Filter construction cost + retained fraction.
+        let mut kept = 0usize;
+        r.bench(&b, &format!("hull/build m=128 t=2 {label}"), || {
+            let f = ExtremePointFilter::build(&ds.vectors, 128, 2, 7);
+            kept = f.extreme_ids.len();
+            kept
+        });
+        println!("    kept {kept}/{n} ({:.1}%)", 100.0 * kept as f64 / n as f64);
+
+        // Query cost + precision: full vs hull-restricted.
+        let full = BoundedMeIndex::new(ds.vectors.clone());
+        let hull = BoundedMeHullIndex::new(ds.vectors.clone(), 128, 2, 7);
+        let p = MipsParams { k: 5, epsilon: 0.05, delta: 0.1, seed: 0 };
+        for (name, idx) in [("full", &full as &dyn MipsIndex), ("hull", &hull)] {
+            let mut prec = 0.0;
+            let mut flops = 0u64;
+            let queries = 6;
+            for s in 0..queries {
+                let q = ds.sample_query(s);
+                let truth = ground_truth(&ds.vectors, &q, 5);
+                let res = idx.query(&q, &MipsParams { seed: s, ..p });
+                prec += precision_at_k(&truth, &res.indices);
+                flops += res.flops;
+            }
+            let q0 = ds.sample_query(99);
+            r.bench(&b, &format!("hull/query {name} {label}"), || {
+                idx.query(&q0, &p).flops
+            });
+            println!(
+                "    {name}: precision {:.3}, mean flops {:.0}",
+                prec / queries as f64,
+                flops as f64 / queries as f64
+            );
+        }
+    }
+
+    r.finish("ablation A3: Remark-1 extreme-point filter");
+}

@@ -1,0 +1,48 @@
+//! Bench: Figure-1 pipeline — BOUNDEDME sample complexity on the
+//! adversarial environment across (ε, δ). Regenerates the paper's
+//! Figure 1 data and times one full guarantee-validation sweep.
+
+use bandit_mips::bandit::{AdversarialArms, BoundedMe, BoundedMeConfig};
+use bandit_mips::benchkit::{Bencher, Reporter};
+use bandit_mips::experiments::fig1::{per_epsilon, run, Fig1Config};
+
+fn main() {
+    let b = Bencher::quick();
+    let mut r = Reporter::new();
+
+    // Per-(ε, δ) single-run cost on the adversarial environment.
+    for (eps, delta) in [(0.6, 0.3), (0.3, 0.1), (0.1, 0.05), (0.05, 0.01)] {
+        let env = AdversarialArms::generate(1000, 2000, 42);
+        let algo = BoundedMe::new(BoundedMeConfig { k: 1, epsilon: eps, delta });
+        let mut pulls = 0u64;
+        r.bench(&b, &format!("fig1/bounded_me eps={eps} delta={delta}"), || {
+            let out = algo.run(&env);
+            pulls = out.result.total_pulls;
+            out.result.arms[0]
+        });
+        println!(
+            "    pulls = {pulls} ({:.1}% of exhaustive), subopt(best run) recorded in example",
+            100.0 * pulls as f64 / (1000.0 * 2000.0)
+        );
+    }
+
+    // One complete (reduced) Figure-1 sweep, validated.
+    let cfg = Fig1Config {
+        n_arms: 300,
+        n_list: 600,
+        epsilons: vec![0.1, 0.3, 0.6],
+        deltas: vec![0.05, 0.2],
+        trials: 8,
+        seed: 1,
+    };
+    let mut holds = true;
+    r.bench(&b, "fig1/full_sweep(300x600, 6 points, 8 trials)", || {
+        let pts = run(&cfg);
+        holds = per_epsilon(&pts).iter().all(|&(_, _, h)| h);
+        pts.len()
+    });
+    println!("    guarantee holds across sweep: {holds}");
+    assert!(holds, "Figure 1 guarantee violated in bench run");
+
+    r.finish("fig1");
+}

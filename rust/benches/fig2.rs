@@ -1,0 +1,75 @@
+//! Bench: Figures 2–4 engine — per-algorithm query cost at comparable
+//! precision on Gaussian / uniform / MF data, plus the end-to-end sweep.
+//!
+//! The paper's headline: BOUNDEDME is 5–10× faster (flop-wise) than the
+//! baselines at high precision. This bench prints the measured
+//! flops/speedups that EXPERIMENTS.md quotes.
+
+use bandit_mips::algos::{
+    BoundedMeIndex, GreedyMipsIndex, LshMipsIndex, MipsIndex, MipsParams, NaiveIndex,
+    PcaMipsIndex,
+};
+use bandit_mips::benchkit::{Bencher, Reporter};
+use bandit_mips::data::synthetic::{gaussian_dataset, uniform_dataset};
+use bandit_mips::experiments::precision_speedup::{run_sweep, SweepConfig};
+
+fn main() {
+    let b = Bencher::quick();
+    let mut r = Reporter::new();
+    let n = 1500;
+    let dim = 2048;
+
+    for (label, ds) in [
+        ("gaussian", gaussian_dataset(n, dim, 1)),
+        ("uniform", uniform_dataset(n, dim, 2)),
+    ] {
+        let q = ds.sample_query(3);
+        let p = MipsParams { k: 5, epsilon: 0.05, delta: 0.1, seed: 0 };
+
+        let naive = NaiveIndex::new(ds.vectors.clone());
+        let mut naive_flops = 0;
+        r.bench(&b, &format!("{label}/naive query"), || {
+            let res = naive.query(&q, &p);
+            naive_flops = res.flops;
+            res.indices[0]
+        });
+
+        let bme = BoundedMeIndex::new(ds.vectors.clone());
+        let mut flops = 0;
+        r.bench(&b, &format!("{label}/bounded_me query eps=0.05"), || {
+            let res = bme.query(&q, &p);
+            flops = res.flops;
+            res.indices[0]
+        });
+        println!(
+            "    flop speedup vs naive: {:.1}x",
+            naive_flops as f64 / flops as f64
+        );
+
+        let greedy = GreedyMipsIndex::new(ds.vectors.clone(), n / 5);
+        r.bench(&b, &format!("{label}/greedy query B=20%"), || {
+            greedy.query(&q, &p).flops
+        });
+
+        let lsh = LshMipsIndex::new(ds.vectors.clone(), 8, 16, 4);
+        r.bench(&b, &format!("{label}/lsh query a=8 b=16"), || lsh.query(&q, &p).flops);
+
+        let pca = PcaMipsIndex::new(ds.vectors.clone(), 4, 5);
+        r.bench(&b, &format!("{label}/pca query d=4"), || pca.query(&q, &p).flops);
+    }
+
+    // Whole-sweep cost (the figure generator itself).
+    let ds = gaussian_dataset(500, 512, 9);
+    let cfg = SweepConfig {
+        k: 5,
+        queries: 4,
+        bme_epsilons: vec![0.05, 0.3],
+        greedy_budgets: vec![0.25],
+        lsh_settings: vec![(6, 8)],
+        pca_depths: vec![3],
+        ..Default::default()
+    };
+    r.bench(&b, "fig2/sweep(500x512, 5 points)", || run_sweep(&ds, &cfg, None).len());
+
+    r.finish("fig2 (precision-vs-speedup engine)");
+}

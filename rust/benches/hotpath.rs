@@ -1,0 +1,79 @@
+//! Bench P2: the compute hot paths — native dot kernels, pull-batch
+//! gathers, and the PJRT artifact vs the native engine.
+//!
+//! This is the profile target of the performance pass (EXPERIMENTS.md
+//! §Perf): per-layer before/after numbers come from here.
+
+use bandit_mips::benchkit::{Bencher, Reporter};
+use bandit_mips::linalg::{dot, Matrix, Rng};
+use bandit_mips::runtime::{NativeEngine, PjrtEngine, ScoringEngine};
+use std::path::Path;
+
+fn main() {
+    let b = Bencher::quick();
+    let mut r = Reporter::new();
+    let mut rng = Rng::new(3);
+
+    // L0: the scalar dot kernel at serving dims.
+    for dim in [512usize, 4096, 32768] {
+        let a: Vec<f32> = rng.gaussian_vec(dim);
+        let q: Vec<f32> = rng.gaussian_vec(dim);
+        let m = b.iter(&format!("dot/{dim}"), || dot(&a, &q));
+        let gflops = 2.0 * dim as f64 / m.mean / 1e9;
+        println!("bench dot/{dim}: {:.2} GFLOP/s", gflops);
+        r.push(m);
+    }
+
+    // Gather-based pull batch (the Permuted pull order's inner loop) vs
+    // dense slab.
+    let dim = 4096;
+    let data = Matrix::from_fn(256, dim, |_, _| rng.gaussian() as f32);
+    let q: Vec<f32> = rng.gaussian_vec(dim);
+    {
+        use bandit_mips::bandit::{MatrixArms, PullOrder, RewardSource};
+        for (order, label) in [
+            (PullOrder::Permuted, "gather"),
+            (PullOrder::BlockShuffled(64), "block64"),
+            (PullOrder::Sequential, "dense"),
+        ] {
+            let arms = MatrixArms::new(&data, &q, 4.0, order, 1);
+            r.bench(&b, &format!("pull_batch/{label} 256x1024"), || {
+                let mut s = 0f64;
+                for arm in 0..256 {
+                    s += arms.pull_range(arm, 0, 1024);
+                }
+                s as i64
+            });
+        }
+    }
+
+    // Engines: native vs PJRT artifact (exact 256x512 block).
+    let dim = 512;
+    let block = Matrix::from_fn(256, dim, |_, _| rng.gaussian() as f32);
+    let q: Vec<f32> = rng.gaussian_vec(dim);
+    let flat = block.as_slice();
+    r.bench(&b, "engine/native 256x512", || {
+        NativeEngine.score_block(flat, 256, &q).unwrap().len()
+    });
+    let artifact_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifact_dir.join("exact_b256_d512.hlo.txt").exists() {
+        let engine = PjrtEngine::new(artifact_dir.clone(), dim).expect("pjrt engine");
+        r.bench(&b, "engine/pjrt copy 256x512", || {
+            engine.score_block(flat, 256, &q).unwrap().len()
+        });
+        // Device-resident dataset: per-query upload is just q.
+        let big = Matrix::from_fn(2048, dim, |r, c| ((r * 31 + c) % 17) as f32 * 0.1);
+        let resident =
+            PjrtEngine::with_dataset(artifact_dir, &big).expect("resident engine");
+        r.bench(&b, "engine/pjrt resident 2048x512 (full dataset)", || {
+            resident.score_dataset(&big, &q).unwrap().len()
+        });
+        r.bench(&b, "engine/native 2048x512 (full dataset)", || {
+            NativeEngine.score_dataset(&big, &q).unwrap().len()
+        });
+    } else {
+        println!("bench engine/pjrt 256x512: SKIPPED (run `make artifacts`)");
+    }
+
+    r.finish("hotpath");
+}

@@ -1,0 +1,91 @@
+//! Bench P1: the serving coordinator under closed-loop load — batcher
+//! and queue overhead, worker scaling, exact vs BOUNDEDME modes.
+
+use bandit_mips::benchkit::{Bencher, Reporter};
+use bandit_mips::coordinator::{
+    Backend, Coordinator, CoordinatorConfig, QueryRequest,
+};
+use bandit_mips::data::synthetic::gaussian_dataset;
+use std::time::Duration;
+
+fn run_load(coord: &Coordinator, queries: usize, q: &[f32]) -> f64 {
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::with_capacity(queries);
+    for i in 0..queries {
+        let req = QueryRequest {
+            vector: q.to_vec(),
+            k: 5,
+            epsilon: 0.05,
+            delta: 0.1,
+            mode: bandit_mips::coordinator::QueryMode::BoundedMe,
+            seed: i as u64,
+            deadline: None,
+        };
+        rxs.push(coord.submit(req).expect("submit"));
+    }
+    for rx in rxs {
+        rx.recv().expect("recv");
+    }
+    queries as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let b = Bencher::new(Duration::from_millis(100), Duration::from_secs(1));
+    let mut r = Reporter::new();
+    let ds = gaussian_dataset(1000, 1024, 31);
+    let q = ds.sample_query(1);
+
+    for workers in [1usize, 2, 4] {
+        let coord = Coordinator::new(
+            ds.vectors.clone(),
+            CoordinatorConfig {
+                workers,
+                max_batch: 32,
+                batch_timeout: Duration::from_micros(500),
+                queue_capacity: 4096,
+                backend: Backend::Native,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut qps = 0.0;
+        r.bench(&b, &format!("serving/closed_loop workers={workers} (100q)"), || {
+            qps = run_load(&coord, 100, &q);
+            qps as u64
+        });
+        let m = coord.metrics();
+        println!(
+            "    ~{qps:.0} qps; mean batch {:.1}; service p50 {:.3} ms; queue p99 {:.3} ms",
+            m.mean_batch_size,
+            m.service.0 * 1e3,
+            m.queue_wait.2 * 1e3
+        );
+        coord.shutdown();
+    }
+
+    // Coordinator overhead: single trivial exact query on a tiny dataset
+    // (upper-bounds router+batcher+channel cost per request).
+    let tiny = gaussian_dataset(8, 16, 5);
+    let coord = Coordinator::new(
+        tiny.vectors.clone(),
+        CoordinatorConfig {
+            workers: 1,
+            max_batch: 1,
+            batch_timeout: Duration::from_micros(1),
+            queue_capacity: 64,
+            backend: Backend::Native,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let tq = tiny.sample_query(1);
+    r.bench(&b, "serving/per_request_overhead (8x16 exact)", || {
+        coord
+            .query_blocking(QueryRequest::exact(tq.clone(), 1))
+            .unwrap()
+            .indices[0]
+    });
+    coord.shutdown();
+
+    r.finish("serving coordinator");
+}

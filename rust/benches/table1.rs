@@ -1,0 +1,50 @@
+//! Bench: Table-1 columns — preprocessing cost of every index and the
+//! resulting query cost, measured on one dataset.
+
+use bandit_mips::algos::{
+    BoundedMeIndex, GreedyMipsIndex, LshMipsIndex, MipsIndex, MipsParams, PcaMipsIndex,
+    RptMipsIndex,
+};
+use bandit_mips::benchkit::{Bencher, Reporter};
+use bandit_mips::data::synthetic::gaussian_dataset;
+
+fn main() {
+    let b = Bencher::quick();
+    let mut r = Reporter::new();
+    let n = 1000;
+    let dim = 1024;
+    let ds = gaussian_dataset(n, dim, 11);
+    let q = ds.sample_query(1);
+    let p = MipsParams { k: 5, epsilon: 0.05, delta: 0.1, seed: 0 };
+
+    // Preprocessing cost (index construction).
+    r.bench(&b, "prep/bounded_me (scan only)", || {
+        BoundedMeIndex::new(ds.vectors.clone()).max_abs_coord()
+    });
+    r.bench(&b, "prep/greedy (sorted columns)", || {
+        GreedyMipsIndex::new(ds.vectors.clone(), n / 5).preprocessing_seconds()
+    });
+    r.bench(&b, "prep/lsh a=8 b=16", || {
+        LshMipsIndex::new(ds.vectors.clone(), 8, 16, 1).preprocessing_seconds()
+    });
+    r.bench(&b, "prep/pca d=4", || {
+        PcaMipsIndex::new(ds.vectors.clone(), 4, 1).preprocessing_seconds()
+    });
+    r.bench(&b, "prep/rpt L=8 leaf=64", || {
+        RptMipsIndex::new(ds.vectors.clone(), 8, 64, 1).preprocessing_seconds()
+    });
+
+    // Query cost on prebuilt indexes.
+    let bme = BoundedMeIndex::new(ds.vectors.clone());
+    let greedy = GreedyMipsIndex::new(ds.vectors.clone(), n / 5);
+    let lsh = LshMipsIndex::new(ds.vectors.clone(), 8, 16, 1);
+    let pca = PcaMipsIndex::new(ds.vectors.clone(), 4, 1);
+    let rpt = RptMipsIndex::new(ds.vectors.clone(), 8, 64, 1);
+    r.bench(&b, "query/bounded_me", || bme.query(&q, &p).flops);
+    r.bench(&b, "query/greedy", || greedy.query(&q, &p).flops);
+    r.bench(&b, "query/lsh", || lsh.query(&q, &p).flops);
+    r.bench(&b, "query/pca", || pca.query(&q, &p).flops);
+    r.bench(&b, "query/rpt", || rpt.query(&q, &p).flops);
+
+    r.finish("table1 (preprocessing vs query cost)");
+}

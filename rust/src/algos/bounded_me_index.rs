@@ -1,0 +1,168 @@
+//! BOUNDEDME as a [`MipsIndex`]: the paper's contribution on the MIPS
+//! interface. Zero preprocessing; per-query (ε, δ, K) knobs.
+
+use super::{MipsIndex, MipsParams, MipsResult};
+use crate::bandit::{BoundedMe, BoundedMeConfig, MatrixArms, PullOrder, RewardSource};
+use crate::linalg::Matrix;
+
+/// Preprocessing-free MIPS with a suboptimality guarantee: for any query
+/// and user-chosen `0 < ε, δ < 1`, the returned set is ε-optimal (in
+/// mean-reward units, `qᵀv/N`) with probability ≥ 1 − δ.
+pub struct BoundedMeIndex {
+    data: Matrix,
+    /// Per-coordinate maxima `colmax[j] = max_i |v_i^(j)|`. The only
+    /// dataset-wide metadata the method needs: one streaming scan at
+    /// load time, no data structure — keeping the paper's "zero
+    /// preprocessing" property in spirit and in wall-clock. Per query
+    /// the reward bound is `b = max_j colmax[j]·|q_j|`, much tighter
+    /// than the global `max|v|·max|q|`.
+    colmax: Vec<f32>,
+    order: PullOrder,
+}
+
+impl BoundedMeIndex {
+    /// Build over a vector set with the default (fully permuted) pull
+    /// order.
+    pub fn new(data: Matrix) -> Self {
+        Self::with_order(data, PullOrder::Permuted)
+    }
+
+    /// Build with an explicit pull order (see [`PullOrder`]; the
+    /// block-shuffled order is the cache-friendly serving default).
+    pub fn with_order(data: Matrix, order: PullOrder) -> Self {
+        let colmax = column_maxima(&data);
+        Self { data, colmax, order }
+    }
+
+    /// The dataset's largest |coordinate| (coarse reward-range input).
+    pub fn max_abs_coord(&self) -> f32 {
+        self.colmax.iter().fold(f32::MIN_POSITIVE, |m, &x| m.max(x))
+    }
+
+    /// The per-query reward bound `b = max_j colmax[j]·|q_j|`.
+    pub fn reward_bound(&self, q: &[f32]) -> f32 {
+        self.colmax
+            .iter()
+            .zip(q)
+            .fold(f32::MIN_POSITIVE, |m, (&c, &qj)| m.max(c * qj.abs()))
+    }
+}
+
+/// `colmax[j] = max_i |v_i^(j)|` over the dataset (one scan).
+pub fn column_maxima(data: &Matrix) -> Vec<f32> {
+    let mut colmax = vec![f32::MIN_POSITIVE; data.cols()];
+    for row in data.iter_rows() {
+        for (m, &x) in colmax.iter_mut().zip(row) {
+            *m = m.max(x.abs());
+        }
+    }
+    colmax
+}
+
+impl MipsIndex for BoundedMeIndex {
+    fn name(&self) -> &str {
+        match self.order {
+            PullOrder::Permuted => "BoundedME",
+            PullOrder::BlockShuffled(_) => "BoundedME(block)",
+            PullOrder::Sequential => "BoundedME(seq)",
+        }
+    }
+
+    fn data(&self) -> &Matrix {
+        &self.data
+    }
+
+    fn preprocessing_seconds(&self) -> f64 {
+        0.0
+    }
+
+    fn query(&self, q: &[f32], params: &MipsParams) -> MipsResult {
+        let bound = self.reward_bound(q);
+        let arms = MatrixArms::new(&self.data, q, bound, self.order, params.seed);
+        let n_list = arms.list_len() as f64;
+        // `params.epsilon` is range-relative (paper normalization: rewards
+        // in [0,1] ⇒ ε is a fraction of the reward range). MIPS rewards
+        // span ±max|v|·max|q|, so scale ε by the actual range width.
+        let eff_epsilon = params.epsilon * arms.range_width();
+        let algo = BoundedMe::new(BoundedMeConfig {
+            k: params.k.max(1),
+            epsilon: eff_epsilon.max(f64::MIN_POSITIVE),
+            delta: params.delta.clamp(f64::MIN_POSITIVE, 1.0 - 1e-12),
+        });
+        let out = algo.run(&arms);
+        MipsResult {
+            indices: out.result.arms,
+            // Empirical mean × N ≈ inner product estimate.
+            scores: out.result.means.iter().map(|&m| (m * n_list) as f32).collect(),
+            flops: out.result.total_pulls,
+            candidates: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::ground_truth;
+    use crate::linalg::Rng;
+
+    fn gaussian(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, d, |_, _| rng.gaussian() as f32)
+    }
+
+    #[test]
+    fn small_epsilon_recovers_exact_top_k() {
+        let data = gaussian(80, 64, 1);
+        let idx = BoundedMeIndex::new(data.clone());
+        let q: Vec<f32> = Rng::new(99).gaussian_vec(64);
+        let res = idx.query(
+            &q,
+            &MipsParams { k: 3, epsilon: 1e-9, delta: 0.05, seed: 7 },
+        );
+        // ε → 0 forces t_l = N: elimination on exact means ⇒ exact answer.
+        let truth = ground_truth(&data, &q, 3);
+        let mut got = res.indices.clone();
+        got.sort_unstable();
+        let mut want = truth.clone();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn flops_never_exceed_exhaustive() {
+        let data = gaussian(64, 50, 2);
+        let idx = BoundedMeIndex::new(data);
+        let q: Vec<f32> = Rng::new(3).gaussian_vec(50);
+        for eps in [1e-9, 0.01, 0.1, 0.5] {
+            let res = idx.query(&q, &MipsParams { k: 1, epsilon: eps, delta: 0.1, seed: 1 });
+            assert!(res.flops <= 64 * 50, "eps={eps}: flops={}", res.flops);
+        }
+    }
+
+    #[test]
+    fn larger_epsilon_fewer_flops() {
+        let data = gaussian(128, 256, 4);
+        let idx = BoundedMeIndex::new(data);
+        let q: Vec<f32> = Rng::new(5).gaussian_vec(256);
+        let tight = idx.query(&q, &MipsParams { k: 1, epsilon: 0.01, delta: 0.1, seed: 1 });
+        let loose = idx.query(&q, &MipsParams { k: 1, epsilon: 0.8, delta: 0.1, seed: 1 });
+        assert!(loose.flops < tight.flops, "{} !< {}", loose.flops, tight.flops);
+    }
+
+    #[test]
+    fn block_order_matches_quality() {
+        let data = gaussian(100, 128, 6);
+        let idx = BoundedMeIndex::with_order(data.clone(), PullOrder::BlockShuffled(16));
+        assert_eq!(idx.name(), "BoundedME(block)");
+        let q: Vec<f32> = Rng::new(7).gaussian_vec(128);
+        let res = idx.query(&q, &MipsParams { k: 1, epsilon: 1e-9, delta: 0.1, seed: 2 });
+        assert_eq!(res.indices, ground_truth(&data, &q, 1));
+    }
+
+    #[test]
+    fn zero_preprocessing() {
+        let idx = BoundedMeIndex::new(gaussian(10, 10, 8));
+        assert_eq!(idx.preprocessing_seconds(), 0.0);
+    }
+}

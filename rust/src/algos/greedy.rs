@@ -1,0 +1,216 @@
+//! GREEDY-MIPS (Yu et al., NIPS 2017).
+//!
+//! Preprocessing sorts the items along every coordinate
+//! (`O(N·n·log n)`). At query time, the entries `z_{ij} = q^(j)·v_i^(j)`
+//! form `N` implicitly-sorted lists (one per coordinate, direction given
+//! by `sign(q^(j))`); a heap-based *candidate screening* pass greedily
+//! pops the globally largest `z` entries until `B` distinct items are
+//! collected, which are then ranked exactly. The budget `B` is the only
+//! accuracy knob — there is no suboptimality guarantee (Motivation II of
+//! the BOUNDEDME paper).
+
+use super::{exact_rank, MipsIndex, MipsParams, MipsResult};
+use crate::linalg::Matrix;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+/// GREEDY-MIPS index: per-coordinate sorted item lists + budgeted
+/// screening.
+pub struct GreedyMipsIndex {
+    data: Matrix,
+    /// `sorted[j]` = item ids sorted by ascending `v^(j)`; the screening
+    /// walks it from either end depending on `sign(q_j)`.
+    sorted: Vec<Vec<u32>>,
+    /// Candidate budget `B`.
+    budget: usize,
+    prep_seconds: f64,
+}
+
+/// Heap entry for the screening phase.
+#[derive(PartialEq)]
+struct Entry {
+    z: f32,
+    dim: u32,
+    /// Steps taken along `sorted[dim]` (0 = best item for this dim).
+    rank: u32,
+}
+
+impl Eq for Entry {}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.z
+            .partial_cmp(&other.z)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(other.dim.cmp(&self.dim))
+    }
+}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl GreedyMipsIndex {
+    /// Build the per-coordinate sorted index. `budget` is the number of
+    /// distinct candidates screened per query (the paper sweeps it from
+    /// a few items to `n`).
+    pub fn new(data: Matrix, budget: usize) -> Self {
+        let t0 = Instant::now();
+        let n = data.rows();
+        let mut sorted = Vec::with_capacity(data.cols());
+        let mut ids: Vec<u32> = (0..n as u32).collect();
+        for j in 0..data.cols() {
+            ids.sort_by(|&a, &b| {
+                data.get(a as usize, j)
+                    .partial_cmp(&data.get(b as usize, j))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            sorted.push(ids.clone());
+        }
+        let prep_seconds = t0.elapsed().as_secs_f64();
+        Self { data, sorted, budget: budget.max(1), prep_seconds }
+    }
+
+    /// Item id at screening rank `r` for dimension `dim` under query sign.
+    #[inline]
+    fn item_at(&self, dim: usize, rank: usize, positive: bool) -> u32 {
+        let list = &self.sorted[dim];
+        if positive {
+            list[list.len() - 1 - rank]
+        } else {
+            list[rank]
+        }
+    }
+}
+
+impl MipsIndex for GreedyMipsIndex {
+    fn name(&self) -> &str {
+        "Greedy"
+    }
+
+    fn data(&self) -> &Matrix {
+        &self.data
+    }
+
+    fn preprocessing_seconds(&self) -> f64 {
+        self.prep_seconds
+    }
+
+    fn query(&self, q: &[f32], params: &MipsParams) -> MipsResult {
+        let n = self.data.rows();
+        let budget = self.budget.min(n);
+        let mut flops = 0u64;
+
+        // Seed the heap with each dimension's best entry.
+        let mut heap = BinaryHeap::with_capacity(q.len());
+        for (j, &qj) in q.iter().enumerate() {
+            if qj == 0.0 || n == 0 {
+                continue;
+            }
+            let item = self.item_at(j, 0, qj > 0.0);
+            let z = qj * self.data.get(item as usize, j);
+            flops += 1;
+            heap.push(Entry { z, dim: j as u32, rank: 0 });
+        }
+
+        // Screening: pop globally-largest z entries, collect distinct items.
+        let mut visited = vec![false; n];
+        let mut candidates = Vec::with_capacity(budget);
+        while candidates.len() < budget {
+            let Some(Entry { dim, rank, .. }) = heap.pop() else { break };
+            let dim_us = dim as usize;
+            let qj = q[dim_us];
+            let item = self.item_at(dim_us, rank as usize, qj > 0.0);
+            if !visited[item as usize] {
+                visited[item as usize] = true;
+                candidates.push(item as usize);
+            }
+            let next = rank as usize + 1;
+            if next < n {
+                let nitem = self.item_at(dim_us, next, qj > 0.0);
+                let z = qj * self.data.get(nitem as usize, dim_us);
+                flops += 1;
+                heap.push(Entry { z, dim, rank: next as u32 });
+            }
+        }
+
+        let (ranked, rank_flops, cand_count) =
+            exact_rank(&self.data, q, candidates, params.k);
+        MipsResult {
+            indices: ranked.iter().map(|&(_, i)| i).collect(),
+            scores: ranked.iter().map(|&(s, _)| s).collect(),
+            flops: flops + rank_flops,
+            candidates: cand_count,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::ground_truth;
+    use crate::linalg::Rng;
+
+    fn gaussian(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, d, |_, _| rng.gaussian() as f32)
+    }
+
+    #[test]
+    fn full_budget_is_exact() {
+        let data = gaussian(60, 24, 1);
+        let idx = GreedyMipsIndex::new(data.clone(), 60);
+        let q: Vec<f32> = Rng::new(2).gaussian_vec(24);
+        let res = idx.query(&q, &MipsParams { k: 5, ..Default::default() });
+        assert_eq!(res.indices, ground_truth(&data, &q, 5));
+        assert_eq!(res.candidates, 60);
+    }
+
+    #[test]
+    fn small_budget_costs_less() {
+        let data = gaussian(200, 32, 3);
+        let big = GreedyMipsIndex::new(data.clone(), 200);
+        let small = GreedyMipsIndex::new(data, 10);
+        let q: Vec<f32> = Rng::new(4).gaussian_vec(32);
+        let p = MipsParams { k: 5, ..Default::default() };
+        let rb = big.query(&q, &p);
+        let rs = small.query(&q, &p);
+        assert!(rs.flops < rb.flops);
+        assert!(rs.candidates <= 10);
+    }
+
+    #[test]
+    fn screening_finds_dominant_item() {
+        // One item dominates a coordinate the query emphasizes: a tiny
+        // budget must still find it.
+        let mut rows = vec![vec![0.0f32; 8]; 50];
+        rows[33][2] = 100.0;
+        let data = Matrix::from_rows(&rows);
+        let idx = GreedyMipsIndex::new(data, 3);
+        let mut q = vec![0.01f32; 8];
+        q[2] = 1.0;
+        let res = idx.query(&q, &MipsParams { k: 1, ..Default::default() });
+        assert_eq!(res.indices[0], 33);
+    }
+
+    #[test]
+    fn negative_query_coordinates_walk_ascending() {
+        // Most-negative coordinate value wins when q_j < 0.
+        let data = Matrix::from_rows(&[
+            vec![5.0, 0.0],
+            vec![-7.0, 0.0],
+            vec![1.0, 0.0],
+        ]);
+        let idx = GreedyMipsIndex::new(data, 1);
+        let res = idx.query(&[-1.0, 0.0], &MipsParams { k: 1, ..Default::default() });
+        assert_eq!(res.indices[0], 1);
+    }
+
+    #[test]
+    fn preprocessing_time_recorded() {
+        let idx = GreedyMipsIndex::new(gaussian(100, 16, 5), 10);
+        assert!(idx.preprocessing_seconds() > 0.0);
+    }
+}

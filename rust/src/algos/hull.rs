@@ -1,0 +1,210 @@
+//! Remark-1 extension: extreme-point filtering.
+//!
+//! The paper's Remark 1: BOUNDEDME is linear in `n`, and one can trade
+//! its zero-preprocessing property for sublinearity in `n` by first
+//! restricting the search to the extreme points of `conv(S)` — the MIPS
+//! optimum `argmax_v qᵀv` is always attained at an extreme point, for
+//! every query.
+//!
+//! Exact convex hulls are hopeless in high dimension, so
+//! [`ExtremePointFilter`] uses the standard sampling approximation:
+//! draw `m` random unit directions, keep the `t` maximizers of each
+//! (every kept point is a *true* extreme point; the approximation is
+//! that some faces may be missed). Recall of the filter is measured by
+//! the `ablation_hull` bench; BOUNDEDME then runs over the filtered set
+//! via [`BoundedMeHullIndex`], making the per-query cost
+//! `O(|E|·√N/ε)` with `|E| ≪ n` on low-rank-ish data.
+
+use super::bounded_me_index::column_maxima;
+use super::{MipsIndex, MipsParams, MipsResult};
+use crate::bandit::{BoundedMe, BoundedMeConfig, MatrixArms, PullOrder, RewardSource};
+use crate::linalg::{dot, Matrix, Rng, TopK};
+use std::time::Instant;
+
+/// Approximate extreme-point set of a vector collection.
+#[derive(Clone, Debug)]
+pub struct ExtremePointFilter {
+    /// Ids of the kept (extreme) points, sorted ascending.
+    pub extreme_ids: Vec<u32>,
+    /// Directions sampled.
+    pub n_directions: usize,
+}
+
+impl ExtremePointFilter {
+    /// Build by sampling `m` Gaussian directions and keeping the top `t`
+    /// points of each (`O(m·n·N)` preprocessing).
+    pub fn build(data: &Matrix, m: usize, t: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut keep = vec![false; data.rows()];
+        for _ in 0..m {
+            let dir = rng.gaussian_vec(data.cols());
+            let mut top = TopK::new(t.max(1));
+            for (i, row) in data.iter_rows().enumerate() {
+                top.push(dot(row, &dir), i);
+            }
+            for id in top.into_indices() {
+                keep[id] = true;
+            }
+        }
+        let extreme_ids: Vec<u32> =
+            keep.iter().enumerate().filter(|(_, &k)| k).map(|(i, _)| i as u32).collect();
+        Self { extreme_ids, n_directions: m }
+    }
+
+    /// Fraction of the dataset kept.
+    pub fn fraction(&self, n: usize) -> f64 {
+        self.extreme_ids.len() as f64 / n.max(1) as f64
+    }
+}
+
+/// BOUNDEDME over the extreme-point subset: sublinear in `n` when the
+/// hull is small, at the cost of `O(m·n·N)` preprocessing — the exact
+/// trade-off Remark 1 describes.
+pub struct BoundedMeHullIndex {
+    /// Full dataset (kept for exactness checks / fallback).
+    data: Matrix,
+    /// Gathered extreme-point rows (the search set).
+    subset: Matrix,
+    /// Map subset row → original id.
+    ids: Vec<u32>,
+    colmax: Vec<f32>,
+    order: PullOrder,
+    prep_seconds: f64,
+}
+
+impl BoundedMeHullIndex {
+    /// Build the filter (`m` directions × top-`t`) and gather the subset.
+    pub fn new(data: Matrix, m: usize, t: usize, seed: u64) -> Self {
+        let t0 = Instant::now();
+        let filter = ExtremePointFilter::build(&data, m, t, seed);
+        let ids = filter.extreme_ids.clone();
+        let subset = data.gather_rows(&ids.iter().map(|&i| i as usize).collect::<Vec<_>>());
+        let colmax = column_maxima(&subset);
+        let prep_seconds = t0.elapsed().as_secs_f64();
+        Self { data, subset, ids, colmax, order: PullOrder::Permuted, prep_seconds }
+    }
+
+    /// Number of extreme points retained.
+    pub fn n_extreme(&self) -> usize {
+        self.ids.len()
+    }
+}
+
+impl MipsIndex for BoundedMeHullIndex {
+    fn name(&self) -> &str {
+        "BoundedME+hull"
+    }
+
+    fn data(&self) -> &Matrix {
+        &self.data
+    }
+
+    fn preprocessing_seconds(&self) -> f64 {
+        self.prep_seconds
+    }
+
+    fn query(&self, q: &[f32], params: &MipsParams) -> MipsResult {
+        let bound = self
+            .colmax
+            .iter()
+            .zip(q)
+            .fold(f32::MIN_POSITIVE, |m, (&c, &qj)| m.max(c * qj.abs()));
+        let arms = MatrixArms::new(&self.subset, q, bound, self.order, params.seed);
+        let eff_epsilon = params.epsilon * arms.range_width();
+        let k = params.k.max(1).min(self.subset.rows().max(1));
+        let algo = BoundedMe::new(BoundedMeConfig {
+            k,
+            epsilon: eff_epsilon.max(f64::MIN_POSITIVE),
+            delta: params.delta.clamp(f64::MIN_POSITIVE, 1.0 - 1e-12),
+        });
+        let n_list = arms.list_len() as f64;
+        let out = algo.run(&arms);
+        MipsResult {
+            indices: out.result.arms.iter().map(|&i| self.ids[i] as usize).collect(),
+            scores: out.result.means.iter().map(|&m| (m * n_list) as f32).collect(),
+            flops: out.result.total_pulls,
+            candidates: self.subset.rows(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::ground_truth;
+
+    fn gaussian(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, d, |_, _| rng.gaussian() as f32)
+    }
+
+    #[test]
+    fn filter_keeps_true_extremes_in_2d() {
+        // Square corners + interior points: corners must be kept, the
+        // center must be droppable.
+        let mut rows = vec![
+            vec![1.0f32, 1.0],
+            vec![1.0, -1.0],
+            vec![-1.0, 1.0],
+            vec![-1.0, -1.0],
+        ];
+        for i in 0..40 {
+            let a = i as f32 / 40.0 * 0.5;
+            rows.push(vec![a * 0.3, -a * 0.2]); // interior
+        }
+        let data = Matrix::from_rows(&rows);
+        let f = ExtremePointFilter::build(&data, 64, 1, 1);
+        for corner in 0..4 {
+            assert!(
+                f.extreme_ids.contains(&(corner as u32)),
+                "corner {corner} missing from {:?}",
+                f.extreme_ids
+            );
+        }
+        assert!(f.fraction(data.rows()) < 0.5, "filter kept too much");
+    }
+
+    #[test]
+    fn hull_index_finds_optimum_on_low_rank_data() {
+        // Low-rank data has few extreme points; the hull filter should
+        // retain the MIPS winner for most queries.
+        let ds = crate::data::synthetic::low_rank_dataset(300, 64, 3, 0.01, 2);
+        let idx = BoundedMeHullIndex::new(ds.vectors.clone(), 128, 2, 3);
+        assert!(idx.n_extreme() < 300);
+        let mut hits = 0;
+        for s in 0..10u64 {
+            let q = ds.sample_query(s);
+            let truth = ground_truth(&ds.vectors, &q, 1)[0];
+            let res =
+                idx.query(&q, &MipsParams { k: 1, epsilon: 1e-9, delta: 0.05, seed: s });
+            if res.indices[0] == truth {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 8, "hull recall {hits}/10");
+    }
+
+    #[test]
+    fn hull_query_cheaper_than_full() {
+        let data = gaussian(400, 128, 4);
+        let full = crate::algos::BoundedMeIndex::new(data.clone());
+        let hull = BoundedMeHullIndex::new(data, 32, 1, 5);
+        let q: Vec<f32> = Rng::new(6).gaussian_vec(128);
+        let p = MipsParams { k: 1, epsilon: 0.1, delta: 0.1, seed: 7 };
+        let rf = full.query(&q, &p);
+        let rh = hull.query(&q, &p);
+        assert!(rh.flops < rf.flops, "{} !< {}", rh.flops, rf.flops);
+        assert!(hull.preprocessing_seconds() > 0.0);
+    }
+
+    #[test]
+    fn ids_map_back_to_original() {
+        let data = gaussian(50, 16, 8);
+        let idx = BoundedMeHullIndex::new(data.clone(), 16, 1, 9);
+        let q: Vec<f32> = Rng::new(10).gaussian_vec(16);
+        let res = idx.query(&q, &MipsParams { k: 3, epsilon: 1e-9, delta: 0.1, seed: 0 });
+        for &id in &res.indices {
+            assert!(id < 50);
+        }
+    }
+}

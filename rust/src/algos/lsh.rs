@@ -1,0 +1,188 @@
+//! LSH-MIPS (Shrivastava & Li 2014; Neyshabur & Srebro 2015).
+//!
+//! MIPS is reduced to cosine similarity search via the Euclidean
+//! transform ([`super::transform`]), then answered with sign-random-
+//! projection LSH: `b` hash tables (OR-construction), each keyed by an
+//! `a`-bit code of hyperplane signs (AND-construction). Candidates are
+//! the union of the query's buckets, ranked exactly.
+//!
+//! The `(a, b)` pair is the accuracy knob; the success probability
+//! depends on the (unknown) angle of the true answer, so the user cannot
+//! bound suboptimality a priori — the contrast drawn in Table 1.
+
+use super::transform::EuclideanTransform;
+use super::{exact_rank, MipsIndex, MipsParams, MipsResult};
+use crate::linalg::{Matrix, Rng};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// One hash table: `a` hyperplanes and the bucket map.
+struct Table {
+    /// `a × (N+1)` hyperplane directions, row-major.
+    planes: Vec<f32>,
+    buckets: HashMap<u64, Vec<u32>>,
+}
+
+/// LSH-MIPS index.
+pub struct LshMipsIndex {
+    data: Matrix,
+    transform: EuclideanTransform,
+    tables: Vec<Table>,
+    bits: usize,
+    prep_seconds: f64,
+}
+
+impl LshMipsIndex {
+    /// Build `b` tables of `a`-bit signed-random-projection codes
+    /// (`a ≤ 64`). Preprocessing is `O(N·n·a·b)`.
+    pub fn new(data: Matrix, a: usize, b: usize, seed: u64) -> Self {
+        assert!((1..=64).contains(&a), "a must be in 1..=64");
+        assert!(b >= 1, "b must be ≥ 1");
+        let t0 = Instant::now();
+        let transform = EuclideanTransform::new(&data);
+        let dim = data.cols() + 1;
+        let mut rng = Rng::new(seed);
+        let n = data.rows();
+        let mut tables = Vec::with_capacity(b);
+        for _ in 0..b {
+            let planes: Vec<f32> = rng.gaussian_vec(a * dim);
+            let mut buckets: HashMap<u64, Vec<u32>> = HashMap::new();
+            for i in 0..n {
+                let mut code = 0u64;
+                for h in 0..a {
+                    let dir = &planes[h * dim..(h + 1) * dim];
+                    if transform.project_item(&data, dir, i) >= 0.0 {
+                        code |= 1 << h;
+                    }
+                }
+                buckets.entry(code).or_default().push(i as u32);
+            }
+            tables.push(Table { planes, buckets });
+        }
+        let prep_seconds = t0.elapsed().as_secs_f64();
+        Self { data, transform, tables, bits: a, prep_seconds }
+    }
+
+    /// Number of bits per code (`a`).
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// Number of tables (`b`).
+    pub fn n_tables(&self) -> usize {
+        self.tables.len()
+    }
+}
+
+impl MipsIndex for LshMipsIndex {
+    fn name(&self) -> &str {
+        "LSH"
+    }
+
+    fn data(&self) -> &Matrix {
+        &self.data
+    }
+
+    fn preprocessing_seconds(&self) -> f64 {
+        self.prep_seconds
+    }
+
+    fn query(&self, q: &[f32], params: &MipsParams) -> MipsResult {
+        let qs = self.transform.transform_query(q);
+        let dim = qs.len();
+        let mut flops = q.len() as u64; // query normalization
+        let mut visited = vec![false; self.data.rows()];
+        let mut candidates = Vec::new();
+        for table in &self.tables {
+            let mut code = 0u64;
+            for h in 0..self.bits {
+                let dir = &table.planes[h * dim..(h + 1) * dim];
+                if crate::linalg::dot(dir, &qs) >= 0.0 {
+                    code |= 1 << h;
+                }
+            }
+            flops += (self.bits * dim) as u64;
+            if let Some(bucket) = table.buckets.get(&code) {
+                for &i in bucket {
+                    if !visited[i as usize] {
+                        visited[i as usize] = true;
+                        candidates.push(i as usize);
+                    }
+                }
+            }
+        }
+        let (ranked, rank_flops, cand_count) =
+            exact_rank(&self.data, q, candidates, params.k);
+        MipsResult {
+            indices: ranked.iter().map(|&(_, i)| i).collect(),
+            scores: ranked.iter().map(|&(s, _)| s).collect(),
+            flops: flops + rank_flops,
+            candidates: cand_count,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::ground_truth;
+
+    fn gaussian(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, d, |_, _| rng.gaussian() as f32)
+    }
+
+    #[test]
+    fn generous_tables_find_the_answer() {
+        let data = gaussian(150, 24, 1);
+        // Few bits + many tables ⇒ high recall.
+        let idx = LshMipsIndex::new(data.clone(), 4, 24, 7);
+        let mut hits = 0;
+        for qs in 0..10u64 {
+            let q: Vec<f32> = Rng::new(100 + qs).gaussian_vec(24);
+            let res = idx.query(&q, &MipsParams { k: 1, ..Default::default() });
+            if !res.indices.is_empty() && res.indices[0] == ground_truth(&data, &q, 1)[0] {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 7, "recall {hits}/10 too low");
+    }
+
+    #[test]
+    fn more_bits_fewer_candidates() {
+        let data = gaussian(400, 16, 2);
+        let coarse = LshMipsIndex::new(data.clone(), 2, 4, 3);
+        let fine = LshMipsIndex::new(data, 12, 4, 3);
+        let q: Vec<f32> = Rng::new(5).gaussian_vec(16);
+        let p = MipsParams { k: 1, ..Default::default() };
+        let rc = coarse.query(&q, &p);
+        let rf = fine.query(&q, &p);
+        assert!(rf.candidates < rc.candidates, "{} !< {}", rf.candidates, rc.candidates);
+    }
+
+    #[test]
+    fn empty_buckets_return_empty() {
+        // A single far-away point with aggressive bits can miss; the
+        // result must be well-formed either way.
+        let data = gaussian(5, 8, 4);
+        let idx = LshMipsIndex::new(data, 16, 1, 9);
+        let q: Vec<f32> = Rng::new(6).gaussian_vec(8);
+        let res = idx.query(&q, &MipsParams { k: 3, ..Default::default() });
+        assert!(res.indices.len() <= 3);
+        assert_eq!(res.indices.len(), res.scores.len());
+    }
+
+    #[test]
+    fn accessors() {
+        let idx = LshMipsIndex::new(gaussian(10, 4, 5), 6, 3, 1);
+        assert_eq!(idx.bits(), 6);
+        assert_eq!(idx.n_tables(), 3);
+        assert!(idx.preprocessing_seconds() > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_too_many_bits() {
+        LshMipsIndex::new(gaussian(4, 4, 1), 65, 1, 0);
+    }
+}

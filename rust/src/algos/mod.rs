@@ -1,0 +1,142 @@
+//! MIPS algorithms behind a common [`MipsIndex`] trait.
+//!
+//! | index | paper | preprocessing | knob |
+//! |---|---|---|---|
+//! | [`NaiveIndex`] | exhaustive search | none | — |
+//! | [`BoundedMeIndex`] | **this paper** | none | per-query (ε, δ) |
+//! | [`GreedyMipsIndex`] | Yu et al. 2017 | per-dim sorted lists | budget `B` |
+//! | [`LshMipsIndex`] | Shrivastava & Li 2014 / Neyshabur & Srebro 2015 | `b` hash tables | `(a, b)` |
+//! | [`PcaMipsIndex`] | Bachrach et al. 2014 | PCA tree | depth `d` |
+//! | [`RptMipsIndex`] | Keivani, Sinha & Ram 2017 | `L` random trees | `(L, leaf)` |
+//!
+//! All indexes account their work in **flops** (scalar multiplications on
+//! the query path — the currency of the paper's cost model, where one
+//! bandit pull = one multiplication) so the "online speedup" of the
+//! figures is `flops(naive) / flops(algo)`, plus wall-clock timing.
+
+pub mod bounded_me_index;
+pub mod greedy;
+pub mod hull;
+pub mod lsh;
+pub mod naive;
+pub mod nns;
+pub mod pca_mips;
+pub mod rpt;
+pub mod transform;
+
+pub use bounded_me_index::BoundedMeIndex;
+pub use greedy::GreedyMipsIndex;
+pub use hull::BoundedMeHullIndex;
+pub use lsh::LshMipsIndex;
+pub use naive::NaiveIndex;
+pub use nns::BoundedMeNnsIndex;
+pub use pca_mips::PcaMipsIndex;
+pub use rpt::RptMipsIndex;
+
+use crate::linalg::{dot, Matrix, TopK};
+
+/// Per-query parameters shared by every index.
+///
+/// `epsilon`/`delta` are honored only by [`BoundedMeIndex`] (the other
+/// algorithms have no suboptimality knob — that is Motivation II of the
+/// paper); the rest use their constructor-time parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct MipsParams {
+    /// Number of results to return.
+    pub k: usize,
+    /// BOUNDEDME suboptimality budget ε, **relative to the reward
+    /// range**: the guarantee is `(p* − p̂) ≤ ε·(b−a)` on mean rewards
+    /// `qᵀv/N`, matching the paper's `[0,1]`-normalized setting where
+    /// `b−a = 1` and `ε ∈ (0,1)`.
+    pub epsilon: f64,
+    /// BOUNDEDME failure probability δ.
+    pub delta: f64,
+    /// Seed for any per-query randomness (pull order, …).
+    pub seed: u64,
+}
+
+impl Default for MipsParams {
+    fn default() -> Self {
+        Self { k: 10, epsilon: 0.1, delta: 0.1, seed: 0 }
+    }
+}
+
+/// Result of one MIPS query.
+#[derive(Clone, Debug)]
+pub struct MipsResult {
+    /// Indices of the returned vectors, best-first.
+    pub indices: Vec<usize>,
+    /// The algorithm's score estimate for each returned vector. For
+    /// candidate-ranking algorithms these are exact inner products; for
+    /// BOUNDEDME they are the (possibly partial) empirical estimates
+    /// `N·p̂`.
+    pub scores: Vec<f32>,
+    /// Scalar multiplications spent on this query.
+    pub flops: u64,
+    /// Size of the candidate set that was exactly ranked (0 for
+    /// algorithms that do not rank candidates).
+    pub candidates: usize,
+}
+
+/// A MIPS search index over a fixed vector set.
+pub trait MipsIndex: Send + Sync {
+    /// Short identifier used in experiment tables ("BoundedME", "LSH", …).
+    fn name(&self) -> &str;
+    /// The indexed vector set.
+    fn data(&self) -> &Matrix;
+    /// Wall-clock seconds spent building the index (0 for
+    /// preprocessing-free methods).
+    fn preprocessing_seconds(&self) -> f64;
+    /// Answer a top-K query.
+    fn query(&self, q: &[f32], params: &MipsParams) -> MipsResult;
+}
+
+/// Exactly rank a candidate set by true inner product and keep the top
+/// `k`. Returns the result and the flops spent (`|candidates| · N`).
+pub(crate) fn exact_rank(
+    data: &Matrix,
+    q: &[f32],
+    candidates: impl IntoIterator<Item = usize>,
+    k: usize,
+) -> (Vec<(f32, usize)>, u64, usize) {
+    let mut top = TopK::new(k);
+    let mut count = 0usize;
+    for id in candidates {
+        top.push(dot(data.row(id), q), id);
+        count += 1;
+    }
+    let flops = (count * data.cols()) as u64;
+    (top.into_sorted(), flops, count)
+}
+
+/// Ground truth: exact top-K by exhaustive search (used by the metrics
+/// and tests; identical to [`NaiveIndex`] without the trait overhead).
+pub fn ground_truth(data: &Matrix, q: &[f32], k: usize) -> Vec<usize> {
+    let (ranked, _, _) = exact_rank(data, q, 0..data.rows(), k);
+    ranked.into_iter().map(|(_, i)| i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_rank_counts_flops() {
+        let m = Matrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 1.0], vec![1.0, 1.0]]);
+        let (ranked, flops, count) = exact_rank(&m, &[1.0, 1.0], vec![0, 2], 1);
+        assert_eq!(ranked[0].1, 2);
+        assert_eq!(flops, 4);
+        assert_eq!(count, 2);
+    }
+
+    #[test]
+    fn ground_truth_is_exact() {
+        let m = Matrix::from_rows(&[
+            vec![1.0, 0.0],
+            vec![3.0, 0.0],
+            vec![2.0, 0.0],
+            vec![-5.0, 0.0],
+        ]);
+        assert_eq!(ground_truth(&m, &[1.0, 0.0], 2), vec![1, 2]);
+    }
+}

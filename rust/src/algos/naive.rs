@@ -1,0 +1,63 @@
+//! Exhaustive (exact) MIPS: the `O(n·N)` baseline every speedup is
+//! measured against.
+
+use super::{exact_rank, MipsIndex, MipsParams, MipsResult};
+use crate::linalg::Matrix;
+
+/// Exact linear-scan index. No preprocessing, no error.
+pub struct NaiveIndex {
+    data: Matrix,
+}
+
+impl NaiveIndex {
+    /// Wrap a vector set.
+    pub fn new(data: Matrix) -> Self {
+        Self { data }
+    }
+}
+
+impl MipsIndex for NaiveIndex {
+    fn name(&self) -> &str {
+        "Naive"
+    }
+
+    fn data(&self) -> &Matrix {
+        &self.data
+    }
+
+    fn preprocessing_seconds(&self) -> f64 {
+        0.0
+    }
+
+    fn query(&self, q: &[f32], params: &MipsParams) -> MipsResult {
+        let (ranked, flops, candidates) =
+            exact_rank(&self.data, q, 0..self.data.rows(), params.k);
+        MipsResult {
+            indices: ranked.iter().map(|&(_, i)| i).collect(),
+            scores: ranked.iter().map(|&(s, _)| s).collect(),
+            flops,
+            candidates,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn returns_exact_top_k_with_full_flops() {
+        let data = Matrix::from_rows(&[
+            vec![1.0, 2.0],
+            vec![2.0, 1.0],
+            vec![-1.0, -1.0],
+            vec![3.0, 3.0],
+        ]);
+        let idx = NaiveIndex::new(data);
+        let res = idx.query(&[1.0, 1.0], &MipsParams { k: 2, ..Default::default() });
+        assert_eq!(res.indices, vec![3, 0]);
+        assert_eq!(res.scores, vec![6.0, 3.0]);
+        assert_eq!(res.flops, 8);
+        assert_eq!(res.candidates, 4);
+    }
+}

@@ -1,0 +1,266 @@
+//! Nearest Neighbor Search via MAB-BP — the paper's second instantiation.
+//!
+//! MAB-BP solves any `argmax_i Σ_j f(i, j)`; for NNS
+//! `f(i, j) = −(q^(j) − v_i^(j))²`, so the best arm is the vector
+//! minimizing squared Euclidean distance. [`NnsArms`] adapts
+//! [`RewardSource`] to that reward, and [`BoundedMeNnsIndex`] wraps it
+//! in the same preprocessing-free, (ε, δ)-controlled interface.
+
+use super::MipsParams;
+use crate::bandit::{BoundedMe, BoundedMeConfig, PullOrder, RewardSource};
+use crate::linalg::{Matrix, Rng};
+
+/// NNS as MAB-BP: reward `j` of arm `i` is `−(q^(j) − v_i^(j))²`.
+pub struct NnsArms<'a> {
+    data: &'a Matrix,
+    /// Query gathered in pull order.
+    qp: Vec<f32>,
+    perm: Option<Vec<u32>>,
+    /// Rewards lie in `[−range_sq, 0]`.
+    range_sq: f64,
+}
+
+impl<'a> NnsArms<'a> {
+    /// Build for one query. `coord_bound` must satisfy
+    /// `|q^(j) − v_i^(j)| ≤ coord_bound` for all `i, j` (e.g.
+    /// `max|q_j| + colmax_j`, maximized over `j`).
+    pub fn new(
+        data: &'a Matrix,
+        query: &[f32],
+        coord_bound: f32,
+        order: PullOrder,
+        seed: u64,
+    ) -> Self {
+        assert_eq!(query.len(), data.cols());
+        let n = data.cols();
+        let mut rng = Rng::new(seed);
+        let perm: Option<Vec<u32>> = match order {
+            PullOrder::Sequential => None,
+            PullOrder::Permuted => {
+                let mut p: Vec<u32> = (0..n as u32).collect();
+                rng.shuffle(&mut p);
+                Some(p)
+            }
+            PullOrder::BlockShuffled(w) => {
+                let w = w.max(1).min(n.max(1));
+                let nblocks = n.div_ceil(w);
+                let mut blocks: Vec<usize> = (0..nblocks).collect();
+                rng.shuffle(&mut blocks);
+                let mut p = Vec::with_capacity(n);
+                for &blk in &blocks {
+                    let lo = blk * w;
+                    let hi = (lo + w).min(n);
+                    p.extend((lo as u32)..(hi as u32));
+                }
+                Some(p)
+            }
+        };
+        let qp = match &perm {
+            None => query.to_vec(),
+            Some(p) => p.iter().map(|&j| query[j as usize]).collect(),
+        };
+        let b = coord_bound.max(f32::MIN_POSITIVE) as f64;
+        Self { data, qp, perm, range_sq: b * b }
+    }
+
+    #[inline]
+    fn reward_at(&self, arm: usize, pos: usize) -> f64 {
+        let row = self.data.row(arm);
+        let (v, q) = match &self.perm {
+            None => (row[pos], self.qp[pos]),
+            Some(p) => (row[p[pos] as usize], self.qp[pos]),
+        };
+        let d = (q - v) as f64;
+        -d * d
+    }
+}
+
+impl RewardSource for NnsArms<'_> {
+    fn n_arms(&self) -> usize {
+        self.data.rows()
+    }
+
+    fn list_len(&self) -> usize {
+        self.data.cols()
+    }
+
+    fn reward_range(&self) -> (f64, f64) {
+        (-self.range_sq, 0.0)
+    }
+
+    fn pull_range(&self, arm: usize, from: usize, to: usize) -> f64 {
+        let mut s = 0f64;
+        for pos in from..to {
+            s += self.reward_at(arm, pos);
+        }
+        s
+    }
+
+    fn pull_iid(&self, arm: usize, rng: &mut Rng) -> f64 {
+        self.reward_at(arm, rng.next_below(self.list_len()))
+    }
+
+    fn true_mean(&self, arm: usize) -> f64 {
+        self.pull_range(arm, 0, self.list_len()) / self.list_len() as f64
+    }
+}
+
+/// Result of an NNS query.
+#[derive(Clone, Debug)]
+pub struct NnsResult {
+    /// Indices of the (approximate) nearest neighbors, nearest first.
+    pub indices: Vec<usize>,
+    /// Estimated squared distances (from empirical means × N).
+    pub distances_sq: Vec<f32>,
+    /// Coordinate squared-difference evaluations performed.
+    pub flops: u64,
+}
+
+/// Preprocessing-free K-nearest-neighbor search with the BOUNDEDME
+/// (ε, δ) guarantee: the returned set's K-th distance exceeds the true
+/// K-th distance by at most `ε·range` (mean-reward units) with
+/// probability ≥ 1 − δ.
+pub struct BoundedMeNnsIndex {
+    data: Matrix,
+    colmax: Vec<f32>,
+    order: PullOrder,
+}
+
+impl BoundedMeNnsIndex {
+    /// Wrap a vector set (one colmax scan, no structure built).
+    pub fn new(data: Matrix) -> Self {
+        Self::with_order(data, PullOrder::Permuted)
+    }
+
+    /// Wrap with an explicit pull order.
+    pub fn with_order(data: Matrix, order: PullOrder) -> Self {
+        let colmax = super::bounded_me_index::column_maxima(&data);
+        Self { data, colmax, order }
+    }
+
+    /// Per-query coordinate-difference bound
+    /// `max_j (|q_j| + colmax_j)`.
+    pub fn coord_bound(&self, q: &[f32]) -> f32 {
+        self.colmax
+            .iter()
+            .zip(q)
+            .fold(f32::MIN_POSITIVE, |m, (&c, &qj)| m.max(c + qj.abs()))
+    }
+
+    /// The indexed vectors.
+    pub fn data(&self) -> &Matrix {
+        &self.data
+    }
+
+    /// K nearest neighbors with the (ε, δ) knob (ε relative to the
+    /// reward range, as in MIPS).
+    pub fn query(&self, q: &[f32], params: &MipsParams) -> NnsResult {
+        let bound = self.coord_bound(q);
+        let arms = NnsArms::new(&self.data, q, bound, self.order, params.seed);
+        let eff_epsilon = params.epsilon * arms.range_width();
+        let algo = BoundedMe::new(BoundedMeConfig {
+            k: params.k.max(1),
+            epsilon: eff_epsilon.max(f64::MIN_POSITIVE),
+            delta: params.delta.clamp(f64::MIN_POSITIVE, 1.0 - 1e-12),
+        });
+        let n_list = arms.list_len() as f64;
+        let out = algo.run(&arms);
+        NnsResult {
+            indices: out.result.arms,
+            distances_sq: out
+                .result
+                .means
+                .iter()
+                .map(|&m| (-m * n_list) as f32)
+                .collect(),
+            flops: out.result.total_pulls,
+        }
+    }
+}
+
+/// Exact K-nearest-neighbors by exhaustive scan (ground truth).
+pub fn nns_ground_truth(data: &Matrix, q: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..data.rows()).collect();
+    idx.sort_by(|&a, &b| {
+        crate::linalg::dist_sq(data.row(a), q)
+            .partial_cmp(&crate::linalg::dist_sq(data.row(b), q))
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gaussian(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, d, |_, _| rng.gaussian() as f32)
+    }
+
+    #[test]
+    fn nns_arms_true_mean_is_neg_dist() {
+        let data = Matrix::from_rows(&[vec![0.0, 0.0], vec![3.0, 4.0]]);
+        let q = [0.0f32, 0.0];
+        let arms = NnsArms::new(&data, &q, 5.0, PullOrder::Sequential, 0);
+        assert!((arms.true_mean(0) - 0.0).abs() < 1e-9);
+        assert!((arms.true_mean(1) + 12.5).abs() < 1e-6); // −25/2
+        let (a, b) = arms.reward_range();
+        assert_eq!(b, 0.0);
+        assert!(a <= -25.0 + 1e-6);
+    }
+
+    #[test]
+    fn exact_mode_recovers_true_neighbors() {
+        let data = gaussian(80, 48, 1);
+        let idx = BoundedMeNnsIndex::new(data.clone());
+        let q: Vec<f32> = Rng::new(9).gaussian_vec(48);
+        let res = idx.query(&q, &MipsParams { k: 3, epsilon: 1e-12, delta: 0.05, seed: 2 });
+        let mut got = res.indices.clone();
+        got.sort_unstable();
+        let mut want = nns_ground_truth(&data, &q, 3);
+        want.sort_unstable();
+        assert_eq!(got, want);
+        assert!(res.flops <= 80 * 48);
+    }
+
+    #[test]
+    fn distances_are_nonnegative_estimates() {
+        let data = gaussian(40, 32, 3);
+        let idx = BoundedMeNnsIndex::new(data);
+        let q: Vec<f32> = Rng::new(4).gaussian_vec(32);
+        let res = idx.query(&q, &MipsParams { k: 2, epsilon: 1e-12, delta: 0.1, seed: 1 });
+        for &d in &res.distances_sq {
+            assert!(d >= -1e-3, "distance² {d} negative");
+        }
+    }
+
+    #[test]
+    fn looser_epsilon_cheaper() {
+        let data = gaussian(100, 256, 5);
+        let idx = BoundedMeNnsIndex::new(data);
+        let q: Vec<f32> = Rng::new(6).gaussian_vec(256);
+        let tight = idx.query(&q, &MipsParams { k: 1, epsilon: 0.01, delta: 0.1, seed: 0 });
+        let loose = idx.query(&q, &MipsParams { k: 1, epsilon: 0.9, delta: 0.1, seed: 0 });
+        assert!(loose.flops < tight.flops);
+    }
+
+    #[test]
+    fn pull_orders_agree_in_exact_mode() {
+        let data = gaussian(50, 64, 7);
+        let q: Vec<f32> = Rng::new(8).gaussian_vec(64);
+        let want = nns_ground_truth(&data, &q, 2);
+        for order in [PullOrder::Permuted, PullOrder::BlockShuffled(8), PullOrder::Sequential] {
+            let idx = BoundedMeNnsIndex::with_order(data.clone(), order);
+            let res =
+                idx.query(&q, &MipsParams { k: 2, epsilon: 1e-12, delta: 0.05, seed: 3 });
+            let mut got = res.indices.clone();
+            got.sort_unstable();
+            let mut w = want.clone();
+            w.sort_unstable();
+            assert_eq!(got, w, "{order:?}");
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! RPT-MIPS (Keivani, Sinha & Ram 2017): randomized partition trees over
+//! the Euclidean-transformed space.
+//!
+//! `L` independent trees; each internal node splits its items at the
+//! median projection onto a random Gaussian direction; leaves hold at
+//! most `leaf_size` items. A query descends every tree and exactly ranks
+//! the union of the visited leaves. The success probability depends on a
+//! potential function of `(q, S, L)` — not user-controllable (Table 1).
+
+use super::transform::EuclideanTransform;
+use super::{exact_rank, MipsIndex, MipsParams, MipsResult};
+use crate::linalg::{dot, Matrix, Rng};
+use std::time::Instant;
+
+enum Node {
+    Internal { dir: Vec<f32>, median: f32, left: u32, right: u32 },
+    Leaf { items: Vec<u32> },
+}
+
+struct Tree {
+    nodes: Vec<Node>,
+}
+
+impl Tree {
+    fn build(
+        data: &Matrix,
+        transform: &EuclideanTransform,
+        items: Vec<u32>,
+        leaf_size: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        let mut nodes = Vec::new();
+        Self::build_rec(data, transform, items, leaf_size, rng, &mut nodes);
+        Tree { nodes }
+    }
+
+    /// Returns the index of the subtree root in `nodes`.
+    fn build_rec(
+        data: &Matrix,
+        transform: &EuclideanTransform,
+        items: Vec<u32>,
+        leaf_size: usize,
+        rng: &mut Rng,
+        nodes: &mut Vec<Node>,
+    ) -> u32 {
+        if items.len() <= leaf_size {
+            nodes.push(Node::Leaf { items });
+            return (nodes.len() - 1) as u32;
+        }
+        let dim = data.cols() + 1;
+        let dir: Vec<f32> = rng.gaussian_vec(dim);
+        let mut proj: Vec<(f32, u32)> = items
+            .iter()
+            .map(|&i| (transform.project_item(data, &dir, i as usize), i))
+            .collect();
+        let mid = proj.len() / 2;
+        proj.select_nth_unstable_by(mid, |a, b| {
+            a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let median = proj[mid].0;
+        let left_items: Vec<u32> = proj[..mid].iter().map(|&(_, i)| i).collect();
+        let right_items: Vec<u32> = proj[mid..].iter().map(|&(_, i)| i).collect();
+        let left = Self::build_rec(data, transform, left_items, leaf_size, rng, nodes);
+        let right = Self::build_rec(data, transform, right_items, leaf_size, rng, nodes);
+        nodes.push(Node::Internal { dir, median, left, right });
+        (nodes.len() - 1) as u32
+    }
+
+    /// Root is the last node pushed.
+    fn root(&self) -> u32 {
+        (self.nodes.len() - 1) as u32
+    }
+
+    /// Descend with the transformed query; returns (leaf items, flops).
+    fn descend(&self, qs: &[f32]) -> (&[u32], u64) {
+        let mut node = self.root();
+        let mut flops = 0u64;
+        loop {
+            match &self.nodes[node as usize] {
+                Node::Leaf { items } => return (items, flops),
+                Node::Internal { dir, median, left, right } => {
+                    let s = dot(dir, qs);
+                    flops += dir.len() as u64;
+                    node = if s < *median { *left } else { *right };
+                }
+            }
+        }
+    }
+}
+
+/// RPT-MIPS index: `L` randomized partition trees.
+pub struct RptMipsIndex {
+    data: Matrix,
+    transform: EuclideanTransform,
+    trees: Vec<Tree>,
+    prep_seconds: f64,
+}
+
+impl RptMipsIndex {
+    /// Build `l_trees` trees with the given leaf size.
+    pub fn new(data: Matrix, l_trees: usize, leaf_size: usize, seed: u64) -> Self {
+        assert!(l_trees >= 1 && leaf_size >= 1);
+        let t0 = Instant::now();
+        let transform = EuclideanTransform::new(&data);
+        let mut rng = Rng::new(seed);
+        let all: Vec<u32> = (0..data.rows() as u32).collect();
+        let trees = (0..l_trees)
+            .map(|_| Tree::build(&data, &transform, all.clone(), leaf_size, &mut rng))
+            .collect();
+        let prep_seconds = t0.elapsed().as_secs_f64();
+        Self { data, transform, trees, prep_seconds }
+    }
+
+    /// Number of trees `L`.
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+impl MipsIndex for RptMipsIndex {
+    fn name(&self) -> &str {
+        "RPT"
+    }
+
+    fn data(&self) -> &Matrix {
+        &self.data
+    }
+
+    fn preprocessing_seconds(&self) -> f64 {
+        self.prep_seconds
+    }
+
+    fn query(&self, q: &[f32], params: &MipsParams) -> MipsResult {
+        let qs = self.transform.transform_query(q);
+        let mut flops = q.len() as u64;
+        let mut visited = vec![false; self.data.rows()];
+        let mut candidates = Vec::new();
+        for tree in &self.trees {
+            let (items, f) = tree.descend(&qs);
+            flops += f;
+            for &i in items {
+                if !visited[i as usize] {
+                    visited[i as usize] = true;
+                    candidates.push(i as usize);
+                }
+            }
+        }
+        let (ranked, rank_flops, cand_count) =
+            exact_rank(&self.data, q, candidates, params.k);
+        MipsResult {
+            indices: ranked.iter().map(|&(_, i)| i).collect(),
+            scores: ranked.iter().map(|&(s, _)| s).collect(),
+            flops: flops + rank_flops,
+            candidates: cand_count,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::ground_truth;
+
+    fn gaussian(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, d, |_, _| rng.gaussian() as f32)
+    }
+
+    #[test]
+    fn leaves_bounded_and_cover() {
+        let idx = RptMipsIndex::new(gaussian(100, 8, 1), 1, 10, 2);
+        let tree = &idx.trees[0];
+        let mut all = Vec::new();
+        for node in &tree.nodes {
+            if let Node::Leaf { items } = node {
+                assert!(items.len() <= 10);
+                all.extend_from_slice(items);
+            }
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn many_trees_high_recall() {
+        let data = gaussian(200, 12, 3);
+        let idx = RptMipsIndex::new(data.clone(), 12, 20, 4);
+        let mut hits = 0;
+        for s in 0..20u64 {
+            let q: Vec<f32> = Rng::new(70 + s).gaussian_vec(12);
+            let res = idx.query(&q, &MipsParams { k: 1, ..Default::default() });
+            if res.indices.first() == ground_truth(&data, &q, 1).first() {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 14, "hits={hits}");
+    }
+
+    #[test]
+    fn more_trees_more_candidates() {
+        let data = gaussian(300, 8, 5);
+        let one = RptMipsIndex::new(data.clone(), 1, 15, 6);
+        let many = RptMipsIndex::new(data, 8, 15, 6);
+        let q: Vec<f32> = Rng::new(80).gaussian_vec(8);
+        let p = MipsParams { k: 1, ..Default::default() };
+        assert!(many.query(&q, &p).candidates > one.query(&q, &p).candidates);
+        assert_eq!(many.n_trees(), 8);
+    }
+}

@@ -1,0 +1,124 @@
+//! The MIPS → NNS/cosine Euclidean transform of Bachrach et al. 2014.
+//!
+//! Scale every data vector by `1/U` (`U` = max row norm) so norms are
+//! ≤ 1, then append the coordinate `√(1 − ‖v/U‖²)`; queries are
+//! normalized and padded with 0. Inner products in the augmented space
+//! are monotone in the original inner products, so cosine-LSH trees /
+//! hyperplanes built there solve MIPS.
+//!
+//! We never materialize the `n × (N+1)` augmented matrix on the query
+//! path: augmented projections decompose as
+//! `⟨h, v*⟩ = (1/U)·⟨h[..N], v⟩ + h[N]·aug_i`.
+
+use crate::linalg::{dot, norm, Matrix};
+
+/// Precomputed transform state: the scale and per-item augmented
+/// coordinates.
+#[derive(Clone, Debug)]
+pub struct EuclideanTransform {
+    /// `1 / U` where `U = max_i ‖v_i‖`.
+    pub inv_scale: f32,
+    /// `aug[i] = √(1 − ‖v_i/U‖²)`.
+    pub aug: Vec<f32>,
+}
+
+impl EuclideanTransform {
+    /// Compute the transform for a vector set (`O(n·N)`, preprocessing).
+    pub fn new(data: &Matrix) -> Self {
+        let u = data.max_row_norm().max(f32::MIN_POSITIVE);
+        let inv_scale = 1.0 / u;
+        let aug = data
+            .iter_rows()
+            .map(|row| {
+                let s = norm(row) * inv_scale;
+                (1.0 - (s * s).min(1.0)).max(0.0).sqrt()
+            })
+            .collect();
+        Self { inv_scale, aug }
+    }
+
+    /// Augmented dimension (`N + 1`).
+    pub fn dim(&self, data: &Matrix) -> usize {
+        data.cols() + 1
+    }
+
+    /// Project transformed item `i` onto an augmented direction
+    /// `dir ∈ R^{N+1}` without materializing the transform:
+    /// `(1/U)·⟨dir[..N], v_i⟩ + dir[N]·aug_i`.
+    #[inline]
+    pub fn project_item(&self, data: &Matrix, dir: &[f32], i: usize) -> f32 {
+        debug_assert_eq!(dir.len(), data.cols() + 1);
+        self.inv_scale * dot(&dir[..data.cols()], data.row(i)) + dir[data.cols()] * self.aug[i]
+    }
+
+    /// Transform a query: unit-normalize and pad with a 0 coordinate.
+    pub fn transform_query(&self, q: &[f32]) -> Vec<f32> {
+        let n = norm(q);
+        let inv = if n > 0.0 { 1.0 / n } else { 0.0 };
+        let mut out = Vec::with_capacity(q.len() + 1);
+        out.extend(q.iter().map(|&x| x * inv));
+        out.push(0.0);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    #[test]
+    fn augmented_norms_are_unit() {
+        let mut rng = Rng::new(1);
+        let data = Matrix::from_fn(20, 8, |_, _| rng.gaussian() as f32);
+        let t = EuclideanTransform::new(&data);
+        for i in 0..20 {
+            let scaled_sq = crate::linalg::norm_sq(data.row(i)) * t.inv_scale * t.inv_scale;
+            let total = scaled_sq + t.aug[i] * t.aug[i];
+            assert!((total - 1.0).abs() < 1e-5, "item {i}: {total}");
+        }
+    }
+
+    #[test]
+    fn projection_matches_materialized_transform() {
+        let mut rng = Rng::new(2);
+        let data = Matrix::from_fn(10, 6, |_, _| rng.gaussian() as f32);
+        let t = EuclideanTransform::new(&data);
+        let dir: Vec<f32> = rng.gaussian_vec(7);
+        for i in 0..10 {
+            // Materialize v* = [v/U ; aug] and compare.
+            let mut vstar: Vec<f32> = data.row(i).iter().map(|&x| x * t.inv_scale).collect();
+            vstar.push(t.aug[i]);
+            let expect = dot(&vstar, &dir);
+            let got = t.project_item(&data, &dir, i);
+            assert!((got - expect).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn transform_preserves_mips_order_in_cosine() {
+        // ⟨q*, v*⟩ = ⟨q,v⟩/(U‖q‖): same argmax as MIPS.
+        let mut rng = Rng::new(3);
+        let data = Matrix::from_fn(30, 12, |_, _| rng.gaussian() as f32);
+        let t = EuclideanTransform::new(&data);
+        let q: Vec<f32> = rng.gaussian_vec(12);
+        let qs = t.transform_query(&q);
+        let mips_best = crate::algos::ground_truth(&data, &q, 1)[0];
+        let cos_best = (0..30)
+            .max_by(|&a, &b| {
+                t.project_item(&data, &qs, a)
+                    .partial_cmp(&t.project_item(&data, &qs, b))
+                    .unwrap()
+            })
+            .unwrap();
+        assert_eq!(mips_best, cos_best);
+    }
+
+    #[test]
+    fn zero_query_safe() {
+        let data = Matrix::from_rows(&[vec![1.0, 0.0]]);
+        let t = EuclideanTransform::new(&data);
+        let qs = t.transform_query(&[0.0, 0.0]);
+        assert_eq!(qs, vec![0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,485 @@
+//! Reward sources: the MAB-BP environments.
+//!
+//! [`RewardSource`] abstracts "pull arm *i*": the algorithms only see
+//! positional pulls into each arm's (already randomly ordered) reward
+//! list, which is exactly sampling without replacement. Three
+//! environments are provided:
+//!
+//! * [`MatrixArms`] — the MIPS reduction: arm `i` = vector `v_i`, reward
+//!   `j` = `v_i^(π(j)) · q^(π(j))` under a per-query coordinate
+//!   permutation `π`.
+//! * [`AdversarialArms`] — the paper's Figure-1 worst case: Bernoulli
+//!   reward lists served 1s-first so empirical means stay maximally
+//!   uninformative.
+//! * [`ExplicitArms`] — arbitrary lists, for unit tests.
+
+use crate::linalg::{dot, Matrix, Rng};
+
+/// How [`MatrixArms`] orders coordinates for without-replacement pulls.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PullOrder {
+    /// Full uniform random permutation of the `N` coordinates — the
+    /// paper's sampling model. Pulls are gathers (cache-unfriendly).
+    Permuted,
+    /// Coordinates shuffled in contiguous blocks of the given width:
+    /// near-uniform statistically, but every pull batch reads dense
+    /// runs. This is the TPU-friendly schedule from DESIGN.md
+    /// §Hardware-Adaptation and the default on the serving path.
+    BlockShuffled(usize),
+    /// No shuffling (identity order). Only sound when coordinates are
+    /// a-priori exchangeable (e.g. i.i.d. synthetic data); exposed for
+    /// the ablation benches.
+    Sequential,
+}
+
+/// A MAB-BP environment: `n` arms, each with a finite reward list of
+/// length `N`, pulled without replacement in a fixed (random) order.
+pub trait RewardSource {
+    /// Number of arms `n`.
+    fn n_arms(&self) -> usize;
+    /// Reward-list length `N` (max useful pulls per arm).
+    fn list_len(&self) -> usize;
+    /// Known bounds `[a, b]` on individual rewards.
+    fn reward_range(&self) -> (f64, f64);
+    /// Sum of rewards at positions `[from, to)` of arm `arm`'s pull
+    /// sequence. Positions beyond `list_len()` are a contract violation.
+    fn pull_range(&self, arm: usize, from: usize, to: usize) -> f64;
+    /// One i.i.d. *with-replacement* sample from arm `arm`'s list (what a
+    /// classic bandit algorithm would observe).
+    fn pull_iid(&self, arm: usize, rng: &mut Rng) -> f64;
+    /// Exact true mean `p_i` (oracle — equals the mean after `N` pulls).
+    fn true_mean(&self, arm: usize) -> f64;
+
+    /// Width of the reward range `b − a`.
+    fn range_width(&self) -> f64 {
+        let (a, b) = self.reward_range();
+        (b - a).max(f64::MIN_POSITIVE)
+    }
+}
+
+/// MIPS as MAB-BP: arm `i` ↔ data vector `v_i`, reward `j` ↔ one
+/// coordinate product with the query.
+pub struct MatrixArms<'a> {
+    data: &'a Matrix,
+    /// Query values pre-gathered in pull order: `qp[j] = q[perm[j]]`.
+    qp: Vec<f32>,
+    /// Pull-order representation (see [`Order`]).
+    order: Order,
+    range: (f64, f64),
+}
+
+/// Internal pull-order representation. Block-shuffled orders are stored
+/// as contiguous *runs* so pull batches stay dense (vectorizable dots)
+/// instead of scalar gathers — the difference is ~8× wall-clock on the
+/// pull hot path (see the `hotpath` bench).
+enum Order {
+    /// Identity (sequential) order.
+    Identity,
+    /// Arbitrary permutation: positional gathers.
+    Gather(Vec<u32>),
+    /// Blockwise-contiguous permutation: run `r` covers pull positions
+    /// `[offsets[r], offsets[r+1])` and coordinates
+    /// `[starts[r], starts[r] + len_r)`.
+    Runs {
+        /// First coordinate of each run.
+        starts: Vec<u32>,
+        /// Prefix positions; `offsets.len() == starts.len() + 1`.
+        offsets: Vec<u32>,
+    },
+}
+
+impl<'a> MatrixArms<'a> {
+    /// Build the MIPS environment for one query.
+    ///
+    /// `reward_bound` is a valid almost-sure bound `b` on every reward:
+    /// `|v_i^(j) q^(j)| ≤ b` for all `i, j`. Callers derive it from
+    /// query-independent dataset metadata — coarsest: `max|v|·max|q|`;
+    /// tighter (what [`crate::algos::BoundedMeIndex`] uses):
+    /// `max_j colmax[j]·|q_j|` with `colmax[j] = max_i |v_i^(j)|`.
+    pub fn new(
+        data: &'a Matrix,
+        query: &[f32],
+        reward_bound: f32,
+        order: PullOrder,
+        seed: u64,
+    ) -> Self {
+        assert_eq!(query.len(), data.cols(), "query dim mismatch");
+        let n = data.cols();
+        let b = reward_bound.max(f32::MIN_POSITIVE) as f64;
+        let range = (-b, b);
+        let mut rng = Rng::new(seed);
+        let (order, qp) = match order {
+            PullOrder::Sequential => (Order::Identity, query.to_vec()),
+            PullOrder::Permuted => {
+                let mut p: Vec<u32> = (0..n as u32).collect();
+                rng.shuffle(&mut p);
+                let qp = p.iter().map(|&j| query[j as usize]).collect();
+                (Order::Gather(p), qp)
+            }
+            PullOrder::BlockShuffled(w) => {
+                let w = w.max(1).min(n.max(1));
+                let nblocks = n.div_ceil(w);
+                let mut blocks: Vec<usize> = (0..nblocks).collect();
+                rng.shuffle(&mut blocks);
+                let mut starts = Vec::with_capacity(nblocks);
+                let mut offsets = Vec::with_capacity(nblocks + 1);
+                let mut qp = Vec::with_capacity(n);
+                let mut pos = 0u32;
+                for &blk in &blocks {
+                    let lo = blk * w;
+                    let hi = (lo + w).min(n);
+                    starts.push(lo as u32);
+                    offsets.push(pos);
+                    qp.extend_from_slice(&query[lo..hi]);
+                    pos += (hi - lo) as u32;
+                }
+                offsets.push(pos);
+                (Order::Runs { starts, offsets }, qp)
+            }
+        };
+        Self { data, qp, order, range }
+    }
+
+    /// Coordinate index served at pull position `pos`.
+    #[inline]
+    fn coord_at(&self, pos: usize) -> usize {
+        match &self.order {
+            Order::Identity => pos,
+            Order::Gather(p) => p[pos] as usize,
+            Order::Runs { starts, offsets } => {
+                // Last run whose offset ≤ pos.
+                let r = offsets.partition_point(|&o| o as usize <= pos) - 1;
+                starts[r] as usize + (pos - offsets[r] as usize)
+            }
+        }
+    }
+}
+
+impl RewardSource for MatrixArms<'_> {
+    fn n_arms(&self) -> usize {
+        self.data.rows()
+    }
+
+    fn list_len(&self) -> usize {
+        self.data.cols()
+    }
+
+    fn reward_range(&self) -> (f64, f64) {
+        self.range
+    }
+
+    fn pull_range(&self, arm: usize, from: usize, to: usize) -> f64 {
+        debug_assert!(to <= self.list_len());
+        let row = self.data.row(arm);
+        match &self.order {
+            Order::Identity => dot(&row[from..to], &self.qp[from..to]) as f64,
+            Order::Gather(p) => {
+                // Gather-multiply; consecutive j share cache lines in qp,
+                // row accesses are indirect. Unrolled 4-wide.
+                let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+                let mut j = from;
+                while j + 4 <= to {
+                    s0 += row[p[j] as usize] * self.qp[j];
+                    s1 += row[p[j + 1] as usize] * self.qp[j + 1];
+                    s2 += row[p[j + 2] as usize] * self.qp[j + 2];
+                    s3 += row[p[j + 3] as usize] * self.qp[j + 3];
+                    j += 4;
+                }
+                let mut tail = 0f32;
+                while j < to {
+                    tail += row[p[j] as usize] * self.qp[j];
+                    j += 1;
+                }
+                ((s0 + s1) + (s2 + s3) + tail) as f64
+            }
+            Order::Runs { starts, offsets } => {
+                // Dense partial dots run-by-run (vectorizable).
+                let mut s = 0f64;
+                let mut pos = from;
+                let mut r = offsets.partition_point(|&o| (o as usize) <= from) - 1;
+                while pos < to {
+                    let run_end = offsets[r + 1] as usize;
+                    let stop = run_end.min(to);
+                    let coord = starts[r] as usize + (pos - offsets[r] as usize);
+                    let len = stop - pos;
+                    s += dot(&row[coord..coord + len], &self.qp[pos..stop]) as f64;
+                    pos = stop;
+                    r += 1;
+                }
+                s
+            }
+        }
+    }
+
+    fn pull_iid(&self, arm: usize, rng: &mut Rng) -> f64 {
+        let j = rng.next_below(self.list_len());
+        (self.data.row(arm)[self.coord_at(j)] * self.qp[j]) as f64
+    }
+
+    fn true_mean(&self, arm: usize) -> f64 {
+        self.pull_range(arm, 0, self.list_len()) / self.list_len() as f64
+    }
+}
+
+/// The paper's adversarial environment (Figure 1): arm `a` has true mean
+/// `r_a ~ U[0,1]`; its reward list holds `⌊r_a·N⌉` ones then zeros, and
+/// pulls are served **1s-first**, making prefixes maximally misleading.
+pub struct AdversarialArms {
+    ones: Vec<u32>,
+    n_list: usize,
+}
+
+impl AdversarialArms {
+    /// Generate `n` arms with lists of length `n_list`, seeded.
+    pub fn generate(n: usize, n_list: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let ones = (0..n)
+            .map(|_| (rng.next_f64() * n_list as f64).round() as u32)
+            .map(|o| o.min(n_list as u32))
+            .collect();
+        Self { ones, n_list }
+    }
+
+    /// Construct with explicit per-arm one-counts (tests).
+    pub fn from_ones(ones: Vec<u32>, n_list: usize) -> Self {
+        assert!(ones.iter().all(|&o| o as usize <= n_list));
+        Self { ones, n_list }
+    }
+
+    /// Index of the best arm (ties → lowest index).
+    pub fn best_arm(&self) -> usize {
+        let mut best = 0usize;
+        for i in 1..self.ones.len() {
+            if self.ones[i] > self.ones[best] {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+impl RewardSource for AdversarialArms {
+    fn n_arms(&self) -> usize {
+        self.ones.len()
+    }
+
+    fn list_len(&self) -> usize {
+        self.n_list
+    }
+
+    fn reward_range(&self) -> (f64, f64) {
+        (0.0, 1.0)
+    }
+
+    fn pull_range(&self, arm: usize, from: usize, to: usize) -> f64 {
+        debug_assert!(to <= self.n_list);
+        let ones = self.ones[arm] as usize;
+        // Rewards are 1 at positions [0, ones), 0 afterwards.
+        let hi = to.min(ones);
+        let lo = from.min(ones);
+        (hi - lo) as f64
+    }
+
+    fn pull_iid(&self, arm: usize, rng: &mut Rng) -> f64 {
+        let p = self.ones[arm] as f64 / self.n_list as f64;
+        if rng.bernoulli(p) {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    fn true_mean(&self, arm: usize) -> f64 {
+        self.ones[arm] as f64 / self.n_list as f64
+    }
+}
+
+/// Arbitrary in-memory reward lists (unit-test environment). Lists are
+/// used in the order given — shuffle beforehand if random order is
+/// desired.
+pub struct ExplicitArms {
+    lists: Vec<Vec<f64>>,
+    range: (f64, f64),
+}
+
+impl ExplicitArms {
+    /// Build from per-arm lists; all must share one length ≥ 1.
+    pub fn new(lists: Vec<Vec<f64>>) -> Self {
+        assert!(!lists.is_empty(), "no arms");
+        let n = lists[0].len();
+        assert!(n > 0, "empty reward lists");
+        assert!(lists.iter().all(|l| l.len() == n), "ragged reward lists");
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for l in &lists {
+            for &x in l {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+        }
+        if lo >= hi {
+            hi = lo + 1.0;
+        }
+        Self { lists, range: (lo, hi) }
+    }
+
+    /// Override the advertised reward range.
+    pub fn with_range(mut self, a: f64, b: f64) -> Self {
+        assert!(b > a);
+        self.range = (a, b);
+        self
+    }
+}
+
+impl RewardSource for ExplicitArms {
+    fn n_arms(&self) -> usize {
+        self.lists.len()
+    }
+
+    fn list_len(&self) -> usize {
+        self.lists[0].len()
+    }
+
+    fn reward_range(&self) -> (f64, f64) {
+        self.range
+    }
+
+    fn pull_range(&self, arm: usize, from: usize, to: usize) -> f64 {
+        self.lists[arm][from..to].iter().sum()
+    }
+
+    fn pull_iid(&self, arm: usize, rng: &mut Rng) -> f64 {
+        self.lists[arm][rng.next_below(self.list_len())]
+    }
+
+    fn true_mean(&self, arm: usize) -> f64 {
+        self.lists[arm].iter().sum::<f64>() / self.list_len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_matrix() -> Matrix {
+        Matrix::from_rows(&[
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![-1.0, 0.5, 2.0, -2.0],
+            vec![0.0, 0.0, 0.0, 0.0],
+        ])
+    }
+
+    #[test]
+    fn matrix_arms_true_mean_matches_dot() {
+        let m = toy_matrix();
+        let q = [1.0f32, -1.0, 0.5, 2.0];
+        for order in [PullOrder::Sequential, PullOrder::Permuted, PullOrder::BlockShuffled(2)] {
+            let arms = MatrixArms::new(&m, &q, 8.0, order, 7);
+            for i in 0..3 {
+                let expect = dot(m.row(i), &q) as f64 / 4.0;
+                assert!(
+                    (arms.true_mean(i) - expect).abs() < 1e-6,
+                    "order={order:?} arm={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_arms_full_pull_equals_exact_product() {
+        let m = toy_matrix();
+        let q = [1.0f32, -1.0, 0.5, 2.0];
+        for order in [PullOrder::Sequential, PullOrder::Permuted, PullOrder::BlockShuffled(3)] {
+            let arms = MatrixArms::new(&m, &q, 8.0, order, 3);
+            for i in 0..3 {
+                let full = arms.pull_range(i, 0, 4);
+                let expect = dot(m.row(i), &q) as f64;
+                assert!((full - expect).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_arms_pulls_compose() {
+        let m = toy_matrix();
+        let q = [0.5f32, 1.5, -0.5, 1.0];
+        let arms = MatrixArms::new(&m, &q, 8.0, PullOrder::Permuted, 11);
+        for i in 0..3 {
+            let split = arms.pull_range(i, 0, 2) + arms.pull_range(i, 2, 4);
+            let full = arms.pull_range(i, 0, 4);
+            assert!((split - full).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matrix_arms_range_bounds_rewards() {
+        let m = toy_matrix();
+        let q = [1.0f32, -1.0, 0.5, 2.0];
+        let arms = MatrixArms::new(&m, &q, 8.0, PullOrder::Permuted, 5);
+        let (a, b) = arms.reward_range();
+        for i in 0..3 {
+            for j in 0..4 {
+                let r = arms.pull_range(i, j, j + 1);
+                assert!(r >= a - 1e-9 && r <= b + 1e-9, "reward {r} outside [{a},{b}]");
+            }
+        }
+    }
+
+    #[test]
+    fn adversarial_serves_ones_first() {
+        let arms = AdversarialArms::from_ones(vec![3, 0, 5], 5);
+        assert_eq!(arms.pull_range(0, 0, 3), 3.0);
+        assert_eq!(arms.pull_range(0, 3, 5), 0.0);
+        assert_eq!(arms.pull_range(1, 0, 5), 0.0);
+        assert_eq!(arms.pull_range(2, 0, 5), 5.0);
+        assert_eq!(arms.best_arm(), 2);
+        assert_eq!(arms.true_mean(0), 0.6);
+    }
+
+    #[test]
+    fn adversarial_generate_means_in_unit() {
+        let arms = AdversarialArms::generate(100, 1000, 3);
+        for i in 0..100 {
+            let p = arms.true_mean(i);
+            assert!((0.0..=1.0).contains(&p));
+            // full pull equals true mean * N
+            assert!((arms.pull_range(i, 0, 1000) / 1000.0 - p).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn adversarial_iid_matches_mean() {
+        let arms = AdversarialArms::from_ones(vec![700], 1000);
+        let mut rng = Rng::new(9);
+        let m: f64 = (0..20_000).map(|_| arms.pull_iid(0, &mut rng)).sum::<f64>() / 20_000.0;
+        assert!((m - 0.7).abs() < 0.02, "mean={m}");
+    }
+
+    #[test]
+    fn explicit_arms_basics() {
+        let arms = ExplicitArms::new(vec![vec![1.0, 2.0, 3.0], vec![0.0, 0.0, 3.0]]);
+        assert_eq!(arms.n_arms(), 2);
+        assert_eq!(arms.list_len(), 3);
+        assert_eq!(arms.true_mean(0), 2.0);
+        assert_eq!(arms.pull_range(1, 1, 3), 3.0);
+        assert_eq!(arms.reward_range(), (0.0, 3.0));
+        let ranged = ExplicitArms::new(vec![vec![1.0]]).with_range(-5.0, 5.0);
+        assert_eq!(ranged.reward_range(), (-5.0, 5.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn explicit_arms_rejects_ragged() {
+        ExplicitArms::new(vec![vec![1.0], vec![1.0, 2.0]]);
+    }
+
+    #[test]
+    fn block_shuffle_covers_all_coords() {
+        let m = toy_matrix();
+        let q = [1.0f32, 1.0, 1.0, 1.0];
+        let arms = MatrixArms::new(&m, &q, 8.0, PullOrder::BlockShuffled(3), 17);
+        // Sum over full range must equal plain sum regardless of order.
+        let full = arms.pull_range(0, 0, 4);
+        assert!((full - 10.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,328 @@
+//! BOUNDEDME (Algorithm 1 of the paper): median elimination for MAB-BP.
+//!
+//! Round `l` keeps a survivor set `S_l` (initially all `n` arms) and a
+//! cumulative pull target `t_l` derived from the without-replacement
+//! bound ([`crate::bandit::bounds::m_bounded`]) at the round's error/
+//! confidence budget `ε_l = ε/4·(3/4)^{l-1}`, `δ_l = δ/2^l`. Each round:
+//!
+//! 1. pull every surviving arm up to `t_l` cumulative pulls,
+//! 2. drop the `⌈(|S_l|−K)/2⌉` arms with the lowest empirical means,
+//!
+//! until `K` arms remain. Theorem 1: the returned set is ε-optimal with
+//! probability ≥ 1 − δ. Corollary 2: per-arm pulls ≤ `N`, so BOUNDEDME
+//! is never asymptotically worse than exhaustive search.
+
+use super::arms::RewardSource;
+use super::bounds::m_bounded;
+use super::BanditResult;
+
+/// Parameters of a BOUNDEDME run.
+#[derive(Clone, Copy, Debug)]
+pub struct BoundedMeConfig {
+    /// Size of the returned arm set (`K ≥ 1`).
+    pub k: usize,
+    /// Suboptimality budget ε (on *mean* rewards, i.e. inner products
+    /// scaled by `1/N`). Must be > 0; smaller ⇒ more pulls (capped at N).
+    pub epsilon: f64,
+    /// Failure probability δ ∈ (0, 1).
+    pub delta: f64,
+}
+
+impl Default for BoundedMeConfig {
+    fn default() -> Self {
+        Self { k: 1, epsilon: 0.1, delta: 0.1 }
+    }
+}
+
+/// Per-round trace entry (for the figure-1 harness and debugging).
+#[derive(Clone, Copy, Debug)]
+pub struct RoundTrace {
+    /// Round index `l` (1-based).
+    pub round: u32,
+    /// Survivor count at the start of the round.
+    pub survivors: usize,
+    /// Cumulative pull target `t_l` for this round.
+    pub t_l: usize,
+    /// Round error budget `ε_l`.
+    pub epsilon_l: f64,
+    /// Round confidence budget `δ_l`.
+    pub delta_l: f64,
+}
+
+/// Full output of [`BoundedMe::run`]: the [`BanditResult`] plus the
+/// per-round schedule actually executed.
+#[derive(Clone, Debug)]
+pub struct BoundedMeOutput {
+    /// Selected arms / means / pull accounting.
+    pub result: BanditResult,
+    /// One entry per elimination round.
+    pub trace: Vec<RoundTrace>,
+}
+
+/// The BOUNDEDME algorithm. Stateless; construct with a config and call
+/// [`BoundedMe::run`] per query.
+#[derive(Clone, Copy, Debug)]
+pub struct BoundedMe {
+    cfg: BoundedMeConfig,
+}
+
+/// Internal survivor record.
+#[derive(Clone, Copy, Debug)]
+struct ArmState {
+    id: u32,
+    sum: f64,
+    pulls: u32,
+}
+
+impl ArmState {
+    #[inline]
+    fn mean(&self) -> f64 {
+        if self.pulls == 0 {
+            0.0
+        } else {
+            self.sum / self.pulls as f64
+        }
+    }
+}
+
+impl BoundedMe {
+    /// New instance; panics on invalid config.
+    pub fn new(cfg: BoundedMeConfig) -> Self {
+        assert!(cfg.k >= 1, "K must be ≥ 1");
+        assert!(cfg.epsilon > 0.0, "ε must be > 0");
+        assert!(cfg.delta > 0.0 && cfg.delta < 1.0, "δ must be in (0,1)");
+        Self { cfg }
+    }
+
+    /// Run Algorithm 1 against the environment.
+    pub fn run<R: RewardSource>(&self, env: &R) -> BoundedMeOutput {
+        let n = env.n_arms();
+        let n_list = env.list_len();
+        let k = self.cfg.k;
+        let range = env.range_width();
+
+        let mut survivors: Vec<ArmState> =
+            (0..n).map(|i| ArmState { id: i as u32, sum: 0.0, pulls: 0 }).collect();
+        let mut trace = Vec::new();
+        let mut total_pulls: u64 = 0;
+
+        let mut eps_l = self.cfg.epsilon / 4.0;
+        let mut delta_l = self.cfg.delta / 2.0;
+        let mut t_prev = 0usize;
+        let mut round: u32 = 0;
+
+        while survivors.len() > k {
+            round += 1;
+            let s = survivors.len();
+            let gap = s - k; // |S_l| − K ≥ 1 here
+            let drop = gap.div_ceil(2); // ⌈(|S_l|−K)/2⌉ arms to remove
+            let keep_half = gap / 2; // ⌊(|S_l|−K)/2⌋
+
+            // Per-arm failure budget from the Lemma-4 union bound:
+            // δ' = δ_l(⌊gap/2⌋+1) / (2·gap), tested at radius ε_l/2.
+            let delta_arm = delta_l * (keep_half as f64 + 1.0) / (2.0 * gap as f64);
+            let t_l = if delta_arm >= 1.0 {
+                // Degenerate (tiny instance, generous δ): one pull suffices
+                // for the union bound to hold vacuously.
+                t_prev.max(1)
+            } else {
+                m_bounded(eps_l / 2.0, delta_arm, n_list, range).max(t_prev)
+            };
+
+            trace.push(RoundTrace {
+                round,
+                survivors: s,
+                t_l,
+                epsilon_l: eps_l,
+                delta_l,
+            });
+
+            // Pull every survivor up to t_l cumulative pulls.
+            let delta_pulls = t_l - t_prev;
+            if delta_pulls > 0 {
+                for a in survivors.iter_mut() {
+                    let from = a.pulls as usize;
+                    a.sum += env.pull_range(a.id as usize, from, t_l);
+                    a.pulls = t_l as u32;
+                }
+                total_pulls += (delta_pulls * s) as u64;
+            }
+
+            // Drop the `drop` arms with the lowest empirical means.
+            // `select_nth_unstable` partitions in O(s).
+            let pivot = drop - 1;
+            survivors.select_nth_unstable_by(pivot, |a, b| {
+                a.mean().partial_cmp(&b.mean()).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            survivors.drain(..drop);
+
+            eps_l *= 0.75;
+            delta_l *= 0.5;
+            t_prev = t_l;
+        }
+
+        // Rank the final K arms by empirical mean, best first.
+        survivors.sort_by(|a, b| {
+            b.mean()
+                .partial_cmp(&a.mean())
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.id.cmp(&b.id))
+        });
+        let arms = survivors.iter().map(|a| a.id as usize).collect();
+        let means = survivors.iter().map(|a| a.mean()).collect();
+
+        BoundedMeOutput {
+            result: BanditResult { arms, means, total_pulls, rounds: round },
+            trace,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::arms::{AdversarialArms, ExplicitArms};
+    use crate::linalg::Rng;
+
+    fn constant_arms(means: &[f64], n_list: usize) -> ExplicitArms {
+        ExplicitArms::new(
+            means.iter().map(|&m| vec![m; n_list]).collect::<Vec<_>>(),
+        )
+        .with_range(0.0, 1.0)
+    }
+
+    #[test]
+    fn finds_best_constant_arm() {
+        let env = constant_arms(&[0.1, 0.9, 0.5, 0.2, 0.3], 100);
+        let out = BoundedMe::new(BoundedMeConfig { k: 1, epsilon: 0.05, delta: 0.05 }).run(&env);
+        assert_eq!(out.result.arms, vec![1]);
+        assert!((out.result.means[0] - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn top_k_of_constant_arms() {
+        let means: Vec<f64> = (0..50).map(|i| i as f64 / 50.0).collect();
+        let env = constant_arms(&means, 64);
+        let out = BoundedMe::new(BoundedMeConfig { k: 5, epsilon: 0.001, delta: 0.05 }).run(&env);
+        let mut got = out.result.arms.clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![45, 46, 47, 48, 49]);
+    }
+
+    #[test]
+    fn pulls_bounded_by_n_per_arm() {
+        // Corollary 2: pull count per arm ≤ N even for tiny ε.
+        let n = 64;
+        let n_list = 50;
+        let mut rng = Rng::new(5);
+        let lists: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..n_list).map(|_| rng.next_f64()).collect()).collect();
+        let env = ExplicitArms::new(lists).with_range(0.0, 1.0);
+        let out =
+            BoundedMe::new(BoundedMeConfig { k: 1, epsilon: 1e-9, delta: 0.01 }).run(&env);
+        for t in &out.trace {
+            assert!(t.t_l <= n_list, "round {} wants t_l={} > N", t.round, t.t_l);
+        }
+        // With t_l = N from round 1, elimination is on exact means ⇒
+        // correct best arm.
+        let mut best = 0usize;
+        for i in 1..n {
+            if env.true_mean(i) > env.true_mean(best) {
+                best = i;
+            }
+        }
+        assert_eq!(out.result.arms[0], best);
+        // Total pulls ≤ exhaustive n·N.
+        assert!(out.result.total_pulls <= (n * n_list) as u64);
+    }
+
+    #[test]
+    fn returns_exactly_k_arms() {
+        let env = constant_arms(&[0.5; 33], 32);
+        for k in [1usize, 2, 7, 32] {
+            let out =
+                BoundedMe::new(BoundedMeConfig { k, epsilon: 0.2, delta: 0.2 }).run(&env);
+            assert_eq!(out.result.arms.len(), k, "k={k}");
+            // No duplicates.
+            let mut s = out.result.arms.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), k);
+        }
+    }
+
+    #[test]
+    fn n_leq_k_returns_all_without_pulls() {
+        let env = constant_arms(&[0.3, 0.7], 16);
+        let out = BoundedMe::new(BoundedMeConfig { k: 5, epsilon: 0.1, delta: 0.1 }).run(&env);
+        assert_eq!(out.result.arms.len(), 2);
+        assert_eq!(out.result.total_pulls, 0);
+        assert_eq!(out.result.rounds, 0);
+    }
+
+    #[test]
+    fn epsilon_schedule_sums_below_epsilon() {
+        // Σ ε_l = ε/4 · Σ (3/4)^i ≤ ε; verify the executed schedule.
+        let env = constant_arms(&[0.5; 1000], 64);
+        let out = BoundedMe::new(BoundedMeConfig { k: 1, epsilon: 0.4, delta: 0.1 }).run(&env);
+        let eps_sum: f64 = out.trace.iter().map(|t| t.epsilon_l).sum();
+        let delta_sum: f64 = out.trace.iter().map(|t| t.delta_l).sum();
+        assert!(eps_sum <= 0.4 + 1e-12, "Σε_l = {eps_sum}");
+        assert!(delta_sum <= 0.1 + 1e-12, "Σδ_l = {delta_sum}");
+    }
+
+    #[test]
+    fn survivor_counts_shrink_correctly() {
+        let env = constant_arms(&[0.5; 100], 64);
+        let out = BoundedMe::new(BoundedMeConfig { k: 3, epsilon: 0.3, delta: 0.2 }).run(&env);
+        let mut prev = 100usize;
+        for t in &out.trace {
+            assert_eq!(t.survivors, prev);
+            let drop = (t.survivors - 3).div_ceil(2);
+            prev = t.survivors - drop;
+        }
+        assert_eq!(prev, 3);
+    }
+
+    #[test]
+    fn adversarial_guarantee_holds_statistically() {
+        // On the paper's adversarial environment, the (1−δ)-quantile of
+        // suboptimality must stay below ε. 30 trials, ε=0.3, δ=0.2.
+        let (eps, delta) = (0.3, 0.2);
+        let mut subopts = Vec::new();
+        for seed in 0..30u64 {
+            let env = AdversarialArms::generate(200, 500, seed);
+            let out = BoundedMe::new(BoundedMeConfig { k: 1, epsilon: eps, delta }).run(&env);
+            let best = env.true_mean(env.best_arm());
+            let got = env.true_mean(out.result.arms[0]);
+            subopts.push(best - got);
+        }
+        subopts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q_idx = ((1.0 - delta) * subopts.len() as f64).ceil() as usize - 1;
+        let q = subopts[q_idx];
+        assert!(q < eps, "(1-δ)-quantile suboptimality {q} ≥ ε {eps}");
+    }
+
+    #[test]
+    fn cumulative_pull_targets_monotone() {
+        let env = constant_arms(&[0.5; 512], 1000);
+        let out = BoundedMe::new(BoundedMeConfig { k: 1, epsilon: 0.05, delta: 0.05 }).run(&env);
+        let mut prev = 0usize;
+        for t in &out.trace {
+            assert!(t.t_l >= prev);
+            prev = t.t_l;
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_epsilon() {
+        BoundedMe::new(BoundedMeConfig { k: 1, epsilon: 0.0, delta: 0.1 });
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_delta() {
+        BoundedMe::new(BoundedMeConfig { k: 1, epsilon: 0.1, delta: 1.0 });
+    }
+}

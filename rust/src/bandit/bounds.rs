@@ -1,0 +1,219 @@
+//! Concentration bounds for MAB-BP.
+//!
+//! The paper's key statistical tool is Lemma 1: for a finite list of size
+//! `N` with values in `[a, b]`, sampling `m` values **without
+//! replacement** gives `P[mean_est − µ ≤ ε] ≥ 1 − δ` whenever
+//!
+//! ```text
+//! m ≥ m(u) = min{ (u+1)/(1+u/N),  (u + u/N)/(1+u/N) },
+//! u   = log(1/δ)/2 · (b−a)²/ε².
+//! ```
+//!
+//! `m(u)` is derived from the Bardenet–Maillard (2015) Corollary 2.5
+//! Hoeffding–Serfling bound and satisfies `m(u) ≤ N` for every `u ≥ 0` —
+//! the formal statement of "never pull an arm more than N times".
+//!
+//! For the ablation benches we also expose the classical Hoeffding sample
+//! size (infinite population, with replacement) and the Serfling
+//! confidence *radius* used by the Successive-Elimination baseline.
+
+/// The paper's `u` quantity: `log(1/δ)/2 · (b−a)²/ε²`.
+#[inline]
+pub fn u_of(epsilon: f64, delta: f64, range: f64) -> f64 {
+    debug_assert!(epsilon > 0.0 && delta > 0.0 && delta < 1.0 && range > 0.0);
+    (1.0 / delta).ln() / 2.0 * (range / epsilon).powi(2)
+}
+
+/// `m(u)` for list size `N` (Eq. 6 of the paper): the number of
+/// without-replacement samples sufficient for an (ε, δ) one-sided mean
+/// estimate. Always in `(0, N]` for `u > 0`.
+#[inline]
+pub fn m_of_u(u: f64, n_list: usize) -> f64 {
+    let n = n_list as f64;
+    let denom = 1.0 + u / n;
+    let m1 = (u + 1.0) / denom;
+    let m2 = (u + u / n) / denom;
+    m1.min(m2)
+}
+
+/// Sample size (integer pulls, ≥ 1, ≤ N) for an (ε, δ) estimate of the
+/// mean of a finite list of `n_list` values spanning `range = b − a`.
+///
+/// This is the paper's Lemma 1 rounded up for implementation: we take
+/// `⌈m(u)⌉` clamped to `[1, N]`. (Rounding up only tightens the
+/// guarantee.)
+pub fn m_bounded(epsilon: f64, delta: f64, n_list: usize, range: f64) -> usize {
+    if epsilon <= 0.0 {
+        return n_list; // ε → 0 ⇒ exact computation
+    }
+    let u = u_of(epsilon, delta, range);
+    let m = m_of_u(u, n_list).ceil();
+    (m.max(1.0) as usize).min(n_list)
+}
+
+/// Same, but parameterized directly by `u` (used by BOUNDEDME's round
+/// schedule where `u` already folds in the per-round union bound).
+pub fn m_bounded_from_u(u: f64, n_list: usize) -> usize {
+    if !u.is_finite() || u < 0.0 {
+        return n_list;
+    }
+    let m = m_of_u(u, n_list).ceil();
+    (m.max(1.0) as usize).min(n_list)
+}
+
+/// Classical Hoeffding sample size for an i.i.d. (with-replacement)
+/// (ε, δ) mean estimate of a `[a,b]`-bounded variable:
+/// `m = (b−a)²/(2ε²) · log(1/δ)`. Unbounded in `N` — this is what the
+/// classic Median-Elimination baseline uses.
+pub fn hoeffding_sample_size(epsilon: f64, delta: f64, range: f64) -> usize {
+    if epsilon <= 0.0 {
+        return usize::MAX;
+    }
+    let m = (range / epsilon).powi(2) / 2.0 * (1.0 / delta).ln();
+    m.ceil().max(1.0) as usize
+}
+
+/// Hoeffding confidence radius after `m` i.i.d. samples at confidence δ:
+/// `ε = (b−a) √(log(1/δ) / (2m))`.
+pub fn hoeffding_radius(m: usize, delta: f64, range: f64) -> f64 {
+    if m == 0 {
+        return f64::INFINITY;
+    }
+    range * ((1.0 / delta).ln() / (2.0 * m as f64)).sqrt()
+}
+
+/// The `ρ_m` factor of Bardenet–Maillard Cor. 2.5 (Eq. 3 of the paper):
+/// `ρ_m = min{ 1 − (m−1)/N, (1 − m/N)(1 + 1/m) }`.
+#[inline]
+pub fn rho_m(m: usize, n_list: usize) -> f64 {
+    if m == 0 {
+        return 1.0;
+    }
+    let m_f = m as f64;
+    let n = n_list as f64;
+    let r1 = 1.0 - (m_f - 1.0) / n;
+    let r2 = (1.0 - m_f / n) * (1.0 + 1.0 / m_f);
+    r1.min(r2).max(0.0)
+}
+
+/// Without-replacement (Hoeffding–Serfling) confidence radius after `m`
+/// of `N` pulls at confidence δ: `ε = (b−a) √(ρ_m log(1/δ) / (2m))`.
+///
+/// Shrinks to exactly 0 at `m = N` — the "bounded pulls" advantage in
+/// radius form; used by the Successive-Elimination-BP baseline.
+pub fn serfling_radius(m: usize, n_list: usize, delta: f64, range: f64) -> f64 {
+    if m == 0 {
+        return f64::INFINITY;
+    }
+    if m >= n_list {
+        return 0.0;
+    }
+    range * (rho_m(m, n_list) * (1.0 / delta).ln() / (2.0 * m as f64)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const N: usize = 100_000;
+
+    #[test]
+    fn m_never_exceeds_n() {
+        for &eps in &[1e-6, 1e-3, 0.01, 0.1, 0.5, 0.99] {
+            for &delta in &[1e-6, 0.01, 0.3, 0.9] {
+                let m = m_bounded(eps, delta, N, 1.0);
+                assert!(m >= 1 && m <= N, "eps={eps} delta={delta} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn m_monotone_decreasing_in_epsilon() {
+        let mut prev = usize::MAX;
+        for &eps in &[0.001, 0.01, 0.05, 0.1, 0.3, 0.6] {
+            let m = m_bounded(eps, 0.05, N, 1.0);
+            assert!(m <= prev, "eps={eps}: m={m} > prev={prev}");
+            prev = m;
+        }
+    }
+
+    #[test]
+    fn m_monotone_decreasing_in_delta() {
+        let mut prev = usize::MAX;
+        for &delta in &[0.001, 0.01, 0.1, 0.3, 0.6] {
+            let m = m_bounded(0.05, delta, N, 1.0);
+            assert!(m <= prev);
+            prev = m;
+        }
+    }
+
+    #[test]
+    fn m_approaches_n_as_eps_to_zero() {
+        assert_eq!(m_bounded(1e-9, 0.1, N, 1.0), N);
+        assert_eq!(m_bounded(0.0, 0.1, N, 1.0), N);
+    }
+
+    #[test]
+    fn m_far_below_hoeffding_when_eps_small() {
+        // The whole point of the paper: for small ε the without-replacement
+        // sample size caps at N while Hoeffding explodes.
+        let eps = 0.001;
+        let delta = 0.05;
+        let h = hoeffding_sample_size(eps, delta, 1.0);
+        let m = m_bounded(eps, delta, N, 1.0);
+        assert!(h > 10 * m, "hoeffding {h} vs bounded {m}");
+    }
+
+    #[test]
+    fn m_matches_hoeffding_when_n_large() {
+        // As N → ∞, m(u) → u + 1 ≈ Hoeffding's u.
+        let eps = 0.2;
+        let delta = 0.1;
+        let h = hoeffding_sample_size(eps, delta, 1.0);
+        let m = m_bounded(eps, delta, 1_000_000_000, 1.0);
+        let ratio = m as f64 / h as f64;
+        assert!((ratio - 1.0).abs() < 0.1, "ratio={ratio}");
+    }
+
+    #[test]
+    fn rho_bounds() {
+        for &m in &[1usize, 2, 100, 50_000, 99_999] {
+            let r = rho_m(m, N);
+            assert!((0.0..=1.0 + 1e-12).contains(&r), "m={m} rho={r}");
+        }
+        assert!(rho_m(0, N) == 1.0);
+    }
+
+    #[test]
+    fn serfling_radius_zero_at_full_list() {
+        assert_eq!(serfling_radius(N, N, 0.1, 1.0), 0.0);
+        assert!(serfling_radius(N / 2, N, 0.1, 1.0) > 0.0);
+        assert_eq!(serfling_radius(0, N, 0.1, 1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn serfling_tighter_than_hoeffding() {
+        for &m in &[100usize, 1000, 50_000, 90_000] {
+            let s = serfling_radius(m, N, 0.05, 1.0);
+            let h = hoeffding_radius(m, 0.05, 1.0);
+            assert!(s <= h + 1e-12, "m={m}: serfling {s} > hoeffding {h}");
+        }
+    }
+
+    #[test]
+    fn range_scales_quadratically_in_m() {
+        let m1 = m_bounded(0.1, 0.1, usize::MAX >> 16, 1.0);
+        let m2 = m_bounded(0.1, 0.1, usize::MAX >> 16, 2.0);
+        let ratio = m2 as f64 / m1 as f64;
+        assert!((ratio - 4.0).abs() < 0.1, "ratio={ratio}");
+    }
+
+    #[test]
+    fn hoeffding_radius_matches_sample_size_inverse() {
+        let eps = 0.07;
+        let delta = 0.03;
+        let m = hoeffding_sample_size(eps, delta, 1.0);
+        let r = hoeffding_radius(m, delta, 1.0);
+        assert!(r <= eps && r > eps * 0.9, "r={r} eps={eps}");
+    }
+}

@@ -1,0 +1,128 @@
+//! lil'UCB (Jamieson, Malloy, Nowak & Bubeck 2014): best-arm (K = 1)
+//! identification with a law-of-the-iterated-logarithm confidence bound.
+//! Samples the highest-UCB arm until one arm has collected a constant
+//! fraction of all pulls. i.i.d. baseline for `ablation_bandits`.
+
+use super::arms::RewardSource;
+use super::BanditResult;
+use crate::linalg::Rng;
+
+/// lil'UCB configuration (the paper's "lil'UCB heuristic" parameters:
+/// ε = 0.01, β = 0.5, λ = 1 + 2/β).
+#[derive(Clone, Copy, Debug)]
+pub struct LilUcbConfig {
+    /// Failure probability δ.
+    pub delta: f64,
+    /// Pulls per selection (batching).
+    pub batch: usize,
+    /// Safety cap on total pulls.
+    pub max_total_pulls: u64,
+}
+
+impl Default for LilUcbConfig {
+    fn default() -> Self {
+        Self { delta: 0.1, batch: 16, max_total_pulls: u64::MAX }
+    }
+}
+
+/// LIL exploration bonus with the heuristic constants.
+fn lil_bonus(t: u64, delta: f64, range: f64) -> f64 {
+    if t == 0 {
+        return f64::INFINITY;
+    }
+    let eps = 0.01f64;
+    let t_f = t as f64;
+    let inner = ((1.0 + eps) * t_f).ln().max(1.0) / delta;
+    let num = 2.0 * (1.0 + eps) * inner.ln().max(0.0);
+    range * (num / t_f).sqrt()
+}
+
+/// Run lil'UCB; returns the single best arm.
+pub fn lil_ucb<R: RewardSource>(cfg: &LilUcbConfig, env: &R, rng: &mut Rng) -> BanditResult {
+    assert!(cfg.delta > 0.0 && cfg.delta < 1.0);
+    let n = env.n_arms();
+    let range = env.range_width();
+    let lambda = 1.0 + 2.0 / 0.5; // λ = 1 + 2/β, β = 0.5
+    let mut sums = vec![0.0f64; n];
+    let mut pulls = vec![0u64; n];
+    let mut total = 0u64;
+    let mut rounds = 0u32;
+
+    // One initial batch each.
+    for i in 0..n {
+        for _ in 0..cfg.batch {
+            sums[i] += env.pull_iid(i, rng);
+        }
+        pulls[i] += cfg.batch as u64;
+        total += cfg.batch as u64;
+    }
+
+    loop {
+        rounds += 1;
+        // Stopping: some arm holds ≥ λ/(1+λ) … classic form:
+        // T_i(t) ≥ 1 + λ Σ_{j≠i} T_j(t).
+        let argmax_pulled = (0..n).max_by_key(|&i| pulls[i]).unwrap();
+        let others: u64 = total - pulls[argmax_pulled];
+        if pulls[argmax_pulled] as f64 >= 1.0 + lambda * others as f64
+            || total >= cfg.max_total_pulls
+        {
+            let best = (0..n)
+                .max_by(|&a, &b| {
+                    let ma = sums[a] / pulls[a].max(1) as f64;
+                    let mb = sums[b] / pulls[b].max(1) as f64;
+                    ma.partial_cmp(&mb).unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .unwrap();
+            return BanditResult {
+                arms: vec![best],
+                means: vec![sums[best] / pulls[best].max(1) as f64],
+                total_pulls: total,
+                rounds,
+            };
+        }
+
+        // Pull the highest-UCB arm.
+        let pick = (0..n)
+            .max_by(|&a, &b| {
+                let ua = sums[a] / pulls[a] as f64 + lil_bonus(pulls[a], cfg.delta, range);
+                let ub = sums[b] / pulls[b] as f64 + lil_bonus(pulls[b], cfg.delta, range);
+                ua.partial_cmp(&ub).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .unwrap();
+        for _ in 0..cfg.batch {
+            sums[pick] += env.pull_iid(pick, rng);
+        }
+        pulls[pick] += cfg.batch as u64;
+        total += cfg.batch as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::arms::ExplicitArms;
+
+    #[test]
+    fn finds_separated_best() {
+        let env = ExplicitArms::new(vec![vec![0.2; 32], vec![0.8; 32], vec![0.3; 32]])
+            .with_range(0.0, 1.0);
+        let mut rng = Rng::new(1);
+        let res = lil_ucb(&LilUcbConfig::default(), &env, &mut rng);
+        assert_eq!(res.arms, vec![1]);
+    }
+
+    #[test]
+    fn cap_fires_on_identical_arms() {
+        let env = ExplicitArms::new(vec![vec![0.5; 8], vec![0.5; 8]]).with_range(0.0, 1.0);
+        let mut rng = Rng::new(2);
+        let cfg = LilUcbConfig { delta: 0.05, batch: 8, max_total_pulls: 5000 };
+        let res = lil_ucb(&cfg, &env, &mut rng);
+        assert!(res.total_pulls >= 5000 && res.total_pulls < 5100);
+        assert_eq!(res.arms.len(), 1);
+    }
+
+    #[test]
+    fn bonus_shrinks() {
+        assert!(lil_bonus(10_000, 0.1, 1.0) < lil_bonus(10, 0.1, 1.0));
+    }
+}

@@ -1,0 +1,180 @@
+//! LUCB (Kalyanakrishnan, Tewari, Auer & Stone 2012): fixed-confidence
+//! top-K identification by sampling the two *critical* arms each round —
+//! the weakest of the empirical top-K (by LCB) and the strongest of the
+//! rest (by UCB) — until their intervals separate to within ε.
+//!
+//! Classic i.i.d. baseline for the `ablation_bandits` bench; pulls are
+//! with replacement and the radius uses the standard `k₁ n t⁴/δ`
+//! exploration rate. Pull batching keeps wall-clock reasonable.
+
+use super::arms::RewardSource;
+use super::BanditResult;
+use crate::linalg::Rng;
+
+/// LUCB configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct LucbConfig {
+    /// Returned set size.
+    pub k: usize,
+    /// Stop when `UCB(best challenger) − LCB(weakest incumbent) < ε`.
+    pub epsilon: f64,
+    /// Failure probability δ.
+    pub delta: f64,
+    /// Pulls per selected arm per round (batching; 1 = faithful LUCB1).
+    pub batch: usize,
+    /// Safety cap on total pulls (`u64::MAX` = none).
+    pub max_total_pulls: u64,
+}
+
+impl Default for LucbConfig {
+    fn default() -> Self {
+        Self { k: 1, epsilon: 0.1, delta: 0.1, batch: 16, max_total_pulls: u64::MAX }
+    }
+}
+
+struct LucbArm {
+    sum: f64,
+    pulls: u64,
+}
+
+impl LucbArm {
+    fn mean(&self) -> f64 {
+        if self.pulls == 0 {
+            0.0
+        } else {
+            self.sum / self.pulls as f64
+        }
+    }
+}
+
+/// LUCB exploration radius: `β(t, δ) = (b−a)·√(ln(k₁ n t⁴ / δ) / (2t))`
+/// with `k₁ = 5/4`.
+fn beta(t: u64, n: usize, delta: f64, range: f64) -> f64 {
+    if t == 0 {
+        return f64::INFINITY;
+    }
+    let t_f = t as f64;
+    let arg = (1.25 * n as f64 * t_f.powi(4) / delta).ln().max(0.0);
+    range * (arg / (2.0 * t_f)).sqrt()
+}
+
+/// Run LUCB for ε-optimal top-K identification.
+pub fn lucb<R: RewardSource>(cfg: &LucbConfig, env: &R, rng: &mut Rng) -> BanditResult {
+    assert!(cfg.k >= 1 && cfg.epsilon > 0.0 && cfg.delta > 0.0 && cfg.delta < 1.0);
+    let n = env.n_arms();
+    assert!(n > cfg.k, "LUCB needs n > K");
+    let range = env.range_width();
+    let mut arms: Vec<LucbArm> = (0..n).map(|_| LucbArm { sum: 0.0, pulls: 0 }).collect();
+    let mut total_pulls = 0u64;
+    let mut rounds = 0u32;
+
+    let pull = |arm: &mut LucbArm, id: usize, count: usize, rng: &mut Rng| {
+        for _ in 0..count {
+            arm.sum += env.pull_iid(id, rng);
+        }
+        arm.pulls += count as u64;
+    };
+
+    // Initialize: one batch per arm.
+    for (i, a) in arms.iter_mut().enumerate() {
+        pull(a, i, cfg.batch, rng);
+        total_pulls += cfg.batch as u64;
+    }
+
+    loop {
+        rounds += 1;
+        // Partition indices into empirical top-K and the rest.
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| {
+            arms[b]
+                .mean()
+                .partial_cmp(&arms[a].mean())
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let (top, rest) = idx.split_at(cfg.k);
+
+        // h = weakest incumbent by LCB; l = strongest challenger by UCB.
+        let h = *top
+            .iter()
+            .min_by(|&&a, &&b| {
+                let la = arms[a].mean() - beta(arms[a].pulls, n, cfg.delta, range);
+                let lb = arms[b].mean() - beta(arms[b].pulls, n, cfg.delta, range);
+                la.partial_cmp(&lb).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .unwrap();
+        let l = *rest
+            .iter()
+            .max_by(|&&a, &&b| {
+                let ua = arms[a].mean() + beta(arms[a].pulls, n, cfg.delta, range);
+                let ub = arms[b].mean() + beta(arms[b].pulls, n, cfg.delta, range);
+                ua.partial_cmp(&ub).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .unwrap();
+
+        let gap = (arms[l].mean() + beta(arms[l].pulls, n, cfg.delta, range))
+            - (arms[h].mean() - beta(arms[h].pulls, n, cfg.delta, range));
+        if gap < cfg.epsilon || total_pulls >= cfg.max_total_pulls {
+            let means = top.iter().map(|&i| arms[i].mean()).collect();
+            return BanditResult { arms: top.to_vec(), means, total_pulls, rounds };
+        }
+
+        pull(&mut arms[h], h, cfg.batch, rng);
+        pull(&mut arms[l], l, cfg.batch, rng);
+        total_pulls += 2 * cfg.batch as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::arms::ExplicitArms;
+
+    #[test]
+    fn separated_arms_resolved() {
+        let env = ExplicitArms::new(vec![vec![0.1; 32], vec![0.9; 32], vec![0.2; 32]])
+            .with_range(0.0, 1.0);
+        let mut rng = Rng::new(1);
+        let res = lucb(&LucbConfig { k: 1, epsilon: 0.3, ..Default::default() }, &env, &mut rng);
+        assert_eq!(res.arms, vec![1]);
+    }
+
+    #[test]
+    fn top_2_of_staircase() {
+        let env = ExplicitArms::new(
+            (0..6).map(|i| vec![i as f64 * 0.15; 32]).collect::<Vec<_>>(),
+        )
+        .with_range(0.0, 1.0);
+        let mut rng = Rng::new(2);
+        let res =
+            lucb(&LucbConfig { k: 2, epsilon: 0.1, ..Default::default() }, &env, &mut rng);
+        let mut got = res.arms.clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![4, 5]);
+    }
+
+    #[test]
+    fn pull_cap_respected() {
+        // Two identical arms can never separate; the cap must fire.
+        let env = ExplicitArms::new(vec![vec![0.5; 16], vec![0.5; 16]]).with_range(0.0, 1.0);
+        let mut rng = Rng::new(3);
+        let cfg = LucbConfig {
+            k: 1,
+            epsilon: 1e-9,
+            delta: 0.05,
+            batch: 8,
+            max_total_pulls: 10_000,
+        };
+        let res = lucb(&cfg, &env, &mut rng);
+        assert!(res.total_pulls >= 10_000);
+        assert!(res.total_pulls < 10_000 + 32);
+    }
+
+    #[test]
+    fn beta_decreasing_in_t() {
+        let b1 = beta(10, 100, 0.1, 1.0);
+        let b2 = beta(1000, 100, 0.1, 1.0);
+        assert!(b2 < b1);
+        assert_eq!(beta(0, 100, 0.1, 1.0), f64::INFINITY);
+    }
+}

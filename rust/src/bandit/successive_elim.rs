@@ -1,0 +1,211 @@
+//! Successive Elimination (Even-Dar, Mannor & Mansour 2006) with two
+//! confidence-radius flavors:
+//!
+//! * [`RadiusKind::Hoeffding`] — the classic i.i.d. radius (baseline),
+//! * [`RadiusKind::Serfling`] — the without-replacement radius, which
+//!   hits exactly 0 at `t = N`; an alternative way (vs BOUNDEDME's
+//!   round schedule) to exploit the MAB-BP structure, included for the
+//!   `ablation_bounds` bench.
+//!
+//! Pulls happen in geometrically growing batches so the radius
+//! recomputation cost is `O(log N)` per arm.
+
+use super::arms::RewardSource;
+use super::bounds::{hoeffding_radius, serfling_radius};
+use super::BanditResult;
+use crate::linalg::Rng;
+
+/// Which concentration radius drives elimination.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RadiusKind {
+    /// Classic i.i.d. Hoeffding radius; samples with replacement.
+    Hoeffding,
+    /// Hoeffding–Serfling without-replacement radius; samples without
+    /// replacement (positional pulls), radius = 0 at `t = N`.
+    Serfling,
+}
+
+/// Configuration for Successive Elimination.
+#[derive(Clone, Copy, Debug)]
+pub struct SuccessiveElimConfig {
+    /// Returned set size.
+    pub k: usize,
+    /// Stop once every surviving pair is resolved to within ε.
+    pub epsilon: f64,
+    /// Failure probability δ.
+    pub delta: f64,
+    /// Radius flavor (see [`RadiusKind`]).
+    pub radius: RadiusKind,
+    /// First batch size (doubles every round).
+    pub initial_batch: usize,
+}
+
+impl Default for SuccessiveElimConfig {
+    fn default() -> Self {
+        Self {
+            k: 1,
+            epsilon: 0.1,
+            delta: 0.1,
+            radius: RadiusKind::Serfling,
+            initial_batch: 16,
+        }
+    }
+}
+
+struct SeArm {
+    id: u32,
+    sum: f64,
+    pulls: usize,
+}
+
+impl SeArm {
+    fn mean(&self) -> f64 {
+        if self.pulls == 0 {
+            0.0
+        } else {
+            self.sum / self.pulls as f64
+        }
+    }
+}
+
+/// Run Successive Elimination for ε-optimal top-K identification.
+pub fn successive_elimination<R: RewardSource>(
+    cfg: &SuccessiveElimConfig,
+    env: &R,
+    rng: &mut Rng,
+) -> BanditResult {
+    assert!(cfg.k >= 1 && cfg.epsilon > 0.0 && cfg.delta > 0.0 && cfg.delta < 1.0);
+    let n = env.n_arms();
+    let n_list = env.list_len();
+    let range = env.range_width();
+    // Union bound over arms and (geometric) rounds: log2(N)+1 rounds max
+    // for Serfling; allow a generous 64 for Hoeffding.
+    let delta_per_test = cfg.delta / (n as f64 * 64.0);
+
+    let mut survivors: Vec<SeArm> =
+        (0..n).map(|i| SeArm { id: i as u32, sum: 0.0, pulls: 0 }).collect();
+    let mut total_pulls = 0u64;
+    let mut rounds = 0u32;
+    let mut batch = cfg.initial_batch.max(1);
+
+    loop {
+        rounds += 1;
+        // Pull each survivor `batch` more times.
+        for a in survivors.iter_mut() {
+            match cfg.radius {
+                RadiusKind::Serfling => {
+                    let from = a.pulls;
+                    let to = (from + batch).min(n_list);
+                    if to > from {
+                        a.sum += env.pull_range(a.id as usize, from, to);
+                        total_pulls += (to - from) as u64;
+                        a.pulls = to;
+                    }
+                }
+                RadiusKind::Hoeffding => {
+                    for _ in 0..batch {
+                        a.sum += env.pull_iid(a.id as usize, rng);
+                    }
+                    a.pulls += batch;
+                    total_pulls += batch as u64;
+                }
+            }
+        }
+
+        // Confidence radius (same pull count for all survivors).
+        let t = survivors[0].pulls;
+        let beta = match cfg.radius {
+            RadiusKind::Hoeffding => hoeffding_radius(t, delta_per_test, range),
+            RadiusKind::Serfling => serfling_radius(t, n_list, delta_per_test, range),
+        };
+
+        // K-th best empirical mean among survivors.
+        let mut means: Vec<f64> = survivors.iter().map(|a| a.mean()).collect();
+        means.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+        let kth = means[cfg.k - 1];
+
+        // Eliminate arms confidently below the K-th best.
+        if survivors.len() > cfg.k {
+            survivors.retain(|a| a.mean() + beta >= kth - beta);
+        }
+
+        let done = survivors.len() <= cfg.k // resolved the set
+            || 2.0 * beta <= cfg.epsilon // every comparison is ε-resolved
+            || (cfg.radius == RadiusKind::Serfling && t >= n_list); // exact
+        if done {
+            break;
+        }
+        batch *= 2;
+    }
+
+    survivors.sort_by(|a, b| {
+        b.mean()
+            .partial_cmp(&a.mean())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.id.cmp(&b.id))
+    });
+    survivors.truncate(cfg.k);
+    BanditResult {
+        arms: survivors.iter().map(|a| a.id as usize).collect(),
+        means: survivors.iter().map(|a| a.mean()).collect(),
+        total_pulls,
+        rounds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::arms::ExplicitArms;
+
+    fn staircase(n: usize, n_list: usize) -> ExplicitArms {
+        ExplicitArms::new(
+            (0..n).map(|i| vec![i as f64 / n as f64; n_list]).collect::<Vec<_>>(),
+        )
+        .with_range(0.0, 1.0)
+    }
+
+    #[test]
+    fn serfling_finds_top_k_exactly() {
+        let env = staircase(32, 128);
+        let mut rng = Rng::new(1);
+        let cfg = SuccessiveElimConfig { k: 3, epsilon: 0.001, ..Default::default() };
+        let res = successive_elimination(&cfg, &env, &mut rng);
+        let mut got = res.arms.clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![29, 30, 31]);
+        // Serfling caps pulls at n·N.
+        assert!(res.total_pulls <= (32 * 128) as u64);
+    }
+
+    #[test]
+    fn hoeffding_variant_runs_and_selects_reasonably() {
+        let env = ExplicitArms::new(vec![vec![0.05; 64], vec![0.95; 64]]).with_range(0.0, 1.0);
+        let mut rng = Rng::new(2);
+        let cfg = SuccessiveElimConfig {
+            k: 1,
+            epsilon: 0.2,
+            delta: 0.1,
+            radius: RadiusKind::Hoeffding,
+            initial_batch: 8,
+        };
+        let res = successive_elimination(&cfg, &env, &mut rng);
+        assert_eq!(res.arms, vec![1]);
+    }
+
+    #[test]
+    fn serfling_never_exceeds_n_per_arm() {
+        let env = staircase(8, 40);
+        let mut rng = Rng::new(3);
+        let cfg = SuccessiveElimConfig {
+            k: 1,
+            epsilon: 1e-12,
+            delta: 0.01,
+            radius: RadiusKind::Serfling,
+            initial_batch: 16,
+        };
+        let res = successive_elimination(&cfg, &env, &mut rng);
+        assert!(res.total_pulls <= (8 * 40) as u64);
+        assert_eq!(res.arms, vec![7]);
+    }
+}

@@ -1,0 +1,187 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module:
+//! [`Bencher::iter`] warms up, runs timed batches until a wall-clock
+//! budget is spent, and reports mean / σ / min / p50 per iteration. The
+//! bench binaries print a summary table at the end via [`Reporter`].
+
+use std::time::{Duration, Instant};
+
+/// Result of one measured benchmark.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Benchmark label.
+    pub name: String,
+    /// Iterations measured.
+    pub iters: u64,
+    /// Mean seconds per iteration.
+    pub mean: f64,
+    /// Standard deviation per iteration.
+    pub std: f64,
+    /// Fastest iteration.
+    pub min: f64,
+    /// Median iteration.
+    pub median: f64,
+}
+
+impl Measurement {
+    /// `value ± σ` with adaptive units.
+    pub fn human(&self) -> String {
+        fn fmt(s: f64) -> String {
+            if s >= 1.0 {
+                format!("{s:.3} s")
+            } else if s >= 1e-3 {
+                format!("{:.3} ms", s * 1e3)
+            } else if s >= 1e-6 {
+                format!("{:.3} µs", s * 1e6)
+            } else {
+                format!("{:.1} ns", s * 1e9)
+            }
+        }
+        format!("{} ± {} (n={})", fmt(self.mean), fmt(self.std), self.iters)
+    }
+}
+
+/// Benchmark runner with a fixed time budget per benchmark.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    max_iters: u64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Runner with explicit budgets.
+    pub fn new(warmup: Duration, budget: Duration) -> Self {
+        Self { warmup, budget, max_iters: 1_000_000 }
+    }
+
+    /// Quick runner for CI-ish runs.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(500),
+            max_iters: 100_000,
+        }
+    }
+
+    /// Measure a closure. The closure's return value is consumed via
+    /// `std::hint::black_box` to keep the optimizer honest.
+    pub fn iter<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Timed iterations.
+        let mut samples = Vec::new();
+        let b0 = Instant::now();
+        while b0.elapsed() < self.budget && (samples.len() as u64) < self.max_iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let n = samples.len().max(1) as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Measurement {
+            name: name.to_string(),
+            iters: samples.len() as u64,
+            mean,
+            std: var.sqrt(),
+            min: sorted.first().copied().unwrap_or(0.0),
+            median: sorted.get(sorted.len() / 2).copied().unwrap_or(0.0),
+        }
+    }
+}
+
+/// Collects measurements and prints an aligned summary.
+#[derive(Default)]
+pub struct Reporter {
+    rows: Vec<Measurement>,
+}
+
+impl Reporter {
+    /// Empty reporter.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record (and echo) a measurement.
+    pub fn push(&mut self, m: Measurement) {
+        println!("bench {:<44} {}", m.name, m.human());
+        self.rows.push(m);
+    }
+
+    /// Measure + record in one call.
+    pub fn bench<T>(&mut self, b: &Bencher, name: &str, f: impl FnMut() -> T) {
+        let m = b.iter(name, f);
+        self.push(m);
+    }
+
+    /// Recorded measurements.
+    pub fn rows(&self) -> &[Measurement] {
+        &self.rows
+    }
+
+    /// Final summary block.
+    pub fn finish(&self, title: &str) {
+        println!("\n== {title} ==");
+        for m in &self.rows {
+            println!(
+                "{:<44} mean {:>12.6} ms  min {:>12.6} ms  n={}",
+                m.name,
+                m.mean * 1e3,
+                m.min * 1e3,
+                m.iters
+            );
+        }
+    }
+}
+
+/// True when a quick bench run is requested (`BENCH_QUICK=1`, or always
+/// under `cargo test`).
+pub fn quick_requested() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher::new(Duration::from_millis(1), Duration::from_millis(20));
+        let m = b.iter("spin", || {
+            let mut s = 0u64;
+            for i in 0..100 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(m.iters > 10);
+        assert!(m.mean > 0.0);
+        assert!(m.min <= m.mean);
+        assert!(!m.human().is_empty());
+    }
+
+    #[test]
+    fn reporter_accumulates() {
+        let b = Bencher::new(Duration::from_millis(1), Duration::from_millis(5));
+        let mut r = Reporter::new();
+        r.bench(&b, "noop", || 1);
+        assert_eq!(r.rows().len(), 1);
+        r.finish("test");
+    }
+}

@@ -1,0 +1,162 @@
+//! Minimal CLI argument parsing (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, bare boolean `--flag`, and
+//! positional arguments. Typed access with defaults via [`Args::get`].
+
+use std::collections::HashMap;
+use std::str::FromStr;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    /// `bool_flags` lists flags that never take a value, resolving the
+    /// `--flag positional` ambiguity.
+    pub fn parse_from_with<I: IntoIterator<Item = String>>(
+        args: I,
+        bool_flags: &[&str],
+    ) -> Self {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    flags.insert(name.to_string(), "true".to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    flags.insert(name.to_string(), v);
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Self { flags, positional }
+    }
+
+    /// Parse from an iterator with no declared boolean flags.
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I) -> Self {
+        Self::parse_from_with(args, &[])
+    }
+
+    /// Parse the process's arguments (skipping argv[0]).
+    pub fn parse() -> Self {
+        Self::parse_with(&[])
+    }
+
+    /// Parse the process's arguments with declared boolean flags.
+    pub fn parse_with(bool_flags: &[&str]) -> Self {
+        Self::parse_from_with(std::env::args().skip(1), bool_flags)
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional (the subcommand), if any.
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Boolean flag present (either bare or `=true`).
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.get(name).map(|v| v != "false").unwrap_or(false)
+    }
+
+    /// Typed flag with default.
+    pub fn get<T: FromStr>(&self, name: &str, default: T) -> T {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Required typed flag.
+    pub fn require<T: FromStr>(&self, name: &str) -> anyhow::Result<T> {
+        self.flags
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required --{name}"))?
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad value for --{name}"))
+    }
+
+    /// Raw string flag.
+    pub fn get_str(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+}
+
+/// Install a minimal `log` backend writing to stderr. Level from
+/// `RUST_LOG` (error|warn|info|debug|trace), default `info`.
+pub fn init_logger() {
+    struct StderrLogger(log::LevelFilter);
+    impl log::Log for StderrLogger {
+        fn enabled(&self, metadata: &log::Metadata) -> bool {
+            metadata.level() <= self.0
+        }
+        fn log(&self, record: &log::Record) {
+            if self.enabled(record.metadata()) {
+                eprintln!("[{:<5}] {}", record.level(), record.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    let level = match std::env::var("RUST_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    };
+    let _ = log::set_boxed_logger(Box::new(StderrLogger(level)))
+        .map(|()| log::set_max_level(level));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse_from_with(s.iter().map(|s| s.to_string()), &["full"])
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["gen", "--n", "100", "--dim=64", "--full", "out.bin"]);
+        assert_eq!(a.command(), Some("gen"));
+        assert_eq!(a.get("n", 0usize), 100);
+        assert_eq!(a.get("dim", 0usize), 64);
+        assert!(a.has("full"));
+        assert!(!a.has("missing"));
+        assert_eq!(a.positional(), &["gen".to_string(), "out.bin".to_string()]);
+    }
+
+    #[test]
+    fn defaults_and_require() {
+        let a = parse(&["--k", "5"]);
+        assert_eq!(a.get("k", 1usize), 5);
+        assert_eq!(a.get("eps", 0.25f64), 0.25);
+        assert!(a.require::<usize>("k").is_ok());
+        assert!(a.require::<usize>("nope").is_err());
+    }
+
+    #[test]
+    fn bool_flag_followed_by_flag() {
+        let a = parse(&["--full", "--n", "3"]);
+        assert!(a.has("full"));
+        assert_eq!(a.get("n", 0usize), 3);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse(&["--offset", "-3"]);
+        assert_eq!(a.get("offset", 0i64), -3);
+    }
+}

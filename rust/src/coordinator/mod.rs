@@ -1,0 +1,640 @@
+//! The serving coordinator: router → dynamic batcher → worker pool.
+//!
+//! The paper's Motivation II — a per-query (ε, δ) accuracy knob — is a
+//! *serving* feature: different requests on one index want different
+//! points on the accuracy/latency curve. This module provides that as a
+//! production-shaped service:
+//!
+//! ```text
+//!  submit() ──► bounded router queue ──► batcher (size/deadline policy)
+//!                                          │ batches
+//!                                          ▼
+//!                                   worker pool (each owns a
+//!                                   ScoringEngine + BoundedME state)
+//!                                          │ responses
+//!                                          ▼
+//!                                   per-request channels + metrics
+//! ```
+//!
+//! * **Backpressure**: the router queue is bounded; `submit` fails fast
+//!   with [`CoordinatorError::QueueFull`] instead of buffering unbounded.
+//! * **Dynamic batching**: a batch closes when it reaches
+//!   `max_batch` or when the oldest request has waited `batch_timeout`.
+//! * **Backends**: workers score through a [`ScoringEngine`] — pure-Rust
+//!   or the PJRT AOT artifact (see [`crate::runtime`]).
+
+pub mod server;
+pub mod stats;
+
+pub use stats::{MetricsRegistry, MetricsSnapshot};
+
+use crate::algos::MipsResult;
+use crate::bandit::{BoundedMe, BoundedMeConfig, MatrixArms, PullOrder, RewardSource};
+use crate::linalg::{Matrix, TopK};
+use crate::runtime::{NativeEngine, PjrtEngine, ScoringEngine};
+use crate::sync::{bounded, Receiver, RecvError, SendError, Sender};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Which compute backend workers use for exact scoring.
+#[derive(Clone, Debug)]
+pub enum Backend {
+    /// Pure-Rust dot products.
+    Native,
+    /// AOT-compiled XLA artifacts loaded from this directory.
+    Pjrt {
+        /// Directory containing `*.hlo.txt` artifacts.
+        artifact_dir: PathBuf,
+    },
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Worker threads.
+    pub workers: usize,
+    /// Maximum queries per batch.
+    pub max_batch: usize,
+    /// Maximum time the oldest request waits before its batch closes.
+    pub batch_timeout: Duration,
+    /// Router queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+    /// Exact-scoring backend.
+    pub backend: Backend,
+    /// Pull order for BOUNDEDME queries.
+    pub pull_order: PullOrder,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            max_batch: 32,
+            batch_timeout: Duration::from_millis(2),
+            queue_capacity: 1024,
+            backend: Backend::Native,
+            pull_order: PullOrder::BlockShuffled(64),
+        }
+    }
+}
+
+/// How a request wants to be answered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryMode {
+    /// BOUNDEDME with the request's (ε, δ).
+    BoundedMe,
+    /// Exhaustive exact scoring through the backend engine.
+    Exact,
+}
+
+/// One MIPS request.
+#[derive(Clone, Debug)]
+pub struct QueryRequest {
+    /// The query vector (must match the dataset dimension).
+    pub vector: Vec<f32>,
+    /// Result count.
+    pub k: usize,
+    /// BOUNDEDME suboptimality budget.
+    pub epsilon: f64,
+    /// BOUNDEDME failure probability.
+    pub delta: f64,
+    /// Answer mode.
+    pub mode: QueryMode,
+    /// Per-query seed (pull-order randomness).
+    pub seed: u64,
+    /// Optional service-level deadline, measured from submission. A
+    /// request whose queue wait already exceeds it is *shed* (answered
+    /// with `shed = true` and no results) instead of wasting worker
+    /// time — classic load-shedding under overload.
+    pub deadline: Option<Duration>,
+}
+
+impl QueryRequest {
+    /// A BOUNDEDME request with the given knobs.
+    pub fn bounded_me(vector: Vec<f32>, k: usize, epsilon: f64, delta: f64) -> Self {
+        Self { vector, k, epsilon, delta, mode: QueryMode::BoundedMe, seed: 0, deadline: None }
+    }
+
+    /// Attach a deadline (see [`QueryRequest::deadline`]).
+    pub fn with_deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// An exact request.
+    pub fn exact(vector: Vec<f32>, k: usize) -> Self {
+        Self {
+            vector,
+            k,
+            epsilon: 0.0,
+            delta: 0.5,
+            mode: QueryMode::Exact,
+            seed: 0,
+            deadline: None,
+        }
+    }
+}
+
+/// A completed response.
+#[derive(Clone, Debug)]
+pub struct QueryResponse {
+    /// Result indices, best first.
+    pub indices: Vec<usize>,
+    /// Score estimates.
+    pub scores: Vec<f32>,
+    /// Flops spent.
+    pub flops: u64,
+    /// Queue wait before a worker picked the batch up.
+    pub queue_wait: Duration,
+    /// Service time inside the worker.
+    pub service: Duration,
+    /// Size of the batch this query rode in.
+    pub batch_size: usize,
+    /// Worker id that served it.
+    pub worker: usize,
+    /// True when the request was shed (deadline exceeded in queue): no
+    /// results were computed.
+    pub shed: bool,
+}
+
+/// Submission failures.
+#[derive(Debug)]
+pub enum CoordinatorError {
+    /// The bounded router queue is full (backpressure).
+    QueueFull,
+    /// The coordinator is shutting down.
+    Shutdown,
+    /// The query vector dimension does not match the dataset.
+    DimMismatch {
+        /// Dimension received.
+        got: usize,
+        /// Dimension expected.
+        want: usize,
+    },
+}
+
+impl std::fmt::Display for CoordinatorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::QueueFull => write!(f, "router queue full"),
+            Self::Shutdown => write!(f, "coordinator shut down"),
+            Self::DimMismatch { got, want } => {
+                write!(f, "query dim {got} != dataset dim {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CoordinatorError {}
+
+struct Pending {
+    req: QueryRequest,
+    submitted: Instant,
+    reply: Sender<QueryResponse>,
+}
+
+struct Batch {
+    items: Vec<Pending>,
+}
+
+/// The serving coordinator. See module docs.
+pub struct Coordinator {
+    submit_tx: Sender<Pending>,
+    metrics: Arc<MetricsRegistry>,
+    dim: usize,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the coordinator over a vector set.
+    pub fn new(data: Matrix, cfg: CoordinatorConfig) -> crate::Result<Self> {
+        assert!(cfg.workers >= 1 && cfg.max_batch >= 1);
+        let dim = data.cols();
+        let data = Arc::new(data);
+        let metrics = Arc::new(MetricsRegistry::new());
+        let (submit_tx, submit_rx) = bounded::<Pending>(cfg.queue_capacity);
+        let (batch_tx, batch_rx) = bounded::<Batch>(cfg.workers * 2);
+
+        let mut threads = Vec::new();
+
+        // Batcher thread.
+        {
+            let cfg2 = cfg.clone();
+            let metrics = metrics.clone();
+            threads.push(
+                std::thread::Builder::new().name("batcher".into()).spawn(move || {
+                    run_batcher(submit_rx, batch_tx, &cfg2, &metrics)
+                })?,
+            );
+        }
+
+        // Worker threads.
+        let colmax = Arc::new(crate::algos::bounded_me_index::column_maxima(&data));
+        for w in 0..cfg.workers {
+            let rx = batch_rx.clone();
+            let data = data.clone();
+            let colmax = colmax.clone();
+            let metrics = metrics.clone();
+            let backend = cfg.backend.clone();
+            let order = cfg.pull_order;
+            threads.push(std::thread::Builder::new().name(format!("worker-{w}")).spawn(
+                move || {
+                    let engine: Box<dyn ScoringEngine> = match &backend {
+                        Backend::Native => Box::new(NativeEngine),
+                        Backend::Pjrt { artifact_dir } => {
+                            // Preload the dataset to the device so exact
+                            // queries only move the query vector.
+                            match PjrtEngine::with_dataset(artifact_dir.clone(), &data) {
+                                Ok(e) => Box::new(e),
+                                Err(err) => {
+                                    log::error!(
+                                        "worker-{w}: pjrt init failed ({err}); \
+                                         falling back to native"
+                                    );
+                                    Box::new(NativeEngine)
+                                }
+                            }
+                        }
+                    };
+                    run_worker(w, rx, &data, &colmax, order, engine.as_ref(), &metrics);
+                },
+            )?);
+        }
+
+        Ok(Self { submit_tx, metrics, dim, threads })
+    }
+
+    /// Submit a request; returns the response channel. Fails fast under
+    /// backpressure.
+    pub fn submit(
+        &self,
+        req: QueryRequest,
+    ) -> Result<Receiver<QueryResponse>, CoordinatorError> {
+        if req.vector.len() != self.dim {
+            return Err(CoordinatorError::DimMismatch { got: req.vector.len(), want: self.dim });
+        }
+        let (reply, rx) = bounded(1);
+        let pending = Pending { req, submitted: Instant::now(), reply };
+        self.submit_tx.try_send(pending).map_err(|e| match e {
+            SendError::Full(_) => CoordinatorError::QueueFull,
+            SendError::Disconnected(_) => CoordinatorError::Shutdown,
+        })?;
+        Ok(rx)
+    }
+
+    /// Submit and wait for the answer.
+    pub fn query_blocking(&self, req: QueryRequest) -> Result<QueryResponse, CoordinatorError> {
+        let rx = self.submit(req)?;
+        rx.recv().map_err(|_| CoordinatorError::Shutdown)
+    }
+
+    /// Current metrics snapshot.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Dataset dimension served.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Drain and stop all threads.
+    pub fn shutdown(mut self) {
+        drop(self.submit_tx);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Batcher loop: close a batch on size or oldest-waiter deadline.
+fn run_batcher(
+    submit_rx: Receiver<Pending>,
+    batch_tx: Sender<Batch>,
+    cfg: &CoordinatorConfig,
+    metrics: &MetricsRegistry,
+) {
+    loop {
+        // Block for the batch's first element.
+        let first = match submit_rx.recv() {
+            Ok(p) => p,
+            Err(_) => return, // all senders gone: shutdown
+        };
+        let deadline = first.submitted + cfg.batch_timeout;
+        let mut items = vec![first];
+        while items.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match submit_rx.recv_timeout(deadline - now) {
+                Ok(p) => items.push(p),
+                Err(RecvError::Timeout) => break,
+                Err(RecvError::Disconnected) => {
+                    // Flush what we have, then exit on next loop.
+                    break;
+                }
+            }
+        }
+        metrics.record_batch(items.len());
+        if batch_tx.send(Batch { items }).is_err() {
+            return;
+        }
+    }
+}
+
+/// Worker loop: serve every query of every batch.
+fn run_worker(
+    worker_id: usize,
+    rx: Receiver<Batch>,
+    data: &Matrix,
+    colmax: &[f32],
+    order: PullOrder,
+    engine: &dyn ScoringEngine,
+    metrics: &MetricsRegistry,
+) {
+    let all_ids: Vec<usize> = (0..data.rows()).collect();
+    while let Ok(batch) = rx.recv() {
+        let batch_size = batch.items.len();
+        for p in batch.items {
+            let picked_up = Instant::now();
+            let queue_wait = picked_up - p.submitted;
+            // Load shedding: don't compute answers nobody is waiting for.
+            if let Some(deadline) = p.req.deadline {
+                if queue_wait > deadline {
+                    metrics.record_shed();
+                    let _ = p.reply.send(QueryResponse {
+                        indices: Vec::new(),
+                        scores: Vec::new(),
+                        flops: 0,
+                        queue_wait,
+                        service: Duration::ZERO,
+                        batch_size,
+                        worker: worker_id,
+                        shed: true,
+                    });
+                    continue;
+                }
+            }
+            let result = serve_one(&p.req, data, colmax, order, engine, &all_ids);
+            let service = picked_up.elapsed();
+            metrics.record_query(queue_wait, service, result.flops);
+            let _ = p.reply.send(QueryResponse {
+                indices: result.indices,
+                scores: result.scores,
+                flops: result.flops,
+                queue_wait,
+                service,
+                batch_size,
+                worker: worker_id,
+                shed: false,
+            });
+        }
+    }
+}
+
+/// Serve a single query on a worker.
+fn serve_one(
+    req: &QueryRequest,
+    data: &Matrix,
+    colmax: &[f32],
+    order: PullOrder,
+    engine: &dyn ScoringEngine,
+    all_ids: &[usize],
+) -> MipsResult {
+    match req.mode {
+        QueryMode::Exact => {
+            let _ = all_ids;
+            let scores = engine
+                .score_dataset(data, &req.vector)
+                .unwrap_or_else(|_| data.matvec(&req.vector));
+            let mut top = TopK::new(req.k);
+            for (i, &s) in scores.iter().enumerate() {
+                top.push(s, i);
+            }
+            let ranked = top.into_sorted();
+            MipsResult {
+                indices: ranked.iter().map(|&(_, i)| i).collect(),
+                scores: ranked.iter().map(|&(s, _)| s).collect(),
+                flops: (data.rows() * data.cols()) as u64,
+                candidates: data.rows(),
+            }
+        }
+        QueryMode::BoundedMe => {
+            // Tight per-query reward bound from column maxima.
+            let bound = colmax
+                .iter()
+                .zip(&req.vector)
+                .fold(f32::MIN_POSITIVE, |m, (&c, &qj)| m.max(c * qj.abs()));
+            let arms = MatrixArms::new(data, &req.vector, bound, order, req.seed);
+            let n_list = arms.list_len() as f64;
+            // ε is range-relative (see `BoundedMeIndex::query`).
+            let eff_epsilon = req.epsilon * arms.range_width();
+            let algo = BoundedMe::new(BoundedMeConfig {
+                k: req.k.max(1),
+                epsilon: eff_epsilon.max(1e-12),
+                delta: req.delta.clamp(1e-12, 1.0 - 1e-12),
+            });
+            let out = algo.run(&arms);
+            MipsResult {
+                indices: out.result.arms,
+                scores: out.result.means.iter().map(|&m| (m * n_list) as f32).collect(),
+                flops: out.result.total_pulls,
+                candidates: 0,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::gaussian_dataset;
+
+    fn small_coordinator(workers: usize, queue: usize) -> (Coordinator, Matrix) {
+        let ds = gaussian_dataset(200, 64, 42);
+        let cfg = CoordinatorConfig {
+            workers,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(1),
+            queue_capacity: queue,
+            backend: Backend::Native,
+            pull_order: PullOrder::BlockShuffled(16),
+        };
+        let data = ds.vectors.clone();
+        (Coordinator::new(ds.vectors, cfg).unwrap(), data)
+    }
+
+    #[test]
+    fn exact_query_round_trips() {
+        let (c, data) = small_coordinator(2, 64);
+        let q = vec![0.5f32; 64];
+        let resp = c.query_blocking(QueryRequest::exact(q.clone(), 5)).unwrap();
+        assert_eq!(resp.indices.len(), 5);
+        let truth = crate::algos::ground_truth(&data, &q, 5);
+        assert_eq!(resp.indices, truth);
+        c.shutdown();
+    }
+
+    #[test]
+    fn bounded_me_query_served() {
+        let (c, data) = small_coordinator(1, 64);
+        let q = vec![0.25f32; 64];
+        let resp = c
+            .query_blocking(QueryRequest::bounded_me(q.clone(), 3, 1e-9, 0.05))
+            .unwrap();
+        // ε→0 ⇒ exact elimination.
+        let mut got = resp.indices.clone();
+        got.sort_unstable();
+        let mut want = crate::algos::ground_truth(&data, &q, 3);
+        want.sort_unstable();
+        assert_eq!(got, want);
+        assert!(resp.flops <= (200 * 64) as u64);
+        c.shutdown();
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let (c, _) = small_coordinator(1, 8);
+        let Err(err) = c.submit(QueryRequest::exact(vec![0.0; 3], 1)) else {
+            panic!("expected DimMismatch");
+        };
+        assert!(matches!(err, CoordinatorError::DimMismatch { got: 3, want: 64 }));
+        c.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submissions_all_complete() {
+        let (c, _) = small_coordinator(4, 256);
+        let mut handles = Vec::new();
+        for i in 0..64u64 {
+            let q = vec![(i as f32 % 7.0) - 3.0; 64];
+            handles.push(c.submit(QueryRequest::bounded_me(q, 2, 0.3, 0.2)).unwrap());
+        }
+        for h in handles {
+            let resp = h.recv().unwrap();
+            assert_eq!(resp.indices.len(), 2);
+        }
+        let snap = c.metrics();
+        assert_eq!(snap.queries, 64);
+        assert!(snap.mean_batch_size >= 1.0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn backpressure_fires_when_queue_full() {
+        // Queue of 1, zero workers draining fast: spam submissions until
+        // QueueFull appears.
+        let ds = gaussian_dataset(2000, 128, 7);
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            max_batch: 1,
+            batch_timeout: Duration::from_millis(0),
+            queue_capacity: 2,
+            backend: Backend::Native,
+            pull_order: PullOrder::Sequential,
+        };
+        let c = Coordinator::new(ds.vectors, cfg).unwrap();
+        let mut saw_full = false;
+        let mut receivers = Vec::new();
+        for _ in 0..2000 {
+            match c.submit(QueryRequest::exact(vec![0.1; 128], 1)) {
+                Ok(rx) => receivers.push(rx),
+                Err(CoordinatorError::QueueFull) => {
+                    saw_full = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(saw_full, "backpressure never engaged");
+        for rx in receivers {
+            let _ = rx.recv();
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn batches_form_under_load() {
+        let ds = gaussian_dataset(100, 32, 9);
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            max_batch: 16,
+            batch_timeout: Duration::from_millis(20),
+            queue_capacity: 512,
+            backend: Backend::Native,
+            pull_order: PullOrder::Sequential,
+        };
+        let c = Coordinator::new(ds.vectors, cfg).unwrap();
+        let mut handles = Vec::new();
+        for _ in 0..32 {
+            handles.push(c.submit(QueryRequest::exact(vec![0.2; 32], 1)).unwrap());
+        }
+        let mut max_batch_seen = 0;
+        for h in handles {
+            max_batch_seen = max_batch_seen.max(h.recv().unwrap().batch_size);
+        }
+        assert!(max_batch_seen > 1, "no batching under burst load");
+        c.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod deadline_tests {
+    use super::*;
+    use crate::data::synthetic::gaussian_dataset;
+
+    #[test]
+    fn expired_deadline_sheds() {
+        // One slow worker, queue fills, deadlines of 0ns: everything past
+        // the first batch is shed.
+        let ds = gaussian_dataset(500, 256, 21);
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            max_batch: 4,
+            batch_timeout: Duration::from_millis(1),
+            queue_capacity: 512,
+            backend: Backend::Native,
+            pull_order: PullOrder::Sequential,
+        };
+        let c = Coordinator::new(ds.vectors.clone(), cfg).unwrap();
+        let mut rxs = Vec::new();
+        for _ in 0..64 {
+            let req = QueryRequest::exact(vec![0.3; 256], 3)
+                .with_deadline(Duration::from_nanos(1));
+            rxs.push(c.submit(req).unwrap());
+        }
+        let mut shed = 0;
+        let mut served = 0;
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            if resp.shed {
+                assert!(resp.indices.is_empty());
+                shed += 1;
+            } else {
+                assert_eq!(resp.indices.len(), 3);
+                served += 1;
+            }
+        }
+        assert_eq!(shed + served, 64);
+        assert!(shed > 0, "nothing shed under a 1ns deadline");
+        assert_eq!(c.metrics().shed, shed);
+        c.shutdown();
+    }
+
+    #[test]
+    fn generous_deadline_never_sheds() {
+        let ds = gaussian_dataset(50, 32, 22);
+        let c = Coordinator::new(ds.vectors.clone(), CoordinatorConfig::default()).unwrap();
+        for _ in 0..10 {
+            let req = QueryRequest::bounded_me(vec![0.1; 32], 2, 0.2, 0.2)
+                .with_deadline(Duration::from_secs(30));
+            let resp = c.query_blocking(req).unwrap();
+            assert!(!resp.shed);
+            assert_eq!(resp.indices.len(), 2);
+        }
+        assert_eq!(c.metrics().shed, 0);
+        c.shutdown();
+    }
+}

@@ -1,0 +1,328 @@
+//! TCP front-end for the coordinator: newline-delimited JSON over a
+//! plain socket, so any client (curl-less scripts, other services) can
+//! issue MIPS queries with per-request (ε, δ) knobs.
+//!
+//! Protocol (one JSON document per line):
+//!
+//! ```text
+//! → {"op":"query","vector":[…],"k":5,"epsilon":0.1,"delta":0.1,
+//!    "mode":"bounded_me","deadline_ms":50}
+//! ← {"ok":true,"indices":[…],"scores":[…],"flops":123,"service_ms":0.8,"batch":4}
+//! → {"op":"metrics"}
+//! ← {"ok":true,"queries":10,"batches":4,"flops":…, "service_p50_ms":…, …}
+//! → {"op":"ping"}
+//! ← {"ok":true,"pong":true}
+//! ```
+//!
+//! Errors come back as `{"ok":false,"error":"…"}`; malformed lines do
+//! not kill the connection. One thread per connection (bounded by
+//! `max_conns`).
+
+use super::{Coordinator, CoordinatorError, QueryMode, QueryRequest};
+use crate::jsonlite::{parse, Json};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Handle to a running TCP server.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start serving the coordinator on `bind_addr` (use port 0 for an
+    /// ephemeral port; the actual address is [`Server::addr`]).
+    pub fn start(
+        coordinator: Arc<Coordinator>,
+        bind_addr: &str,
+        max_conns: usize,
+    ) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(bind_addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let live = Arc::new(AtomicUsize::new(0));
+        listener.set_nonblocking(true)?;
+        let accept_thread = std::thread::Builder::new().name("mips-server".into()).spawn(
+            move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            if live.load(Ordering::Relaxed) >= max_conns {
+                                let _ = reject(stream);
+                                continue;
+                            }
+                            live.fetch_add(1, Ordering::Relaxed);
+                            let coord = coordinator.clone();
+                            let live2 = live.clone();
+                            let stop3 = stop2.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("mips-conn".into())
+                                .spawn(move || {
+                                    let _ = handle_conn(stream, &coord, &stop3);
+                                    live2.fetch_sub(1, Ordering::Relaxed);
+                                });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            },
+        )?;
+        Ok(Server { addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// Address the server is listening on.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept loop (open connections finish
+    /// their current request and close on next read).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn reject(mut stream: TcpStream) -> std::io::Result<()> {
+    stream.write_all(b"{\"ok\":false,\"error\":\"too many connections\"}\n")
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    coord: &Coordinator,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                let response = handle_line(trimmed, coord);
+                writer.write_all(response.dump().as_bytes())?;
+                writer.write_all(b"\n")?;
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue; // poll the stop flag
+            }
+            Err(_) => return Ok(()),
+        }
+    }
+}
+
+fn err_response(msg: &str) -> Json {
+    Json::obj([("ok", Json::Bool(false)), ("error", Json::Str(msg.to_string()))])
+}
+
+/// Dispatch one request line (exposed for unit tests).
+pub fn handle_line(line: &str, coord: &Coordinator) -> Json {
+    let req = match parse(line) {
+        Ok(v) => v,
+        Err(e) => return err_response(&format!("bad json: {e}")),
+    };
+    match req.get("op").and_then(Json::as_str) {
+        Some("ping") => Json::obj([("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
+        Some("metrics") => {
+            let m = coord.metrics();
+            Json::obj([
+                ("ok", Json::Bool(true)),
+                ("queries", Json::Num(m.queries as f64)),
+                ("batches", Json::Num(m.batches as f64)),
+                ("flops", Json::Num(m.flops as f64)),
+                ("mean_batch", Json::Num(m.mean_batch_size)),
+                ("service_p50_ms", Json::Num(m.service.0 * 1e3)),
+                ("service_p99_ms", Json::Num(m.service.2 * 1e3)),
+                ("queue_p99_ms", Json::Num(m.queue_wait.2 * 1e3)),
+                ("shed", Json::Num(m.shed as f64)),
+            ])
+        }
+        Some("query") => {
+            let Some(vector) = req.get("vector").and_then(Json::as_f32_vec) else {
+                return err_response("missing or bad 'vector'");
+            };
+            let k = req.get("k").and_then(Json::as_usize).unwrap_or(10);
+            let epsilon = req.get("epsilon").and_then(Json::as_f64).unwrap_or(0.1);
+            let delta = req.get("delta").and_then(Json::as_f64).unwrap_or(0.1);
+            let seed = req.get("seed").and_then(Json::as_usize).unwrap_or(0) as u64;
+            let mode = match req.get("mode").and_then(Json::as_str) {
+                None | Some("bounded_me") => QueryMode::BoundedMe,
+                Some("exact") => QueryMode::Exact,
+                Some(other) => return err_response(&format!("unknown mode {other:?}")),
+            };
+            let deadline = req
+                .get("deadline_ms")
+                .and_then(Json::as_f64)
+                .map(std::time::Duration::from_secs_f64)
+                .map(|d| d / 1000);
+            let qr = QueryRequest { vector, k, epsilon, delta, mode, seed, deadline };
+            match coord.query_blocking(qr) {
+                Ok(resp) if resp.shed => err_response("deadline exceeded (shed)"),
+                Ok(resp) => Json::obj([
+                    ("ok", Json::Bool(true)),
+                    ("indices", Json::usizes(&resp.indices)),
+                    ("scores", Json::f32s(&resp.scores)),
+                    ("flops", Json::Num(resp.flops as f64)),
+                    ("service_ms", Json::Num(resp.service.as_secs_f64() * 1e3)),
+                    ("batch", Json::Num(resp.batch_size as f64)),
+                ]),
+                Err(CoordinatorError::QueueFull) => err_response("overloaded"),
+                Err(e) => err_response(&e.to_string()),
+            }
+        }
+        Some(other) => err_response(&format!("unknown op {other:?}")),
+        None => err_response("missing 'op'"),
+    }
+}
+
+/// Minimal blocking client for the line protocol (used by tests and the
+/// serving example).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    /// Connect to a server.
+    pub fn connect(addr: SocketAddr) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one request object, wait for the response line.
+    pub fn call(&mut self, req: &Json) -> std::io::Result<Json> {
+        self.writer.write_all(req.dump().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        parse(line.trim()).map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+        })
+    }
+
+    /// Convenience: a BOUNDEDME query.
+    pub fn query(
+        &mut self,
+        vector: &[f32],
+        k: usize,
+        epsilon: f64,
+        delta: f64,
+    ) -> std::io::Result<Json> {
+        self.call(&Json::obj([
+            ("op", Json::Str("query".into())),
+            ("vector", Json::f32s(vector)),
+            ("k", Json::Num(k as f64)),
+            ("epsilon", Json::Num(epsilon)),
+            ("delta", Json::Num(delta)),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordinatorConfig;
+    use crate::data::synthetic::gaussian_dataset;
+
+    fn coordinator() -> Arc<Coordinator> {
+        let ds = gaussian_dataset(100, 32, 1);
+        Arc::new(
+            Coordinator::new(ds.vectors, CoordinatorConfig::default()).unwrap(),
+        )
+    }
+
+    #[test]
+    fn handle_line_query_and_errors() {
+        let coord = coordinator();
+        let resp = handle_line(r#"{"op":"ping"}"#, &coord);
+        assert_eq!(resp.get("pong").unwrap().as_bool(), Some(true));
+
+        let q: Vec<String> = (0..32).map(|i| format!("{}", i as f32 * 0.1)).collect();
+        let line = format!(
+            r#"{{"op":"query","vector":[{}],"k":3,"epsilon":0.2,"delta":0.2}}"#,
+            q.join(",")
+        );
+        let resp = handle_line(&line, &coord);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(resp.get("indices").unwrap().as_f32_vec().unwrap().len(), 3);
+
+        for bad in [
+            "not json",
+            r#"{"op":"nope"}"#,
+            r#"{"op":"query"}"#,
+            r#"{"op":"query","vector":[1,2]}"#, // dim mismatch
+            r#"{}"#,
+        ] {
+            let resp = handle_line(bad, &coord);
+            assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{bad}");
+        }
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let coord = coordinator();
+        let server = Server::start(coord, "127.0.0.1:0", 4).unwrap();
+        let addr = server.addr();
+
+        let mut client = Client::connect(addr).unwrap();
+        let pong = client.call(&Json::obj([("op", Json::Str("ping".into()))])).unwrap();
+        assert_eq!(pong.get("pong").unwrap().as_bool(), Some(true));
+
+        let v = vec![0.5f32; 32];
+        let resp = client.query(&v, 5, 0.1, 0.1).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(resp.get("indices").unwrap().as_f32_vec().unwrap().len(), 5);
+
+        let metrics =
+            client.call(&Json::obj([("op", Json::Str("metrics".into()))])).unwrap();
+        assert!(metrics.get("queries").unwrap().as_usize().unwrap() >= 1);
+
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let coord = coordinator();
+        let server = Server::start(coord, "127.0.0.1:0", 8).unwrap();
+        let addr = server.addr();
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                for i in 0..5 {
+                    let v = vec![(t * 5 + i) as f32 * 0.01; 32];
+                    let r = c.query(&v, 2, 0.3, 0.2).unwrap();
+                    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        server.shutdown();
+    }
+}

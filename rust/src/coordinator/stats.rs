@@ -1,0 +1,132 @@
+//! Coordinator metrics registry: latency histograms, batch sizes, flop
+//! counters. Lock-based (parking_lot) — updates are off the per-pull hot
+//! loop, once per query.
+
+use crate::linalg::stats::{LogHistogram, OnlineMoments};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared metrics sink for the coordinator threads.
+pub struct MetricsRegistry {
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    queue_wait: LogHistogram,
+    service: LogHistogram,
+    batch_sizes: OnlineMoments,
+    queries: u64,
+    batches: u64,
+    flops: u64,
+    shed: u64,
+}
+
+/// A point-in-time copy of the registry.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    /// Queries served.
+    pub queries: u64,
+    /// Batches formed.
+    pub batches: u64,
+    /// Total flops spent on the query path.
+    pub flops: u64,
+    /// Mean batch size.
+    pub mean_batch_size: f64,
+    /// Queue-wait quantiles (seconds): (p50, p90, p99).
+    pub queue_wait: (f64, f64, f64),
+    /// Service-time quantiles (seconds): (p50, p90, p99).
+    pub service: (f64, f64, f64),
+    /// Mean service seconds.
+    pub mean_service: f64,
+    /// Requests shed for missing their deadline in queue.
+    pub shed: u64,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsRegistry {
+    /// Fresh registry.
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                queue_wait: LogHistogram::new(),
+                service: LogHistogram::new(),
+                batch_sizes: OnlineMoments::new(),
+                queries: 0,
+                batches: 0,
+                flops: 0,
+                shed: 0,
+            }),
+        }
+    }
+
+    /// Record one served query.
+    pub fn record_query(&self, queue_wait: Duration, service: Duration, flops: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.queue_wait.record(queue_wait.as_secs_f64());
+        g.service.record(service.as_secs_f64());
+        g.queries += 1;
+        g.flops += flops;
+    }
+
+    /// Record a shed (deadline-expired) request.
+    pub fn record_shed(&self) {
+        self.inner.lock().unwrap().shed += 1;
+    }
+
+    /// Record a formed batch.
+    pub fn record_batch(&self, size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batch_sizes.push(size as f64);
+        g.batches += 1;
+    }
+
+    /// Copy out a snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            queries: g.queries,
+            batches: g.batches,
+            flops: g.flops,
+            mean_batch_size: g.batch_sizes.mean(),
+            queue_wait: (
+                g.queue_wait.quantile(0.5),
+                g.queue_wait.quantile(0.9),
+                g.queue_wait.quantile(0.99),
+            ),
+            service: (
+                g.service.quantile(0.5),
+                g.service.quantile(0.9),
+                g.service.quantile(0.99),
+            ),
+            mean_service: g.service.mean(),
+            shed: g.shed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = MetricsRegistry::new();
+        m.record_batch(4);
+        m.record_batch(8);
+        for _ in 0..12 {
+            m.record_query(Duration::from_micros(100), Duration::from_millis(1), 500);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.queries, 12);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.flops, 6000);
+        assert!((s.mean_batch_size - 6.0).abs() < 1e-9);
+        assert!(s.service.0 > 0.0);
+        assert!(s.queue_wait.2 >= s.queue_wait.0);
+    }
+}

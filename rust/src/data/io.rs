@@ -1,0 +1,147 @@
+//! Binary dataset (de)serialization.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic  u64  = 0x424D495053563031 ("BMIPSV01")
+//! rows   u64
+//! cols   u64
+//! seed   u64
+//! kind   u8   (0 = Gaussian, 1 = Uniform, 2 = UserFactor)
+//! nlen   u16  name length
+//! name   [u8; nlen]
+//! data   [f32; rows·cols]
+//! ```
+
+use super::{Dataset, QueryKind};
+use crate::linalg::Matrix;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: u64 = 0x424D_4950_5356_3031;
+
+/// Serialize a dataset to a writer.
+pub fn write_dataset<W: Write>(ds: &Dataset, w: &mut W) -> std::io::Result<()> {
+    w.write_all(&MAGIC.to_le_bytes())?;
+    w.write_all(&(ds.vectors.rows() as u64).to_le_bytes())?;
+    w.write_all(&(ds.vectors.cols() as u64).to_le_bytes())?;
+    w.write_all(&ds.seed.to_le_bytes())?;
+    let kind: u8 = match ds.query_kind {
+        QueryKind::Gaussian => 0,
+        QueryKind::Uniform => 1,
+        QueryKind::UserFactor => 2,
+    };
+    w.write_all(&[kind])?;
+    let name = ds.name.as_bytes();
+    let nlen = name.len().min(u16::MAX as usize) as u16;
+    w.write_all(&nlen.to_le_bytes())?;
+    w.write_all(&name[..nlen as usize])?;
+    // Bulk f32 write.
+    let floats = ds.vectors.as_slice();
+    let bytes = unsafe {
+        std::slice::from_raw_parts(floats.as_ptr() as *const u8, floats.len() * 4)
+    };
+    w.write_all(bytes)
+}
+
+/// Deserialize a dataset from a reader.
+pub fn read_dataset<R: Read>(r: &mut R) -> std::io::Result<Dataset> {
+    let mut u64buf = [0u8; 8];
+    let mut read_u64 = |r: &mut R| -> std::io::Result<u64> {
+        r.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    let magic = read_u64(r)?;
+    if magic != MAGIC {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad magic {magic:#x}"),
+        ));
+    }
+    let rows = read_u64(r)? as usize;
+    let cols = read_u64(r)? as usize;
+    let seed = read_u64(r)?;
+    let mut kind_buf = [0u8; 1];
+    r.read_exact(&mut kind_buf)?;
+    let query_kind = match kind_buf[0] {
+        0 => QueryKind::Gaussian,
+        1 => QueryKind::Uniform,
+        2 => QueryKind::UserFactor,
+        k => {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("bad query kind {k}"),
+            ))
+        }
+    };
+    let mut nlen_buf = [0u8; 2];
+    r.read_exact(&mut nlen_buf)?;
+    let nlen = u16::from_le_bytes(nlen_buf) as usize;
+    let mut name_buf = vec![0u8; nlen];
+    r.read_exact(&mut name_buf)?;
+    let name = String::from_utf8_lossy(&name_buf).into_owned();
+
+    let count = rows
+        .checked_mul(cols)
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "overflow"))?;
+    let mut data = vec![0f32; count];
+    let bytes = unsafe {
+        std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, count * 4)
+    };
+    r.read_exact(bytes)?;
+    Ok(Dataset { name, vectors: Matrix::from_vec(rows, cols, data), seed, query_kind })
+}
+
+/// Save to a file path.
+pub fn save(ds: &Dataset, path: impl AsRef<Path>) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write_dataset(ds, &mut f)
+}
+
+/// Load from a file path.
+pub fn load(path: impl AsRef<Path>) -> std::io::Result<Dataset> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    read_dataset(&mut f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::gaussian_dataset;
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let ds = gaussian_dataset(13, 7, 99);
+        let mut buf = Vec::new();
+        write_dataset(&ds, &mut buf).unwrap();
+        let back = read_dataset(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.name, ds.name);
+        assert_eq!(back.seed, 99);
+        assert_eq!(back.query_kind, ds.query_kind);
+        assert_eq!(back.vectors, ds.vectors);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let buf = vec![0u8; 64];
+        assert!(read_dataset(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let ds = gaussian_dataset(4, 4, 1);
+        let dir = std::env::temp_dir().join("bandit_mips_io_test.bin");
+        save(&ds, &dir).unwrap();
+        let back = load(&dir).unwrap();
+        assert_eq!(back.vectors, ds.vectors);
+        let _ = std::fs::remove_file(&dir);
+    }
+
+    #[test]
+    fn truncated_input_errors() {
+        let ds = gaussian_dataset(8, 8, 2);
+        let mut buf = Vec::new();
+        write_dataset(&ds, &mut buf).unwrap();
+        buf.truncate(buf.len() - 10);
+        assert!(read_dataset(&mut buf.as_slice()).is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! Query-workload generation for the serving benches: Poisson arrivals,
+//! mixed per-query accuracy requirements, and trace replay.
+
+use super::Dataset;
+use crate::linalg::Rng;
+
+/// One query in a serving trace.
+#[derive(Clone, Debug)]
+pub struct TraceQuery {
+    /// Arrival time offset from trace start, seconds.
+    pub arrival: f64,
+    /// The query vector.
+    pub vector: Vec<f32>,
+    /// Requested result count.
+    pub k: usize,
+    /// Requested suboptimality ε (BOUNDEDME knob).
+    pub epsilon: f64,
+    /// Requested confidence δ.
+    pub delta: f64,
+}
+
+/// Workload shape parameters.
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    /// Mean arrival rate, queries/second.
+    pub rate: f64,
+    /// Number of queries in the trace.
+    pub count: usize,
+    /// Result count per query.
+    pub k: usize,
+    /// (ε, δ) tiers with selection weights — models a mixed tenancy where
+    /// some queries want tight guarantees and some want speed.
+    pub tiers: Vec<(f64, f64, f64)>, // (epsilon, delta, weight)
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            rate: 200.0,
+            count: 1000,
+            k: 10,
+            tiers: vec![(0.05, 0.05, 0.2), (0.1, 0.1, 0.5), (0.3, 0.2, 0.3)],
+            seed: 0,
+        }
+    }
+}
+
+/// Generate a Poisson-arrival trace of queries over a dataset.
+pub fn poisson_trace(ds: &Dataset, cfg: &WorkloadConfig) -> Vec<TraceQuery> {
+    let mut rng = Rng::new(cfg.seed ^ 0xF00D);
+    let total_w: f64 = cfg.tiers.iter().map(|t| t.2).sum();
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(cfg.count);
+    for i in 0..cfg.count {
+        t += rng.exponential(cfg.rate.max(1e-9));
+        // Pick a tier by weight.
+        let mut pick = rng.next_f64() * total_w;
+        let mut tier = cfg.tiers.last().copied().unwrap_or((0.1, 0.1, 1.0));
+        for &(e, d, w) in &cfg.tiers {
+            if pick < w {
+                tier = (e, d, w);
+                break;
+            }
+            pick -= w;
+        }
+        out.push(TraceQuery {
+            arrival: t,
+            vector: ds.sample_query(cfg.seed.wrapping_add(i as u64 * 104729)),
+            k: cfg.k,
+            epsilon: tier.0,
+            delta: tier.1,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::gaussian_dataset;
+
+    #[test]
+    fn trace_shape() {
+        let ds = gaussian_dataset(10, 16, 1);
+        let cfg = WorkloadConfig { count: 100, rate: 1000.0, ..Default::default() };
+        let trace = poisson_trace(&ds, &cfg);
+        assert_eq!(trace.len(), 100);
+        // Arrivals strictly increasing.
+        for w in trace.windows(2) {
+            assert!(w[1].arrival > w[0].arrival);
+        }
+        // Mean inter-arrival ≈ 1/rate.
+        let span = trace.last().unwrap().arrival;
+        assert!((span / 100.0 - 1e-3).abs() < 5e-4, "span={span}");
+    }
+
+    #[test]
+    fn tiers_all_appear() {
+        let ds = gaussian_dataset(10, 8, 2);
+        let cfg = WorkloadConfig { count: 300, ..Default::default() };
+        let trace = poisson_trace(&ds, &cfg);
+        for &(e, _, _) in &cfg.tiers {
+            assert!(
+                trace.iter().any(|q| (q.epsilon - e).abs() < 1e-12),
+                "tier ε={e} never drawn"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = gaussian_dataset(5, 8, 3);
+        let cfg = WorkloadConfig { count: 20, ..Default::default() };
+        let a = poisson_trace(&ds, &cfg);
+        let b = poisson_trace(&ds, &cfg);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a[7].vector, b[7].vector);
+        assert_eq!(a[7].arrival, b[7].arrival);
+    }
+}

@@ -1,0 +1,134 @@
+//! CSV emission for experiment results, so figure data can be plotted
+//! outside the repo (gnuplot/matplotlib) and diffed across runs.
+
+use super::fig1::Fig1Point;
+use super::precision_speedup::SweepPoint;
+use super::table1::Table1Row;
+use std::io::Write;
+use std::path::Path;
+
+/// Escape a CSV field (quotes fields containing separators).
+fn field(s: &str) -> String {
+    if s.contains([',', '"', '\n']) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Write rows of string cells with a header.
+pub fn write_csv(
+    path: impl AsRef<Path>,
+    header: &[&str],
+    rows: impl IntoIterator<Item = Vec<String>>,
+) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|c| field(c)).collect();
+        writeln!(f, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+/// Figure-1 points → CSV.
+pub fn fig1_csv(path: impl AsRef<Path>, points: &[Fig1Point]) -> std::io::Result<()> {
+    write_csv(
+        path,
+        &["epsilon", "delta", "quantile_subopt", "mean_subopt", "mean_pulls", "holds"],
+        points.iter().map(|p| {
+            vec![
+                p.epsilon.to_string(),
+                p.delta.to_string(),
+                p.quantile_subopt.to_string(),
+                p.mean_subopt.to_string(),
+                p.mean_pulls.to_string(),
+                p.holds.to_string(),
+            ]
+        }),
+    )
+}
+
+/// Precision/speedup sweep → CSV (figures 2–4).
+pub fn sweep_csv(path: impl AsRef<Path>, points: &[SweepPoint]) -> std::io::Result<()> {
+    write_csv(
+        path,
+        &["algo", "knob", "precision", "speedup_flops", "speedup_wall", "candidates"],
+        points.iter().map(|p| {
+            vec![
+                p.algo.clone(),
+                p.knob.clone(),
+                p.precision.to_string(),
+                p.speedup_flops.to_string(),
+                p.speedup_wall.to_string(),
+                p.mean_candidates.to_string(),
+            ]
+        }),
+    )
+}
+
+/// Table-1 rows → CSV.
+pub fn table1_csv(path: impl AsRef<Path>, rows: &[Table1Row]) -> std::io::Result<()> {
+    write_csv(
+        path,
+        &["method", "prep_seconds", "query_seconds", "query_flops", "precision", "guarantee"],
+        rows.iter().map(|r| {
+            vec![
+                r.method.clone(),
+                r.prep_seconds.to_string(),
+                r.query_seconds.to_string(),
+                r.query_flops.to_string(),
+                r.precision.to_string(),
+                r.guarantee.to_string(),
+            ]
+        }),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escaping() {
+        assert_eq!(field("plain"), "plain");
+        assert_eq!(field("a,b"), "\"a,b\"");
+        assert_eq!(field("q\"uote"), "\"q\"\"uote\"");
+    }
+
+    #[test]
+    fn writes_sweep_csv() {
+        let points = vec![SweepPoint {
+            algo: "X".into(),
+            knob: "eps=0.1".into(),
+            precision: 0.5,
+            speedup_flops: 2.0,
+            speedup_wall: 1.5,
+            mean_candidates: 3.0,
+        }];
+        let path = std::env::temp_dir().join("bm_sweep_test.csv");
+        sweep_csv(&path, &points).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(text.starts_with("algo,knob,"));
+        assert!(text.contains("X,eps=0.1,0.5,2,1.5,3"));
+    }
+
+    #[test]
+    fn writes_fig1_csv() {
+        let p = super::super::fig1::Fig1Point {
+            epsilon: 0.1,
+            delta: 0.05,
+            quantile_subopt: 0.01,
+            mean_subopt: 0.005,
+            mean_pulls: 1e4,
+            holds: true,
+        };
+        let path = std::env::temp_dir().join("bm_fig1_test.csv");
+        fig1_csv(&path, &[p]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.contains("true"));
+    }
+}

@@ -1,0 +1,141 @@
+//! Figure 1: empirical validation of Theorem 1 on the adversarial
+//! environment.
+//!
+//! For each (ε, δ) pair, run BOUNDEDME `trials` times on freshly
+//! generated adversarial Bernoulli arms (rewards served 1s-first) and
+//! record the `(1−δ)`-percentile of the observed suboptimalities. The
+//! guarantee holds iff that percentile stays below ε — in the paper's
+//! plot, every point sits under the `y = x` diagonal.
+
+use crate::bandit::{AdversarialArms, BoundedMe, BoundedMeConfig, RewardSource};
+
+/// Configuration of the Figure-1 sweep.
+#[derive(Clone, Debug)]
+pub struct Fig1Config {
+    /// Number of arms `n` (paper: 10⁴).
+    pub n_arms: usize,
+    /// Reward-list length `N` (paper: 10⁵).
+    pub n_list: usize,
+    /// ε grid (paper: 0…0.6).
+    pub epsilons: Vec<f64>,
+    /// δ grid (paper: {0.01, 0.05, 0.1, 0.2, 0.3}).
+    pub deltas: Vec<f64>,
+    /// Independent trials per (ε, δ) (paper: 20).
+    pub trials: usize,
+    /// Base seed.
+    pub seed: u64,
+}
+
+impl Default for Fig1Config {
+    fn default() -> Self {
+        Self {
+            n_arms: 1000,
+            n_list: 2000,
+            epsilons: vec![0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6],
+            deltas: vec![0.01, 0.05, 0.1, 0.2, 0.3],
+            trials: 20,
+            seed: 0,
+        }
+    }
+}
+
+/// One Figure-1 point.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig1Point {
+    /// Requested ε.
+    pub epsilon: f64,
+    /// Requested δ.
+    pub delta: f64,
+    /// `(1−δ)`-percentile of observed suboptimality across trials.
+    pub quantile_subopt: f64,
+    /// Mean suboptimality across trials.
+    pub mean_subopt: f64,
+    /// Mean pulls per trial.
+    pub mean_pulls: f64,
+    /// True iff `quantile_subopt ≤ epsilon` (the guarantee).
+    pub holds: bool,
+}
+
+/// Run the sweep.
+pub fn run(cfg: &Fig1Config) -> Vec<Fig1Point> {
+    let mut out = Vec::new();
+    for &eps in &cfg.epsilons {
+        for &delta in &cfg.deltas {
+            let mut subopts = Vec::with_capacity(cfg.trials);
+            let mut pulls_sum = 0u64;
+            for t in 0..cfg.trials {
+                let seed = cfg.seed
+                    ^ (t as u64).wrapping_mul(0x9E37_79B9)
+                    ^ ((eps * 1e4) as u64).wrapping_mul(31)
+                    ^ ((delta * 1e4) as u64).wrapping_mul(131);
+                let env = AdversarialArms::generate(cfg.n_arms, cfg.n_list, seed);
+                let algo = BoundedMe::new(BoundedMeConfig { k: 1, epsilon: eps, delta });
+                let res = algo.run(&env);
+                let best = env.true_mean(env.best_arm());
+                let got = env.true_mean(res.result.arms[0]);
+                subopts.push((best - got).max(0.0));
+                pulls_sum += res.result.total_pulls;
+            }
+            subopts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let q_idx = (((1.0 - delta) * subopts.len() as f64).ceil() as usize)
+                .clamp(1, subopts.len())
+                - 1;
+            let quantile = subopts[q_idx];
+            let mean = subopts.iter().sum::<f64>() / subopts.len() as f64;
+            out.push(Fig1Point {
+                epsilon: eps,
+                delta,
+                quantile_subopt: quantile,
+                mean_subopt: mean,
+                mean_pulls: pulls_sum as f64 / cfg.trials as f64,
+                holds: quantile <= eps,
+            });
+        }
+    }
+    out
+}
+
+/// Aggregate per-ε rows (averaging the quantile over δ values), which is
+/// what the paper's Figure 1 plots.
+pub fn per_epsilon(points: &[Fig1Point]) -> Vec<(f64, f64, bool)> {
+    let mut eps_values: Vec<f64> = points.iter().map(|p| p.epsilon).collect();
+    eps_values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    eps_values.dedup();
+    eps_values
+        .into_iter()
+        .map(|e| {
+            let group: Vec<&Fig1Point> =
+                points.iter().filter(|p| (p.epsilon - e).abs() < 1e-12).collect();
+            let avg =
+                group.iter().map(|p| p.quantile_subopt).sum::<f64>() / group.len() as f64;
+            let all_hold = group.iter().all(|p| p.holds);
+            (e, avg, all_hold)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_sweep_guarantee_holds() {
+        let cfg = Fig1Config {
+            n_arms: 100,
+            n_list: 300,
+            epsilons: vec![0.2, 0.4],
+            deltas: vec![0.1, 0.3],
+            trials: 10,
+            seed: 42,
+        };
+        let pts = run(&cfg);
+        assert_eq!(pts.len(), 4);
+        for p in &pts {
+            assert!(p.holds, "ε={} δ={}: quantile {}", p.epsilon, p.delta, p.quantile_subopt);
+            assert!(p.mean_pulls > 0.0);
+        }
+        let agg = per_epsilon(&pts);
+        assert_eq!(agg.len(), 2);
+        assert!(agg.iter().all(|&(_, _, h)| h));
+    }
+}

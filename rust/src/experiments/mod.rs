@@ -1,0 +1,61 @@
+//! Experiment harness: regenerates every table and figure of the paper.
+//!
+//! | paper artifact | function | example binary |
+//! |---|---|---|
+//! | Figure 1 (guarantee validation) | [`fig1::run`] | `fig1_guarantee` |
+//! | Figures 2–4 (precision vs speedup) | [`precision_speedup::run_sweep`] | `fig2_gaussian`, `fig3_uniform`, `fig4_realworld` |
+//! | Table 1 (preprocessing/query complexity) | [`table1::run`] | `table1` |
+//!
+//! Each function returns plain row structs; the example binaries print
+//! them as aligned markdown so EXPERIMENTS.md can quote them directly.
+
+pub mod csv;
+pub mod fig1;
+pub mod precision_speedup;
+pub mod table1;
+
+/// Render rows of `(label, value…)` as an aligned markdown table.
+pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| -> String {
+        let mut s = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!(" {:<w$} |", c, w = widths.get(i).copied().unwrap_or(4)));
+        }
+        s
+    };
+    let mut out = fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    out.push('\n');
+    out.push('|');
+    for w in &widths {
+        out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+    }
+    out.push('\n');
+    for r in rows {
+        out.push_str(&fmt_row(r));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn markdown_table_aligns() {
+        let t = super::markdown_table(
+            &["algo", "x"],
+            &[vec!["BoundedME".into(), "1.5".into()], vec!["LSH".into(), "22".into()]],
+        );
+        assert!(t.contains("| algo"));
+        assert!(t.lines().count() == 4);
+        let widths: Vec<usize> = t.lines().map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{t}");
+    }
+}

@@ -1,0 +1,281 @@
+//! Precision-vs-speedup sweeps: the engine behind Figures 2, 3 and 4.
+//!
+//! For one dataset + query batch, every algorithm is swept over its
+//! accuracy knob; each knob setting yields one `(precision@K,
+//! online speedup)` point. "Online speedup" follows the paper: naive
+//! query cost divided by the algorithm's query cost, with preprocessing
+//! ignored (which only *favors* the baselines — Motivation I).
+
+use crate::algos::{
+    ground_truth, BoundedMeIndex, GreedyMipsIndex, LshMipsIndex, MipsIndex, MipsParams,
+    PcaMipsIndex,
+};
+use crate::data::Dataset;
+use crate::metrics::{precision_at_k, AlgoStats};
+use std::time::Instant;
+
+/// One point of a sweep curve.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// Algorithm label.
+    pub algo: String,
+    /// Human-readable knob setting ("ε=0.1", "B=10%", "a=8,b=16", "d=4").
+    pub knob: String,
+    /// Mean precision@K over the query batch.
+    pub precision: f64,
+    /// Flop-based online speedup vs naive.
+    pub speedup_flops: f64,
+    /// Wall-clock online speedup vs naive.
+    pub speedup_wall: f64,
+    /// Mean candidates ranked (0 for BOUNDEDME).
+    pub mean_candidates: f64,
+}
+
+/// Sweep configuration.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// Result-set size K (paper: 5 and 10).
+    pub k: usize,
+    /// Number of queries per point.
+    pub queries: usize,
+    /// BOUNDEDME ε grid.
+    pub bme_epsilons: Vec<f64>,
+    /// BOUNDEDME δ.
+    pub bme_delta: f64,
+    /// GREEDY budgets as fractions of n.
+    pub greedy_budgets: Vec<f64>,
+    /// LSH (a, b) settings.
+    pub lsh_settings: Vec<(usize, usize)>,
+    /// PCA tree depths.
+    pub pca_depths: Vec<usize>,
+    /// Base seed.
+    pub seed: u64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            k: 5,
+            queries: 20,
+            bme_epsilons: vec![0.01, 0.03, 0.1, 0.3, 0.6, 0.9],
+            bme_delta: 0.1,
+            greedy_budgets: vec![0.02, 0.05, 0.1, 0.25, 0.5, 1.0],
+            lsh_settings: vec![(4, 8), (6, 12), (8, 16), (12, 24), (16, 32)],
+            pca_depths: vec![1, 2, 4, 6, 8],
+            seed: 0,
+        }
+    }
+}
+
+/// Evaluate one configured index over the query batch.
+fn eval_index(
+    index: &dyn MipsIndex,
+    knob: &str,
+    queries: &[Vec<f32>],
+    truths: &[Vec<usize>],
+    naive_flops: u64,
+    naive_secs: f64,
+    k: usize,
+    seed: u64,
+) -> SweepPoint {
+    let mut stats = AlgoStats::new(index.name());
+    let mut cand_sum = 0usize;
+    for (qi, (q, truth)) in queries.iter().zip(truths).enumerate() {
+        let params = MipsParams { k, epsilon: 0.0, delta: 0.0, seed: seed ^ qi as u64 };
+        // (ε, δ) for BOUNDEDME ride in via the knob-specific params below;
+        // eval_index is called with pre-built indexes, so only BOUNDEDME
+        // needs them — passed through `eval_bounded_me` instead.
+        let t0 = Instant::now();
+        let res = index.query(q, &params);
+        let dt = t0.elapsed().as_secs_f64();
+        cand_sum += res.candidates;
+        stats.record(
+            precision_at_k(truth, &res.indices),
+            res.flops,
+            naive_flops,
+            dt,
+            naive_secs,
+        );
+    }
+    SweepPoint {
+        algo: index.name().to_string(),
+        knob: knob.to_string(),
+        precision: stats.precision(),
+        speedup_flops: stats.speedup_flops(),
+        speedup_wall: stats.speedup_wall(),
+        mean_candidates: cand_sum as f64 / queries.len().max(1) as f64,
+    }
+}
+
+/// Run the full sweep for a dataset. `queries` overrides the dataset's
+/// query sampler when provided (Figure 4 uses genuine user factors).
+pub fn run_sweep(
+    ds: &Dataset,
+    cfg: &SweepConfig,
+    queries_override: Option<&[Vec<f32>]>,
+) -> Vec<SweepPoint> {
+    let queries: Vec<Vec<f32>> = match queries_override {
+        Some(qs) => qs.iter().take(cfg.queries).cloned().collect(),
+        None => ds.sample_queries(cfg.queries, cfg.seed),
+    };
+    let n = ds.n();
+
+    // Ground truth + naive cost baseline.
+    let t0 = Instant::now();
+    let truths: Vec<Vec<usize>> =
+        queries.iter().map(|q| ground_truth(&ds.vectors, q, cfg.k)).collect();
+    let naive_secs_total = t0.elapsed().as_secs_f64();
+    let naive_secs = naive_secs_total / queries.len().max(1) as f64;
+    let naive_flops = (n * ds.dim()) as u64;
+
+    let mut out = Vec::new();
+
+    // BOUNDEDME sweep over ε (per-query knob — one shared zero-prep
+    // index), in both pull orders: the paper's fully-permuted sampling
+    // and the cache/TPU-friendly block-shuffled schedule.
+    let bme_variants = [
+        BoundedMeIndex::new(ds.vectors.clone()),
+        BoundedMeIndex::with_order(
+            ds.vectors.clone(),
+            crate::bandit::PullOrder::BlockShuffled(64),
+        ),
+    ];
+    for bme in &bme_variants {
+        for &eps in &cfg.bme_epsilons {
+            let mut stats = AlgoStats::new(bme.name());
+            let mut cand = 0usize;
+            for (qi, (q, truth)) in queries.iter().zip(&truths).enumerate() {
+                let params = MipsParams {
+                    k: cfg.k,
+                    epsilon: eps,
+                    delta: cfg.bme_delta,
+                    seed: cfg.seed ^ (qi as u64).wrapping_mul(6364136223846793005),
+                };
+                let t = Instant::now();
+                let res = bme.query(q, &params);
+                stats.record(
+                    precision_at_k(truth, &res.indices),
+                    res.flops,
+                    naive_flops,
+                    t.elapsed().as_secs_f64(),
+                    naive_secs,
+                );
+                cand += res.candidates;
+            }
+            out.push(SweepPoint {
+                algo: bme.name().into(),
+                knob: format!("eps={eps}"),
+                precision: stats.precision(),
+                speedup_flops: stats.speedup_flops(),
+                speedup_wall: stats.speedup_wall(),
+                mean_candidates: cand as f64 / queries.len().max(1) as f64,
+            });
+        }
+    }
+
+    // GREEDY-MIPS over budget.
+    for &frac in &cfg.greedy_budgets {
+        let budget = ((n as f64 * frac) as usize).max(1);
+        let idx = GreedyMipsIndex::new(ds.vectors.clone(), budget);
+        out.push(eval_index(
+            &idx,
+            &format!("B={:.0}%", frac * 100.0),
+            &queries,
+            &truths,
+            naive_flops,
+            naive_secs,
+            cfg.k,
+            cfg.seed,
+        ));
+    }
+
+    // LSH-MIPS over (a, b).
+    for &(a, b) in &cfg.lsh_settings {
+        let idx = LshMipsIndex::new(ds.vectors.clone(), a, b, cfg.seed ^ 0xD00D);
+        out.push(eval_index(
+            &idx,
+            &format!("a={a},b={b}"),
+            &queries,
+            &truths,
+            naive_flops,
+            naive_secs,
+            cfg.k,
+            cfg.seed,
+        ));
+    }
+
+    // PCA-MIPS over depth.
+    for &d in &cfg.pca_depths {
+        if (1usize << d) > n {
+            continue;
+        }
+        let idx = PcaMipsIndex::new(ds.vectors.clone(), d, cfg.seed ^ 0xBEEF);
+        out.push(eval_index(
+            &idx,
+            &format!("d={d}"),
+            &queries,
+            &truths,
+            naive_flops,
+            naive_secs,
+            cfg.k,
+            cfg.seed,
+        ));
+    }
+
+    out
+}
+
+/// Format sweep points as the example binaries print them.
+pub fn format_points(points: &[SweepPoint]) -> String {
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.algo.clone(),
+                p.knob.clone(),
+                format!("{:.3}", p.precision),
+                format!("{:.2}x", p.speedup_flops),
+                format!("{:.2}x", p.speedup_wall),
+                format!("{:.1}", p.mean_candidates),
+            ]
+        })
+        .collect();
+    super::markdown_table(
+        &["algo", "knob", "precision", "speedup(flops)", "speedup(wall)", "candidates"],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::gaussian_dataset;
+
+    #[test]
+    fn tiny_sweep_produces_sane_points() {
+        let ds = gaussian_dataset(150, 64, 3);
+        let cfg = SweepConfig {
+            k: 3,
+            queries: 4,
+            bme_epsilons: vec![0.05, 0.5],
+            greedy_budgets: vec![0.5],
+            lsh_settings: vec![(4, 6)],
+            pca_depths: vec![2],
+            ..Default::default()
+        };
+        let pts = run_sweep(&ds, &cfg, None);
+        // 2 BoundedME variants × 2 ε + greedy + lsh + pca.
+        assert_eq!(pts.len(), 7);
+        for p in &pts {
+            assert!((0.0..=1.0).contains(&p.precision), "{p:?}");
+            assert!(p.speedup_flops > 0.0);
+        }
+        // Tight ε must give higher precision than loose ε.
+        let tight = &pts[0];
+        let loose = &pts[1];
+        assert!(tight.precision >= loose.precision - 1e-9);
+        // Table formatting runs.
+        let s = format_points(&pts);
+        assert!(s.contains("BoundedME"));
+    }
+}

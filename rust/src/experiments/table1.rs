@@ -1,0 +1,182 @@
+//! Table 1: measured preprocessing time, query time, and guarantee
+//! summary for every method on one common dataset.
+//!
+//! The paper's Table 1 is analytic (big-O); this harness produces its
+//! measured counterpart so EXPERIMENTS.md can show both side by side.
+
+use crate::algos::{
+    BoundedMeIndex, GreedyMipsIndex, LshMipsIndex, MipsIndex, MipsParams, NaiveIndex,
+    PcaMipsIndex, RptMipsIndex,
+};
+use crate::data::Dataset;
+use crate::metrics::precision_at_k;
+use std::time::Instant;
+
+/// One measured Table-1 row.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    /// Method name.
+    pub method: String,
+    /// Preprocessing wall-clock seconds.
+    pub prep_seconds: f64,
+    /// Mean per-query wall-clock seconds.
+    pub query_seconds: f64,
+    /// Mean per-query flops.
+    pub query_flops: f64,
+    /// Mean precision@K.
+    pub precision: f64,
+    /// Guarantee column (verbatim from the paper's table).
+    pub guarantee: &'static str,
+}
+
+/// Table-1 configuration.
+#[derive(Clone, Debug)]
+pub struct Table1Config {
+    /// Result-set size.
+    pub k: usize,
+    /// Queries to average over.
+    pub queries: usize,
+    /// BOUNDEDME (ε, δ).
+    pub epsilon: f64,
+    /// BOUNDEDME δ.
+    pub delta: f64,
+    /// GREEDY budget fraction.
+    pub greedy_budget_frac: f64,
+    /// LSH (a, b).
+    pub lsh: (usize, usize),
+    /// PCA depth.
+    pub pca_depth: usize,
+    /// RPT (L, leaf).
+    pub rpt: (usize, usize),
+    /// Seed.
+    pub seed: u64,
+}
+
+impl Default for Table1Config {
+    fn default() -> Self {
+        Self {
+            k: 5,
+            queries: 10,
+            epsilon: 0.05,
+            delta: 0.1,
+            greedy_budget_frac: 0.3,
+            lsh: (8, 16),
+            pca_depth: 4,
+            rpt: (8, 64),
+            seed: 0,
+        }
+    }
+}
+
+/// Measure all methods. Indexes are built inside so preprocessing time
+/// is captured.
+pub fn run(ds: &Dataset, cfg: &Table1Config) -> Vec<Table1Row> {
+    let queries = ds.sample_queries(cfg.queries, cfg.seed);
+    let truths: Vec<Vec<usize>> = queries
+        .iter()
+        .map(|q| crate::algos::ground_truth(&ds.vectors, q, cfg.k))
+        .collect();
+
+    let n = ds.n();
+    let mut rows = Vec::new();
+
+    let mut measure = |index: &dyn MipsIndex, guarantee: &'static str| {
+        let mut flops = 0u64;
+        let mut secs = 0f64;
+        let mut prec = 0f64;
+        for (qi, (q, truth)) in queries.iter().zip(&truths).enumerate() {
+            let params = MipsParams {
+                k: cfg.k,
+                epsilon: cfg.epsilon,
+                delta: cfg.delta,
+                seed: cfg.seed ^ qi as u64,
+            };
+            let t = Instant::now();
+            let res = index.query(q, &params);
+            secs += t.elapsed().as_secs_f64();
+            flops += res.flops;
+            prec += precision_at_k(truth, &res.indices);
+        }
+        let qn = queries.len().max(1) as f64;
+        rows.push(Table1Row {
+            method: index.name().to_string(),
+            prep_seconds: index.preprocessing_seconds(),
+            query_seconds: secs / qn,
+            query_flops: flops as f64 / qn,
+            precision: prec / qn,
+            guarantee,
+        });
+    };
+
+    measure(
+        &BoundedMeIndex::new(ds.vectors.clone()),
+        "ε-optimal w.p. ≥ 1−δ for any user (ε, δ)",
+    );
+    measure(
+        &GreedyMipsIndex::new(
+            ds.vectors.clone(),
+            ((n as f64 * cfg.greedy_budget_frac) as usize).max(1),
+        ),
+        "none in general (uniform-data h.p. bound only)",
+    );
+    measure(
+        &LshMipsIndex::new(ds.vectors.clone(), cfg.lsh.0, cfg.lsh.1, cfg.seed ^ 1),
+        "prob. depends on unknown angle of v*",
+    );
+    measure(
+        &PcaMipsIndex::new(ds.vectors.clone(), cfg.pca_depth, cfg.seed ^ 2),
+        "none",
+    );
+    measure(
+        &RptMipsIndex::new(ds.vectors.clone(), cfg.rpt.0, cfg.rpt.1, cfg.seed ^ 3),
+        "potential-function bound, not controllable",
+    );
+    measure(&NaiveIndex::new(ds.vectors.clone()), "exact");
+
+    rows
+}
+
+/// Render rows as markdown.
+pub fn format_rows(rows: &[Table1Row]) -> String {
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.method.clone(),
+                format!("{:.3}s", r.prep_seconds),
+                format!("{:.2}ms", r.query_seconds * 1e3),
+                format!("{:.2e}", r.query_flops),
+                format!("{:.3}", r.precision),
+                r.guarantee.to_string(),
+            ]
+        })
+        .collect();
+    super::markdown_table(
+        &["method", "preprocess", "query", "query flops", "precision", "guarantee"],
+        &body,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::gaussian_dataset;
+
+    #[test]
+    fn all_methods_measured() {
+        let ds = gaussian_dataset(120, 48, 1);
+        let cfg = Table1Config { queries: 3, pca_depth: 3, rpt: (2, 16), ..Default::default() };
+        let rows = run(&ds, &cfg);
+        assert_eq!(rows.len(), 6);
+        let names: Vec<&str> = rows.iter().map(|r| r.method.as_str()).collect();
+        assert!(names.contains(&"BoundedME"));
+        assert!(names.contains(&"Naive"));
+        // BoundedME has zero preprocessing; Greedy/LSH/PCA/RPT have > 0.
+        let by_name = |n: &str| rows.iter().find(|r| r.method == n).unwrap();
+        assert_eq!(by_name("BoundedME").prep_seconds, 0.0);
+        assert!(by_name("Greedy").prep_seconds > 0.0);
+        assert!(by_name("Naive").precision > 0.999);
+        let table = format_rows(&rows);
+        assert!(table.contains("BoundedME"));
+    }
+}

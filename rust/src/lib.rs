@@ -1,0 +1,59 @@
+//! # bandit-mips
+//!
+//! A production-grade reproduction of *"A Bandit Approach to Maximum Inner
+//! Product Search"* (Liu, Wu, Mozafari — AAAI 2019).
+//!
+//! The paper casts Maximum Inner Product Search (MIPS) as a Best Arm
+//! Identification problem in a new bandit setting — **Multi-Armed Bandit
+//! with Bounded Pulls (MAB-BP)** — where each arm's rewards are drawn
+//! *without replacement* from a finite list of size `N` (the vector
+//! dimension). Its algorithm, **BOUNDEDME**, is a median-elimination
+//! variant using a concentration bound for sampling without replacement
+//! (Bardenet & Maillard 2015), which gives:
+//!
+//! * zero preprocessing,
+//! * a user-controlled (ε, δ) suboptimality knob per query,
+//! * per-arm pull counts bounded by `N`, and
+//! * `O(n√N/ε · √log(1/δ))` sample complexity.
+//!
+//! ## Crate layout
+//!
+//! | module | contents |
+//! |---|---|
+//! | [`linalg`] | dense matrix/vector substrate, RNG, PCA, top-K utilities |
+//! | [`bandit`] | MAB-BP framework, BOUNDEDME, bandit baselines |
+//! | [`algos`]  | MIPS indexes: naive, BoundedME, Greedy-, LSH-, PCA-, RPT-MIPS |
+//! | [`data`]   | dataset substrate: synthetic, adversarial, ALS matrix factorization |
+//! | [`metrics`] | precision@K, flop accounting, latency sketches |
+//! | [`runtime`] | PJRT bridge: load AOT HLO artifacts, execute on the hot path |
+//! | [`coordinator`] | serving layer: router, dynamic batcher, worker pool |
+//! | [`experiments`] | harness regenerating every paper table/figure |
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use bandit_mips::algos::{BoundedMeIndex, MipsIndex, MipsParams};
+//! use bandit_mips::data::synthetic::gaussian_dataset;
+//!
+//! let ds = gaussian_dataset(1000, 512, 42);
+//! let index = BoundedMeIndex::new(ds.vectors.clone());
+//! let q = ds.sample_query(7);
+//! let res = index.query(&q, &MipsParams { k: 5, epsilon: 0.1, delta: 0.1, ..Default::default() });
+//! println!("top-5 = {:?}", res.indices);
+//! ```
+
+pub mod algos;
+pub mod bandit;
+pub mod benchkit;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod jsonlite;
+pub mod linalg;
+pub mod metrics;
+pub mod runtime;
+pub mod sync;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,209 @@
+//! Row-major dense matrix used as the canonical vector-set storage.
+
+use std::sync::Arc;
+
+/// A dense, row-major `rows × cols` matrix of `f32`.
+///
+/// The vector set `S = {v_1, …, v_n}` of a MIPS instance is stored as one
+/// `Matrix` with `rows = n`, `cols = N`; row `i` is vector `v_i`. Rows are
+/// contiguous so partial dot products over coordinate ranges are cache-
+/// friendly, matching the paper's cost model where a "pull" touches one
+/// coordinate of one row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Arc<Vec<f32>>,
+}
+
+impl Matrix {
+    /// Build from a flat row-major buffer. Panics if `data.len() != rows*cols`.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(
+            data.len(),
+            rows * cols,
+            "Matrix::from_vec: buffer len {} != {rows}x{cols}",
+            data.len()
+        );
+        Self { rows, cols, data: Arc::new(data) }
+    }
+
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self::from_vec(rows, cols, vec![0.0; rows * cols])
+    }
+
+    /// Build from a closure `f(row, col) -> value`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self::from_vec(rows, cols, data)
+    }
+
+    /// Build by stacking rows. Panics if rows have unequal lengths.
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        let n = rows.len();
+        let cols = rows.first().map_or(0, |r| r.len());
+        let mut data = Vec::with_capacity(n * cols);
+        for r in rows {
+            assert_eq!(r.len(), cols, "Matrix::from_rows: ragged rows");
+            data.extend_from_slice(r);
+        }
+        Self::from_vec(n, cols, data)
+    }
+
+    /// Number of rows (vectors).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns (dimension `N`).
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        let start = i * self.cols;
+        &self.data[start..start + self.cols]
+    }
+
+    /// Element access.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    /// The full flat buffer.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Iterator over rows.
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[f32]> {
+        (0..self.rows).map(move |i| self.row(i))
+    }
+
+    /// Matrix-vector product `self * q` (each row dotted with `q`).
+    pub fn matvec(&self, q: &[f32]) -> Vec<f32> {
+        assert_eq!(q.len(), self.cols, "matvec: dim mismatch");
+        self.iter_rows().map(|r| super::dot(r, q)).collect()
+    }
+
+    /// A new matrix with the given rows gathered (copied) in order.
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut data = Vec::with_capacity(idx.len() * self.cols);
+        for &i in idx {
+            data.extend_from_slice(self.row(i));
+        }
+        Matrix::from_vec(idx.len(), self.cols, data)
+    }
+
+    /// A new matrix whose columns are permuted: `out[r][c] = self[r][perm[c]]`.
+    ///
+    /// Used by BOUNDEDME to pre-permute coordinates once per query so that
+    /// "sampling without replacement" becomes contiguous scans (see
+    /// DESIGN.md §Hardware-Adaptation).
+    pub fn permute_cols(&self, perm: &[usize]) -> Matrix {
+        assert_eq!(perm.len(), self.cols);
+        let mut data = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            let src = self.row(r);
+            let dst = &mut data[r * self.cols..(r + 1) * self.cols];
+            for (c, &p) in perm.iter().enumerate() {
+                dst[c] = src[p];
+            }
+        }
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+
+    /// Min and max over all elements; `(0, 0)` for an empty matrix.
+    pub fn min_max(&self) -> (f32, f32) {
+        if self.data.is_empty() {
+            return (0.0, 0.0);
+        }
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in self.data.iter() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        (lo, hi)
+    }
+
+    /// Maximum L2 norm over rows (used by LSH-MIPS's Euclidean transform).
+    pub fn max_row_norm(&self) -> f32 {
+        self.iter_rows().map(super::norm).fold(0.0f32, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> Matrix {
+        Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    }
+
+    #[test]
+    fn shape_and_access() {
+        let m = m();
+        assert_eq!((m.rows(), m.cols()), (2, 3));
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(m.get(0, 2), 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_buffer_panics() {
+        Matrix::from_vec(2, 2, vec![1.0]);
+    }
+
+    #[test]
+    fn from_fn_and_rows() {
+        let a = Matrix::from_fn(2, 2, |r, c| (r * 2 + c) as f32);
+        let b = Matrix::from_rows(&[vec![0.0, 1.0], vec![2.0, 3.0]]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn matvec_matches_manual() {
+        let m = m();
+        let out = m.matvec(&[1.0, 0.0, -1.0]);
+        assert_eq!(out, vec![-2.0, -2.0]);
+    }
+
+    #[test]
+    fn gather_and_permute() {
+        let m = m();
+        let g = m.gather_rows(&[1, 0, 1]);
+        assert_eq!(g.row(0), &[4.0, 5.0, 6.0]);
+        assert_eq!(g.rows(), 3);
+        let p = m.permute_cols(&[2, 0, 1]);
+        assert_eq!(p.row(0), &[3.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn min_max_and_norms() {
+        let m = m();
+        assert_eq!(m.min_max(), (1.0, 6.0));
+        let expected = (16.0f32 + 25.0 + 36.0).sqrt();
+        assert!((m.max_row_norm() - expected).abs() < 1e-6);
+        assert_eq!(Matrix::zeros(0, 0).min_max(), (0.0, 0.0));
+    }
+
+    #[test]
+    fn clone_shares_storage() {
+        let m = m();
+        let c = m.clone();
+        assert!(std::ptr::eq(m.as_slice().as_ptr(), c.as_slice().as_ptr()));
+    }
+}

@@ -1,0 +1,189 @@
+//! Principal component analysis via power iteration with deflation.
+//!
+//! Substrate for the PCA-MIPS baseline (Bachrach et al. 2014): the PCA
+//! tree splits on the top principal directions of the (transformed)
+//! dataset. We implement covariance-free power iteration: each iteration
+//! computes `w ← Aᵀ(A w)` on the centered data, never materializing the
+//! `N×N` covariance.
+
+use super::{axpy, dot, normalize, Matrix, Rng};
+
+/// Result of a PCA run: `components` are unit-norm rows (principal
+/// directions, most significant first), `mean` is the column mean that
+/// was subtracted, `eigenvalues` are the corresponding variances.
+#[derive(Clone, Debug)]
+pub struct Pca {
+    /// `k × N` matrix of principal directions (rows, unit norm).
+    pub components: Matrix,
+    /// Column means of the input (length `N`).
+    pub mean: Vec<f32>,
+    /// Variance captured by each component.
+    pub eigenvalues: Vec<f32>,
+}
+
+impl Pca {
+    /// Project a vector onto component `c` (after centering).
+    pub fn project(&self, x: &[f32], c: usize) -> f32 {
+        let comp = self.components.row(c);
+        let mut s = 0f32;
+        for i in 0..x.len() {
+            s += (x[i] - self.mean[i]) * comp[i];
+        }
+        s
+    }
+}
+
+/// Compute the top-`k` principal components of `data` with power
+/// iteration + deflation.
+///
+/// * `iters` power iterations per component (30 is plenty for tree
+///   splitting purposes — we need directions, not eigenvalues to 1e-12).
+/// * Deterministic given `seed`.
+pub fn pca(data: &Matrix, k: usize, iters: usize, seed: u64) -> Pca {
+    let n = data.rows();
+    let d = data.cols();
+    let k = k.min(d).min(n.max(1));
+    let mut rng = Rng::new(seed);
+
+    // Column means.
+    let mut mean = vec![0f32; d];
+    for row in data.iter_rows() {
+        for (m, &x) in mean.iter_mut().zip(row) {
+            *m += x;
+        }
+    }
+    if n > 0 {
+        let inv = 1.0 / n as f32;
+        for m in mean.iter_mut() {
+            *m *= inv;
+        }
+    }
+
+    let mut comps: Vec<Vec<f32>> = Vec::with_capacity(k);
+    let mut eigs = Vec::with_capacity(k);
+    // Scratch for centered row.
+    let mut centered = vec![0f32; d];
+
+    for _ in 0..k {
+        let mut w = rng.gaussian_vec(d);
+        normalize(&mut w);
+        let mut lambda = 0f32;
+        for _ in 0..iters {
+            // v = A_centered^T (A_centered w), deflated against previous comps.
+            let mut v = vec![0f32; d];
+            for row in data.iter_rows() {
+                for i in 0..d {
+                    centered[i] = row[i] - mean[i];
+                }
+                // Deflate the row against found components.
+                for c in comps.iter() {
+                    let proj = dot(&centered, c);
+                    axpy(-proj, c, &mut centered);
+                }
+                let s = dot(&centered, &w);
+                axpy(s, &centered, &mut v);
+            }
+            // Re-orthogonalize for numerical safety.
+            for c in comps.iter() {
+                let proj = dot(&v, c);
+                axpy(-proj, c, &mut v);
+            }
+            lambda = normalize(&mut v);
+            if lambda == 0.0 {
+                // Degenerate direction (rank exhausted): keep previous w.
+                break;
+            }
+            w = v;
+        }
+        eigs.push(if n > 0 { lambda / n as f32 } else { 0.0 });
+        comps.push(w);
+    }
+
+    Pca { components: Matrix::from_rows(&comps), mean, eigenvalues: eigs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Dataset stretched along a known direction.
+    fn stretched(n: usize, d: usize, dir: &[f32], seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = rng.gaussian() as f32 * 10.0;
+            let mut row: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32 * 0.1).collect();
+            for (r, &u) in row.iter_mut().zip(dir) {
+                *r += t * u;
+            }
+            rows.push(row);
+        }
+        Matrix::from_rows(&rows)
+    }
+
+    #[test]
+    fn recovers_dominant_direction() {
+        let d = 16;
+        let mut dir = vec![0f32; d];
+        dir[3] = 0.6;
+        dir[7] = 0.8;
+        let data = stretched(400, d, &dir, 11);
+        let p = pca(&data, 1, 50, 1);
+        let c = p.components.row(0);
+        let cosine = dot(c, &dir).abs();
+        assert!(cosine > 0.99, "cosine={cosine}");
+        assert!(p.eigenvalues[0] > 10.0);
+    }
+
+    #[test]
+    fn components_are_orthonormal() {
+        let mut rng = Rng::new(3);
+        let data = Matrix::from_fn(200, 12, |_, _| rng.gaussian() as f32);
+        let p = pca(&data, 4, 40, 2);
+        for i in 0..4 {
+            let ci = p.components.row(i);
+            assert!((super::super::norm(ci) - 1.0).abs() < 1e-3);
+            for j in 0..i {
+                let c = dot(ci, p.components.row(j)).abs();
+                assert!(c < 1e-2, "components {i},{j} not orthogonal: {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvalues_descending() {
+        let mut rng = Rng::new(5);
+        // Anisotropic data: per-column scales decreasing.
+        let data = Matrix::from_fn(300, 8, |_, c| {
+            rng.gaussian() as f32 * (8 - c) as f32
+        });
+        let p = pca(&data, 3, 60, 7);
+        assert!(p.eigenvalues[0] >= p.eigenvalues[1]);
+        assert!(p.eigenvalues[1] >= p.eigenvalues[2]);
+    }
+
+    #[test]
+    fn project_centers_data() {
+        let data = Matrix::from_rows(&[vec![1.0, 1.0], vec![3.0, 3.0]]);
+        let p = pca(&data, 1, 30, 9);
+        // Projections of the two points must be symmetric about 0.
+        let a = p.project(data.row(0), 0);
+        let b = p.project(data.row(1), 0);
+        assert!((a + b).abs() < 1e-4, "a={a} b={b}");
+    }
+
+    #[test]
+    fn handles_rank_deficient() {
+        // All rows identical: zero variance, should not panic / NaN.
+        let data = Matrix::from_rows(&vec![vec![2.0; 6]; 10]);
+        let p = pca(&data, 3, 20, 13);
+        for &e in &p.eigenvalues {
+            assert!(e.abs() < 1e-6);
+        }
+        for r in 0..3 {
+            for &v in p.components.row(r) {
+                assert!(v.is_finite());
+            }
+        }
+    }
+}

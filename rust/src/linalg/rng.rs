@@ -1,0 +1,269 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! Every stochastic component of the system (dataset generation, LSH
+//! projections, bandit pull order, workload arrival) is seeded through
+//! this module so that experiments are exactly reproducible. We use
+//! xoshiro256** seeded via SplitMix64, the standard recommendation of
+//! Blackman & Vigna.
+
+/// xoshiro256** PRNG with SplitMix64 seeding.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Gaussian from the Box–Muller pair.
+    gauss_spare: Option<f64>,
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Self { s, gauss_spare: None }
+    }
+
+    /// Derive an independent child generator (for per-query / per-worker
+    /// streams). Deterministic in `(self_seed_state, salt)`.
+    pub fn fork(&mut self, salt: u64) -> Rng {
+        Rng::new(self.next_u64() ^ salt.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    /// Next raw 64 bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in `[0, bound)` via Lemire's method. Panics on 0.
+    #[inline]
+    pub fn next_below(&mut self, bound: usize) -> usize {
+        assert!(bound > 0, "next_below(0)");
+        // 128-bit multiply-shift; bias is negligible for our bounds and
+        // rejected anyway below.
+        let bound = bound as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= lo.wrapping_neg() % bound {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard Gaussian via Box–Muller (pair-cached).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        // Avoid log(0).
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.gauss_spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Bernoulli draw.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Exponential with rate `lambda` (used by the Poisson arrival
+    /// workload generator in the serving benches).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        assert!(lambda > 0.0);
+        let u = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -u.ln() / lambda
+    }
+
+    /// Zipf-distributed integer in `[0, n)` with exponent `s`, via
+    /// inverse-CDF on a precomputed table-free rejection scheme
+    /// (Devroye). Good enough for workload skew.
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        debug_assert!(n > 0);
+        // Rejection sampling from the Zipf(s) distribution, Devroye p.551.
+        if s <= 1.0 + 1e-9 {
+            // Fall back to inverse CDF via harmonic approximation.
+            let hn = (n as f64).ln() + 0.5772156649;
+            let u = self.next_f64() * hn;
+            let k = (u.exp() - 0.5).floor().max(0.0) as usize;
+            return k.min(n - 1);
+        }
+        let b = 2.0f64.powf(s - 1.0);
+        loop {
+            let u = self.next_f64();
+            let v = self.next_f64();
+            let x = (u.powf(-1.0 / (s - 1.0))).floor();
+            let t = (1.0 + 1.0 / x).powf(s - 1.0);
+            if x >= 1.0 && v * x * (t - 1.0) / (b - 1.0) <= t / b {
+                let k = x as usize - 1;
+                if k < n {
+                    return k;
+                }
+            }
+        }
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+
+    /// Vector of standard Gaussians.
+    pub fn gaussian_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.gaussian() as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut r = Rng::new(4);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let k = r.next_below(7);
+            assert!(k < 7);
+            seen[k] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues hit");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(5);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(6);
+        let p = r.permutation(100);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_skews_low() {
+        let mut r = Rng::new(8);
+        let n = 1000;
+        let draws: Vec<usize> = (0..20_000).map(|_| r.zipf(n, 1.2)).collect();
+        assert!(draws.iter().all(|&k| k < n));
+        let head = draws.iter().filter(|&&k| k < 10).count() as f64 / draws.len() as f64;
+        assert!(head > 0.3, "zipf head mass = {head}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(9);
+        let m: f64 = (0..20_000).map(|_| r.exponential(2.0)).sum::<f64>() / 20_000.0;
+        assert!((m - 0.5).abs() < 0.03, "mean={m}");
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Rng::new(10);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

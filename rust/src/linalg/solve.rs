@@ -1,0 +1,147 @@
+//! Small dense solvers: Cholesky for the SPD normal equations of ALS,
+//! and Gram–Schmidt orthonormalization for the embedding lift.
+
+use super::{axpy, dot, normalize, Rng};
+
+/// In-place Cholesky factorization of a symmetric positive-definite
+/// `n × n` matrix `a` (row-major); lower triangle receives `L` with
+/// `A = L Lᵀ`. Returns `false` if the matrix is not SPD.
+pub fn cholesky(a: &mut [f64], n: usize) -> bool {
+    debug_assert_eq!(a.len(), n * n);
+    for j in 0..n {
+        let mut d = a[j * n + j];
+        for k in 0..j {
+            d -= a[j * n + k] * a[j * n + k];
+        }
+        if d <= 0.0 {
+            return false;
+        }
+        let d = d.sqrt();
+        a[j * n + j] = d;
+        for i in j + 1..n {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= a[i * n + k] * a[j * n + k];
+            }
+            a[i * n + j] = s / d;
+        }
+    }
+    true
+}
+
+/// Solve `A x = b` for SPD `A` via Cholesky; `a` is destroyed, `b` is
+/// replaced by the solution. Returns `false` if not SPD.
+pub fn cholesky_solve(a: &mut [f64], b: &mut [f64], n: usize) -> bool {
+    if !cholesky(a, n) {
+        return false;
+    }
+    // Forward: L y = b.
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= a[i * n + k] * b[k];
+        }
+        b[i] = s / a[i * n + i];
+    }
+    // Backward: Lᵀ x = y.
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in i + 1..n {
+            s -= a[k * n + i] * b[k];
+        }
+        b[i] = s / a[i * n + i];
+    }
+    true
+}
+
+/// Generate `k` orthonormal vectors of dimension `dim` (rows of the
+/// returned flat `k × dim` buffer) via Gram–Schmidt on Gaussian draws.
+/// Panics if `k > dim`.
+pub fn random_orthonormal(k: usize, dim: usize, seed: u64) -> Vec<f32> {
+    assert!(k <= dim, "cannot build {k} orthonormal vectors in R^{dim}");
+    let mut rng = Rng::new(seed);
+    let mut rows: Vec<Vec<f32>> = Vec::with_capacity(k);
+    while rows.len() < k {
+        let mut v = rng.gaussian_vec(dim);
+        for r in &rows {
+            let p = dot(&v, r);
+            axpy(-p, r, &mut v);
+        }
+        if normalize(&mut v) > 1e-6 {
+            rows.push(v);
+        }
+    }
+    rows.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_solves_known_system() {
+        // A = [[4,2],[2,3]], b = [10, 9] → x = [1.5, 2.0]
+        let mut a = vec![4.0, 2.0, 2.0, 3.0];
+        let mut b = vec![10.0, 9.0];
+        assert!(cholesky_solve(&mut a, &mut b, 2));
+        assert!((b[0] - 1.5).abs() < 1e-12);
+        assert!((b[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_random_spd_roundtrip() {
+        let mut rng = Rng::new(1);
+        let n = 8;
+        // A = M Mᵀ + I is SPD.
+        let m: Vec<f64> = (0..n * n).map(|_| rng.gaussian()).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = if i == j { 1.0 } else { 0.0 };
+                for k in 0..n {
+                    s += m[i * n + k] * m[j * n + k];
+                }
+                a[i * n + j] = s;
+            }
+        }
+        let x_true: Vec<f64> = (0..n).map(|i| i as f64 - 3.0).collect();
+        let mut b = vec![0.0; n];
+        for i in 0..n {
+            for j in 0..n {
+                b[i] += a[i * n + j] * x_true[j];
+            }
+        }
+        let mut a_work = a.clone();
+        assert!(cholesky_solve(&mut a_work, &mut b, n));
+        for i in 0..n {
+            assert!((b[i] - x_true[i]).abs() < 1e-8, "x[{i}]");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(!cholesky(&mut a, 2));
+    }
+
+    #[test]
+    fn orthonormal_rows() {
+        let k = 6;
+        let dim = 32;
+        let e = random_orthonormal(k, dim, 2);
+        for i in 0..k {
+            let ri = &e[i * dim..(i + 1) * dim];
+            assert!((dot(ri, ri) - 1.0).abs() < 1e-5);
+            for j in 0..i {
+                let rj = &e[j * dim..(j + 1) * dim];
+                assert!(dot(ri, rj).abs() < 1e-5, "rows {i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn orthonormal_rejects_k_gt_dim() {
+        random_orthonormal(5, 4, 0);
+    }
+}

@@ -1,0 +1,253 @@
+//! Streaming statistics: online moments and a fixed-bucket percentile
+//! sketch for latency reporting in the coordinator.
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct OnlineMoments {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineMoments {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    /// Add an observation.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Count of observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Sample mean (0 if empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population variance (0 if < 2 observations).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Standard deviation.
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Smallest observation (`inf` if empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Largest observation (`-inf` if empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Merge another accumulator into this one (Chan's parallel update).
+    pub fn merge(&mut self, other: &OnlineMoments) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        let m2 =
+            self.m2 + other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Log-bucketed histogram for positive values (latencies in seconds,
+/// flop counts, …). 90 buckets per decade over ~12 decades; quantile
+/// error is < 3% which is plenty for p50/p99 reporting.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    moments: OnlineMoments,
+}
+
+const BUCKETS_PER_DECADE: f64 = 90.0;
+const MIN_EXP: f64 = -9.0; // 1e-9 lower edge
+const NUM_BUCKETS: usize = (12.0 * BUCKETS_PER_DECADE) as usize;
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self { counts: vec![0; NUM_BUCKETS + 2], total: 0, moments: OnlineMoments::new() }
+    }
+
+    fn bucket(x: f64) -> usize {
+        if x <= 0.0 {
+            return 0;
+        }
+        let b = ((x.log10() - MIN_EXP) * BUCKETS_PER_DECADE).floor();
+        (b.max(0.0) as usize + 1).min(NUM_BUCKETS + 1)
+    }
+
+    fn bucket_value(b: usize) -> f64 {
+        if b == 0 {
+            return 0.0;
+        }
+        10f64.powf(MIN_EXP + (b as f64 - 0.5) / BUCKETS_PER_DECADE)
+    }
+
+    /// Record an observation.
+    pub fn record(&mut self, x: f64) {
+        self.counts[Self::bucket(x)] += 1;
+        self.total += 1;
+        self.moments.push(x);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Mean of observations.
+    pub fn mean(&self) -> f64 {
+        self.moments.mean()
+    }
+
+    /// Approximate quantile `q` in [0,1]; 0 if empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_value(b);
+            }
+        }
+        self.moments.max()
+    }
+
+    /// Merge another histogram.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.moments.merge(&other.moments);
+    }
+
+    /// One-line summary string: `n=…, mean=…, p50=…, p99=…, max=…`.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.3e} p50={:.3e} p90={:.3e} p99={:.3e} max={:.3e}",
+            self.total,
+            self.mean(),
+            self.quantile(0.5),
+            self.quantile(0.9),
+            self.quantile(0.99),
+            self.moments.max()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_basic() {
+        let mut m = OnlineMoments::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            m.push(x);
+        }
+        assert_eq!(m.count(), 4);
+        assert!((m.mean() - 2.5).abs() < 1e-12);
+        assert!((m.variance() - 1.25).abs() < 1e-12);
+        assert_eq!(m.min(), 1.0);
+        assert_eq!(m.max(), 4.0);
+    }
+
+    #[test]
+    fn moments_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut all = OnlineMoments::new();
+        xs.iter().for_each(|&x| all.push(x));
+        let mut a = OnlineMoments::new();
+        let mut b = OnlineMoments::new();
+        xs[..37].iter().for_each(|&x| a.push(x));
+        xs[37..].iter().for_each(|&x| b.push(x));
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.variance() - all.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantiles_roughly_correct() {
+        let mut h = LogHistogram::new();
+        // 1..=1000 microseconds-ish values
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-6);
+        }
+        let p50 = h.quantile(0.5);
+        assert!((p50 / 500e-6 - 1.0).abs() < 0.1, "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((p99 / 990e-6 - 1.0).abs() < 0.1, "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_empty_and_zero() {
+        let mut h = LogHistogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        h.record(0.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for i in 1..=100 {
+            a.record(i as f64);
+            b.record(i as f64 * 10.0);
+        }
+        let pre = a.count();
+        a.merge(&b);
+        assert_eq!(a.count(), pre + 100);
+        assert!(a.quantile(0.99) > 500.0);
+    }
+}

@@ -1,0 +1,182 @@
+//! Top-K selection utilities.
+//!
+//! Every MIPS index ends with "return the K items with the largest
+//! scores"; [`TopK`] is a bounded min-heap specialized for `(score, id)`
+//! pairs with deterministic tie-breaking (lower id wins ties so that
+//! precision comparisons across algorithms are stable).
+
+/// Bounded min-heap keeping the `k` largest `(score, id)` pairs.
+#[derive(Clone, Debug)]
+pub struct TopK {
+    k: usize,
+    /// Min-heap on (score, Reverse(id)) semantics, stored as a binary heap
+    /// in a Vec. heap[0] is the *worst* kept element.
+    heap: Vec<(f32, usize)>,
+}
+
+impl TopK {
+    /// New selector for the `k` largest items. `k = 0` keeps nothing.
+    pub fn new(k: usize) -> Self {
+        Self { k, heap: Vec::with_capacity(k + 1) }
+    }
+
+    /// `a` is strictly worse than `b` (lower score, or equal score with
+    /// higher id — so ties prefer smaller ids to stay).
+    #[inline]
+    fn worse(a: (f32, usize), b: (f32, usize)) -> bool {
+        a.0 < b.0 || (a.0 == b.0 && a.1 > b.1)
+    }
+
+    /// Offer a candidate.
+    #[inline]
+    pub fn push(&mut self, score: f32, id: usize) {
+        if self.k == 0 {
+            return;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push((score, id));
+            self.sift_up(self.heap.len() - 1);
+        } else if Self::worse(self.heap[0], (score, id)) {
+            self.heap[0] = (score, id);
+            self.sift_down(0);
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if Self::worse(self.heap[i], self.heap[parent]) {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut worst = i;
+            if l < n && Self::worse(self.heap[l], self.heap[worst]) {
+                worst = l;
+            }
+            if r < n && Self::worse(self.heap[r], self.heap[worst]) {
+                worst = r;
+            }
+            if worst == i {
+                return;
+            }
+            self.heap.swap(i, worst);
+            i = worst;
+        }
+    }
+
+    /// Current number of kept items.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True if nothing has been kept.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Worst kept score, or `-inf` if fewer than `k` kept so far.
+    pub fn threshold(&self) -> f32 {
+        if self.heap.len() < self.k {
+            f32::NEG_INFINITY
+        } else {
+            self.heap[0].0
+        }
+    }
+
+    /// Extract `(score, id)` pairs sorted best-first (descending score,
+    /// ascending id on ties).
+    pub fn into_sorted(self) -> Vec<(f32, usize)> {
+        let mut v = self.heap;
+        v.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+        });
+        v
+    }
+
+    /// Extract just the ids, best-first.
+    pub fn into_indices(self) -> Vec<usize> {
+        self.into_sorted().into_iter().map(|(_, i)| i).collect()
+    }
+}
+
+/// Exact top-k of a score slice: returns `(score, index)` best-first.
+pub fn top_k_of(scores: &[f32], k: usize) -> Vec<(f32, usize)> {
+    let mut t = TopK::new(k);
+    for (i, &s) in scores.iter().enumerate() {
+        t.push(s, i);
+    }
+    t.into_sorted()
+}
+
+/// Exact arg-top-k of a score slice.
+pub fn arg_top_k(scores: &[f32], k: usize) -> Vec<usize> {
+    top_k_of(scores, k).into_iter().map(|(_, i)| i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_k_largest() {
+        let scores = [0.1f32, 5.0, 3.0, 4.0, -1.0, 2.0];
+        assert_eq!(arg_top_k(&scores, 3), vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn fewer_than_k() {
+        assert_eq!(arg_top_k(&[2.0, 1.0], 5), vec![0, 1]);
+    }
+
+    #[test]
+    fn k_zero() {
+        let mut t = TopK::new(0);
+        t.push(1.0, 0);
+        assert!(t.is_empty());
+        assert!(t.into_indices().is_empty());
+    }
+
+    #[test]
+    fn tie_break_prefers_lower_id() {
+        let scores = [1.0f32, 1.0, 1.0, 1.0];
+        assert_eq!(arg_top_k(&scores, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn threshold_tracks_worst() {
+        let mut t = TopK::new(2);
+        assert_eq!(t.threshold(), f32::NEG_INFINITY);
+        t.push(1.0, 0);
+        assert_eq!(t.threshold(), f32::NEG_INFINITY);
+        t.push(3.0, 1);
+        assert_eq!(t.threshold(), 1.0);
+        t.push(2.0, 2);
+        assert_eq!(t.threshold(), 2.0);
+    }
+
+    #[test]
+    fn matches_full_sort_on_random_input() {
+        let mut rng = crate::linalg::Rng::new(42);
+        for trial in 0..50 {
+            let n = 1 + rng.next_below(200);
+            let k = 1 + rng.next_below(20);
+            let scores: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let got = arg_top_k(&scores, k);
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| {
+                scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b))
+            });
+            idx.truncate(k.min(n));
+            assert_eq!(got, idx, "trial {trial}");
+        }
+    }
+}

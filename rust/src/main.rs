@@ -1,0 +1,179 @@
+//! `bandit-mips` CLI: dataset generation, one-shot queries, a serving
+//! loop, and quick experiment runs.
+//!
+//! ```text
+//! bandit-mips gen      --kind gaussian --n 2000 --dim 4096 --out data.bin
+//! bandit-mips query    --data data.bin --k 5 --epsilon 0.1 --delta 0.1
+//! bandit-mips serve    --data data.bin --workers 2 --queries 500 [--artifacts artifacts/]
+//! bandit-mips fig1     [--full]
+//! bandit-mips table1   [--full]
+//! ```
+
+use bandit_mips::algos::{BoundedMeIndex, MipsIndex, MipsParams};
+use bandit_mips::cli::{init_logger, Args};
+use bandit_mips::coordinator::{Backend, Coordinator, CoordinatorConfig, QueryRequest};
+use bandit_mips::data::{io as dio, synthetic, workload};
+use bandit_mips::experiments::{fig1, table1};
+use std::path::PathBuf;
+use std::time::Duration;
+
+const USAGE: &str = "\
+bandit-mips <command> [flags]
+
+commands:
+  gen     --kind gaussian|uniform|netflix|yahoo --n <int> --dim <int> \
+--seed <int> --out <path>
+  query   --data <path> [--k 5] [--epsilon 0.1] [--delta 0.1] [--seed 0]
+  serve   --data <path> [--workers 2] [--queries 500] [--rate 200] \
+[--artifacts <dir>] [--tcp host:port [--max-conns 64]]
+  fig1    [--full]
+  table1  [--full]
+";
+
+fn main() -> anyhow::Result<()> {
+    init_logger();
+    let args = Args::parse_with(&["full"]);
+    match args.command() {
+        Some("gen") => cmd_gen(&args),
+        Some("query") => cmd_query(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("fig1") => cmd_fig1(&args),
+        Some("table1") => cmd_table1(&args),
+        _ => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_gen(args: &Args) -> anyhow::Result<()> {
+    let kind = args.get_str("kind").unwrap_or("gaussian").to_string();
+    let n = args.get("n", 2000usize);
+    let dim = args.get("dim", 4096usize);
+    let seed = args.get("seed", 42u64);
+    let out: PathBuf = args.require::<PathBuf>("out")?;
+    let ds = match kind.as_str() {
+        "gaussian" => synthetic::gaussian_dataset(n, dim, seed),
+        "uniform" => synthetic::uniform_dataset(n, dim, seed),
+        "netflix" => bandit_mips::data::mf::netflix_like(n, dim, seed).dataset,
+        "yahoo" => bandit_mips::data::mf::yahoo_like(n, dim, seed).dataset,
+        other => anyhow::bail!("unknown kind {other}"),
+    };
+    dio::save(&ds, &out)?;
+    println!("wrote {} ({}x{}) to {}", ds.name, ds.n(), ds.dim(), out.display());
+    Ok(())
+}
+
+fn cmd_query(args: &Args) -> anyhow::Result<()> {
+    let ds = dio::load(args.require::<PathBuf>("data")?)?;
+    let k = args.get("k", 5usize);
+    let epsilon = args.get("epsilon", 0.1f64);
+    let delta = args.get("delta", 0.1f64);
+    let seed = args.get("seed", 0u64);
+    let idx = BoundedMeIndex::new(ds.vectors.clone());
+    let q = ds.sample_query(seed);
+    let t = std::time::Instant::now();
+    let res = idx.query(&q, &MipsParams { k, epsilon, delta, seed });
+    let dt = t.elapsed();
+    println!(
+        "top-{k} (ε={epsilon}, δ={delta}) in {dt:?}, {} flops ({:.1}% of naive):",
+        res.flops,
+        100.0 * res.flops as f64 / (ds.n() * ds.dim()) as f64
+    );
+    for (i, (&id, &s)) in res.indices.iter().zip(&res.scores).enumerate() {
+        println!("  #{:<2} id={id:<8} score≈{s:.4}", i + 1);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let ds = dio::load(args.require::<PathBuf>("data")?)?;
+    let workers = args.get("workers", 2usize);
+    let queries = args.get("queries", 500usize);
+    let rate = args.get("rate", 200.0f64);
+    let backend = match args.get_str("artifacts") {
+        Some(dir) => Backend::Pjrt { artifact_dir: PathBuf::from(dir) },
+        None => Backend::Native,
+    };
+    let cfg = CoordinatorConfig { workers, backend, ..Default::default() };
+
+    // TCP mode: expose the line-protocol server and block forever.
+    if let Some(bind) = args.get_str("tcp") {
+        let coord = std::sync::Arc::new(Coordinator::new(ds.vectors.clone(), cfg)?);
+        let server = bandit_mips::coordinator::server::Server::start(
+            coord,
+            bind,
+            args.get("max-conns", 64usize),
+        )?;
+        println!("serving {} ({}x{}) on {}", ds.name, ds.n(), ds.dim(), server.addr());
+        println!("protocol: newline-delimited JSON; ops: query | metrics | ping");
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+
+    let coord = Coordinator::new(ds.vectors.clone(), cfg)?;
+    let trace = workload::poisson_trace(
+        &ds,
+        &workload::WorkloadConfig { count: queries, rate, ..Default::default() },
+    );
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for q in &trace {
+        let due = Duration::from_secs_f64(q.arrival);
+        if let Some(sleep) = due.checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        match coord.submit(QueryRequest::bounded_me(q.vector.clone(), q.k, q.epsilon, q.delta))
+        {
+            Ok(rx) => pending.push(rx),
+            Err(e) => log::warn!("dropped: {e}"),
+        }
+    }
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    let wall = t0.elapsed();
+    let m = coord.metrics();
+    println!(
+        "served {} queries in {wall:?} ({:.0} qps)",
+        m.queries,
+        m.queries as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "batch size mean {:.2}; service p50/p99 = {:.3}/{:.3} ms; queue p99 = {:.3} ms; \
+         total flops {:.2e}",
+        m.mean_batch_size,
+        m.service.0 * 1e3,
+        m.service.2 * 1e3,
+        m.queue_wait.2 * 1e3,
+        m.flops as f64
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_fig1(args: &Args) -> anyhow::Result<()> {
+    let cfg = if args.has("full") {
+        fig1::Fig1Config { n_arms: 10_000, n_list: 100_000, trials: 20, ..Default::default() }
+    } else {
+        fig1::Fig1Config::default()
+    };
+    let pts = fig1::run(&cfg);
+    println!("epsilon  (1-δ)-quantile subopt  holds");
+    for (e, q, h) in fig1::per_epsilon(&pts) {
+        println!("{e:<8.2} {q:<22.4} {h}");
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> anyhow::Result<()> {
+    let ds = if args.has("full") {
+        synthetic::gaussian_dataset(10_000, 8192, 7)
+    } else {
+        synthetic::gaussian_dataset(1000, 1024, 7)
+    };
+    let rows = table1::run(&ds, &table1::Table1Config::default());
+    println!("{}", table1::format_rows(&rows));
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! Evaluation metrics: precision@K, suboptimality, online speedup.
+//!
+//! Definitions follow the paper's Experiments section:
+//!
+//! * **precision** — fraction of the true top-K present in the returned
+//!   top-K (set semantics);
+//! * **suboptimality** — `p̃(T*) − p̃(T)` where `p̃(S)` is the K-th
+//!   highest *true mean* among the arms of `S` (mean-reward units,
+//!   i.e. inner products divided by `N`);
+//! * **online speedup** — cost(naive) / cost(algo), measured both in
+//!   flops (the paper's pull-count currency) and wall-clock.
+
+use crate::linalg::{dot, stats::LogHistogram, Matrix};
+
+/// Precision@K: |truth ∩ returned| / |truth|. Returns 1.0 for empty
+/// truth (vacuous).
+pub fn precision_at_k(truth: &[usize], returned: &[usize]) -> f64 {
+    if truth.is_empty() {
+        return 1.0;
+    }
+    let hit = truth.iter().filter(|t| returned.contains(t)).count();
+    hit as f64 / truth.len() as f64
+}
+
+/// Paper suboptimality of a returned K-set: the K-th best true mean of
+/// the optimal set minus the K-th best true mean of the returned set,
+/// in `qᵀv/N` units. Non-negative up to floating-point noise.
+pub fn suboptimality(data: &Matrix, q: &[f32], truth: &[usize], returned: &[usize]) -> f64 {
+    let kth = |set: &[usize]| -> f64 {
+        let mut scores: Vec<f64> =
+            set.iter().map(|&i| dot(data.row(i), q) as f64).collect();
+        scores.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+        let k = truth.len().min(scores.len());
+        if k == 0 {
+            return 0.0;
+        }
+        scores[k - 1]
+    };
+    ((kth(truth) - kth(returned)) / data.cols() as f64).max(0.0)
+}
+
+/// Aggregated per-algorithm measurements over a query batch.
+#[derive(Clone, Debug, Default)]
+pub struct AlgoStats {
+    /// Algorithm label.
+    pub name: String,
+    /// Mean precision@K.
+    pub precision_sum: f64,
+    /// Total query flops.
+    pub flops: u64,
+    /// Total naive flops over the same queries (for speedup).
+    pub naive_flops: u64,
+    /// Wall-clock seconds on the query path.
+    pub query_seconds: f64,
+    /// Naive wall-clock seconds on the same queries.
+    pub naive_seconds: f64,
+    /// Number of queries aggregated.
+    pub queries: u64,
+    /// Latency distribution (seconds).
+    pub latency: Option<LogHistogram>,
+}
+
+impl AlgoStats {
+    /// New empty aggregate for an algorithm.
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), latency: Some(LogHistogram::new()), ..Default::default() }
+    }
+
+    /// Record one query's outcome.
+    pub fn record(
+        &mut self,
+        precision: f64,
+        flops: u64,
+        naive_flops: u64,
+        seconds: f64,
+        naive_seconds: f64,
+    ) {
+        self.precision_sum += precision;
+        self.flops += flops;
+        self.naive_flops += naive_flops;
+        self.query_seconds += seconds;
+        self.naive_seconds += naive_seconds;
+        self.queries += 1;
+        if let Some(h) = self.latency.as_mut() {
+            h.record(seconds);
+        }
+    }
+
+    /// Mean precision over recorded queries.
+    pub fn precision(&self) -> f64 {
+        if self.queries == 0 {
+            0.0
+        } else {
+            self.precision_sum / self.queries as f64
+        }
+    }
+
+    /// Flop-based online speedup vs naive.
+    pub fn speedup_flops(&self) -> f64 {
+        if self.flops == 0 {
+            f64::INFINITY
+        } else {
+            self.naive_flops as f64 / self.flops as f64
+        }
+    }
+
+    /// Wall-clock online speedup vs naive.
+    pub fn speedup_wall(&self) -> f64 {
+        if self.query_seconds <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.naive_seconds / self.query_seconds
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_basics() {
+        assert_eq!(precision_at_k(&[1, 2, 3], &[3, 2, 1]), 1.0);
+        assert_eq!(precision_at_k(&[1, 2, 3, 4], &[1, 9, 2, 8]), 0.5);
+        assert_eq!(precision_at_k(&[1], &[]), 0.0);
+        assert_eq!(precision_at_k(&[], &[1]), 1.0);
+    }
+
+    #[test]
+    fn suboptimality_zero_for_exact_answer() {
+        let data = Matrix::from_rows(&[vec![1.0, 0.0], vec![0.5, 0.0], vec![0.0, 1.0]]);
+        let q = [1.0f32, 0.0];
+        let s = suboptimality(&data, &q, &[0, 1], &[1, 0]);
+        assert_eq!(s, 0.0);
+    }
+
+    #[test]
+    fn suboptimality_positive_for_worse_set() {
+        let data = Matrix::from_rows(&[vec![1.0, 0.0], vec![0.5, 0.0], vec![0.0, 0.0]]);
+        let q = [1.0f32, 0.0];
+        // truth = {0}, returned = {2}: gap = (1.0 - 0.0)/2 = 0.5
+        let s = suboptimality(&data, &q, &[0], &[2]);
+        assert!((s - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn algo_stats_aggregation() {
+        let mut st = AlgoStats::new("X");
+        st.record(1.0, 100, 1000, 0.001, 0.01);
+        st.record(0.5, 100, 1000, 0.001, 0.01);
+        assert_eq!(st.precision(), 0.75);
+        assert!((st.speedup_flops() - 10.0).abs() < 1e-9);
+        assert!((st.speedup_wall() - 10.0).abs() < 1e-6);
+        assert_eq!(st.queries, 2);
+    }
+}

@@ -1,0 +1,308 @@
+//! Scoring engines: the pluggable compute backends of the coordinator.
+//!
+//! [`ScoringEngine`] is the contract the serving layer programs against:
+//! "score a block of vectors against one query". Two implementations:
+//!
+//! * [`NativeEngine`] — pure-Rust blocked dot products (no PJRT);
+//! * [`PjrtEngine`] — routes blocks to the AOT-compiled XLA artifact on
+//!   a dedicated owner thread (PJRT handles are not `Send`), padding to
+//!   the artifact's fixed block size.
+//!
+//! The `hotpath` bench compares them head-to-head; the coordinator picks
+//! per `CoordinatorConfig::backend`.
+
+use super::Runtime;
+use crate::linalg::{dot, Matrix};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// Block scorer: exact inner products of `rows` (flattened `count × dim`)
+/// against `q` (`dim`).
+pub trait ScoringEngine: Send {
+    /// Engine label for metrics.
+    fn name(&self) -> &str;
+    /// Compute `count` inner products. `rows.len() == count * q.len()`.
+    fn score_block(&self, rows: &[f32], count: usize, q: &[f32]) -> Result<Vec<f32>>;
+
+    /// Score whole matrix rows by index (convenience over
+    /// [`ScoringEngine::score_block`], chunked to a reasonable block).
+    fn score_rows(&self, data: &Matrix, ids: &[usize], q: &[f32]) -> Result<Vec<f32>> {
+        const CHUNK: usize = 256;
+        let dim = data.cols();
+        let mut out = Vec::with_capacity(ids.len());
+        let mut buf = Vec::with_capacity(CHUNK * dim);
+        for chunk in ids.chunks(CHUNK) {
+            buf.clear();
+            for &i in chunk {
+                buf.extend_from_slice(data.row(i));
+            }
+            out.extend(self.score_block(&buf, chunk.len(), q)?);
+        }
+        Ok(out)
+    }
+
+    /// Score every row of the dataset against `q`. Engines that keep the
+    /// dataset resident on the device (see [`PjrtEngine::with_dataset`])
+    /// override this to skip the per-call data copy.
+    fn score_dataset(&self, data: &Matrix, q: &[f32]) -> Result<Vec<f32>> {
+        let ids: Vec<usize> = (0..data.rows()).collect();
+        self.score_rows(data, &ids, q)
+    }
+}
+
+/// Pure-Rust scorer.
+pub struct NativeEngine;
+
+impl ScoringEngine for NativeEngine {
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn score_block(&self, rows: &[f32], count: usize, q: &[f32]) -> Result<Vec<f32>> {
+        let dim = q.len();
+        if rows.len() != count * dim {
+            return Err(anyhow!("block shape mismatch: {} vs {count}×{dim}", rows.len()));
+        }
+        Ok((0..count).map(|i| dot(&rows[i * dim..(i + 1) * dim], q)).collect())
+    }
+}
+
+enum Cmd {
+    Score { rows: Vec<f32>, count: usize, q: Vec<f32>, reply: mpsc::Sender<Result<Vec<f32>>> },
+    ScoreResident { q: Vec<f32>, reply: mpsc::Sender<Result<Vec<f32>>> },
+    Shutdown,
+}
+
+/// PJRT-backed scorer. Owns a worker thread holding the [`Runtime`];
+/// the handle is `Send` and cheap to share behind an `Arc`.
+pub struct PjrtEngine {
+    tx: mpsc::Sender<Cmd>,
+    handle: Option<JoinHandle<()>>,
+    label: String,
+    /// Rows preloaded on the device (0 = none).
+    resident_rows: usize,
+}
+
+impl PjrtEngine {
+    /// Spawn the owner thread, load artifacts from `artifact_dir`, and
+    /// require an `exact_b*_d{dim}` artifact to exist for this `dim`.
+    pub fn new(artifact_dir: impl Into<PathBuf>, dim: usize) -> Result<Self> {
+        Self::spawn(artifact_dir.into(), dim, None)
+    }
+
+    /// Like [`PjrtEngine::new`], but uploads the dataset to the device
+    /// once at startup; [`ScoringEngine::score_dataset`] then only moves
+    /// the query per call (the big win on the serving hot path — see the
+    /// `hotpath` bench and EXPERIMENTS.md §Perf).
+    pub fn with_dataset(
+        artifact_dir: impl Into<PathBuf>,
+        data: &Matrix,
+    ) -> Result<Self> {
+        Self::spawn(artifact_dir.into(), data.cols(), Some(data.clone()))
+    }
+
+    fn spawn(dir: PathBuf, dim: usize, preload: Option<Matrix>) -> Result<Self> {
+        let resident_rows = preload.as_ref().map_or(0, |m| m.rows());
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<String>>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                // Initialize the runtime on the owner thread. Ad-hoc
+                // copies use the smallest block artifact (minimal
+                // padding); the resident dataset uses the largest
+                // (fewest dispatches).
+                type Resident = Vec<xla::PjRtBuffer>;
+                struct Init {
+                    rt: Runtime,
+                    small: (String, usize),
+                    big: (String, usize),
+                    resident: Resident,
+                }
+                let init = (|| -> Result<Init> {
+                    let mut rt = Runtime::cpu()?;
+                    rt.load_dir(&dir)?;
+                    let (small_name, small_shape) = rt
+                        .find_exact_min(dim)
+                        .ok_or_else(|| anyhow!("no exact_b*_d{dim} artifact in {dir:?}"))?;
+                    let (big_name, big_shape) = rt.find_exact(dim).unwrap();
+                    // Upload the dataset block-by-block (padded tail).
+                    let mut resident = Vec::new();
+                    if let Some(data) = &preload {
+                        let block = big_shape.block;
+                        let mut padded = vec![0f32; block * dim];
+                        let n = data.rows();
+                        let mut i = 0usize;
+                        while i < n {
+                            let take = (n - i).min(block);
+                            padded[..take * dim]
+                                .copy_from_slice(&data.as_slice()[i * dim..(i + take) * dim]);
+                            padded[take * dim..].fill(0.0);
+                            resident.push(rt.upload_f32(&padded, &[block, dim])?);
+                            i += take;
+                        }
+                    }
+                    Ok(Init {
+                        rt,
+                        small: (small_name, small_shape.block),
+                        big: (big_name, big_shape.block),
+                        resident,
+                    })
+                })();
+                let Init { rt, small, big, resident } = match init {
+                    Ok(v) => {
+                        let _ = ready_tx.send(Ok(v.small.0.clone()));
+                        v
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Shutdown => break,
+                        Cmd::Score { rows, count, q, reply } => {
+                            let res =
+                                score_padded(&rt, &small.0, small.1, dim, &rows, count, &q);
+                            let _ = reply.send(res);
+                        }
+                        Cmd::ScoreResident { q, reply } => {
+                            let res = (|| -> Result<Vec<f32>> {
+                                let qbuf = rt.upload_f32(&q, &[dim])?;
+                                let mut out = Vec::with_capacity(resident.len() * big.1);
+                                for vbuf in &resident {
+                                    out.extend(rt.execute_buffers(&big.0, &[vbuf, &qbuf])?);
+                                }
+                                Ok(out)
+                            })();
+                            let _ = reply.send(res);
+                        }
+                    }
+                }
+            })?;
+        let loaded = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt engine thread died during init"))??;
+        Ok(Self {
+            tx,
+            handle: Some(handle),
+            label: format!("pjrt[{loaded}]"),
+            resident_rows,
+        })
+    }
+
+    /// Rows preloaded on the device.
+    pub fn resident_rows(&self) -> usize {
+        self.resident_rows
+    }
+}
+
+/// Execute the exact artifact over `count` rows, padding each block to
+/// the artifact's fixed `block` rows.
+fn score_padded(
+    rt: &Runtime,
+    artifact: &str,
+    block: usize,
+    dim: usize,
+    rows: &[f32],
+    count: usize,
+    q: &[f32],
+) -> Result<Vec<f32>> {
+    if q.len() != dim {
+        return Err(anyhow!("query dim {} != artifact dim {dim}", q.len()));
+    }
+    if rows.len() != count * dim {
+        return Err(anyhow!("block shape mismatch"));
+    }
+    let mut out = Vec::with_capacity(count);
+    let mut padded = vec![0f32; block * dim];
+    let mut i = 0usize;
+    while i < count {
+        let take = (count - i).min(block);
+        let src = &rows[i * dim..(i + take) * dim];
+        if take == block {
+            let scores =
+                rt.execute_f32(artifact, &[(src, &[block, dim]), (q, &[dim])])?;
+            out.extend_from_slice(&scores[..take]);
+        } else {
+            padded[..src.len()].copy_from_slice(src);
+            padded[src.len()..].fill(0.0);
+            let scores =
+                rt.execute_f32(artifact, &[(&padded, &[block, dim]), (q, &[dim])])?;
+            out.extend_from_slice(&scores[..take]);
+        }
+        i += take;
+    }
+    Ok(out)
+}
+
+impl ScoringEngine for PjrtEngine {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn score_block(&self, rows: &[f32], count: usize, q: &[f32]) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Score { rows: rows.to_vec(), count, q: q.to_vec(), reply })
+            .map_err(|_| anyhow!("pjrt engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt engine dropped reply"))?
+    }
+
+    fn score_dataset(&self, data: &Matrix, q: &[f32]) -> Result<Vec<f32>> {
+        if self.resident_rows != data.rows() {
+            // Not preloaded (or a different dataset): fall back to the
+            // copying path.
+            let ids: Vec<usize> = (0..data.rows()).collect();
+            return self.score_rows(data, &ids, q);
+        }
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::ScoreResident { q: q.to_vec(), reply })
+            .map_err(|_| anyhow!("pjrt engine thread gone"))?;
+        let mut out = rx.recv().map_err(|_| anyhow!("pjrt engine dropped reply"))??;
+        out.truncate(data.rows());
+        Ok(out)
+    }
+}
+
+impl Drop for PjrtEngine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    #[test]
+    fn native_engine_matches_dot() {
+        let e = NativeEngine;
+        let rows = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let q = [1.0f32, 0.5];
+        let s = e.score_block(&rows, 3, &q).unwrap();
+        assert_eq!(s, vec![2.0, 5.0, 8.0]);
+        assert!(e.score_block(&rows, 2, &q).is_err());
+    }
+
+    #[test]
+    fn score_rows_chunks_correctly() {
+        let mut rng = Rng::new(1);
+        let data = Matrix::from_fn(600, 8, |_, _| rng.gaussian() as f32);
+        let q: Vec<f32> = rng.gaussian_vec(8);
+        let ids: Vec<usize> = (0..600).rev().collect();
+        let got = NativeEngine.score_rows(&data, &ids, &q).unwrap();
+        for (pos, &i) in ids.iter().enumerate() {
+            let expect = dot(data.row(i), &q);
+            assert!((got[pos] - expect).abs() < 1e-5);
+        }
+    }
+}

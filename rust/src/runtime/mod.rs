@@ -1,0 +1,252 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
+//! the Rust hot path.
+//!
+//! The compile path is Python (`python/compile/aot.py` lowers the L2 JAX
+//! model — which calls the L1 Pallas kernel — to **HLO text**); the
+//! serve path is Rust only: [`Runtime`] parses the text with
+//! `HloModuleProto::from_text_file`, compiles it once on the PJRT CPU
+//! client, and [`Runtime::execute_f32`] runs it with concrete buffers.
+//!
+//! HLO *text* (not serialized protos) is the interchange format: jax
+//! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! PJRT objects are not `Send`/`Sync`, so [`engine::PjrtEngine`] wraps a
+//! dedicated owner thread behind a cloneable handle — the coordinator
+//! talks to it through a channel.
+
+pub mod engine;
+
+pub use engine::{NativeEngine, PjrtEngine, ScoringEngine};
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Shape signature of an artifact, parsed from its file name.
+///
+/// Naming convention (produced by `python/compile/aot.py`):
+/// * `exact_b{B}_d{D}.hlo.txt` — inputs `V[B,D] f32, q[D] f32`,
+///   output `(scores[B],)`: exact inner products of a block of `B`
+///   vectors against one query.
+/// * `partial_b{B}_c{C}.hlo.txt` — inputs `V[B,C], q[C]`, output
+///   `(sums[B],)`: one BOUNDEDME pull batch (a `C`-coordinate slab).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArtifactShape {
+    /// Block size `B` (rows per call).
+    pub block: usize,
+    /// Coordinate width (full `D` for exact, chunk `C` for partial).
+    pub width: usize,
+    /// True for `partial_*` artifacts.
+    pub partial: bool,
+}
+
+/// Parse an artifact file name into its shape, if it follows the
+/// convention.
+pub fn parse_artifact_name(name: &str) -> Option<ArtifactShape> {
+    let stem = name.strip_suffix(".hlo.txt").unwrap_or(name);
+    let (kind, rest) = stem.split_once("_b")?;
+    let partial = match kind {
+        "exact" => false,
+        "partial" => true,
+        _ => return None,
+    };
+    let (b_str, w_str) = if partial {
+        rest.split_once("_c")?
+    } else {
+        rest.split_once("_d")?
+    };
+    Some(ArtifactShape {
+        block: b_str.parse().ok()?,
+        width: w_str.parse().ok()?,
+        partial,
+    })
+}
+
+struct LoadedArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    shape: ArtifactShape,
+}
+
+/// A PJRT CPU client plus a cache of compiled artifacts. **Not** `Send`:
+/// keep it on one thread (see [`engine::PjrtEngine`] for the threaded
+/// wrapper).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, LoadedArtifact>,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Self { client, artifacts: HashMap::new() })
+    }
+
+    /// Load and compile one artifact file under the given name.
+    pub fn load_artifact(&mut self, name: &str, path: &Path) -> Result<()> {
+        let shape = parse_artifact_name(
+            path.file_name().and_then(|s| s.to_str()).unwrap_or(name),
+        )
+        .or_else(|| parse_artifact_name(name))
+        .ok_or_else(|| anyhow!("artifact name {name:?} not parseable"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.artifacts.insert(name.to_string(), LoadedArtifact { exe, shape });
+        Ok(())
+    }
+
+    /// Load every `*.hlo.txt` in a directory; returns the number loaded.
+    pub fn load_dir(&mut self, dir: impl AsRef<Path>) -> Result<usize> {
+        let dir = dir.as_ref();
+        let mut count = 0;
+        for entry in
+            std::fs::read_dir(dir).with_context(|| format!("read_dir {dir:?}"))?
+        {
+            let path: PathBuf = entry?.path();
+            let Some(fname) = path.file_name().and_then(|s| s.to_str()) else { continue };
+            if !fname.ends_with(".hlo.txt") {
+                continue;
+            }
+            let name = fname.trim_end_matches(".hlo.txt").to_string();
+            if parse_artifact_name(fname).is_some() {
+                self.load_artifact(&name, &path)?;
+                count += 1;
+            }
+        }
+        Ok(count)
+    }
+
+    /// Names of loaded artifacts.
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Shape of a loaded artifact.
+    pub fn shape_of(&self, name: &str) -> Option<ArtifactShape> {
+        self.artifacts.get(name).map(|a| a.shape)
+    }
+
+    /// Find the exact-scoring artifact whose width equals `dim`, if any
+    /// (largest block wins — best for whole-dataset scans).
+    pub fn find_exact(&self, dim: usize) -> Option<(String, ArtifactShape)> {
+        self.artifacts
+            .iter()
+            .filter(|(_, a)| !a.shape.partial && a.shape.width == dim)
+            .map(|(n, a)| (n.clone(), a.shape))
+            .max_by_key(|(_, s)| s.block)
+    }
+
+    /// Like [`Runtime::find_exact`] but preferring the *smallest* block —
+    /// best for ad-hoc small row batches (less padding waste).
+    pub fn find_exact_min(&self, dim: usize) -> Option<(String, ArtifactShape)> {
+        self.artifacts
+            .iter()
+            .filter(|(_, a)| !a.shape.partial && a.shape.width == dim)
+            .map(|(n, a)| (n.clone(), a.shape))
+            .min_by_key(|(_, s)| s.block)
+    }
+
+    /// Find the partial-scoring artifact with the given chunk width.
+    pub fn find_partial(&self, width: usize) -> Option<(String, ArtifactShape)> {
+        self.artifacts
+            .iter()
+            .filter(|(_, a)| a.shape.partial && a.shape.width == width)
+            .map(|(n, a)| (n.clone(), a.shape))
+            .max_by_key(|(_, s)| s.block)
+    }
+
+    /// Upload an f32 tensor to the device once; the returned buffer can
+    /// be reused across [`Runtime::execute_buffers`] calls (how the
+    /// serving engine keeps the static dataset resident instead of
+    /// re-copying it per query).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .map_err(|e| anyhow!("upload: {e:?}"))
+    }
+
+    /// Execute a loaded artifact over pre-uploaded device buffers.
+    pub fn execute_buffers(
+        &self,
+        name: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<f32>> {
+        let art = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let result = art
+            .exe
+            .execute_b(inputs)
+            .map_err(|e| anyhow!("execute_b {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Execute a loaded artifact with f32 inputs (`(data, dims)` pairs)
+    /// and return the flattened f32 output of its 1-tuple result.
+    pub fn execute_f32(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        let art = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let expected: usize = dims.iter().product();
+            if expected != data.len() {
+                return Err(anyhow!(
+                    "input shape {dims:?} wants {expected} elements, got {}",
+                    data.len()
+                ));
+            }
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims_i64)
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            lits.push(lit);
+        }
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_artifact_names() {
+        assert_eq!(
+            parse_artifact_name("exact_b256_d512.hlo.txt"),
+            Some(ArtifactShape { block: 256, width: 512, partial: false })
+        );
+        assert_eq!(
+            parse_artifact_name("partial_b128_c64.hlo.txt"),
+            Some(ArtifactShape { block: 128, width: 64, partial: true })
+        );
+        assert_eq!(parse_artifact_name("model.hlo.txt"), None);
+        assert_eq!(parse_artifact_name("weird_bX_dY.hlo.txt"), None);
+    }
+
+    #[test]
+    fn bare_names_parse_too() {
+        assert_eq!(
+            parse_artifact_name("exact_b8_d16"),
+            Some(ArtifactShape { block: 8, width: 16, partial: false })
+        );
+    }
+}

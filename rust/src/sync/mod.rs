@@ -1,0 +1,330 @@
+//! Minimal concurrency substrate: a bounded **MPMC channel** built on
+//! `Mutex` + `Condvar`.
+//!
+//! The image's offline crate set has no `crossbeam-channel`/`tokio`, so
+//! the coordinator's router queue and batch distribution run on this
+//! from-scratch channel. Semantics match what the coordinator needs:
+//!
+//! * bounded capacity with non-blocking [`Sender::try_send`]
+//!   (backpressure) and blocking [`Sender::send`];
+//! * multiple consumers ([`Receiver`] is `Clone`) with blocking
+//!   [`Receiver::recv`] and [`Receiver::recv_timeout`];
+//! * disconnect detection: `recv` on a channel whose senders are all
+//!   dropped drains the buffer then errors; sends after all receivers
+//!   drop error.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Error returned by `send`/`try_send`. The rejected value is handed
+/// back to the caller.
+#[derive(PartialEq, Eq)]
+pub enum SendError<T> {
+    /// The channel is full (try_send only).
+    Full(T),
+    /// All receivers are gone.
+    Disconnected(T),
+}
+
+impl<T> std::fmt::Debug for SendError<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Full(_) => write!(f, "SendError::Full(..)"),
+            Self::Disconnected(_) => write!(f, "SendError::Disconnected(..)"),
+        }
+    }
+}
+
+impl<T> std::fmt::Display for SendError<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Full(_) => write!(f, "channel full"),
+            Self::Disconnected(_) => write!(f, "channel disconnected"),
+        }
+    }
+}
+
+impl<T> std::error::Error for SendError<T> {}
+
+/// Error returned by `recv`.
+#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+pub enum RecvError {
+    /// Timed out waiting (recv_timeout only).
+    #[error("recv timeout")]
+    Timeout,
+    /// Buffer empty and all senders gone.
+    #[error("channel disconnected")]
+    Disconnected,
+}
+
+struct State<T> {
+    queue: VecDeque<T>,
+    senders: usize,
+    receivers: usize,
+}
+
+struct Shared<T> {
+    state: Mutex<State<T>>,
+    cap: usize,
+    /// Signaled when items are pushed or senders vanish.
+    not_empty: Condvar,
+    /// Signaled when items are popped or receivers vanish.
+    not_full: Condvar,
+}
+
+/// Producer half (cloneable).
+pub struct Sender<T>(Arc<Shared<T>>);
+
+/// Consumer half (cloneable — MPMC).
+pub struct Receiver<T>(Arc<Shared<T>>);
+
+/// Create a bounded channel with the given capacity (≥ 1).
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    let cap = cap.max(1);
+    let shared = Arc::new(Shared {
+        state: Mutex::new(State { queue: VecDeque::with_capacity(cap), senders: 1, receivers: 1 }),
+        cap,
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+    });
+    (Sender(shared.clone()), Receiver(shared))
+}
+
+impl<T> Sender<T> {
+    /// Non-blocking send; fails fast with `Full` under backpressure.
+    pub fn try_send(&self, value: T) -> Result<(), SendError<T>> {
+        let mut st = self.0.state.lock().unwrap();
+        if st.receivers == 0 {
+            return Err(SendError::Disconnected(value));
+        }
+        if st.queue.len() >= self.0.cap {
+            return Err(SendError::Full(value));
+        }
+        st.queue.push_back(value);
+        drop(st);
+        self.0.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking send; waits for space.
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        let mut st = self.0.state.lock().unwrap();
+        loop {
+            if st.receivers == 0 {
+                return Err(SendError::Disconnected(value));
+            }
+            if st.queue.len() < self.0.cap {
+                st.queue.push_back(value);
+                drop(st);
+                self.0.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.0.not_full.wait(st).unwrap();
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; drains remaining items after senders disconnect,
+    /// then errors.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut st = self.0.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.queue.pop_front() {
+                drop(st);
+                self.0.not_full.notify_one();
+                return Ok(v);
+            }
+            if st.senders == 0 {
+                return Err(RecvError::Disconnected);
+            }
+            st = self.0.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Receive with a deadline.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvError> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.0.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.queue.pop_front() {
+                drop(st);
+                self.0.not_full.notify_one();
+                return Ok(v);
+            }
+            if st.senders == 0 {
+                return Err(RecvError::Disconnected);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvError::Timeout);
+            }
+            let (guard, res) = self.0.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+            if res.timed_out() && st.queue.is_empty() {
+                if st.senders == 0 {
+                    return Err(RecvError::Disconnected);
+                }
+                return Err(RecvError::Timeout);
+            }
+        }
+    }
+
+    /// Number of queued items right now (diagnostics only).
+    pub fn len(&self) -> usize {
+        self.0.state.lock().unwrap().queue.len()
+    }
+
+    /// True when no items are queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.0.state.lock().unwrap().senders += 1;
+        Sender(self.0.clone())
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.0.state.lock().unwrap().receivers += 1;
+        Receiver(self.0.clone())
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.0.state.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            drop(st);
+            self.0.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.0.state.lock().unwrap();
+        st.receivers -= 1;
+        if st.receivers == 0 {
+            drop(st);
+            self.0.not_full.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let (tx, rx) = bounded(4);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(rx.recv().unwrap(), 2);
+    }
+
+    #[test]
+    fn try_send_backpressure() {
+        let (tx, rx) = bounded(2);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        assert_eq!(tx.try_send(3), Err(SendError::Full(3)));
+        rx.recv().unwrap();
+        tx.try_send(3).unwrap();
+    }
+
+    #[test]
+    fn disconnect_on_sender_drop_after_drain() {
+        let (tx, rx) = bounded(4);
+        tx.send(7).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv().unwrap(), 7);
+        assert_eq!(rx.recv(), Err(RecvError::Disconnected));
+    }
+
+    #[test]
+    fn disconnect_on_receiver_drop() {
+        let (tx, rx) = bounded::<i32>(1);
+        drop(rx);
+        assert_eq!(tx.send(1), Err(SendError::Disconnected(1)));
+        assert_eq!(tx.try_send(2), Err(SendError::Disconnected(2)));
+    }
+
+    #[test]
+    fn recv_timeout_fires() {
+        let (_tx, rx) = bounded::<i32>(1);
+        let t0 = Instant::now();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(20)), Err(RecvError::Timeout));
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn blocking_send_unblocks_on_recv() {
+        let (tx, rx) = bounded(1);
+        tx.send(1).unwrap();
+        let h = thread::spawn(move || tx.send(2));
+        thread::sleep(Duration::from_millis(10));
+        assert_eq!(rx.recv().unwrap(), 1);
+        h.join().unwrap().unwrap();
+        assert_eq!(rx.recv().unwrap(), 2);
+    }
+
+    #[test]
+    fn mpmc_conservation() {
+        // 4 producers × 250 items, 3 consumers: every item delivered
+        // exactly once.
+        let (tx, rx) = bounded(16);
+        let mut producers = Vec::new();
+        for p in 0..4 {
+            let tx = tx.clone();
+            producers.push(thread::spawn(move || {
+                for i in 0..250 {
+                    tx.send(p * 1000 + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let rx = rx.clone();
+            consumers.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Ok(v) = rx.recv() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        drop(rx);
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut all: Vec<i32> = Vec::new();
+        for c in consumers {
+            all.extend(c.join().unwrap());
+        }
+        all.sort_unstable();
+        let mut expect: Vec<i32> =
+            (0..4).flat_map(|p| (0..250).map(move |i| p * 1000 + i)).collect();
+        expect.sort_unstable();
+        assert_eq!(all, expect);
+    }
+
+    #[test]
+    fn len_reports_queue_depth() {
+        let (tx, rx) = bounded(8);
+        assert!(rx.is_empty());
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert_eq!(rx.len(), 2);
+    }
+}

@@ -1,0 +1,170 @@
+//! Edge-case and failure-injection tests across the public API: zero
+//! queries, degenerate datasets, extreme K, and pathological knob
+//! settings must never panic and must return well-formed results.
+
+use bandit_mips::algos::{
+    BoundedMeIndex, GreedyMipsIndex, LshMipsIndex, MipsIndex, MipsParams, NaiveIndex,
+    PcaMipsIndex, RptMipsIndex,
+};
+use bandit_mips::bandit::{BoundedMe, BoundedMeConfig, ExplicitArms};
+use bandit_mips::data::synthetic::{gaussian_dataset, spiky_dataset};
+use bandit_mips::linalg::{Matrix, Rng};
+
+fn indexes(data: &Matrix) -> Vec<Box<dyn MipsIndex>> {
+    vec![
+        Box::new(NaiveIndex::new(data.clone())),
+        Box::new(BoundedMeIndex::new(data.clone())),
+        Box::new(GreedyMipsIndex::new(data.clone(), data.rows() / 2 + 1)),
+        Box::new(LshMipsIndex::new(data.clone(), 4, 4, 1)),
+        Box::new(PcaMipsIndex::new(data.clone(), 2, 1)),
+        Box::new(RptMipsIndex::new(data.clone(), 2, 8, 1)),
+    ]
+}
+
+#[test]
+fn zero_query_never_panics() {
+    let ds = gaussian_dataset(50, 32, 1);
+    let q = vec![0.0f32; 32];
+    for idx in indexes(&ds.vectors) {
+        let res = idx.query(&q, &MipsParams { k: 3, ..Default::default() });
+        assert!(res.indices.len() <= 3, "{}", idx.name());
+        assert_eq!(res.indices.len(), res.scores.len(), "{}", idx.name());
+    }
+}
+
+#[test]
+fn k_larger_than_n_is_safe() {
+    let ds = gaussian_dataset(6, 16, 2);
+    let q = ds.sample_query(1);
+    for idx in indexes(&ds.vectors) {
+        let res = idx.query(&q, &MipsParams { k: 100, ..Default::default() });
+        assert!(res.indices.len() <= 6, "{}", idx.name());
+        // No duplicates.
+        let mut s = res.indices.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), res.indices.len(), "{}", idx.name());
+    }
+}
+
+#[test]
+fn single_vector_dataset() {
+    let data = Matrix::from_rows(&[vec![1.0f32, -2.0, 3.0]]);
+    let q = [1.0f32, 1.0, 1.0];
+    for idx in indexes(&data) {
+        let res = idx.query(&q, &MipsParams { k: 1, ..Default::default() });
+        if !res.indices.is_empty() {
+            assert_eq!(res.indices, vec![0], "{}", idx.name());
+        }
+    }
+}
+
+#[test]
+fn k_zero_clamped() {
+    let ds = gaussian_dataset(20, 8, 3);
+    let q = ds.sample_query(0);
+    let bme = BoundedMeIndex::new(ds.vectors.clone());
+    let res = bme.query(&q, &MipsParams { k: 0, epsilon: 0.2, delta: 0.2, seed: 0 });
+    assert_eq!(res.indices.len(), 1); // clamped to K=1
+    let naive = NaiveIndex::new(ds.vectors.clone());
+    let res = naive.query(&q, &MipsParams { k: 0, ..Default::default() });
+    assert!(res.indices.is_empty());
+}
+
+#[test]
+fn constant_dataset_all_algorithms() {
+    // All vectors identical: any returned set is "correct"; nothing may
+    // panic (PCA rank-deficiency, LSH single bucket, ties everywhere).
+    let data = Matrix::from_rows(&vec![vec![0.5f32; 12]; 40]);
+    let q = [1.0f32; 12];
+    for idx in indexes(&data) {
+        let res = idx.query(&q, &MipsParams { k: 4, epsilon: 0.3, delta: 0.2, seed: 0 });
+        assert!(res.indices.len() <= 4, "{}", idx.name());
+        for &s in &res.scores {
+            assert!(s.is_finite(), "{}", idx.name());
+        }
+    }
+}
+
+#[test]
+fn spiky_dataset_greedy_note() {
+    // The Table-1 note: when the largest coordinate of q^T v is identical
+    // for all v, GREEDY's screening is uninformative at tiny budgets,
+    // while BoundedME's guarantee is distribution-free.
+    let ds = spiky_dataset(200, 32, 10, 5);
+    let q = ds.sample_query(3);
+    let truth = bandit_mips::algos::ground_truth(&ds.vectors, &q, 5);
+
+    let bme = BoundedMeIndex::new(ds.vectors.clone());
+    let res = bme.query(&q, &MipsParams { k: 5, epsilon: 1e-9, delta: 0.05, seed: 1 });
+    let mut got = res.indices.clone();
+    got.sort_unstable();
+    let mut want = truth.clone();
+    want.sort_unstable();
+    assert_eq!(got, want, "BoundedME exact mode must recover truth on spiky data");
+}
+
+#[test]
+fn extreme_epsilon_delta_values() {
+    let ds = gaussian_dataset(30, 64, 7);
+    let idx = BoundedMeIndex::new(ds.vectors.clone());
+    let q = ds.sample_query(2);
+    for (eps, delta) in [(1e-300, 0.5), (0.999, 1e-300), (0.999, 0.999), (1e-300, 1e-300)]
+    {
+        let res = idx.query(&q, &MipsParams { k: 2, epsilon: eps, delta, seed: 0 });
+        assert_eq!(res.indices.len(), 2, "eps={eps} delta={delta}");
+        assert!(res.flops <= 30 * 64);
+    }
+}
+
+#[test]
+fn bounded_me_k_equals_n_minus_one() {
+    // drop = ⌈1/2⌉ = 1 arm per round: the slowest elimination schedule.
+    let lists: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64 / 10.0; 20]).collect();
+    let env = ExplicitArms::new(lists).with_range(0.0, 1.0);
+    let out = BoundedMe::new(BoundedMeConfig { k: 9, epsilon: 0.1, delta: 0.1 }).run(&env);
+    assert_eq!(out.result.arms.len(), 9);
+    assert_eq!(out.result.rounds, 1);
+    assert!(!out.result.arms.contains(&0), "worst arm must be eliminated");
+}
+
+#[test]
+fn huge_value_dataset_no_overflow() {
+    let mut rng = Rng::new(9);
+    let data = Matrix::from_fn(20, 16, |_, _| rng.gaussian() as f32 * 1e18);
+    let q: Vec<f32> = (0..16).map(|_| rng.gaussian() as f32 * 1e18).collect();
+    let idx = BoundedMeIndex::new(data.clone());
+    let res = idx.query(&q, &MipsParams { k: 2, epsilon: 0.3, delta: 0.2, seed: 0 });
+    assert_eq!(res.indices.len(), 2);
+    // Scores may be ±inf in f32 after N·(1e36) sums, but must not be NaN
+    // in the *selection* path (ordering stays total).
+    let naive = NaiveIndex::new(data);
+    let res2 = naive.query(&q, &MipsParams { k: 2, ..Default::default() });
+    assert_eq!(res2.indices.len(), 2);
+}
+
+#[test]
+fn greedy_budget_one() {
+    let ds = gaussian_dataset(100, 16, 11);
+    let idx = GreedyMipsIndex::new(ds.vectors.clone(), 1);
+    let q = ds.sample_query(4);
+    let res = idx.query(&q, &MipsParams { k: 5, ..Default::default() });
+    assert_eq!(res.candidates, 1);
+    assert_eq!(res.indices.len(), 1);
+}
+
+#[test]
+fn query_determinism_given_seed() {
+    let ds = gaussian_dataset(120, 64, 13);
+    let idx = BoundedMeIndex::new(ds.vectors.clone());
+    let q = ds.sample_query(5);
+    let p = MipsParams { k: 3, epsilon: 0.3, delta: 0.2, seed: 77 };
+    let a = idx.query(&q, &p);
+    let b = idx.query(&q, &p);
+    assert_eq!(a.indices, b.indices);
+    assert_eq!(a.flops, b.flops);
+    let c = idx.query(&q, &MipsParams { seed: 78, ..p });
+    // Different pull order may change flops; result set should usually
+    // match but is not guaranteed — only check well-formedness.
+    assert_eq!(c.indices.len(), 3);
+}

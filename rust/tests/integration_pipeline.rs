@@ -1,0 +1,166 @@
+//! Integration: dataset → algorithms → metrics → coordinator, composed
+//! the way the examples use them.
+
+use bandit_mips::algos::{
+    ground_truth, BoundedMeIndex, GreedyMipsIndex, LshMipsIndex, MipsIndex, MipsParams,
+    NaiveIndex, PcaMipsIndex, RptMipsIndex,
+};
+use bandit_mips::coordinator::{
+    Backend, Coordinator, CoordinatorConfig, QueryRequest,
+};
+use bandit_mips::data::{io as dio, mf, synthetic, workload};
+use bandit_mips::metrics::{precision_at_k, suboptimality};
+use std::time::Duration;
+
+#[test]
+fn all_indexes_agree_at_full_accuracy() {
+    let ds = synthetic::gaussian_dataset(300, 128, 1);
+    let q = ds.sample_query(5);
+    let truth = ground_truth(&ds.vectors, &q, 5);
+
+    // Exact-configured variants of every index must return the truth.
+    let naive = NaiveIndex::new(ds.vectors.clone());
+    let bme = BoundedMeIndex::new(ds.vectors.clone());
+    let greedy = GreedyMipsIndex::new(ds.vectors.clone(), 300);
+
+    let p = MipsParams { k: 5, epsilon: 1e-12, delta: 0.05, seed: 3 };
+    assert_eq!(naive.query(&q, &p).indices, truth);
+    assert_eq!(greedy.query(&q, &p).indices, truth);
+    let mut got = bme.query(&q, &p).indices;
+    got.sort_unstable();
+    let mut want = truth.clone();
+    want.sort_unstable();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn precision_improves_with_budget_for_every_algorithm() {
+    let ds = synthetic::gaussian_dataset(400, 96, 2);
+    let queries = ds.sample_queries(8, 7);
+    let truths: Vec<Vec<usize>> =
+        queries.iter().map(|q| ground_truth(&ds.vectors, q, 5)).collect();
+
+    let mean_precision = |idx: &dyn MipsIndex, eps: f64| -> f64 {
+        queries
+            .iter()
+            .zip(&truths)
+            .map(|(q, t)| {
+                let p = MipsParams { k: 5, epsilon: eps, delta: 0.1, seed: 1 };
+                precision_at_k(t, &idx.query(q, &p).indices)
+            })
+            .sum::<f64>()
+            / queries.len() as f64
+    };
+
+    let bme = BoundedMeIndex::new(ds.vectors.clone());
+    assert!(mean_precision(&bme, 0.001) >= mean_precision(&bme, 0.8) - 1e-9);
+
+    let g_small = GreedyMipsIndex::new(ds.vectors.clone(), 20);
+    let g_big = GreedyMipsIndex::new(ds.vectors.clone(), 400);
+    assert!(mean_precision(&g_big, 0.0) >= mean_precision(&g_small, 0.0) - 1e-9);
+
+    let lsh_coarse = LshMipsIndex::new(ds.vectors.clone(), 14, 2, 3);
+    let lsh_fine = LshMipsIndex::new(ds.vectors.clone(), 4, 16, 3);
+    assert!(mean_precision(&lsh_fine, 0.0) >= mean_precision(&lsh_coarse, 0.0) - 1e-9);
+
+    let pca_deep = PcaMipsIndex::new(ds.vectors.clone(), 6, 4);
+    let pca_shallow = PcaMipsIndex::new(ds.vectors.clone(), 1, 4);
+    assert!(mean_precision(&pca_shallow, 0.0) >= mean_precision(&pca_deep, 0.0) - 1e-9);
+
+    let rpt_many = RptMipsIndex::new(ds.vectors.clone(), 10, 40, 5);
+    let rpt_one = RptMipsIndex::new(ds.vectors.clone(), 1, 40, 5);
+    assert!(mean_precision(&rpt_many, 0.0) >= mean_precision(&rpt_one, 0.0) - 1e-9);
+}
+
+#[test]
+fn suboptimality_respects_epsilon_statistically() {
+    // Over several queries, BOUNDEDME's observed suboptimality (relative
+    // to reward range) must be ≤ ε at well above 1−δ rate.
+    let ds = synthetic::uniform_dataset(300, 256, 4);
+    let idx = BoundedMeIndex::new(ds.vectors.clone());
+    let (eps, delta) = (0.05, 0.1);
+    let mut failures = 0;
+    let trials = 20;
+    for s in 0..trials {
+        let q = ds.sample_query(s as u64);
+        let truth = ground_truth(&ds.vectors, &q, 1);
+        let res =
+            idx.query(&q, &MipsParams { k: 1, epsilon: eps, delta, seed: s as u64 });
+        let sub = suboptimality(&ds.vectors, &q, &truth, &res.indices);
+        // Range-relative comparison (same bound the index uses).
+        let range = 2.0 * idx.reward_bound(&q) as f64;
+        if sub > eps * range {
+            failures += 1;
+        }
+    }
+    assert!(failures <= 2, "{failures}/{trials} exceeded ε");
+}
+
+#[test]
+fn mf_dataset_through_full_stack() {
+    let mfd = mf::netflix_like(120, 256, 9);
+    let ds = &mfd.dataset;
+    let idx = BoundedMeIndex::new(ds.vectors.clone());
+    let q = &mfd.user_queries[3];
+    let res = idx.query(q, &MipsParams { k: 5, epsilon: 1e-12, delta: 0.05, seed: 0 });
+    let mut got = res.indices.clone();
+    got.sort_unstable();
+    let mut want = ground_truth(&ds.vectors, q, 5);
+    want.sort_unstable();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn dataset_io_roundtrip_through_index() {
+    let ds = synthetic::gaussian_dataset(64, 32, 11);
+    let path = std::env::temp_dir().join("bm_pipeline_io.bin");
+    dio::save(&ds, &path).unwrap();
+    let loaded = dio::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let q = ds.sample_query(1);
+    let a = NaiveIndex::new(ds.vectors.clone())
+        .query(&q, &MipsParams { k: 3, ..Default::default() });
+    let b = NaiveIndex::new(loaded.vectors.clone())
+        .query(&q, &MipsParams { k: 3, ..Default::default() });
+    assert_eq!(a.indices, b.indices);
+}
+
+#[test]
+fn coordinator_replays_poisson_trace() {
+    let ds = synthetic::gaussian_dataset(256, 64, 13);
+    let coord = Coordinator::new(
+        ds.vectors.clone(),
+        CoordinatorConfig {
+            workers: 2,
+            max_batch: 16,
+            batch_timeout: Duration::from_millis(1),
+            queue_capacity: 4096,
+            backend: Backend::Native,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let trace = workload::poisson_trace(
+        &ds,
+        &workload::WorkloadConfig { count: 200, rate: 1e6, ..Default::default() },
+    );
+    let mut rxs = Vec::new();
+    for t in &trace {
+        rxs.push(
+            coord
+                .submit(QueryRequest::bounded_me(t.vector.clone(), t.k, t.epsilon, t.delta))
+                .unwrap(),
+        );
+    }
+    let mut served = 0;
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.indices.len(), 10);
+        served += 1;
+    }
+    assert_eq!(served, 200);
+    let m = coord.metrics();
+    assert_eq!(m.queries, 200);
+    assert!(m.flops > 0);
+    coord.shutdown();
+}

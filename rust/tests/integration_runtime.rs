@@ -1,0 +1,104 @@
+//! Integration: the rust PJRT runtime executes the python-AOT'd HLO
+//! artifacts and matches the native engine bit-for-tolerance.
+//!
+//! Requires `make artifacts` to have run (skips politely otherwise so
+//! `cargo test` stays green on a fresh checkout).
+
+use bandit_mips::linalg::{Matrix, Rng};
+use bandit_mips::runtime::{NativeEngine, PjrtEngine, Runtime, ScoringEngine};
+use std::path::{Path, PathBuf};
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("exact_b256_d512.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn runtime_loads_all_artifacts() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::cpu().expect("pjrt cpu client");
+    let n = rt.load_dir(&dir).expect("load artifacts");
+    assert!(n >= 3, "expected ≥3 artifacts, loaded {n}");
+    assert!(rt.find_exact(512).is_some());
+    assert!(rt.find_exact(4096).is_some());
+    assert!(rt.find_partial(256).is_some());
+}
+
+#[test]
+fn exact_artifact_matches_native_dot() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::cpu().unwrap();
+    rt.load_dir(&dir).unwrap();
+    // Smallest-block artifact for ad-hoc batches; the largest serves
+    // resident whole-dataset scans.
+    let (name, shape) = rt.find_exact_min(512).unwrap();
+    assert_eq!(shape.block, 256);
+    assert!(rt.find_exact(512).unwrap().1.block >= shape.block);
+
+    let mut rng = Rng::new(7);
+    let v: Vec<f32> = (0..256 * 512).map(|_| rng.gaussian() as f32).collect();
+    let q: Vec<f32> = rng.gaussian_vec(512);
+    let got = rt.execute_f32(&name, &[(&v, &[256, 512]), (&q, &[512])]).unwrap();
+    assert_eq!(got.len(), 256);
+    for i in 0..256 {
+        let want = bandit_mips::linalg::dot(&v[i * 512..(i + 1) * 512], &q);
+        assert!(
+            (got[i] - want).abs() <= 1e-2 + want.abs() * 1e-4,
+            "row {i}: pjrt {} vs native {want}",
+            got[i]
+        );
+    }
+}
+
+#[test]
+fn partial_artifact_matches_native() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::cpu().unwrap();
+    rt.load_dir(&dir).unwrap();
+    let (name, shape) = rt.find_partial(256).unwrap();
+    let (b, c) = (shape.block, shape.width);
+
+    let mut rng = Rng::new(9);
+    let v: Vec<f32> = (0..b * c).map(|_| rng.gaussian() as f32).collect();
+    let q: Vec<f32> = rng.gaussian_vec(c);
+    let got = rt.execute_f32(&name, &[(&v, &[b, c]), (&q, &[c])]).unwrap();
+    for i in 0..b {
+        let want = bandit_mips::linalg::dot(&v[i * c..(i + 1) * c], &q);
+        assert!((got[i] - want).abs() <= 1e-2 + want.abs() * 1e-4, "row {i}");
+    }
+}
+
+#[test]
+fn pjrt_engine_pads_odd_blocks() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = PjrtEngine::new(dir, 512).expect("engine");
+    let mut rng = Rng::new(11);
+    // 300 rows: one full 256-block + padded 44-block.
+    let data = Matrix::from_fn(300, 512, |_, _| rng.gaussian() as f32);
+    let q: Vec<f32> = rng.gaussian_vec(512);
+    let ids: Vec<usize> = (0..300).collect();
+    let pjrt = engine.score_rows(&data, &ids, &q).unwrap();
+    let native = NativeEngine.score_rows(&data, &ids, &q).unwrap();
+    assert_eq!(pjrt.len(), native.len());
+    for i in 0..300 {
+        assert!(
+            (pjrt[i] - native[i]).abs() <= 1e-2 + native[i].abs() * 1e-4,
+            "row {i}: {} vs {}",
+            pjrt[i],
+            native[i]
+        );
+    }
+}
+
+#[test]
+fn engine_rejects_wrong_dim() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = PjrtEngine::new(dir, 512).unwrap();
+    let err = engine.score_block(&[0.0; 100], 1, &[0.0; 100]);
+    assert!(err.is_err());
+}

@@ -1,0 +1,230 @@
+//! Randomized property tests over the DESIGN.md §5 invariants.
+//!
+//! proptest is unavailable offline, so these drive the crate's own
+//! deterministic RNG through many random instances per property —
+//! failures print the offending seed for replay.
+
+use bandit_mips::bandit::{
+    hoeffding_sample_size, m_bounded, serfling_radius, AdversarialArms, BoundedMe,
+    BoundedMeConfig, ExplicitArms, MatrixArms, PullOrder, RewardSource,
+};
+use bandit_mips::linalg::{topk::arg_top_k, Matrix, Rng};
+
+const CASES: usize = 60;
+
+/// m(u) ∈ [1, N], monotone: smaller ε / δ ⇒ more pulls; → N as ε → 0.
+#[test]
+fn prop_m_bounded_within_list_and_monotone() {
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..CASES {
+        let n_list = 2 + rng.next_below(1_000_000);
+        let eps = rng.uniform(1e-4, 0.9);
+        let delta = rng.uniform(1e-4, 0.9);
+        let range = rng.uniform(0.1, 50.0);
+        let m = m_bounded(eps, delta, n_list, range);
+        assert!((1..=n_list).contains(&m), "case {case}: m={m} N={n_list}");
+        let m_tighter_eps = m_bounded(eps * 0.5, delta, n_list, range);
+        assert!(m_tighter_eps >= m, "case {case}: ε-monotonicity");
+        let m_tighter_delta = m_bounded(eps, delta * 0.5, n_list, range);
+        assert!(m_tighter_delta >= m, "case {case}: δ-monotonicity");
+        assert_eq!(m_bounded(0.0, delta, n_list, range), n_list, "case {case}");
+        // Never worse than Hoeffding.
+        assert!(
+            m <= hoeffding_sample_size(eps, delta, range).max(1),
+            "case {case}: m exceeds Hoeffding"
+        );
+    }
+}
+
+/// Serfling radius ∈ [0, ∞), 0 at m=N, decreasing in m.
+#[test]
+fn prop_serfling_radius_shrinks_to_zero() {
+    let mut rng = Rng::new(0xBEE5);
+    for case in 0..CASES {
+        let n_list = 10 + rng.next_below(10_000);
+        let delta = rng.uniform(1e-3, 0.5);
+        let range = rng.uniform(0.1, 10.0);
+        let mut prev = f64::INFINITY;
+        let steps = 8;
+        for s in 1..=steps {
+            let m = (n_list * s) / steps;
+            let r = serfling_radius(m.max(1), n_list, delta, range);
+            assert!(r >= 0.0 && r <= prev + 1e-12, "case {case} step {s}: {r} > {prev}");
+            prev = r;
+        }
+        assert_eq!(serfling_radius(n_list, n_list, delta, range), 0.0);
+    }
+}
+
+/// BOUNDEDME structural invariants on random instances: exactly K
+/// distinct arms, per-arm pulls ≤ N, total ≤ n·N, and exact recovery as
+/// ε → 0.
+#[test]
+fn prop_bounded_me_structure() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..30 {
+        let n = 2 + rng.next_below(80);
+        let n_list = 2 + rng.next_below(200);
+        let k = 1 + rng.next_below(n.min(8));
+        let lists: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..n_list).map(|_| rng.next_f64()).collect())
+            .collect();
+        let env = ExplicitArms::new(lists).with_range(0.0, 1.0);
+        let eps = rng.uniform(1e-9, 0.5);
+        let delta = rng.uniform(0.01, 0.4);
+        let out = BoundedMe::new(BoundedMeConfig { k, epsilon: eps, delta }).run(&env);
+
+        assert_eq!(out.result.arms.len(), k.min(n), "case {case}");
+        let mut sorted = out.result.arms.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), k.min(n), "case {case}: duplicates");
+        assert!(out.result.total_pulls <= (n * n_list) as u64, "case {case}");
+        for t in &out.trace {
+            assert!(t.t_l <= n_list, "case {case}: t_l > N");
+        }
+    }
+}
+
+/// ε → 0 forces exact top-K on any instance (elimination on true means).
+#[test]
+fn prop_bounded_me_exact_at_zero_epsilon() {
+    let mut rng = Rng::new(0xDEAD);
+    for case in 0..20 {
+        let n = 5 + rng.next_below(60);
+        let n_list = 5 + rng.next_below(100);
+        let k = 1 + rng.next_below(4.min(n));
+        let lists: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..n_list).map(|_| rng.next_f64()).collect())
+            .collect();
+        let env = ExplicitArms::new(lists).with_range(0.0, 1.0);
+        let out =
+            BoundedMe::new(BoundedMeConfig { k, epsilon: 1e-12, delta: 0.05 }).run(&env);
+        let mut truth: Vec<usize> = (0..n).collect();
+        truth.sort_by(|&a, &b| {
+            env.true_mean(b).partial_cmp(&env.true_mean(a)).unwrap()
+        });
+        truth.truncate(k);
+        let mut got = out.result.arms.clone();
+        got.sort_unstable();
+        truth.sort_unstable();
+        assert_eq!(got, truth, "case {case}");
+    }
+}
+
+/// Sampling without replacement: the full pull equals the exact sum for
+/// every pull order, and disjoint ranges compose.
+#[test]
+fn prop_matrix_arms_pull_composition() {
+    let mut rng = Rng::new(0xFEED);
+    for case in 0..CASES {
+        let n = 1 + rng.next_below(20);
+        let d = 2 + rng.next_below(100);
+        let data = Matrix::from_fn(n, d, |_, _| rng.gaussian() as f32);
+        let q: Vec<f32> = rng.gaussian_vec(d);
+        let (lo, hi) = data.min_max();
+        let max_abs = lo.abs().max(hi.abs()).max(1e-9);
+        let order = match case % 3 {
+            0 => PullOrder::Permuted,
+            1 => PullOrder::Sequential,
+            _ => PullOrder::BlockShuffled(1 + rng.next_below(16)),
+        };
+        let arms = MatrixArms::new(&data, &q, max_abs, order, case as u64);
+        let arm = rng.next_below(n);
+        let full = arms.pull_range(arm, 0, d);
+        let exact = bandit_mips::linalg::dot(data.row(arm), &q) as f64;
+        assert!(
+            (full - exact).abs() < 1e-3 * (1.0 + exact.abs()),
+            "case {case}: {full} vs {exact}"
+        );
+        let cut = rng.next_below(d);
+        let split = arms.pull_range(arm, 0, cut) + arms.pull_range(arm, cut, d);
+        assert!((split - full).abs() < 1e-3 * (1.0 + full.abs()), "case {case}");
+    }
+}
+
+/// Adversarial arms: empirical mean after m pulls over-estimates the true
+/// mean (1s first), and equals it exactly at m = N.
+#[test]
+fn prop_adversarial_prefix_bias() {
+    let mut rng = Rng::new(0x5EED);
+    for case in 0..CASES {
+        let n_list = 10 + rng.next_below(500);
+        let env = AdversarialArms::generate(5, n_list, case as u64);
+        for arm in 0..5 {
+            let m = 1 + rng.next_below(n_list);
+            let emp = env.pull_range(arm, 0, m) / m as f64;
+            let truth = env.true_mean(arm);
+            assert!(emp >= truth - 1e-12, "case {case}: prefix under-estimates");
+            let full = env.pull_range(arm, 0, n_list) / n_list as f64;
+            assert!((full - truth).abs() < 1e-12, "case {case}");
+        }
+    }
+}
+
+/// TopK matches a full sort for random scores (ties included).
+#[test]
+fn prop_topk_matches_sort() {
+    let mut rng = Rng::new(0x70D0);
+    for case in 0..CASES {
+        let n = 1 + rng.next_below(500);
+        let k = 1 + rng.next_below(32);
+        // Quantized scores to force ties.
+        let scores: Vec<f32> =
+            (0..n).map(|_| (rng.next_f64() * 8.0).floor() as f32).collect();
+        let got = arg_top_k(&scores, k);
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| {
+            scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b))
+        });
+        idx.truncate(k.min(n));
+        assert_eq!(got, idx, "case {case}");
+    }
+}
+
+/// Channel conservation under random producer/consumer interleavings.
+#[test]
+fn prop_channel_conservation() {
+    use bandit_mips::sync::bounded;
+    let mut rng = Rng::new(0xCAB);
+    for case in 0..10 {
+        let cap = 1 + rng.next_below(8);
+        let producers = 1 + rng.next_below(4);
+        let consumers = 1 + rng.next_below(4);
+        let per = 50 + rng.next_below(100);
+        let (tx, rx) = bounded::<usize>(cap);
+        let mut ps = Vec::new();
+        for p in 0..producers {
+            let tx = tx.clone();
+            ps.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    tx.send(p * 10_000 + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let mut cs = Vec::new();
+        for _ in 0..consumers {
+            let rx = rx.clone();
+            cs.push(std::thread::spawn(move || {
+                let mut v = Vec::new();
+                while let Ok(x) = rx.recv() {
+                    v.push(x);
+                }
+                v
+            }));
+        }
+        drop(rx);
+        for p in ps {
+            p.join().unwrap();
+        }
+        let mut all: Vec<usize> = Vec::new();
+        for c in cs {
+            all.extend(c.join().unwrap());
+        }
+        assert_eq!(all.len(), producers * per, "case {case}: loss or duplication");
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), producers * per, "case {case}: duplicates");
+    }
+}
