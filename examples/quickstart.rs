@@ -3,7 +3,10 @@
 //! Generates a synthetic dataset, answers one MIPS query exactly, then
 //! answers it with BOUNDEDME at three different (ε, δ) settings to show
 //! the paper's accuracy/cost knob — no preprocessing, bounded
-//! suboptimality, flops always ≤ exhaustive.
+//! suboptimality, flops always ≤ exhaustive. All queries run through a
+//! reusable `QueryContext` (the zero-allocation serving path), and the
+//! `QueryPlan` shows which algorithm the planner would route each knob
+//! setting to.
 //!
 //! ```text
 //! cargo run --release --example quickstart [-- --n 2000 --dim 4096]
@@ -12,6 +15,7 @@
 use bandit_mips::algos::{ground_truth, BoundedMeIndex, MipsIndex, MipsParams};
 use bandit_mips::cli::Args;
 use bandit_mips::data::synthetic::gaussian_dataset;
+use bandit_mips::exec::{QueryContext, QueryPlan};
 use bandit_mips::metrics::precision_at_k;
 
 fn main() {
@@ -33,19 +37,25 @@ fn main() {
     let naive_flops = (n * dim) as u64;
     println!("naive:      {truth:?}  ({naive_flops} flops, {naive_time:?})\n");
 
-    // BOUNDEDME: zero preprocessing, per-query knob.
+    // BOUNDEDME: zero preprocessing, per-query knob. One QueryContext
+    // serves every query — scratch buffers warm up once, after which
+    // the hot path allocates nothing per query.
     let index = BoundedMeIndex::new(ds.vectors.clone());
+    let mut ctx = QueryContext::new();
     for (eps, delta) in [(0.3, 0.2), (0.05, 0.1), (0.005, 0.05)] {
+        let plan = QueryPlan::pick(k, eps, delta, dim);
         let t0 = std::time::Instant::now();
-        let res = index.query(&q, &MipsParams { k, epsilon: eps, delta, seed: 1 });
+        let res =
+            index.query_with(&q, &MipsParams { k, epsilon: eps, delta, seed: 1 }, &mut ctx);
         let dt = t0.elapsed();
         println!(
             "BoundedME(ε={eps}, δ={delta}): {:?}\n  precision {:.2}, {} flops \
-             ({:.1}× fewer than naive), {dt:?}",
+             ({:.1}× fewer than naive), {dt:?}, plan={:?}",
             res.indices,
             precision_at_k(&truth, &res.indices),
             res.flops,
-            naive_flops as f64 / res.flops as f64
+            naive_flops as f64 / res.flops as f64,
+            plan.algo,
         );
     }
 

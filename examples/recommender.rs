@@ -16,6 +16,7 @@ use bandit_mips::algos::{
 };
 use bandit_mips::cli::Args;
 use bandit_mips::data::mf;
+use bandit_mips::exec::QueryContext;
 use bandit_mips::metrics::precision_at_k;
 use std::time::Instant;
 
@@ -46,6 +47,9 @@ fn main() {
     );
 
     let naive_flops = (mfd.dataset.n() * mfd.dataset.dim()) as f64;
+    // One reusable context for the whole serving loop (the hot-path
+    // pattern: scratch warms up once, then queries are allocation-free).
+    let mut ctx = QueryContext::new();
     println!(
         "{:<8} {:<12} {:>10} {:>12} {:>10}",
         "user", "algo", "precision", "flops", "speedup"
@@ -54,12 +58,13 @@ fn main() {
         let q = &mfd.user_queries[user * 11 % mfd.user_queries.len()];
         let truth = ground_truth(&mfd.dataset.vectors, q, k);
         for (algo, res) in [
-            ("naive", naive.query(q, &MipsParams { k, ..Default::default() })),
+            ("naive", naive.query_with(q, &MipsParams { k, ..Default::default() }, &mut ctx)),
             (
                 "BoundedME",
-                bme.query(
+                bme.query_with(
                     q,
                     &MipsParams { k, epsilon: 0.03, delta: 0.1, seed: user as u64 },
+                    &mut ctx,
                 ),
             ),
             ("Greedy", greedy.query(q, &MipsParams { k, ..Default::default() })),
@@ -88,7 +93,7 @@ fn main() {
         let t0 = Instant::now();
         let idx = BoundedMeIndex::new(fresh.dataset.vectors.clone());
         let q = &fresh.user_queries[0];
-        let _ = idx.query(q, &MipsParams { k, epsilon: 0.03, delta: 0.1, seed: ver });
+        let _ = idx.query_with(q, &MipsParams { k, epsilon: 0.03, delta: 0.1, seed: ver }, &mut ctx);
         bme_total += t0.elapsed();
     }
     println!(

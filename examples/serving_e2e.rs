@@ -30,7 +30,7 @@ use bandit_mips::metrics::precision_at_k;
 use std::path::Path;
 use std::time::{Duration, Instant};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bandit_mips::Result<()> {
     bandit_mips::cli::init_logger();
     let args = Args::parse_with(&["native"]);
     let items = args.get("items", 2000usize);

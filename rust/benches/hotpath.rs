@@ -1,18 +1,69 @@
 //! Bench P2: the compute hot paths — native dot kernels, pull-batch
-//! gathers, and the PJRT artifact vs the native engine.
+//! gathers, the zero-allocation query execution core, and the PJRT
+//! artifact vs the native engine.
 //!
 //! This is the profile target of the performance pass (EXPERIMENTS.md
-//! §Perf): per-layer before/after numbers come from here.
+//! §Perf): per-layer before/after numbers come from here. Results are
+//! also written to `BENCH_hotpath.json` (machine-readable, see
+//! `benchkit::Reporter::write_json`) so the perf trajectory is tracked
+//! across PRs.
+//!
+//! The `query/*` section is the acceptance gate of the batched
+//! execution core: on a 2000×4096 Gaussian dataset, the context-reuse
+//! path (`query_with` / `query_batch` on one long-lived `QueryContext`)
+//! must be no slower than the legacy per-query path (`query`, fresh
+//! scratch every time) **and** must perform fewer heap allocations —
+//! measured exactly via a counting global allocator.
 
+use bandit_mips::algos::{BoundedMeIndex, MipsIndex, MipsParams};
+use bandit_mips::bandit::PullOrder;
 use bandit_mips::benchkit::{Bencher, Reporter};
+use bandit_mips::data::synthetic::gaussian_dataset;
+use bandit_mips::exec::QueryContext;
+use bandit_mips::jsonlite::Json;
 use bandit_mips::linalg::{dot, Matrix, Rng};
 use bandit_mips::runtime::{NativeEngine, PjrtEngine, ScoringEngine};
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counts every heap allocation (alloc + realloc) so the bench can
+/// report allocations-per-query for each execution path.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Allocations performed by `f`.
+fn count_allocs(mut f: impl FnMut()) -> u64 {
+    let before = ALLOCS.load(Ordering::Relaxed);
+    f();
+    ALLOCS.load(Ordering::Relaxed) - before
+}
 
 fn main() {
     let b = Bencher::quick();
     let mut r = Reporter::new();
     let mut rng = Rng::new(3);
+    let mut extra: Vec<(&'static str, Json)> = Vec::new();
 
     // L0: the scalar dot kernel at serving dims.
     for dim in [512usize, 4096, 32768] {
@@ -30,7 +81,7 @@ fn main() {
     let data = Matrix::from_fn(256, dim, |_, _| rng.gaussian() as f32);
     let q: Vec<f32> = rng.gaussian_vec(dim);
     {
-        use bandit_mips::bandit::{MatrixArms, PullOrder, RewardSource};
+        use bandit_mips::bandit::{MatrixArms, RewardSource};
         for (order, label) in [
             (PullOrder::Permuted, "gather"),
             (PullOrder::BlockShuffled(64), "block64"),
@@ -47,6 +98,87 @@ fn main() {
         }
     }
 
+    // The query execution core on the acceptance dataset: 2000×4096
+    // Gaussian, k=5, serving-default block order. Three paths answer
+    // the same queries:
+    //  * per-query  — legacy `query`: fresh scratch allocated per call;
+    //  * ctx-reuse  — `query_with` on one long-lived QueryContext;
+    //  * batch      — `query_batch` over 16 queries sharing one
+    //                 permutation.
+    {
+        let ds = gaussian_dataset(2000, 4096, 42);
+        let index =
+            BoundedMeIndex::with_order(ds.vectors.clone(), PullOrder::BlockShuffled(128));
+        let params = MipsParams { k: 5, epsilon: 0.05, delta: 0.1, seed: 9 };
+        let queries: Vec<Vec<f32>> = (0..16).map(|s| ds.sample_query(s)).collect();
+        let refs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+
+        let mut qi = 0usize;
+        r.bench(&b, "query/per_query 2000x4096", || {
+            qi = (qi + 1) % queries.len();
+            index.query(&refs[qi], &params).flops
+        });
+
+        let mut ctx = QueryContext::new();
+        // Warm the context so steady state is measured.
+        let _ = index.query_with(&refs[0], &params, &mut ctx);
+        let mut qi = 0usize;
+        r.bench(&b, "query/ctx_reuse 2000x4096", || {
+            qi = (qi + 1) % queries.len();
+            index.query_with(&refs[qi], &params, &mut ctx).flops
+        });
+
+        // Each iteration runs the whole 16-query batch; scale the
+        // measurement down so the row is per-query comparable with the
+        // two rows above.
+        let mut m = b.iter("query/batch16 2000x4096 (per query)", || {
+            let res = index.query_batch(&refs, &params, &mut ctx);
+            res.len()
+        });
+        let nq = refs.len() as f64;
+        m.mean /= nq;
+        m.std /= nq;
+        m.min /= nq;
+        m.median /= nq;
+        r.push(m);
+
+        // Allocation accounting over a fixed 32-query loop per path.
+        const LOOPS: usize = 32;
+        let fresh_allocs = count_allocs(|| {
+            for i in 0..LOOPS {
+                std::hint::black_box(index.query(&refs[i % refs.len()], &params));
+            }
+        });
+        let reuse_allocs = count_allocs(|| {
+            for i in 0..LOOPS {
+                std::hint::black_box(index.query_with(
+                    &refs[i % refs.len()],
+                    &params,
+                    &mut ctx,
+                ));
+            }
+        });
+        let batch_allocs = count_allocs(|| {
+            std::hint::black_box(index.query_batch(&refs, &params, &mut ctx));
+            std::hint::black_box(index.query_batch(&refs, &params, &mut ctx));
+        });
+        let per = |a: u64, n: usize| a as f64 / n as f64;
+        println!(
+            "allocs/query: per_query {:.1}, ctx_reuse {:.1}, batch16 {:.1}",
+            per(fresh_allocs, LOOPS),
+            per(reuse_allocs, LOOPS),
+            per(batch_allocs, 2 * refs.len()),
+        );
+        assert!(
+            reuse_allocs < fresh_allocs,
+            "context reuse must allocate less: {reuse_allocs} vs {fresh_allocs}"
+        );
+        extra.push(("allocs_per_query_fresh", Json::Num(per(fresh_allocs, LOOPS))));
+        extra.push(("allocs_per_query_ctx_reuse", Json::Num(per(reuse_allocs, LOOPS))));
+        extra.push(("allocs_per_query_batch16", Json::Num(per(batch_allocs, 2 * refs.len()))));
+        extra.push(("ctx_grow_events", Json::Num(ctx.grow_events() as f64)));
+    }
+
     // Engines: native vs PJRT artifact (exact 256x512 block).
     let dim = 512;
     let block = Matrix::from_fn(256, dim, |_, _| rng.gaussian() as f32);
@@ -55,8 +187,26 @@ fn main() {
     r.bench(&b, "engine/native 256x512", || {
         NativeEngine.score_block(flat, 256, &q).unwrap().len()
     });
+    // Fused multi-query scoring (the coordinator's one-call-per-batch
+    // exact path) vs query-at-a-time.
+    {
+        let qs: Vec<Vec<f32>> = (0..8).map(|_| rng.gaussian_vec(dim)).collect();
+        let qrefs: Vec<&[f32]> = qs.iter().map(|v| v.as_slice()).collect();
+        let mut slab = Vec::new();
+        r.bench(&b, "engine/native fused 8q x 256x512", || {
+            NativeEngine.score_batch_into(flat, 256, dim, &qrefs, &mut slab).unwrap();
+            slab.len()
+        });
+        r.bench(&b, "engine/native looped 8q x 256x512", || {
+            let mut n = 0;
+            for q in &qrefs {
+                n += NativeEngine.score_block(flat, 256, q).unwrap().len();
+            }
+            n
+        });
+    }
     let artifact_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if artifact_dir.join("exact_b256_d512.hlo.txt").exists() {
+    if cfg!(feature = "pjrt") && artifact_dir.join("exact_b256_d512.hlo.txt").exists() {
         let engine = PjrtEngine::new(artifact_dir.clone(), dim).expect("pjrt engine");
         r.bench(&b, "engine/pjrt copy 256x512", || {
             engine.score_block(flat, 256, &q).unwrap().len()
@@ -72,8 +222,16 @@ fn main() {
             NativeEngine.score_dataset(&big, &q).unwrap().len()
         });
     } else {
-        println!("bench engine/pjrt 256x512: SKIPPED (run `make artifacts`)");
+        println!(
+            "bench engine/pjrt 256x512: SKIPPED ({})",
+            if cfg!(feature = "pjrt") {
+                "run `make artifacts`"
+            } else {
+                "needs the `pjrt` feature plus a manually added `xla` dependency"
+            }
+        );
     }
 
     r.finish("hotpath");
+    r.write_json("hotpath", "BENCH_hotpath.json", &extra);
 }

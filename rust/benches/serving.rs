@@ -6,6 +6,7 @@ use bandit_mips::coordinator::{
     Backend, Coordinator, CoordinatorConfig, QueryRequest,
 };
 use bandit_mips::data::synthetic::gaussian_dataset;
+use bandit_mips::jsonlite::Json;
 use std::time::Duration;
 
 fn run_load(coord: &Coordinator, queries: usize, q: &[f32]) -> f64 {
@@ -34,6 +35,7 @@ fn main() {
     let mut r = Reporter::new();
     let ds = gaussian_dataset(1000, 1024, 31);
     let q = ds.sample_query(1);
+    let mut load_points: Vec<Json> = Vec::new();
 
     for workers in [1usize, 2, 4] {
         let coord = Coordinator::new(
@@ -60,6 +62,13 @@ fn main() {
             m.service.0 * 1e3,
             m.queue_wait.2 * 1e3
         );
+        load_points.push(Json::obj([
+            ("workers", Json::Num(workers as f64)),
+            ("qps", Json::Num(qps)),
+            ("mean_batch_size", Json::Num(m.mean_batch_size)),
+            ("service_p50_s", Json::Num(m.service.0)),
+            ("queue_p99_s", Json::Num(m.queue_wait.2)),
+        ]));
         coord.shutdown();
     }
 
@@ -88,4 +97,9 @@ fn main() {
     coord.shutdown();
 
     r.finish("serving coordinator");
+    r.write_json(
+        "serving",
+        "BENCH_serving.json",
+        &[("closed_loop", Json::Arr(load_points))],
+    );
 }

@@ -3,6 +3,7 @@
 
 use super::{MipsIndex, MipsParams, MipsResult};
 use crate::bandit::{BoundedMe, BoundedMeConfig, MatrixArms, PullOrder, RewardSource};
+use crate::exec::QueryContext;
 use crate::linalg::Matrix;
 
 /// Preprocessing-free MIPS with a suboptimality guarantee: for any query
@@ -31,6 +32,14 @@ impl BoundedMeIndex {
     /// block-shuffled order is the cache-friendly serving default).
     pub fn with_order(data: Matrix, order: PullOrder) -> Self {
         let colmax = column_maxima(&data);
+        Self { data, colmax, order }
+    }
+
+    /// Build from precomputed column maxima (the coordinator shares one
+    /// `colmax` scan across its worker pool; `Matrix` clones share
+    /// storage, so this is allocation-cheap per worker).
+    pub fn from_parts(data: Matrix, colmax: Vec<f32>, order: PullOrder) -> Self {
+        assert_eq!(colmax.len(), data.cols(), "colmax len mismatch");
         Self { data, colmax, order }
     }
 
@@ -77,8 +86,21 @@ impl MipsIndex for BoundedMeIndex {
     }
 
     fn query(&self, q: &[f32], params: &MipsParams) -> MipsResult {
+        self.query_with(q, params, &mut QueryContext::new())
+    }
+
+    /// The zero-allocation hot path: pull order and gathered query live
+    /// in `ctx.pull` (rebuilt only when `(order, dim, seed)` changes, so
+    /// a batch with one seed shares one permutation), survivor state in
+    /// `ctx.bandit`.
+    fn query_with(&self, q: &[f32], params: &MipsParams, ctx: &mut QueryContext) -> MipsResult {
         let bound = self.reward_bound(q);
-        let arms = MatrixArms::new(&self.data, q, bound, self.order, params.seed);
+        // Disjoint field borrows: `pull` is held immutably by the arms
+        // while `bandit` is mutated by the run.
+        let QueryContext { pull, bandit, .. } = ctx;
+        pull.prepare(self.order, self.data.cols(), params.seed);
+        pull.gather(q);
+        let arms = MatrixArms::with_scratch(&self.data, bound, pull);
         let n_list = arms.list_len() as f64;
         // `params.epsilon` is range-relative (paper normalization: rewards
         // in [0,1] ⇒ ε is a fraction of the reward range). MIPS rewards
@@ -89,14 +111,32 @@ impl MipsIndex for BoundedMeIndex {
             epsilon: eff_epsilon.max(f64::MIN_POSITIVE),
             delta: params.delta.clamp(f64::MIN_POSITIVE, 1.0 - 1e-12),
         });
-        let out = algo.run(&arms);
+        let out = algo.run_in(&arms, bandit);
         MipsResult {
-            indices: out.result.arms,
+            indices: out.arms,
             // Empirical mean × N ≈ inner product estimate.
-            scores: out.result.means.iter().map(|&m| (m * n_list) as f32).collect(),
-            flops: out.result.total_pulls,
+            scores: out.means.iter().map(|&m| (m * n_list) as f32).collect(),
+            flops: out.total_pulls,
             candidates: 0,
         }
+    }
+
+    /// Batched execution: all queries share `params` (including the
+    /// seed), so [`crate::bandit::PullScratch::prepare`] builds the
+    /// block-shuffled permutation once and every query only re-gathers
+    /// its own values — the "one permutation per batch" contract the
+    /// coordinator relies on.
+    fn query_batch(
+        &self,
+        queries: &[&[f32]],
+        params: &MipsParams,
+        ctx: &mut QueryContext,
+    ) -> Vec<MipsResult> {
+        let mut out = Vec::with_capacity(queries.len());
+        for q in queries {
+            out.push(self.query_with(q, params, ctx));
+        }
+        out
     }
 }
 
@@ -164,5 +204,55 @@ mod tests {
     fn zero_preprocessing() {
         let idx = BoundedMeIndex::new(gaussian(10, 10, 8));
         assert_eq!(idx.preprocessing_seconds(), 0.0);
+    }
+
+    #[test]
+    fn reused_context_is_bit_identical_to_fresh() {
+        let data = gaussian(120, 256, 9);
+        let idx = BoundedMeIndex::with_order(data, PullOrder::BlockShuffled(32));
+        let mut ctx = QueryContext::new();
+        for seed in 0..6u64 {
+            let q: Vec<f32> = Rng::new(100 + seed).gaussian_vec(256);
+            let params = MipsParams { k: 4, epsilon: 0.1, delta: 0.1, seed };
+            let fresh = idx.query(&q, &params);
+            let reused = idx.query_with(&q, &params, &mut ctx);
+            assert_eq!(fresh.indices, reused.indices, "seed={seed}");
+            assert_eq!(fresh.flops, reused.flops, "seed={seed}");
+            for (a, b) in fresh.scores.iter().zip(&reused.scores) {
+                assert_eq!(a.to_bits(), b.to_bits(), "seed={seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn query_batch_matches_per_query() {
+        let data = gaussian(90, 128, 10);
+        let idx = BoundedMeIndex::with_order(data, PullOrder::BlockShuffled(16));
+        let qs: Vec<Vec<f32>> = (0..8).map(|i| Rng::new(200 + i).gaussian_vec(128)).collect();
+        let refs: Vec<&[f32]> = qs.iter().map(|q| q.as_slice()).collect();
+        let params = MipsParams { k: 3, epsilon: 0.08, delta: 0.1, seed: 5 };
+        let mut ctx = QueryContext::new();
+        let batch = idx.query_batch(&refs, &params, &mut ctx);
+        assert_eq!(batch.len(), 8);
+        for (i, q) in qs.iter().enumerate() {
+            let single = idx.query(q, &params);
+            assert_eq!(batch[i].indices, single.indices, "query {i}");
+            assert_eq!(batch[i].flops, single.flops, "query {i}");
+        }
+    }
+
+    #[test]
+    fn batch_shares_one_permutation() {
+        let data = gaussian(50, 512, 11);
+        let idx = BoundedMeIndex::with_order(data, PullOrder::BlockShuffled(64));
+        let qs: Vec<Vec<f32>> = (0..16).map(|i| Rng::new(i).gaussian_vec(512)).collect();
+        let refs: Vec<&[f32]> = qs.iter().map(|q| q.as_slice()).collect();
+        let params = MipsParams { k: 2, epsilon: 0.2, delta: 0.2, seed: 3 };
+        let mut ctx = QueryContext::new();
+        // Warm the context, then run the batch: no further buffer growth.
+        let _ = idx.query_with(&qs[0], &params, &mut ctx);
+        let warm = ctx.grow_events();
+        let _ = idx.query_batch(&refs, &params, &mut ctx);
+        assert_eq!(ctx.grow_events(), warm, "batch path reallocated scratch");
     }
 }

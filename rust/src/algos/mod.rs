@@ -33,6 +33,7 @@ pub use nns::BoundedMeNnsIndex;
 pub use pca_mips::PcaMipsIndex;
 pub use rpt::RptMipsIndex;
 
+use crate::exec::QueryContext;
 use crate::linalg::{dot, Matrix, TopK};
 
 /// Per-query parameters shared by every index.
@@ -87,8 +88,34 @@ pub trait MipsIndex: Send + Sync {
     /// Wall-clock seconds spent building the index (0 for
     /// preprocessing-free methods).
     fn preprocessing_seconds(&self) -> f64;
-    /// Answer a top-K query.
+    /// Answer a top-K query (one-shot: allocates any scratch it needs).
     fn query(&self, q: &[f32], params: &MipsParams) -> MipsResult;
+
+    /// Answer a top-K query borrowing scratch from a reusable
+    /// [`QueryContext`] — the zero-allocation serving path. Results are
+    /// identical to [`MipsIndex::query`] for the same `params`; only
+    /// the allocation behavior differs. The default ignores the context
+    /// and delegates to `query`; indexes with a real hot path
+    /// ([`BoundedMeIndex`], [`NaiveIndex`]) override it.
+    fn query_with(&self, q: &[f32], params: &MipsParams, ctx: &mut QueryContext) -> MipsResult {
+        let _ = ctx;
+        self.query(q, params)
+    }
+
+    /// Answer a whole batch of queries with shared `params`, fusing
+    /// whatever work can be shared (one coordinate permutation for the
+    /// batch, one pass over the data, one scoring slab). The default
+    /// loops [`MipsIndex::query_with`] over the batch — already sharing
+    /// the context's cached pull order; fused implementations
+    /// ([`NaiveIndex`]) go further.
+    fn query_batch(
+        &self,
+        queries: &[&[f32]],
+        params: &MipsParams,
+        ctx: &mut QueryContext,
+    ) -> Vec<MipsResult> {
+        queries.iter().map(|q| self.query_with(q, params, ctx)).collect()
+    }
 }
 
 /// Exactly rank a candidate set by true inner product and keep the top

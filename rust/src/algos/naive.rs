@@ -2,7 +2,8 @@
 //! measured against.
 
 use super::{exact_rank, MipsIndex, MipsParams, MipsResult};
-use crate::linalg::Matrix;
+use crate::exec::QueryContext;
+use crate::linalg::{dot, Matrix, TopK};
 
 /// Exact linear-scan index. No preprocessing, no error.
 pub struct NaiveIndex {
@@ -39,25 +40,106 @@ impl MipsIndex for NaiveIndex {
             candidates,
         }
     }
+
+    /// Scores land in the context's reusable slab instead of a fresh
+    /// vector per query.
+    fn query_with(&self, q: &[f32], params: &MipsParams, ctx: &mut QueryContext) -> MipsResult {
+        let scores = &mut ctx.rank.scores;
+        self.data.matvec_into(q, scores);
+        let mut top = TopK::new(params.k);
+        for (i, &s) in scores.iter().enumerate() {
+            top.push(s, i);
+        }
+        let ranked = top.into_sorted();
+        let n = self.data.rows();
+        MipsResult {
+            indices: ranked.iter().map(|&(_, i)| i).collect(),
+            scores: ranked.iter().map(|&(s, _)| s).collect(),
+            flops: (n * self.data.cols()) as u64,
+            candidates: n,
+        }
+    }
+
+    /// Fused batch scan: one pass over the dataset, each row dotted
+    /// against every query while hot in cache — on a `B`-query batch the
+    /// data is read once instead of `B` times.
+    fn query_batch(
+        &self,
+        queries: &[&[f32]],
+        params: &MipsParams,
+        ctx: &mut QueryContext,
+    ) -> Vec<MipsResult> {
+        let _ = ctx;
+        let mut tops: Vec<TopK> = queries.iter().map(|_| TopK::new(params.k)).collect();
+        for (i, row) in self.data.iter_rows().enumerate() {
+            for (qi, q) in queries.iter().enumerate() {
+                tops[qi].push(dot(row, q), i);
+            }
+        }
+        let (n, d) = (self.data.rows(), self.data.cols());
+        tops.into_iter()
+            .map(|top| {
+                let ranked = top.into_sorted();
+                MipsResult {
+                    indices: ranked.iter().map(|&(_, i)| i).collect(),
+                    scores: ranked.iter().map(|&(s, _)| s).collect(),
+                    flops: (n * d) as u64,
+                    candidates: n,
+                }
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn returns_exact_top_k_with_full_flops() {
-        let data = Matrix::from_rows(&[
+    fn fixture() -> NaiveIndex {
+        NaiveIndex::new(Matrix::from_rows(&[
             vec![1.0, 2.0],
             vec![2.0, 1.0],
             vec![-1.0, -1.0],
             vec![3.0, 3.0],
-        ]);
-        let idx = NaiveIndex::new(data);
+        ]))
+    }
+
+    #[test]
+    fn returns_exact_top_k_with_full_flops() {
+        let idx = fixture();
         let res = idx.query(&[1.0, 1.0], &MipsParams { k: 2, ..Default::default() });
         assert_eq!(res.indices, vec![3, 0]);
         assert_eq!(res.scores, vec![6.0, 3.0]);
         assert_eq!(res.flops, 8);
         assert_eq!(res.candidates, 4);
+    }
+
+    #[test]
+    fn query_with_matches_query() {
+        let idx = fixture();
+        let params = MipsParams { k: 3, ..Default::default() };
+        let mut ctx = QueryContext::new();
+        for q in [[1.0f32, 1.0], [0.5, -2.0], [-1.0, 0.0]] {
+            let a = idx.query(&q, &params);
+            let b = idx.query_with(&q, &params, &mut ctx);
+            assert_eq!(a.indices, b.indices);
+            assert_eq!(a.scores, b.scores);
+            assert_eq!(a.flops, b.flops);
+        }
+    }
+
+    #[test]
+    fn fused_batch_matches_singles() {
+        let idx = fixture();
+        let params = MipsParams { k: 2, ..Default::default() };
+        let qs: Vec<Vec<f32>> = vec![vec![1.0, 1.0], vec![-1.0, 2.0], vec![0.0, -1.0]];
+        let refs: Vec<&[f32]> = qs.iter().map(|q| q.as_slice()).collect();
+        let mut ctx = QueryContext::new();
+        let batch = idx.query_batch(&refs, &params, &mut ctx);
+        for (i, q) in qs.iter().enumerate() {
+            let single = idx.query(q, &params);
+            assert_eq!(batch[i].indices, single.indices, "query {i}");
+            assert_eq!(batch[i].scores, single.scores, "query {i}");
+        }
     }
 }

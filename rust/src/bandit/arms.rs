@@ -12,6 +12,13 @@
 //!   reward lists served 1s-first so empirical means stay maximally
 //!   uninformative.
 //! * [`ExplicitArms`] — arbitrary lists, for unit tests.
+//!
+//! The permutation, run table, and gathered-query buffer behind
+//! [`MatrixArms`] live in a [`PullScratch`] arena so the serving hot
+//! path re-uses them across queries (and shares one permutation across
+//! a whole batch) instead of allocating per query — see
+//! [`crate::exec::QueryContext`]. [`MatrixArms::new`] still owns a
+//! private scratch for one-shot callers.
 
 use crate::linalg::{dot, Matrix, Rng};
 
@@ -57,39 +64,184 @@ pub trait RewardSource {
     }
 }
 
+/// Which pull-order representation a [`PullScratch`] currently holds.
+///
+/// Block-shuffled orders are stored as contiguous *runs* so pull batches
+/// stay dense (vectorizable dots) instead of scalar gathers — the
+/// difference is ~8× wall-clock on the pull hot path (see the `hotpath`
+/// bench).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum OrderKind {
+    /// Identity (sequential) order.
+    Identity,
+    /// Arbitrary permutation: positional gathers via `perm`.
+    Gather,
+    /// Blockwise-contiguous permutation: run `r` covers pull positions
+    /// `[offsets[r], offsets[r+1])` and coordinates starting at
+    /// `starts[r]`.
+    Runs,
+}
+
+/// Reusable pull-order arena: the coordinate permutation / run table
+/// and the gathered-query buffer of [`MatrixArms`], hoisted out so a
+/// long-lived context can amortize them across queries.
+///
+/// [`PullScratch::prepare`] is keyed on `(order, dim, seed)` and is a
+/// no-op when called again with the same key — that is how every query
+/// of a dynamic batch shares one block-shuffled permutation while only
+/// re-gathering its own query values.
+pub struct PullScratch {
+    kind: OrderKind,
+    /// `Gather`: the permutation. `Runs`: scratch for block ids.
+    perm: Vec<u32>,
+    /// `Runs`: first coordinate of each run.
+    starts: Vec<u32>,
+    /// `Runs`: prefix pull positions; `offsets.len() == starts.len() + 1`.
+    offsets: Vec<u32>,
+    /// Query values pre-gathered in pull order: `qp[j] = q[π(j)]`.
+    qp: Vec<f32>,
+    /// Cache key of the prepared order.
+    key: Option<(PullOrder, usize, u64)>,
+    /// Dimension of the prepared order.
+    dim: usize,
+    /// Buffer-growth events (capacity reallocations) since construction —
+    /// the observable the `hotpath` bench uses to prove steady-state
+    /// zero-allocation behavior.
+    grows: u64,
+}
+
+impl Default for PullScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PullScratch {
+    /// Empty arena; buffers grow on first use, then stay.
+    pub fn new() -> Self {
+        Self {
+            kind: OrderKind::Identity,
+            perm: Vec::new(),
+            starts: Vec::new(),
+            offsets: Vec::new(),
+            qp: Vec::new(),
+            key: None,
+            dim: 0,
+            grows: 0,
+        }
+    }
+
+    /// Build the pull order for `(order, dim, seed)`, reusing the cached
+    /// one when the key matches (shared permutation across a batch).
+    pub fn prepare(&mut self, order: PullOrder, dim: usize, seed: u64) {
+        if self.key == Some((order, dim, seed)) {
+            return;
+        }
+        let caps = (self.perm.capacity(), self.starts.capacity(), self.offsets.capacity());
+        self.dim = dim;
+        let mut rng = Rng::new(seed);
+        match order {
+            PullOrder::Sequential => {
+                self.kind = OrderKind::Identity;
+            }
+            PullOrder::Permuted => {
+                self.kind = OrderKind::Gather;
+                self.perm.clear();
+                self.perm.extend(0..dim as u32);
+                rng.shuffle(&mut self.perm);
+            }
+            PullOrder::BlockShuffled(w) => {
+                self.kind = OrderKind::Runs;
+                let w = w.max(1).min(dim.max(1));
+                let nblocks = dim.div_ceil(w);
+                self.perm.clear();
+                self.perm.extend(0..nblocks as u32);
+                rng.shuffle(&mut self.perm);
+                self.starts.clear();
+                self.offsets.clear();
+                let mut pos = 0u32;
+                for &blk in &self.perm {
+                    let lo = blk as usize * w;
+                    let hi = (lo + w).min(dim);
+                    self.starts.push(lo as u32);
+                    self.offsets.push(pos);
+                    pos += (hi - lo) as u32;
+                }
+                self.offsets.push(pos);
+            }
+        }
+        if (self.perm.capacity(), self.starts.capacity(), self.offsets.capacity()) != caps {
+            self.grows += 1;
+        }
+        self.key = Some((order, dim, seed));
+    }
+
+    /// Gather `q` into the pull-order buffer (`qp[j] = q[π(j)]`). Must be
+    /// called after [`PullScratch::prepare`], once per query.
+    pub fn gather(&mut self, q: &[f32]) {
+        assert_eq!(q.len(), self.dim, "gather: query dim mismatch");
+        let cap = self.qp.capacity();
+        self.qp.clear();
+        match self.kind {
+            OrderKind::Identity => self.qp.extend_from_slice(q),
+            OrderKind::Gather => self.qp.extend(self.perm.iter().map(|&j| q[j as usize])),
+            OrderKind::Runs => {
+                for r in 0..self.starts.len() {
+                    let lo = self.starts[r] as usize;
+                    let len = (self.offsets[r + 1] - self.offsets[r]) as usize;
+                    self.qp.extend_from_slice(&q[lo..lo + len]);
+                }
+            }
+        }
+        if self.qp.capacity() != cap {
+            self.grows += 1;
+        }
+    }
+
+    /// Dimension of the prepared order (0 before first prepare).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Buffer-growth (reallocation) events since construction. A
+    /// steady-state hot loop holds this constant.
+    pub fn grow_events(&self) -> u64 {
+        self.grows
+    }
+
+    /// Coordinate index served at pull position `pos`.
+    #[inline]
+    fn coord_at(&self, pos: usize) -> usize {
+        match self.kind {
+            OrderKind::Identity => pos,
+            OrderKind::Gather => self.perm[pos] as usize,
+            OrderKind::Runs => {
+                // Last run whose offset ≤ pos.
+                let r = self.offsets.partition_point(|&o| o as usize <= pos) - 1;
+                self.starts[r] as usize + (pos - self.offsets[r] as usize)
+            }
+        }
+    }
+}
+
 /// MIPS as MAB-BP: arm `i` ↔ data vector `v_i`, reward `j` ↔ one
 /// coordinate product with the query.
 pub struct MatrixArms<'a> {
     data: &'a Matrix,
-    /// Query values pre-gathered in pull order: `qp[j] = q[perm[j]]`.
-    qp: Vec<f32>,
-    /// Pull-order representation (see [`Order`]).
-    order: Order,
+    scratch: ScratchRef<'a>,
     range: (f64, f64),
 }
 
-/// Internal pull-order representation. Block-shuffled orders are stored
-/// as contiguous *runs* so pull batches stay dense (vectorizable dots)
-/// instead of scalar gathers — the difference is ~8× wall-clock on the
-/// pull hot path (see the `hotpath` bench).
-enum Order {
-    /// Identity (sequential) order.
-    Identity,
-    /// Arbitrary permutation: positional gathers.
-    Gather(Vec<u32>),
-    /// Blockwise-contiguous permutation: run `r` covers pull positions
-    /// `[offsets[r], offsets[r+1])` and coordinates
-    /// `[starts[r], starts[r] + len_r)`.
-    Runs {
-        /// First coordinate of each run.
-        starts: Vec<u32>,
-        /// Prefix positions; `offsets.len() == starts.len() + 1`.
-        offsets: Vec<u32>,
-    },
+/// Owned (one-shot convenience) or borrowed (hot path) scratch.
+enum ScratchRef<'a> {
+    Owned(Box<PullScratch>),
+    Borrowed(&'a PullScratch),
 }
 
 impl<'a> MatrixArms<'a> {
-    /// Build the MIPS environment for one query.
+    /// Build the MIPS environment for one query, allocating a private
+    /// scratch (one-shot convenience; the serving path uses
+    /// [`MatrixArms::with_scratch`]).
     ///
     /// `reward_bound` is a valid almost-sure bound `b` on every reward:
     /// `|v_i^(j) q^(j)| ≤ b` for all `i, j`. Callers derive it from
@@ -104,53 +256,40 @@ impl<'a> MatrixArms<'a> {
         seed: u64,
     ) -> Self {
         assert_eq!(query.len(), data.cols(), "query dim mismatch");
-        let n = data.cols();
-        let b = reward_bound.max(f32::MIN_POSITIVE) as f64;
-        let range = (-b, b);
-        let mut rng = Rng::new(seed);
-        let (order, qp) = match order {
-            PullOrder::Sequential => (Order::Identity, query.to_vec()),
-            PullOrder::Permuted => {
-                let mut p: Vec<u32> = (0..n as u32).collect();
-                rng.shuffle(&mut p);
-                let qp = p.iter().map(|&j| query[j as usize]).collect();
-                (Order::Gather(p), qp)
-            }
-            PullOrder::BlockShuffled(w) => {
-                let w = w.max(1).min(n.max(1));
-                let nblocks = n.div_ceil(w);
-                let mut blocks: Vec<usize> = (0..nblocks).collect();
-                rng.shuffle(&mut blocks);
-                let mut starts = Vec::with_capacity(nblocks);
-                let mut offsets = Vec::with_capacity(nblocks + 1);
-                let mut qp = Vec::with_capacity(n);
-                let mut pos = 0u32;
-                for &blk in &blocks {
-                    let lo = blk * w;
-                    let hi = (lo + w).min(n);
-                    starts.push(lo as u32);
-                    offsets.push(pos);
-                    qp.extend_from_slice(&query[lo..hi]);
-                    pos += (hi - lo) as u32;
-                }
-                offsets.push(pos);
-                (Order::Runs { starts, offsets }, qp)
-            }
-        };
-        Self { data, qp, order, range }
+        let mut scratch = Box::new(PullScratch::new());
+        scratch.prepare(order, data.cols(), seed);
+        scratch.gather(query);
+        Self {
+            data,
+            scratch: ScratchRef::Owned(scratch),
+            range: Self::range_from_bound(reward_bound),
+        }
     }
 
-    /// Coordinate index served at pull position `pos`.
+    /// Build over an externally-prepared [`PullScratch`] (the caller has
+    /// already run [`PullScratch::prepare`] and [`PullScratch::gather`]).
+    /// No allocation happens here — this is the zero-allocation serving
+    /// path.
+    pub fn with_scratch(data: &'a Matrix, reward_bound: f32, scratch: &'a PullScratch) -> Self {
+        assert_eq!(scratch.dim(), data.cols(), "scratch dim mismatch");
+        assert_eq!(scratch.qp.len(), data.cols(), "scratch not gathered");
+        Self {
+            data,
+            scratch: ScratchRef::Borrowed(scratch),
+            range: Self::range_from_bound(reward_bound),
+        }
+    }
+
+    fn range_from_bound(reward_bound: f32) -> (f64, f64) {
+        let b = reward_bound.max(f32::MIN_POSITIVE) as f64;
+        (-b, b)
+    }
+
     #[inline]
-    fn coord_at(&self, pos: usize) -> usize {
-        match &self.order {
-            Order::Identity => pos,
-            Order::Gather(p) => p[pos] as usize,
-            Order::Runs { starts, offsets } => {
-                // Last run whose offset ≤ pos.
-                let r = offsets.partition_point(|&o| o as usize <= pos) - 1;
-                starts[r] as usize + (pos - offsets[r] as usize)
-            }
+    fn scratch(&self) -> &PullScratch {
+        match &self.scratch {
+            ScratchRef::Owned(s) => s,
+            ScratchRef::Borrowed(s) => s,
         }
     }
 }
@@ -171,30 +310,35 @@ impl RewardSource for MatrixArms<'_> {
     fn pull_range(&self, arm: usize, from: usize, to: usize) -> f64 {
         debug_assert!(to <= self.list_len());
         let row = self.data.row(arm);
-        match &self.order {
-            Order::Identity => dot(&row[from..to], &self.qp[from..to]) as f64,
-            Order::Gather(p) => {
+        let s = self.scratch();
+        match s.kind {
+            OrderKind::Identity => dot(&row[from..to], &s.qp[from..to]) as f64,
+            OrderKind::Gather => {
                 // Gather-multiply; consecutive j share cache lines in qp,
                 // row accesses are indirect. Unrolled 4-wide.
+                let p = &s.perm;
+                let qp = &s.qp;
                 let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
                 let mut j = from;
                 while j + 4 <= to {
-                    s0 += row[p[j] as usize] * self.qp[j];
-                    s1 += row[p[j + 1] as usize] * self.qp[j + 1];
-                    s2 += row[p[j + 2] as usize] * self.qp[j + 2];
-                    s3 += row[p[j + 3] as usize] * self.qp[j + 3];
+                    s0 += row[p[j] as usize] * qp[j];
+                    s1 += row[p[j + 1] as usize] * qp[j + 1];
+                    s2 += row[p[j + 2] as usize] * qp[j + 2];
+                    s3 += row[p[j + 3] as usize] * qp[j + 3];
                     j += 4;
                 }
                 let mut tail = 0f32;
                 while j < to {
-                    tail += row[p[j] as usize] * self.qp[j];
+                    tail += row[p[j] as usize] * qp[j];
                     j += 1;
                 }
                 ((s0 + s1) + (s2 + s3) + tail) as f64
             }
-            Order::Runs { starts, offsets } => {
+            OrderKind::Runs => {
                 // Dense partial dots run-by-run (vectorizable).
-                let mut s = 0f64;
+                let starts = &s.starts;
+                let offsets = &s.offsets;
+                let mut acc = 0f64;
                 let mut pos = from;
                 let mut r = offsets.partition_point(|&o| (o as usize) <= from) - 1;
                 while pos < to {
@@ -202,18 +346,19 @@ impl RewardSource for MatrixArms<'_> {
                     let stop = run_end.min(to);
                     let coord = starts[r] as usize + (pos - offsets[r] as usize);
                     let len = stop - pos;
-                    s += dot(&row[coord..coord + len], &self.qp[pos..stop]) as f64;
+                    acc += dot(&row[coord..coord + len], &s.qp[pos..stop]) as f64;
                     pos = stop;
                     r += 1;
                 }
-                s
+                acc
             }
         }
     }
 
     fn pull_iid(&self, arm: usize, rng: &mut Rng) -> f64 {
         let j = rng.next_below(self.list_len());
-        (self.data.row(arm)[self.coord_at(j)] * self.qp[j]) as f64
+        let s = self.scratch();
+        (self.data.row(arm)[s.coord_at(j)] * s.qp[j]) as f64
     }
 
     fn true_mean(&self, arm: usize) -> f64 {
@@ -423,6 +568,60 @@ mod tests {
                 assert!(r >= a - 1e-9 && r <= b + 1e-9, "reward {r} outside [{a},{b}]");
             }
         }
+    }
+
+    #[test]
+    fn borrowed_scratch_matches_owned() {
+        let m = toy_matrix();
+        let q = [1.0f32, -1.0, 0.5, 2.0];
+        for order in [PullOrder::Sequential, PullOrder::Permuted, PullOrder::BlockShuffled(2)] {
+            let owned = MatrixArms::new(&m, &q, 8.0, order, 13);
+            let mut scratch = PullScratch::new();
+            scratch.prepare(order, 4, 13);
+            scratch.gather(&q);
+            let borrowed = MatrixArms::with_scratch(&m, 8.0, &scratch);
+            for i in 0..3 {
+                for (from, to) in [(0, 4), (1, 3), (0, 2), (2, 4)] {
+                    let a = owned.pull_range(i, from, to);
+                    let b = borrowed.pull_range(i, from, to);
+                    assert_eq!(a.to_bits(), b.to_bits(), "order={order:?} arm={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_prepare_is_cached_and_regather_is_growth_free() {
+        let mut scratch = PullScratch::new();
+        scratch.prepare(PullOrder::BlockShuffled(2), 64, 9);
+        let q1 = vec![1.0f32; 64];
+        scratch.gather(&q1);
+        let grows = scratch.grow_events();
+        // Same key: prepare is a no-op; new queries only re-gather, and
+        // the warm buffers never grow again.
+        for i in 0..50 {
+            scratch.prepare(PullOrder::BlockShuffled(2), 64, 9);
+            let q = vec![i as f32; 64];
+            scratch.gather(&q);
+        }
+        assert_eq!(scratch.grow_events(), grows, "steady state reallocated");
+    }
+
+    #[test]
+    fn scratch_rekey_rebuilds_order() {
+        let m = toy_matrix();
+        let q = [1.0f32, 2.0, 3.0, 4.0];
+        let mut scratch = PullScratch::new();
+        scratch.prepare(PullOrder::Permuted, 4, 1);
+        scratch.gather(&q);
+        let first: Vec<f32> = scratch.qp.clone();
+        scratch.prepare(PullOrder::Permuted, 4, 2);
+        scratch.gather(&q);
+        // Different seed ⇒ (almost surely) different permutation of a
+        // 4-element distinct query; either way the full sum is invariant.
+        let arms = MatrixArms::with_scratch(&m, 8.0, &scratch);
+        assert!((arms.pull_range(0, 0, 4) - dot(m.row(0), &q) as f64).abs() < 1e-6);
+        let _ = first;
     }
 
     #[test]

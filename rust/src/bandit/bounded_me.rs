@@ -59,6 +59,23 @@ pub struct BoundedMeOutput {
     pub trace: Vec<RoundTrace>,
 }
 
+/// Reusable per-run survivor arena for [`BoundedMe::run_in`]: the
+/// `O(n)` arm-state vector is the only non-constant allocation of a
+/// BOUNDEDME run, and a long-lived scratch (one per serving worker,
+/// inside [`crate::exec::QueryContext`]) amortizes it to zero across
+/// queries.
+#[derive(Default)]
+pub struct BanditScratch {
+    survivors: Vec<ArmState>,
+}
+
+impl BanditScratch {
+    /// Empty arena; the survivor buffer grows to `n` on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// The BOUNDEDME algorithm. Stateless; construct with a config and call
 /// [`BoundedMe::run`] per query.
 #[derive(Clone, Copy, Debug)]
@@ -94,16 +111,41 @@ impl BoundedMe {
         Self { cfg }
     }
 
-    /// Run Algorithm 1 against the environment.
+    /// Run Algorithm 1 against the environment, collecting the per-round
+    /// trace (allocates a fresh survivor vector; the hot path uses
+    /// [`BoundedMe::run_in`]).
     pub fn run<R: RewardSource>(&self, env: &R) -> BoundedMeOutput {
+        let mut scratch = BanditScratch::new();
+        let mut trace = Vec::new();
+        let result = self.run_core(env, &mut scratch.survivors, Some(&mut trace));
+        BoundedMeOutput { result, trace }
+    }
+
+    /// Run Algorithm 1 reusing a caller-owned survivor arena and
+    /// skipping trace collection. Results are bit-identical to
+    /// [`BoundedMe::run`] (same pulls, same elimination order) — only
+    /// the allocations differ.
+    pub fn run_in<R: RewardSource>(
+        &self,
+        env: &R,
+        scratch: &mut BanditScratch,
+    ) -> BanditResult {
+        self.run_core(env, &mut scratch.survivors, None)
+    }
+
+    fn run_core<R: RewardSource>(
+        &self,
+        env: &R,
+        survivors: &mut Vec<ArmState>,
+        mut trace: Option<&mut Vec<RoundTrace>>,
+    ) -> BanditResult {
         let n = env.n_arms();
         let n_list = env.list_len();
         let k = self.cfg.k;
         let range = env.range_width();
 
-        let mut survivors: Vec<ArmState> =
-            (0..n).map(|i| ArmState { id: i as u32, sum: 0.0, pulls: 0 }).collect();
-        let mut trace = Vec::new();
+        survivors.clear();
+        survivors.extend((0..n).map(|i| ArmState { id: i as u32, sum: 0.0, pulls: 0 }));
         let mut total_pulls: u64 = 0;
 
         let mut eps_l = self.cfg.epsilon / 4.0;
@@ -129,13 +171,15 @@ impl BoundedMe {
                 m_bounded(eps_l / 2.0, delta_arm, n_list, range).max(t_prev)
             };
 
-            trace.push(RoundTrace {
-                round,
-                survivors: s,
-                t_l,
-                epsilon_l: eps_l,
-                delta_l,
-            });
+            if let Some(trace) = trace.as_mut() {
+                trace.push(RoundTrace {
+                    round,
+                    survivors: s,
+                    t_l,
+                    epsilon_l: eps_l,
+                    delta_l,
+                });
+            }
 
             // Pull every survivor up to t_l cumulative pulls.
             let delta_pulls = t_l - t_prev;
@@ -171,10 +215,7 @@ impl BoundedMe {
         let arms = survivors.iter().map(|a| a.id as usize).collect();
         let means = survivors.iter().map(|a| a.mean()).collect();
 
-        BoundedMeOutput {
-            result: BanditResult { arms, means, total_pulls, rounds: round },
-            trace,
-        }
+        BanditResult { arms, means, total_pulls, rounds: round }
     }
 }
 
@@ -311,6 +352,26 @@ mod tests {
         for t in &out.trace {
             assert!(t.t_l >= prev);
             prev = t.t_l;
+        }
+    }
+
+    #[test]
+    fn run_in_matches_run_with_reused_scratch() {
+        let mut rng = Rng::new(77);
+        let lists: Vec<Vec<f64>> =
+            (0..40).map(|_| (0..64).map(|_| rng.next_f64()).collect()).collect();
+        let env = ExplicitArms::new(lists).with_range(0.0, 1.0);
+        let algo = BoundedMe::new(BoundedMeConfig { k: 3, epsilon: 0.05, delta: 0.1 });
+        let mut scratch = BanditScratch::new();
+        for _ in 0..5 {
+            let fresh = algo.run(&env).result;
+            let reused = algo.run_in(&env, &mut scratch);
+            assert_eq!(fresh.arms, reused.arms);
+            assert_eq!(fresh.total_pulls, reused.total_pulls);
+            assert_eq!(fresh.rounds, reused.rounds);
+            for (a, b) in fresh.means.iter().zip(&reused.means) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
         }
     }
 

@@ -30,8 +30,8 @@ pub mod lucb;
 pub mod median_elim;
 pub mod successive_elim;
 
-pub use arms::{AdversarialArms, ExplicitArms, MatrixArms, PullOrder, RewardSource};
-pub use bounded_me::{BoundedMe, BoundedMeConfig};
+pub use arms::{AdversarialArms, ExplicitArms, MatrixArms, PullOrder, PullScratch, RewardSource};
+pub use bounded_me::{BanditScratch, BoundedMe, BoundedMeConfig};
 pub use bounds::{hoeffding_sample_size, m_bounded, serfling_radius};
 
 /// Outcome of a fixed-confidence bandit run.

@@ -3,8 +3,12 @@
 //! `cargo bench` targets use `harness = false` and drive this module:
 //! [`Bencher::iter`] warms up, runs timed batches until a wall-clock
 //! budget is spent, and reports mean / σ / min / p50 per iteration. The
-//! bench binaries print a summary table at the end via [`Reporter`].
+//! bench binaries print a summary table at the end via [`Reporter`],
+//! and can persist machine-readable results with
+//! [`Reporter::write_json`] (`BENCH_<name>.json`) so the perf
+//! trajectory is tracked across PRs.
 
+use crate::jsonlite::Json;
 use std::time::{Duration, Instant};
 
 /// Result of one measured benchmark.
@@ -135,6 +139,41 @@ impl Reporter {
         &self.rows
     }
 
+    /// All measurements as a JSON document, with optional extra
+    /// top-level fields (e.g. allocation counters, qps figures).
+    pub fn to_json(&self, title: &str, extra: &[(&'static str, Json)]) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|m| {
+                Json::obj([
+                    ("name", Json::Str(m.name.clone())),
+                    ("iters", Json::Num(m.iters as f64)),
+                    ("mean_s", Json::Num(m.mean)),
+                    ("std_s", Json::Num(m.std)),
+                    ("min_s", Json::Num(m.min)),
+                    ("median_s", Json::Num(m.median)),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("bench", Json::Str(title.to_string())),
+            ("results", Json::Arr(rows)),
+        ];
+        fields.extend(extra.iter().cloned());
+        Json::obj(fields)
+    }
+
+    /// Write [`Reporter::to_json`] to `path` (best-effort: benches must
+    /// not fail on a read-only filesystem; errors go to stderr).
+    pub fn write_json(&self, title: &str, path: &str, extra: &[(&'static str, Json)]) {
+        let doc = self.to_json(title, extra).dump();
+        match std::fs::write(path, &doc) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+
     /// Final summary block.
     pub fn finish(&self, title: &str) {
         println!("\n== {title} ==");
@@ -183,5 +222,24 @@ mod tests {
         r.bench(&b, "noop", || 1);
         assert_eq!(r.rows().len(), 1);
         r.finish("test");
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let b = Bencher::new(Duration::from_millis(1), Duration::from_millis(5));
+        let mut r = Reporter::new();
+        r.bench(&b, "noop", || 1);
+        let doc = r.to_json("unit", &[("allocs", Json::Num(3.0))]);
+        let text = doc.dump();
+        let parsed = crate::jsonlite::parse(&text).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("unit"));
+        assert_eq!(parsed.get("allocs").unwrap().as_f64(), Some(3.0));
+        let rows = match parsed.get("results").unwrap() {
+            Json::Arr(v) => v,
+            other => panic!("results not an array: {other:?}"),
+        };
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("name").unwrap().as_str(), Some("noop"));
+        assert!(rows[0].get("mean_s").unwrap().as_f64().unwrap() > 0.0);
     }
 }

@@ -79,12 +79,12 @@ impl Args {
     }
 
     /// Required typed flag.
-    pub fn require<T: FromStr>(&self, name: &str) -> anyhow::Result<T> {
+    pub fn require<T: FromStr>(&self, name: &str) -> crate::Result<T> {
         self.flags
             .get(name)
-            .ok_or_else(|| anyhow::anyhow!("missing required --{name}"))?
+            .ok_or_else(|| crate::errors::anyhow!("missing required --{name}"))?
             .parse()
-            .map_err(|_| anyhow::anyhow!("bad value for --{name}"))
+            .map_err(|_| crate::errors::anyhow!("bad value for --{name}"))
     }
 
     /// Raw string flag.
@@ -93,30 +93,11 @@ impl Args {
     }
 }
 
-/// Install a minimal `log` backend writing to stderr. Level from
-/// `RUST_LOG` (error|warn|info|debug|trace), default `info`.
+/// Install stderr logging at the `RUST_LOG` level
+/// (error|warn|info|debug|trace, default `info`) — see
+/// [`crate::logkit`].
 pub fn init_logger() {
-    struct StderrLogger(log::LevelFilter);
-    impl log::Log for StderrLogger {
-        fn enabled(&self, metadata: &log::Metadata) -> bool {
-            metadata.level() <= self.0
-        }
-        fn log(&self, record: &log::Record) {
-            if self.enabled(record.metadata()) {
-                eprintln!("[{:<5}] {}", record.level(), record.args());
-            }
-        }
-        fn flush(&self) {}
-    }
-    let level = match std::env::var("RUST_LOG").as_deref() {
-        Ok("error") => log::LevelFilter::Error,
-        Ok("warn") => log::LevelFilter::Warn,
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("trace") => log::LevelFilter::Trace,
-        _ => log::LevelFilter::Info,
-    };
-    let _ = log::set_boxed_logger(Box::new(StderrLogger(level)))
-        .map(|()| log::set_max_level(level));
+    crate::logkit::init_from_env();
 }
 
 #[cfg(test)]

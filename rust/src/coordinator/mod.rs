@@ -19,17 +19,28 @@
 //! * **Backpressure**: the router queue is bounded; `submit` fails fast
 //!   with [`CoordinatorError::QueueFull`] instead of buffering unbounded.
 //! * **Dynamic batching**: a batch closes when it reaches
-//!   `max_batch` or when the oldest request has waited `batch_timeout`.
+//!   `max_batch` or when the oldest request has waited `batch_timeout` —
+//!   and workers *execute* it as a batch, not just receive it as one:
+//!   each worker owns a long-lived [`QueryContext`] plus an Arc-backed
+//!   [`BoundedMeIndex`], exact queries of a batch go through **one**
+//!   [`ScoringEngine::score_dataset_batch`] call (fused row-major scan /
+//!   device-resident scoring), and BOUNDEDME queries of a batch share
+//!   one block-shuffled coordinate permutation via
+//!   [`crate::algos::MipsIndex::query_batch`].
 //! * **Backends**: workers score through a [`ScoringEngine`] — pure-Rust
 //!   or the PJRT AOT artifact (see [`crate::runtime`]).
+//! * **Planning**: [`QueryMode::Auto`] requests are routed per query by
+//!   [`QueryPlan`] — knobs too tight for sampling to win go straight to
+//!   the exact engine.
 
 pub mod server;
 pub mod stats;
 
 pub use stats::{MetricsRegistry, MetricsSnapshot};
 
-use crate::algos::MipsResult;
-use crate::bandit::{BoundedMe, BoundedMeConfig, MatrixArms, PullOrder, RewardSource};
+use crate::algos::{BoundedMeIndex, MipsIndex, MipsParams, MipsResult};
+use crate::bandit::PullOrder;
+use crate::exec::{PlanAlgo, QueryContext, QueryPlan};
 use crate::linalg::{Matrix, TopK};
 use crate::runtime::{NativeEngine, PjrtEngine, ScoringEngine};
 use crate::sync::{bounded, Receiver, RecvError, SendError, Sender};
@@ -62,7 +73,10 @@ pub struct CoordinatorConfig {
     pub queue_capacity: usize,
     /// Exact-scoring backend.
     pub backend: Backend,
-    /// Pull order for BOUNDEDME queries.
+    /// Pull order for BOUNDEDME queries. `BlockShuffled(0)` (the
+    /// default) means "planner-chosen": the coordinator substitutes
+    /// [`QueryPlan::block_width`] for the dataset's dimension at
+    /// startup.
     pub pull_order: PullOrder,
 }
 
@@ -74,7 +88,7 @@ impl Default for CoordinatorConfig {
             batch_timeout: Duration::from_millis(2),
             queue_capacity: 1024,
             backend: Backend::Native,
-            pull_order: PullOrder::BlockShuffled(64),
+            pull_order: PullOrder::BlockShuffled(0),
         }
     }
 }
@@ -86,6 +100,9 @@ pub enum QueryMode {
     BoundedMe,
     /// Exhaustive exact scoring through the backend engine.
     Exact,
+    /// Let [`QueryPlan`] decide per query from `(k, ε, δ, dim)`: knobs
+    /// tight enough that sampling cannot beat a scan run exact.
+    Auto,
 }
 
 /// One MIPS request.
@@ -101,7 +118,12 @@ pub struct QueryRequest {
     pub delta: f64,
     /// Answer mode.
     pub mode: QueryMode,
-    /// Per-query seed (pull-order randomness).
+    /// Pull-order seed. When a dynamic batch of BOUNDEDME requests has
+    /// uniform (k, ε, δ), the batch is *fused*: the first request's
+    /// seed keys one shared coordinate permutation for the whole batch
+    /// (that sharing is what makes batching fuse compute). Requests
+    /// with heterogeneous knobs are served individually with their own
+    /// seeds.
     pub seed: u64,
     /// Optional service-level deadline, measured from submission. A
     /// request whose queue wait already exceeds it is *shed* (answered
@@ -120,6 +142,12 @@ impl QueryRequest {
     pub fn with_deadline(mut self, d: Duration) -> Self {
         self.deadline = Some(d);
         self
+    }
+
+    /// A planner-routed request: [`QueryPlan`] picks exact vs BOUNDEDME
+    /// from the knobs at execution time.
+    pub fn auto(vector: Vec<f32>, k: usize, epsilon: f64, delta: f64) -> Self {
+        Self { vector, k, epsilon, delta, mode: QueryMode::Auto, seed: 0, deadline: None }
     }
 
     /// An exact request.
@@ -229,15 +257,21 @@ impl Coordinator {
             );
         }
 
-        // Worker threads.
+        // Worker threads. The colmax scan is shared; each worker's
+        // BoundedMeIndex clone is Arc-backed, so per-worker state is one
+        // O(dim) colmax copy plus the long-lived QueryContext.
         let colmax = Arc::new(crate::algos::bounded_me_index::column_maxima(&data));
+        // `BlockShuffled(0)` = planner-chosen width for this dimension.
+        let order = match cfg.pull_order {
+            PullOrder::BlockShuffled(0) => PullOrder::BlockShuffled(QueryPlan::block_width(dim)),
+            o => o,
+        };
         for w in 0..cfg.workers {
             let rx = batch_rx.clone();
             let data = data.clone();
             let colmax = colmax.clone();
             let metrics = metrics.clone();
             let backend = cfg.backend.clone();
-            let order = cfg.pull_order;
             threads.push(std::thread::Builder::new().name(format!("worker-{w}")).spawn(
                 move || {
                     let engine: Box<dyn ScoringEngine> = match &backend {
@@ -248,7 +282,7 @@ impl Coordinator {
                             match PjrtEngine::with_dataset(artifact_dir.clone(), &data) {
                                 Ok(e) => Box::new(e),
                                 Err(err) => {
-                                    log::error!(
+                                    crate::logkit::error!(
                                         "worker-{w}: pjrt init failed ({err}); \
                                          falling back to native"
                                     );
@@ -257,7 +291,12 @@ impl Coordinator {
                             }
                         }
                     };
-                    run_worker(w, rx, &data, &colmax, order, engine.as_ref(), &metrics);
+                    let index = BoundedMeIndex::from_parts(
+                        (*data).clone(),
+                        colmax.as_ref().clone(),
+                        order,
+                    );
+                    run_worker(w, rx, &index, engine.as_ref(), &metrics);
                 },
             )?);
         }
@@ -344,107 +383,198 @@ fn run_batcher(
     }
 }
 
-/// Worker loop: serve every query of every batch.
+/// Worker loop: each worker owns one long-lived [`QueryContext`] and
+/// executes whole batches through the fused execution core.
 fn run_worker(
     worker_id: usize,
     rx: Receiver<Batch>,
-    data: &Matrix,
-    colmax: &[f32],
-    order: PullOrder,
+    index: &BoundedMeIndex,
     engine: &dyn ScoringEngine,
     metrics: &MetricsRegistry,
 ) {
-    let all_ids: Vec<usize> = (0..data.rows()).collect();
+    let mut ctx = QueryContext::new();
     while let Ok(batch) = rx.recv() {
-        let batch_size = batch.items.len();
-        for p in batch.items {
-            let picked_up = Instant::now();
-            let queue_wait = picked_up - p.submitted;
-            // Load shedding: don't compute answers nobody is waiting for.
-            if let Some(deadline) = p.req.deadline {
-                if queue_wait > deadline {
-                    metrics.record_shed();
-                    let _ = p.reply.send(QueryResponse {
-                        indices: Vec::new(),
-                        scores: Vec::new(),
-                        flops: 0,
-                        queue_wait,
-                        service: Duration::ZERO,
-                        batch_size,
-                        worker: worker_id,
-                        shed: true,
-                    });
-                    continue;
+        serve_batch(worker_id, batch, index, engine, &mut ctx, metrics);
+    }
+}
+
+/// One item of a batch, with its queue wait measured at pickup.
+struct Live {
+    pending: Pending,
+    queue_wait: Duration,
+}
+
+/// Execute one dynamic batch:
+///
+/// 1. shed items whose deadline already expired in the queue;
+/// 2. resolve [`QueryMode::Auto`] items through [`QueryPlan`];
+/// 3. exact items: **one** [`ScoringEngine::score_dataset_batch`] call
+///    over the whole group (fused scan / device-resident), then
+///    per-query top-K from the shared score slab;
+/// 4. BOUNDEDME items: [`MipsIndex::query_batch`] when the knobs are
+///    uniform, else per-item [`MipsIndex::query_with`] — either way the
+///    context's cached pull order means the batch shares one coordinate
+///    permutation (keyed by the first item's seed).
+fn serve_batch(
+    worker_id: usize,
+    batch: Batch,
+    index: &BoundedMeIndex,
+    engine: &dyn ScoringEngine,
+    ctx: &mut QueryContext,
+    metrics: &MetricsRegistry,
+) {
+    let data = index.data();
+    let dim = data.cols();
+    let batch_size = batch.items.len();
+    let picked_up = Instant::now();
+
+    let mut exact: Vec<Live> = Vec::new();
+    let mut bme: Vec<Live> = Vec::new();
+    for pending in batch.items {
+        let queue_wait = picked_up - pending.submitted;
+        // Load shedding: don't compute answers nobody is waiting for.
+        if let Some(deadline) = pending.req.deadline {
+            if queue_wait > deadline {
+                metrics.record_shed();
+                let _ = pending.reply.send(QueryResponse {
+                    indices: Vec::new(),
+                    scores: Vec::new(),
+                    flops: 0,
+                    queue_wait,
+                    service: Duration::ZERO,
+                    batch_size,
+                    worker: worker_id,
+                    shed: true,
+                });
+                continue;
+            }
+        }
+        let mode = match pending.req.mode {
+            QueryMode::Auto => {
+                let plan =
+                    QueryPlan::pick(pending.req.k, pending.req.epsilon, pending.req.delta, dim);
+                match plan.algo {
+                    PlanAlgo::Exact => QueryMode::Exact,
+                    PlanAlgo::BoundedMe => QueryMode::BoundedMe,
                 }
             }
-            let result = serve_one(&p.req, data, colmax, order, engine, &all_ids);
-            let service = picked_up.elapsed();
-            metrics.record_query(queue_wait, service, result.flops);
-            let _ = p.reply.send(QueryResponse {
-                indices: result.indices,
-                scores: result.scores,
-                flops: result.flops,
-                queue_wait,
-                service,
-                batch_size,
-                worker: worker_id,
-                shed: false,
+            m => m,
+        };
+        let live = Live { pending, queue_wait };
+        match mode {
+            QueryMode::Exact => exact.push(live),
+            QueryMode::BoundedMe => bme.push(live),
+            QueryMode::Auto => unreachable!("Auto resolved above"),
+        }
+    }
+
+    // --- Exact group: one engine call for the whole group. ---
+    if !exact.is_empty() {
+        let t0 = Instant::now();
+        let rows = data.rows();
+        let queries: Vec<&[f32]> =
+            exact.iter().map(|l| l.pending.req.vector.as_slice()).collect();
+        let fused_ok = engine.score_dataset_batch(data, &queries, &mut ctx.rank.scores).is_ok();
+        let mut results = Vec::with_capacity(exact.len());
+        for (gi, live) in exact.iter().enumerate() {
+            let k = live.pending.req.k;
+            let ranked = if fused_ok {
+                let slab = &ctx.rank.scores[gi * rows..(gi + 1) * rows];
+                let mut top = TopK::new(k);
+                for (i, &s) in slab.iter().enumerate() {
+                    top.push(s, i);
+                }
+                top.into_sorted()
+            } else {
+                // Engine failure (e.g. backend died): pure-Rust fallback.
+                let scores = data.matvec(&live.pending.req.vector);
+                let mut top = TopK::new(k);
+                for (i, &s) in scores.iter().enumerate() {
+                    top.push(s, i);
+                }
+                top.into_sorted()
+            };
+            results.push(MipsResult {
+                indices: ranked.iter().map(|&(_, i)| i).collect(),
+                scores: ranked.iter().map(|&(s, _)| s).collect(),
+                flops: (rows * dim) as u64,
+                candidates: rows,
             });
+        }
+        // Service = pickup → reply (fused compute is genuinely shared,
+        // so every item of the group carries the full batch latency it
+        // actually experienced).
+        for (live, result) in exact.into_iter().zip(results) {
+            respond(live, result, t0.elapsed(), batch_size, worker_id, metrics);
+        }
+    }
+
+    // --- BOUNDEDME group: shared permutation, fused when uniform. ---
+    if !bme.is_empty() {
+        // The first item's seed keys the batch's shared pull order.
+        let batch_seed = bme[0].pending.req.seed;
+        let knobs = |l: &Live| {
+            (l.pending.req.k, l.pending.req.epsilon.to_bits(), l.pending.req.delta.to_bits())
+        };
+        let uniform = bme.windows(2).all(|w| knobs(&w[0]) == knobs(&w[1]));
+        if uniform && bme.len() > 1 {
+            let first = &bme[0].pending.req;
+            let params = MipsParams {
+                k: first.k,
+                epsilon: first.epsilon,
+                delta: first.delta,
+                seed: batch_seed,
+            };
+            let queries: Vec<&[f32]> =
+                bme.iter().map(|l| l.pending.req.vector.as_slice()).collect();
+            let t0 = Instant::now();
+            let results = index.query_batch(&queries, &params, ctx);
+            // Replies go out only after the fused batch completes, so
+            // every item's service is the batch latency it experienced.
+            for (live, result) in bme.into_iter().zip(results) {
+                respond(live, result, t0.elapsed(), batch_size, worker_id, metrics);
+            }
+        } else {
+            // Heterogeneous knobs: serve items individually with their
+            // own seeds (the context still shares the cached pull order
+            // whenever consecutive seeds match).
+            for live in bme {
+                let req = &live.pending.req;
+                let params = MipsParams {
+                    k: req.k,
+                    epsilon: req.epsilon,
+                    delta: req.delta,
+                    seed: req.seed,
+                };
+                let t0 = Instant::now();
+                let result = index.query_with(&req.vector, &params, ctx);
+                let service = t0.elapsed();
+                respond(live, result, service, batch_size, worker_id, metrics);
+            }
         }
     }
 }
 
-/// Serve a single query on a worker.
-fn serve_one(
-    req: &QueryRequest,
-    data: &Matrix,
-    colmax: &[f32],
-    order: PullOrder,
-    engine: &dyn ScoringEngine,
-    all_ids: &[usize],
-) -> MipsResult {
-    match req.mode {
-        QueryMode::Exact => {
-            let _ = all_ids;
-            let scores = engine
-                .score_dataset(data, &req.vector)
-                .unwrap_or_else(|_| data.matvec(&req.vector));
-            let mut top = TopK::new(req.k);
-            for (i, &s) in scores.iter().enumerate() {
-                top.push(s, i);
-            }
-            let ranked = top.into_sorted();
-            MipsResult {
-                indices: ranked.iter().map(|&(_, i)| i).collect(),
-                scores: ranked.iter().map(|&(s, _)| s).collect(),
-                flops: (data.rows() * data.cols()) as u64,
-                candidates: data.rows(),
-            }
-        }
-        QueryMode::BoundedMe => {
-            // Tight per-query reward bound from column maxima.
-            let bound = colmax
-                .iter()
-                .zip(&req.vector)
-                .fold(f32::MIN_POSITIVE, |m, (&c, &qj)| m.max(c * qj.abs()));
-            let arms = MatrixArms::new(data, &req.vector, bound, order, req.seed);
-            let n_list = arms.list_len() as f64;
-            // ε is range-relative (see `BoundedMeIndex::query`).
-            let eff_epsilon = req.epsilon * arms.range_width();
-            let algo = BoundedMe::new(BoundedMeConfig {
-                k: req.k.max(1),
-                epsilon: eff_epsilon.max(1e-12),
-                delta: req.delta.clamp(1e-12, 1.0 - 1e-12),
-            });
-            let out = algo.run(&arms);
-            MipsResult {
-                indices: out.result.arms,
-                scores: out.result.means.iter().map(|&m| (m * n_list) as f32).collect(),
-                flops: out.result.total_pulls,
-                candidates: 0,
-            }
-        }
-    }
+/// Record metrics and send the reply for one served item.
+fn respond(
+    live: Live,
+    result: MipsResult,
+    service: Duration,
+    batch_size: usize,
+    worker_id: usize,
+    metrics: &MetricsRegistry,
+) {
+    metrics.record_query(live.queue_wait, service, result.flops);
+    let _ = live.pending.reply.send(QueryResponse {
+        indices: result.indices,
+        scores: result.scores,
+        flops: result.flops,
+        queue_wait: live.queue_wait,
+        service,
+        batch_size,
+        worker: worker_id,
+        shed: false,
+    });
 }
 
 #[cfg(test)]
@@ -519,6 +649,89 @@ mod tests {
         let snap = c.metrics();
         assert_eq!(snap.queries, 64);
         assert!(snap.mean_batch_size >= 1.0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn auto_mode_routes_and_answers() {
+        let (c, data) = small_coordinator(2, 128);
+        // Tight knobs on a 64-dim dataset: the plan routes to Exact, so
+        // the answer must be the exact top-k.
+        let q = vec![0.4f32; 64];
+        let resp = c.query_blocking(QueryRequest::auto(q.clone(), 4, 1e-12, 0.05)).unwrap();
+        assert_eq!(resp.indices, crate::algos::ground_truth(&data, &q, 4));
+        // Loose knobs: still a valid 4-set (BOUNDEDME path).
+        let resp = c.query_blocking(QueryRequest::auto(q, 4, 0.5, 0.3)).unwrap();
+        assert_eq!(resp.indices.len(), 4);
+        c.shutdown();
+    }
+
+    #[test]
+    fn batched_exact_queries_stay_exact() {
+        // Force real batches of mixed exact queries and check every
+        // answer against ground truth — the fused score_dataset_batch
+        // path must be indistinguishable from per-query scoring.
+        let ds = gaussian_dataset(150, 48, 12);
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            max_batch: 16,
+            batch_timeout: Duration::from_millis(20),
+            queue_capacity: 256,
+            backend: Backend::Native,
+            pull_order: PullOrder::Sequential,
+        };
+        let data = ds.vectors.clone();
+        let c = Coordinator::new(ds.vectors, cfg).unwrap();
+        let mut handles = Vec::new();
+        let mut queries = Vec::new();
+        for i in 0..24u64 {
+            let mut q = vec![0.0f32; 48];
+            q[(i as usize) % 48] = 1.0;
+            q[(i as usize * 7) % 48] = -0.5;
+            queries.push(q.clone());
+            handles.push(c.submit(QueryRequest::exact(q, 3)).unwrap());
+        }
+        let mut max_batch_seen = 0;
+        for (h, q) in handles.into_iter().zip(&queries) {
+            let resp = h.recv().unwrap();
+            max_batch_seen = max_batch_seen.max(resp.batch_size);
+            assert_eq!(resp.indices, crate::algos::ground_truth(&data, q, 3));
+        }
+        assert!(max_batch_seen > 1, "no batching under burst load");
+        c.shutdown();
+    }
+
+    #[test]
+    fn batched_bounded_me_matches_index_results() {
+        // Uniform knobs + burst ⇒ the worker takes the query_batch path
+        // with the first item's seed; with ε→0 every answer must still
+        // be the exact top-k set.
+        let ds = gaussian_dataset(120, 64, 13);
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(20),
+            queue_capacity: 256,
+            backend: Backend::Native,
+            pull_order: PullOrder::BlockShuffled(16),
+        };
+        let data = ds.vectors.clone();
+        let c = Coordinator::new(ds.vectors, cfg).unwrap();
+        let mut handles = Vec::new();
+        let mut queries = Vec::new();
+        for i in 0..16u64 {
+            let q: Vec<f32> = (0..64).map(|j| ((i + j) % 5) as f32 - 2.0).collect();
+            queries.push(q.clone());
+            handles.push(c.submit(QueryRequest::bounded_me(q, 3, 1e-9, 0.05)).unwrap());
+        }
+        for (h, q) in handles.into_iter().zip(&queries) {
+            let resp = h.recv().unwrap();
+            let mut got = resp.indices.clone();
+            got.sort_unstable();
+            let mut want = crate::algos::ground_truth(&data, q, 3);
+            want.sort_unstable();
+            assert_eq!(got, want);
+        }
         c.shutdown();
     }
 

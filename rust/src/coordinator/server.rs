@@ -171,6 +171,7 @@ pub fn handle_line(line: &str, coord: &Coordinator) -> Json {
             let mode = match req.get("mode").and_then(Json::as_str) {
                 None | Some("bounded_me") => QueryMode::BoundedMe,
                 Some("exact") => QueryMode::Exact,
+                Some("auto") => QueryMode::Auto,
                 Some(other) => return err_response(&format!("unknown mode {other:?}")),
             };
             let deadline = req

@@ -1,0 +1,167 @@
+//! Minimal error substrate (anyhow is unavailable offline).
+//!
+//! Implements the subset of `anyhow`'s surface the crate uses: an opaque
+//! [`Error`] holding a message chain, the [`anyhow!`]/[`bail!`] macros,
+//! a crate-wide [`Result`] alias, and the [`Context`] extension trait
+//! for decorating fallible calls. Any `std::error::Error` converts into
+//! [`Error`] via `?`, so `io::Error` & friends propagate unchanged.
+//!
+//! Like `anyhow::Error`, [`Error`] deliberately does **not** implement
+//! `std::error::Error` itself — that is what makes the blanket
+//! `From<E: std::error::Error>` conversion coherent.
+
+use std::fmt;
+
+/// Opaque application error: a human-readable message plus an optional
+/// source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build from a plain message.
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into(), source: None }
+    }
+
+    /// Wrap an underlying error with a higher-level message.
+    pub fn wrap(
+        msg: impl Into<String>,
+        source: impl std::error::Error + Send + Sync + 'static,
+    ) -> Self {
+        Self { msg: msg.into(), source: Some(Box::new(source)) }
+    }
+
+    /// Prepend a context message (keeps the existing chain).
+    pub fn context(self, msg: impl Into<String>) -> Self {
+        let msg = msg.into();
+        Self { msg: format!("{msg}: {}", self.msg), source: self.source }
+    }
+
+    /// The deepest underlying error, if any.
+    pub fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn std::error::Error + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut src = self.source();
+        while let Some(e) = src {
+            write!(f, ": {e}")?;
+            src = e.source();
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> Result<()>` prints Debug on error; make it read
+        // like the Display chain instead of a struct dump.
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Format an ad-hoc [`Error`] (drop-in for `anyhow::anyhow!`).
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::errors::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`] (drop-in for `anyhow::bail!`).
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::errors::Error::msg(format!($($arg)*)))
+    };
+}
+
+pub use {anyhow, bail};
+
+/// Extension trait adding context to fallible results (drop-in for
+/// `anyhow::Context`).
+pub trait Context<T> {
+    /// Attach a fixed context message.
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    /// Attach a lazily-built context message.
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::wrap(msg.to_string(), e))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.map_err(|e| Error::wrap(f().to_string(), e))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.to_string()))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn message_and_chain_display() {
+        let e = anyhow!("top {}", 7);
+        assert_eq!(e.to_string(), "top 7");
+        let wrapped: Result<()> = Err(io_err()).context("loading file");
+        let msg = wrapped.unwrap_err().to_string();
+        assert!(msg.starts_with("loading file"), "{msg}");
+        assert!(msg.contains("gone"), "{msg}");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().unwrap_err().to_string().contains("gone"));
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative -1");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+    }
+}

@@ -1,0 +1,208 @@
+//! Zero-allocation batched query execution core.
+//!
+//! Preprocessing-free MIPS means the per-query hot path *is* the
+//! product: there is no index build to hide setup costs behind. Before
+//! this module existed, every query re-allocated its coordinate
+//! permutation, gathered-query buffer, per-arm bandit state, and
+//! scoring slab — and the coordinator's dynamic batcher collected
+//! batches only to execute them query-by-query. [`QueryContext`] is the
+//! reusable scratch arena that removes those allocations, and
+//! [`QueryPlan`] is the small planner that picks an algorithm and a
+//! [`PullOrder`] from the request knobs `(k, ε, δ, dim)`.
+//!
+//! Layering:
+//!
+//! * [`crate::bandit::PullScratch`] (inside the context) caches the pull
+//!   order keyed on `(order, dim, seed)` — every query of a batch shares
+//!   one block-shuffled permutation and only re-gathers its own values;
+//! * [`crate::bandit::BanditScratch`] reuses the `O(n)` survivor arena
+//!   of BOUNDEDME across runs;
+//! * [`RankScratch`] holds the exact-scoring slab the engines / naive
+//!   index write into;
+//! * [`crate::algos::MipsIndex::query_with`] /
+//!   [`crate::algos::MipsIndex::query_batch`] thread a `&mut
+//!   QueryContext` through the algorithm layer, and each coordinator
+//!   worker owns one context for its whole lifetime.
+//!
+//! The `hotpath` bench measures the effect directly: the context-reuse
+//! path performs no steady-state heap allocation per query, versus a
+//! handful of `O(dim)`/`O(n)` allocations per query on the legacy path.
+
+use crate::bandit::{m_bounded, BanditScratch, PullOrder, PullScratch};
+
+/// Reusable scoring scratch: the exact-score slab (one `f32` per
+/// row × query).
+#[derive(Default)]
+pub struct RankScratch {
+    /// Score slab, query-major (`scores[qi * rows + i]`). Engines and
+    /// the naive index write into it via `score_batch_into`/`matvec_into`.
+    pub scores: Vec<f32>,
+}
+
+impl RankScratch {
+    /// Empty arena.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Per-worker (or per-thread) scratch arena threaded through the whole
+/// execution path: pull-order state, bandit survivor state, and exact
+/// scoring buffers. Create once, pass to every
+/// [`crate::algos::MipsIndex::query_with`] /
+/// [`crate::algos::MipsIndex::query_batch`] call.
+///
+/// The fields are public and independently borrowable on purpose: the
+/// bandit layer holds `pull` immutably (through
+/// [`crate::bandit::MatrixArms::with_scratch`]) while mutating `bandit`,
+/// which the borrow checker allows via disjoint field borrows.
+#[derive(Default)]
+pub struct QueryContext {
+    /// Pull-order permutation / run table + gathered query buffer.
+    pub pull: PullScratch,
+    /// BOUNDEDME survivor arena.
+    pub bandit: BanditScratch,
+    /// Exact-scoring slab + candidate gather buffer.
+    pub rank: RankScratch,
+}
+
+impl QueryContext {
+    /// Empty context; buffers grow to steady-state on the first queries
+    /// and are then reused allocation-free.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Buffer-growth (reallocation) events observed by the pull scratch
+    /// since construction — constant in steady state; the `hotpath`
+    /// bench asserts on it.
+    pub fn grow_events(&self) -> u64 {
+        self.pull.grow_events()
+    }
+}
+
+/// Which algorithm a [`QueryPlan`] selected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanAlgo {
+    /// Exhaustive exact scoring (the bandit cannot win at these knobs).
+    Exact,
+    /// BOUNDEDME adaptive sampling with the plan's pull order.
+    BoundedMe,
+}
+
+/// Per-query execution plan derived from `(k, ε, δ, dim)`.
+///
+/// The decision rule comes from the paper's sample complexity: the
+/// first elimination round already needs
+/// `t₁ = m((ε/4)/2, ·)` pulls per arm (with range-relative ε, range
+/// width 1). If that many pulls per arm is already ≥ `N`, BOUNDEDME
+/// degenerates to exhaustive search *plus* bandit bookkeeping — so the
+/// plan routes the query to the exact engine instead. Otherwise it
+/// picks BOUNDEDME with a block-shuffled pull order whose block width
+/// scales with `dim` (dense runs for the vectorized dot kernel, enough
+/// blocks for the shuffle to stay statistically near-uniform).
+#[derive(Clone, Copy, Debug)]
+pub struct QueryPlan {
+    /// Selected algorithm.
+    pub algo: PlanAlgo,
+    /// Pull order a BOUNDEDME execution should use — a block-shuffled
+    /// order whose width scales with `dim` (see
+    /// [`QueryPlan::block_width`]). The coordinator adopts it when its
+    /// config asks for planner-chosen ordering
+    /// (`PullOrder::BlockShuffled(0)`, the serving default).
+    pub order: PullOrder,
+    /// Estimated first-round pulls per arm (diagnostic).
+    pub first_round_pulls: usize,
+}
+
+impl QueryPlan {
+    /// Pick a plan from the request knobs. `dim` is the vector dimension
+    /// `N`; `k` currently only guards degenerate requests.
+    pub fn pick(k: usize, epsilon: f64, delta: f64, dim: usize) -> Self {
+        let order = PullOrder::BlockShuffled(Self::block_width(dim));
+        if dim < 64 {
+            // Too few coordinates for sampling to amortize its overhead.
+            return Self { algo: PlanAlgo::Exact, order, first_round_pulls: dim };
+        }
+        let eps = epsilon.clamp(f64::MIN_POSITIVE, 1.0);
+        let delta = delta.clamp(1e-12, 1.0 - 1e-12);
+        // Round-1 budget of Algorithm 1 at range-relative ε: ε₁ = ε/4,
+        // tested at radius ε₁/2 with confidence δ₁ = δ/2.
+        let first = m_bounded(eps / 8.0, delta / 2.0, dim, 1.0);
+        let algo = if first >= dim { PlanAlgo::Exact } else { PlanAlgo::BoundedMe };
+        let _ = k;
+        Self { algo, order, first_round_pulls: first }
+    }
+
+    /// Block width for the block-shuffled pull order: dense enough for
+    /// the vectorized dot kernel, with ≥ ~32 blocks so the shuffle stays
+    /// near-uniform.
+    pub fn block_width(dim: usize) -> usize {
+        (dim / 32).clamp(16, 256).min(dim.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_dim_plans_exact() {
+        let p = QueryPlan::pick(5, 0.1, 0.1, 16);
+        assert_eq!(p.algo, PlanAlgo::Exact);
+    }
+
+    #[test]
+    fn tiny_epsilon_plans_exact() {
+        // ε → 0 forces t₁ = N: the bandit cannot beat a scan.
+        let p = QueryPlan::pick(5, 1e-12, 0.05, 4096);
+        assert_eq!(p.algo, PlanAlgo::Exact);
+        assert_eq!(p.first_round_pulls, 4096);
+    }
+
+    #[test]
+    fn loose_knobs_plan_bandit() {
+        let p = QueryPlan::pick(5, 0.3, 0.2, 4096);
+        assert_eq!(p.algo, PlanAlgo::BoundedMe);
+        assert!(p.first_round_pulls < 4096);
+        assert!(matches!(p.order, PullOrder::BlockShuffled(_)));
+    }
+
+    #[test]
+    fn plan_monotone_in_epsilon() {
+        // Tighter ε ⇒ never switches from Exact back to BoundedMe.
+        let dim = 2048;
+        let mut was_exact = false;
+        for eps in [0.5, 0.2, 0.05, 0.01, 1e-3, 1e-6, 1e-12] {
+            let p = QueryPlan::pick(1, eps, 0.1, dim);
+            if was_exact {
+                assert_eq!(p.algo, PlanAlgo::Exact, "eps={eps}");
+            }
+            was_exact = p.algo == PlanAlgo::Exact;
+        }
+        assert!(was_exact, "ε=1e-12 should have planned Exact");
+    }
+
+    #[test]
+    fn block_width_bounds() {
+        assert_eq!(QueryPlan::block_width(4096), 128);
+        assert_eq!(QueryPlan::block_width(64), 16);
+        assert_eq!(QueryPlan::block_width(100_000), 256);
+        assert!(QueryPlan::block_width(8) <= 8);
+    }
+
+    #[test]
+    fn context_starts_empty_and_grows_once() {
+        let mut ctx = QueryContext::new();
+        assert_eq!(ctx.grow_events(), 0);
+        ctx.pull.prepare(PullOrder::BlockShuffled(16), 256, 1);
+        let q = vec![0.5f32; 256];
+        ctx.pull.gather(&q);
+        let warm = ctx.grow_events();
+        for _ in 0..20 {
+            ctx.pull.prepare(PullOrder::BlockShuffled(16), 256, 1);
+            ctx.pull.gather(&q);
+        }
+        assert_eq!(ctx.grow_events(), warm);
+    }
+}

@@ -80,13 +80,14 @@ fn eval_index(
 ) -> SweepPoint {
     let mut stats = AlgoStats::new(index.name());
     let mut cand_sum = 0usize;
+    let mut ctx = crate::exec::QueryContext::new();
     for (qi, (q, truth)) in queries.iter().zip(truths).enumerate() {
         let params = MipsParams { k, epsilon: 0.0, delta: 0.0, seed: seed ^ qi as u64 };
         // (ε, δ) for BOUNDEDME ride in via the knob-specific params below;
         // eval_index is called with pre-built indexes, so only BOUNDEDME
         // needs them — passed through `eval_bounded_me` instead.
         let t0 = Instant::now();
-        let res = index.query(q, &params);
+        let res = index.query_with(q, &params, &mut ctx);
         let dt = t0.elapsed().as_secs_f64();
         cand_sum += res.candidates;
         stats.record(
@@ -140,6 +141,7 @@ pub fn run_sweep(
             crate::bandit::PullOrder::BlockShuffled(64),
         ),
     ];
+    let mut ctx = crate::exec::QueryContext::new();
     for bme in &bme_variants {
         for &eps in &cfg.bme_epsilons {
             let mut stats = AlgoStats::new(bme.name());
@@ -152,7 +154,7 @@ pub fn run_sweep(
                     seed: cfg.seed ^ (qi as u64).wrapping_mul(6364136223846793005),
                 };
                 let t = Instant::now();
-                let res = bme.query(q, &params);
+                let res = bme.query_with(q, &params, &mut ctx);
                 stats.record(
                     precision_at_k(truth, &res.indices),
                     res.flops,

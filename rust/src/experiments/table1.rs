@@ -80,6 +80,7 @@ pub fn run(ds: &Dataset, cfg: &Table1Config) -> Vec<Table1Row> {
     let n = ds.n();
     let mut rows = Vec::new();
 
+    let mut ctx = crate::exec::QueryContext::new();
     let mut measure = |index: &dyn MipsIndex, guarantee: &'static str| {
         let mut flops = 0u64;
         let mut secs = 0f64;
@@ -92,7 +93,7 @@ pub fn run(ds: &Dataset, cfg: &Table1Config) -> Vec<Table1Row> {
                 seed: cfg.seed ^ qi as u64,
             };
             let t = Instant::now();
-            let res = index.query(q, &params);
+            let res = index.query_with(q, &params, &mut ctx);
             secs += t.elapsed().as_secs_f64();
             flops += res.flops;
             prec += precision_at_k(truth, &res.indices);

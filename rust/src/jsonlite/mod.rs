@@ -160,14 +160,21 @@ fn write_escaped(s: &str, out: &mut String) {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {at}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     /// Byte offset of the error.
     pub at: usize,
     /// Description.
     pub msg: &'static str,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.at, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 struct Parser<'a> {
     b: &'a [u8],

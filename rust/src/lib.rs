@@ -16,30 +16,61 @@
 //! * per-arm pull counts bounded by `N`, and
 //! * `O(n√N/ε · √log(1/δ))` sample complexity.
 //!
+//! Because there is no preprocessing, the *per-query hot path* is the
+//! entire product. The [`exec`] module is the allocation-free execution
+//! core threaded through every layer: a reusable [`exec::QueryContext`]
+//! scratch arena (pull-order permutation, gathered-query buffer,
+//! per-arm bandit state, exact-scoring slab) plus a [`exec::QueryPlan`]
+//! that picks algorithm and pull order from `(k, ε, δ, dim)`. Indexes
+//! execute through [`algos::MipsIndex::query_with`] (one query, borrowed
+//! scratch) and [`algos::MipsIndex::query_batch`] (a fused batch sharing
+//! one coordinate permutation); the serving coordinator gives each
+//! worker a long-lived context so dynamic batching fuses compute instead
+//! of just queueing.
+//!
 //! ## Crate layout
 //!
 //! | module | contents |
 //! |---|---|
 //! | [`linalg`] | dense matrix/vector substrate, RNG, PCA, top-K utilities |
-//! | [`bandit`] | MAB-BP framework, BOUNDEDME, bandit baselines |
+//! | [`bandit`] | MAB-BP framework, BOUNDEDME, bandit baselines, pull-order scratch |
 //! | [`algos`]  | MIPS indexes: naive, BoundedME, Greedy-, LSH-, PCA-, RPT-MIPS |
+//! | [`exec`]   | zero-allocation execution core: `QueryContext` arena + `QueryPlan` |
 //! | [`data`]   | dataset substrate: synthetic, adversarial, ALS matrix factorization |
 //! | [`metrics`] | precision@K, flop accounting, latency sketches |
-//! | [`runtime`] | PJRT bridge: load AOT HLO artifacts, execute on the hot path |
-//! | [`coordinator`] | serving layer: router, dynamic batcher, worker pool |
+//! | [`runtime`] | scoring engines; PJRT/XLA artifact execution behind the `pjrt` feature |
+//! | [`coordinator`] | serving layer: router, dynamic batcher, batched worker pool |
 //! | [`experiments`] | harness regenerating every paper table/figure |
+//! | [`errors`], [`logkit`], [`jsonlite`], [`sync`], [`benchkit`], [`cli`] | offline substrates (no external deps) |
 //!
 //! ## Quick start
 //!
 //! ```no_run
 //! use bandit_mips::algos::{BoundedMeIndex, MipsIndex, MipsParams};
 //! use bandit_mips::data::synthetic::gaussian_dataset;
+//! use bandit_mips::exec::QueryContext;
 //!
 //! let ds = gaussian_dataset(1000, 512, 42);
 //! let index = BoundedMeIndex::new(ds.vectors.clone());
-//! let q = ds.sample_query(7);
-//! let res = index.query(&q, &MipsParams { k: 5, epsilon: 0.1, delta: 0.1, ..Default::default() });
+//! let params = MipsParams { k: 5, epsilon: 0.1, delta: 0.1, ..Default::default() };
+//!
+//! // One-shot (allocates its own scratch):
+//! let res = index.query(&ds.sample_query(7), &params);
 //! println!("top-5 = {:?}", res.indices);
+//!
+//! // Hot path: reuse one QueryContext across queries — no per-query
+//! // permutation/buffer allocations, and a whole batch shares one
+//! // block-shuffled coordinate permutation.
+//! let mut ctx = QueryContext::new();
+//! for seed in 0..100 {
+//!     let q = ds.sample_query(seed);
+//!     let res = index.query_with(&q, &params, &mut ctx);
+//!     assert_eq!(res.indices.len(), 5);
+//! }
+//! let queries: Vec<Vec<f32>> = (0..32).map(|s| ds.sample_query(s)).collect();
+//! let refs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+//! let batch = index.query_batch(&refs, &params, &mut ctx);
+//! assert_eq!(batch.len(), 32);
 //! ```
 
 pub mod algos;
@@ -48,12 +79,15 @@ pub mod benchkit;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod errors;
+pub mod exec;
 pub mod experiments;
 pub mod jsonlite;
 pub mod linalg;
+pub mod logkit;
 pub mod metrics;
 pub mod runtime;
 pub mod sync;
 
 /// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = errors::Result<T>;

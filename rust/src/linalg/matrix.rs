@@ -98,6 +98,14 @@ impl Matrix {
         self.iter_rows().map(|r| super::dot(r, q)).collect()
     }
 
+    /// [`Matrix::matvec`] into a caller-owned buffer (cleared first) —
+    /// the allocation-free variant the execution core uses.
+    pub fn matvec_into(&self, q: &[f32], out: &mut Vec<f32>) {
+        assert_eq!(q.len(), self.cols, "matvec: dim mismatch");
+        out.clear();
+        out.extend(self.iter_rows().map(|r| super::dot(r, q)));
+    }
+
     /// A new matrix with the given rows gathered (copied) in order.
     pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
         let mut data = Vec::with_capacity(idx.len() * self.cols);

@@ -1,0 +1,146 @@
+//! Minimal leveled logging to stderr (the `log` crate is unavailable
+//! offline).
+//!
+//! Provides the [`error!`]/[`warn!`]/[`info!`]/[`debug!`]/[`trace!`]
+//! macros the serving layer uses. The level comes from `RUST_LOG`
+//! (`error|warn|info|debug|trace`, default `info`) on first use, or
+//! explicitly via [`set_level`]. Filtering is one relaxed atomic load,
+//! so disabled call sites cost nothing measurable.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, most severe first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    /// Unrecoverable or dropped-work conditions.
+    Error = 1,
+    /// Degraded but continuing (fallbacks, sheds).
+    Warn = 2,
+    /// Lifecycle events.
+    Info = 3,
+    /// Per-batch diagnostics.
+    Debug = 4,
+    /// Per-query firehose.
+    Trace = 5,
+}
+
+impl Level {
+    fn label(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+/// 0 = uninitialized (read RUST_LOG lazily).
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(0);
+
+fn level_from_env() -> Level {
+    match std::env::var("RUST_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    }
+}
+
+/// Set the maximum emitted level explicitly.
+pub fn set_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Initialize from `RUST_LOG` (also happens lazily on first log call).
+pub fn init_from_env() {
+    set_level(level_from_env());
+}
+
+/// True when messages at `level` should be emitted.
+pub fn enabled(level: Level) -> bool {
+    let mut max = MAX_LEVEL.load(Ordering::Relaxed);
+    if max == 0 {
+        init_from_env();
+        max = MAX_LEVEL.load(Ordering::Relaxed);
+    }
+    (level as u8) <= max
+}
+
+/// Emit one record (used by the macros; call those instead).
+pub fn emit(level: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{:<5}] {args}", level.label());
+    }
+}
+
+/// Log at [`Level::Error`].
+macro_rules! error {
+    ($($arg:tt)*) => {
+        $crate::logkit::emit($crate::logkit::Level::Error, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Warn`].
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        $crate::logkit::emit($crate::logkit::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Info`].
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::logkit::emit($crate::logkit::Level::Info, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Debug`].
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::logkit::emit($crate::logkit::Level::Debug, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Trace`].
+macro_rules! trace {
+    ($($arg:tt)*) => {
+        $crate::logkit::emit($crate::logkit::Level::Trace, format_args!($($arg)*))
+    };
+}
+
+pub use {debug, error, info, trace, warn};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Trace);
+    }
+
+    #[test]
+    fn set_level_filters() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+
+    #[test]
+    fn macros_compile_and_emit() {
+        set_level(Level::Trace);
+        error!("e {}", 1);
+        warn!("w");
+        info!("i");
+        debug!("d");
+        trace!("t");
+    }
+}

@@ -13,7 +13,10 @@ use bandit_mips::algos::{BoundedMeIndex, MipsIndex, MipsParams};
 use bandit_mips::cli::{init_logger, Args};
 use bandit_mips::coordinator::{Backend, Coordinator, CoordinatorConfig, QueryRequest};
 use bandit_mips::data::{io as dio, synthetic, workload};
+use bandit_mips::errors::bail;
+use bandit_mips::exec::QueryContext;
 use bandit_mips::experiments::{fig1, table1};
+use bandit_mips::logkit;
 use std::path::PathBuf;
 use std::time::Duration;
 
@@ -30,7 +33,7 @@ commands:
   table1  [--full]
 ";
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bandit_mips::Result<()> {
     init_logger();
     let args = Args::parse_with(&["full"]);
     match args.command() {
@@ -46,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
-fn cmd_gen(args: &Args) -> anyhow::Result<()> {
+fn cmd_gen(args: &Args) -> bandit_mips::Result<()> {
     let kind = args.get_str("kind").unwrap_or("gaussian").to_string();
     let n = args.get("n", 2000usize);
     let dim = args.get("dim", 4096usize);
@@ -57,14 +60,14 @@ fn cmd_gen(args: &Args) -> anyhow::Result<()> {
         "uniform" => synthetic::uniform_dataset(n, dim, seed),
         "netflix" => bandit_mips::data::mf::netflix_like(n, dim, seed).dataset,
         "yahoo" => bandit_mips::data::mf::yahoo_like(n, dim, seed).dataset,
-        other => anyhow::bail!("unknown kind {other}"),
+        other => bail!("unknown kind {other}"),
     };
     dio::save(&ds, &out)?;
     println!("wrote {} ({}x{}) to {}", ds.name, ds.n(), ds.dim(), out.display());
     Ok(())
 }
 
-fn cmd_query(args: &Args) -> anyhow::Result<()> {
+fn cmd_query(args: &Args) -> bandit_mips::Result<()> {
     let ds = dio::load(args.require::<PathBuf>("data")?)?;
     let k = args.get("k", 5usize);
     let epsilon = args.get("epsilon", 0.1f64);
@@ -72,8 +75,9 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
     let seed = args.get("seed", 0u64);
     let idx = BoundedMeIndex::new(ds.vectors.clone());
     let q = ds.sample_query(seed);
+    let mut ctx = QueryContext::new();
     let t = std::time::Instant::now();
-    let res = idx.query(&q, &MipsParams { k, epsilon, delta, seed });
+    let res = idx.query_with(&q, &MipsParams { k, epsilon, delta, seed }, &mut ctx);
     let dt = t.elapsed();
     println!(
         "top-{k} (ε={epsilon}, δ={delta}) in {dt:?}, {} flops ({:.1}% of naive):",
@@ -86,7 +90,7 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+fn cmd_serve(args: &Args) -> bandit_mips::Result<()> {
     let ds = dio::load(args.require::<PathBuf>("data")?)?;
     let workers = args.get("workers", 2usize);
     let queries = args.get("queries", 500usize);
@@ -127,7 +131,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         match coord.submit(QueryRequest::bounded_me(q.vector.clone(), q.k, q.epsilon, q.delta))
         {
             Ok(rx) => pending.push(rx),
-            Err(e) => log::warn!("dropped: {e}"),
+            Err(e) => logkit::warn!("dropped: {e}"),
         }
     }
     for rx in pending {
@@ -153,7 +157,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_fig1(args: &Args) -> anyhow::Result<()> {
+fn cmd_fig1(args: &Args) -> bandit_mips::Result<()> {
     let cfg = if args.has("full") {
         fig1::Fig1Config { n_arms: 10_000, n_list: 100_000, trials: 20, ..Default::default() }
     } else {
@@ -167,7 +171,7 @@ fn cmd_fig1(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_table1(args: &Args) -> anyhow::Result<()> {
+fn cmd_table1(args: &Args) -> bandit_mips::Result<()> {
     let ds = if args.has("full") {
         synthetic::gaussian_dataset(10_000, 8192, 7)
     } else {

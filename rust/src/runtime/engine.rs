@@ -1,22 +1,28 @@
 //! Scoring engines: the pluggable compute backends of the coordinator.
 //!
 //! [`ScoringEngine`] is the contract the serving layer programs against:
-//! "score a block of vectors against one query". Two implementations:
+//! "score a block of vectors against one query" — plus the fused
+//! multi-query entry points the batched execution core uses
+//! ([`ScoringEngine::score_batch_into`] /
+//! [`ScoringEngine::score_dataset_batch`]), so a whole dynamic batch is
+//! one engine call instead of per-query chunked loops. Two
+//! implementations:
 //!
-//! * [`NativeEngine`] — pure-Rust blocked dot products (no PJRT);
+//! * [`NativeEngine`] — pure-Rust blocked dot products (no PJRT), with a
+//!   row-major fused kernel for query batches (each dataset row is
+//!   loaded once and dotted against every query while hot in cache);
 //! * [`PjrtEngine`] — routes blocks to the AOT-compiled XLA artifact on
 //!   a dedicated owner thread (PJRT handles are not `Send`), padding to
-//!   the artifact's fixed block size.
+//!   the artifact's fixed block size. Behind the `pjrt` feature; the
+//!   stub built without it fails at construction so callers fall back
+//!   to native.
 //!
 //! The `hotpath` bench compares them head-to-head; the coordinator picks
 //! per `CoordinatorConfig::backend`.
 
-use super::Runtime;
+use crate::errors::{anyhow, Result};
 use crate::linalg::{dot, Matrix};
-use anyhow::{anyhow, Result};
 use std::path::PathBuf;
-use std::sync::mpsc;
-use std::thread::JoinHandle;
 
 /// Block scorer: exact inner products of `rows` (flattened `count × dim`)
 /// against `q` (`dim`).
@@ -25,6 +31,47 @@ pub trait ScoringEngine: Send {
     fn name(&self) -> &str;
     /// Compute `count` inner products. `rows.len() == count * q.len()`.
     fn score_block(&self, rows: &[f32], count: usize, q: &[f32]) -> Result<Vec<f32>>;
+
+    /// Fused multi-query scoring into a caller-owned buffer: scores of
+    /// every row against every query, laid out query-major
+    /// (`out[qi * count + i]` = row `i` · query `qi`). This is the one
+    /// engine call a coordinator worker makes per dynamic batch. The
+    /// default loops [`ScoringEngine::score_block`]; engines override it
+    /// with genuinely fused kernels.
+    fn score_batch_into(
+        &self,
+        rows: &[f32],
+        count: usize,
+        dim: usize,
+        queries: &[&[f32]],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        if rows.len() != count * dim {
+            return Err(anyhow!("block shape mismatch: {} vs {count}×{dim}", rows.len()));
+        }
+        out.clear();
+        out.reserve(queries.len() * count);
+        for q in queries {
+            if q.len() != dim {
+                return Err(anyhow!("query dim {} != block dim {dim}", q.len()));
+            }
+            out.extend(self.score_block(rows, count, q)?);
+        }
+        Ok(())
+    }
+
+    /// Score every dataset row against every query of a batch
+    /// (query-major output, like [`ScoringEngine::score_batch_into`]).
+    /// Engines that keep the dataset resident on a device override this
+    /// to skip the host-side row copy per call.
+    fn score_dataset_batch(
+        &self,
+        data: &Matrix,
+        queries: &[&[f32]],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.score_batch_into(data.as_slice(), data.rows(), data.cols(), queries, out)
+    }
 
     /// Score whole matrix rows by index (convenience over
     /// [`ScoringEngine::score_block`], chunked to a reasonable block).
@@ -67,214 +114,306 @@ impl ScoringEngine for NativeEngine {
         }
         Ok((0..count).map(|i| dot(&rows[i * dim..(i + 1) * dim], q)).collect())
     }
-}
 
-enum Cmd {
-    Score { rows: Vec<f32>, count: usize, q: Vec<f32>, reply: mpsc::Sender<Result<Vec<f32>>> },
-    ScoreResident { q: Vec<f32>, reply: mpsc::Sender<Result<Vec<f32>>> },
-    Shutdown,
-}
-
-/// PJRT-backed scorer. Owns a worker thread holding the [`Runtime`];
-/// the handle is `Send` and cheap to share behind an `Arc`.
-pub struct PjrtEngine {
-    tx: mpsc::Sender<Cmd>,
-    handle: Option<JoinHandle<()>>,
-    label: String,
-    /// Rows preloaded on the device (0 = none).
-    resident_rows: usize,
-}
-
-impl PjrtEngine {
-    /// Spawn the owner thread, load artifacts from `artifact_dir`, and
-    /// require an `exact_b*_d{dim}` artifact to exist for this `dim`.
-    pub fn new(artifact_dir: impl Into<PathBuf>, dim: usize) -> Result<Self> {
-        Self::spawn(artifact_dir.into(), dim, None)
-    }
-
-    /// Like [`PjrtEngine::new`], but uploads the dataset to the device
-    /// once at startup; [`ScoringEngine::score_dataset`] then only moves
-    /// the query per call (the big win on the serving hot path — see the
-    /// `hotpath` bench and EXPERIMENTS.md §Perf).
-    pub fn with_dataset(
-        artifact_dir: impl Into<PathBuf>,
-        data: &Matrix,
-    ) -> Result<Self> {
-        Self::spawn(artifact_dir.into(), data.cols(), Some(data.clone()))
-    }
-
-    fn spawn(dir: PathBuf, dim: usize, preload: Option<Matrix>) -> Result<Self> {
-        let resident_rows = preload.as_ref().map_or(0, |m| m.rows());
-        let (tx, rx) = mpsc::channel::<Cmd>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<String>>();
-        let handle = std::thread::Builder::new()
-            .name("pjrt-engine".into())
-            .spawn(move || {
-                // Initialize the runtime on the owner thread. Ad-hoc
-                // copies use the smallest block artifact (minimal
-                // padding); the resident dataset uses the largest
-                // (fewest dispatches).
-                type Resident = Vec<xla::PjRtBuffer>;
-                struct Init {
-                    rt: Runtime,
-                    small: (String, usize),
-                    big: (String, usize),
-                    resident: Resident,
-                }
-                let init = (|| -> Result<Init> {
-                    let mut rt = Runtime::cpu()?;
-                    rt.load_dir(&dir)?;
-                    let (small_name, small_shape) = rt
-                        .find_exact_min(dim)
-                        .ok_or_else(|| anyhow!("no exact_b*_d{dim} artifact in {dir:?}"))?;
-                    let (big_name, big_shape) = rt.find_exact(dim).unwrap();
-                    // Upload the dataset block-by-block (padded tail).
-                    let mut resident = Vec::new();
-                    if let Some(data) = &preload {
-                        let block = big_shape.block;
-                        let mut padded = vec![0f32; block * dim];
-                        let n = data.rows();
-                        let mut i = 0usize;
-                        while i < n {
-                            let take = (n - i).min(block);
-                            padded[..take * dim]
-                                .copy_from_slice(&data.as_slice()[i * dim..(i + take) * dim]);
-                            padded[take * dim..].fill(0.0);
-                            resident.push(rt.upload_f32(&padded, &[block, dim])?);
-                            i += take;
-                        }
-                    }
-                    Ok(Init {
-                        rt,
-                        small: (small_name, small_shape.block),
-                        big: (big_name, big_shape.block),
-                        resident,
-                    })
-                })();
-                let Init { rt, small, big, resident } = match init {
-                    Ok(v) => {
-                        let _ = ready_tx.send(Ok(v.small.0.clone()));
-                        v
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                while let Ok(cmd) = rx.recv() {
-                    match cmd {
-                        Cmd::Shutdown => break,
-                        Cmd::Score { rows, count, q, reply } => {
-                            let res =
-                                score_padded(&rt, &small.0, small.1, dim, &rows, count, &q);
-                            let _ = reply.send(res);
-                        }
-                        Cmd::ScoreResident { q, reply } => {
-                            let res = (|| -> Result<Vec<f32>> {
-                                let qbuf = rt.upload_f32(&q, &[dim])?;
-                                let mut out = Vec::with_capacity(resident.len() * big.1);
-                                for vbuf in &resident {
-                                    out.extend(rt.execute_buffers(&big.0, &[vbuf, &qbuf])?);
-                                }
-                                Ok(out)
-                            })();
-                            let _ = reply.send(res);
-                        }
-                    }
-                }
-            })?;
-        let loaded = ready_rx
-            .recv()
-            .map_err(|_| anyhow!("pjrt engine thread died during init"))??;
-        Ok(Self {
-            tx,
-            handle: Some(handle),
-            label: format!("pjrt[{loaded}]"),
-            resident_rows,
-        })
-    }
-
-    /// Rows preloaded on the device.
-    pub fn resident_rows(&self) -> usize {
-        self.resident_rows
-    }
-}
-
-/// Execute the exact artifact over `count` rows, padding each block to
-/// the artifact's fixed `block` rows.
-fn score_padded(
-    rt: &Runtime,
-    artifact: &str,
-    block: usize,
-    dim: usize,
-    rows: &[f32],
-    count: usize,
-    q: &[f32],
-) -> Result<Vec<f32>> {
-    if q.len() != dim {
-        return Err(anyhow!("query dim {} != artifact dim {dim}", q.len()));
-    }
-    if rows.len() != count * dim {
-        return Err(anyhow!("block shape mismatch"));
-    }
-    let mut out = Vec::with_capacity(count);
-    let mut padded = vec![0f32; block * dim];
-    let mut i = 0usize;
-    while i < count {
-        let take = (count - i).min(block);
-        let src = &rows[i * dim..(i + take) * dim];
-        if take == block {
-            let scores =
-                rt.execute_f32(artifact, &[(src, &[block, dim]), (q, &[dim])])?;
-            out.extend_from_slice(&scores[..take]);
-        } else {
-            padded[..src.len()].copy_from_slice(src);
-            padded[src.len()..].fill(0.0);
-            let scores =
-                rt.execute_f32(artifact, &[(&padded, &[block, dim]), (q, &[dim])])?;
-            out.extend_from_slice(&scores[..take]);
+    /// Row-major fused kernel: one pass over the rows, each dotted with
+    /// every query while resident in cache. On a `B`-query batch this
+    /// reads the dataset once instead of `B` times.
+    fn score_batch_into(
+        &self,
+        rows: &[f32],
+        count: usize,
+        dim: usize,
+        queries: &[&[f32]],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        if rows.len() != count * dim {
+            return Err(anyhow!("block shape mismatch: {} vs {count}×{dim}", rows.len()));
         }
-        i += take;
+        for q in queries {
+            if q.len() != dim {
+                return Err(anyhow!("query dim {} != block dim {dim}", q.len()));
+            }
+        }
+        out.clear();
+        out.resize(queries.len() * count, 0.0);
+        for (i, row) in rows.chunks_exact(dim.max(1)).take(count).enumerate() {
+            for (qi, q) in queries.iter().enumerate() {
+                out[qi * count + i] = dot(row, q);
+            }
+        }
+        Ok(())
     }
-    Ok(out)
 }
 
-impl ScoringEngine for PjrtEngine {
-    fn name(&self) -> &str {
-        &self.label
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::*;
+    use crate::runtime::Runtime;
+    use std::sync::mpsc;
+    use std::thread::JoinHandle;
+
+    enum Cmd {
+        Score { rows: Vec<f32>, count: usize, q: Vec<f32>, reply: mpsc::Sender<Result<Vec<f32>>> },
+        ScoreResident { q: Vec<f32>, reply: mpsc::Sender<Result<Vec<f32>>> },
+        Shutdown,
     }
 
-    fn score_block(&self, rows: &[f32], count: usize, q: &[f32]) -> Result<Vec<f32>> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Cmd::Score { rows: rows.to_vec(), count, q: q.to_vec(), reply })
-            .map_err(|_| anyhow!("pjrt engine thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("pjrt engine dropped reply"))?
+    /// PJRT-backed scorer. Owns a worker thread holding the [`Runtime`];
+    /// the handle is `Send` and cheap to share behind an `Arc`.
+    pub struct PjrtEngine {
+        tx: mpsc::Sender<Cmd>,
+        handle: Option<JoinHandle<()>>,
+        label: String,
+        /// Rows preloaded on the device (0 = none).
+        resident_rows: usize,
     }
 
-    fn score_dataset(&self, data: &Matrix, q: &[f32]) -> Result<Vec<f32>> {
-        if self.resident_rows != data.rows() {
-            // Not preloaded (or a different dataset): fall back to the
-            // copying path.
-            let ids: Vec<usize> = (0..data.rows()).collect();
-            return self.score_rows(data, &ids, q);
+    impl PjrtEngine {
+        /// Spawn the owner thread, load artifacts from `artifact_dir`, and
+        /// require an `exact_b*_d{dim}` artifact to exist for this `dim`.
+        pub fn new(artifact_dir: impl Into<PathBuf>, dim: usize) -> Result<Self> {
+            Self::spawn(artifact_dir.into(), dim, None)
         }
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Cmd::ScoreResident { q: q.to_vec(), reply })
-            .map_err(|_| anyhow!("pjrt engine thread gone"))?;
-        let mut out = rx.recv().map_err(|_| anyhow!("pjrt engine dropped reply"))??;
-        out.truncate(data.rows());
+
+        /// Like [`PjrtEngine::new`], but uploads the dataset to the device
+        /// once at startup; [`ScoringEngine::score_dataset`] then only moves
+        /// the query per call (the big win on the serving hot path — see the
+        /// `hotpath` bench and EXPERIMENTS.md §Perf).
+        pub fn with_dataset(
+            artifact_dir: impl Into<PathBuf>,
+            data: &Matrix,
+        ) -> Result<Self> {
+            Self::spawn(artifact_dir.into(), data.cols(), Some(data.clone()))
+        }
+
+        fn spawn(dir: PathBuf, dim: usize, preload: Option<Matrix>) -> Result<Self> {
+            let resident_rows = preload.as_ref().map_or(0, |m| m.rows());
+            let (tx, rx) = mpsc::channel::<Cmd>();
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<String>>();
+            let handle = std::thread::Builder::new()
+                .name("pjrt-engine".into())
+                .spawn(move || {
+                    // Initialize the runtime on the owner thread. Ad-hoc
+                    // copies use the smallest block artifact (minimal
+                    // padding); the resident dataset uses the largest
+                    // (fewest dispatches).
+                    type Resident = Vec<xla::PjRtBuffer>;
+                    struct Init {
+                        rt: Runtime,
+                        small: (String, usize),
+                        big: (String, usize),
+                        resident: Resident,
+                    }
+                    let init = (|| -> Result<Init> {
+                        let mut rt = Runtime::cpu()?;
+                        rt.load_dir(&dir)?;
+                        let (small_name, small_shape) = rt
+                            .find_exact_min(dim)
+                            .ok_or_else(|| anyhow!("no exact_b*_d{dim} artifact in {dir:?}"))?;
+                        let (big_name, big_shape) = rt.find_exact(dim).unwrap();
+                        // Upload the dataset block-by-block (padded tail).
+                        let mut resident = Vec::new();
+                        if let Some(data) = &preload {
+                            let block = big_shape.block;
+                            let mut padded = vec![0f32; block * dim];
+                            let n = data.rows();
+                            let mut i = 0usize;
+                            while i < n {
+                                let take = (n - i).min(block);
+                                padded[..take * dim]
+                                    .copy_from_slice(&data.as_slice()[i * dim..(i + take) * dim]);
+                                padded[take * dim..].fill(0.0);
+                                resident.push(rt.upload_f32(&padded, &[block, dim])?);
+                                i += take;
+                            }
+                        }
+                        Ok(Init {
+                            rt,
+                            small: (small_name, small_shape.block),
+                            big: (big_name, big_shape.block),
+                            resident,
+                        })
+                    })();
+                    let Init { rt, small, big, resident } = match init {
+                        Ok(v) => {
+                            let _ = ready_tx.send(Ok(v.small.0.clone()));
+                            v
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    while let Ok(cmd) = rx.recv() {
+                        match cmd {
+                            Cmd::Shutdown => break,
+                            Cmd::Score { rows, count, q, reply } => {
+                                let res =
+                                    score_padded(&rt, &small.0, small.1, dim, &rows, count, &q);
+                                let _ = reply.send(res);
+                            }
+                            Cmd::ScoreResident { q, reply } => {
+                                let res = (|| -> Result<Vec<f32>> {
+                                    let qbuf = rt.upload_f32(&q, &[dim])?;
+                                    let mut out = Vec::with_capacity(resident.len() * big.1);
+                                    for vbuf in &resident {
+                                        out.extend(rt.execute_buffers(&big.0, &[vbuf, &qbuf])?);
+                                    }
+                                    Ok(out)
+                                })();
+                                let _ = reply.send(res);
+                            }
+                        }
+                    }
+                })?;
+            let loaded = ready_rx
+                .recv()
+                .map_err(|_| anyhow!("pjrt engine thread died during init"))??;
+            Ok(Self {
+                tx,
+                handle: Some(handle),
+                label: format!("pjrt[{loaded}]"),
+                resident_rows,
+            })
+        }
+
+        /// Rows preloaded on the device.
+        pub fn resident_rows(&self) -> usize {
+            self.resident_rows
+        }
+    }
+
+    /// Execute the exact artifact over `count` rows, padding each block to
+    /// the artifact's fixed `block` rows.
+    fn score_padded(
+        rt: &Runtime,
+        artifact: &str,
+        block: usize,
+        dim: usize,
+        rows: &[f32],
+        count: usize,
+        q: &[f32],
+    ) -> Result<Vec<f32>> {
+        if q.len() != dim {
+            return Err(anyhow!("query dim {} != artifact dim {dim}", q.len()));
+        }
+        if rows.len() != count * dim {
+            return Err(anyhow!("block shape mismatch"));
+        }
+        let mut out = Vec::with_capacity(count);
+        let mut padded = vec![0f32; block * dim];
+        let mut i = 0usize;
+        while i < count {
+            let take = (count - i).min(block);
+            let src = &rows[i * dim..(i + take) * dim];
+            if take == block {
+                let scores =
+                    rt.execute_f32(artifact, &[(src, &[block, dim]), (q, &[dim])])?;
+                out.extend_from_slice(&scores[..take]);
+            } else {
+                padded[..src.len()].copy_from_slice(src);
+                padded[src.len()..].fill(0.0);
+                let scores =
+                    rt.execute_f32(artifact, &[(&padded, &[block, dim]), (q, &[dim])])?;
+                out.extend_from_slice(&scores[..take]);
+            }
+            i += take;
+        }
         Ok(out)
     }
+
+    impl ScoringEngine for PjrtEngine {
+        fn name(&self) -> &str {
+            &self.label
+        }
+
+        fn score_block(&self, rows: &[f32], count: usize, q: &[f32]) -> Result<Vec<f32>> {
+            let (reply, rx) = mpsc::channel();
+            self.tx
+                .send(Cmd::Score { rows: rows.to_vec(), count, q: q.to_vec(), reply })
+                .map_err(|_| anyhow!("pjrt engine thread gone"))?;
+            rx.recv().map_err(|_| anyhow!("pjrt engine dropped reply"))?
+        }
+
+        fn score_dataset(&self, data: &Matrix, q: &[f32]) -> Result<Vec<f32>> {
+            if self.resident_rows != data.rows() {
+                // Not preloaded (or a different dataset): fall back to the
+                // copying path.
+                let ids: Vec<usize> = (0..data.rows()).collect();
+                return self.score_rows(data, &ids, q);
+            }
+            let (reply, rx) = mpsc::channel();
+            self.tx
+                .send(Cmd::ScoreResident { q: q.to_vec(), reply })
+                .map_err(|_| anyhow!("pjrt engine thread gone"))?;
+            let mut out = rx.recv().map_err(|_| anyhow!("pjrt engine dropped reply"))??;
+            out.truncate(data.rows());
+            Ok(out)
+        }
+
+        /// Per-query resident scans: the dataset stays on-device, only
+        /// each query vector crosses the host boundary.
+        fn score_dataset_batch(
+            &self,
+            data: &Matrix,
+            queries: &[&[f32]],
+            out: &mut Vec<f32>,
+        ) -> Result<()> {
+            out.clear();
+            out.reserve(queries.len() * data.rows());
+            for q in queries {
+                out.extend(self.score_dataset(data, q)?);
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for PjrtEngine {
+        fn drop(&mut self) {
+            let _ = self.tx.send(Cmd::Shutdown);
+            if let Some(h) = self.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
 }
 
-impl Drop for PjrtEngine {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Cmd::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::PjrtEngine;
+
+/// Stub built without the `pjrt` feature: construction fails, so every
+/// caller (coordinator workers, benches) falls back to [`NativeEngine`].
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtEngine {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtEngine {
+    /// Always fails: the crate was built without PJRT support.
+    pub fn new(_artifact_dir: impl Into<PathBuf>, _dim: usize) -> Result<Self> {
+        Err(anyhow!("pjrt support not compiled in (enable the `pjrt` feature)"))
+    }
+
+    /// Always fails: the crate was built without PJRT support.
+    pub fn with_dataset(_artifact_dir: impl Into<PathBuf>, _data: &Matrix) -> Result<Self> {
+        Err(anyhow!("pjrt support not compiled in (enable the `pjrt` feature)"))
+    }
+
+    /// Rows preloaded on the device (always 0 for the stub).
+    pub fn resident_rows(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl ScoringEngine for PjrtEngine {
+    fn name(&self) -> &str {
+        "pjrt-disabled"
+    }
+
+    fn score_block(&self, _rows: &[f32], _count: usize, _q: &[f32]) -> Result<Vec<f32>> {
+        Err(anyhow!("pjrt support not compiled in"))
     }
 }
 
@@ -304,5 +443,61 @@ mod tests {
             let expect = dot(data.row(i), &q);
             assert!((got[pos] - expect).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn fused_batch_matches_per_query() {
+        let mut rng = Rng::new(2);
+        let data = Matrix::from_fn(97, 33, |_, _| rng.gaussian() as f32);
+        let qs: Vec<Vec<f32>> = (0..5).map(|_| rng.gaussian_vec(33)).collect();
+        let qrefs: Vec<&[f32]> = qs.iter().map(|q| q.as_slice()).collect();
+        let mut fused = Vec::new();
+        NativeEngine.score_dataset_batch(&data, &qrefs, &mut fused).unwrap();
+        assert_eq!(fused.len(), 5 * 97);
+        for (qi, q) in qs.iter().enumerate() {
+            let single = NativeEngine.score_block(data.as_slice(), 97, q).unwrap();
+            assert_eq!(&fused[qi * 97..(qi + 1) * 97], single.as_slice(), "query {qi}");
+        }
+    }
+
+    #[test]
+    fn fused_batch_rejects_bad_shapes() {
+        let rows = [0.0f32; 6];
+        let q = [0.0f32; 2];
+        let mut out = Vec::new();
+        assert!(NativeEngine.score_batch_into(&rows, 2, 2, &[&q], &mut out).is_err());
+        let q3 = [0.0f32; 3];
+        assert!(NativeEngine.score_batch_into(&rows, 3, 2, &[&q3], &mut out).is_err());
+    }
+
+    #[test]
+    fn default_score_batch_into_matches_fused() {
+        // Drive the trait-default path through a wrapper engine that
+        // only implements `score_block`.
+        struct Plain;
+        impl ScoringEngine for Plain {
+            fn name(&self) -> &str {
+                "plain"
+            }
+            fn score_block(&self, rows: &[f32], count: usize, q: &[f32]) -> Result<Vec<f32>> {
+                NativeEngine.score_block(rows, count, q)
+            }
+        }
+        let mut rng = Rng::new(3);
+        let data = Matrix::from_fn(40, 16, |_, _| rng.gaussian() as f32);
+        let qs: Vec<Vec<f32>> = (0..3).map(|_| rng.gaussian_vec(16)).collect();
+        let qrefs: Vec<&[f32]> = qs.iter().map(|q| q.as_slice()).collect();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        Plain.score_dataset_batch(&data, &qrefs, &mut a).unwrap();
+        NativeEngine.score_dataset_batch(&data, &qrefs, &mut b).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_stub_fails_to_construct() {
+        assert!(PjrtEngine::new("/nonexistent", 16).is_err());
+        let m = Matrix::zeros(2, 2);
+        assert!(PjrtEngine::with_dataset("/nonexistent", &m).is_err());
     }
 }

@@ -14,13 +14,22 @@
 //! PJRT objects are not `Send`/`Sync`, so [`engine::PjrtEngine`] wraps a
 //! dedicated owner thread behind a cloneable handle — the coordinator
 //! talks to it through a channel.
+//!
+//! The whole PJRT path sits behind the off-by-default `pjrt` cargo
+//! feature (the `xla` bindings are not available in the offline build
+//! image). With the feature off, [`Runtime`] is absent, artifact-name
+//! parsing still works, and `PjrtEngine` is a stub whose constructors
+//! fail — callers fall back to [`engine::NativeEngine`].
 
 pub mod engine;
 
 pub use engine::{NativeEngine, PjrtEngine, ScoringEngine};
 
-use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
+use crate::errors::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
 
 /// Shape signature of an artifact, parsed from its file name.
@@ -63,6 +72,7 @@ pub fn parse_artifact_name(name: &str) -> Option<ArtifactShape> {
     })
 }
 
+#[cfg(feature = "pjrt")]
 struct LoadedArtifact {
     exe: xla::PjRtLoadedExecutable,
     shape: ArtifactShape,
@@ -70,12 +80,14 @@ struct LoadedArtifact {
 
 /// A PJRT CPU client plus a cache of compiled artifacts. **Not** `Send`:
 /// keep it on one thread (see [`engine::PjrtEngine`] for the threaded
-/// wrapper).
+/// wrapper). Only available with the `pjrt` feature.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     artifacts: HashMap<String, LoadedArtifact>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create the CPU PJRT client.
     pub fn cpu() -> Result<Self> {

@@ -48,15 +48,24 @@ impl<T> std::fmt::Display for SendError<T> {
 impl<T> std::error::Error for SendError<T> {}
 
 /// Error returned by `recv`.
-#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum RecvError {
     /// Timed out waiting (recv_timeout only).
-    #[error("recv timeout")]
     Timeout,
     /// Buffer empty and all senders gone.
-    #[error("channel disconnected")]
     Disconnected,
 }
+
+impl std::fmt::Display for RecvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Timeout => write!(f, "recv timeout"),
+            Self::Disconnected => write!(f, "channel disconnected"),
+        }
+    }
+}
+
+impl std::error::Error for RecvError {}
 
 struct State<T> {
     queue: VecDeque<T>,

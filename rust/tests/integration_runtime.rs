@@ -1,8 +1,10 @@
 //! Integration: the rust PJRT runtime executes the python-AOT'd HLO
 //! artifacts and matches the native engine bit-for-tolerance.
 //!
-//! Requires `make artifacts` to have run (skips politely otherwise so
+//! Requires the `pjrt` cargo feature (the `xla` bindings) *and*
+//! `make artifacts` to have run (skips politely otherwise so
 //! `cargo test` stays green on a fresh checkout).
+#![cfg(feature = "pjrt")]
 
 use bandit_mips::linalg::{Matrix, Rng};
 use bandit_mips::runtime::{NativeEngine, PjrtEngine, Runtime, ScoringEngine};

@@ -4,10 +4,12 @@
 //! deterministic RNG through many random instances per property —
 //! failures print the offending seed for replay.
 
+use bandit_mips::algos::{BoundedMeIndex, MipsIndex, MipsParams, NaiveIndex};
 use bandit_mips::bandit::{
-    hoeffding_sample_size, m_bounded, serfling_radius, AdversarialArms, BoundedMe,
-    BoundedMeConfig, ExplicitArms, MatrixArms, PullOrder, RewardSource,
+    hoeffding_sample_size, m_bounded, serfling_radius, AdversarialArms, BanditScratch,
+    BoundedMe, BoundedMeConfig, ExplicitArms, MatrixArms, PullOrder, RewardSource,
 };
+use bandit_mips::exec::QueryContext;
 use bandit_mips::linalg::{topk::arg_top_k, Matrix, Rng};
 
 const CASES: usize = 60;
@@ -179,6 +181,114 @@ fn prop_topk_matches_sort() {
         });
         idx.truncate(k.min(n));
         assert_eq!(got, idx, "case {case}");
+    }
+}
+
+/// Context reuse is invisible: `query_with` on one long-lived
+/// `QueryContext` returns bit-identical results to a fresh context (and
+/// to plain `query`) across random instances, orders, and knobs.
+#[test]
+fn prop_query_with_context_reuse_bit_identical() {
+    let mut rng = Rng::new(0xCC7E);
+    let mut ctx = QueryContext::new();
+    for case in 0..25 {
+        let n = 10 + rng.next_below(80);
+        let d = 16 + rng.next_below(200);
+        let data = Matrix::from_fn(n, d, |_, _| rng.gaussian() as f32);
+        let order = match case % 3 {
+            0 => PullOrder::Permuted,
+            1 => PullOrder::Sequential,
+            _ => PullOrder::BlockShuffled(1 + rng.next_below(32)),
+        };
+        let idx = BoundedMeIndex::with_order(data, order);
+        let q: Vec<f32> = rng.gaussian_vec(d);
+        let params = MipsParams {
+            k: 1 + rng.next_below(5),
+            epsilon: rng.uniform(1e-6, 0.5),
+            delta: rng.uniform(0.01, 0.4),
+            seed: case as u64,
+        };
+        let fresh = idx.query_with(&q, &params, &mut QueryContext::new());
+        let reused = idx.query_with(&q, &params, &mut ctx);
+        let plain = idx.query(&q, &params);
+        assert_eq!(fresh.indices, reused.indices, "case {case}");
+        assert_eq!(fresh.flops, reused.flops, "case {case}");
+        assert_eq!(plain.indices, reused.indices, "case {case}");
+        for (a, b) in fresh.scores.iter().zip(&reused.scores) {
+            assert_eq!(a.to_bits(), b.to_bits(), "case {case}: score bits differ");
+        }
+    }
+}
+
+/// `query_batch` agrees with per-query `query` (same shared params) on
+/// Gaussian data across seeds, for both BOUNDEDME and the fused naive
+/// scan.
+#[test]
+fn prop_query_batch_agrees_with_single_queries() {
+    let mut rng = Rng::new(0xBA7C);
+    for case in 0..12 {
+        let n = 20 + rng.next_below(100);
+        let d = 32 + rng.next_below(128);
+        let data = Matrix::from_fn(n, d, |_, _| rng.gaussian() as f32);
+        let nq = 2 + rng.next_below(6);
+        let queries: Vec<Vec<f32>> = (0..nq).map(|_| rng.gaussian_vec(d)).collect();
+        let refs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        let params = MipsParams {
+            k: 1 + rng.next_below(4),
+            epsilon: rng.uniform(1e-9, 0.3),
+            delta: 0.1,
+            seed: 1000 + case as u64,
+        };
+        let mut ctx = QueryContext::new();
+
+        let bme = BoundedMeIndex::with_order(
+            data.clone(),
+            PullOrder::BlockShuffled(1 + rng.next_below(48)),
+        );
+        let batch = bme.query_batch(&refs, &params, &mut ctx);
+        for (i, q) in queries.iter().enumerate() {
+            let single = bme.query(q, &params);
+            assert_eq!(batch[i].indices, single.indices, "case {case} bme q{i}");
+            assert_eq!(batch[i].flops, single.flops, "case {case} bme q{i}");
+        }
+
+        let naive = NaiveIndex::new(data);
+        let batch = naive.query_batch(&refs, &params, &mut ctx);
+        for (i, q) in queries.iter().enumerate() {
+            let single = naive.query(q, &params);
+            assert_eq!(batch[i].indices, single.indices, "case {case} naive q{i}");
+            assert_eq!(batch[i].scores, single.scores, "case {case} naive q{i}");
+        }
+    }
+}
+
+/// BOUNDEDME with a reused `BanditScratch` equals the allocating `run`
+/// on ExplicitArms instances.
+#[test]
+fn prop_run_in_scratch_reuse_matches_run() {
+    let mut rng = Rng::new(0x5C7A);
+    let mut scratch = BanditScratch::new();
+    for case in 0..20 {
+        let n = 3 + rng.next_below(60);
+        let n_list = 4 + rng.next_below(120);
+        let lists: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..n_list).map(|_| rng.next_f64()).collect())
+            .collect();
+        let env = ExplicitArms::new(lists).with_range(0.0, 1.0);
+        let cfg = BoundedMeConfig {
+            k: 1 + rng.next_below(n.min(6)),
+            epsilon: rng.uniform(1e-9, 0.5),
+            delta: rng.uniform(0.01, 0.4),
+        };
+        let algo = BoundedMe::new(cfg);
+        let fresh = algo.run(&env).result;
+        let reused = algo.run_in(&env, &mut scratch);
+        assert_eq!(fresh.arms, reused.arms, "case {case}");
+        assert_eq!(fresh.total_pulls, reused.total_pulls, "case {case}");
+        assert_eq!(fresh.rounds, reused.rounds, "case {case}");
+        for (a, b) in fresh.means.iter().zip(&reused.means) {
+            assert_eq!(a.to_bits(), b.to_bits(), "case {case}: mean bits differ");
+        }
     }
 }
 
