@@ -5,6 +5,7 @@ use bandit_mips::benchkit::{Bencher, Reporter};
 use bandit_mips::coordinator::{
     Backend, Coordinator, CoordinatorConfig, QueryRequest,
 };
+use bandit_mips::data::shard::ShardSpec;
 use bandit_mips::data::synthetic::gaussian_dataset;
 use bandit_mips::jsonlite::Json;
 use std::time::Duration;
@@ -72,6 +73,46 @@ fn main() {
         coord.shutdown();
     }
 
+    // Sharded scenario: the same dataset split S ways across a fixed
+    // 4-worker pool — measures fan-out + merge overhead vs the
+    // smaller per-shard scans. Shard count is emitted per point.
+    let mut shard_points: Vec<Json> = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let coord = Coordinator::new(
+            ds.vectors.clone(),
+            CoordinatorConfig {
+                workers: 4,
+                max_batch: 32,
+                batch_timeout: Duration::from_micros(500),
+                queue_capacity: 4096,
+                backend: Backend::Native,
+                shard: ShardSpec::contiguous(shards),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut qps = 0.0;
+        r.bench(&b, &format!("serving/sharded shards={shards} (100q)"), || {
+            qps = run_load(&coord, 100, &q);
+            qps as u64
+        });
+        let m = coord.metrics();
+        println!(
+            "    ~{qps:.0} qps; mean batch {:.1}; service p50 {:.3} ms",
+            m.mean_batch_size,
+            m.service.0 * 1e3
+        );
+        shard_points.push(Json::obj([
+            ("shards", Json::Num(shards as f64)),
+            ("workers", Json::Num(4.0)),
+            ("qps", Json::Num(qps)),
+            ("mean_batch_size", Json::Num(m.mean_batch_size)),
+            ("service_p50_s", Json::Num(m.service.0)),
+            ("queue_p99_s", Json::Num(m.queue_wait.2)),
+        ]));
+        coord.shutdown();
+    }
+
     // Coordinator overhead: single trivial exact query on a tiny dataset
     // (upper-bounds router+batcher+channel cost per request).
     let tiny = gaussian_dataset(8, 16, 5);
@@ -100,6 +141,9 @@ fn main() {
     r.write_json(
         "serving",
         "BENCH_serving.json",
-        &[("closed_loop", Json::Arr(load_points))],
+        &[
+            ("closed_loop", Json::Arr(load_points)),
+            ("sharded", Json::Arr(shard_points)),
+        ],
     );
 }

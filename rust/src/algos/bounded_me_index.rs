@@ -3,8 +3,10 @@
 
 use super::{MipsIndex, MipsParams, MipsResult};
 use crate::bandit::{BoundedMe, BoundedMeConfig, MatrixArms, PullOrder, RewardSource};
+use crate::data::shard::Shard;
+use crate::exec::shard::ShardPartial;
 use crate::exec::QueryContext;
-use crate::linalg::Matrix;
+use crate::linalg::{dot, Matrix};
 
 /// Preprocessing-free MIPS with a suboptimality guarantee: for any query
 /// and user-chosen `0 < ε, δ < 1`, the returned set is ε-optimal (in
@@ -46,6 +48,47 @@ impl BoundedMeIndex {
     /// The dataset's largest |coordinate| (coarse reward-range input).
     pub fn max_abs_coord(&self) -> f32 {
         self.colmax.iter().fold(f32::MIN_POSITIVE, |m, &x| m.max(x))
+    }
+
+    /// Shard-aware batch entry point: the **sample-then-confirm** step
+    /// of sharded BOUNDEDME. `params` must already be the per-shard
+    /// split from [`crate::exec::shard::shard_params`] — `(k_s, ε,
+    /// δ/S)` — and this index must be built over `shard`'s matrix.
+    ///
+    /// Per query: run the bandit over the shard's rows (the *sample*
+    /// step, sharing one cached pull order across the batch like
+    /// [`MipsIndex::query_batch`]), then exactly rescore the ≤ `k_s`
+    /// surviving candidates (the *confirm* step — row-local, `k_s · N`
+    /// flops) so the emitted partial carries true inner products under
+    /// **dataset-global** ids. The cross-shard merge can then rank on
+    /// exact scores, which is what lets the per-shard ε pass through
+    /// unsplit (see [`crate::exec::shard`] module docs).
+    pub fn query_batch_shard(
+        &self,
+        queries: &[&[f32]],
+        params: &MipsParams,
+        ctx: &mut QueryContext,
+        shard: &Shard,
+    ) -> Vec<ShardPartial> {
+        debug_assert_eq!(self.data.rows(), shard.rows(), "index/shard row mismatch");
+        let dim = self.data.cols();
+        queries
+            .iter()
+            .map(|q| {
+                let res = self.query_with(q, params, ctx);
+                let entries: Vec<(f32, usize)> = res
+                    .indices
+                    .iter()
+                    .map(|&local| (dot(self.data.row(local), q), shard.global_id(local)))
+                    .collect();
+                let confirm_flops = (entries.len() * dim) as u64;
+                ShardPartial {
+                    flops: res.flops + confirm_flops,
+                    scanned: entries.len(),
+                    entries,
+                }
+            })
+            .collect()
     }
 
     /// The per-query reward bound `b = max_j colmax[j]·|q_j|`.
@@ -238,6 +281,29 @@ mod tests {
             let single = idx.query(q, &params);
             assert_eq!(batch[i].indices, single.indices, "query {i}");
             assert_eq!(batch[i].flops, single.flops, "query {i}");
+        }
+    }
+
+    #[test]
+    fn shard_entry_point_confirms_with_global_ids() {
+        use crate::data::shard::{ShardSpec, ShardedMatrix};
+        let data = gaussian(40, 64, 12);
+        let sm = ShardedMatrix::new(data.clone(), ShardSpec::contiguous(2));
+        let shard = sm.shard(1); // rows 20..40
+        let idx =
+            BoundedMeIndex::with_order(shard.matrix().clone(), PullOrder::BlockShuffled(16));
+        let q: Vec<f32> = Rng::new(77).gaussian_vec(64);
+        let mut ctx = QueryContext::new();
+        let params = MipsParams { k: 3, epsilon: 1e-9, delta: 0.05, seed: 1 };
+        let partials = idx.query_batch_shard(&[&q[..]], &params, &mut ctx, shard);
+        let partial = &partials[0];
+        assert_eq!(partial.entries.len(), 3);
+        assert_eq!(partial.scanned, 3);
+        for &(score, gid) in &partial.entries {
+            assert!((20..40).contains(&gid), "id {gid} not lifted to global");
+            // Confirm step: scores are exact inner products, bit-for-bit.
+            let exact = crate::linalg::dot(data.row(gid), &q);
+            assert_eq!(score.to_bits(), exact.to_bits());
         }
     }
 

@@ -2,6 +2,8 @@
 //! measured against.
 
 use super::{exact_rank, MipsIndex, MipsParams, MipsResult};
+use crate::data::shard::Shard;
+use crate::exec::shard::ShardPartial;
 use crate::exec::QueryContext;
 use crate::linalg::{dot, Matrix, TopK};
 
@@ -14,6 +16,37 @@ impl NaiveIndex {
     /// Wrap a vector set.
     pub fn new(data: Matrix) -> Self {
         Self { data }
+    }
+
+    /// Shard-aware batch entry point: fused scan over this index's rows
+    /// (which must be `shard`'s matrix), emitting per-query top-`k`
+    /// partials with **dataset-global** row ids so the cross-shard merge
+    /// ([`crate::exec::shard::merge_partials`]) can run on them
+    /// directly. Byte-identical scores to the unsharded scan — the rows
+    /// are the same bytes (contiguous shards are views) dotted by the
+    /// same kernel.
+    pub fn query_batch_shard(
+        &self,
+        queries: &[&[f32]],
+        k: usize,
+        shard: &Shard,
+    ) -> Vec<ShardPartial> {
+        debug_assert_eq!(self.data.rows(), shard.rows(), "index/shard row mismatch");
+        let mut tops: Vec<TopK> = queries.iter().map(|_| TopK::new(k)).collect();
+        for (i, row) in self.data.iter_rows().enumerate() {
+            let gid = shard.global_id(i);
+            for (qi, q) in queries.iter().enumerate() {
+                tops[qi].push(dot(row, q), gid);
+            }
+        }
+        let (n, d) = (self.data.rows(), self.data.cols());
+        tops.into_iter()
+            .map(|top| ShardPartial {
+                entries: top.into_sorted(),
+                flops: (n * d) as u64,
+                scanned: n,
+            })
+            .collect()
     }
 }
 

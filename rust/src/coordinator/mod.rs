@@ -6,17 +6,23 @@
 //! production-shaped service:
 //!
 //! ```text
-//!  submit() ──► bounded router queue ──► batcher (size/deadline policy)
-//!                                          │ batches
-//!                                          ▼
-//!                                   worker pool (each owns a
-//!                                   ScoringEngine + BoundedME state)
-//!                                          │ responses
-//!                                          ▼
-//!                                   per-request channels + metrics
+//!  submit() ──► bounded queue ──► batcher (size/deadline policy)
+//!                                    │ batches
+//!                                    ▼
+//!                              shard router (shed + Auto planning,
+//!                              once per query, before fan-out)
+//!                               │ fan-out: one ShardBatch per shard
+//!                  ┌────────────┼────────────┐
+//!                  ▼            ▼            ▼
+//!             shard-0 workers   …       shard-S−1 workers
+//!             (ScoringEngine + BoundedME over their shard)
+//!                  └──── partial top-K ──────┘
+//!                               ▼
+//!               last-shard-completes merge (TopK, stable
+//!               id tie-break) ─► per-request channels + metrics
 //! ```
 //!
-//! * **Backpressure**: the router queue is bounded; `submit` fails fast
+//! * **Backpressure**: the submit queue is bounded; `submit` fails fast
 //!   with [`CoordinatorError::QueueFull`] instead of buffering unbounded.
 //! * **Dynamic batching**: a batch closes when it reaches
 //!   `max_batch` or when the oldest request has waited `batch_timeout` —
@@ -27,11 +33,22 @@
 //!   device-resident scoring), and BOUNDEDME queries of a batch share
 //!   one block-shuffled coordinate permutation via
 //!   [`crate::algos::MipsIndex::query_batch`].
+//! * **Sharding**: with [`CoordinatorConfig::shard`] set to `S ≥ 2`
+//!   shards, workers are *shard-pinned* (worker `w` serves shard `w mod
+//!   S`) and the router fans every batch out to all shards. Exact items
+//!   run one per-shard [`ScoringEngine::score_dataset_batch`]; BOUNDEDME
+//!   items run per-shard at the `(ε, δ/S)` split from
+//!   [`crate::exec::shard::shard_params`] and are exactly rescored
+//!   before the merge (sample-then-confirm — see [`crate::exec::shard`]
+//!   for why the union keeps the (ε, δ) guarantee). The last shard to
+//!   finish a query merges and replies.
 //! * **Backends**: workers score through a [`ScoringEngine`] — pure-Rust
 //!   or the PJRT AOT artifact (see [`crate::runtime`]).
-//! * **Planning**: [`QueryMode::Auto`] requests are routed per query by
-//!   [`QueryPlan`] — knobs too tight for sampling to win go straight to
-//!   the exact engine.
+//! * **Planning**: [`QueryMode::Auto`] requests are resolved by the
+//!   router, **once per query before fan-out** — knobs too tight for
+//!   sampling to win go straight to the exact engine, and every shard
+//!   sees the same decision (plans depend on `dim`, which sharding
+//!   never splits).
 
 pub mod server;
 pub mod stats;
@@ -40,12 +57,14 @@ pub use stats::{MetricsRegistry, MetricsSnapshot};
 
 use crate::algos::{BoundedMeIndex, MipsIndex, MipsParams, MipsResult};
 use crate::bandit::PullOrder;
+use crate::data::shard::{Shard, ShardSpec, ShardedMatrix};
+use crate::exec::shard::{shard_params, ShardPartial};
 use crate::exec::{PlanAlgo, QueryContext, QueryPlan};
 use crate::linalg::{Matrix, TopK};
 use crate::runtime::{NativeEngine, PjrtEngine, ScoringEngine};
 use crate::sync::{bounded, Receiver, RecvError, SendError, Sender};
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Which compute backend workers use for exact scoring.
@@ -78,6 +97,12 @@ pub struct CoordinatorConfig {
     /// [`QueryPlan::block_width`] for the dataset's dimension at
     /// startup.
     pub pull_order: PullOrder,
+    /// Dataset sharding across the worker pool (see
+    /// [`crate::data::shard`]). The default is a single shard —
+    /// identical behavior to the unsharded coordinator. With `S ≥ 2`
+    /// shards the worker count is raised to at least `S` so every shard
+    /// has a pinned worker.
+    pub shard: ShardSpec,
 }
 
 impl Default for CoordinatorConfig {
@@ -89,6 +114,7 @@ impl Default for CoordinatorConfig {
             queue_capacity: 1024,
             backend: Backend::Native,
             pull_order: PullOrder::BlockShuffled(0),
+            shard: ShardSpec::single(),
         }
     }
 }
@@ -169,21 +195,35 @@ impl QueryRequest {
 pub struct QueryResponse {
     /// Result indices, best first.
     pub indices: Vec<usize>,
-    /// Score estimates.
+    /// Scores, best first. Exact-mode answers always carry exact inner
+    /// products. BOUNDEDME answers carry the bandit's estimates
+    /// (`N·p̂`) on an unsharded coordinator, but **exact rescored**
+    /// inner products on a sharded one (`S ≥ 2`) — the
+    /// sample-then-confirm merge ranks on true products (see
+    /// [`crate::exec::shard`]). Don't compare raw BOUNDEDME score
+    /// values across deployments with different shard counts.
     pub scores: Vec<f32>,
     /// Flops spent.
     pub flops: u64,
-    /// Queue wait before a worker picked the batch up.
+    /// Queue wait from submission to *router* pickup. Time spent
+    /// waiting in a backed-up per-shard channel after fan-out is
+    /// accounted in `service`, not here.
     pub queue_wait: Duration,
-    /// Service time inside the worker.
+    /// Time from shard fan-out to the merged reply (includes any
+    /// shard-channel wait plus the slowest shard's compute).
     pub service: Duration,
     /// Size of the batch this query rode in.
     pub batch_size: usize,
-    /// Worker id that served it.
+    /// Worker id that served it (under sharding: the worker whose shard
+    /// finished last and performed the merge). `usize::MAX` when no
+    /// worker touched the request (shed by the router).
     pub worker: usize,
     /// True when the request was shed (deadline exceeded in queue): no
     /// results were computed.
     pub shed: bool,
+    /// Shard partials merged into this answer (1 when unsharded, 0 for
+    /// shed requests — they never reached a shard).
+    pub shards: usize,
 }
 
 /// Submission failures.
@@ -235,14 +275,19 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the coordinator over a vector set.
+    /// Start the coordinator over a vector set, split per
+    /// [`CoordinatorConfig::shard`].
     pub fn new(data: Matrix, cfg: CoordinatorConfig) -> crate::Result<Self> {
         assert!(cfg.workers >= 1 && cfg.max_batch >= 1);
         let dim = data.cols();
-        let data = Arc::new(data);
+        let sharded = Arc::new(ShardedMatrix::new(data, cfg.shard));
+        let n_shards = sharded.num_shards();
+        // Every shard needs at least one pinned worker; extra workers
+        // round-robin across shards.
+        let workers = cfg.workers.max(n_shards);
         let metrics = Arc::new(MetricsRegistry::new());
         let (submit_tx, submit_rx) = bounded::<Pending>(cfg.queue_capacity);
-        let (batch_tx, batch_rx) = bounded::<Batch>(cfg.workers * 2);
+        let (batch_tx, batch_rx) = bounded::<Batch>(workers * 2);
 
         let mut threads = Vec::new();
 
@@ -257,29 +302,57 @@ impl Coordinator {
             );
         }
 
-        // Worker threads. The colmax scan is shared; each worker's
-        // BoundedMeIndex clone is Arc-backed, so per-worker state is one
-        // O(dim) colmax copy plus the long-lived QueryContext.
-        let colmax = Arc::new(crate::algos::bounded_me_index::column_maxima(&data));
+        // Shard router thread: sheds, resolves Auto plans once per
+        // query, and fans each batch out to every shard's channel.
+        let mut shard_txs = Vec::with_capacity(n_shards);
+        let mut shard_rxs = Vec::with_capacity(n_shards);
+        let per_shard_cap = (workers / n_shards).max(1) * 2;
+        for _ in 0..n_shards {
+            let (tx, rx) = bounded::<ShardBatch>(per_shard_cap);
+            shard_txs.push(tx);
+            shard_rxs.push(rx);
+        }
+        {
+            let metrics = metrics.clone();
+            threads.push(
+                std::thread::Builder::new().name("shard-router".into()).spawn(move || {
+                    run_router(batch_rx, shard_txs, dim, &metrics)
+                })?,
+            );
+        }
+
+        // Shard-pinned worker threads: worker `w` serves shard `w mod
+        // S`. The per-shard colmax scan is shared across that shard's
+        // workers; shard matrices share storage with the backing data
+        // (contiguous) so per-worker state stays one O(dim) colmax copy
+        // plus the long-lived QueryContext.
+        let colmaxes: Vec<Arc<Vec<f32>>> = sharded
+            .shards()
+            .iter()
+            .map(|s| Arc::new(crate::algos::bounded_me_index::column_maxima(s.matrix())))
+            .collect();
         // `BlockShuffled(0)` = planner-chosen width for this dimension.
         let order = match cfg.pull_order {
             PullOrder::BlockShuffled(0) => PullOrder::BlockShuffled(QueryPlan::block_width(dim)),
             o => o,
         };
-        for w in 0..cfg.workers {
-            let rx = batch_rx.clone();
-            let data = data.clone();
-            let colmax = colmax.clone();
+        for w in 0..workers {
+            let shard_id = w % n_shards;
+            let rx = shard_rxs[shard_id].clone();
+            let sharded = sharded.clone();
+            let colmax = colmaxes[shard_id].clone();
             let metrics = metrics.clone();
             let backend = cfg.backend.clone();
             threads.push(std::thread::Builder::new().name(format!("worker-{w}")).spawn(
                 move || {
+                    let shard = sharded.shard(shard_id);
                     let engine: Box<dyn ScoringEngine> = match &backend {
                         Backend::Native => Box::new(NativeEngine),
                         Backend::Pjrt { artifact_dir } => {
-                            // Preload the dataset to the device so exact
-                            // queries only move the query vector.
-                            match PjrtEngine::with_dataset(artifact_dir.clone(), &data) {
+                            // Preload this worker's shard to the device so
+                            // exact queries only move the query vector.
+                            match PjrtEngine::with_dataset(artifact_dir.clone(), shard.matrix())
+                            {
                                 Ok(e) => Box::new(e),
                                 Err(err) => {
                                     crate::logkit::error!(
@@ -292,11 +365,19 @@ impl Coordinator {
                         }
                     };
                     let index = BoundedMeIndex::from_parts(
-                        (*data).clone(),
+                        shard.matrix().clone(),
                         colmax.as_ref().clone(),
                         order,
                     );
-                    run_worker(w, rx, &index, engine.as_ref(), &metrics);
+                    run_shard_worker(
+                        w,
+                        n_shards,
+                        rx,
+                        &index,
+                        shard,
+                        engine.as_ref(),
+                        &metrics,
+                    );
                 },
             )?);
         }
@@ -383,198 +464,393 @@ fn run_batcher(
     }
 }
 
-/// Worker loop: each worker owns one long-lived [`QueryContext`] and
-/// executes whole batches through the fused execution core.
-fn run_worker(
+/// A query in flight across the shard fan-out: the resolved request,
+/// the merge accumulator, and the reply route. Shared by `Arc` between
+/// the router and every shard's workers.
+struct InFlight {
+    vector: Vec<f32>,
+    k: usize,
+    epsilon: f64,
+    delta: f64,
+    seed: u64,
+    /// Post-plan mode: `Exact` or `BoundedMe`, never `Auto` (the router
+    /// resolved it before fan-out).
+    mode: QueryMode,
+    queue_wait: Duration,
+    batch_size: usize,
+    /// Original submission instant — workers re-check `deadline`
+    /// against it at shard pickup (a query can expire while sitting in
+    /// a backed-up shard channel after passing the router's check).
+    submitted: Instant,
+    /// Service-level deadline, measured from submission.
+    deadline: Option<Duration>,
+    /// Fan-out instant; the merging worker measures service from it.
+    started: Instant,
+    reply: Sender<QueryResponse>,
+    merge: Mutex<Merge>,
+}
+
+/// Cross-shard merge accumulator: partial top-K entries from each shard
+/// fold into one [`TopK`] (stable global-id tie-break, so the result is
+/// independent of which shard finishes first). The worker that drops
+/// `remaining` to zero builds and sends the reply.
+struct Merge {
+    top: TopK,
+    flops: u64,
+    remaining: usize,
+    /// Set when any shard saw the item's deadline expired at pickup;
+    /// the finisher then replies `shed = true` (empty results) instead
+    /// of a merged answer.
+    shed: bool,
+}
+
+/// One dynamic batch, routed to one shard (every shard receives its own
+/// `ShardBatch` holding the same `Arc`'d items).
+struct ShardBatch {
+    items: Vec<Arc<InFlight>>,
+}
+
+/// Router loop: for each dynamic batch, shed expired items, resolve
+/// [`QueryMode::Auto`] through [`QueryPlan`] **once per query**, then
+/// fan the batch out to every shard's channel.
+fn run_router(
+    batch_rx: Receiver<Batch>,
+    shard_txs: Vec<Sender<ShardBatch>>,
+    dim: usize,
+    metrics: &MetricsRegistry,
+) {
+    let n_shards = shard_txs.len();
+    while let Ok(batch) = batch_rx.recv() {
+        let picked_up = Instant::now();
+        let batch_size = batch.items.len();
+        let mut items: Vec<Arc<InFlight>> = Vec::with_capacity(batch_size);
+        for pending in batch.items {
+            let queue_wait = picked_up - pending.submitted;
+            // Load shedding: don't fan out answers nobody is waiting for.
+            if let Some(deadline) = pending.req.deadline {
+                if queue_wait > deadline {
+                    metrics.record_shed();
+                    let _ = pending.reply.send(QueryResponse {
+                        indices: Vec::new(),
+                        scores: Vec::new(),
+                        flops: 0,
+                        queue_wait,
+                        service: Duration::ZERO,
+                        batch_size,
+                        worker: usize::MAX, // shed by the router, no worker involved
+                        shed: true,
+                        shards: 0,
+                    });
+                    continue;
+                }
+            }
+            let req = pending.req;
+            let mode = match req.mode {
+                QueryMode::Auto => {
+                    match QueryPlan::pick(req.k, req.epsilon, req.delta, dim).algo {
+                        PlanAlgo::Exact => QueryMode::Exact,
+                        PlanAlgo::BoundedMe => QueryMode::BoundedMe,
+                    }
+                }
+                m => m,
+            };
+            // BOUNDEDME always returns ≥ 1 result (the index clamps k);
+            // the merge cap must match or it would drop that result.
+            let top_k = match mode {
+                QueryMode::Exact => req.k,
+                _ => req.k.max(1),
+            };
+            items.push(Arc::new(InFlight {
+                vector: req.vector,
+                k: req.k,
+                epsilon: req.epsilon,
+                delta: req.delta,
+                seed: req.seed,
+                mode,
+                queue_wait,
+                batch_size,
+                submitted: pending.submitted,
+                deadline: req.deadline,
+                started: Instant::now(),
+                reply: pending.reply,
+                merge: Mutex::new(Merge {
+                    top: TopK::new(top_k),
+                    flops: 0,
+                    remaining: n_shards,
+                    shed: false,
+                }),
+            }));
+        }
+        if items.is_empty() {
+            continue;
+        }
+        for tx in &shard_txs {
+            if tx.send(ShardBatch { items: items.clone() }).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+/// Fold one shard's partial into an item's merge; the worker whose
+/// partial completes the fan-out builds and sends the reply. `expired`
+/// marks this shard's contribution as a deadline-expiry observation
+/// (flags the whole merge as shed).
+fn complete(
+    item: &Arc<InFlight>,
+    partial: ShardPartial,
+    n_shards: usize,
     worker_id: usize,
-    rx: Receiver<Batch>,
+    metrics: &MetricsRegistry,
+    expired: bool,
+) {
+    let finished = {
+        let mut m = item.merge.lock().unwrap();
+        m.shed |= expired;
+        m.flops += partial.flops;
+        for (score, id) in partial.entries {
+            m.top.push(score, id);
+        }
+        m.remaining -= 1;
+        if m.remaining == 0 {
+            let top = std::mem::replace(&mut m.top, TopK::new(0));
+            Some((top.into_sorted(), m.flops, m.shed))
+        } else {
+            None
+        }
+    };
+    if let Some((ranked, flops, was_shed)) = finished {
+        let service = item.started.elapsed();
+        if was_shed {
+            // Some shard saw the deadline expired at pickup: the client
+            // has timed out, reply shed (no results; `flops` reports
+            // whatever work other shards had already sunk).
+            metrics.record_shed();
+            let _ = item.reply.send(QueryResponse {
+                indices: Vec::new(),
+                scores: Vec::new(),
+                flops,
+                queue_wait: item.queue_wait,
+                service,
+                batch_size: item.batch_size,
+                worker: worker_id,
+                shed: true,
+                shards: 0,
+            });
+            return;
+        }
+        metrics.record_query(item.queue_wait, service, flops);
+        let _ = item.reply.send(QueryResponse {
+            indices: ranked.iter().map(|&(_, i)| i).collect(),
+            scores: ranked.iter().map(|&(s, _)| s).collect(),
+            flops,
+            queue_wait: item.queue_wait,
+            service,
+            batch_size: item.batch_size,
+            worker: worker_id,
+            shed: false,
+            shards: n_shards,
+        });
+    }
+}
+
+/// A shard worker noticed the item's deadline expired while it waited
+/// in the shard channel: contribute an empty partial flagged as shed
+/// (keeping the `remaining` countdown correct so exactly one worker
+/// replies).
+fn complete_shed(
+    item: &Arc<InFlight>,
+    n_shards: usize,
+    worker_id: usize,
+    metrics: &MetricsRegistry,
+) {
+    let empty = ShardPartial { entries: Vec::new(), flops: 0, scanned: 0 };
+    complete(item, empty, n_shards, worker_id, metrics, true);
+}
+
+/// Send a fully-formed single-shard result directly (the `S = 1`
+/// BOUNDEDME path, bit-identical to the pre-sharding coordinator: the
+/// bandit's own ranking and estimate scores pass through untouched).
+fn respond_direct(
+    item: &Arc<InFlight>,
+    result: MipsResult,
+    worker_id: usize,
+    metrics: &MetricsRegistry,
+) {
+    let service = item.started.elapsed();
+    metrics.record_query(item.queue_wait, service, result.flops);
+    let _ = item.reply.send(QueryResponse {
+        indices: result.indices,
+        scores: result.scores,
+        flops: result.flops,
+        queue_wait: item.queue_wait,
+        service,
+        batch_size: item.batch_size,
+        worker: worker_id,
+        shed: false,
+        shards: 1,
+    });
+}
+
+/// Shard-pinned worker loop: one long-lived [`QueryContext`], batches
+/// executed through the fused execution core against this shard only.
+fn run_shard_worker(
+    worker_id: usize,
+    n_shards: usize,
+    rx: Receiver<ShardBatch>,
     index: &BoundedMeIndex,
+    shard: &Shard,
     engine: &dyn ScoringEngine,
     metrics: &MetricsRegistry,
 ) {
     let mut ctx = QueryContext::new();
     while let Ok(batch) = rx.recv() {
-        serve_batch(worker_id, batch, index, engine, &mut ctx, metrics);
+        serve_shard_batch(worker_id, n_shards, batch, index, shard, engine, &mut ctx, metrics);
     }
 }
 
-/// One item of a batch, with its queue wait measured at pickup.
-struct Live {
-    pending: Pending,
-    queue_wait: Duration,
-}
-
-/// Execute one dynamic batch:
+/// Execute one shard's slice of a dynamic batch:
 ///
-/// 1. shed items whose deadline already expired in the queue;
-/// 2. resolve [`QueryMode::Auto`] items through [`QueryPlan`];
-/// 3. exact items: **one** [`ScoringEngine::score_dataset_batch`] call
-///    over the whole group (fused scan / device-resident), then
-///    per-query top-K from the shared score slab;
-/// 4. BOUNDEDME items: [`MipsIndex::query_batch`] when the knobs are
-///    uniform, else per-item [`MipsIndex::query_with`] — either way the
-///    context's cached pull order means the batch shares one coordinate
-///    permutation (keyed by the first item's seed).
-fn serve_batch(
+/// 1. exact items: **one** [`ScoringEngine::score_dataset_batch`] call
+///    over the shard for the whole group (fused scan / device-resident),
+///    then per-query top-K partials from the shared score slab under
+///    dataset-global ids;
+/// 2. BOUNDEDME items: with `S = 1`, the legacy fused paths
+///    ([`MipsIndex::query_batch`] when knobs are uniform, else
+///    [`MipsIndex::query_with`]) replying directly; with `S ≥ 2`, the
+///    sample-then-confirm entry point
+///    [`BoundedMeIndex::query_batch_shard`] at the per-shard
+///    `(ε, δ/S)` split — either way the context's cached pull order
+///    means the batch shares one coordinate permutation (keyed by the
+///    first item's seed).
+#[allow(clippy::too_many_arguments)]
+fn serve_shard_batch(
     worker_id: usize,
-    batch: Batch,
+    n_shards: usize,
+    batch: ShardBatch,
     index: &BoundedMeIndex,
+    shard: &Shard,
     engine: &dyn ScoringEngine,
     ctx: &mut QueryContext,
     metrics: &MetricsRegistry,
 ) {
     let data = index.data();
-    let dim = data.cols();
-    let batch_size = batch.items.len();
-    let picked_up = Instant::now();
+    let (rows, dim) = (data.rows(), data.cols());
 
-    let mut exact: Vec<Live> = Vec::new();
-    let mut bme: Vec<Live> = Vec::new();
-    for pending in batch.items {
-        let queue_wait = picked_up - pending.submitted;
-        // Load shedding: don't compute answers nobody is waiting for.
-        if let Some(deadline) = pending.req.deadline {
-            if queue_wait > deadline {
-                metrics.record_shed();
-                let _ = pending.reply.send(QueryResponse {
-                    indices: Vec::new(),
-                    scores: Vec::new(),
-                    flops: 0,
-                    queue_wait,
-                    service: Duration::ZERO,
-                    batch_size,
-                    worker: worker_id,
-                    shed: true,
-                });
+    let mut exact: Vec<&Arc<InFlight>> = Vec::new();
+    let mut bme: Vec<&Arc<InFlight>> = Vec::new();
+    for item in &batch.items {
+        // Re-check the deadline at shard pickup: the router's check can
+        // be long past by the time a backed-up shard channel drains,
+        // and computing an answer the client timed out on wastes a full
+        // shard scan (× S shards).
+        if let Some(deadline) = item.deadline {
+            if item.submitted.elapsed() > deadline {
+                complete_shed(item, n_shards, worker_id, metrics);
                 continue;
             }
         }
-        let mode = match pending.req.mode {
-            QueryMode::Auto => {
-                let plan =
-                    QueryPlan::pick(pending.req.k, pending.req.epsilon, pending.req.delta, dim);
-                match plan.algo {
-                    PlanAlgo::Exact => QueryMode::Exact,
-                    PlanAlgo::BoundedMe => QueryMode::BoundedMe,
-                }
-            }
-            m => m,
-        };
-        let live = Live { pending, queue_wait };
-        match mode {
-            QueryMode::Exact => exact.push(live),
-            QueryMode::BoundedMe => bme.push(live),
-            QueryMode::Auto => unreachable!("Auto resolved above"),
+        match item.mode {
+            QueryMode::Exact => exact.push(item),
+            _ => bme.push(item),
         }
     }
 
     // --- Exact group: one engine call for the whole group. ---
     if !exact.is_empty() {
-        let t0 = Instant::now();
-        let rows = data.rows();
-        let queries: Vec<&[f32]> =
-            exact.iter().map(|l| l.pending.req.vector.as_slice()).collect();
+        let queries: Vec<&[f32]> = exact.iter().map(|it| it.vector.as_slice()).collect();
         let fused_ok = engine.score_dataset_batch(data, &queries, &mut ctx.rank.scores).is_ok();
-        let mut results = Vec::with_capacity(exact.len());
-        for (gi, live) in exact.iter().enumerate() {
-            let k = live.pending.req.k;
-            let ranked = if fused_ok {
+        for (gi, item) in exact.iter().enumerate() {
+            let mut top = TopK::new(item.k);
+            if fused_ok {
                 let slab = &ctx.rank.scores[gi * rows..(gi + 1) * rows];
-                let mut top = TopK::new(k);
                 for (i, &s) in slab.iter().enumerate() {
-                    top.push(s, i);
+                    top.push(s, shard.global_id(i));
                 }
-                top.into_sorted()
             } else {
                 // Engine failure (e.g. backend died): pure-Rust fallback.
-                let scores = data.matvec(&live.pending.req.vector);
-                let mut top = TopK::new(k);
+                let scores = data.matvec(&item.vector);
                 for (i, &s) in scores.iter().enumerate() {
-                    top.push(s, i);
+                    top.push(s, shard.global_id(i));
                 }
-                top.into_sorted()
-            };
-            results.push(MipsResult {
-                indices: ranked.iter().map(|&(_, i)| i).collect(),
-                scores: ranked.iter().map(|&(s, _)| s).collect(),
+            }
+            let partial = ShardPartial {
+                entries: top.into_sorted(),
                 flops: (rows * dim) as u64,
-                candidates: rows,
-            });
-        }
-        // Service = pickup → reply (fused compute is genuinely shared,
-        // so every item of the group carries the full batch latency it
-        // actually experienced).
-        for (live, result) in exact.into_iter().zip(results) {
-            respond(live, result, t0.elapsed(), batch_size, worker_id, metrics);
+                scanned: rows,
+            };
+            complete(item, partial, n_shards, worker_id, metrics, false);
         }
     }
 
     // --- BOUNDEDME group: shared permutation, fused when uniform. ---
-    if !bme.is_empty() {
-        // The first item's seed keys the batch's shared pull order.
-        let batch_seed = bme[0].pending.req.seed;
-        let knobs = |l: &Live| {
-            (l.pending.req.k, l.pending.req.epsilon.to_bits(), l.pending.req.delta.to_bits())
-        };
-        let uniform = bme.windows(2).all(|w| knobs(&w[0]) == knobs(&w[1]));
+    if bme.is_empty() {
+        return;
+    }
+    let knobs = |it: &Arc<InFlight>| (it.k, it.epsilon.to_bits(), it.delta.to_bits());
+    let uniform = bme.windows(2).all(|w| knobs(w[0]) == knobs(w[1]));
+    if n_shards == 1 {
+        // Unsharded: legacy semantics (estimate scores, no confirm).
         if uniform && bme.len() > 1 {
-            let first = &bme[0].pending.req;
+            // The first item's seed keys the batch's shared pull order.
+            let first = bme[0];
             let params = MipsParams {
                 k: first.k,
                 epsilon: first.epsilon,
                 delta: first.delta,
-                seed: batch_seed,
+                seed: first.seed,
             };
-            let queries: Vec<&[f32]> =
-                bme.iter().map(|l| l.pending.req.vector.as_slice()).collect();
-            let t0 = Instant::now();
+            let queries: Vec<&[f32]> = bme.iter().map(|it| it.vector.as_slice()).collect();
             let results = index.query_batch(&queries, &params, ctx);
-            // Replies go out only after the fused batch completes, so
-            // every item's service is the batch latency it experienced.
-            for (live, result) in bme.into_iter().zip(results) {
-                respond(live, result, t0.elapsed(), batch_size, worker_id, metrics);
+            for (item, result) in bme.iter().zip(results) {
+                respond_direct(item, result, worker_id, metrics);
             }
         } else {
-            // Heterogeneous knobs: serve items individually with their
-            // own seeds (the context still shares the cached pull order
-            // whenever consecutive seeds match).
-            for live in bme {
-                let req = &live.pending.req;
+            for item in &bme {
                 let params = MipsParams {
-                    k: req.k,
-                    epsilon: req.epsilon,
-                    delta: req.delta,
-                    seed: req.seed,
+                    k: item.k,
+                    epsilon: item.epsilon,
+                    delta: item.delta,
+                    seed: item.seed,
                 };
-                let t0 = Instant::now();
-                let result = index.query_with(&req.vector, &params, ctx);
-                let service = t0.elapsed();
-                respond(live, result, service, batch_size, worker_id, metrics);
+                let result = index.query_with(&item.vector, &params, ctx);
+                respond_direct(item, result, worker_id, metrics);
             }
         }
+        return;
     }
-}
-
-/// Record metrics and send the reply for one served item.
-fn respond(
-    live: Live,
-    result: MipsResult,
-    service: Duration,
-    batch_size: usize,
-    worker_id: usize,
-    metrics: &MetricsRegistry,
-) {
-    metrics.record_query(live.queue_wait, service, result.flops);
-    let _ = live.pending.reply.send(QueryResponse {
-        indices: result.indices,
-        scores: result.scores,
-        flops: result.flops,
-        queue_wait: live.queue_wait,
-        service,
-        batch_size,
-        worker: worker_id,
-        shed: false,
-    });
+    // Sharded: per-shard (ε, δ/S) sample + exact confirm, merged by the
+    // last shard to finish.
+    if uniform && bme.len() > 1 {
+        let first = bme[0];
+        let params = MipsParams {
+            k: first.k,
+            epsilon: first.epsilon,
+            delta: first.delta,
+            seed: first.seed,
+        };
+        let split = shard_params(&params, n_shards, shard.rows());
+        let queries: Vec<&[f32]> = bme.iter().map(|it| it.vector.as_slice()).collect();
+        let partials = index.query_batch_shard(&queries, &split, ctx, shard);
+        for (item, partial) in bme.iter().zip(partials) {
+            complete(item, partial, n_shards, worker_id, metrics, false);
+        }
+    } else {
+        for item in &bme {
+            let params = MipsParams {
+                k: item.k,
+                epsilon: item.epsilon,
+                delta: item.delta,
+                seed: item.seed,
+            };
+            let split = shard_params(&params, n_shards, shard.rows());
+            let partial = index
+                .query_batch_shard(&[item.vector.as_slice()], &split, ctx, shard)
+                .pop()
+                .expect("one partial per query");
+            complete(item, partial, n_shards, worker_id, metrics, false);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -591,6 +867,7 @@ mod tests {
             queue_capacity: queue,
             backend: Backend::Native,
             pull_order: PullOrder::BlockShuffled(16),
+            shard: ShardSpec::single(),
         };
         let data = ds.vectors.clone();
         (Coordinator::new(ds.vectors, cfg).unwrap(), data)
@@ -679,6 +956,7 @@ mod tests {
             queue_capacity: 256,
             backend: Backend::Native,
             pull_order: PullOrder::Sequential,
+            shard: ShardSpec::single(),
         };
         let data = ds.vectors.clone();
         let c = Coordinator::new(ds.vectors, cfg).unwrap();
@@ -714,6 +992,7 @@ mod tests {
             queue_capacity: 256,
             backend: Backend::Native,
             pull_order: PullOrder::BlockShuffled(16),
+            shard: ShardSpec::single(),
         };
         let data = ds.vectors.clone();
         let c = Coordinator::new(ds.vectors, cfg).unwrap();
@@ -747,6 +1026,7 @@ mod tests {
             queue_capacity: 2,
             backend: Backend::Native,
             pull_order: PullOrder::Sequential,
+            shard: ShardSpec::single(),
         };
         let c = Coordinator::new(ds.vectors, cfg).unwrap();
         let mut saw_full = false;
@@ -769,6 +1049,34 @@ mod tests {
     }
 
     #[test]
+    fn sharded_coordinator_matches_ground_truth() {
+        let ds = gaussian_dataset(101, 64, 33);
+        let cfg = CoordinatorConfig {
+            workers: 3,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(1),
+            queue_capacity: 128,
+            backend: Backend::Native,
+            pull_order: PullOrder::BlockShuffled(16),
+            shard: ShardSpec::contiguous(3),
+        };
+        let data = ds.vectors.clone();
+        let q = ds.sample_query(2);
+        let c = Coordinator::new(ds.vectors, cfg).unwrap();
+        let resp = c.query_blocking(QueryRequest::exact(q.clone(), 5)).unwrap();
+        assert_eq!(resp.shards, 3);
+        assert_eq!(resp.indices, crate::algos::ground_truth(&data, &q, 5));
+        // BOUNDEDME ε→0 through sample-then-confirm: per-shard exact
+        // elimination + exact rescore ⇒ the merged answer is the exact
+        // top-k in exact order.
+        let resp =
+            c.query_blocking(QueryRequest::bounded_me(q.clone(), 4, 1e-9, 0.1)).unwrap();
+        assert_eq!(resp.indices, crate::algos::ground_truth(&data, &q, 4));
+        assert_eq!(resp.shards, 3);
+        c.shutdown();
+    }
+
+    #[test]
     fn batches_form_under_load() {
         let ds = gaussian_dataset(100, 32, 9);
         let cfg = CoordinatorConfig {
@@ -778,6 +1086,7 @@ mod tests {
             queue_capacity: 512,
             backend: Backend::Native,
             pull_order: PullOrder::Sequential,
+            shard: ShardSpec::single(),
         };
         let c = Coordinator::new(ds.vectors, cfg).unwrap();
         let mut handles = Vec::new();
@@ -810,6 +1119,7 @@ mod deadline_tests {
             queue_capacity: 512,
             backend: Backend::Native,
             pull_order: PullOrder::Sequential,
+            shard: ShardSpec::single(),
         };
         let c = Coordinator::new(ds.vectors.clone(), cfg).unwrap();
         let mut rxs = Vec::new();

@@ -1,0 +1,280 @@
+//! Dataset sharding: row-range (or round-robin) shards over one backing
+//! [`Matrix`].
+//!
+//! BOUNDEDME shards naturally: arm pulls and exact rescoring are both
+//! row-local, so a dataset larger than one worker's cache-friendly slice
+//! can be split by rows, queried per shard, and merged by top-K — the
+//! adaptive-sampling decomposition of BanditMIPS (Tiwari et al., 2022)
+//! applied to the serving layer. This module is the *data* half of that
+//! story: [`ShardSpec`] describes how rows are assigned to shards and
+//! [`ShardedMatrix`] materializes the assignment. The *execution* half —
+//! per-shard (ε, δ) accounting, fan-out, and the top-K merge — lives in
+//! [`crate::exec::shard`].
+//!
+//! Contiguous shards are zero-copy [`Matrix::view_rows`] views sharing
+//! the backing storage (a shard reads the very same bytes as the
+//! unsharded matrix, which is what makes sharded exact scoring
+//! byte-identical). Round-robin shards interleave rows across shards —
+//! useful when row norms drift with row index (e.g. popularity-sorted
+//! item catalogs) and a contiguous split would concentrate all the hot
+//! arms on one shard; they are materialized by gathering (one copy at
+//! build time, row-local afterwards).
+
+use crate::linalg::Matrix;
+
+/// How dataset rows are assigned to shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardSpec {
+    /// Shard `s` owns a contiguous row range; ranges are balanced so the
+    /// first `rows % shards` shards hold one extra row (ragged splits
+    /// where `rows % shards != 0` are first-class). Zero-copy.
+    Contiguous {
+        /// Number of shards (clamped to `[1, rows]` at build time).
+        shards: usize,
+    },
+    /// Shard `s` owns rows `{s, s + S, s + 2S, …}`. Copying (gathered at
+    /// build time), but immune to row-order skew.
+    RoundRobin {
+        /// Number of shards (clamped to `[1, rows]` at build time).
+        shards: usize,
+    },
+}
+
+impl ShardSpec {
+    /// Contiguous split into `shards` shards.
+    pub fn contiguous(shards: usize) -> Self {
+        Self::Contiguous { shards }
+    }
+
+    /// Round-robin split into `shards` shards.
+    pub fn round_robin(shards: usize) -> Self {
+        Self::RoundRobin { shards }
+    }
+
+    /// The trivial one-shard spec (sharding disabled).
+    pub fn single() -> Self {
+        Self::Contiguous { shards: 1 }
+    }
+
+    /// Requested shard count (before clamping against the row count).
+    pub fn shards(&self) -> usize {
+        match *self {
+            Self::Contiguous { shards } | Self::RoundRobin { shards } => shards,
+        }
+    }
+
+    /// Short label for benches/metrics ("contig" / "rr").
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Self::Contiguous { .. } => "contig",
+            Self::RoundRobin { .. } => "rr",
+        }
+    }
+}
+
+/// Row-id mapping of one shard: local row → dataset-global row.
+enum ShardIds {
+    /// Contiguous: `global = offset + local`.
+    Offset(usize),
+    /// Round-robin: `global = list[local]`.
+    List(Vec<usize>),
+}
+
+/// One shard: a dense matrix of its rows plus the local→global row map.
+pub struct Shard {
+    matrix: Matrix,
+    ids: ShardIds,
+}
+
+impl Shard {
+    /// The shard's rows as a dense matrix (a zero-copy view for
+    /// contiguous shards).
+    #[inline]
+    pub fn matrix(&self) -> &Matrix {
+        &self.matrix
+    }
+
+    /// Rows in this shard.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.matrix.rows()
+    }
+
+    /// Dataset-global id of local row `local`.
+    #[inline]
+    pub fn global_id(&self, local: usize) -> usize {
+        debug_assert!(local < self.rows(), "shard row {local} out of range");
+        match &self.ids {
+            ShardIds::Offset(off) => off + local,
+            ShardIds::List(ids) => ids[local],
+        }
+    }
+}
+
+/// A dataset split into row shards per a [`ShardSpec`].
+///
+/// The shard count is clamped to `[1, rows]` (an empty shard has no
+/// arms to pull and no rows to scan — it would only complicate the
+/// (ε, δ) accounting), so `num_shards()` may be smaller than requested
+/// on tiny datasets.
+pub struct ShardedMatrix {
+    backing: Matrix,
+    spec: ShardSpec,
+    shards: Vec<Shard>,
+}
+
+impl ShardedMatrix {
+    /// Split `backing` per `spec`.
+    pub fn new(backing: Matrix, spec: ShardSpec) -> Self {
+        let rows = backing.rows();
+        let s = spec.shards().clamp(1, rows.max(1));
+        let shards = match spec {
+            ShardSpec::Contiguous { .. } => {
+                let base = rows / s;
+                let extra = rows % s;
+                let mut out = Vec::with_capacity(s);
+                let mut first = 0usize;
+                for j in 0..s {
+                    let len = base + usize::from(j < extra);
+                    out.push(Shard {
+                        matrix: backing.view_rows(first, len),
+                        ids: ShardIds::Offset(first),
+                    });
+                    first += len;
+                }
+                out
+            }
+            ShardSpec::RoundRobin { .. } => (0..s)
+                .map(|j| {
+                    let ids: Vec<usize> = (j..rows).step_by(s).collect();
+                    Shard {
+                        matrix: backing.gather_rows(&ids),
+                        ids: ShardIds::List(ids),
+                    }
+                })
+                .collect(),
+        };
+        Self { backing, spec, shards }
+    }
+
+    /// The unsharded backing matrix.
+    pub fn backing(&self) -> &Matrix {
+        &self.backing
+    }
+
+    /// The spec this split was built from (as requested, pre-clamp).
+    pub fn spec(&self) -> ShardSpec {
+        self.spec
+    }
+
+    /// Effective shard count after clamping.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// All shards.
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    /// Shard `s`.
+    pub fn shard(&self, s: usize) -> &Shard {
+        &self.shards[s]
+    }
+
+    /// Total rows (equals the backing matrix's).
+    pub fn rows(&self) -> usize {
+        self.backing.rows()
+    }
+
+    /// Vector dimension `N` (shared by every shard — sharding splits
+    /// rows, never coordinates, so pull orders and [`crate::exec::QueryPlan`]
+    /// decisions are shard-count invariant by construction).
+    pub fn dim(&self) -> usize {
+        self.backing.cols()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn numbered(rows: usize, cols: usize) -> Matrix {
+        Matrix::from_fn(rows, cols, |r, c| (r * cols + c) as f32)
+    }
+
+    /// Every row appears in exactly one shard, with the right contents.
+    fn assert_partition(sm: &ShardedMatrix) {
+        let rows = sm.rows();
+        let mut seen = vec![false; rows];
+        for shard in sm.shards() {
+            for local in 0..shard.rows() {
+                let g = shard.global_id(local);
+                assert!(!seen[g], "row {g} in two shards");
+                seen[g] = true;
+                assert_eq!(shard.matrix().row(local), sm.backing().row(g));
+            }
+        }
+        assert!(seen.into_iter().all(|s| s), "rows missing from shards");
+    }
+
+    #[test]
+    fn contiguous_even_and_ragged() {
+        for (rows, s) in [(12, 3), (13, 3), (10, 7), (5, 5)] {
+            let sm = ShardedMatrix::new(numbered(rows, 4), ShardSpec::contiguous(s));
+            assert_eq!(sm.num_shards(), s);
+            // Balanced: sizes differ by at most one, larger shards first.
+            let sizes: Vec<usize> = sm.shards().iter().map(Shard::rows).collect();
+            assert_eq!(sizes.iter().sum::<usize>(), rows);
+            assert!(sizes.windows(2).all(|w| w[0] >= w[1] && w[0] - w[1] <= 1));
+            assert_partition(&sm);
+        }
+    }
+
+    #[test]
+    fn contiguous_shards_are_views() {
+        let m = numbered(9, 3);
+        let sm = ShardedMatrix::new(m.clone(), ShardSpec::contiguous(2));
+        for shard in sm.shards() {
+            assert!(shard.matrix().shares_storage(&m), "contiguous shard copied");
+        }
+        // Shard 0 gets the extra row on ragged splits.
+        assert_eq!(sm.shard(0).rows(), 5);
+        assert_eq!(sm.shard(1).rows(), 4);
+        assert_eq!(sm.shard(1).global_id(0), 5);
+    }
+
+    #[test]
+    fn round_robin_interleaves() {
+        let sm = ShardedMatrix::new(numbered(10, 2), ShardSpec::round_robin(3));
+        assert_eq!(sm.num_shards(), 3);
+        assert_eq!(sm.shard(0).rows(), 4); // rows 0, 3, 6, 9
+        assert_eq!(sm.shard(1).rows(), 3); // rows 1, 4, 7
+        assert_eq!(sm.shard(0).global_id(3), 9);
+        assert_eq!(sm.shard(2).global_id(1), 5);
+        assert_partition(&sm);
+    }
+
+    #[test]
+    fn shard_count_clamps_to_rows() {
+        let sm = ShardedMatrix::new(numbered(3, 2), ShardSpec::contiguous(8));
+        assert_eq!(sm.num_shards(), 3);
+        for shard in sm.shards() {
+            assert_eq!(shard.rows(), 1); // single-row shards
+        }
+        let sm = ShardedMatrix::new(numbered(3, 2), ShardSpec::round_robin(0));
+        assert_eq!(sm.num_shards(), 1);
+        assert_partition(&sm);
+    }
+
+    #[test]
+    fn single_spec_is_identity() {
+        let m = numbered(6, 2);
+        let sm = ShardedMatrix::new(m.clone(), ShardSpec::single());
+        assert_eq!(sm.num_shards(), 1);
+        assert_eq!(*sm.shard(0).matrix(), m);
+        assert_eq!(sm.shard(0).global_id(4), 4);
+        assert_eq!(sm.spec().kind(), "contig");
+        assert_eq!(ShardSpec::round_robin(2).kind(), "rr");
+    }
+}

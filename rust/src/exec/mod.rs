@@ -27,6 +27,13 @@
 //! The `hotpath` bench measures the effect directly: the context-reuse
 //! path performs no steady-state heap allocation per query, versus a
 //! handful of `O(dim)`/`O(n)` allocations per query on the legacy path.
+//!
+//! [`shard`] layers sharded execution on top: a batch fans out across
+//! dataset row shards (one context per shard), per-shard (ε, δ/S)
+//! budgets keep the union guarantee, and partial top-K results merge
+//! through [`crate::linalg::TopK`].
+
+pub mod shard;
 
 use crate::bandit::{m_bounded, BanditScratch, PullOrder, PullScratch};
 

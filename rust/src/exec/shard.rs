@@ -1,0 +1,342 @@
+//! Sharded query execution: fan a batch out across dataset row shards,
+//! split the (ε, δ) budget so the union keeps the paper's guarantee,
+//! and merge partial top-K results through [`TopK`].
+//!
+//! # Accounting: why the union keeps (ε, δ)
+//!
+//! BOUNDEDME's guarantee is per *instance*: on an `n`-arm instance it
+//! returns a K-set that is ε-optimal with probability ≥ 1 − δ. Sharding
+//! runs one instance per shard and recombines with a
+//! **sample-then-confirm** step (the same decomposition adaptive-
+//! sampling MIPS uses at scale, cf. BanditMIPS):
+//!
+//! 1. **Sample**: shard `s` (with `n_s` rows) runs BOUNDEDME at knobs
+//!    `(k_s, ε, δ/S)` where `k_s = min(K, n_s)` — see [`shard_params`].
+//!    By a union bound over the `S` shards, *every* shard's returned
+//!    set is ε-optimal within its shard with probability ≥ 1 − δ.
+//! 2. **Confirm**: each shard exactly rescores its own ≤ `k_s`
+//!    candidates (row-local, `k_s · N` flops — negligible next to the
+//!    sampling budget) so partials carry true inner products.
+//! 3. **Merge**: the ≤ `S·K` candidates merge through one [`TopK`]
+//!    keyed on `(exact score, global id)`.
+//!
+//! On the 1 − δ event, any true global top-K row `v` living on shard
+//! `s` is either returned by shard `s` or displaced by a within-shard
+//! candidate whose true mean is within ε of `v`'s (that is what
+//! ε-optimality of the shard's set means). Since the merge ranks by
+//! *exact* scores, every member of the merged K-set is either a true
+//! top-K row or ε-close to the one it displaced — the merged set is
+//! ε-optimal. The ε budget is **not** halved per shard and the pull
+//! budget per shard covers only that shard's `n_s` arms, so total
+//! sample complexity matches the unsharded bound (modulo the δ/S
+//! log-factor inside `m(·)`).
+//!
+//! Exact queries need no accounting: per-shard exact top-K over
+//! disjoint row sets merges to exactly the global top-K, byte-identical
+//! to the unsharded scan because contiguous shards are views over the
+//! same bytes and [`TopK`]'s id tie-break is insertion-order
+//! independent.
+//!
+//! [`ShardedIndex`] is the in-process executor built on these pieces
+//! (one [`QueryContext`] per shard, shards served sequentially); the
+//! serving coordinator runs the same protocol with shard-pinned workers
+//! in parallel (see [`crate::coordinator`]).
+
+use crate::algos::{BoundedMeIndex, MipsIndex, MipsParams, MipsResult, NaiveIndex};
+use crate::bandit::PullOrder;
+use crate::data::shard::{ShardSpec, ShardedMatrix};
+use crate::exec::{PlanAlgo, QueryContext, QueryPlan};
+use crate::linalg::{Matrix, TopK};
+
+/// One shard's contribution to one query: candidate `(score, global
+/// row id)` pairs plus work accounting. Produced by the shard-aware
+/// batch entry points ([`NaiveIndex::query_batch_shard`],
+/// [`BoundedMeIndex::query_batch_shard`]) and consumed by
+/// [`merge_partials`].
+#[derive(Clone, Debug)]
+pub struct ShardPartial {
+    /// Candidates as `(score, dataset-global id)`. Exact mode: the
+    /// shard's top-k by exact score. BOUNDEDME mode: the shard's
+    /// survivors, exactly rescored (the confirm step).
+    pub entries: Vec<(f32, usize)>,
+    /// Flops this shard spent on the query (pulls + confirm rescore, or
+    /// the exact scan).
+    pub flops: u64,
+    /// Rows this shard exactly ranked (shard rows for exact, confirmed
+    /// candidates for BOUNDEDME) — summed into
+    /// [`MipsResult::candidates`].
+    pub scanned: usize,
+}
+
+/// Per-shard knob split preserving the union (ε, δ) guarantee: `k`
+/// clamps to the shard's row count (still ≥ 1 — BOUNDEDME wants a
+/// non-empty return set), ε passes through unchanged (the confirm
+/// rescore is what keeps the merge from compounding estimate error),
+/// and δ is divided across the `n_shards` simultaneous runs (union
+/// bound). See the module docs for the full argument.
+pub fn shard_params(params: &MipsParams, n_shards: usize, shard_rows: usize) -> MipsParams {
+    MipsParams {
+        k: params.k.min(shard_rows.max(1)).max(1),
+        epsilon: params.epsilon,
+        delta: (params.delta / n_shards.max(1) as f64).max(f64::MIN_POSITIVE),
+        seed: params.seed,
+    }
+}
+
+/// Merge per-shard partials into the final top-`k`. Deterministic for
+/// any arrival order of partials: [`TopK`] keeps the k best under the
+/// strict total order (score desc, global id asc), so duplicate scores
+/// across shards break toward the lower global id no matter which
+/// shard answered first.
+pub fn merge_partials(
+    k: usize,
+    partials: impl IntoIterator<Item = ShardPartial>,
+) -> MipsResult {
+    let mut top = TopK::new(k);
+    let mut flops = 0u64;
+    let mut scanned = 0usize;
+    for p in partials {
+        flops += p.flops;
+        scanned += p.scanned;
+        for (score, id) in p.entries {
+            top.push(score, id);
+        }
+    }
+    let ranked = top.into_sorted();
+    MipsResult {
+        indices: ranked.iter().map(|&(_, i)| i).collect(),
+        scores: ranked.iter().map(|&(s, _)| s).collect(),
+        flops,
+        candidates: scanned,
+    }
+}
+
+/// In-process sharded executor: per-shard [`BoundedMeIndex`] +
+/// [`NaiveIndex`] pairs with one long-lived [`QueryContext`] per shard
+/// (shard-pinned contexts, exactly like the coordinator's shard-pinned
+/// workers), serving batches shard-by-shard and merging.
+///
+/// With a single shard this degenerates to the plain index paths
+/// (bit-identical to unsharded execution, no confirm step); with `S ≥
+/// 2`, exact batches stay byte-identical to unsharded and BOUNDEDME
+/// batches follow the sample-then-confirm protocol above.
+pub struct ShardedIndex {
+    sharded: ShardedMatrix,
+    bme: Vec<BoundedMeIndex>,
+    naive: Vec<NaiveIndex>,
+    ctxs: Vec<QueryContext>,
+}
+
+impl ShardedIndex {
+    /// Split `data` per `spec` with the planner-chosen block-shuffled
+    /// pull order for this dimension.
+    pub fn new(data: Matrix, spec: ShardSpec) -> Self {
+        let order = PullOrder::BlockShuffled(QueryPlan::block_width(data.cols()));
+        Self::with_order(data, spec, order)
+    }
+
+    /// Split `data` per `spec` with an explicit pull order.
+    pub fn with_order(data: Matrix, spec: ShardSpec, order: PullOrder) -> Self {
+        let sharded = ShardedMatrix::new(data, spec);
+        let bme = sharded
+            .shards()
+            .iter()
+            .map(|s| BoundedMeIndex::with_order(s.matrix().clone(), order))
+            .collect();
+        let naive =
+            sharded.shards().iter().map(|s| NaiveIndex::new(s.matrix().clone())).collect();
+        let ctxs = (0..sharded.num_shards()).map(|_| QueryContext::new()).collect();
+        Self { sharded, bme, naive, ctxs }
+    }
+
+    /// Effective shard count.
+    pub fn num_shards(&self) -> usize {
+        self.sharded.num_shards()
+    }
+
+    /// The sharded dataset.
+    pub fn sharded(&self) -> &ShardedMatrix {
+        &self.sharded
+    }
+
+    /// Plan a query against this dataset. Sharding splits rows, never
+    /// coordinates, so the plan depends only on `(k, ε, δ, dim)` and is
+    /// shard-count invariant; it is made **once per query before
+    /// fan-out**, never per shard.
+    pub fn plan(&self, k: usize, epsilon: f64, delta: f64) -> QueryPlan {
+        QueryPlan::pick(k, epsilon, delta, self.sharded.dim())
+    }
+
+    /// Exact sharded batch: per-shard fused scans merged by top-K.
+    /// Byte-identical to an unsharded [`NaiveIndex::query_batch`].
+    pub fn query_batch_exact(&mut self, queries: &[&[f32]], k: usize) -> Vec<MipsResult> {
+        let s_count = self.sharded.num_shards();
+        if s_count == 1 {
+            return self.naive[0].query_batch(
+                queries,
+                &MipsParams { k, ..MipsParams::default() },
+                &mut self.ctxs[0],
+            );
+        }
+        let mut acc: Vec<Vec<ShardPartial>> =
+            queries.iter().map(|_| Vec::with_capacity(s_count)).collect();
+        for s in 0..s_count {
+            let partials = self.naive[s].query_batch_shard(queries, k, self.sharded.shard(s));
+            for (qi, p) in partials.into_iter().enumerate() {
+                acc[qi].push(p);
+            }
+        }
+        acc.into_iter().map(|ps| merge_partials(k, ps)).collect()
+    }
+
+    /// BOUNDEDME sharded batch: per-shard `(k_s, ε, δ/S)` runs with
+    /// shard-pinned contexts, confirm rescore, top-K merge. With one
+    /// shard, delegates to the plain fused batch (bit-identical to
+    /// unsharded; scores are the bandit's estimates, not rescored).
+    pub fn query_batch_bounded_me(
+        &mut self,
+        queries: &[&[f32]],
+        params: &MipsParams,
+    ) -> Vec<MipsResult> {
+        let s_count = self.sharded.num_shards();
+        if s_count == 1 {
+            return self.bme[0].query_batch(queries, params, &mut self.ctxs[0]);
+        }
+        let mut acc: Vec<Vec<ShardPartial>> =
+            queries.iter().map(|_| Vec::with_capacity(s_count)).collect();
+        for s in 0..s_count {
+            let split = shard_params(params, s_count, self.sharded.shard(s).rows());
+            let partials = self.bme[s].query_batch_shard(
+                queries,
+                &split,
+                &mut self.ctxs[s],
+                self.sharded.shard(s),
+            );
+            for (qi, p) in partials.into_iter().enumerate() {
+                acc[qi].push(p);
+            }
+        }
+        acc.into_iter().map(|ps| merge_partials(params.k.max(1), ps)).collect()
+    }
+
+    /// Planner-routed batch: one [`QueryPlan`] decision for the batch's
+    /// shared knobs *before* fan-out, then the exact or BOUNDEDME path.
+    pub fn query_batch_auto(
+        &mut self,
+        queries: &[&[f32]],
+        params: &MipsParams,
+    ) -> Vec<MipsResult> {
+        match self.plan(params.k, params.epsilon, params.delta).algo {
+            PlanAlgo::Exact => self.query_batch_exact(queries, params.k),
+            PlanAlgo::BoundedMe => self.query_batch_bounded_me(queries, params),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    fn gaussian(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, d, |_, _| rng.gaussian() as f32)
+    }
+
+    #[test]
+    fn shard_params_splits_delta_and_clamps_k() {
+        let p = MipsParams { k: 10, epsilon: 0.2, delta: 0.1, seed: 3 };
+        let s = shard_params(&p, 4, 100);
+        assert_eq!(s.k, 10);
+        assert_eq!(s.epsilon, 0.2);
+        assert!((s.delta - 0.025).abs() < 1e-15);
+        assert_eq!(s.seed, 3);
+        // Single-row shard: k clamps to 1 (still a valid BOUNDEDME run).
+        assert_eq!(shard_params(&p, 4, 1).k, 1);
+        assert_eq!(shard_params(&MipsParams { k: 0, ..p }, 2, 50).k, 1);
+    }
+
+    #[test]
+    fn merge_is_arrival_order_independent() {
+        let a = ShardPartial {
+            entries: vec![(1.0, 5), (0.5, 7)],
+            flops: 10,
+            scanned: 2,
+        };
+        let b = ShardPartial {
+            entries: vec![(1.0, 2), (0.5, 1)],
+            flops: 20,
+            scanned: 2,
+        };
+        let ab = merge_partials(3, [a.clone(), b.clone()]);
+        let ba = merge_partials(3, [b, a]);
+        // Duplicate scores across shards: lower global id wins the tie
+        // regardless of which shard's partial arrived first.
+        assert_eq!(ab.indices, vec![2, 5, 1]);
+        assert_eq!(ab.indices, ba.indices);
+        assert_eq!(ab.scores, ba.scores);
+        assert_eq!(ab.flops, 30);
+        assert_eq!(ab.candidates, 4);
+    }
+
+    #[test]
+    fn merge_k_zero_and_empty() {
+        let p = ShardPartial { entries: vec![(1.0, 0)], flops: 4, scanned: 1 };
+        let r = merge_partials(0, [p]);
+        assert!(r.indices.is_empty());
+        assert_eq!(r.flops, 4);
+        let r = merge_partials(3, std::iter::empty());
+        assert!(r.indices.is_empty() && r.scores.is_empty());
+    }
+
+    #[test]
+    fn sharded_exact_matches_unsharded() {
+        let data = gaussian(37, 48, 1);
+        let naive = NaiveIndex::new(data.clone());
+        let queries: Vec<Vec<f32>> = (0..4).map(|i| Rng::new(50 + i).gaussian_vec(48)).collect();
+        let refs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        for spec in [ShardSpec::contiguous(3), ShardSpec::round_robin(4)] {
+            let mut sx = ShardedIndex::new(data.clone(), spec);
+            let got = sx.query_batch_exact(&refs, 5);
+            for (qi, q) in queries.iter().enumerate() {
+                let want = naive.query(q, &MipsParams { k: 5, ..Default::default() });
+                assert_eq!(got[qi].indices, want.indices, "{spec:?} q{qi}");
+                for (a, b) in got[qi].scores.iter().zip(&want.scores) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{spec:?} q{qi}");
+                }
+                assert_eq!(got[qi].flops, want.flops, "{spec:?} q{qi}");
+                assert_eq!(got[qi].candidates, 37, "{spec:?} q{qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_bounded_me_exact_at_tiny_epsilon() {
+        let data = gaussian(60, 96, 2);
+        let q: Vec<f32> = Rng::new(9).gaussian_vec(96);
+        let truth = crate::algos::ground_truth(&data, &q, 4);
+        let params = MipsParams { k: 4, epsilon: 1e-9, delta: 0.1, seed: 5 };
+        for spec in [ShardSpec::contiguous(2), ShardSpec::round_robin(3)] {
+            let mut sx = ShardedIndex::new(data.clone(), spec);
+            let results = sx.query_batch_bounded_me(&[&q[..]], &params);
+            // ε → 0: every shard eliminates on exact means, and the
+            // confirm rescore ranks by exact products, so the merged
+            // result *is* the exact top-k, in exact order.
+            assert_eq!(results[0].indices, truth, "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn auto_routes_once_for_the_batch() {
+        let data = gaussian(30, 32, 3);
+        let mut sx = ShardedIndex::new(data.clone(), ShardSpec::contiguous(2));
+        // dim 32 < 64 ⇒ plan says Exact no matter the knobs.
+        assert_eq!(sx.plan(3, 0.5, 0.5).algo, PlanAlgo::Exact);
+        let q: Vec<f32> = Rng::new(4).gaussian_vec(32);
+        let res = sx.query_batch_auto(
+            &[&q[..]],
+            &MipsParams { k: 3, epsilon: 0.5, delta: 0.5, seed: 0 },
+        );
+        assert_eq!(res[0].indices, crate::algos::ground_truth(&data, &q, 3));
+    }
+}

@@ -32,16 +32,31 @@
 //!
 //! | module | contents |
 //! |---|---|
-//! | [`linalg`] | dense matrix/vector substrate, RNG, PCA, top-K utilities |
+//! | [`linalg`] | dense matrix/vector substrate (incl. zero-copy row views), RNG, PCA, top-K utilities |
 //! | [`bandit`] | MAB-BP framework, BOUNDEDME, bandit baselines, pull-order scratch |
-//! | [`algos`]  | MIPS indexes: naive, BoundedME, Greedy-, LSH-, PCA-, RPT-MIPS |
-//! | [`exec`]   | zero-allocation execution core: `QueryContext` arena + `QueryPlan` |
-//! | [`data`]   | dataset substrate: synthetic, adversarial, ALS matrix factorization |
+//! | [`algos`]  | MIPS indexes: naive, BoundedME, Greedy-, LSH-, PCA-, RPT-MIPS — with shard-aware batch entry points |
+//! | [`exec`]   | zero-allocation execution core: `QueryContext` arena + `QueryPlan`; [`exec::shard`] fan-out/merge layer |
+//! | [`data`]   | dataset substrate: synthetic, adversarial, ALS matrix factorization; [`data::shard`] row sharding |
 //! | [`metrics`] | precision@K, flop accounting, latency sketches |
 //! | [`runtime`] | scoring engines; PJRT/XLA artifact execution behind the `pjrt` feature |
-//! | [`coordinator`] | serving layer: router, dynamic batcher, batched worker pool |
+//! | [`coordinator`] | serving layer: dynamic batcher, shard router, shard-pinned worker pool, top-K merge |
 //! | [`experiments`] | harness regenerating every paper table/figure |
 //! | [`errors`], [`logkit`], [`jsonlite`], [`sync`], [`benchkit`], [`cli`] | offline substrates (no external deps) |
+//!
+//! ## Sharded execution
+//!
+//! Datasets larger than one worker's cache-friendly slice split by
+//! rows: [`data::shard::ShardedMatrix`] holds contiguous zero-copy
+//! views (or round-robin gathers) over one backing matrix, and
+//! [`exec::shard`] fans a `query_batch` out per shard — one
+//! [`exec::QueryContext`] per shard, per-shard `(ε, δ/S)` budgets with
+//! an exact *confirm* rescore so the union keeps the paper's (ε, δ)
+//! guarantee — and merges partials through [`linalg::TopK`] (stable
+//! global-id tie-break, so merges are deterministic). Exact sharded
+//! queries are byte-identical to the unsharded scan. The coordinator
+//! runs the same protocol in parallel with shard-pinned workers
+//! ([`coordinator::CoordinatorConfig::shard`]); in-process callers use
+//! [`exec::shard::ShardedIndex`].
 //!
 //! ## Quick start
 //!

@@ -9,11 +9,30 @@ use std::sync::Arc;
 /// contiguous so partial dot products over coordinate ranges are cache-
 /// friendly, matching the paper's cost model where a "pull" touches one
 /// coordinate of one row.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// Storage is shared (`Arc`) and a matrix may be a *row-range view* into
+/// a larger backing buffer ([`Matrix::view_rows`]): `start` is the
+/// element offset of row 0. Views are how contiguous dataset shards
+/// ([`crate::data::shard::ShardedMatrix`]) stay zero-copy — every shard
+/// reads the very same bytes as the unsharded matrix, which is what
+/// makes sharded exact scoring byte-identical to unsharded.
+#[derive(Clone, Debug)]
 pub struct Matrix {
     rows: usize,
     cols: usize,
+    /// Element offset of row 0 inside `data` (non-zero only for views).
+    start: usize,
     data: Arc<Vec<f32>>,
+}
+
+/// Equality is by shape and contents — a view equals a fresh copy of the
+/// same rows regardless of where either lives in its backing buffer.
+impl PartialEq for Matrix {
+    fn eq(&self, other: &Self) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.as_slice() == other.as_slice()
+    }
 }
 
 impl Matrix {
@@ -25,7 +44,31 @@ impl Matrix {
             "Matrix::from_vec: buffer len {} != {rows}x{cols}",
             data.len()
         );
-        Self { rows, cols, data: Arc::new(data) }
+        Self { rows, cols, start: 0, data: Arc::new(data) }
+    }
+
+    /// Zero-copy view of the contiguous row range `[first, first + len)`:
+    /// shares storage with `self` (no copy, no allocation beyond the
+    /// `Arc` bump). Panics if the range exceeds the matrix.
+    pub fn view_rows(&self, first: usize, len: usize) -> Matrix {
+        assert!(
+            first + len <= self.rows,
+            "view_rows: [{first}, {}) out of {} rows",
+            first + len,
+            self.rows
+        );
+        Matrix {
+            rows: len,
+            cols: self.cols,
+            start: self.start + first * self.cols,
+            data: self.data.clone(),
+        }
+    }
+
+    /// True when `self` shares backing storage with `other` (both are
+    /// views of — or clones of — one buffer).
+    pub fn shares_storage(&self, other: &Matrix) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
     }
 
     /// All-zeros matrix.
@@ -71,20 +114,21 @@ impl Matrix {
     /// Borrow row `i` as a slice.
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
-        let start = i * self.cols;
+        let start = self.start + i * self.cols;
         &self.data[start..start + self.cols]
     }
 
     /// Element access.
     #[inline]
     pub fn get(&self, r: usize, c: usize) -> f32 {
-        self.data[r * self.cols + c]
+        self.data[self.start + r * self.cols + c]
     }
 
-    /// The full flat buffer.
+    /// The flat row-major buffer of this matrix (for a view: just the
+    /// viewed rows).
     #[inline]
     pub fn as_slice(&self) -> &[f32] {
-        &self.data
+        &self.data[self.start..self.start + self.rows * self.cols]
     }
 
     /// Iterator over rows.
@@ -135,12 +179,12 @@ impl Matrix {
 
     /// Min and max over all elements; `(0, 0)` for an empty matrix.
     pub fn min_max(&self) -> (f32, f32) {
-        if self.data.is_empty() {
+        if self.as_slice().is_empty() {
             return (0.0, 0.0);
         }
         let mut lo = f32::INFINITY;
         let mut hi = f32::NEG_INFINITY;
-        for &v in self.data.iter() {
+        for &v in self.as_slice() {
             lo = lo.min(v);
             hi = hi.max(v);
         }
@@ -213,5 +257,49 @@ mod tests {
         let m = m();
         let c = m.clone();
         assert!(std::ptr::eq(m.as_slice().as_ptr(), c.as_slice().as_ptr()));
+        assert!(m.shares_storage(&c));
+    }
+
+    #[test]
+    fn view_rows_is_zero_copy_and_correct() {
+        let m = Matrix::from_fn(5, 3, |r, c| (r * 3 + c) as f32);
+        let v = m.view_rows(2, 2);
+        assert_eq!((v.rows(), v.cols()), (2, 3));
+        assert_eq!(v.row(0), m.row(2));
+        assert_eq!(v.get(1, 2), m.get(3, 2));
+        assert_eq!(v.as_slice(), &m.as_slice()[6..12]);
+        // Same bytes, not a copy.
+        assert!(std::ptr::eq(v.row(0).as_ptr(), m.row(2).as_ptr()));
+        assert!(v.shares_storage(&m));
+        // Views of views compose.
+        let vv = v.view_rows(1, 1);
+        assert_eq!(vv.row(0), m.row(3));
+        // min_max / matvec respect the view bounds.
+        assert_eq!(v.min_max(), (6.0, 11.0));
+        assert_eq!(v.matvec(&[1.0, 0.0, 0.0]), vec![6.0, 9.0]);
+    }
+
+    #[test]
+    fn view_equals_copy_of_same_rows() {
+        let m = Matrix::from_fn(4, 2, |r, c| (r * 2 + c) as f32);
+        let view = m.view_rows(1, 2);
+        let copy = m.gather_rows(&[1, 2]);
+        assert_eq!(view, copy);
+        assert_ne!(view, m.view_rows(0, 2));
+    }
+
+    #[test]
+    #[should_panic]
+    fn view_rows_out_of_range_panics() {
+        m().view_rows(1, 2);
+    }
+
+    #[test]
+    fn empty_view_is_fine() {
+        let m = m();
+        let v = m.view_rows(2, 0);
+        assert_eq!(v.rows(), 0);
+        assert!(v.as_slice().is_empty());
+        assert_eq!(v.min_max(), (0.0, 0.0));
     }
 }

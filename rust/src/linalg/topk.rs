@@ -164,6 +164,58 @@ mod tests {
     }
 
     #[test]
+    fn insertion_order_independent_with_duplicate_scores() {
+        // The shard merge pushes partials in whatever order shards
+        // finish; the kept set and its order must not depend on it.
+        // (score, id) pairs with heavy score duplication across "shards":
+        let items: Vec<(f32, usize)> =
+            (0..24).map(|i| (((i * 7) % 4) as f32, i)).collect();
+        let reference: Vec<(f32, usize)> = {
+            let mut t = TopK::new(5);
+            for &(s, i) in &items {
+                t.push(s, i);
+            }
+            t.into_sorted()
+        };
+        // Try many deterministic permutations of the arrival order.
+        let mut order: Vec<usize> = (0..items.len()).collect();
+        let mut rng = crate::linalg::Rng::new(0x0D7E);
+        for trial in 0..40 {
+            rng.shuffle(&mut order);
+            let mut t = TopK::new(5);
+            for &pos in &order {
+                let (s, i) = items[pos];
+                t.push(s, i);
+            }
+            assert_eq!(t.into_sorted(), reference, "trial {trial}: order-dependent");
+        }
+        // Ties resolved toward the smaller id: score 3.0 is held by ids
+        // 1, 5, 9, 13, 17, 21 — the five kept must be the smallest ids.
+        assert!(reference.iter().all(|&(s, _)| s == 3.0));
+        assert_eq!(
+            reference.iter().map(|&(_, i)| i).collect::<Vec<_>>(),
+            vec![1, 5, 9, 13, 17]
+        );
+    }
+
+    #[test]
+    fn k_zero_threshold_and_push_are_inert() {
+        let mut t = TopK::new(0);
+        for i in 0..10 {
+            t.push(i as f32, i);
+        }
+        assert_eq!(t.len(), 0);
+        assert!(t.into_sorted().is_empty());
+    }
+
+    #[test]
+    fn k_exceeding_input_keeps_everything_sorted() {
+        let scores = [1.0f32, 1.0, 3.0, -2.0];
+        let got = top_k_of(&scores, 100);
+        assert_eq!(got, vec![(3.0, 2), (1.0, 0), (1.0, 1), (-2.0, 3)]);
+    }
+
+    #[test]
     fn matches_full_sort_on_random_input() {
         let mut rng = crate::linalg::Rng::new(42);
         for trial in 0..50 {

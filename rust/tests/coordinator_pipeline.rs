@@ -1,0 +1,240 @@
+//! Deterministic end-to-end tests of the serving pipeline:
+//! batcher → shard router → shard-pinned worker loop — mixed
+//! exact/bandit batches, `QueryMode::Auto` routing before fan-out,
+//! disconnects mid-batch, and drain-on-shutdown without losing queries.
+
+use bandit_mips::algos::{ground_truth, MipsIndex, MipsParams, NaiveIndex};
+use bandit_mips::bandit::PullOrder;
+use bandit_mips::coordinator::{
+    Backend, Coordinator, CoordinatorConfig, CoordinatorError, QueryRequest,
+};
+use bandit_mips::data::shard::ShardSpec;
+use bandit_mips::data::synthetic::gaussian_dataset;
+use std::time::Duration;
+
+fn cfg(workers: usize, shard: ShardSpec) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers,
+        max_batch: 16,
+        batch_timeout: Duration::from_millis(5),
+        queue_capacity: 1024,
+        backend: Backend::Native,
+        pull_order: PullOrder::BlockShuffled(16),
+        shard,
+    }
+}
+
+/// A burst of mixed exact / BOUNDEDME / Auto requests rides shared
+/// dynamic batches through the sharded pipeline; every answer is
+/// correct for its mode and reports the shard count.
+#[test]
+fn mixed_mode_batches_end_to_end() {
+    let ds = gaussian_dataset(180, 128, 41);
+    let data = ds.vectors.clone();
+    let c = Coordinator::new(ds.vectors.clone(), cfg(2, ShardSpec::contiguous(2))).unwrap();
+    let mut handles = Vec::new();
+    let mut queries = Vec::new();
+    for i in 0..24u64 {
+        let q = ds.sample_query(i);
+        let req = match i % 3 {
+            0 => QueryRequest::exact(q.clone(), 4),
+            // ε → 0: sharded sample-then-confirm must recover the truth.
+            1 => QueryRequest::bounded_me(q.clone(), 4, 1e-9, 0.05),
+            // Auto with ε → 0 knobs: the router must plan Exact.
+            _ => QueryRequest::auto(q.clone(), 4, 1e-12, 0.05),
+        };
+        queries.push(q);
+        handles.push(c.submit(req).unwrap());
+    }
+    for (i, (h, q)) in handles.into_iter().zip(&queries).enumerate() {
+        let resp = h.recv().unwrap();
+        assert_eq!(resp.shards, 2, "req {i}");
+        assert!(!resp.shed);
+        let truth = ground_truth(&data, q, 4);
+        if i % 3 == 1 {
+            let mut got = resp.indices.clone();
+            got.sort_unstable();
+            let mut want = truth;
+            want.sort_unstable();
+            assert_eq!(got, want, "req {i} (bounded_me)");
+        } else {
+            assert_eq!(resp.indices, truth, "req {i}");
+        }
+    }
+    let snap = c.metrics();
+    assert_eq!(snap.queries, 24, "queries double- or under-counted under sharding");
+    c.shutdown();
+}
+
+/// Sharded exact answers are byte-identical to the unsharded index —
+/// indices and score bits — for both split kinds.
+#[test]
+fn sharded_exact_byte_identical_through_coordinator() {
+    let ds = gaussian_dataset(150, 96, 17);
+    let naive = NaiveIndex::new(ds.vectors.clone());
+    for spec in [ShardSpec::contiguous(3), ShardSpec::round_robin(3)] {
+        let c = Coordinator::new(ds.vectors.clone(), cfg(3, spec)).unwrap();
+        for salt in 0..6u64 {
+            let q = ds.sample_query(salt);
+            let resp = c.query_blocking(QueryRequest::exact(q.clone(), 7)).unwrap();
+            let want = naive.query(&q, &MipsParams { k: 7, ..Default::default() });
+            assert_eq!(resp.indices, want.indices, "{spec:?} salt={salt}");
+            for (a, b) in resp.scores.iter().zip(&want.scores) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{spec:?} salt={salt}: score bits");
+            }
+            assert_eq!(resp.shards, 3);
+        }
+        c.shutdown();
+    }
+}
+
+/// Auto routing happens once per query before fan-out: a tight-knob
+/// Auto request equals the explicit Exact answer, and the decision is
+/// shard-count invariant.
+#[test]
+fn auto_routing_is_shard_invariant() {
+    let ds = gaussian_dataset(120, 64, 5);
+    let data = ds.vectors.clone();
+    let mut per_shard_answers = Vec::new();
+    for s in [1usize, 2, 4] {
+        let c = Coordinator::new(ds.vectors.clone(), cfg(s, ShardSpec::contiguous(s))).unwrap();
+        let q = ds.sample_query(9);
+        let auto = c.query_blocking(QueryRequest::auto(q.clone(), 5, 1e-12, 0.05)).unwrap();
+        let exact = c.query_blocking(QueryRequest::exact(q.clone(), 5)).unwrap();
+        assert_eq!(auto.indices, exact.indices, "S={s}");
+        assert_eq!(auto.indices, ground_truth(&data, &q, 5), "S={s}");
+        per_shard_answers.push(auto.indices);
+        c.shutdown();
+    }
+    assert!(per_shard_answers.windows(2).all(|w| w[0] == w[1]));
+}
+
+/// Shutdown drains: every query submitted before shutdown gets its
+/// answer — nothing is lost in the batcher, the router, or a shard
+/// channel.
+#[test]
+fn shutdown_drains_without_losing_queries() {
+    let ds = gaussian_dataset(400, 256, 23);
+    let c = Coordinator::new(ds.vectors.clone(), cfg(2, ShardSpec::contiguous(2))).unwrap();
+    let mut handles = Vec::new();
+    for i in 0..40u64 {
+        let q = ds.sample_query(i);
+        handles.push(c.submit(QueryRequest::bounded_me(q, 3, 0.2, 0.2)).unwrap());
+    }
+    // Shutdown while (most of) the burst is still queued: the batcher
+    // drains its queue, the router fans everything out, the shard
+    // workers drain their channels, then all threads join.
+    c.shutdown();
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = h.recv().unwrap_or_else(|e| panic!("query {i} lost in drain: {e:?}"));
+        assert_eq!(resp.indices.len(), 3, "query {i}");
+    }
+}
+
+/// A client that disconnects mid-batch (drops its receiver) must not
+/// wedge the pipeline or steal answers from the other items of the
+/// same batch.
+#[test]
+fn client_disconnect_mid_batch_keeps_pipeline_alive() {
+    let ds = gaussian_dataset(200, 64, 29);
+    let data = ds.vectors.clone();
+    let c = Coordinator::new(ds.vectors.clone(), cfg(2, ShardSpec::contiguous(2))).unwrap();
+    let mut kept = Vec::new();
+    let mut kept_queries = Vec::new();
+    for i in 0..32u64 {
+        let q = ds.sample_query(i);
+        let rx = c.submit(QueryRequest::exact(q.clone(), 3)).unwrap();
+        if i % 2 == 0 {
+            kept_queries.push(q);
+            kept.push(rx);
+        } // odd receivers dropped here, mid-flight
+    }
+    for (h, q) in kept.into_iter().zip(&kept_queries) {
+        let resp = h.recv().unwrap();
+        assert_eq!(resp.indices, ground_truth(&data, q, 3));
+    }
+    // The abandoned queries were still executed and counted (their
+    // batches may trail the kept ones briefly — poll with a bound).
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while c.metrics().queries < 32 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(c.metrics().queries, 32);
+    c.shutdown();
+}
+
+/// Load shedding composes with sharding: expired items are shed by the
+/// router (shards = 0, nothing computed) and everything else completes.
+#[test]
+fn shedding_on_the_sharded_path() {
+    let ds = gaussian_dataset(500, 256, 31);
+    let mut config = cfg(2, ShardSpec::contiguous(2));
+    config.max_batch = 4;
+    config.batch_timeout = Duration::from_millis(1);
+    let c = Coordinator::new(ds.vectors.clone(), config).unwrap();
+    let mut rxs = Vec::new();
+    for i in 0..48u64 {
+        let req = QueryRequest::exact(ds.sample_query(i), 3)
+            .with_deadline(Duration::from_nanos(1));
+        rxs.push(c.submit(req).unwrap());
+    }
+    let (mut shed, mut served) = (0u64, 0u64);
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        if resp.shed {
+            assert!(resp.indices.is_empty());
+            assert_eq!(resp.shards, 0, "shed reply claims shard work");
+            shed += 1;
+        } else {
+            assert_eq!(resp.indices.len(), 3);
+            assert_eq!(resp.shards, 2);
+            served += 1;
+        }
+    }
+    assert_eq!(shed + served, 48);
+    assert!(shed > 0, "nothing shed under a 1ns deadline");
+    assert_eq!(c.metrics().shed, shed);
+    c.shutdown();
+}
+
+/// Requesting fewer workers than shards is legal: the pool is raised so
+/// every shard has a pinned worker.
+#[test]
+fn worker_pool_raised_to_shard_count() {
+    let ds = gaussian_dataset(90, 64, 3);
+    let data = ds.vectors.clone();
+    let c = Coordinator::new(ds.vectors.clone(), cfg(1, ShardSpec::round_robin(3))).unwrap();
+    let q = ds.sample_query(1);
+    let resp = c.query_blocking(QueryRequest::exact(q.clone(), 5)).unwrap();
+    assert_eq!(resp.shards, 3);
+    assert_eq!(resp.indices, ground_truth(&data, &q, 5));
+    c.shutdown();
+}
+
+/// Backpressure still fails fast on the sharded path.
+#[test]
+fn sharded_backpressure_fires() {
+    let ds = gaussian_dataset(2000, 128, 7);
+    let mut config = cfg(2, ShardSpec::contiguous(2));
+    config.max_batch = 1;
+    config.batch_timeout = Duration::from_millis(0);
+    config.queue_capacity = 2;
+    let c = Coordinator::new(ds.vectors, config).unwrap();
+    let mut saw_full = false;
+    let mut receivers = Vec::new();
+    for _ in 0..2000 {
+        match c.submit(QueryRequest::exact(vec![0.1; 128], 1)) {
+            Ok(rx) => receivers.push(rx),
+            Err(CoordinatorError::QueueFull) => {
+                saw_full = true;
+                break;
+            }
+            Err(e) => panic!("unexpected {e}"),
+        }
+    }
+    assert!(saw_full, "backpressure never engaged");
+    for rx in receivers {
+        let _ = rx.recv();
+    }
+    c.shutdown();
+}

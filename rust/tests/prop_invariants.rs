@@ -9,7 +9,9 @@ use bandit_mips::bandit::{
     hoeffding_sample_size, m_bounded, serfling_radius, AdversarialArms, BanditScratch,
     BoundedMe, BoundedMeConfig, ExplicitArms, MatrixArms, PullOrder, RewardSource,
 };
-use bandit_mips::exec::QueryContext;
+use bandit_mips::data::shard::ShardSpec;
+use bandit_mips::exec::shard::ShardedIndex;
+use bandit_mips::exec::{QueryContext, QueryPlan};
 use bandit_mips::linalg::{topk::arg_top_k, Matrix, Rng};
 
 const CASES: usize = 60;
@@ -288,6 +290,90 @@ fn prop_run_in_scratch_reuse_matches_run() {
         assert_eq!(fresh.rounds, reused.rounds, "case {case}");
         for (a, b) in fresh.means.iter().zip(&reused.means) {
             assert_eq!(a.to_bits(), b.to_bits(), "case {case}: mean bits differ");
+        }
+    }
+}
+
+/// `QueryPlan` decisions are shard-count invariant: sharding splits
+/// rows, never coordinates, so the plan (picked once before fan-out)
+/// must match the direct `QueryPlan::pick` for every shard count and
+/// split kind — algo, pull order, and pull estimate alike.
+#[test]
+fn prop_queryplan_shard_count_invariant() {
+    let mut rng = Rng::new(0x51AD);
+    for case in 0..CASES {
+        let n = 10 + rng.next_below(60);
+        let d = 8 + rng.next_below(600);
+        let data = Matrix::from_fn(n, d, |_, _| rng.gaussian() as f32);
+        let k = 1 + rng.next_below(8);
+        let eps = rng.uniform(1e-9, 0.9);
+        let delta = rng.uniform(1e-3, 0.5);
+        let direct = QueryPlan::pick(k, eps, delta, d);
+        for s in [1usize, 2, 3, 7] {
+            for spec in [ShardSpec::contiguous(s), ShardSpec::round_robin(s)] {
+                let sx = ShardedIndex::new(data.clone(), spec);
+                let plan = sx.plan(k, eps, delta);
+                assert_eq!(plan.algo, direct.algo, "case {case} {spec:?}");
+                assert_eq!(plan.order, direct.order, "case {case} {spec:?}");
+                assert_eq!(
+                    plan.first_round_pulls, direct.first_round_pulls,
+                    "case {case} {spec:?}"
+                );
+            }
+        }
+    }
+}
+
+/// `PullScratch` reuse across shard-pinned contexts is invisible: a
+/// `ShardedIndex` whose per-shard contexts have served many prior
+/// batches returns bit-identical results (indices, score bits, flops)
+/// to a freshly-built one, for both exact and BOUNDEDME paths.
+#[test]
+fn prop_shard_pinned_context_reuse_bit_identical() {
+    let mut rng = Rng::new(0x5C0D);
+    for case in 0..10 {
+        let n = 30 + rng.next_below(80);
+        let d = 32 + rng.next_below(160);
+        let data = Matrix::from_fn(n, d, |_, _| rng.gaussian() as f32);
+        let spec = if case % 2 == 0 {
+            ShardSpec::contiguous(2 + rng.next_below(3))
+        } else {
+            ShardSpec::round_robin(2 + rng.next_below(3))
+        };
+        let queries: Vec<Vec<f32>> = (0..4).map(|_| rng.gaussian_vec(d)).collect();
+        let refs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        let params = MipsParams {
+            k: 1 + rng.next_below(5),
+            epsilon: rng.uniform(1e-6, 0.4),
+            delta: rng.uniform(0.01, 0.4),
+            seed: case as u64,
+        };
+        let mut warm = ShardedIndex::new(data.clone(), spec);
+        // Warm the shard-pinned contexts with unrelated traffic.
+        for s in 0..3u64 {
+            let _ = warm.query_batch_bounded_me(
+                &refs,
+                &MipsParams { seed: 100 + s, ..params },
+            );
+            let _ = warm.query_batch_exact(&refs, params.k);
+        }
+        let mut fresh = ShardedIndex::new(data.clone(), spec);
+        let a = warm.query_batch_bounded_me(&refs, &params);
+        let b = fresh.query_batch_bounded_me(&refs, &params);
+        for (qi, (ra, rb)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(ra.indices, rb.indices, "case {case} q{qi}");
+            assert_eq!(ra.flops, rb.flops, "case {case} q{qi}");
+            for (x, y) in ra.scores.iter().zip(&rb.scores) {
+                assert_eq!(x.to_bits(), y.to_bits(), "case {case} q{qi}: score bits");
+            }
+        }
+        let a = warm.query_batch_exact(&refs, params.k);
+        let b = fresh.query_batch_exact(&refs, params.k);
+        for (qi, (ra, rb)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(ra.indices, rb.indices, "case {case} exact q{qi}");
+            for (x, y) in ra.scores.iter().zip(&rb.scores) {
+                assert_eq!(x.to_bits(), y.to_bits(), "case {case} exact q{qi}");
+            }
         }
     }
 }

@@ -1,0 +1,252 @@
+//! Sharded execution equivalence properties: for S ∈ {1, 2, 3, 7}
+//! shards (contiguous and round-robin, ragged splits included), sharded
+//! exact top-K is *identical* — indices and score bits — to unsharded,
+//! and sharded BOUNDEDME keeps the paper's (ε, δ) guarantee under the
+//! per-shard δ/S split + exact-confirm merge of `exec::shard`.
+
+use bandit_mips::algos::{ground_truth, BoundedMeIndex, MipsIndex, MipsParams, NaiveIndex};
+use bandit_mips::data::shard::{ShardSpec, ShardedMatrix};
+use bandit_mips::data::synthetic::gaussian_dataset;
+use bandit_mips::exec::shard::{merge_partials, shard_params, ShardedIndex};
+use bandit_mips::linalg::{Matrix, Rng};
+use bandit_mips::metrics::suboptimality;
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 7];
+
+fn specs(s: usize) -> [ShardSpec; 2] {
+    [ShardSpec::contiguous(s), ShardSpec::round_robin(s)]
+}
+
+/// Exact sharded top-K is identical to the unsharded scan on random
+/// instances — including ragged splits (rows chosen so `rows % S != 0`
+/// for every S > 1 in the sweep) and k ≥ rows.
+#[test]
+fn exact_sharded_identical_to_unsharded() {
+    let mut rng = Rng::new(0x5A4D);
+    for case in 0..12 {
+        // Odd row counts: the S = 2 split is always ragged, and the
+        // S ∈ {3, 7} splits are ragged for most draws.
+        let n = 23 + 2 * rng.next_below(40);
+        let d = 8 + rng.next_below(96);
+        let data = Matrix::from_fn(n, d, |_, _| rng.gaussian() as f32);
+        let naive = NaiveIndex::new(data.clone());
+        let nq = 1 + rng.next_below(4);
+        let queries: Vec<Vec<f32>> = (0..nq).map(|_| rng.gaussian_vec(d)).collect();
+        let refs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        for k in [1, 5, n + 10] {
+            for s in SHARD_COUNTS {
+                for spec in specs(s) {
+                    let mut sx = ShardedIndex::new(data.clone(), spec);
+                    let got = sx.query_batch_exact(&refs, k);
+                    for (qi, q) in queries.iter().enumerate() {
+                        let want =
+                            naive.query(q, &MipsParams { k, ..Default::default() });
+                        assert_eq!(
+                            got[qi].indices, want.indices,
+                            "case {case} {spec:?} k={k} q{qi}"
+                        );
+                        assert_eq!(got[qi].scores.len(), want.scores.len());
+                        for (a, b) in got[qi].scores.iter().zip(&want.scores) {
+                            assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "case {case} {spec:?} k={k} q{qi}: score bits"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The acceptance gate: on a 2000×4096 seeded Gaussian dataset, a
+/// sharded exact query (S ≥ 2) returns byte-identical top-K to the
+/// unsharded path.
+#[test]
+fn acceptance_2000x4096_sharded_exact_byte_identical() {
+    let ds = gaussian_dataset(2000, 4096, 20260729);
+    let naive = NaiveIndex::new(ds.vectors.clone());
+    let queries: Vec<Vec<f32>> = (0..2).map(|s| ds.sample_query(s)).collect();
+    let refs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+    for spec in [ShardSpec::contiguous(2), ShardSpec::contiguous(3)] {
+        let mut sx = ShardedIndex::new(ds.vectors.clone(), spec);
+        let got = sx.query_batch_exact(&refs, 10);
+        for (qi, q) in queries.iter().enumerate() {
+            let want = naive.query(q, &MipsParams { k: 10, ..Default::default() });
+            assert_eq!(got[qi].indices, want.indices, "{spec:?} q{qi}");
+            for (a, b) in got[qi].scores.iter().zip(&want.scores) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{spec:?} q{qi}: score bytes differ");
+            }
+        }
+    }
+}
+
+/// Sharded BOUNDEDME at ε → 0 recovers the exact top-K for every shard
+/// count (per-shard exact elimination + exact confirm ⇒ exact merge).
+#[test]
+fn bounded_me_sharded_exact_at_tiny_epsilon() {
+    let ds = gaussian_dataset(150, 128, 7);
+    for s in SHARD_COUNTS {
+        for spec in specs(s) {
+            let mut sx = ShardedIndex::new(ds.vectors.clone(), spec);
+            for salt in 0..3u64 {
+                let q = ds.sample_query(salt);
+                let truth = ground_truth(&ds.vectors, &q, 5);
+                let params =
+                    MipsParams { k: 5, epsilon: 1e-9, delta: 0.05, seed: salt };
+                let results = sx.query_batch_bounded_me(&[&q[..]], &params);
+                let res = &results[0];
+                let mut got = res.indices.clone();
+                got.sort_unstable();
+                let mut want = truth.clone();
+                want.sort_unstable();
+                assert_eq!(got, want, "{spec:?} salt={salt}");
+                // Never more work than S sharded exhaustive scans +
+                // confirm overhead.
+                let confirm = (s * 5 * 128) as u64;
+                assert!(
+                    res.flops <= (150 * 128) as u64 + confirm,
+                    "{spec:?}: flops {}",
+                    res.flops
+                );
+            }
+        }
+    }
+}
+
+/// Sharded BOUNDEDME satisfies the (ε, δ) suboptimality bound on seeded
+/// Gaussian data: over many queries, the fraction exceeding ε (range-
+/// relative, same normalization the index uses) stays within the δ
+/// budget — for every shard count.
+#[test]
+fn bounded_me_sharded_meets_eps_delta_bound() {
+    let ds = gaussian_dataset(220, 256, 11);
+    let bound_idx = BoundedMeIndex::new(ds.vectors.clone());
+    let (eps, delta) = (0.05, 0.1);
+    let trials = 20;
+    for s in SHARD_COUNTS {
+        let mut sx = ShardedIndex::new(ds.vectors.clone(), ShardSpec::contiguous(s));
+        let mut failures = 0;
+        for t in 0..trials {
+            let q = ds.sample_query(t as u64);
+            let truth = ground_truth(&ds.vectors, &q, 1);
+            let params =
+                MipsParams { k: 1, epsilon: eps, delta, seed: t as u64 };
+            let results = sx.query_batch_bounded_me(&[&q[..]], &params);
+            let res = &results[0];
+            let sub = suboptimality(&ds.vectors, &q, &truth, &res.indices);
+            // Range-relative, against the *global* reward bound (each
+            // shard's bound is ≤ it, so this is the honest comparison).
+            let range = 2.0 * bound_idx.reward_bound(&q) as f64;
+            if sub > eps * range {
+                failures += 1;
+            }
+        }
+        // δ = 0.1 over 20 trials ⇒ ~2 expected failures; 4 is > 3σ out.
+        assert!(failures <= 4, "S={s}: {failures}/{trials} exceeded ε");
+    }
+}
+
+/// Ragged + extreme splits: single-row shards (S = rows) and S > rows
+/// behave exactly like the unsharded scan for exact queries, and the
+/// per-shard param split stays well-formed (k ≥ 1, δ > 0).
+#[test]
+fn single_row_shards_and_overcommitted_shard_counts() {
+    let mut rng = Rng::new(0xD1CE);
+    let n = 9;
+    let data = Matrix::from_fn(n, 24, |_, _| rng.gaussian() as f32);
+    let naive = NaiveIndex::new(data.clone());
+    let q: Vec<f32> = rng.gaussian_vec(24);
+    for requested in [n, n * 3] {
+        for spec in specs(requested) {
+            let sm = ShardedMatrix::new(data.clone(), spec);
+            assert_eq!(sm.num_shards(), n, "{spec:?} should clamp to {n}");
+            assert!(sm.shards().iter().all(|sh| sh.rows() == 1));
+            let split = shard_params(
+                &MipsParams { k: 4, epsilon: 0.1, delta: 0.2, seed: 0 },
+                sm.num_shards(),
+                1,
+            );
+            assert_eq!(split.k, 1);
+            assert!(split.delta > 0.0);
+            let mut sx = ShardedIndex::new(data.clone(), spec);
+            let exact = sx.query_batch_exact(&[&q[..]], 4);
+            let want = naive.query(&q, &MipsParams { k: 4, ..Default::default() });
+            assert_eq!(exact[0].indices, want.indices, "{spec:?}");
+            // BOUNDEDME across single-row shards: each shard's only row
+            // is confirmed exactly, so the merge is the exact top-4.
+            let bme = sx.query_batch_bounded_me(
+                &[&q[..]],
+                &MipsParams { k: 4, epsilon: 0.3, delta: 0.2, seed: 1 },
+            );
+            assert_eq!(bme[0].indices, want.indices, "{spec:?} bme");
+        }
+    }
+}
+
+/// Duplicate scores across shards merge deterministically: identical
+/// rows living on different shards tie-break by global id, no matter
+/// how partials are ordered.
+#[test]
+fn duplicate_scores_across_shards_merge_deterministically() {
+    // Four copies of the same row interleaved with distinct rows: the
+    // duplicates land on different shards for every split.
+    let proto = vec![1.0f32, 2.0, -1.0, 0.5];
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    let mut rng = Rng::new(3);
+    for i in 0..12 {
+        if i % 3 == 0 {
+            rows.push(proto.clone());
+        } else {
+            rows.push(rng.gaussian_vec(4));
+        }
+    }
+    let data = Matrix::from_rows(&rows);
+    let naive = NaiveIndex::new(data.clone());
+    let q = vec![0.3f32, 0.1, -0.2, 0.9];
+    for s in SHARD_COUNTS {
+        for spec in specs(s) {
+            let mut sx = ShardedIndex::new(data.clone(), spec);
+            let got = sx.query_batch_exact(&[&q[..]], 6);
+            let want = naive.query(&q, &MipsParams { k: 6, ..Default::default() });
+            assert_eq!(got[0].indices, want.indices, "{spec:?}");
+            assert_eq!(got[0].scores, want.scores, "{spec:?}");
+        }
+    }
+    // The duplicate rows 0, 3, 6, 9 must appear in ascending-id order
+    // wherever they rank.
+    let full = ShardedIndex::new(data, ShardSpec::round_robin(3))
+        .query_batch_exact(&[&q[..]], 12);
+    let dup_positions: Vec<usize> = full[0]
+        .indices
+        .iter()
+        .copied()
+        .filter(|i| i % 3 == 0)
+        .collect();
+    assert_eq!(dup_positions, vec![0, 3, 6, 9], "id tie-break violated");
+}
+
+/// merge_partials edge cases: k = 0 keeps nothing, k larger than the
+/// union returns everything ranked, empty partial lists are fine.
+#[test]
+fn merge_edge_cases() {
+    use bandit_mips::exec::shard::ShardPartial;
+    let partial = |entries: Vec<(f32, usize)>| ShardPartial {
+        entries,
+        flops: 1,
+        scanned: 1,
+    };
+    let r = merge_partials(0, [partial(vec![(2.0, 1)]), partial(vec![(3.0, 0)])]);
+    assert!(r.indices.is_empty() && r.scores.is_empty());
+    assert_eq!(r.flops, 2);
+
+    let r = merge_partials(
+        10,
+        [partial(vec![(2.0, 1)]), partial(vec![]), partial(vec![(3.0, 0)])],
+    );
+    assert_eq!(r.indices, vec![0, 1]);
+
+    let r = merge_partials(2, std::iter::empty());
+    assert!(r.indices.is_empty());
+}

@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_*.json against a committed baseline.
+
+Usage: bench_diff.py CURRENT BASELINE [--threshold 0.10]
+
+Matches benchmark rows by name and compares `mean_s`. Regressions beyond
+the threshold are printed as GitHub advisory annotations (`::warning::`)
+so CI surfaces them without failing the build — bench runners are noisy,
+a hard gate would flap. Exits 0 always unless the current file is
+missing/unreadable (exit 2), so the CI step stays advisory.
+
+If the baseline file does not exist, prints a notice and exits 0: the
+first run on a branch has nothing to diff against. Commit the produced
+BENCH_*.json files under rust/benches/baseline/ to establish one.
+"""
+
+import json
+import sys
+
+
+def load_rows(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return {row["name"]: row for row in doc.get("results", [])}
+
+
+def main(argv):
+    args = [a for a in argv[1:] if not a.startswith("--")]
+    threshold = 0.10
+    for a in argv[1:]:
+        if a.startswith("--threshold"):
+            threshold = float(a.split("=", 1)[1] if "=" in a else argv[argv.index(a) + 1])
+    if len(args) < 2:
+        print(__doc__)
+        return 2
+    current_path, baseline_path = args[0], args[1]
+
+    try:
+        current = load_rows(current_path)
+    except OSError as e:
+        print(f"::error::bench diff: cannot read current results {current_path}: {e}")
+        return 2
+
+    try:
+        baseline = load_rows(baseline_path)
+    except OSError:
+        print(
+            f"bench diff: no baseline at {baseline_path} — skipping comparison. "
+            f"Commit {current_path} there to start tracking the trajectory."
+        )
+        return 0
+
+    regressions = 0
+    for name, row in sorted(current.items()):
+        base = baseline.get(name)
+        if base is None:
+            print(f"bench diff: new benchmark {name!r} (no baseline row)")
+            continue
+        cur_mean, base_mean = row.get("mean_s"), base.get("mean_s")
+        if not cur_mean or not base_mean:
+            continue
+        ratio = cur_mean / base_mean
+        delta_pct = (ratio - 1.0) * 100.0
+        if ratio > 1.0 + threshold:
+            regressions += 1
+            print(
+                f"::warning title=bench regression::{name}: {base_mean * 1e3:.3f} ms "
+                f"-> {cur_mean * 1e3:.3f} ms ({delta_pct:+.1f}%)"
+            )
+        else:
+            print(f"bench diff: {name}: {delta_pct:+.1f}%")
+    for name in sorted(set(baseline) - set(current)):
+        print(f"bench diff: benchmark {name!r} disappeared from current run")
+    print(
+        f"bench diff: {regressions} regression(s) beyond {threshold * 100:.0f}% "
+        f"across {len(current)} benchmark(s)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
