@@ -21,7 +21,7 @@ use bandit_mips::benchkit::{Bencher, Reporter};
 use bandit_mips::data::synthetic::gaussian_dataset;
 use bandit_mips::exec::QueryContext;
 use bandit_mips::jsonlite::Json;
-use bandit_mips::linalg::{dot, Matrix, Rng};
+use bandit_mips::linalg::{dot, dot_rows, partial_dot_rows, simd, Matrix, Rng};
 use bandit_mips::runtime::{NativeEngine, PjrtEngine, ScoringEngine};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::path::Path;
@@ -65,7 +65,10 @@ fn main() {
     let mut rng = Rng::new(3);
     let mut extra: Vec<(&'static str, Json)> = Vec::new();
 
-    // L0: the scalar dot kernel at serving dims.
+    println!("simd dispatch: {}", simd::active_isa());
+    extra.push(("simd_isa", Json::Str(simd::active_isa().to_string())));
+
+    // L0: the dispatched dot kernel at serving dims.
     for dim in [512usize, 4096, 32768] {
         let a: Vec<f32> = rng.gaussian_vec(dim);
         let q: Vec<f32> = rng.gaussian_vec(dim);
@@ -73,6 +76,52 @@ fn main() {
         let gflops = 2.0 * dim as f64 / m.mean / 1e9;
         println!("bench dot/{dim}: {:.2} GFLOP/s", gflops);
         r.push(m);
+    }
+
+    // L0b: the blocked kernels on a fused-scan shaped block — 256 rows
+    // × 4096 dims scored against one query. `dot_loop` is the per-row
+    // baseline; `dot_rows/r{R}` calls the blocked kernel on R-row
+    // groups (R=1 measures pure dispatch overhead, R≥4 shares query
+    // register loads). The acceptance gate of the SIMD subsystem is
+    // dot_rows beating dot_loop here.
+    {
+        let dim = 4096usize;
+        let nrows = 256usize;
+        let block = Matrix::from_fn(nrows, dim, |_, _| rng.gaussian() as f32);
+        let q: Vec<f32> = rng.gaussian_vec(dim);
+        let flat = block.as_slice();
+        let mut out = vec![0f32; nrows];
+        r.bench(&b, "dot_loop/256x4096 (per-row dot)", || {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = dot(&flat[i * dim..(i + 1) * dim], &q);
+            }
+            out[0].to_bits()
+        });
+        for rchunk in [1usize, 4, 8] {
+            r.bench(&b, &format!("dot_rows/r{rchunk} 256x4096"), || {
+                let mut i = 0usize;
+                while i < nrows {
+                    let take = (nrows - i).min(rchunk);
+                    dot_rows(
+                        &flat[i * dim..(i + take) * dim],
+                        dim,
+                        &q,
+                        &mut out[i..i + take],
+                    );
+                    i += take;
+                }
+                out[0].to_bits()
+            });
+        }
+        // One BOUNDEDME pull batch: 8 scattered survivor rows over one
+        // 256-coordinate dense run.
+        let refs: Vec<&[f32]> = (0..8).map(|i| &block.row(i * 17)[512..768]).collect();
+        let sub_q = &q[512..768];
+        let mut pout = vec![0f32; 8];
+        r.bench(&b, "partial_dot_rows/8x256", || {
+            partial_dot_rows(&refs, sub_q, &mut pout);
+            pout[0].to_bits()
+        });
     }
 
     // Gather-based pull batch (the Permuted pull order's inner loop) vs

@@ -6,7 +6,7 @@ use crate::bandit::{BoundedMe, BoundedMeConfig, MatrixArms, PullOrder, RewardSou
 use crate::data::shard::Shard;
 use crate::exec::shard::ShardPartial;
 use crate::exec::QueryContext;
-use crate::linalg::{dot, Matrix};
+use crate::linalg::{partial_dot_rows_chunked, Matrix};
 
 /// Preprocessing-free MIPS with a suboptimality guarantee: for any query
 /// and user-chosen `0 < ε, δ < 1`, the returned set is ε-optimal (in
@@ -76,11 +76,18 @@ impl BoundedMeIndex {
             .iter()
             .map(|q| {
                 let res = self.query_with(q, params, ctx);
-                let entries: Vec<(f32, usize)> = res
-                    .indices
-                    .iter()
-                    .map(|&local| (dot(self.data.row(local), q), shard.global_id(local)))
-                    .collect();
+                // Confirm step as blocked kernels: survivors are
+                // scattered rows, scored through the shared
+                // `partial_dot_rows` staging loop (bit-identical per
+                // row to `dot`), several candidates per query register
+                // load.
+                let mut entries: Vec<(f32, usize)> =
+                    Vec::with_capacity(res.indices.len());
+                partial_dot_rows_chunked(
+                    res.indices.iter().map(|&local| self.data.row(local)),
+                    q,
+                    |i, score| entries.push((score, shard.global_id(res.indices[i]))),
+                );
                 let confirm_flops = (entries.len() * dim) as u64;
                 ShardPartial {
                     flops: res.flops + confirm_flops,

@@ -5,7 +5,8 @@ use super::{exact_rank, MipsIndex, MipsParams, MipsResult};
 use crate::data::shard::Shard;
 use crate::exec::shard::ShardPartial;
 use crate::exec::QueryContext;
-use crate::linalg::{dot, Matrix, TopK};
+use crate::linalg::simd::SCAN_TILE;
+use crate::linalg::{dot_rows, Matrix, TopK};
 
 /// Exact linear-scan index. No preprocessing, no error.
 pub struct NaiveIndex {
@@ -16,6 +17,41 @@ impl NaiveIndex {
     /// Wrap a vector set.
     pub fn new(data: Matrix) -> Self {
         Self { data }
+    }
+
+    /// Shared fused-scan core: one pass over the dataset in
+    /// [`SCAN_TILE`]-row tiles, each tile scored against every query by
+    /// the blocked [`dot_rows`] kernel while hot in cache — on a
+    /// `B`-query batch the data is read once instead of `B` times, and
+    /// each read feeds several rows per query register load.
+    /// `global_id` maps scan-local row indices to the ids pushed into
+    /// the per-query heaps (computed once per tile, not per query).
+    fn tiled_scan(
+        &self,
+        queries: &[&[f32]],
+        k: usize,
+        global_id: impl Fn(usize) -> usize,
+    ) -> Vec<TopK> {
+        let (n, d) = (self.data.rows(), self.data.cols());
+        let mut tops: Vec<TopK> = queries.iter().map(|_| TopK::new(k)).collect();
+        let mut scores = [0f32; SCAN_TILE];
+        let mut ids = [0usize; SCAN_TILE];
+        let mut base = 0usize;
+        while base < n {
+            let take = (n - base).min(SCAN_TILE);
+            let block = self.data.row_block(base, take);
+            for (j, id) in ids[..take].iter_mut().enumerate() {
+                *id = global_id(base + j);
+            }
+            for (qi, q) in queries.iter().enumerate() {
+                dot_rows(block, d, q, &mut scores[..take]);
+                for (j, &s) in scores[..take].iter().enumerate() {
+                    tops[qi].push(s, ids[j]);
+                }
+            }
+            base += take;
+        }
+        tops
     }
 
     /// Shard-aware batch entry point: fused scan over this index's rows
@@ -32,13 +68,7 @@ impl NaiveIndex {
         shard: &Shard,
     ) -> Vec<ShardPartial> {
         debug_assert_eq!(self.data.rows(), shard.rows(), "index/shard row mismatch");
-        let mut tops: Vec<TopK> = queries.iter().map(|_| TopK::new(k)).collect();
-        for (i, row) in self.data.iter_rows().enumerate() {
-            let gid = shard.global_id(i);
-            for (qi, q) in queries.iter().enumerate() {
-                tops[qi].push(dot(row, q), gid);
-            }
-        }
+        let tops = self.tiled_scan(queries, k, |i| shard.global_id(i));
         let (n, d) = (self.data.rows(), self.data.cols());
         tops.into_iter()
             .map(|top| ShardPartial {
@@ -93,9 +123,8 @@ impl MipsIndex for NaiveIndex {
         }
     }
 
-    /// Fused batch scan: one pass over the dataset, each row dotted
-    /// against every query while hot in cache — on a `B`-query batch the
-    /// data is read once instead of `B` times.
+    /// Fused batch scan: the [`NaiveIndex::tiled_scan`] core with
+    /// identity row ids.
     fn query_batch(
         &self,
         queries: &[&[f32]],
@@ -103,12 +132,7 @@ impl MipsIndex for NaiveIndex {
         ctx: &mut QueryContext,
     ) -> Vec<MipsResult> {
         let _ = ctx;
-        let mut tops: Vec<TopK> = queries.iter().map(|_| TopK::new(params.k)).collect();
-        for (i, row) in self.data.iter_rows().enumerate() {
-            for (qi, q) in queries.iter().enumerate() {
-                tops[qi].push(dot(row, q), i);
-            }
-        }
+        let tops = self.tiled_scan(queries, params.k, |i| i);
         let (n, d) = (self.data.rows(), self.data.cols());
         tops.into_iter()
             .map(|top| {

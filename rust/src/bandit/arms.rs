@@ -20,7 +20,7 @@
 //! [`crate::exec::QueryContext`]. [`MatrixArms::new`] still owns a
 //! private scratch for one-shot callers.
 
-use crate::linalg::{dot, Matrix, Rng};
+use crate::linalg::{dot, partial_dot_rows_chunked, Matrix, Rng};
 
 /// How [`MatrixArms`] orders coordinates for without-replacement pulls.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -51,6 +51,23 @@ pub trait RewardSource {
     /// Sum of rewards at positions `[from, to)` of arm `arm`'s pull
     /// sequence. Positions beyond `list_len()` are a contract violation.
     fn pull_range(&self, arm: usize, from: usize, to: usize) -> f64;
+    /// Batched [`RewardSource::pull_range`]:
+    /// `out[i] = pull_range(arms[i], from, to)`.
+    ///
+    /// One BOUNDEDME elimination round pulls the *same* positional range
+    /// from every surviving arm, so the whole round is one call here.
+    /// Environments with dense storage override this to run the blocked
+    /// [`crate::linalg::partial_dot_rows`] kernel across the survivor
+    /// set per coordinate run (see [`MatrixArms`]); the default loops.
+    /// Overrides must produce bit-identical sums to the per-arm method
+    /// — the elimination order of a run must not depend on whether the
+    /// caller batched.
+    fn pull_range_batch(&self, arms: &[usize], from: usize, to: usize, out: &mut [f64]) {
+        debug_assert_eq!(arms.len(), out.len());
+        for (&arm, o) in arms.iter().zip(out.iter_mut()) {
+            *o = self.pull_range(arm, from, to);
+        }
+    }
     /// One i.i.d. *with-replacement* sample from arm `arm`'s list (what a
     /// classic bandit algorithm would observe).
     fn pull_iid(&self, arm: usize, rng: &mut Rng) -> f64;
@@ -355,6 +372,63 @@ impl RewardSource for MatrixArms<'_> {
         }
     }
 
+    /// One pull batch across an arm set through the blocked
+    /// [`partial_dot_rows`] kernel: for each dense coordinate run the
+    /// gathered query window is loaded once and FMA'd against up to 8
+    /// survivor rows at a time. Bit-identical per arm to
+    /// [`RewardSource::pull_range`] (same runs, same per-row kernel,
+    /// same f64 accumulation order) — BOUNDEDME's elimination decisions
+    /// do not depend on batching.
+    fn pull_range_batch(&self, arms: &[usize], from: usize, to: usize, out: &mut [f64]) {
+        debug_assert_eq!(arms.len(), out.len());
+        debug_assert!(to <= self.list_len());
+        let s = self.scratch();
+        match s.kind {
+            OrderKind::Gather => {
+                // Positional gathers have no dense runs to block over.
+                for (&arm, o) in arms.iter().zip(out.iter_mut()) {
+                    *o = self.pull_range(arm, from, to);
+                }
+            }
+            OrderKind::Identity => {
+                partial_dot_rows_chunked(
+                    arms.iter().map(|&arm| &self.data.row(arm)[from..to]),
+                    &s.qp[from..to],
+                    |i, score| out[i] = score as f64,
+                );
+            }
+            OrderKind::Runs => {
+                // Run-by-run across the whole arm set: each dense run's
+                // query window is loaded once and swept over every arm
+                // (in the shared staging loop), accumulating per-arm in
+                // f64 in run order — the exact accumulation order of
+                // the per-arm `pull_range`, so sums stay bit-identical.
+                let starts = &s.starts;
+                let offsets = &s.offsets;
+                for o in out.iter_mut() {
+                    *o = 0.0;
+                }
+                if from < to {
+                    let mut pos = from;
+                    let mut r = offsets.partition_point(|&o| (o as usize) <= from) - 1;
+                    while pos < to {
+                        let run_end = offsets[r + 1] as usize;
+                        let stop = run_end.min(to);
+                        let coord = starts[r] as usize + (pos - offsets[r] as usize);
+                        let len = stop - pos;
+                        partial_dot_rows_chunked(
+                            arms.iter().map(|&arm| &self.data.row(arm)[coord..coord + len]),
+                            &s.qp[pos..stop],
+                            |i, score| out[i] += score as f64,
+                        );
+                        pos = stop;
+                        r += 1;
+                    }
+                }
+            }
+        }
+    }
+
     fn pull_iid(&self, arm: usize, rng: &mut Rng) -> f64 {
         let j = rng.next_below(self.list_len());
         let s = self.scratch();
@@ -622,6 +696,44 @@ mod tests {
         let arms = MatrixArms::with_scratch(&m, 8.0, &scratch);
         assert!((arms.pull_range(0, 0, 4) - dot(m.row(0), &q) as f64).abs() < 1e-6);
         let _ = first;
+    }
+
+    #[test]
+    fn pull_range_batch_is_bit_identical_to_per_arm() {
+        // A wider instance than the toy so every CHUNK remainder shape
+        // (full 8-blocks + ragged tail) is exercised.
+        let mut rng = Rng::new(21);
+        let m = Matrix::from_fn(19, 96, |_, _| rng.gaussian() as f32);
+        let q: Vec<f32> = rng.gaussian_vec(96);
+        let arm_ids: Vec<usize> = (0..19).rev().collect(); // scattered order
+        for order in [
+            PullOrder::Sequential,
+            PullOrder::Permuted,
+            PullOrder::BlockShuffled(13),
+        ] {
+            let arms = MatrixArms::new(&m, &q, 16.0, order, 5);
+            for (from, to) in [(0usize, 96usize), (0, 1), (7, 61), (33, 33), (95, 96)] {
+                let mut batch = vec![0f64; arm_ids.len()];
+                arms.pull_range_batch(&arm_ids, from, to, &mut batch);
+                for (i, &arm) in arm_ids.iter().enumerate() {
+                    let single = arms.pull_range(arm, from, to);
+                    assert_eq!(
+                        batch[i].to_bits(),
+                        single.to_bits(),
+                        "order={order:?} arm={arm} range=[{from},{to})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn default_pull_range_batch_matches_loop() {
+        let arms = AdversarialArms::from_ones(vec![3, 0, 5, 2], 5);
+        let ids = [2usize, 0, 3];
+        let mut out = vec![0f64; 3];
+        arms.pull_range_batch(&ids, 1, 4, &mut out);
+        assert_eq!(out, vec![3.0, 2.0, 1.0]);
     }
 
     #[test]

@@ -60,13 +60,18 @@ pub struct BoundedMeOutput {
 }
 
 /// Reusable per-run survivor arena for [`BoundedMe::run_in`]: the
-/// `O(n)` arm-state vector is the only non-constant allocation of a
-/// BOUNDEDME run, and a long-lived scratch (one per serving worker,
-/// inside [`crate::exec::QueryContext`]) amortizes it to zero across
+/// `O(n)` arm-state vector (plus the id/sum staging buffers of the
+/// batched pull) are the only non-constant allocations of a BOUNDEDME
+/// run, and a long-lived scratch (one per serving worker, inside
+/// [`crate::exec::QueryContext`]) amortizes them to zero across
 /// queries.
 #[derive(Default)]
 pub struct BanditScratch {
     survivors: Vec<ArmState>,
+    /// Survivor ids staged for [`RewardSource::pull_range_batch`].
+    pull_ids: Vec<usize>,
+    /// Per-survivor range sums returned by the batched pull.
+    pull_sums: Vec<f64>,
 }
 
 impl BanditScratch {
@@ -117,7 +122,7 @@ impl BoundedMe {
     pub fn run<R: RewardSource>(&self, env: &R) -> BoundedMeOutput {
         let mut scratch = BanditScratch::new();
         let mut trace = Vec::new();
-        let result = self.run_core(env, &mut scratch.survivors, Some(&mut trace));
+        let result = self.run_core(env, &mut scratch, Some(&mut trace));
         BoundedMeOutput { result, trace }
     }
 
@@ -130,15 +135,16 @@ impl BoundedMe {
         env: &R,
         scratch: &mut BanditScratch,
     ) -> BanditResult {
-        self.run_core(env, &mut scratch.survivors, None)
+        self.run_core(env, scratch, None)
     }
 
     fn run_core<R: RewardSource>(
         &self,
         env: &R,
-        survivors: &mut Vec<ArmState>,
+        scratch: &mut BanditScratch,
         mut trace: Option<&mut Vec<RoundTrace>>,
     ) -> BanditResult {
+        let BanditScratch { survivors, pull_ids, pull_sums } = scratch;
         let n = env.n_arms();
         let n_list = env.list_len();
         let k = self.cfg.k;
@@ -181,12 +187,24 @@ impl BoundedMe {
                 });
             }
 
-            // Pull every survivor up to t_l cumulative pulls.
+            // Pull every survivor up to t_l cumulative pulls. Every
+            // survivor sits at exactly t_prev pulls (each round tops all
+            // of them up to the same t_l), so the whole round is one
+            // batched pull over the uniform range [t_prev, t_l) — dense
+            // environments run it as blocked SIMD kernels across the
+            // survivor set.
             let delta_pulls = t_l - t_prev;
             if delta_pulls > 0 {
-                for a in survivors.iter_mut() {
-                    let from = a.pulls as usize;
-                    a.sum += env.pull_range(a.id as usize, from, t_l);
+                pull_ids.clear();
+                pull_ids.extend(survivors.iter().map(|a| {
+                    debug_assert_eq!(a.pulls as usize, t_prev);
+                    a.id as usize
+                }));
+                pull_sums.clear();
+                pull_sums.resize(pull_ids.len(), 0.0);
+                env.pull_range_batch(pull_ids, t_prev, t_l, pull_sums);
+                for (a, &sum) in survivors.iter_mut().zip(pull_sums.iter()) {
+                    a.sum += sum;
                     a.pulls = t_l as u32;
                 }
                 total_pulls += (delta_pulls * s) as u64;

@@ -28,6 +28,13 @@
 //! path performs no steady-state heap allocation per query, versus a
 //! handful of `O(dim)`/`O(n)` allocations per query on the legacy path.
 //!
+//! Below this layer sits the runtime-dispatched SIMD kernel table
+//! ([`crate::linalg::simd`]): the fused `query_batch` scans and the
+//! engines' `score_dataset_batch` run the blocked `dot_rows` kernel
+//! tile-by-tile, and BOUNDEDME's per-round pulls run
+//! `partial_dot_rows` across the survivor set — so every plan the
+//! planner can pick executes on the same hardware-speed kernels.
+//!
 //! [`shard`] layers sharded execution on top: a batch fans out across
 //! dataset row shards (one context per shard), per-shard (ε, δ/S)
 //! budgets keep the union guarantee, and partial top-K results merge

@@ -16,7 +16,11 @@
 //!    set is ε-optimal within its shard with probability ≥ 1 − δ.
 //! 2. **Confirm**: each shard exactly rescores its own ≤ `k_s`
 //!    candidates (row-local, `k_s · N` flops — negligible next to the
-//!    sampling budget) so partials carry true inner products.
+//!    sampling budget) so partials carry true inner products. The
+//!    rescore runs the blocked [`crate::linalg::partial_dot_rows`] SIMD
+//!    kernel over the scattered candidate rows, and the per-shard exact
+//!    scans run blocked [`crate::linalg::dot_rows`] tiles — every
+//!    sharded path executes on the dispatched kernel table.
 //! 3. **Merge**: the ≤ `S·K` candidates merge through one [`TopK`]
 //!    keyed on `(exact score, global id)`.
 //!

@@ -32,7 +32,7 @@
 //!
 //! | module | contents |
 //! |---|---|
-//! | [`linalg`] | dense matrix/vector substrate (incl. zero-copy row views), RNG, PCA, top-K utilities |
+//! | [`linalg`] | dense matrix/vector substrate (incl. zero-copy row views), RNG, PCA, top-K utilities; [`linalg::simd`] runtime-dispatched SIMD kernels (AVX2/NEON/scalar) |
 //! | [`bandit`] | MAB-BP framework, BOUNDEDME, bandit baselines, pull-order scratch |
 //! | [`algos`]  | MIPS indexes: naive, BoundedME, Greedy-, LSH-, PCA-, RPT-MIPS — with shard-aware batch entry points |
 //! | [`exec`]   | zero-allocation execution core: `QueryContext` arena + `QueryPlan`; [`exec::shard`] fan-out/merge layer |
@@ -42,6 +42,21 @@
 //! | [`coordinator`] | serving layer: dynamic batcher, shard router, shard-pinned worker pool, top-K merge |
 //! | [`experiments`] | harness regenerating every paper table/figure |
 //! | [`errors`], [`logkit`], [`jsonlite`], [`sync`], [`benchkit`], [`cli`] | offline substrates (no external deps) |
+//!
+//! ## SIMD kernel funnel
+//!
+//! Every flop — exact scans, BOUNDEDME pull batches, sharded confirm
+//! rescores — funnels through [`linalg::dot`] and its siblings, which
+//! dispatch once per process to a [`linalg::simd`] kernel table (AVX2
+//! on x86-64 with `avx2+fma` detected, NEON on aarch64, portable
+//! scalar otherwise; `RUST_PALLAS_FORCE_SCALAR=1` pins scalar). Two
+//! *blocked* kernels feed the batch paths: [`linalg::dot_rows`] scores
+//! several contiguous dataset rows per query register load (the Naive
+//! fused scan, engine batch scoring, confirm rescore) and
+//! [`linalg::partial_dot_rows`] runs one pull batch across a scattered
+//! BOUNDEDME survivor set. Blocked results are bit-identical per row
+//! to `dot`, so fused and per-query paths agree exactly; see
+//! [`linalg::simd`] for the cross-ISA tolerance contract.
 //!
 //! ## Sharded execution
 //!

@@ -131,6 +131,22 @@ impl Matrix {
         &self.data[self.start..self.start + self.rows * self.cols]
     }
 
+    /// Borrow the contiguous row range `[first, first + len)` as one
+    /// flat slice — the input shape of the blocked
+    /// [`crate::linalg::dot_rows`] kernel. Panics if the range exceeds
+    /// the matrix.
+    #[inline]
+    pub fn row_block(&self, first: usize, len: usize) -> &[f32] {
+        assert!(
+            first + len <= self.rows,
+            "row_block: [{first}, {}) out of {} rows",
+            first + len,
+            self.rows
+        );
+        let s = self.start + first * self.cols;
+        &self.data[s..s + len * self.cols]
+    }
+
     /// Iterator over rows.
     pub fn iter_rows(&self) -> impl Iterator<Item = &[f32]> {
         (0..self.rows).map(move |i| self.row(i))
@@ -138,16 +154,20 @@ impl Matrix {
 
     /// Matrix-vector product `self * q` (each row dotted with `q`).
     pub fn matvec(&self, q: &[f32]) -> Vec<f32> {
-        assert_eq!(q.len(), self.cols, "matvec: dim mismatch");
-        self.iter_rows().map(|r| super::dot(r, q)).collect()
+        let mut out = Vec::new();
+        self.matvec_into(q, &mut out);
+        out
     }
 
     /// [`Matrix::matvec`] into a caller-owned buffer (cleared first) —
-    /// the allocation-free variant the execution core uses.
+    /// the allocation-free variant the execution core uses. Runs the
+    /// blocked [`crate::linalg::dot_rows`] kernel over the whole
+    /// row-major buffer (bit-identical per row to [`crate::linalg::dot`]).
     pub fn matvec_into(&self, q: &[f32], out: &mut Vec<f32>) {
         assert_eq!(q.len(), self.cols, "matvec: dim mismatch");
         out.clear();
-        out.extend(self.iter_rows().map(|r| super::dot(r, q)));
+        out.resize(self.rows, 0.0);
+        super::dot_rows(self.as_slice(), self.cols, q, out);
     }
 
     /// A new matrix with the given rows gathered (copied) in order.
@@ -277,6 +297,25 @@ mod tests {
         // min_max / matvec respect the view bounds.
         assert_eq!(v.min_max(), (6.0, 11.0));
         assert_eq!(v.matvec(&[1.0, 0.0, 0.0]), vec![6.0, 9.0]);
+    }
+
+    #[test]
+    fn row_block_is_contiguous_and_view_aware() {
+        let m = Matrix::from_fn(6, 3, |r, c| (r * 3 + c) as f32);
+        assert_eq!(m.row_block(1, 2), &m.as_slice()[3..9]);
+        assert_eq!(m.row_block(0, 6), m.as_slice());
+        assert!(m.row_block(6, 0).is_empty());
+        // On a view, blocks are relative to the view's rows but the
+        // same backing bytes.
+        let v = m.view_rows(2, 3);
+        assert_eq!(v.row_block(1, 2), &m.as_slice()[9..15]);
+        assert!(std::ptr::eq(v.row_block(0, 1).as_ptr(), m.row(2).as_ptr()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_block_out_of_range_panics() {
+        m().row_block(1, 2);
     }
 
     #[test]

@@ -1,13 +1,24 @@
 //! Dense linear-algebra substrate.
 //!
 //! Everything the MIPS algorithms need, implemented from scratch:
-//! a row-major [`Matrix`], blocked dot products, deterministic RNG
-//! ([`rng::Rng`]), power-iteration PCA ([`pca`]), top-K selection
-//! ([`topk`]) and streaming moments ([`stats`]).
+//! a row-major [`Matrix`], runtime-dispatched SIMD kernels ([`simd`]:
+//! AVX2 / NEON / portable-scalar behind one cached function-pointer
+//! table), deterministic RNG ([`rng::Rng`]), power-iteration PCA
+//! ([`pca`]), top-K selection ([`topk`]) and streaming moments
+//! ([`stats`]).
+//!
+//! The free functions below ([`dot`], [`partial_dot`], [`axpy`],
+//! [`dist_sq`], [`norm_sq`], [`dot_rows`], [`partial_dot_rows`]) are
+//! the single compute funnel of the whole system: every exact scan,
+//! pull batch, and confirm rescore goes through them, so the ISA
+//! selected by [`simd`] lifts every layer at once. Set
+//! `RUST_PALLAS_FORCE_SCALAR=1` to pin the portable scalar kernels
+//! (see [`simd`] for the dispatch and tolerance contract).
 
 pub mod matrix;
 pub mod pca;
 pub mod rng;
+pub mod simd;
 pub mod solve;
 pub mod stats;
 pub mod topk;
@@ -16,41 +27,18 @@ pub use matrix::Matrix;
 pub use rng::Rng;
 pub use topk::TopK;
 
-/// Dot product of two equal-length slices, unrolled 4-wide.
+/// Dot product of two equal-length slices.
 ///
 /// This is the innermost primitive of the whole system: both the naive
 /// baseline and the exact re-ranking phases of every approximate index
-/// funnel through it. The 4 independent accumulators let LLVM vectorize
-/// without `-ffast-math`-style reassociation concerns (we accept the
-/// reassociation; MIPS scores are compared, not accumulated across
-/// queries).
+/// funnel through it. Dispatches to the [`simd`] kernel table (AVX2 /
+/// NEON / scalar — selected once per process). We accept float
+/// reassociation across ISAs; MIPS scores are compared, not accumulated
+/// across queries.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    // Lane-wise accumulators over fixed-size chunks: the form LLVM
-    // reliably turns into packed FMAs under `-C target-cpu=native`.
-    const LANES: usize = 16;
-    let mut acc = [0f32; LANES];
-    let mut ca = a.chunks_exact(LANES);
-    let mut cb = b.chunks_exact(LANES);
-    for (xa, xb) in (&mut ca).zip(&mut cb) {
-        for i in 0..LANES {
-            acc[i] += xa[i] * xb[i];
-        }
-    }
-    let mut tail = 0f32;
-    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
-        tail += x * y;
-    }
-    // Pairwise reduction keeps the summation tree balanced.
-    let mut width = LANES / 2;
-    while width > 0 {
-        for i in 0..width {
-            acc[i] += acc[i + width];
-        }
-        width /= 2;
-    }
-    acc[0] + tail
+    (simd::kernels().dot)(a, b)
 }
 
 /// Partial dot product over the coordinate range `[lo, hi)`.
@@ -63,10 +51,77 @@ pub fn partial_dot(a: &[f32], b: &[f32], lo: usize, hi: usize) -> f32 {
     dot(&a[lo..hi], &b[lo..hi])
 }
 
+/// Blocked row scoring: `out[i] = dot(block[i*dim..(i+1)*dim], q)`.
+///
+/// `block` is `out.len()` contiguous row-major rows (the shape
+/// [`Matrix::row_block`] returns). The SIMD backends score several rows
+/// per pass sharing each query register load — the kernel behind the
+/// Naive fused scan, the engine batch paths, and the sharded confirm
+/// rescore. Guaranteed bit-identical per row to [`dot`] on the same
+/// slices (see the [`simd`] module contract).
+#[inline]
+pub fn dot_rows(block: &[f32], dim: usize, q: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(q.len(), dim);
+    debug_assert_eq!(block.len(), out.len() * dim);
+    (simd::kernels().dot_rows)(block, dim, q, out)
+}
+
+/// Scattered blocked scoring: `out[i] = dot(rows[i], q)` where every
+/// `rows[i]` is a pre-sliced window with `rows[i].len() == q.len()`.
+///
+/// One pull batch across a BOUNDEDME survivor set: survivors are
+/// non-contiguous matrix rows, but each round pulls the same dense
+/// coordinate run from all of them, so the kernel shares query register
+/// loads across the set. Also bit-identical per row to [`dot`].
+#[inline]
+pub fn partial_dot_rows(rows: &[&[f32]], q: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(rows.len(), out.len());
+    (simd::kernels().partial_dot_rows)(rows, q, out)
+}
+
+/// Drive [`partial_dot_rows`] over an arbitrarily long scattered row
+/// sequence in fixed stack-resident chunks of 8 (no heap staging),
+/// calling `sink(index, score)` for each row in sequence order.
+///
+/// This is the one staging loop shared by every scattered consumer —
+/// BOUNDEDME pull batches over survivor sets and the sharded confirm
+/// rescore — so the chunk/remainder bookkeeping lives in exactly one
+/// place. Per-row scores are bit-identical to [`dot`] regardless of how
+/// the sequence length splits into chunks.
+pub fn partial_dot_rows_chunked<'a, I, F>(rows: I, q: &[f32], mut sink: F)
+where
+    I: IntoIterator<Item = &'a [f32]>,
+    F: FnMut(usize, f32),
+{
+    const CHUNK: usize = 8;
+    let mut refs: [&[f32]; CHUNK] = [&[]; CHUNK];
+    let mut scores = [0f32; CHUNK];
+    let mut base = 0usize;
+    let mut fill = 0usize;
+    for row in rows {
+        refs[fill] = row;
+        fill += 1;
+        if fill == CHUNK {
+            partial_dot_rows(&refs, q, &mut scores);
+            for (t, &s) in scores.iter().enumerate() {
+                sink(base + t, s);
+            }
+            base += CHUNK;
+            fill = 0;
+        }
+    }
+    if fill > 0 {
+        partial_dot_rows(&refs[..fill], q, &mut scores[..fill]);
+        for (t, &s) in scores[..fill].iter().enumerate() {
+            sink(base + t, s);
+        }
+    }
+}
+
 /// Squared Euclidean norm.
 #[inline]
 pub fn norm_sq(a: &[f32]) -> f32 {
-    dot(a, a)
+    (simd::kernels().norm_sq)(a)
 }
 
 /// Euclidean norm.
@@ -79,21 +134,14 @@ pub fn norm(a: &[f32]) -> f32 {
 #[inline]
 pub fn dist_sq(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut s = 0f32;
-    for i in 0..a.len() {
-        let d = a[i] - b[i];
-        s += d * d;
-    }
-    s
+    (simd::kernels().dist_sq)(a, b)
 }
 
 /// `y += alpha * x` (AXPY).
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for i in 0..x.len() {
-        y[i] += alpha * x[i];
-    }
+    (simd::kernels().axpy)(alpha, x, y)
 }
 
 /// Scale a vector in place.
@@ -151,11 +199,77 @@ mod tests {
     }
 
     #[test]
+    fn dot_rows_matches_per_row_dot_bitwise() {
+        // The invariant the fused-scan equivalence tests stand on.
+        for (rows, dim) in [(1usize, 5usize), (3, 64), (4, 17), (9, 33), (2, 0)] {
+            let block: Vec<f32> =
+                (0..rows * dim).map(|i| (i as f32 * 0.3).sin()).collect();
+            let q: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.7).cos()).collect();
+            let mut out = vec![0f32; rows];
+            dot_rows(&block, dim, &q, &mut out);
+            for r in 0..rows {
+                let single = dot(&block[r * dim..(r + 1) * dim], &q);
+                assert_eq!(out[r].to_bits(), single.to_bits(), "{rows}x{dim} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn partial_dot_rows_matches_per_row_dot_bitwise() {
+        let dim = 50usize;
+        let rows = 7usize;
+        let block: Vec<f32> = (0..rows * dim).map(|i| (i as f32 * 0.13).sin()).collect();
+        let q: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.21).cos()).collect();
+        // Scattered windows [10, 40) of each row (unaligned lo).
+        let refs: Vec<&[f32]> =
+            (0..rows).map(|r| &block[r * dim + 10..r * dim + 40]).collect();
+        let mut out = vec![0f32; rows];
+        partial_dot_rows(&refs, &q[10..40], &mut out);
+        for r in 0..rows {
+            let single = partial_dot(&block[r * dim..(r + 1) * dim], &q, 10, 40);
+            assert_eq!(out[r].to_bits(), single.to_bits(), "row {r}");
+        }
+    }
+
+    #[test]
+    fn partial_dot_rows_chunked_covers_all_remainders() {
+        // Lengths straddling the chunk width (8): empty, sub-chunk,
+        // exact multiples, and ragged tails all visit every row once,
+        // in order, with scores bit-identical to per-row dot.
+        let dim = 21usize;
+        for rows in [0usize, 1, 7, 8, 9, 16, 19] {
+            let block: Vec<f32> =
+                (0..rows * dim).map(|i| (i as f32 * 0.23).sin()).collect();
+            let q: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.41).cos()).collect();
+            let mut seen = Vec::new();
+            partial_dot_rows_chunked(
+                (0..rows).map(|r| &block[r * dim..(r + 1) * dim]),
+                &q,
+                |i, s| seen.push((i, s)),
+            );
+            assert_eq!(seen.len(), rows, "rows={rows}");
+            for (r, &(i, s)) in seen.iter().enumerate() {
+                assert_eq!(i, r, "rows={rows}: order");
+                let single = dot(&block[r * dim..(r + 1) * dim], &q);
+                assert_eq!(s.to_bits(), single.to_bits(), "rows={rows} row {r}");
+            }
+        }
+    }
+
+    #[test]
     fn norms_and_dist() {
         let a = [3.0f32, 4.0];
         assert_eq!(norm_sq(&a), 25.0);
         assert_eq!(norm(&a), 5.0);
         assert_eq!(dist_sq(&a, &[0.0, 0.0]), 25.0);
+    }
+
+    #[test]
+    fn dist_sq_matches_naive_long() {
+        let a: Vec<f32> = (0..133).map(|i| (i as f32 * 0.17).sin()).collect();
+        let b: Vec<f32> = (0..133).map(|i| (i as f32 * 0.31).cos()).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+        assert!((dist_sq(&a, &b) - naive).abs() < 1e-4);
     }
 
     #[test]

@@ -23,6 +23,14 @@ pub struct Pca {
 
 impl Pca {
     /// Project a vector onto component `c` (after centering).
+    ///
+    /// Deliberately a fused `(x−μ)·c` loop rather than the distributed
+    /// `x·c − μ·c` form: for off-center data (mean magnitude ≫ spread)
+    /// the distributed form subtracts two large dots and
+    /// catastrophically cancels, while the fused sum of small centered
+    /// terms stays accurate. This is therefore intentionally *not* part
+    /// of the `linalg::simd` dot funnel; LLVM auto-vectorizes the shape
+    /// well on its own.
     pub fn project(&self, x: &[f32], c: usize) -> f32 {
         let comp = self.components.row(c);
         let mut s = 0f32;

@@ -1,0 +1,287 @@
+//! AVX2+FMA backend (x86-64, 256-bit lanes).
+//!
+//! Every public entry is a safe wrapper over a `#[target_feature]`
+//! kernel. SAFETY: the wrappers are sound because [`TABLE`] is only
+//! selectable by the dispatcher after `is_x86_feature_detected!`
+//! confirms both `avx2` and `fma` on the running CPU.
+//!
+//! Accumulation order (the per-row contract shared by `dot`, `dot_rows`
+//! and `partial_dot_rows`, which the exact-path bit-identity tests pin):
+//! two 8-lane FMA accumulators over 16-float chunks, one optional
+//! 8-float chunk into the first accumulator, a fixed horizontal
+//! reduction of `acc0 + acc1`, then a sequential scalar tail.
+
+use super::KernelTable;
+use core::arch::x86_64::*;
+
+pub(super) static TABLE: KernelTable = KernelTable {
+    isa: "avx2",
+    dot,
+    axpy,
+    dist_sq,
+    norm_sq,
+    dot_rows,
+    partial_dot_rows,
+};
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // min() mirrors the scalar backend's zip-truncation semantics, so a
+    // release-mode length mismatch degrades identically instead of
+    // reading out of bounds.
+    let n = a.len().min(b.len());
+    // SAFETY: table selected only after avx2+fma detection (module
+    // docs); n is within both slices.
+    unsafe { dot_fma(a.as_ptr(), b.as_ptr(), n) }
+}
+
+fn norm_sq(a: &[f32]) -> f32 {
+    // SAFETY: as above.
+    unsafe { dot_fma(a.as_ptr(), a.as_ptr(), a.len()) }
+}
+
+fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    // SAFETY: as above.
+    unsafe { axpy_fma(alpha, x, y) }
+}
+
+fn dist_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: as above.
+    unsafe { dist_sq_fma(a, b) }
+}
+
+fn dot_rows(block: &[f32], dim: usize, q: &[f32], out: &mut [f32]) {
+    // Real asserts, not debug: the unsafe kernel reads out.len()*dim
+    // floats from `block`, so a release-mode length mismatch from safe
+    // code must panic (like the scalar backend's slicing would), not
+    // read out of bounds.
+    assert_eq!(block.len(), out.len() * dim, "dot_rows: block/out shape mismatch");
+    assert_eq!(q.len(), dim, "dot_rows: query dim mismatch");
+    // SAFETY: as above; shapes verified.
+    unsafe { dot_rows_fma(block, dim, q, out) }
+}
+
+fn partial_dot_rows(rows: &[&[f32]], q: &[f32], out: &mut [f32]) {
+    // Real asserts: the unsafe kernel reads q.len() floats from every
+    // row pointer.
+    assert_eq!(rows.len(), out.len(), "partial_dot_rows: rows/out mismatch");
+    assert!(
+        rows.iter().all(|r| r.len() == q.len()),
+        "partial_dot_rows: row/query length mismatch"
+    );
+    // SAFETY: as above; shapes verified.
+    unsafe { partial_dot_rows_fma(rows, q, out) }
+}
+
+/// Horizontal sum of a 256-bit vector. Fixed reduction order: fold the
+/// two 128-bit halves, then the classic movehdup/movehl ladder.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum256(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let s = _mm_add_ps(lo, hi);
+    let shuf = _mm_movehdup_ps(s);
+    let sums = _mm_add_ps(s, shuf);
+    let shuf2 = _mm_movehl_ps(shuf, sums);
+    _mm_cvtss_f32(_mm_add_ss(sums, shuf2))
+}
+
+/// Single-row dot over raw pointers; the canonical accumulation order
+/// every blocked kernel replicates per row.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_fma(pa: *const f32, pb: *const f32, n: usize) -> f32 {
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        acc0 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(pa.add(i)),
+            _mm256_loadu_ps(pb.add(i)),
+            acc0,
+        );
+        acc1 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(pa.add(i + 8)),
+            _mm256_loadu_ps(pb.add(i + 8)),
+            acc1,
+        );
+        i += 16;
+    }
+    if i + 8 <= n {
+        acc0 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(pa.add(i)),
+            _mm256_loadu_ps(pb.add(i)),
+            acc0,
+        );
+        i += 8;
+    }
+    let mut sum = hsum256(_mm256_add_ps(acc0, acc1));
+    while i < n {
+        sum += *pa.add(i) * *pb.add(i);
+        i += 1;
+    }
+    sum
+}
+
+/// Four rows dotted against one query, sharing every query register
+/// load. Per-row accumulation is exactly [`dot_fma`]'s order.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot4_fma(
+    p0: *const f32,
+    p1: *const f32,
+    p2: *const f32,
+    p3: *const f32,
+    pq: *const f32,
+    n: usize,
+) -> [f32; 4] {
+    let mut a00 = _mm256_setzero_ps();
+    let mut a01 = _mm256_setzero_ps();
+    let mut a10 = _mm256_setzero_ps();
+    let mut a11 = _mm256_setzero_ps();
+    let mut a20 = _mm256_setzero_ps();
+    let mut a21 = _mm256_setzero_ps();
+    let mut a30 = _mm256_setzero_ps();
+    let mut a31 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let q0 = _mm256_loadu_ps(pq.add(i));
+        let q1 = _mm256_loadu_ps(pq.add(i + 8));
+        a00 = _mm256_fmadd_ps(_mm256_loadu_ps(p0.add(i)), q0, a00);
+        a01 = _mm256_fmadd_ps(_mm256_loadu_ps(p0.add(i + 8)), q1, a01);
+        a10 = _mm256_fmadd_ps(_mm256_loadu_ps(p1.add(i)), q0, a10);
+        a11 = _mm256_fmadd_ps(_mm256_loadu_ps(p1.add(i + 8)), q1, a11);
+        a20 = _mm256_fmadd_ps(_mm256_loadu_ps(p2.add(i)), q0, a20);
+        a21 = _mm256_fmadd_ps(_mm256_loadu_ps(p2.add(i + 8)), q1, a21);
+        a30 = _mm256_fmadd_ps(_mm256_loadu_ps(p3.add(i)), q0, a30);
+        a31 = _mm256_fmadd_ps(_mm256_loadu_ps(p3.add(i + 8)), q1, a31);
+        i += 16;
+    }
+    if i + 8 <= n {
+        let q0 = _mm256_loadu_ps(pq.add(i));
+        a00 = _mm256_fmadd_ps(_mm256_loadu_ps(p0.add(i)), q0, a00);
+        a10 = _mm256_fmadd_ps(_mm256_loadu_ps(p1.add(i)), q0, a10);
+        a20 = _mm256_fmadd_ps(_mm256_loadu_ps(p2.add(i)), q0, a20);
+        a30 = _mm256_fmadd_ps(_mm256_loadu_ps(p3.add(i)), q0, a30);
+        i += 8;
+    }
+    let mut s0 = hsum256(_mm256_add_ps(a00, a01));
+    let mut s1 = hsum256(_mm256_add_ps(a10, a11));
+    let mut s2 = hsum256(_mm256_add_ps(a20, a21));
+    let mut s3 = hsum256(_mm256_add_ps(a30, a31));
+    while i < n {
+        let qv = *pq.add(i);
+        s0 += *p0.add(i) * qv;
+        s1 += *p1.add(i) * qv;
+        s2 += *p2.add(i) * qv;
+        s3 += *p3.add(i) * qv;
+        i += 1;
+    }
+    [s0, s1, s2, s3]
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_rows_fma(block: &[f32], dim: usize, q: &[f32], out: &mut [f32]) {
+    let rows = out.len();
+    let pq = q.as_ptr();
+    let base = block.as_ptr();
+    let mut r = 0usize;
+    while r + 4 <= rows {
+        let p0 = base.add(r * dim);
+        let s = dot4_fma(p0, p0.add(dim), p0.add(2 * dim), p0.add(3 * dim), pq, dim);
+        out[r] = s[0];
+        out[r + 1] = s[1];
+        out[r + 2] = s[2];
+        out[r + 3] = s[3];
+        r += 4;
+    }
+    while r < rows {
+        out[r] = dot_fma(base.add(r * dim), pq, dim);
+        r += 1;
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn partial_dot_rows_fma(rows: &[&[f32]], q: &[f32], out: &mut [f32]) {
+    let n = q.len();
+    let pq = q.as_ptr();
+    let mut r = 0usize;
+    while r + 4 <= rows.len() {
+        debug_assert!(
+            rows[r].len() == n
+                && rows[r + 1].len() == n
+                && rows[r + 2].len() == n
+                && rows[r + 3].len() == n
+        );
+        let s = dot4_fma(
+            rows[r].as_ptr(),
+            rows[r + 1].as_ptr(),
+            rows[r + 2].as_ptr(),
+            rows[r + 3].as_ptr(),
+            pq,
+            n,
+        );
+        out[r] = s[0];
+        out[r + 1] = s[1];
+        out[r + 2] = s[2];
+        out[r + 3] = s[3];
+        r += 4;
+    }
+    while r < rows.len() {
+        debug_assert_eq!(rows[r].len(), n);
+        out[r] = dot_fma(rows[r].as_ptr(), pq, n);
+        r += 1;
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy_fma(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len().min(y.len());
+    let va = _mm256_set1_ps(alpha);
+    let px = x.as_ptr();
+    let py = y.as_mut_ptr();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let yv = _mm256_loadu_ps(py.add(i));
+        let xv = _mm256_loadu_ps(px.add(i));
+        _mm256_storeu_ps(py.add(i), _mm256_fmadd_ps(va, xv, yv));
+        i += 8;
+    }
+    while i < n {
+        *py.add(i) += alpha * *px.add(i);
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dist_sq_fma(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+        let d1 = _mm256_sub_ps(
+            _mm256_loadu_ps(pa.add(i + 8)),
+            _mm256_loadu_ps(pb.add(i + 8)),
+        );
+        acc0 = _mm256_fmadd_ps(d0, d0, acc0);
+        acc1 = _mm256_fmadd_ps(d1, d1, acc1);
+        i += 16;
+    }
+    if i + 8 <= n {
+        let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+        acc0 = _mm256_fmadd_ps(d0, d0, acc0);
+        i += 8;
+    }
+    let mut sum = hsum256(_mm256_add_ps(acc0, acc1));
+    while i < n {
+        let d = *pa.add(i) - *pb.add(i);
+        sum += d * d;
+        i += 1;
+    }
+    sum
+}

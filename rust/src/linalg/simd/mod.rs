@@ -1,0 +1,322 @@
+//! Runtime-dispatched SIMD kernel subsystem: the hardware floor of
+//! every scoring path.
+//!
+//! Every flop in the system — the exact Naive scan, BOUNDEDME's
+//! coordinate pull batches, the sharded sample-then-confirm rescore —
+//! funnels through [`crate::linalg::dot`] and its siblings, which in
+//! turn dispatch through this module. One [`KernelTable`] of plain `fn`
+//! pointers is selected **once per process** and cached in a
+//! [`OnceLock`]; after that first call, dispatch is a single relaxed
+//! atomic load plus an indirect call.
+//!
+//! # Dispatch strategy
+//!
+//! * **x86-64**: `is_x86_feature_detected!("avx2") && ("fma")` at first
+//!   use selects the `avx2` module's table (256-bit FMA kernels).
+//! * **aarch64**: NEON is architecturally mandatory, so the `neon`
+//!   module's table is selected unconditionally (128-bit FMA kernels).
+//! * **everything else / no features detected**: the portable
+//!   `scalar` table — the pre-SIMD reference implementation, which
+//!   LLVM still auto-vectorizes under `-C target-cpu=native`.
+//! * **`RUST_PALLAS_FORCE_SCALAR`** (any value other than empty or
+//!   `"0"`): escape hatch that pins the scalar table regardless of
+//!   detection — for debugging miscompiles, bisecting numerical drift,
+//!   and the CI matrix leg that keeps the scalar path green. The
+//!   variable is read once, at table-selection time.
+//!
+//! # Kernel set
+//!
+//! Five scalar primitives — `dot`, `axpy`, `dist_sq`, `norm_sq` (and
+//! `partial_dot`, which is `dot` over sub-slices) — plus two *blocked*
+//! kernels the scalar layer never had:
+//!
+//! * [`KernelTable::dot_rows`] scores one query against `R` contiguous
+//!   dataset rows at a time, sharing each query register load across
+//!   all rows of the block (AVX2: 4 rows/block, NEON: 2). This is the
+//!   shape of the Naive fused scan and the sharded confirm rescore.
+//! * [`KernelTable::partial_dot_rows`] takes *scattered* pre-sliced row
+//!   windows (`&[&[f32]]`) — one pull batch across a surviving arm set,
+//!   the shape of BOUNDEDME's inner loop, where survivors are
+//!   non-contiguous rows pulled over one dense coordinate run.
+//!
+//! # Float-reassociation tolerance contract
+//!
+//! Different ISAs accumulate in different orders (scalar: 16 f32 lanes,
+//! AVX2: 2×8-lane FMA vectors, NEON: 4×4-lane), so **results differ
+//! across tables** by normal float-reassociation noise — callers must
+//! treat cross-ISA scores as equal within ~1e-4 relative tolerance (the
+//! property tests in `tests/simd_kernels.rs` pin this). Two identities
+//! ARE guaranteed bit-for-bit, and the exact-path equivalence tests
+//! lean on them:
+//!
+//! 1. **Within one process, dispatch is stable**: the table is selected
+//!    once, so any two computations of the same dot in one run agree
+//!    bitwise.
+//! 2. **Within one table, blocked ≡ single-row**: `dot_rows` and
+//!    `partial_dot_rows` replicate their table's `dot` accumulation
+//!    order per row exactly (same chunk widths, same reduction tree,
+//!    same scalar tail), so a fused batch scan produces bit-identical
+//!    scores to the per-query path. Every backend must preserve this
+//!    invariant — `tests/simd_kernels.rs` asserts it per table.
+//!
+//! # Adding an ISA
+//!
+//! 1. Add a `cfg(target_arch = ...)`-gated module exporting a
+//!    `static TABLE: KernelTable` whose entries are safe wrappers over
+//!    `#[target_feature]` kernels (the wrappers are sound because the
+//!    table is only selectable after runtime detection).
+//! 2. Keep the per-row accumulation of the blocked kernels identical to
+//!    the module's own `dot` (invariant 2 above).
+//! 3. Register it in the private `detect()` selector behind its feature
+//!    check, most-specific first.
+//! 4. Run `tests/simd_kernels.rs` — the property suite cross-checks
+//!    every available table against the scalar reference.
+
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+mod scalar;
+
+/// Environment variable pinning the scalar table (debug/CI escape
+/// hatch). Any value other than empty or `"0"` forces scalar.
+pub const FORCE_SCALAR_ENV: &str = "RUST_PALLAS_FORCE_SCALAR";
+
+/// Recommended row-tile for fused scans built on
+/// [`KernelTable::dot_rows`]: small enough that a tile of
+/// serving-dimension rows stays cache-resident across a whole query
+/// batch, large enough to amortize dispatch. Shared by the Naive fused
+/// scan and the native engine so the hot paths tune together.
+pub const SCAN_TILE: usize = 16;
+
+/// One ISA's kernel set: plain `fn` pointers so the dispatched call is
+/// a single indirect jump (no trait-object fat pointer, no enum match
+/// per call).
+#[derive(Clone, Copy)]
+pub struct KernelTable {
+    /// ISA label (`"scalar"`, `"avx2"`, `"neon"`) for logs and benches.
+    pub isa: &'static str,
+    /// Dot product of two equal-length slices.
+    pub dot: fn(&[f32], &[f32]) -> f32,
+    /// `y += alpha * x` over equal-length slices.
+    pub axpy: fn(f32, &[f32], &mut [f32]),
+    /// Squared Euclidean distance of two equal-length slices.
+    pub dist_sq: fn(&[f32], &[f32]) -> f32,
+    /// Squared L2 norm (≡ `dot(a, a)` in every backend).
+    pub norm_sq: fn(&[f32]) -> f32,
+    /// Blocked row scoring: `out[i] = dot(block[i*dim .. (i+1)*dim], q)`
+    /// with query register loads shared across the rows of a block.
+    /// `block.len() == out.len() * dim`, `q.len() == dim`.
+    pub dot_rows: fn(&[f32], usize, &[f32], &mut [f32]),
+    /// Scattered blocked scoring over pre-sliced row windows:
+    /// `out[i] = dot(rows[i], q)` with `rows[i].len() == q.len()` for
+    /// all `i`. One BOUNDEDME pull batch across a survivor set.
+    pub partial_dot_rows: fn(&[&[f32]], &[f32], &mut [f32]),
+}
+
+static SCALAR: KernelTable = KernelTable {
+    isa: "scalar",
+    dot: scalar::dot,
+    axpy: scalar::axpy,
+    dist_sq: scalar::dist_sq,
+    norm_sq: scalar::norm_sq,
+    dot_rows: scalar::dot_rows,
+    partial_dot_rows: scalar::partial_dot_rows,
+};
+
+static ACTIVE: OnceLock<&'static KernelTable> = OnceLock::new();
+
+/// The process-wide dispatched kernel table. First call runs feature
+/// detection (honoring [`FORCE_SCALAR_ENV`]); subsequent calls are one
+/// atomic load.
+#[inline]
+pub fn kernels() -> &'static KernelTable {
+    *ACTIVE.get_or_init(|| select(force_scalar_requested()))
+}
+
+/// The always-available portable reference table (what
+/// [`FORCE_SCALAR_ENV`] pins). Exposed so property tests and benches
+/// can compare any table against it without re-execing the process.
+pub fn scalar_kernels() -> &'static KernelTable {
+    &SCALAR
+}
+
+/// ISA label of the dispatched table (`"scalar"`, `"avx2"`, `"neon"`).
+pub fn active_isa() -> &'static str {
+    kernels().isa
+}
+
+/// True when [`FORCE_SCALAR_ENV`] requests the scalar table.
+pub fn force_scalar_requested() -> bool {
+    match std::env::var(FORCE_SCALAR_ENV) {
+        Ok(v) => !(v.is_empty() || v == "0"),
+        Err(_) => false,
+    }
+}
+
+/// Table-selection policy, exposed for tests: `force_scalar` bypasses
+/// detection exactly like the env var does (the env var is consulted by
+/// [`kernels`], not here, so tests can exercise both branches
+/// in-process).
+pub fn select(force_scalar: bool) -> &'static KernelTable {
+    if force_scalar {
+        return &SCALAR;
+    }
+    detect()
+}
+
+/// Every table that is *runnable* on this machine right now: scalar
+/// always, plus each detected ISA table. Property tests iterate this to
+/// cross-check all compiled-in backends.
+pub fn available_tables() -> Vec<&'static KernelTable> {
+    let mut tables = vec![&SCALAR];
+    let detected = detect();
+    if !std::ptr::eq(detected, &SCALAR) {
+        tables.push(detected);
+    }
+    tables
+}
+
+/// Runtime feature detection, most-specific ISA first.
+#[allow(unreachable_code)] // the aarch64 arm returns unconditionally
+fn detect() -> &'static KernelTable {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return &avx2::TABLE;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is architecturally mandatory on aarch64.
+        return &neon::TABLE;
+    }
+    &SCALAR
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_dot(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+    }
+
+    #[test]
+    fn force_scalar_selects_scalar() {
+        assert_eq!(select(true).isa, "scalar");
+        assert!(std::ptr::eq(select(true), scalar_kernels()));
+    }
+
+    #[test]
+    fn dispatch_is_stable_and_listed() {
+        let k = kernels();
+        assert!(std::ptr::eq(k, kernels()), "dispatch must be cached");
+        // The active table is either scalar (forced or undetected) or
+        // one of the available tables.
+        assert!(available_tables().iter().any(|t| std::ptr::eq(*t, select(false)))
+            || std::ptr::eq(k, scalar_kernels()));
+    }
+
+    #[test]
+    fn env_escape_hatch_respected_when_set() {
+        // Only assertable when the harness actually set the variable
+        // (the CI scalar matrix leg does); otherwise this is vacuous.
+        if force_scalar_requested() {
+            assert_eq!(active_isa(), "scalar");
+        }
+    }
+
+    #[test]
+    fn every_available_table_matches_naive_reference() {
+        for table in available_tables() {
+            for n in [0usize, 1, 3, 7, 8, 15, 16, 17, 31, 64, 100, 1000] {
+                let a: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+                let b: Vec<f32> = (0..n).map(|i| (i as f32 * 0.73).cos()).collect();
+                let want = naive_dot(&a, &b);
+                let got = (table.dot)(&a, &b) as f64;
+                assert!(
+                    (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                    "{} dot n={n}: {got} vs {want}",
+                    table.isa
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_kernels_are_bit_identical_to_dot_per_table() {
+        // Invariant 2 of the module contract: within one table,
+        // dot_rows/partial_dot_rows ≡ dot per row, bit for bit.
+        for table in available_tables() {
+            for (rows, dim) in [(1usize, 33usize), (4, 16), (5, 0), (7, 129), (8, 8)] {
+                let block: Vec<f32> =
+                    (0..rows * dim).map(|i| (i as f32 * 0.11).sin()).collect();
+                let q: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.19).cos()).collect();
+                let mut out = vec![0f32; rows];
+                (table.dot_rows)(&block, dim, &q, &mut out);
+                let refs: Vec<&[f32]> =
+                    (0..rows).map(|r| &block[r * dim..(r + 1) * dim]).collect();
+                let mut pout = vec![0f32; rows];
+                (table.partial_dot_rows)(&refs, &q, &mut pout);
+                for r in 0..rows {
+                    let single = (table.dot)(&block[r * dim..(r + 1) * dim], &q);
+                    assert_eq!(
+                        out[r].to_bits(),
+                        single.to_bits(),
+                        "{} dot_rows row {r} ({rows}x{dim})",
+                        table.isa
+                    );
+                    assert_eq!(
+                        pout[r].to_bits(),
+                        single.to_bits(),
+                        "{} partial_dot_rows row {r} ({rows}x{dim})",
+                        table.isa
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_dist_norm_match_reference_per_table() {
+        for table in available_tables() {
+            for n in [0usize, 1, 7, 8, 9, 16, 33, 257] {
+                let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.29).sin()).collect();
+                let y0: Vec<f32> = (0..n).map(|i| (i as f32 * 0.41).cos()).collect();
+                let mut y = y0.clone();
+                (table.axpy)(0.75, &x, &mut y);
+                for i in 0..n {
+                    let want = y0[i] as f64 + 0.75 * x[i] as f64;
+                    assert!(
+                        (y[i] as f64 - want).abs() < 1e-5,
+                        "{} axpy n={n} i={i}",
+                        table.isa
+                    );
+                }
+                let want_d: f64 = x
+                    .iter()
+                    .zip(&y0)
+                    .map(|(&a, &b)| (a as f64 - b as f64).powi(2))
+                    .sum();
+                let got_d = (table.dist_sq)(&x, &y0) as f64;
+                assert!(
+                    (got_d - want_d).abs() < 1e-3 * (1.0 + want_d),
+                    "{} dist_sq n={n}",
+                    table.isa
+                );
+                let want_n: f64 = x.iter().map(|&a| (a as f64).powi(2)).sum();
+                let got_n = (table.norm_sq)(&x) as f64;
+                assert!(
+                    (got_n - want_n).abs() < 1e-3 * (1.0 + want_n),
+                    "{} norm_sq n={n}",
+                    table.isa
+                );
+            }
+        }
+    }
+}

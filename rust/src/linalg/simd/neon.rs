@@ -1,0 +1,230 @@
+//! NEON backend (aarch64, 128-bit lanes).
+//!
+//! NEON is architecturally mandatory on aarch64, so the dispatcher
+//! selects this table unconditionally there; the `#[target_feature]`
+//! annotations keep the kernels honest anyway. Accumulation order (the
+//! per-row contract shared with the blocked kernels): four 4-lane FMA
+//! accumulators over 16-float chunks, a 4-float cleanup loop into the
+//! first accumulator, a fixed pairwise reduction, then a scalar tail.
+
+use super::KernelTable;
+use core::arch::aarch64::*;
+
+pub(super) static TABLE: KernelTable = KernelTable {
+    isa: "neon",
+    dot,
+    axpy,
+    dist_sq,
+    norm_sq,
+    dot_rows,
+    partial_dot_rows,
+};
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // min() mirrors the scalar backend's zip-truncation semantics on a
+    // release-mode length mismatch.
+    let n = a.len().min(b.len());
+    // SAFETY: NEON is mandatory on aarch64 (the only arch this module
+    // compiles for); n is within both slices.
+    unsafe { dot_neon(a.as_ptr(), b.as_ptr(), n) }
+}
+
+fn norm_sq(a: &[f32]) -> f32 {
+    // SAFETY: as above.
+    unsafe { dot_neon(a.as_ptr(), a.as_ptr(), a.len()) }
+}
+
+fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    // SAFETY: as above.
+    unsafe { axpy_neon(alpha, x, y) }
+}
+
+fn dist_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: as above.
+    unsafe { dist_sq_neon(a, b) }
+}
+
+fn dot_rows(block: &[f32], dim: usize, q: &[f32], out: &mut [f32]) {
+    // Real asserts, not debug: the unsafe kernel reads out.len()*dim
+    // floats from `block`, so a release-mode length mismatch from safe
+    // code must panic (like the scalar backend's slicing would), not
+    // read out of bounds.
+    assert_eq!(block.len(), out.len() * dim, "dot_rows: block/out shape mismatch");
+    assert_eq!(q.len(), dim, "dot_rows: query dim mismatch");
+    // SAFETY: as above; shapes verified.
+    unsafe { dot_rows_neon(block, dim, q, out) }
+}
+
+fn partial_dot_rows(rows: &[&[f32]], q: &[f32], out: &mut [f32]) {
+    // Real asserts: the unsafe kernel reads q.len() floats from every
+    // row pointer.
+    assert_eq!(rows.len(), out.len(), "partial_dot_rows: rows/out mismatch");
+    assert!(
+        rows.iter().all(|r| r.len() == q.len()),
+        "partial_dot_rows: row/query length mismatch"
+    );
+    // SAFETY: as above; shapes verified.
+    unsafe { partial_dot_rows_neon(rows, q, out) }
+}
+
+/// Single-row dot over raw pointers; the canonical accumulation order
+/// the blocked kernels replicate per row.
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon(pa: *const f32, pb: *const f32, n: usize) -> f32 {
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut acc2 = vdupq_n_f32(0.0);
+    let mut acc3 = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 16 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
+        acc2 = vfmaq_f32(acc2, vld1q_f32(pa.add(i + 8)), vld1q_f32(pb.add(i + 8)));
+        acc3 = vfmaq_f32(acc3, vld1q_f32(pa.add(i + 12)), vld1q_f32(pb.add(i + 12)));
+        i += 16;
+    }
+    while i + 4 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+        i += 4;
+    }
+    let mut sum = vaddvq_f32(vaddq_f32(vaddq_f32(acc0, acc1), vaddq_f32(acc2, acc3)));
+    while i < n {
+        sum += *pa.add(i) * *pb.add(i);
+        i += 1;
+    }
+    sum
+}
+
+/// Two rows dotted against one query, sharing every query register
+/// load. Per-row accumulation is exactly [`dot_neon`]'s order.
+#[target_feature(enable = "neon")]
+unsafe fn dot2_neon(p0: *const f32, p1: *const f32, pq: *const f32, n: usize) -> [f32; 2] {
+    let mut a00 = vdupq_n_f32(0.0);
+    let mut a01 = vdupq_n_f32(0.0);
+    let mut a02 = vdupq_n_f32(0.0);
+    let mut a03 = vdupq_n_f32(0.0);
+    let mut a10 = vdupq_n_f32(0.0);
+    let mut a11 = vdupq_n_f32(0.0);
+    let mut a12 = vdupq_n_f32(0.0);
+    let mut a13 = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let q0 = vld1q_f32(pq.add(i));
+        let q1 = vld1q_f32(pq.add(i + 4));
+        let q2 = vld1q_f32(pq.add(i + 8));
+        let q3 = vld1q_f32(pq.add(i + 12));
+        a00 = vfmaq_f32(a00, vld1q_f32(p0.add(i)), q0);
+        a01 = vfmaq_f32(a01, vld1q_f32(p0.add(i + 4)), q1);
+        a02 = vfmaq_f32(a02, vld1q_f32(p0.add(i + 8)), q2);
+        a03 = vfmaq_f32(a03, vld1q_f32(p0.add(i + 12)), q3);
+        a10 = vfmaq_f32(a10, vld1q_f32(p1.add(i)), q0);
+        a11 = vfmaq_f32(a11, vld1q_f32(p1.add(i + 4)), q1);
+        a12 = vfmaq_f32(a12, vld1q_f32(p1.add(i + 8)), q2);
+        a13 = vfmaq_f32(a13, vld1q_f32(p1.add(i + 12)), q3);
+        i += 16;
+    }
+    while i + 4 <= n {
+        let q0 = vld1q_f32(pq.add(i));
+        a00 = vfmaq_f32(a00, vld1q_f32(p0.add(i)), q0);
+        a10 = vfmaq_f32(a10, vld1q_f32(p1.add(i)), q0);
+        i += 4;
+    }
+    let mut s0 = vaddvq_f32(vaddq_f32(vaddq_f32(a00, a01), vaddq_f32(a02, a03)));
+    let mut s1 = vaddvq_f32(vaddq_f32(vaddq_f32(a10, a11), vaddq_f32(a12, a13)));
+    while i < n {
+        let qv = *pq.add(i);
+        s0 += *p0.add(i) * qv;
+        s1 += *p1.add(i) * qv;
+        i += 1;
+    }
+    [s0, s1]
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dot_rows_neon(block: &[f32], dim: usize, q: &[f32], out: &mut [f32]) {
+    let rows = out.len();
+    let pq = q.as_ptr();
+    let base = block.as_ptr();
+    let mut r = 0usize;
+    while r + 2 <= rows {
+        let p0 = base.add(r * dim);
+        let s = dot2_neon(p0, p0.add(dim), pq, dim);
+        out[r] = s[0];
+        out[r + 1] = s[1];
+        r += 2;
+    }
+    while r < rows {
+        out[r] = dot_neon(base.add(r * dim), pq, dim);
+        r += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn partial_dot_rows_neon(rows: &[&[f32]], q: &[f32], out: &mut [f32]) {
+    let n = q.len();
+    let pq = q.as_ptr();
+    let mut r = 0usize;
+    while r + 2 <= rows.len() {
+        debug_assert!(rows[r].len() == n && rows[r + 1].len() == n);
+        let s = dot2_neon(rows[r].as_ptr(), rows[r + 1].as_ptr(), pq, n);
+        out[r] = s[0];
+        out[r + 1] = s[1];
+        r += 2;
+    }
+    while r < rows.len() {
+        debug_assert_eq!(rows[r].len(), n);
+        out[r] = dot_neon(rows[r].as_ptr(), pq, n);
+        r += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn axpy_neon(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len().min(y.len());
+    let va = vdupq_n_f32(alpha);
+    let px = x.as_ptr();
+    let py = y.as_mut_ptr();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let yv = vld1q_f32(py.add(i));
+        let xv = vld1q_f32(px.add(i));
+        vst1q_f32(py.add(i), vfmaq_f32(yv, va, xv));
+        i += 4;
+    }
+    while i < n {
+        *py.add(i) += alpha * *px.add(i);
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dist_sq_neon(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let d0 = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+        let d1 = vsubq_f32(vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
+        acc0 = vfmaq_f32(acc0, d0, d0);
+        acc1 = vfmaq_f32(acc1, d1, d1);
+        i += 8;
+    }
+    while i + 4 <= n {
+        let d0 = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+        acc0 = vfmaq_f32(acc0, d0, d0);
+        i += 4;
+    }
+    let mut sum = vaddvq_f32(vaddq_f32(acc0, acc1));
+    while i < n {
+        let d = *pa.add(i) - *pb.add(i);
+        sum += d * d;
+        i += 1;
+    }
+    sum
+}

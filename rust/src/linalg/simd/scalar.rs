@@ -1,0 +1,111 @@
+//! Portable scalar backend: the always-available reference table.
+//!
+//! `dot` is byte-for-byte the pre-SIMD implementation that every result
+//! in the repo was validated against — `RUST_PALLAS_FORCE_SCALAR=1`
+//! therefore reproduces pre-subsystem numerics exactly on the MIPS
+//! scoring paths (`dot`, `partial_dot`, `norm_sq`, `axpy`, and
+//! everything built on them). One deliberate exception even under
+//! forced scalar: `dist_sq` gained the same lane-accumulator structure
+//! as `dot` (the pre-subsystem version was a bare sequential loop),
+//! shifting distance floats by normal reassociation noise — never the
+//! exact-path argmax. The blocked kernels are plain per-row loops over
+//! `dot` (register-blocking buys nothing without vector registers),
+//! which trivially satisfies the module's blocked-≡-single-row
+//! bit-identity invariant.
+
+/// Accumulator width of the scalar kernels: the form LLVM reliably
+/// turns into packed FMAs under `-C target-cpu=native`.
+const LANES: usize = 16;
+
+/// Dot product, unrolled over 16 independent lane accumulators with a
+/// pairwise (balanced-tree) reduction.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for i in 0..LANES {
+            acc[i] += xa[i] * xb[i];
+        }
+    }
+    let mut tail = 0f32;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    // Pairwise reduction keeps the summation tree balanced.
+    let mut width = LANES / 2;
+    while width > 0 {
+        for i in 0..width {
+            acc[i] += acc[i + width];
+        }
+        width /= 2;
+    }
+    acc[0] + tail
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Squared Euclidean distance with the same lane-accumulator structure
+/// as [`dot`] (the pre-subsystem version was a bare sequential loop
+/// LLVM could not reassociate).
+pub fn dist_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for i in 0..LANES {
+            let d = xa[i] - xb[i];
+            acc[i] += d * d;
+        }
+    }
+    let mut tail = 0f32;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        let d = x - y;
+        tail += d * d;
+    }
+    let mut width = LANES / 2;
+    while width > 0 {
+        for i in 0..width {
+            acc[i] += acc[i + width];
+        }
+        width /= 2;
+    }
+    acc[0] + tail
+}
+
+/// Squared L2 norm: exactly `dot(a, a)`.
+pub fn norm_sq(a: &[f32]) -> f32 {
+    dot(a, a)
+}
+
+/// Blocked row scoring (per-row [`dot`]). Hard asserts keep shape
+/// violations a panic on every backend — the scalar CI leg must fail
+/// exactly where the AVX2/NEON legs would.
+pub fn dot_rows(block: &[f32], dim: usize, q: &[f32], out: &mut [f32]) {
+    assert_eq!(block.len(), out.len() * dim, "dot_rows: block/out shape mismatch");
+    assert_eq!(q.len(), dim, "dot_rows: query dim mismatch");
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = dot(&block[i * dim..(i + 1) * dim], q);
+    }
+}
+
+/// Scattered blocked scoring (per-row [`dot`] over pre-sliced windows).
+/// Hard asserts, for the same cross-backend consistency as [`dot_rows`].
+pub fn partial_dot_rows(rows: &[&[f32]], q: &[f32], out: &mut [f32]) {
+    assert_eq!(rows.len(), out.len(), "partial_dot_rows: rows/out mismatch");
+    assert!(
+        rows.iter().all(|r| r.len() == q.len()),
+        "partial_dot_rows: row/query length mismatch"
+    );
+    for (r, o) in rows.iter().zip(out.iter_mut()) {
+        *o = dot(r, q);
+    }
+}

@@ -21,7 +21,7 @@
 //! per `CoordinatorConfig::backend`.
 
 use crate::errors::{anyhow, Result};
-use crate::linalg::{dot, Matrix};
+use crate::linalg::{dot_rows, Matrix};
 use std::path::PathBuf;
 
 /// Block scorer: exact inner products of `rows` (flattened `count × dim`)
@@ -99,7 +99,10 @@ pub trait ScoringEngine: Send {
     }
 }
 
-/// Pure-Rust scorer.
+/// Pure-Rust scorer, built on the runtime-dispatched blocked SIMD
+/// kernels ([`crate::linalg::simd`]); tiles by the shared
+/// [`crate::linalg::simd::SCAN_TILE`] so it tunes together with the
+/// Naive fused scan.
 pub struct NativeEngine;
 
 impl ScoringEngine for NativeEngine {
@@ -112,12 +115,17 @@ impl ScoringEngine for NativeEngine {
         if rows.len() != count * dim {
             return Err(anyhow!("block shape mismatch: {} vs {count}×{dim}", rows.len()));
         }
-        Ok((0..count).map(|i| dot(&rows[i * dim..(i + 1) * dim], q)).collect())
+        let mut out = vec![0f32; count];
+        dot_rows(rows, dim, q, &mut out);
+        Ok(out)
     }
 
-    /// Row-major fused kernel: one pass over the rows, each dotted with
-    /// every query while resident in cache. On a `B`-query batch this
-    /// reads the dataset once instead of `B` times.
+    /// Row-major fused kernel: one pass over the rows in
+    /// [`crate::linalg::simd::SCAN_TILE`]-row tiles, each tile scored
+    /// against every query while resident in cache. On a `B`-query
+    /// batch this reads the dataset once instead of `B` times, and the
+    /// blocked `dot_rows` kernel shares each query register load across
+    /// the tile's rows.
     fn score_batch_into(
         &self,
         rows: &[f32],
@@ -136,10 +144,15 @@ impl ScoringEngine for NativeEngine {
         }
         out.clear();
         out.resize(queries.len() * count, 0.0);
-        for (i, row) in rows.chunks_exact(dim.max(1)).take(count).enumerate() {
+        let mut base = 0usize;
+        while base < count {
+            let take = (count - base).min(crate::linalg::simd::SCAN_TILE);
+            let block = &rows[base * dim..(base + take) * dim];
             for (qi, q) in queries.iter().enumerate() {
-                out[qi * count + i] = dot(row, q);
+                let dst = &mut out[qi * count + base..qi * count + base + take];
+                dot_rows(block, dim, q, dst);
             }
+            base += take;
         }
         Ok(())
     }
@@ -420,7 +433,7 @@ impl ScoringEngine for PjrtEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::Rng;
+    use crate::linalg::{dot, Rng};
 
     #[test]
     fn native_engine_matches_dot() {

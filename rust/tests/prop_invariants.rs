@@ -424,3 +424,59 @@ fn prop_channel_conservation() {
         assert_eq!(all.len(), producers * per, "case {case}: duplicates");
     }
 }
+
+/// Exact `query_batch` through the dispatched SIMD kernel table returns
+/// the same argmax ids as a forced-scalar recomputation (what
+/// `RUST_PALLAS_FORCE_SCALAR=1` executes), with scores inside the
+/// `linalg::simd` tolerance contract — on random instances. Near-ties
+/// at a rank boundary (where argmax identity across ISAs is genuinely
+/// undefined) are skipped; Gaussian draws essentially never produce
+/// them.
+#[test]
+fn prop_query_batch_argmax_simd_scalar_invariant() {
+    use bandit_mips::linalg::simd;
+    let scalar = simd::scalar_kernels();
+    let mut rng = Rng::new(0x51AD2);
+    for case in 0..20 {
+        let n = 20 + rng.next_below(200);
+        let d = 8 + rng.next_below(300);
+        let k = 1 + rng.next_below(6);
+        let data = Matrix::from_fn(n, d, |_, _| rng.gaussian() as f32);
+        let queries: Vec<Vec<f32>> = (0..4).map(|_| rng.gaussian_vec(d)).collect();
+        let refs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        let index = NaiveIndex::new(data.clone());
+        let mut ctx = QueryContext::new();
+        let batch =
+            index.query_batch(&refs, &MipsParams { k, ..Default::default() }, &mut ctx);
+        for (qi, q) in queries.iter().enumerate() {
+            let mut ranked: Vec<(f32, usize)> =
+                (0..n).map(|i| ((scalar.dot)(data.row(i), q), i)).collect();
+            ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+            let kk = k.min(n);
+            // Skip draws with a near-tie anywhere in (or just past) the
+            // returned prefix. "Near" is relative to the score scale:
+            // the simd contract lets each score move by 1e-4·(1+|s|)
+            // across ISAs, so a pair is only safely ordered when its
+            // gap exceeds both scores' combined allowance.
+            let boundary = (kk + 1).min(n);
+            let degenerate = ranked[..boundary].windows(2).any(|w| {
+                let scale = 1.0 + w[0].0.abs().max(w[1].0.abs());
+                (w[0].0 - w[1].0).abs() < 4e-4 * scale
+            });
+            if degenerate {
+                continue;
+            }
+            let want: Vec<usize> = ranked[..kk].iter().map(|&(_, i)| i).collect();
+            assert_eq!(
+                batch[qi].indices, want,
+                "case {case} q{qi} (n={n} d={d} k={k}): dispatched argmax != scalar"
+            );
+            for (got, &(w, _)) in batch[qi].scores.iter().zip(&ranked[..kk]) {
+                assert!(
+                    (got - w).abs() <= 1e-4 * (1.0 + w.abs()),
+                    "case {case} q{qi}: score {got} vs scalar {w}"
+                );
+            }
+        }
+    }
+}
