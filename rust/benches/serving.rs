@@ -1,5 +1,7 @@
 //! Bench P1: the serving coordinator under closed-loop load — batcher
-//! and queue overhead, worker scaling, exact vs BOUNDEDME modes.
+//! and queue overhead, worker scaling, sharded fan-out, straggler
+//! hedging, and the S = 1 fast path vs the reactor merge path
+//! (`per_request_overhead` vs `per_request_overhead_reactor`).
 
 use bandit_mips::benchkit::{Bencher, Reporter};
 use bandit_mips::coordinator::{
@@ -113,29 +115,88 @@ fn main() {
         coord.shutdown();
     }
 
+    // Straggler hedging: shard 0 artificially slow (3ms per primary
+    // batch, the debug straggler knob); hedging off vs on. The hedged
+    // run's p-worst service should sit near the healthy shard's
+    // latency instead of the straggler's.
+    let hds = gaussian_dataset(600, 256, 77);
+    let hq = hds.sample_query(3);
+    let mut hedge_points: Vec<Json> = Vec::new();
+    for hedge_us in [0u64, 300] {
+        let mut hcfg = CoordinatorConfig {
+            workers: 4,
+            max_batch: 8,
+            batch_timeout: Duration::from_micros(200),
+            queue_capacity: 4096,
+            backend: Backend::Native,
+            shard: ShardSpec::contiguous(2),
+            ..Default::default()
+        };
+        hcfg.debug_slow_shard = Some((0, Duration::from_millis(3)));
+        if hedge_us > 0 {
+            hcfg.hedge_delay = Some(Duration::from_micros(hedge_us));
+        }
+        let coord = Coordinator::new(hds.vectors.clone(), hcfg).unwrap();
+        let mut qps = 0.0;
+        let label = if hedge_us == 0 { "off".to_string() } else { format!("{hedge_us}us") };
+        r.bench(&b, &format!("serving/hedging hedge={label} slow_shard=3ms (30q)"), || {
+            qps = run_load(&coord, 30, &hq);
+            qps as u64
+        });
+        let m = coord.metrics();
+        println!(
+            "    ~{qps:.0} qps; service p50 {:.3} ms p99 {:.3} ms; hedges fired {} won {}",
+            m.service.0 * 1e3,
+            m.service.2 * 1e3,
+            m.hedge_fired,
+            m.hedge_won
+        );
+        hedge_points.push(Json::obj([
+            ("hedge_us", Json::Num(hedge_us as f64)),
+            ("qps", Json::Num(qps)),
+            ("service_p50_s", Json::Num(m.service.0)),
+            ("service_p99_s", Json::Num(m.service.2)),
+            ("hedge_fired", Json::Num(m.hedge_fired as f64)),
+            ("hedge_won", Json::Num(m.hedge_won as f64)),
+        ]));
+        coord.shutdown();
+    }
+
     // Coordinator overhead: single trivial exact query on a tiny dataset
-    // (upper-bounds router+batcher+channel cost per request).
+    // (upper-bounds batcher+channel cost per request). Two rows: the
+    // default S = 1 fast path (worker → client directly) and the same
+    // traffic forced through the reactor merge path — the difference is
+    // the per-request cost the fast path removes.
     let tiny = gaussian_dataset(8, 16, 5);
-    let coord = Coordinator::new(
-        tiny.vectors.clone(),
-        CoordinatorConfig {
+    let tq = tiny.sample_query(1);
+    let mut fast_path_served = 0u64;
+    for force_reactor in [false, true] {
+        let mut ocfg = CoordinatorConfig {
             workers: 1,
             max_batch: 1,
             batch_timeout: Duration::from_micros(1),
             queue_capacity: 64,
             backend: Backend::Native,
             ..Default::default()
-        },
-    )
-    .unwrap();
-    let tq = tiny.sample_query(1);
-    r.bench(&b, "serving/per_request_overhead (8x16 exact)", || {
-        coord
-            .query_blocking(QueryRequest::exact(tq.clone(), 1))
-            .unwrap()
-            .indices[0]
-    });
-    coord.shutdown();
+        };
+        ocfg.force_reactor = force_reactor;
+        let coord = Coordinator::new(tiny.vectors.clone(), ocfg).unwrap();
+        let name = if force_reactor {
+            "serving/per_request_overhead_reactor (8x16 exact)"
+        } else {
+            "serving/per_request_overhead (8x16 exact)"
+        };
+        r.bench(&b, name, || {
+            coord
+                .query_blocking(QueryRequest::exact(tq.clone(), 1))
+                .unwrap()
+                .indices[0]
+        });
+        if !force_reactor {
+            fast_path_served = coord.metrics().fast_path;
+        }
+        coord.shutdown();
+    }
 
     r.finish("serving coordinator");
     r.write_json(
@@ -144,6 +205,8 @@ fn main() {
         &[
             ("closed_loop", Json::Arr(load_points)),
             ("sharded", Json::Arr(shard_points)),
+            ("hedging", Json::Arr(hedge_points)),
+            ("fast_path_served", Json::Num(fast_path_served as f64)),
         ],
     );
 }

@@ -37,14 +37,6 @@ impl BoundedMeIndex {
         Self { data, colmax, order }
     }
 
-    /// Build from precomputed column maxima (the coordinator shares one
-    /// `colmax` scan across its worker pool; `Matrix` clones share
-    /// storage, so this is allocation-cheap per worker).
-    pub fn from_parts(data: Matrix, colmax: Vec<f32>, order: PullOrder) -> Self {
-        assert_eq!(colmax.len(), data.cols(), "colmax len mismatch");
-        Self { data, colmax, order }
-    }
-
     /// The dataset's largest |coordinate| (coarse reward-range input).
     pub fn max_abs_coord(&self) -> f32 {
         self.colmax.iter().fold(f32::MIN_POSITIVE, |m, &x| m.max(x))

@@ -1,54 +1,91 @@
-//! The serving coordinator: router → dynamic batcher → worker pool.
+//! The serving coordinator: plan-aware batcher → event-driven reactor →
+//! shard workers — with an S = 1 fast path that skips the reactor hop
+//! entirely.
 //!
 //! The paper's Motivation II — a per-query (ε, δ) accuracy knob — is a
 //! *serving* feature: different requests on one index want different
 //! points on the accuracy/latency curve. This module provides that as a
-//! production-shaped service:
+//! production-shaped service. Event flow, stage by stage:
 //!
-//! ```text
-//!  submit() ──► bounded queue ──► batcher (size/deadline policy)
-//!                                    │ batches
-//!                                    ▼
-//!                              shard router (shed + Auto planning,
-//!                              once per query, before fan-out)
-//!                               │ fan-out: one ShardBatch per shard
-//!                  ┌────────────┼────────────┐
-//!                  ▼            ▼            ▼
-//!             shard-0 workers   …       shard-S−1 workers
-//!             (ScoringEngine + BoundedME over their shard)
-//!                  └──── partial top-K ──────┘
-//!                               ▼
-//!               last-shard-completes merge (TopK, stable
-//!               id tie-break) ─► per-request channels + metrics
-//! ```
+//! 1. **Submit.** [`Coordinator::submit`] pushes into a bounded queue
+//!    and fails fast with [`CoordinatorError::QueueFull`] under
+//!    backpressure — no unbounded buffering anywhere in the pipeline.
+//! 2. **Batch (plan-aware).** The batcher resolves [`QueryMode::Auto`]
+//!    through [`QueryPlan`] **once per query at arrival**, then groups
+//!    queries by *execution shape* — exact scans together, BOUNDEDME
+//!    queries together per `(k, ε, δ)` knob triple — instead of by raw
+//!    arrival order. A group closes when it reaches `max_batch` or its
+//!    oldest member has waited `batch_timeout`. Because a flushed group
+//!    is already knob-uniform, it hits the fused
+//!    [`crate::algos::MipsIndex::query_batch`] path (one shared
+//!    coordinate permutation, one scoring slab) instead of degrading to
+//!    per-query serving.
+//! 3. **Fast path (S = 1).** Unsharded deployments skip the reactor
+//!    thread entirely: workers consume batches straight from the
+//!    batcher, check deadlines at pickup, execute through their
+//!    long-lived [`QueryContext`], and reply **worker → client** — no
+//!    per-query `Arc` wrapper, no merge lock, no extra thread hop.
+//!    `serving/per_request_overhead` in `BENCH_serving.json` tracks
+//!    exactly this path.
+//! 4. **Reactor (S ≥ 2).** A single event-loop thread owns all
+//!    cross-shard state. It *never blocks on a full channel*: batches
+//!    are admitted from the batcher with
+//!    [`try_recv`](crate::sync::Receiver::try_recv), fanned out to
+//!    per-shard channels with `try_send`
+//!    (spilling to a bounded per-shard backlog under backpressure —
+//!    admission pauses while a backlog is full, so the end-to-end
+//!    backpressure chain submit → batcher → reactor stays intact), and
+//!    merge completion is driven by **shard-partial events** coming
+//!    back from workers rather than by a last-shard-takes-the-lock
+//!    [`std::sync::Mutex`]. All merge state lives in the reactor
+//!    thread: no locks on the serving path.
+//! 5. **Shard workers.** Worker `w` is pinned to shard `w mod S` and
+//!    polls two channels through one [`crate::sync::Selector`]: its
+//!    shard's primary channel and the shared hedge channel. Exact
+//!    items of a batch run **one**
+//!    [`ScoringEngine::score_dataset_batch`] over the shard; BOUNDEDME
+//!    items run the sample-then-confirm entry point
+//!    [`BoundedMeIndex::query_batch_shard`] at the `(ε, δ/S)` split
+//!    from [`crate::exec::shard::shard_params`]. Each completed shard
+//!    batch returns to the reactor as one completion event carrying
+//!    per-query [`ShardPartial`]s.
+//! 6. **Merge & reply.** The reactor folds each partial into the
+//!    query's [`TopK`] accumulator (stable global-id tie-break — merge
+//!    results are independent of shard arrival order) and replies the
+//!    moment the last shard's partial lands. Sharded results are
+//!    byte-identical to the blocking implementation this replaced:
+//!    per-worker contexts and [`crate::exec::shard::merge_partials`]
+//!    semantics carried over unchanged.
 //!
-//! * **Backpressure**: the submit queue is bounded; `submit` fails fast
-//!   with [`CoordinatorError::QueueFull`] instead of buffering unbounded.
-//! * **Dynamic batching**: a batch closes when it reaches
-//!   `max_batch` or when the oldest request has waited `batch_timeout` —
-//!   and workers *execute* it as a batch, not just receive it as one:
-//!   each worker owns a long-lived [`QueryContext`] plus an Arc-backed
-//!   [`BoundedMeIndex`], exact queries of a batch go through **one**
-//!   [`ScoringEngine::score_dataset_batch`] call (fused row-major scan /
-//!   device-resident scoring), and BOUNDEDME queries of a batch share
-//!   one block-shuffled coordinate permutation via
-//!   [`crate::algos::MipsIndex::query_batch`].
-//! * **Sharding**: with [`CoordinatorConfig::shard`] set to `S ≥ 2`
-//!   shards, workers are *shard-pinned* (worker `w` serves shard `w mod
-//!   S`) and the router fans every batch out to all shards. Exact items
-//!   run one per-shard [`ScoringEngine::score_dataset_batch`]; BOUNDEDME
-//!   items run per-shard at the `(ε, δ/S)` split from
-//!   [`crate::exec::shard::shard_params`] and are exactly rescored
-//!   before the merge (sample-then-confirm — see [`crate::exec::shard`]
-//!   for why the union keeps the (ε, δ) guarantee). The last shard to
-//!   finish a query merges and replies.
-//! * **Backends**: workers score through a [`ScoringEngine`] — pure-Rust
-//!   or the PJRT AOT artifact (see [`crate::runtime`]).
-//! * **Planning**: [`QueryMode::Auto`] requests are resolved by the
-//!   router, **once per query before fan-out** — knobs too tight for
-//!   sampling to win go straight to the exact engine, and every shard
-//!   sees the same decision (plans depend on `dim`, which sharding
-//!   never splits).
+//! **Straggler hedging** ([`CoordinatorConfig::hedge_delay`]): when a
+//! dispatched shard batch has produced no completion event after the
+//! hedge delay, the reactor re-dispatches the same batch — flagged as a
+//! hedge — onto the shared hedge channel, where any idle worker (for
+//! contiguous shards, every worker can score every shard: shard
+//! matrices are zero-copy views) picks it up. First completion wins;
+//! the loser's event finds its dispatch entry already retired and is
+//! dropped wholesale, so the merge never double-counts a shard.
+//! Duplicate execution is byte-deterministic (same shard data, same
+//! knobs, same seed), which keeps hedged results identical to unhedged
+//! runs — with one deliberate exception: under per-request deadlines,
+//! a hedge copy picked up *after* the deadline sheds the query even if
+//! the straggling primary would eventually have answered late; either
+//! outcome is within the deadline contract (the client had already
+//! timed out). `hedge_fired` / `hedge_won` in [`MetricsSnapshot`]
+//! track how often hedges launch and how often they beat the
+//! straggler.
+//!
+//! * **Backpressure**: bounded everywhere — submit queue, batch
+//!   channel, per-shard channels, reactor backlog, hedge channel.
+//! * **Load shedding**: a request whose deadline expired in queue is
+//!   answered `shed = true` without computing; workers re-check at
+//!   shard pickup so queries expiring inside a backed-up shard channel
+//!   are shed, not computed.
+//! * **Backends**: workers score through a [`ScoringEngine`] —
+//!   pure-Rust or the PJRT AOT artifact (see [`crate::runtime`]).
+//!   Hedged batches for a *different* shard score through the native
+//!   blocked kernels (bit-identical under the Native backend; a PJRT
+//!   worker's device holds only its pinned shard).
 
 pub mod server;
 pub mod stats;
@@ -62,9 +99,11 @@ use crate::exec::shard::{shard_params, ShardPartial};
 use crate::exec::{PlanAlgo, QueryContext, QueryPlan};
 use crate::linalg::{Matrix, TopK};
 use crate::runtime::{NativeEngine, PjrtEngine, ScoringEngine};
-use crate::sync::{bounded, Receiver, RecvError, SendError, Sender};
+use crate::sync::{bounded, Receiver, RecvError, Selector, SendError, Sender, TryRecvError};
+use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Which compute backend workers use for exact scoring.
@@ -84,9 +123,11 @@ pub enum Backend {
 pub struct CoordinatorConfig {
     /// Worker threads.
     pub workers: usize,
-    /// Maximum queries per batch.
+    /// Maximum queries per batch (per plan/knob group — see the module
+    /// docs on plan-aware batching).
     pub max_batch: usize,
-    /// Maximum time the oldest request waits before its batch closes.
+    /// Maximum time the oldest request of a group waits before its
+    /// batch closes.
     pub batch_timeout: Duration,
     /// Router queue capacity (backpressure bound).
     pub queue_capacity: usize,
@@ -98,11 +139,37 @@ pub struct CoordinatorConfig {
     /// startup.
     pub pull_order: PullOrder,
     /// Dataset sharding across the worker pool (see
-    /// [`crate::data::shard`]). The default is a single shard —
-    /// identical behavior to the unsharded coordinator. With `S ≥ 2`
-    /// shards the worker count is raised to at least `S` so every shard
-    /// has a pinned worker.
+    /// [`crate::data::shard`]). The default is a single shard — served
+    /// on the direct fast path. With `S ≥ 2` shards the worker count is
+    /// raised to at least `S` so every shard has a pinned worker.
     pub shard: ShardSpec,
+    /// Shard-level straggler hedging (reactor path only): after a
+    /// dispatched shard batch has gone this long without completing,
+    /// re-dispatch it to the shared hedge queue where any idle worker
+    /// can serve it; first completion wins and the duplicate partial is
+    /// dropped. `None` (the default) disables hedging.
+    ///
+    /// Under the Native backend (and under PJRT's native fallback, the
+    /// only thing the stubbed `pjrt` feature can produce today), both
+    /// copies compute bit-identical partials, so hedged results equal
+    /// unhedged ones exactly. With a real PJRT device backend, hedged
+    /// *exact* partials are computed by the host's native kernels while
+    /// primaries score on-device — low-order float accumulation bits
+    /// may differ, and whichever copy completes first wins. Both are
+    /// correct exact scans; don't enable hedging there if bit-stable
+    /// replies across runs matter.
+    pub hedge_delay: Option<Duration>,
+    /// Route `S = 1` through the reactor merge path instead of the
+    /// direct fast path. Exists so tests and benches can compare the
+    /// two paths on identical traffic; answers are bit-identical either
+    /// way, the fast path just skips the reactor hop and merge state.
+    #[doc(hidden)]
+    pub force_reactor: bool,
+    /// Deterministic straggler injection for tests/benches: primary
+    /// (non-hedged) batches for shard `.0` sleep `.1` before serving.
+    /// Hedge copies run full speed. Reactor path only.
+    #[doc(hidden)]
+    pub debug_slow_shard: Option<(usize, Duration)>,
 }
 
 impl Default for CoordinatorConfig {
@@ -115,6 +182,9 @@ impl Default for CoordinatorConfig {
             backend: Backend::Native,
             pull_order: PullOrder::BlockShuffled(0),
             shard: ShardSpec::single(),
+            hedge_delay: None,
+            force_reactor: false,
+            debug_slow_shard: None,
         }
     }
 }
@@ -148,8 +218,8 @@ pub struct QueryRequest {
     /// uniform (k, ε, δ), the batch is *fused*: the first request's
     /// seed keys one shared coordinate permutation for the whole batch
     /// (that sharing is what makes batching fuse compute). Requests
-    /// with heterogeneous knobs are served individually with their own
-    /// seeds.
+    /// with heterogeneous knobs land in different batch groups and are
+    /// served with their own seeds.
     pub seed: u64,
     /// Optional service-level deadline, measured from submission. A
     /// request whose queue wait already exceeds it is *shed* (answered
@@ -171,7 +241,7 @@ impl QueryRequest {
     }
 
     /// A planner-routed request: [`QueryPlan`] picks exact vs BOUNDEDME
-    /// from the knobs at execution time.
+    /// from the knobs at batching time.
     pub fn auto(vector: Vec<f32>, k: usize, epsilon: f64, delta: f64) -> Self {
         Self { vector, k, epsilon, delta, mode: QueryMode::Auto, seed: 0, deadline: None }
     }
@@ -205,24 +275,27 @@ pub struct QueryResponse {
     pub scores: Vec<f32>,
     /// Flops spent.
     pub flops: u64,
-    /// Queue wait from submission to *router* pickup. Time spent
-    /// waiting in a backed-up per-shard channel after fan-out is
-    /// accounted in `service`, not here.
+    /// Queue wait from submission to pipeline pickup — reactor
+    /// admission on the sharded path, worker pickup on the S = 1 fast
+    /// path. Time spent waiting in a backed-up per-shard channel after
+    /// fan-out is accounted in `service`, not here.
     pub queue_wait: Duration,
-    /// Time from shard fan-out to the merged reply (includes any
-    /// shard-channel wait plus the slowest shard's compute).
+    /// Sharded path: time from reactor fan-out to the merged reply
+    /// (includes any shard-channel wait plus the slowest shard's
+    /// compute, minus whatever a winning hedge saved). Fast path: the
+    /// worker's compute time for the batch.
     pub service: Duration,
-    /// Size of the batch this query rode in.
+    /// Size of the batch group this query rode in.
     pub batch_size: usize,
-    /// Worker id that served it (under sharding: the worker whose shard
-    /// finished last and performed the merge). `usize::MAX` when no
-    /// worker touched the request (shed by the router).
+    /// Worker id that served it (under sharding: the worker whose
+    /// completion event closed the merge). `usize::MAX` when no worker
+    /// computed anything (shed).
     pub worker: usize,
     /// True when the request was shed (deadline exceeded in queue): no
     /// results were computed.
     pub shed: bool,
     /// Shard partials merged into this answer (1 when unsharded, 0 for
-    /// shed requests — they never reached a shard).
+    /// shed requests — they never produced shard work).
     pub shards: usize,
 }
 
@@ -257,6 +330,8 @@ impl std::fmt::Display for CoordinatorError {
 impl std::error::Error for CoordinatorError {}
 
 struct Pending {
+    /// The request; `mode` is resolved (never `Auto`) once the batcher
+    /// has planned it.
     req: QueryRequest,
     submitted: Instant,
     reply: Sender<QueryResponse>,
@@ -274,6 +349,25 @@ pub struct Coordinator {
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
+/// Build a worker's scoring engine (PJRT preloads the worker's pinned
+/// shard to the device so exact queries only move the query vector).
+fn build_engine(backend: &Backend, shard_data: &Matrix, worker: usize) -> Box<dyn ScoringEngine> {
+    match backend {
+        Backend::Native => Box::new(NativeEngine),
+        Backend::Pjrt { artifact_dir } => {
+            match PjrtEngine::with_dataset(artifact_dir.clone(), shard_data) {
+                Ok(e) => Box::new(e),
+                Err(err) => {
+                    crate::logkit::error!(
+                        "worker-{worker}: pjrt init failed ({err}); falling back to native"
+                    );
+                    Box::new(NativeEngine)
+                }
+            }
+        }
+    }
+}
+
 impl Coordinator {
     /// Start the coordinator over a vector set, split per
     /// [`CoordinatorConfig::shard`].
@@ -282,6 +376,7 @@ impl Coordinator {
         let dim = data.cols();
         let sharded = Arc::new(ShardedMatrix::new(data, cfg.shard));
         let n_shards = sharded.num_shards();
+        let use_reactor = n_shards > 1 || cfg.force_reactor;
         // Every shard needs at least one pinned worker; extra workers
         // round-robin across shards.
         let workers = cfg.workers.max(n_shards);
@@ -291,95 +386,127 @@ impl Coordinator {
 
         let mut threads = Vec::new();
 
-        // Batcher thread.
+        // Batcher thread: resolves Auto plans and groups by execution
+        // shape (see run_batcher).
         {
             let cfg2 = cfg.clone();
             let metrics = metrics.clone();
             threads.push(
                 std::thread::Builder::new().name("batcher".into()).spawn(move || {
-                    run_batcher(submit_rx, batch_tx, &cfg2, &metrics)
+                    run_batcher(submit_rx, batch_tx, &cfg2, dim, &metrics)
                 })?,
             );
         }
 
-        // Shard router thread: sheds, resolves Auto plans once per
-        // query, and fans each batch out to every shard's channel.
-        let mut shard_txs = Vec::with_capacity(n_shards);
-        let mut shard_rxs = Vec::with_capacity(n_shards);
-        let per_shard_cap = (workers / n_shards).max(1) * 2;
-        for _ in 0..n_shards {
-            let (tx, rx) = bounded::<ShardBatch>(per_shard_cap);
-            shard_txs.push(tx);
-            shard_rxs.push(rx);
-        }
-        {
-            let metrics = metrics.clone();
-            threads.push(
-                std::thread::Builder::new().name("shard-router".into()).spawn(move || {
-                    run_router(batch_rx, shard_txs, dim, &metrics)
-                })?,
-            );
-        }
-
-        // Shard-pinned worker threads: worker `w` serves shard `w mod
-        // S`. The per-shard colmax scan is shared across that shard's
-        // workers; shard matrices share storage with the backing data
-        // (contiguous) so per-worker state stays one O(dim) colmax copy
-        // plus the long-lived QueryContext.
-        let colmaxes: Vec<Arc<Vec<f32>>> = sharded
-            .shards()
-            .iter()
-            .map(|s| Arc::new(crate::algos::bounded_me_index::column_maxima(s.matrix())))
-            .collect();
         // `BlockShuffled(0)` = planner-chosen width for this dimension.
         let order = match cfg.pull_order {
             PullOrder::BlockShuffled(0) => PullOrder::BlockShuffled(QueryPlan::block_width(dim)),
             o => o,
         };
-        for w in 0..workers {
-            let shard_id = w % n_shards;
-            let rx = shard_rxs[shard_id].clone();
-            let sharded = sharded.clone();
-            let colmax = colmaxes[shard_id].clone();
-            let metrics = metrics.clone();
-            let backend = cfg.backend.clone();
-            threads.push(std::thread::Builder::new().name(format!("worker-{w}")).spawn(
-                move || {
-                    let shard = sharded.shard(shard_id);
-                    let engine: Box<dyn ScoringEngine> = match &backend {
-                        Backend::Native => Box::new(NativeEngine),
-                        Backend::Pjrt { artifact_dir } => {
-                            // Preload this worker's shard to the device so
-                            // exact queries only move the query vector.
-                            match PjrtEngine::with_dataset(artifact_dir.clone(), shard.matrix())
-                            {
-                                Ok(e) => Box::new(e),
-                                Err(err) => {
-                                    crate::logkit::error!(
-                                        "worker-{w}: pjrt init failed ({err}); \
-                                         falling back to native"
-                                    );
-                                    Box::new(NativeEngine)
-                                }
-                            }
+        // One shared index per shard: the colmax scan runs once per
+        // shard, and `Matrix` clones share storage, so the whole pool
+        // holds O(S·dim) metadata. Workers can serve *any* shard's
+        // hedge batches through these.
+        let indexes: Vec<Arc<BoundedMeIndex>> = sharded
+            .shards()
+            .iter()
+            .map(|s| Arc::new(BoundedMeIndex::with_order(s.matrix().clone(), order)))
+            .collect();
+
+        if use_reactor {
+            let per_shard_cap = (workers / n_shards).max(1) * 2;
+            let mut shard_txs = Vec::with_capacity(n_shards);
+            let mut shard_rxs = Vec::with_capacity(n_shards);
+            for _ in 0..n_shards {
+                let (tx, rx) = bounded::<ShardBatch>(per_shard_cap);
+                shard_txs.push(tx);
+                shard_rxs.push(rx);
+            }
+            let (hedge_tx, hedge_rx) = bounded::<ShardBatch>(workers * 2);
+            let (done_tx, done_rx) = bounded::<ShardDone>(workers * 4);
+
+            // Reactor thread: owns all cross-shard state, never blocks
+            // on a channel.
+            {
+                let metrics = metrics.clone();
+                let hedge_delay = cfg.hedge_delay;
+                threads.push(std::thread::Builder::new().name("reactor".into()).spawn(
+                    move || {
+                        Reactor {
+                            n_shards,
+                            dim,
+                            hedge_delay,
+                            max_backlog: per_shard_cap,
+                            batch_rx,
+                            done_rx,
+                            shard_txs,
+                            hedge_tx,
+                            selector: Selector::new(),
+                            merges: HashMap::new(),
+                            dispatches: HashMap::new(),
+                            backlog: (0..n_shards).map(|_| VecDeque::new()).collect(),
+                            next_query: 0,
+                            next_dispatch: 0,
+                            draining: false,
+                            metrics,
                         }
-                    };
-                    let index = BoundedMeIndex::from_parts(
-                        shard.matrix().clone(),
-                        colmax.as_ref().clone(),
-                        order,
-                    );
-                    run_shard_worker(
-                        w,
-                        n_shards,
-                        rx,
-                        &index,
-                        shard,
-                        engine.as_ref(),
-                        &metrics,
-                    );
-                },
-            )?);
+                        .run()
+                    },
+                )?);
+            }
+
+            for w in 0..workers {
+                let shard_id = w % n_shards;
+                let rx = shard_rxs[shard_id].clone();
+                let hedge_rx = hedge_rx.clone();
+                let done_tx = done_tx.clone();
+                let indexes = indexes.clone();
+                let sharded = sharded.clone();
+                let backend = cfg.backend.clone();
+                let slow = cfg.debug_slow_shard;
+                threads.push(std::thread::Builder::new().name(format!("worker-{w}")).spawn(
+                    move || {
+                        let engine =
+                            build_engine(&backend, sharded.shard(shard_id).matrix(), w);
+                        run_reactor_worker(
+                            w,
+                            n_shards,
+                            shard_id,
+                            rx,
+                            hedge_rx,
+                            done_tx,
+                            &indexes,
+                            &sharded,
+                            engine.as_ref(),
+                            slow,
+                        );
+                    },
+                )?);
+            }
+        } else {
+            // S = 1 fast path: workers consume batches straight from
+            // the batcher (MPMC) and reply directly — no reactor
+            // thread, no per-query Arc, no merge state.
+            for w in 0..workers {
+                let rx = batch_rx.clone();
+                let index = indexes[0].clone();
+                let sharded = sharded.clone();
+                let metrics = metrics.clone();
+                let backend = cfg.backend.clone();
+                threads.push(std::thread::Builder::new().name(format!("worker-{w}")).spawn(
+                    move || {
+                        let engine = build_engine(&backend, sharded.shard(0).matrix(), w);
+                        run_direct_worker(
+                            w,
+                            rx,
+                            index.as_ref(),
+                            sharded.shard(0),
+                            engine.as_ref(),
+                            &metrics,
+                        );
+                    },
+                )?);
+            }
         }
 
         Ok(Self { submit_tx, metrics, dim, threads })
@@ -419,7 +546,9 @@ impl Coordinator {
         self.dim
     }
 
-    /// Drain and stop all threads.
+    /// Drain and stop all threads: the batcher flushes its open groups,
+    /// the reactor keeps running until every in-flight query (hedged or
+    /// not) has replied, then the worker pool drains its channels.
     pub fn shutdown(mut self) {
         drop(self.submit_tx);
         for t in self.threads.drain(..) {
@@ -428,108 +557,312 @@ impl Coordinator {
     }
 }
 
-/// Batcher loop: close a batch on size or oldest-waiter deadline.
+/// Group key for plan-aware batching: exact scans fuse regardless of
+/// `k` (one shared scoring slab, per-query top-K after), BOUNDEDME
+/// fuses only under equal `(k, ε, δ)` (one shared pull budget and
+/// permutation).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum GroupKey {
+    Exact,
+    BoundedMe { k: usize, eps_bits: u64, delta_bits: u64 },
+}
+
+/// Resolve a request's execution mode: `Auto` goes through
+/// [`QueryPlan::pick`] exactly once, here at batching time, so every
+/// downstream stage (fast path, reactor, every shard) sees the same
+/// decision. Plans depend on `dim`, which sharding never splits, so the
+/// decision is shard-count invariant.
+fn plan_mode(req: &QueryRequest, dim: usize) -> QueryMode {
+    match req.mode {
+        QueryMode::Auto => match QueryPlan::pick(req.k, req.epsilon, req.delta, dim).algo {
+            PlanAlgo::Exact => QueryMode::Exact,
+            PlanAlgo::BoundedMe => QueryMode::BoundedMe,
+        },
+        m => m,
+    }
+}
+
+/// Batcher loop — **plan-aware**: arrivals are planned (`Auto`
+/// resolved), then grouped by [`GroupKey`] so every flushed batch is
+/// uniform in execution shape and hits the fused `query_batch` /
+/// `score_dataset_batch` paths. A group closes when it reaches
+/// `max_batch` or when its oldest member has waited `batch_timeout`.
 fn run_batcher(
     submit_rx: Receiver<Pending>,
     batch_tx: Sender<Batch>,
     cfg: &CoordinatorConfig,
+    dim: usize,
     metrics: &MetricsRegistry,
 ) {
+    struct Group {
+        key: GroupKey,
+        items: Vec<Pending>,
+        deadline: Instant,
+    }
+    let mut groups: Vec<Group> = Vec::new();
+    let flush = |items: Vec<Pending>| -> bool {
+        metrics.record_batch(items.len());
+        batch_tx.send(Batch { items }).is_ok()
+    };
     loop {
-        // Block for the batch's first element.
-        let first = match submit_rx.recv() {
-            Ok(p) => p,
-            Err(_) => return, // all senders gone: shutdown
-        };
-        let deadline = first.submitted + cfg.batch_timeout;
-        let mut items = vec![first];
-        while items.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
+        // Wait for the next arrival — indefinitely when no group is
+        // open, else until the earliest group deadline.
+        let next = if groups.is_empty() {
+            match submit_rx.recv() {
+                Ok(p) => Some(p),
+                Err(_) => return, // all senders gone, nothing buffered: shutdown
             }
-            match submit_rx.recv_timeout(deadline - now) {
-                Ok(p) => items.push(p),
-                Err(RecvError::Timeout) => break,
-                Err(RecvError::Disconnected) => {
-                    // Flush what we have, then exit on next loop.
-                    break;
+        } else {
+            let earliest = groups.iter().map(|g| g.deadline).min().unwrap();
+            let now = Instant::now();
+            if now >= earliest {
+                None
+            } else {
+                match submit_rx.recv_timeout(earliest - now) {
+                    Ok(p) => Some(p),
+                    Err(RecvError::Timeout) => None,
+                    Err(RecvError::Disconnected) => {
+                        // Shutdown drain: flush every open group.
+                        for g in groups.drain(..) {
+                            if !flush(g.items) {
+                                return;
+                            }
+                        }
+                        return;
+                    }
                 }
             }
-        }
-        metrics.record_batch(items.len());
-        if batch_tx.send(Batch { items }).is_err() {
-            return;
+        };
+        match next {
+            Some(mut p) => {
+                p.req.mode = plan_mode(&p.req, dim);
+                let key = match p.req.mode {
+                    QueryMode::Exact => GroupKey::Exact,
+                    _ => GroupKey::BoundedMe {
+                        k: p.req.k,
+                        eps_bits: p.req.epsilon.to_bits(),
+                        delta_bits: p.req.delta.to_bits(),
+                    },
+                };
+                let deadline = p.submitted + cfg.batch_timeout;
+                match groups.iter_mut().find(|g| g.key == key) {
+                    Some(g) => g.items.push(p),
+                    None => groups.push(Group { key, items: vec![p], deadline }),
+                }
+                let mut i = 0;
+                while i < groups.len() {
+                    if groups[i].items.len() >= cfg.max_batch {
+                        let g = groups.swap_remove(i);
+                        if !flush(g.items) {
+                            return;
+                        }
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            None => {
+                // Deadline flush: close every group whose oldest member
+                // has waited out the batch window.
+                let now = Instant::now();
+                let mut i = 0;
+                while i < groups.len() {
+                    if now >= groups[i].deadline {
+                        let g = groups.swap_remove(i);
+                        if !flush(g.items) {
+                            return;
+                        }
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
         }
     }
 }
 
-/// A query in flight across the shard fan-out: the resolved request,
-/// the merge accumulator, and the reply route. Shared by `Arc` between
-/// the router and every shard's workers.
-struct InFlight {
+/// A query admitted by the reactor, shared read-only across its `S`
+/// shard dispatches (and any hedge re-dispatches).
+struct QueryJob {
+    id: u64,
     vector: Vec<f32>,
     k: usize,
     epsilon: f64,
     delta: f64,
     seed: u64,
-    /// Post-plan mode: `Exact` or `BoundedMe`, never `Auto` (the router
-    /// resolved it before fan-out).
+    /// Resolved mode: `Exact` or `BoundedMe`, never `Auto`.
     mode: QueryMode,
-    queue_wait: Duration,
-    batch_size: usize,
     /// Original submission instant — workers re-check `deadline`
-    /// against it at shard pickup (a query can expire while sitting in
-    /// a backed-up shard channel after passing the router's check).
+    /// against it at shard pickup.
     submitted: Instant,
-    /// Service-level deadline, measured from submission.
     deadline: Option<Duration>,
-    /// Fan-out instant; the merging worker measures service from it.
-    started: Instant,
-    reply: Sender<QueryResponse>,
-    merge: Mutex<Merge>,
 }
 
-/// Cross-shard merge accumulator: partial top-K entries from each shard
-/// fold into one [`TopK`] (stable global-id tie-break, so the result is
-/// independent of which shard finishes first). The worker that drops
-/// `remaining` to zero builds and sends the reply.
-struct Merge {
+/// One shard's slice of a dispatched batch. `dispatch` identifies the
+/// (batch × shard) dispatch for duplicate suppression; a hedge
+/// re-dispatch carries the *same* dispatch id with `hedged = true`.
+struct ShardBatch {
+    dispatch: u64,
+    shard: usize,
+    hedged: bool,
+    /// Cleared by the reactor when the dispatch completes: a copy
+    /// (hedge *or* straggling primary) that is picked up after its
+    /// sibling already won checks this once and skips the whole scan
+    /// instead of computing a partial nobody will fold. Purely an
+    /// optimization — suppression itself happens at the reactor's
+    /// dispatch table, and the first copy always sees `true`.
+    live: Arc<AtomicBool>,
+    items: Vec<Arc<QueryJob>>,
+}
+
+/// One query's outcome within a completed shard batch.
+struct QueryDone {
+    query: u64,
+    partial: ShardPartial,
+    /// The worker observed the query's deadline expired at pickup; the
+    /// partial is empty and the merge will reply `shed`.
+    expired: bool,
+}
+
+/// Completion event: one executed [`ShardBatch`], reported back to the
+/// reactor.
+struct ShardDone {
+    dispatch: u64,
+    worker: usize,
+    hedged: bool,
+    results: Vec<QueryDone>,
+}
+
+/// Per-query merge accumulator, owned by the reactor thread (no lock).
+struct MergeState {
     top: TopK,
+    /// `S = 1` BOUNDEDME under `force_reactor`: the single shard's
+    /// entries pass through in the bandit's own ranking (estimate
+    /// scores), bit-identical to the fast path / the pre-reactor
+    /// unsharded coordinator — re-ranking estimates through `TopK`
+    /// could reorder ties.
+    passthrough: bool,
+    entries_direct: Vec<(f32, usize)>,
     flops: u64,
     remaining: usize,
-    /// Set when any shard saw the item's deadline expired at pickup;
-    /// the finisher then replies `shed = true` (empty results) instead
-    /// of a merged answer.
     shed: bool,
+    queue_wait: Duration,
+    batch_size: usize,
+    started: Instant,
+    reply: Sender<QueryResponse>,
 }
 
-/// One dynamic batch, routed to one shard (every shard receives its own
-/// `ShardBatch` holding the same `Arc`'d items).
-struct ShardBatch {
-    items: Vec<Arc<InFlight>>,
+/// Bookkeeping for one in-flight (batch × shard) dispatch.
+struct Dispatch {
+    shard: usize,
+    /// Kept so a hedge can re-dispatch the identical batch. Populated
+    /// only when hedging is enabled — the default (`hedge_delay:
+    /// None`) path pays no per-dispatch clone for it.
+    items: Vec<Arc<QueryJob>>,
+    /// Set when the primary actually entered the shard channel. The
+    /// reactor-side backlog does not count toward the hedge delay, but
+    /// shard-channel wait deliberately does: to the waiting client a
+    /// backed-up shard channel is indistinguishable from a slow shard,
+    /// and an idle sibling should steal the work either way. A hedge
+    /// fired against a merely-queued batch is cheap — once the primary
+    /// completes, the queued hedge copy fails its `live` check at
+    /// pickup and skips the scan.
+    sent_at: Option<Instant>,
+    hedge_sent: bool,
+    /// Shared with every queued copy of this dispatch; cleared on
+    /// completion so stale copies skip their scan at pickup.
+    live: Arc<AtomicBool>,
 }
 
-/// Router loop: for each dynamic batch, shed expired items, resolve
-/// [`QueryMode::Auto`] through [`QueryPlan`] **once per query**, then
-/// fan the batch out to every shard's channel.
-fn run_router(
-    batch_rx: Receiver<Batch>,
-    shard_txs: Vec<Sender<ShardBatch>>,
+/// The event-driven shard coordinator core. Single-threaded event loop:
+/// poll completions → admit batches (bounded by backlog depth) → flush
+/// backlogs → drive hedges → park on the selector. See module docs.
+struct Reactor {
+    n_shards: usize,
     dim: usize,
-    metrics: &MetricsRegistry,
-) {
-    let n_shards = shard_txs.len();
-    while let Ok(batch) = batch_rx.recv() {
+    hedge_delay: Option<Duration>,
+    /// Per-shard backlog bound; admission pauses while any shard's
+    /// backlog is at the bound, preserving end-to-end backpressure.
+    max_backlog: usize,
+    batch_rx: Receiver<Batch>,
+    done_rx: Receiver<ShardDone>,
+    shard_txs: Vec<Sender<ShardBatch>>,
+    hedge_tx: Sender<ShardBatch>,
+    selector: Selector,
+    merges: HashMap<u64, MergeState>,
+    dispatches: HashMap<u64, Dispatch>,
+    backlog: Vec<VecDeque<ShardBatch>>,
+    next_query: u64,
+    next_dispatch: u64,
+    draining: bool,
+    metrics: Arc<MetricsRegistry>,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        self.selector.watch(&self.batch_rx);
+        self.selector.watch(&self.done_rx);
+        for tx in &self.shard_txs {
+            self.selector.watch_sender(tx); // wake on pop: backlog can flush
+        }
+        self.selector.watch_sender(&self.hedge_tx);
+        loop {
+            // 1. Completions first: they retire merge/dispatch state and
+            //    free backlog headroom.
+            loop {
+                match self.done_rx.try_recv() {
+                    Ok(done) => self.on_done(done),
+                    Err(TryRecvError::Empty) => break,
+                    // All workers gone mid-flight (panic) — in-flight
+                    // queries can never complete; bail rather than hang.
+                    Err(TryRecvError::Disconnected) => return,
+                }
+            }
+            // 2. Admit new batches while the backlog has headroom (a
+            //    full backlog pushes back through the batch channel to
+            //    the batcher and on to submit()).
+            while !self.draining && self.backlog_has_headroom() {
+                match self.batch_rx.try_recv() {
+                    Ok(batch) => self.admit(batch),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => self.draining = true,
+                }
+            }
+            // 3. Dispatch without blocking.
+            self.flush_backlogs();
+            // 4. Straggler hedging.
+            let next_hedge = self.drive_hedges();
+            // 5. Drained?
+            if self.draining && self.merges.is_empty() {
+                return;
+            }
+            // 6. Park until a channel changes state or a hedge is due.
+            match next_hedge {
+                Some(deadline) => {
+                    self.selector.wait_deadline(deadline);
+                }
+                None => self.selector.wait(),
+            }
+        }
+    }
+
+    fn backlog_has_headroom(&self) -> bool {
+        self.backlog.iter().all(|b| b.len() < self.max_backlog)
+    }
+
+    /// Shed check + fan-out: every admitted query becomes one
+    /// [`MergeState`] and `S` dispatch entries (one per shard) queued on
+    /// the per-shard backlogs.
+    fn admit(&mut self, batch: Batch) {
         let picked_up = Instant::now();
         let batch_size = batch.items.len();
-        let mut items: Vec<Arc<InFlight>> = Vec::with_capacity(batch_size);
+        let mut jobs: Vec<Arc<QueryJob>> = Vec::with_capacity(batch_size);
         for pending in batch.items {
             let queue_wait = picked_up - pending.submitted;
             // Load shedding: don't fan out answers nobody is waiting for.
             if let Some(deadline) = pending.req.deadline {
                 if queue_wait > deadline {
-                    metrics.record_shed();
+                    self.metrics.record_shed();
                     let _ = pending.reply.send(QueryResponse {
                         indices: Vec::new(),
                         scores: Vec::new(),
@@ -537,7 +870,7 @@ fn run_router(
                         queue_wait,
                         service: Duration::ZERO,
                         batch_size,
-                        worker: usize::MAX, // shed by the router, no worker involved
+                        worker: usize::MAX, // shed before any worker touched it
                         shed: true,
                         shards: 0,
                     });
@@ -545,208 +878,320 @@ fn run_router(
                 }
             }
             let req = pending.req;
-            let mode = match req.mode {
-                QueryMode::Auto => {
-                    match QueryPlan::pick(req.k, req.epsilon, req.delta, dim).algo {
-                        PlanAlgo::Exact => QueryMode::Exact,
-                        PlanAlgo::BoundedMe => QueryMode::BoundedMe,
-                    }
-                }
-                m => m,
-            };
+            // The batcher resolved Auto; re-resolve defensively so a
+            // future direct producer can't leak Auto into the workers.
+            let mode = plan_mode(&req, self.dim);
             // BOUNDEDME always returns ≥ 1 result (the index clamps k);
             // the merge cap must match or it would drop that result.
             let top_k = match mode {
                 QueryMode::Exact => req.k,
                 _ => req.k.max(1),
             };
-            items.push(Arc::new(InFlight {
+            let id = self.next_query;
+            self.next_query += 1;
+            self.merges.insert(
+                id,
+                MergeState {
+                    top: TopK::new(top_k),
+                    passthrough: self.n_shards == 1 && mode == QueryMode::BoundedMe,
+                    entries_direct: Vec::new(),
+                    flops: 0,
+                    remaining: self.n_shards,
+                    shed: false,
+                    queue_wait,
+                    batch_size,
+                    started: Instant::now(),
+                    reply: pending.reply,
+                },
+            );
+            jobs.push(Arc::new(QueryJob {
+                id,
                 vector: req.vector,
                 k: req.k,
                 epsilon: req.epsilon,
                 delta: req.delta,
                 seed: req.seed,
                 mode,
-                queue_wait,
-                batch_size,
                 submitted: pending.submitted,
                 deadline: req.deadline,
-                started: Instant::now(),
-                reply: pending.reply,
-                merge: Mutex::new(Merge {
-                    top: TopK::new(top_k),
-                    flops: 0,
-                    remaining: n_shards,
-                    shed: false,
-                }),
             }));
         }
-        if items.is_empty() {
-            continue;
+        if jobs.is_empty() {
+            return;
         }
-        for tx in &shard_txs {
-            if tx.send(ShardBatch { items: items.clone() }).is_err() {
-                return;
+        for shard in 0..self.n_shards {
+            let dispatch = self.next_dispatch;
+            self.next_dispatch += 1;
+            let live = Arc::new(AtomicBool::new(true));
+            // `items` feeds hedge re-dispatch only; skip the clone when
+            // hedging is off (`Vec::new()` does not allocate).
+            let hedge_items =
+                if self.hedge_delay.is_some() { jobs.clone() } else { Vec::new() };
+            self.dispatches.insert(
+                dispatch,
+                Dispatch {
+                    shard,
+                    items: hedge_items,
+                    sent_at: None,
+                    hedge_sent: false,
+                    live: live.clone(),
+                },
+            );
+            self.backlog[shard].push_back(ShardBatch {
+                dispatch,
+                shard,
+                hedged: false,
+                live,
+                items: jobs.clone(),
+            });
+        }
+    }
+
+    /// Non-blocking dispatch: drain each shard's backlog into its
+    /// channel until the channel is full.
+    fn flush_backlogs(&mut self) {
+        for s in 0..self.n_shards {
+            while let Some(sb) = self.backlog[s].pop_front() {
+                let dispatch = sb.dispatch;
+                match self.shard_txs[s].try_send(sb) {
+                    Ok(()) => {
+                        if let Some(d) = self.dispatches.get_mut(&dispatch) {
+                            if d.sent_at.is_none() {
+                                d.sent_at = Some(Instant::now());
+                            }
+                        }
+                    }
+                    Err(SendError::Full(sb)) => {
+                        self.backlog[s].push_front(sb);
+                        break;
+                    }
+                    // Worker pool died (panic); nothing to do with the
+                    // batch. `run` exits via the done_rx disconnect.
+                    Err(SendError::Disconnected(_)) => break,
+                }
             }
         }
     }
-}
 
-/// Fold one shard's partial into an item's merge; the worker whose
-/// partial completes the fan-out builds and sends the reply. `expired`
-/// marks this shard's contribution as a deadline-expiry observation
-/// (flags the whole merge as shed).
-fn complete(
-    item: &Arc<InFlight>,
-    partial: ShardPartial,
-    n_shards: usize,
-    worker_id: usize,
-    metrics: &MetricsRegistry,
-    expired: bool,
-) {
-    let finished = {
-        let mut m = item.merge.lock().unwrap();
-        m.shed |= expired;
-        m.flops += partial.flops;
-        for (score, id) in partial.entries {
-            m.top.push(score, id);
+    /// Fire hedges for overdue dispatches; return the next instant a
+    /// hedge decision is due (the reactor's park deadline). The scan is
+    /// linear in outstanding dispatches, which admission control bounds
+    /// at roughly `(backlog cap + channel cap + in-compute) × S` — a
+    /// small constant independent of throughput, so no heap of due
+    /// times is warranted.
+    fn drive_hedges(&mut self) -> Option<Instant> {
+        let delay = self.hedge_delay?;
+        let now = Instant::now();
+        let mut next: Option<Instant> = None;
+        let refresh = |next: &mut Option<Instant>, t: Instant| {
+            *next = Some(next.map_or(t, |n| n.min(t)));
+        };
+        for (&id, disp) in self.dispatches.iter_mut() {
+            if disp.hedge_sent {
+                continue;
+            }
+            let Some(sent) = disp.sent_at else { continue };
+            let due = sent + delay;
+            if due <= now {
+                let sb = ShardBatch {
+                    dispatch: id,
+                    shard: disp.shard,
+                    hedged: true,
+                    live: disp.live.clone(),
+                    items: disp.items.clone(),
+                };
+                if self.hedge_tx.try_send(sb).is_ok() {
+                    disp.hedge_sent = true;
+                    self.metrics.record_hedge_fired();
+                } else {
+                    // Hedge queue full: the pool is saturated and a
+                    // duplicate would only add load. Back off one delay
+                    // (floored so a zero delay cannot busy-spin here).
+                    refresh(&mut next, now + delay.max(Duration::from_micros(100)));
+                }
+            } else {
+                refresh(&mut next, due);
+            }
         }
-        m.remaining -= 1;
-        if m.remaining == 0 {
-            let top = std::mem::replace(&mut m.top, TopK::new(0));
-            Some((top.into_sorted(), m.flops, m.shed))
-        } else {
-            None
+        next
+    }
+
+    /// Fold one completion event. Duplicate suppression happens here:
+    /// the first event for a dispatch retires its entry; the losing
+    /// copy of a hedged dispatch finds no entry and is dropped whole,
+    /// so no shard ever contributes twice to a merge.
+    fn on_done(&mut self, done: ShardDone) {
+        match self.dispatches.remove(&done.dispatch) {
+            // Retire the dispatch: any still-queued sibling copy sees
+            // the cleared flag at pickup and skips its scan.
+            Some(d) => d.live.store(false, Ordering::Relaxed),
+            None => return, // losing copy of a hedged dispatch
         }
-    };
-    if let Some((ranked, flops, was_shed)) = finished {
-        let service = item.started.elapsed();
-        if was_shed {
+        if done.hedged {
+            self.metrics.record_hedge_won();
+        }
+        for QueryDone { query, partial, expired } in done.results {
+            let Some(m) = self.merges.get_mut(&query) else { continue };
+            m.shed |= expired;
+            m.flops += partial.flops;
+            if m.passthrough {
+                m.entries_direct = partial.entries;
+            } else {
+                for (score, id) in partial.entries {
+                    m.top.push(score, id);
+                }
+            }
+            m.remaining -= 1;
+            if m.remaining == 0 {
+                let m = self.merges.remove(&query).expect("merge state present");
+                self.send_reply(m, done.worker);
+            }
+        }
+    }
+
+    fn send_reply(&self, m: MergeState, worker: usize) {
+        let service = m.started.elapsed();
+        if m.shed {
             // Some shard saw the deadline expired at pickup: the client
             // has timed out, reply shed (no results; `flops` reports
             // whatever work other shards had already sunk).
-            metrics.record_shed();
-            let _ = item.reply.send(QueryResponse {
+            self.metrics.record_shed();
+            let _ = m.reply.send(QueryResponse {
                 indices: Vec::new(),
                 scores: Vec::new(),
-                flops,
-                queue_wait: item.queue_wait,
+                flops: m.flops,
+                queue_wait: m.queue_wait,
                 service,
-                batch_size: item.batch_size,
-                worker: worker_id,
+                batch_size: m.batch_size,
+                worker,
                 shed: true,
                 shards: 0,
             });
             return;
         }
-        metrics.record_query(item.queue_wait, service, flops);
-        let _ = item.reply.send(QueryResponse {
+        self.metrics.record_query(m.queue_wait, service, m.flops);
+        let ranked =
+            if m.passthrough { m.entries_direct } else { m.top.into_sorted() };
+        let _ = m.reply.send(QueryResponse {
             indices: ranked.iter().map(|&(_, i)| i).collect(),
             scores: ranked.iter().map(|&(s, _)| s).collect(),
-            flops,
-            queue_wait: item.queue_wait,
+            flops: m.flops,
+            queue_wait: m.queue_wait,
             service,
-            batch_size: item.batch_size,
-            worker: worker_id,
+            batch_size: m.batch_size,
+            worker,
             shed: false,
-            shards: n_shards,
+            shards: self.n_shards,
         });
     }
 }
 
-/// A shard worker noticed the item's deadline expired while it waited
-/// in the shard channel: contribute an empty partial flagged as shed
-/// (keeping the `remaining` countdown correct so exactly one worker
-/// replies).
-fn complete_shed(
-    item: &Arc<InFlight>,
-    n_shards: usize,
-    worker_id: usize,
-    metrics: &MetricsRegistry,
-) {
-    let empty = ShardPartial { entries: Vec::new(), flops: 0, scanned: 0 };
-    complete(item, empty, n_shards, worker_id, metrics, true);
-}
-
-/// Send a fully-formed single-shard result directly (the `S = 1`
-/// BOUNDEDME path, bit-identical to the pre-sharding coordinator: the
-/// bandit's own ranking and estimate scores pass through untouched).
-fn respond_direct(
-    item: &Arc<InFlight>,
-    result: MipsResult,
-    worker_id: usize,
-    metrics: &MetricsRegistry,
-) {
-    let service = item.started.elapsed();
-    metrics.record_query(item.queue_wait, service, result.flops);
-    let _ = item.reply.send(QueryResponse {
-        indices: result.indices,
-        scores: result.scores,
-        flops: result.flops,
-        queue_wait: item.queue_wait,
-        service,
-        batch_size: item.batch_size,
-        worker: worker_id,
-        shed: false,
-        shards: 1,
-    });
-}
-
-/// Shard-pinned worker loop: one long-lived [`QueryContext`], batches
-/// executed through the fused execution core against this shard only.
-fn run_shard_worker(
+/// Reactor-path worker loop: poll the pinned shard's primary channel,
+/// then the shared hedge channel (primary work first — hedges are
+/// other shards' stragglers), park on the selector when both are
+/// empty. Exits when the primary channel disconnects (reactor done).
+#[allow(clippy::too_many_arguments)]
+fn run_reactor_worker(
     worker_id: usize,
     n_shards: usize,
-    rx: Receiver<ShardBatch>,
-    index: &BoundedMeIndex,
-    shard: &Shard,
+    pinned: usize,
+    primary: Receiver<ShardBatch>,
+    hedge_rx: Receiver<ShardBatch>,
+    done_tx: Sender<ShardDone>,
+    indexes: &[Arc<BoundedMeIndex>],
+    sharded: &ShardedMatrix,
     engine: &dyn ScoringEngine,
-    metrics: &MetricsRegistry,
+    slow: Option<(usize, Duration)>,
 ) {
     let mut ctx = QueryContext::new();
-    while let Ok(batch) = rx.recv() {
-        serve_shard_batch(worker_id, n_shards, batch, index, shard, engine, &mut ctx, metrics);
+    let selector = Selector::new();
+    selector.watch(&primary);
+    selector.watch(&hedge_rx);
+    loop {
+        let sb = match primary.try_recv() {
+            Ok(sb) => Some(sb),
+            Err(TryRecvError::Disconnected) => return,
+            Err(TryRecvError::Empty) => match hedge_rx.try_recv() {
+                Ok(sb) => Some(sb),
+                Err(_) => None,
+            },
+        };
+        match sb {
+            Some(sb) => {
+                // A copy whose dispatch already completed (its sibling
+                // won) is dead weight: skip the scan, send nothing —
+                // the reactor retired the dispatch and expects no
+                // further event for it.
+                if !sb.live.load(Ordering::Relaxed) {
+                    continue;
+                }
+                let done = serve_reactor_batch(
+                    sb, n_shards, worker_id, pinned, indexes, sharded, engine, &mut ctx, slow,
+                );
+                if done_tx.send(done).is_err() {
+                    return; // reactor gone (shutdown): stop serving
+                }
+            }
+            None => selector.wait(),
+        }
     }
 }
 
-/// Execute one shard's slice of a dynamic batch:
+/// Execute one shard's slice of a dispatched batch and report it as a
+/// completion event:
 ///
-/// 1. exact items: **one** [`ScoringEngine::score_dataset_batch`] call
-///    over the shard for the whole group (fused scan / device-resident),
-///    then per-query top-K partials from the shared score slab under
-///    dataset-global ids;
-/// 2. BOUNDEDME items: with `S = 1`, the legacy fused paths
-///    ([`MipsIndex::query_batch`] when knobs are uniform, else
-///    [`MipsIndex::query_with`]) replying directly; with `S ≥ 2`, the
-///    sample-then-confirm entry point
-///    [`BoundedMeIndex::query_batch_shard`] at the per-shard
-///    `(ε, δ/S)` split — either way the context's cached pull order
-///    means the batch shares one coordinate permutation (keyed by the
-///    first item's seed).
+/// 1. deadline re-check at pickup (expired items produce empty,
+///    `expired`-flagged outcomes — the merge replies shed);
+/// 2. exact items: **one** [`ScoringEngine::score_dataset_batch`] call
+///    over the shard for the whole group, then per-query top-K partials
+///    under dataset-global ids;
+/// 3. BOUNDEDME items: with real sharding, the sample-then-confirm
+///    entry point [`BoundedMeIndex::query_batch_shard`] at the
+///    `(ε, δ/S)` split; with `S = 1` (forced reactor), the legacy fused
+///    paths whose ranked results pass through the merge untouched.
+///
+/// Hedged copies compute the identical partials (same shard data, same
+/// knobs, same seed) — whichever copy wins, the merge sees the same
+/// bytes.
 #[allow(clippy::too_many_arguments)]
-fn serve_shard_batch(
-    worker_id: usize,
+fn serve_reactor_batch(
+    sb: ShardBatch,
     n_shards: usize,
-    batch: ShardBatch,
-    index: &BoundedMeIndex,
-    shard: &Shard,
+    worker_id: usize,
+    pinned: usize,
+    indexes: &[Arc<BoundedMeIndex>],
+    sharded: &ShardedMatrix,
     engine: &dyn ScoringEngine,
     ctx: &mut QueryContext,
-    metrics: &MetricsRegistry,
-) {
+    slow: Option<(usize, Duration)>,
+) -> ShardDone {
+    if let Some((slow_shard, delay)) = slow {
+        // Deterministic straggler injection: primaries on the slow
+        // shard crawl, hedge copies run full speed.
+        if !sb.hedged && sb.shard == slow_shard {
+            std::thread::sleep(delay);
+        }
+    }
+    let shard = sharded.shard(sb.shard);
+    let index = indexes[sb.shard].as_ref();
     let data = index.data();
     let (rows, dim) = (data.rows(), data.cols());
+    let mut results: Vec<QueryDone> = Vec::with_capacity(sb.items.len());
 
-    let mut exact: Vec<&Arc<InFlight>> = Vec::new();
-    let mut bme: Vec<&Arc<InFlight>> = Vec::new();
-    for item in &batch.items {
-        // Re-check the deadline at shard pickup: the router's check can
-        // be long past by the time a backed-up shard channel drains,
-        // and computing an answer the client timed out on wastes a full
+    let mut exact: Vec<&Arc<QueryJob>> = Vec::new();
+    let mut bme: Vec<&Arc<QueryJob>> = Vec::new();
+    for item in &sb.items {
+        // Re-check the deadline at shard pickup: the reactor's check can
+        // be long past by the time a backed-up shard channel drains, and
+        // computing an answer the client timed out on wastes a full
         // shard scan (× S shards).
         if let Some(deadline) = item.deadline {
             if item.submitted.elapsed() > deadline {
-                complete_shed(item, n_shards, worker_id, metrics);
+                results.push(QueryDone {
+                    query: item.id,
+                    partial: ShardPartial { entries: Vec::new(), flops: 0, scanned: 0 },
+                    expired: true,
+                });
                 continue;
             }
         }
@@ -759,7 +1204,15 @@ fn serve_shard_batch(
     // --- Exact group: one engine call for the whole group. ---
     if !exact.is_empty() {
         let queries: Vec<&[f32]> = exact.iter().map(|it| it.vector.as_slice()).collect();
-        let fused_ok = engine.score_dataset_batch(data, &queries, &mut ctx.rank.scores).is_ok();
+        // The worker's engine may hold a *different* shard
+        // device-resident (PJRT preload); cross-shard (hedged) batches
+        // score through the native blocked kernels instead —
+        // bit-identical to the engine path under the Native backend.
+        let fused_ok = if sb.shard == pinned {
+            engine.score_dataset_batch(data, &queries, &mut ctx.rank.scores).is_ok()
+        } else {
+            NativeEngine.score_dataset_batch(data, &queries, &mut ctx.rank.scores).is_ok()
+        };
         for (gi, item) in exact.iter().enumerate() {
             let mut top = TopK::new(item.k);
             if fused_ok {
@@ -774,25 +1227,72 @@ fn serve_shard_batch(
                     top.push(s, shard.global_id(i));
                 }
             }
-            let partial = ShardPartial {
-                entries: top.into_sorted(),
-                flops: (rows * dim) as u64,
-                scanned: rows,
-            };
-            complete(item, partial, n_shards, worker_id, metrics, false);
+            results.push(QueryDone {
+                query: item.id,
+                partial: ShardPartial {
+                    entries: top.into_sorted(),
+                    flops: (rows * dim) as u64,
+                    scanned: rows,
+                },
+                expired: false,
+            });
         }
     }
 
-    // --- BOUNDEDME group: shared permutation, fused when uniform. ---
-    if bme.is_empty() {
-        return;
-    }
-    let knobs = |it: &Arc<InFlight>| (it.k, it.epsilon.to_bits(), it.delta.to_bits());
-    let uniform = bme.windows(2).all(|w| knobs(w[0]) == knobs(w[1]));
-    if n_shards == 1 {
-        // Unsharded: legacy semantics (estimate scores, no confirm).
-        if uniform && bme.len() > 1 {
-            // The first item's seed keys the batch's shared pull order.
+    // --- BOUNDEDME group: shared permutation; the batcher's knob
+    // grouping makes whole groups uniform, so the fused path is the
+    // common case. ---
+    if !bme.is_empty() {
+        let knobs = |it: &Arc<QueryJob>| (it.k, it.epsilon.to_bits(), it.delta.to_bits());
+        let uniform = bme.windows(2).all(|w| knobs(w[0]) == knobs(w[1]));
+        if n_shards == 1 {
+            // Forced reactor over a single shard: legacy unsharded
+            // semantics (estimate scores, no confirm). The merge passes
+            // these entries through in the bandit's ranking
+            // (`passthrough`), bit-identical to the fast path.
+            let mut push_direct = |id: u64, res: MipsResult| {
+                let entries: Vec<(f32, usize)> = res
+                    .scores
+                    .iter()
+                    .copied()
+                    .zip(res.indices.iter().copied())
+                    .collect();
+                results.push(QueryDone {
+                    query: id,
+                    partial: ShardPartial {
+                        entries,
+                        flops: res.flops,
+                        scanned: res.candidates,
+                    },
+                    expired: false,
+                });
+            };
+            if uniform && bme.len() > 1 {
+                // The first item's seed keys the batch's shared pull order.
+                let first = bme[0];
+                let params = MipsParams {
+                    k: first.k,
+                    epsilon: first.epsilon,
+                    delta: first.delta,
+                    seed: first.seed,
+                };
+                let queries: Vec<&[f32]> = bme.iter().map(|it| it.vector.as_slice()).collect();
+                for (item, res) in bme.iter().zip(index.query_batch(&queries, &params, ctx)) {
+                    push_direct(item.id, res);
+                }
+            } else {
+                for item in &bme {
+                    let params = MipsParams {
+                        k: item.k,
+                        epsilon: item.epsilon,
+                        delta: item.delta,
+                        seed: item.seed,
+                    };
+                    let res = index.query_with(&item.vector, &params, ctx);
+                    push_direct(item.id, res);
+                }
+            }
+        } else if uniform && bme.len() > 1 {
             let first = bme[0];
             let params = MipsParams {
                 k: first.k,
@@ -800,10 +1300,12 @@ fn serve_shard_batch(
                 delta: first.delta,
                 seed: first.seed,
             };
+            let split = shard_params(&params, n_shards, shard.rows());
             let queries: Vec<&[f32]> = bme.iter().map(|it| it.vector.as_slice()).collect();
-            let results = index.query_batch(&queries, &params, ctx);
-            for (item, result) in bme.iter().zip(results) {
-                respond_direct(item, result, worker_id, metrics);
+            for (item, partial) in
+                bme.iter().zip(index.query_batch_shard(&queries, &split, ctx, shard))
+            {
+                results.push(QueryDone { query: item.id, partial, expired: false });
             }
         } else {
             for item in &bme {
@@ -813,42 +1315,151 @@ fn serve_shard_batch(
                     delta: item.delta,
                     seed: item.seed,
                 };
-                let result = index.query_with(&item.vector, &params, ctx);
-                respond_direct(item, result, worker_id, metrics);
+                let split = shard_params(&params, n_shards, shard.rows());
+                let partial = index
+                    .query_batch_shard(&[item.vector.as_slice()], &split, ctx, shard)
+                    .pop()
+                    .expect("one partial per query");
+                results.push(QueryDone { query: item.id, partial, expired: false });
             }
         }
+    }
+
+    ShardDone { dispatch: sb.dispatch, worker: worker_id, hedged: sb.hedged, results }
+}
+
+/// S = 1 fast-path worker loop: batches arrive straight from the
+/// batcher, answers go straight to the client. One long-lived
+/// [`QueryContext`]; no reactor state anywhere on this path.
+fn run_direct_worker(
+    worker_id: usize,
+    rx: Receiver<Batch>,
+    index: &BoundedMeIndex,
+    shard: &Shard,
+    engine: &dyn ScoringEngine,
+    metrics: &MetricsRegistry,
+) {
+    let mut ctx = QueryContext::new();
+    while let Ok(batch) = rx.recv() {
+        serve_direct_batch(worker_id, batch, index, shard, engine, &mut ctx, metrics);
+    }
+}
+
+/// Execute one fast-path batch and reply per query. Identical compute
+/// to the reactor path at `S = 1` — same fused engine call for exact
+/// groups, same fused/per-query BOUNDEDME paths — so answers are
+/// bit-identical to the merge path; the saving is pure overhead (no
+/// `Arc`-wrapped merge state, no completion event, no reactor hop).
+fn serve_direct_batch(
+    worker_id: usize,
+    batch: Batch,
+    index: &BoundedMeIndex,
+    shard: &Shard,
+    engine: &dyn ScoringEngine,
+    ctx: &mut QueryContext,
+    metrics: &MetricsRegistry,
+) {
+    let picked_up = Instant::now();
+    let data = index.data();
+    let (rows, dim) = (data.rows(), data.cols());
+    let batch_size = batch.items.len();
+
+    let mut exact: Vec<&Pending> = Vec::new();
+    let mut bme: Vec<&Pending> = Vec::new();
+    for pending in &batch.items {
+        let queue_wait = picked_up - pending.submitted;
+        if let Some(deadline) = pending.req.deadline {
+            if queue_wait > deadline {
+                metrics.record_shed();
+                let _ = pending.reply.send(QueryResponse {
+                    indices: Vec::new(),
+                    scores: Vec::new(),
+                    flops: 0,
+                    queue_wait,
+                    service: Duration::ZERO,
+                    batch_size,
+                    worker: usize::MAX, // shed: no worker computed anything
+                    shed: true,
+                    shards: 0,
+                });
+                continue;
+            }
+        }
+        match pending.req.mode {
+            QueryMode::Exact => exact.push(pending),
+            _ => bme.push(pending),
+        }
+    }
+
+    let respond = |pending: &Pending, indices: Vec<usize>, scores: Vec<f32>, flops: u64| {
+        let queue_wait = picked_up - pending.submitted;
+        let service = picked_up.elapsed();
+        metrics.record_query(queue_wait, service, flops);
+        metrics.record_fast_path();
+        let _ = pending.reply.send(QueryResponse {
+            indices,
+            scores,
+            flops,
+            queue_wait,
+            service,
+            batch_size,
+            worker: worker_id,
+            shed: false,
+            shards: 1,
+        });
+    };
+
+    // --- Exact group: one engine call for the whole group. ---
+    if !exact.is_empty() {
+        let queries: Vec<&[f32]> = exact.iter().map(|p| p.req.vector.as_slice()).collect();
+        let fused_ok = engine.score_dataset_batch(data, &queries, &mut ctx.rank.scores).is_ok();
+        for (gi, pending) in exact.iter().enumerate() {
+            let mut top = TopK::new(pending.req.k);
+            if fused_ok {
+                let slab = &ctx.rank.scores[gi * rows..(gi + 1) * rows];
+                for (i, &s) in slab.iter().enumerate() {
+                    top.push(s, shard.global_id(i));
+                }
+            } else {
+                let scores = data.matvec(&pending.req.vector);
+                for (i, &s) in scores.iter().enumerate() {
+                    top.push(s, shard.global_id(i));
+                }
+            }
+            let ranked = top.into_sorted();
+            respond(
+                pending,
+                ranked.iter().map(|&(_, i)| i).collect(),
+                ranked.iter().map(|&(s, _)| s).collect(),
+                (rows * dim) as u64,
+            );
+        }
+    }
+
+    // --- BOUNDEDME group (estimate scores, legacy unsharded semantics). ---
+    if bme.is_empty() {
         return;
     }
-    // Sharded: per-shard (ε, δ/S) sample + exact confirm, merged by the
-    // last shard to finish.
+    let knobs = |p: &Pending| (p.req.k, p.req.epsilon.to_bits(), p.req.delta.to_bits());
+    let uniform = bme.windows(2).all(|w| knobs(w[0]) == knobs(w[1]));
     if uniform && bme.len() > 1 {
-        let first = bme[0];
-        let params = MipsParams {
-            k: first.k,
-            epsilon: first.epsilon,
-            delta: first.delta,
-            seed: first.seed,
-        };
-        let split = shard_params(&params, n_shards, shard.rows());
-        let queries: Vec<&[f32]> = bme.iter().map(|it| it.vector.as_slice()).collect();
-        let partials = index.query_batch_shard(&queries, &split, ctx, shard);
-        for (item, partial) in bme.iter().zip(partials) {
-            complete(item, partial, n_shards, worker_id, metrics, false);
+        let first = &bme[0].req;
+        let params =
+            MipsParams { k: first.k, epsilon: first.epsilon, delta: first.delta, seed: first.seed };
+        let queries: Vec<&[f32]> = bme.iter().map(|p| p.req.vector.as_slice()).collect();
+        for (pending, res) in bme.iter().zip(index.query_batch(&queries, &params, ctx)) {
+            respond(pending, res.indices, res.scores, res.flops);
         }
     } else {
-        for item in &bme {
+        for pending in &bme {
             let params = MipsParams {
-                k: item.k,
-                epsilon: item.epsilon,
-                delta: item.delta,
-                seed: item.seed,
+                k: pending.req.k,
+                epsilon: pending.req.epsilon,
+                delta: pending.req.delta,
+                seed: pending.req.seed,
             };
-            let split = shard_params(&params, n_shards, shard.rows());
-            let partial = index
-                .query_batch_shard(&[item.vector.as_slice()], &split, ctx, shard)
-                .pop()
-                .expect("one partial per query");
-            complete(item, partial, n_shards, worker_id, metrics, false);
+            let res = index.query_with(&pending.req.vector, &params, ctx);
+            respond(pending, res.indices, res.scores, res.flops);
         }
     }
 }
@@ -868,6 +1479,7 @@ mod tests {
             backend: Backend::Native,
             pull_order: PullOrder::BlockShuffled(16),
             shard: ShardSpec::single(),
+            ..Default::default()
         };
         let data = ds.vectors.clone();
         (Coordinator::new(ds.vectors, cfg).unwrap(), data)
@@ -926,6 +1538,8 @@ mod tests {
         let snap = c.metrics();
         assert_eq!(snap.queries, 64);
         assert!(snap.mean_batch_size >= 1.0);
+        // S = 1: every answer went worker → client directly.
+        assert_eq!(snap.fast_path, 64);
         c.shutdown();
     }
 
@@ -957,6 +1571,7 @@ mod tests {
             backend: Backend::Native,
             pull_order: PullOrder::Sequential,
             shard: ShardSpec::single(),
+            ..Default::default()
         };
         let data = ds.vectors.clone();
         let c = Coordinator::new(ds.vectors, cfg).unwrap();
@@ -993,6 +1608,7 @@ mod tests {
             backend: Backend::Native,
             pull_order: PullOrder::BlockShuffled(16),
             shard: ShardSpec::single(),
+            ..Default::default()
         };
         let data = ds.vectors.clone();
         let c = Coordinator::new(ds.vectors, cfg).unwrap();
@@ -1027,6 +1643,7 @@ mod tests {
             backend: Backend::Native,
             pull_order: PullOrder::Sequential,
             shard: ShardSpec::single(),
+            ..Default::default()
         };
         let c = Coordinator::new(ds.vectors, cfg).unwrap();
         let mut saw_full = false;
@@ -1059,6 +1676,7 @@ mod tests {
             backend: Backend::Native,
             pull_order: PullOrder::BlockShuffled(16),
             shard: ShardSpec::contiguous(3),
+            ..Default::default()
         };
         let data = ds.vectors.clone();
         let q = ds.sample_query(2);
@@ -1087,6 +1705,7 @@ mod tests {
             backend: Backend::Native,
             pull_order: PullOrder::Sequential,
             shard: ShardSpec::single(),
+            ..Default::default()
         };
         let c = Coordinator::new(ds.vectors, cfg).unwrap();
         let mut handles = Vec::new();
@@ -1098,6 +1717,58 @@ mod tests {
             max_batch_seen = max_batch_seen.max(h.recv().unwrap().batch_size);
         }
         assert!(max_batch_seen > 1, "no batching under burst load");
+        c.shutdown();
+    }
+
+    #[test]
+    fn plan_aware_batcher_groups_by_knobs() {
+        // Interleave two BOUNDEDME knob classes and an exact class under
+        // one burst: groups must never mix — each response's batch only
+        // contains its own class, so batch_size never exceeds the class
+        // population even though max_batch would allow it.
+        let ds = gaussian_dataset(120, 64, 91);
+        let data = ds.vectors.clone();
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            max_batch: 32,
+            batch_timeout: Duration::from_millis(30),
+            queue_capacity: 512,
+            backend: Backend::Native,
+            pull_order: PullOrder::BlockShuffled(16),
+            shard: ShardSpec::single(),
+            ..Default::default()
+        };
+        let c = Coordinator::new(ds.vectors, cfg).unwrap();
+        let mut handles = Vec::new();
+        for i in 0..24u64 {
+            let q = ds.sample_query(i);
+            let req = match i % 3 {
+                0 => QueryRequest::exact(q, 3),
+                1 => QueryRequest::bounded_me(q, 3, 1e-9, 0.05),
+                _ => QueryRequest::bounded_me(q, 3, 0.3, 0.2),
+            };
+            handles.push((i, c.submit(req).unwrap()));
+        }
+        for (i, h) in handles {
+            let resp = h.recv().unwrap();
+            assert!(
+                resp.batch_size <= 8,
+                "req {i}: batch_size {} crosses plan/knob groups",
+                resp.batch_size
+            );
+            if i % 3 != 2 {
+                // Exact and ε→0 classes: exact answers.
+                let q = ds.sample_query(i);
+                let mut got = resp.indices.clone();
+                got.sort_unstable();
+                let mut want = crate::algos::ground_truth(&data, &q, 3);
+                want.sort_unstable();
+                assert_eq!(got, want, "req {i}");
+            } else {
+                assert_eq!(resp.indices.len(), 3, "req {i}");
+            }
+        }
+        assert_eq!(c.metrics().queries, 24);
         c.shutdown();
     }
 }
@@ -1120,6 +1791,7 @@ mod deadline_tests {
             backend: Backend::Native,
             pull_order: PullOrder::Sequential,
             shard: ShardSpec::single(),
+            ..Default::default()
         };
         let c = Coordinator::new(ds.vectors.clone(), cfg).unwrap();
         let mut rxs = Vec::new();

@@ -158,6 +158,9 @@ pub fn handle_line(line: &str, coord: &Coordinator) -> Json {
                 ("service_p99_ms", Json::Num(m.service.2 * 1e3)),
                 ("queue_p99_ms", Json::Num(m.queue_wait.2 * 1e3)),
                 ("shed", Json::Num(m.shed as f64)),
+                ("hedge_fired", Json::Num(m.hedge_fired as f64)),
+                ("hedge_won", Json::Num(m.hedge_won as f64)),
+                ("fast_path", Json::Num(m.fast_path as f64)),
             ])
         }
         Some("query") => {

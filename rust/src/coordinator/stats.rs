@@ -1,24 +1,106 @@
-//! Coordinator metrics registry: latency histograms, batch sizes, flop
-//! counters. Lock-based (parking_lot) — updates are off the per-pull hot
-//! loop, once per query.
+//! Coordinator metrics registry — **lock-free**. Every recording path
+//! (worker fast-path replies, reactor merges, batcher) touches only
+//! `AtomicU64`s with `Relaxed` ordering, so metrics never serialize the
+//! serving threads the way the previous `Mutex<Inner>` did: with the
+//! S = 1 fast path replying from inside the worker loop, a metrics lock
+//! would be the last shared point of contention on the per-request
+//! path.
+//!
+//! # Relaxed-snapshot semantics
+//!
+//! [`MetricsRegistry::snapshot`] reads each counter independently with
+//! `Relaxed` loads. There is no cross-counter atomicity: a snapshot
+//! taken while a query is being recorded may see its service-time
+//! bucket but not yet its flops (or vice versa), and histogram totals
+//! may momentarily disagree with bucket sums by the number of
+//! concurrently recording threads. Every counter is monotone, so the
+//! skew is bounded by in-flight updates and vanishes at quiesce —
+//! "consistent enough" for dashboards, load tests, and the assertions
+//! the test batteries make after draining. Nothing in this module is a
+//! synchronization point.
 
-use crate::linalg::stats::{LogHistogram, OnlineMoments};
-use std::sync::Mutex;
+use crate::linalg::stats::LogHistogram;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::time::Duration;
 
-/// Shared metrics sink for the coordinator threads.
-pub struct MetricsRegistry {
-    inner: Mutex<Inner>,
+/// Lock-free log-bucketed latency histogram: the atomic counterpart of
+/// [`LogHistogram`], sharing its bucket layout (via
+/// [`LogHistogram::bucket_index`] / [`LogHistogram::bucket_midpoint`])
+/// so quantiles from either representation are comparable.
+struct AtomicDurHistogram {
+    counts: Box<[AtomicU64]>,
+    total: AtomicU64,
+    sum_nanos: AtomicU64,
 }
 
-struct Inner {
-    queue_wait: LogHistogram,
-    service: LogHistogram,
-    batch_sizes: OnlineMoments,
-    queries: u64,
-    batches: u64,
-    flops: u64,
-    shed: u64,
+impl AtomicDurHistogram {
+    fn new() -> Self {
+        let counts: Vec<AtomicU64> =
+            (0..LogHistogram::bucket_count()).map(|_| AtomicU64::new(0)).collect();
+        Self {
+            counts: counts.into_boxed_slice(),
+            total: AtomicU64::new(0),
+            sum_nanos: AtomicU64::new(0),
+        }
+    }
+
+    fn record(&self, d: Duration) {
+        let b = LogHistogram::bucket_index(d.as_secs_f64());
+        self.counts[b].fetch_add(1, Relaxed);
+        self.sum_nanos.fetch_add(d.as_nanos() as u64, Relaxed);
+        self.total.fetch_add(1, Relaxed);
+    }
+
+    fn mean(&self) -> f64 {
+        let n = self.total.load(Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_nanos.load(Relaxed) as f64 * 1e-9 / n as f64
+        }
+    }
+
+    /// Approximate quantile in seconds. Under concurrent recording the
+    /// bucket scan may see slightly more observations than `total` did
+    /// (relaxed loads) — the returned bucket can shift by the number of
+    /// in-flight updates, which is within the sketch's error anyway.
+    fn quantile(&self, q: f64) -> f64 {
+        let total = self.total.load(Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        let mut last_nonempty = 0usize;
+        for (b, c) in self.counts.iter().enumerate() {
+            let c = c.load(Relaxed);
+            if c > 0 {
+                last_nonempty = b;
+            }
+            seen += c;
+            if seen >= target {
+                return LogHistogram::bucket_midpoint(b);
+            }
+        }
+        // A racing snapshot can make the scan fall short of `target`;
+        // the highest populated bucket is the honest upper estimate.
+        LogHistogram::bucket_midpoint(last_nonempty)
+    }
+}
+
+/// Shared metrics sink for the coordinator threads. All-atomic; see the
+/// module docs for the relaxed snapshot contract.
+pub struct MetricsRegistry {
+    queries: AtomicU64,
+    batches: AtomicU64,
+    batch_items: AtomicU64,
+    flops: AtomicU64,
+    shed: AtomicU64,
+    hedge_fired: AtomicU64,
+    hedge_won: AtomicU64,
+    fast_path: AtomicU64,
+    queue_wait: AtomicDurHistogram,
+    service: AtomicDurHistogram,
 }
 
 /// A point-in-time copy of the registry.
@@ -40,6 +122,15 @@ pub struct MetricsSnapshot {
     pub mean_service: f64,
     /// Requests shed for missing their deadline in queue.
     pub shed: u64,
+    /// Straggler hedges dispatched (a shard batch re-sent to the hedge
+    /// queue after [`super::CoordinatorConfig::hedge_delay`]).
+    pub hedge_fired: u64,
+    /// Hedges that finished before the original dispatch (the duplicate
+    /// partial from the straggler was dropped).
+    pub hedge_won: u64,
+    /// Queries answered on the S = 1 fast path (worker → client
+    /// directly, no reactor hop, no merge state).
+    pub fast_path: u64,
 }
 
 impl Default for MetricsRegistry {
@@ -52,59 +143,81 @@ impl MetricsRegistry {
     /// Fresh registry.
     pub fn new() -> Self {
         Self {
-            inner: Mutex::new(Inner {
-                queue_wait: LogHistogram::new(),
-                service: LogHistogram::new(),
-                batch_sizes: OnlineMoments::new(),
-                queries: 0,
-                batches: 0,
-                flops: 0,
-                shed: 0,
-            }),
+            queries: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_items: AtomicU64::new(0),
+            flops: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            hedge_fired: AtomicU64::new(0),
+            hedge_won: AtomicU64::new(0),
+            fast_path: AtomicU64::new(0),
+            queue_wait: AtomicDurHistogram::new(),
+            service: AtomicDurHistogram::new(),
         }
     }
 
     /// Record one served query.
     pub fn record_query(&self, queue_wait: Duration, service: Duration, flops: u64) {
-        let mut g = self.inner.lock().unwrap();
-        g.queue_wait.record(queue_wait.as_secs_f64());
-        g.service.record(service.as_secs_f64());
-        g.queries += 1;
-        g.flops += flops;
+        self.queue_wait.record(queue_wait);
+        self.service.record(service);
+        self.queries.fetch_add(1, Relaxed);
+        self.flops.fetch_add(flops, Relaxed);
     }
 
     /// Record a shed (deadline-expired) request.
     pub fn record_shed(&self) {
-        self.inner.lock().unwrap().shed += 1;
+        self.shed.fetch_add(1, Relaxed);
     }
 
     /// Record a formed batch.
     pub fn record_batch(&self, size: usize) {
-        let mut g = self.inner.lock().unwrap();
-        g.batch_sizes.push(size as f64);
-        g.batches += 1;
+        self.batch_items.fetch_add(size as u64, Relaxed);
+        self.batches.fetch_add(1, Relaxed);
     }
 
-    /// Copy out a snapshot.
+    /// Record a straggler hedge dispatch.
+    pub fn record_hedge_fired(&self) {
+        self.hedge_fired.fetch_add(1, Relaxed);
+    }
+
+    /// Record a hedge completing before its straggling original.
+    pub fn record_hedge_won(&self) {
+        self.hedge_won.fetch_add(1, Relaxed);
+    }
+
+    /// Record a query answered on the S = 1 fast path.
+    pub fn record_fast_path(&self) {
+        self.fast_path.fetch_add(1, Relaxed);
+    }
+
+    /// Copy out a snapshot (relaxed — see module docs).
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let g = self.inner.lock().unwrap();
+        let batches = self.batches.load(Relaxed);
+        let batch_items = self.batch_items.load(Relaxed);
         MetricsSnapshot {
-            queries: g.queries,
-            batches: g.batches,
-            flops: g.flops,
-            mean_batch_size: g.batch_sizes.mean(),
+            queries: self.queries.load(Relaxed),
+            batches,
+            flops: self.flops.load(Relaxed),
+            mean_batch_size: if batches == 0 {
+                0.0
+            } else {
+                batch_items as f64 / batches as f64
+            },
             queue_wait: (
-                g.queue_wait.quantile(0.5),
-                g.queue_wait.quantile(0.9),
-                g.queue_wait.quantile(0.99),
+                self.queue_wait.quantile(0.5),
+                self.queue_wait.quantile(0.9),
+                self.queue_wait.quantile(0.99),
             ),
             service: (
-                g.service.quantile(0.5),
-                g.service.quantile(0.9),
-                g.service.quantile(0.99),
+                self.service.quantile(0.5),
+                self.service.quantile(0.9),
+                self.service.quantile(0.99),
             ),
-            mean_service: g.service.mean(),
-            shed: g.shed,
+            mean_service: self.service.mean(),
+            shed: self.shed.load(Relaxed),
+            hedge_fired: self.hedge_fired.load(Relaxed),
+            hedge_won: self.hedge_won.load(Relaxed),
+            fast_path: self.fast_path.load(Relaxed),
         }
     }
 }
@@ -128,5 +241,66 @@ mod tests {
         assert!((s.mean_batch_size - 6.0).abs() < 1e-9);
         assert!(s.service.0 > 0.0);
         assert!(s.queue_wait.2 >= s.queue_wait.0);
+        assert_eq!((s.hedge_fired, s.hedge_won, s.fast_path), (0, 0, 0));
+    }
+
+    #[test]
+    fn atomic_histogram_matches_lock_based_quantiles() {
+        // Same bucket layout ⇒ same quantile estimates as LogHistogram
+        // (up to one bucket of slack: Duration's nanosecond rounding can
+        // nudge a value across a log-bucket boundary).
+        let m = MetricsRegistry::new();
+        let mut reference = LogHistogram::new();
+        for i in 1..=1000u64 {
+            let s = i as f64 * 1e-5; // 10µs … 10ms
+            m.record_query(Duration::from_secs_f64(s), Duration::from_secs_f64(s), 1);
+            reference.record(s);
+        }
+        let snap = m.snapshot();
+        for (got, q) in [(snap.service.0, 0.5), (snap.service.1, 0.9), (snap.service.2, 0.99)] {
+            let want = reference.quantile(q);
+            assert!(
+                (got / want - 1.0).abs() < 0.03,
+                "q={q}: atomic {got} vs reference {want}"
+            );
+        }
+        assert!((snap.mean_service - reference.mean()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hedge_and_fast_path_counters() {
+        let m = MetricsRegistry::new();
+        m.record_hedge_fired();
+        m.record_hedge_fired();
+        m.record_hedge_won();
+        m.record_fast_path();
+        let s = m.snapshot();
+        assert_eq!((s.hedge_fired, s.hedge_won, s.fast_path), (2, 1, 1));
+    }
+
+    #[test]
+    fn concurrent_recording_conserves_counts() {
+        let m = std::sync::Arc::new(MetricsRegistry::new());
+        let mut hs = Vec::new();
+        for _ in 0..4 {
+            let m = m.clone();
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..500 {
+                    m.record_query(
+                        Duration::from_micros(50),
+                        Duration::from_micros(200),
+                        3,
+                    );
+                    m.record_shed();
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        let s = m.snapshot();
+        assert_eq!(s.queries, 2000);
+        assert_eq!(s.shed, 2000);
+        assert_eq!(s.flops, 6000);
     }
 }

@@ -43,8 +43,13 @@
 //!
 //! [`ShardedIndex`] is the in-process executor built on these pieces
 //! (one [`QueryContext`] per shard, shards served sequentially); the
-//! serving coordinator runs the same protocol with shard-pinned workers
-//! in parallel (see [`crate::coordinator`]).
+//! serving coordinator runs the same protocol in parallel behind an
+//! event-driven reactor — shard-pinned workers produce
+//! [`ShardPartial`]s as completion events, the reactor folds them with
+//! exactly the [`merge_partials`] semantics (same [`TopK`] order, same
+//! flop accounting), and a straggling shard's batch can be re-executed
+//! verbatim by a sibling worker because partials are deterministic
+//! functions of (shard data, knobs, seed) (see [`crate::coordinator`]).
 
 use crate::algos::{BoundedMeIndex, MipsIndex, MipsParams, MipsResult, NaiveIndex};
 use crate::bandit::PullOrder;

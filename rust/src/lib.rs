@@ -39,9 +39,9 @@
 //! | [`data`]   | dataset substrate: synthetic, adversarial, ALS matrix factorization; [`data::shard`] row sharding |
 //! | [`metrics`] | precision@K, flop accounting, latency sketches |
 //! | [`runtime`] | scoring engines; PJRT/XLA artifact execution behind the `pjrt` feature |
-//! | [`coordinator`] | serving layer: dynamic batcher, shard router, shard-pinned worker pool, top-K merge |
+//! | [`coordinator`] | serving layer: plan-aware dynamic batcher, event-driven reactor (shard fan-out, completion-event merge, straggler hedging), S = 1 fast path, shard-pinned worker pool |
 //! | [`experiments`] | harness regenerating every paper table/figure |
-//! | [`errors`], [`logkit`], [`jsonlite`], [`sync`], [`benchkit`], [`cli`] | offline substrates (no external deps) |
+//! | [`errors`], [`logkit`], [`jsonlite`], [`sync`], [`benchkit`], [`cli`] | offline substrates (no external deps); [`sync`] adds `try_recv`/`Waker`/`Selector` polling primitives for the reactor |
 //!
 //! ## SIMD kernel funnel
 //!
@@ -68,10 +68,25 @@
 //! an exact *confirm* rescore so the union keeps the paper's (ε, δ)
 //! guarantee — and merges partials through [`linalg::TopK`] (stable
 //! global-id tie-break, so merges are deterministic). Exact sharded
-//! queries are byte-identical to the unsharded scan. The coordinator
-//! runs the same protocol in parallel with shard-pinned workers
-//! ([`coordinator::CoordinatorConfig::shard`]); in-process callers use
-//! [`exec::shard::ShardedIndex`].
+//! queries are byte-identical to the unsharded scan. In-process callers
+//! use [`exec::shard::ShardedIndex`].
+//!
+//! ## Serving
+//!
+//! The [`coordinator`] runs the sharded protocol in parallel behind an
+//! **event-driven reactor**: batcher → reactor → shard-pinned workers →
+//! completion events → merge-and-reply. The batcher is *plan-aware*
+//! (it resolves [`coordinator::QueryMode::Auto`] once per query and
+//! groups arrivals by exact-vs-bandit decision and `(k, ε, δ)` knobs,
+//! so batches hit the fused paths), the reactor dispatches shard
+//! batches without ever blocking on a channel and folds per-shard
+//! partials into per-query merges as events arrive (no locks), slow
+//! shards can be **hedged** onto idle sibling workers
+//! ([`coordinator::CoordinatorConfig::hedge_delay`]; first completion
+//! wins, duplicates are suppressed), and unsharded (`S = 1`)
+//! deployments skip the reactor entirely — workers answer clients
+//! directly. All of it rides the [`sync`] substrate's non-blocking
+//! primitives (`try_recv`, `Waker`, `Selector`).
 //!
 //! ## Quick start
 //!

@@ -128,6 +128,23 @@ impl LogHistogram {
         10f64.powf(MIN_EXP + (b as f64 - 0.5) / BUCKETS_PER_DECADE)
     }
 
+    /// Bucket index for value `x` — the bucket layout is public so
+    /// other sketch representations (the coordinator's lock-free atomic
+    /// histogram) can share it and stay comparable.
+    pub fn bucket_index(x: f64) -> usize {
+        Self::bucket(x)
+    }
+
+    /// Representative (log-midpoint) value of bucket `b`.
+    pub fn bucket_midpoint(b: usize) -> f64 {
+        Self::bucket_value(b)
+    }
+
+    /// Total bucket count, including the ≤0 and overflow buckets.
+    pub const fn bucket_count() -> usize {
+        NUM_BUCKETS + 2
+    }
+
     /// Record an observation.
     pub fn record(&mut self, x: f64) {
         self.counts[Self::bucket(x)] += 1;

@@ -1,5 +1,6 @@
 //! Minimal concurrency substrate: a bounded **MPMC channel** built on
-//! `Mutex` + `Condvar`.
+//! `Mutex` + `Condvar`, plus the non-blocking primitives the
+//! event-driven coordinator reactor runs on.
 //!
 //! The image's offline crate set has no `crossbeam-channel`/`tokio`, so
 //! the coordinator's router queue and batch distribution run on this
@@ -8,10 +9,38 @@
 //! * bounded capacity with non-blocking [`Sender::try_send`]
 //!   (backpressure) and blocking [`Sender::send`];
 //! * multiple consumers ([`Receiver`] is `Clone`) with blocking
-//!   [`Receiver::recv`] and [`Receiver::recv_timeout`];
+//!   [`Receiver::recv`], [`Receiver::recv_timeout`], and non-blocking
+//!   [`Receiver::try_recv`];
 //! * disconnect detection: `recv` on a channel whose senders are all
 //!   dropped drains the buffer then errors; sends after all receivers
-//!   drop error.
+//!   drop error;
+//! * **readiness notification** for event loops: a [`Waker`] is a
+//!   latched wakeup handle, and a [`Selector`] watches any number of
+//!   channels (of any element types) at once. A watched channel fires
+//!   the waker on every state transition an event loop can care about —
+//!   item pushed (readable), item popped (writable again after
+//!   backpressure), last sender dropped, last receiver dropped — so the
+//!   disconnect and backpressure semantics of the blocking paths carry
+//!   over to the polling paths exactly.
+//!
+//! # The poll discipline (no lost wakeups)
+//!
+//! [`Waker::wake`] *latches*: it sets a pending flag that the next
+//! [`Waker::wait`] consumes, even if the waiter was not yet parked. An
+//! event loop is therefore race-free as long as it polls **before**
+//! waiting:
+//!
+//! ```text
+//! loop {
+//!     while let Ok(x) = rx.try_recv() { … }   // poll: drain readiness
+//!     …                                       // (a push here sets the latch)
+//!     selector.wait();                        // parks only if no wake since last wait
+//! }
+//! ```
+//!
+//! Any push that lands between the final `try_recv` and the `wait`
+//! leaves the latch set, so `wait` returns immediately and the loop
+//! re-polls. Spurious wakeups only cost one extra poll pass.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -67,10 +96,152 @@ impl std::fmt::Display for RecvError {
 
 impl std::error::Error for RecvError {}
 
+/// Error returned by [`Receiver::try_recv`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum TryRecvError {
+    /// No item queued right now (senders still connected).
+    Empty,
+    /// Buffer empty and all senders gone.
+    Disconnected,
+}
+
+impl std::fmt::Display for TryRecvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Empty => write!(f, "channel empty"),
+            Self::Disconnected => write!(f, "channel disconnected"),
+        }
+    }
+}
+
+impl std::error::Error for TryRecvError {}
+
+struct WakerInner {
+    pending: Mutex<bool>,
+    cv: Condvar,
+}
+
+/// A latched wakeup handle: [`Waker::wake`] sets a pending flag and
+/// wakes any parked waiter; [`Waker::wait`] parks until the flag is set
+/// and consumes it. Because the flag latches, a wake delivered while
+/// the consumer is *between* polls is not lost — the next `wait`
+/// returns immediately (see the module docs for the poll discipline).
+///
+/// Cloning shares the handle: all clones observe the same latch.
+#[derive(Clone)]
+pub struct Waker(Arc<WakerInner>);
+
+impl Default for Waker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Waker {
+    /// Fresh handle with the latch clear.
+    pub fn new() -> Self {
+        Waker(Arc::new(WakerInner { pending: Mutex::new(false), cv: Condvar::new() }))
+    }
+
+    /// Latch a wakeup and notify parked waiters.
+    pub fn wake(&self) {
+        let mut p = self.0.pending.lock().unwrap();
+        *p = true;
+        drop(p);
+        self.0.cv.notify_all();
+    }
+
+    /// Park until woken; consumes the latch.
+    pub fn wait(&self) {
+        let mut p = self.0.pending.lock().unwrap();
+        while !*p {
+            p = self.0.cv.wait(p).unwrap();
+        }
+        *p = false;
+    }
+
+    /// Park until woken or `deadline` passes. Returns `true` when woken
+    /// (latch consumed), `false` on timeout (latch untouched).
+    pub fn wait_deadline(&self, deadline: Instant) -> bool {
+        let mut p = self.0.pending.lock().unwrap();
+        while !*p {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _res) = self.0.cv.wait_timeout(p, deadline - now).unwrap();
+            p = guard;
+        }
+        *p = false;
+        true
+    }
+
+    /// [`Waker::wait_deadline`] with a relative timeout.
+    pub fn wait_timeout(&self, timeout: Duration) -> bool {
+        self.wait_deadline(Instant::now() + timeout)
+    }
+}
+
+/// A multi-channel readiness notifier: the `select`/poll facility of
+/// this substrate. Watch any number of channels — element types may
+/// differ — then alternate *poll* ([`Receiver::try_recv`] /
+/// [`Sender::try_send`] on each watched channel) with *wait*
+/// ([`Selector::wait`] / [`Selector::wait_deadline`]).
+///
+/// Watching a [`Receiver`] (or a [`Sender`] — both halves share the
+/// channel) arms the selector's [`Waker`] on every observable state
+/// transition of that channel: push, pop, senders reaching zero,
+/// receivers reaching zero. Readiness itself is *checked* by the
+/// caller's non-blocking calls; the selector only says "something may
+/// have changed" — classic level-check/edge-notify polling, with the
+/// waker latch closing the check-then-park race.
+#[derive(Clone, Default)]
+pub struct Selector {
+    waker: Waker,
+}
+
+impl Selector {
+    /// Fresh selector with nothing watched.
+    pub fn new() -> Self {
+        Self { waker: Waker::new() }
+    }
+
+    /// The underlying wakeup handle (e.g. to fire it manually).
+    pub fn waker(&self) -> &Waker {
+        &self.waker
+    }
+
+    /// Watch a channel through its receiving half.
+    pub fn watch<T>(&self, rx: &Receiver<T>) {
+        rx.attach_waker(&self.waker);
+    }
+
+    /// Watch a channel through its sending half (useful when the event
+    /// loop owns only senders and needs backpressure-relief wakeups).
+    pub fn watch_sender<T>(&self, tx: &Sender<T>) {
+        tx.attach_waker(&self.waker);
+    }
+
+    /// Park until any watched channel changes state (latched — see
+    /// [`Waker::wait`]).
+    pub fn wait(&self) {
+        self.waker.wait();
+    }
+
+    /// Park until a state change or `deadline`; `true` when woken.
+    pub fn wait_deadline(&self, deadline: Instant) -> bool {
+        self.waker.wait_deadline(deadline)
+    }
+}
+
 struct State<T> {
     queue: VecDeque<T>,
     senders: usize,
     receivers: usize,
+    /// Wakers armed on every state transition (push / pop / either side
+    /// disconnecting). Empty for channels nobody polls — the common
+    /// case — so the notification cost is one `is_empty` check.
+    wakers: Vec<Waker>,
 }
 
 struct Shared<T> {
@@ -88,11 +259,27 @@ pub struct Sender<T>(Arc<Shared<T>>);
 /// Consumer half (cloneable — MPMC).
 pub struct Receiver<T>(Arc<Shared<T>>);
 
+/// Fire every armed waker, called with the channel lock held. Safe and
+/// allocation-free: [`Waker::wake`] takes only the waker's own (tiny)
+/// mutex, and no code path acquires a channel lock while holding a
+/// waker lock, so the ordering channel-lock → waker-lock cannot invert.
+/// The common unwatched case is a single `is_empty` check.
+fn fire<T>(st: &State<T>) {
+    for w in &st.wakers {
+        w.wake();
+    }
+}
+
 /// Create a bounded channel with the given capacity (≥ 1).
 pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
     let cap = cap.max(1);
     let shared = Arc::new(Shared {
-        state: Mutex::new(State { queue: VecDeque::with_capacity(cap), senders: 1, receivers: 1 }),
+        state: Mutex::new(State {
+            queue: VecDeque::with_capacity(cap),
+            senders: 1,
+            receivers: 1,
+            wakers: Vec::new(),
+        }),
         cap,
         not_empty: Condvar::new(),
         not_full: Condvar::new(),
@@ -111,6 +298,7 @@ impl<T> Sender<T> {
             return Err(SendError::Full(value));
         }
         st.queue.push_back(value);
+        fire(&st);
         drop(st);
         self.0.not_empty.notify_one();
         Ok(())
@@ -125,12 +313,19 @@ impl<T> Sender<T> {
             }
             if st.queue.len() < self.0.cap {
                 st.queue.push_back(value);
+                fire(&st);
                 drop(st);
                 self.0.not_empty.notify_one();
                 return Ok(());
             }
             st = self.0.not_full.wait(st).unwrap();
         }
+    }
+
+    /// Arm `waker` on every state transition of this channel (see
+    /// [`Selector`]). Waker registrations live as long as the channel.
+    pub fn attach_waker(&self, waker: &Waker) {
+        self.0.state.lock().unwrap().wakers.push(waker.clone());
     }
 }
 
@@ -141,6 +336,7 @@ impl<T> Receiver<T> {
         let mut st = self.0.state.lock().unwrap();
         loop {
             if let Some(v) = st.queue.pop_front() {
+                fire(&st);
                 drop(st);
                 self.0.not_full.notify_one();
                 return Ok(v);
@@ -152,12 +348,31 @@ impl<T> Receiver<T> {
         }
     }
 
+    /// Non-blocking receive: pops an item if one is queued, otherwise
+    /// reports [`TryRecvError::Empty`] (senders alive) or
+    /// [`TryRecvError::Disconnected`] (buffer drained and all senders
+    /// gone — same drain-then-error contract as [`Receiver::recv`]).
+    pub fn try_recv(&self) -> Result<T, TryRecvError> {
+        let mut st = self.0.state.lock().unwrap();
+        if let Some(v) = st.queue.pop_front() {
+            fire(&st);
+            drop(st);
+            self.0.not_full.notify_one();
+            return Ok(v);
+        }
+        if st.senders == 0 {
+            return Err(TryRecvError::Disconnected);
+        }
+        Err(TryRecvError::Empty)
+    }
+
     /// Receive with a deadline.
     pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvError> {
         let deadline = Instant::now() + timeout;
         let mut st = self.0.state.lock().unwrap();
         loop {
             if let Some(v) = st.queue.pop_front() {
+                fire(&st);
                 drop(st);
                 self.0.not_full.notify_one();
                 return Ok(v);
@@ -178,6 +393,12 @@ impl<T> Receiver<T> {
                 return Err(RecvError::Timeout);
             }
         }
+    }
+
+    /// Arm `waker` on every state transition of this channel (see
+    /// [`Selector`]). Waker registrations live as long as the channel.
+    pub fn attach_waker(&self, waker: &Waker) {
+        self.0.state.lock().unwrap().wakers.push(waker.clone());
     }
 
     /// Number of queued items right now (diagnostics only).
@@ -210,6 +431,7 @@ impl<T> Drop for Sender<T> {
         let mut st = self.0.state.lock().unwrap();
         st.senders -= 1;
         if st.senders == 0 {
+            fire(&st);
             drop(st);
             self.0.not_empty.notify_all();
         }
@@ -221,6 +443,7 @@ impl<T> Drop for Receiver<T> {
         let mut st = self.0.state.lock().unwrap();
         st.receivers -= 1;
         if st.receivers == 0 {
+            fire(&st);
             drop(st);
             self.0.not_full.notify_all();
         }
@@ -335,5 +558,121 @@ mod tests {
         tx.send(1).unwrap();
         tx.send(2).unwrap();
         assert_eq!(rx.len(), 2);
+    }
+
+    #[test]
+    fn try_recv_empty_item_disconnected() {
+        let (tx, rx) = bounded(4);
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Empty));
+        tx.send(9).unwrap();
+        assert_eq!(rx.try_recv(), Ok(9));
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Empty));
+        tx.send(10).unwrap();
+        drop(tx);
+        // Drain-then-error, same as recv().
+        assert_eq!(rx.try_recv(), Ok(10));
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Disconnected));
+    }
+
+    #[test]
+    fn waker_latches_wake_before_wait() {
+        let w = Waker::new();
+        w.wake();
+        // Latched: a pre-armed wake satisfies the next wait instantly.
+        let t0 = Instant::now();
+        w.wait();
+        assert!(t0.elapsed() < Duration::from_millis(50));
+        // Consumed: the wait after that times out.
+        assert!(!w.wait_timeout(Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn waker_crosses_threads() {
+        let w = Waker::new();
+        let w2 = w.clone();
+        let h = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            w2.wake();
+        });
+        assert!(w.wait_timeout(Duration::from_secs(5)));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn selector_wakes_on_push_pop_and_disconnect() {
+        let sel = Selector::new();
+        let (tx, rx) = bounded::<i32>(1);
+        sel.watch(&rx);
+        sel.watch_sender(&tx);
+
+        // Push readiness.
+        tx.send(1).unwrap();
+        assert!(sel.wait_deadline(Instant::now() + Duration::from_millis(200)));
+        // Pop (backpressure relief) readiness: channel was full.
+        assert_eq!(tx.try_send(2), Err(SendError::Full(2)));
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert!(sel.wait_deadline(Instant::now() + Duration::from_millis(200)));
+        // Disconnect readiness.
+        drop(tx);
+        assert!(sel.wait_deadline(Instant::now() + Duration::from_millis(200)));
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Disconnected));
+    }
+
+    #[test]
+    fn selector_poll_loop_sees_every_item_across_two_channels() {
+        // The reactor pattern: one selector over two channels of
+        // different types, poll-then-wait, producers on other threads.
+        let sel = Selector::new();
+        let (tx_a, rx_a) = bounded::<u32>(4);
+        let (tx_b, rx_b) = bounded::<String>(4);
+        sel.watch(&rx_a);
+        sel.watch(&rx_b);
+        let ha = thread::spawn(move || {
+            for i in 0..100u32 {
+                tx_a.send(i).unwrap();
+            }
+        });
+        let hb = thread::spawn(move || {
+            for i in 0..100 {
+                tx_b.send(format!("s{i}")).unwrap();
+            }
+        });
+        let (mut got_a, mut got_b) = (0u32, 0u32);
+        let (mut a_open, mut b_open) = (true, true);
+        while a_open || b_open {
+            let mut progressed = false;
+            loop {
+                match rx_a.try_recv() {
+                    Ok(_) => {
+                        got_a += 1;
+                        progressed = true;
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        a_open = false;
+                        break;
+                    }
+                }
+            }
+            loop {
+                match rx_b.try_recv() {
+                    Ok(_) => {
+                        got_b += 1;
+                        progressed = true;
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        b_open = false;
+                        break;
+                    }
+                }
+            }
+            if !progressed && (a_open || b_open) {
+                sel.wait();
+            }
+        }
+        assert_eq!((got_a, got_b), (100, 100));
+        ha.join().unwrap();
+        hb.join().unwrap();
     }
 }

@@ -1,0 +1,261 @@
+//! Reactor + straggler-hedging battery: duplicate-partial suppression,
+//! hedge-as-no-op under healthy shards, byte-identity of the S = 1 fast
+//! path against the reactor merge path, drain-on-shutdown with hedges
+//! in flight, and client disconnects mid-hedge.
+//!
+//! Determinism notes: every BOUNDEDME request here uses the default
+//! seed and knob-uniform groups, so results are independent of how the
+//! batcher happened to group them (batch-vs-single bit-identity of the
+//! fused path) and of which copy of a hedged dispatch wins (both copies
+//! compute the same bytes from the same shard data and seed). That is
+//! what lets these tests compare hedged runs against unhedged runs
+//! bit-for-bit.
+//!
+//! Set `RUST_PALLAS_STRESS=1` to elevate burst sizes (the CI stress leg
+//! runs this battery in release mode under both SIMD dispatch modes).
+
+use bandit_mips::algos::ground_truth;
+use bandit_mips::bandit::PullOrder;
+use bandit_mips::coordinator::{
+    Backend, Coordinator, CoordinatorConfig, QueryRequest, QueryResponse,
+};
+use bandit_mips::data::shard::ShardSpec;
+use bandit_mips::data::synthetic::gaussian_dataset;
+use std::time::{Duration, Instant};
+
+/// Burst multiplier: 1 normally, 8 under `RUST_PALLAS_STRESS=1`.
+fn stress() -> u64 {
+    match std::env::var("RUST_PALLAS_STRESS") {
+        Ok(v) if v == "1" => 8,
+        _ => 1,
+    }
+}
+
+fn cfg(workers: usize, shard: ShardSpec) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers,
+        max_batch: 8,
+        batch_timeout: Duration::from_millis(2),
+        queue_capacity: 4096,
+        backend: Backend::Native,
+        pull_order: PullOrder::BlockShuffled(16),
+        shard,
+        ..Default::default()
+    }
+}
+
+/// The deterministic request mix used by the equivalence tests: exact
+/// and knob-uniform BOUNDEDME queries with the default seed.
+fn request_mix(ds: &bandit_mips::data::Dataset, n: u64) -> Vec<QueryRequest> {
+    (0..n)
+        .map(|i| {
+            let q = ds.sample_query(i);
+            if i % 2 == 0 {
+                QueryRequest::exact(q, 5)
+            } else {
+                QueryRequest::bounded_me(q, 4, 0.15, 0.1)
+            }
+        })
+        .collect()
+}
+
+fn run_all(c: &Coordinator, reqs: &[QueryRequest]) -> Vec<QueryResponse> {
+    let handles: Vec<_> =
+        reqs.iter().map(|r| c.submit(r.clone()).expect("submit")).collect();
+    handles.into_iter().map(|h| h.recv().expect("reply")).collect()
+}
+
+fn assert_bit_identical(a: &[QueryResponse], b: &[QueryResponse], label: &str) {
+    assert_eq!(a.len(), b.len());
+    for (i, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ra.indices, rb.indices, "{label}: query {i} indices");
+        assert_eq!(ra.scores.len(), rb.scores.len(), "{label}: query {i}");
+        for (sa, sb) in ra.scores.iter().zip(&rb.scores) {
+            assert_eq!(sa.to_bits(), sb.to_bits(), "{label}: query {i} score bits");
+        }
+        assert_eq!(ra.flops, rb.flops, "{label}: query {i} flops");
+    }
+}
+
+/// A hedge delay of zero hedges *every* dispatch, so most dispatches
+/// complete twice. The duplicate partial must be suppressed: merged
+/// results are bit-identical to an unhedged run, every query is
+/// answered exactly once, and the metrics count each query once.
+#[test]
+fn hedged_duplicate_partials_are_suppressed() {
+    let ds = gaussian_dataset(180, 128, 55);
+    let n = 24 * stress();
+    let reqs = request_mix(&ds, n);
+
+    let plain = Coordinator::new(ds.vectors.clone(), cfg(6, ShardSpec::contiguous(3))).unwrap();
+    let baseline = run_all(&plain, &reqs);
+    plain.shutdown();
+
+    let mut hedged_cfg = cfg(6, ShardSpec::contiguous(3));
+    hedged_cfg.hedge_delay = Some(Duration::ZERO);
+    let hedged = Coordinator::new(ds.vectors.clone(), hedged_cfg).unwrap();
+    let handles: Vec<_> =
+        reqs.iter().map(|r| hedged.submit(r.clone()).expect("submit")).collect();
+    let mut got = Vec::new();
+    for (i, h) in handles.into_iter().enumerate() {
+        got.push(h.recv().unwrap_or_else(|e| panic!("query {i} lost: {e:?}")));
+        // Exactly one answer per query: the reply sender is dropped
+        // after the merge replies, so a second recv must error — a
+        // duplicate reply would have been buffered and returned here.
+        assert!(h.recv().is_err(), "query {i} answered twice");
+    }
+    assert_bit_identical(&baseline, &got, "hedged vs unhedged");
+    let snap = hedged.metrics();
+    assert_eq!(snap.queries, n, "duplicate partials double-counted queries");
+    assert!(snap.hedge_fired > 0, "zero hedge delay never fired a hedge");
+    hedged.shutdown();
+}
+
+/// With a generous hedge delay and healthy shards, hedging is a
+/// complete no-op: nothing fires, nothing wins, answers are correct.
+#[test]
+fn hedge_under_no_straggler_is_a_noop() {
+    let ds = gaussian_dataset(150, 96, 19);
+    let data = ds.vectors.clone();
+    let mut config = cfg(2, ShardSpec::contiguous(2));
+    config.hedge_delay = Some(Duration::from_secs(30));
+    let c = Coordinator::new(ds.vectors.clone(), config).unwrap();
+    for i in 0..16u64 {
+        let q = ds.sample_query(i);
+        let resp = c.query_blocking(QueryRequest::exact(q.clone(), 5)).unwrap();
+        assert_eq!(resp.indices, ground_truth(&data, &q, 5));
+        assert_eq!(resp.shards, 2);
+    }
+    let snap = c.metrics();
+    assert_eq!(snap.queries, 16);
+    assert_eq!(snap.hedge_fired, 0, "hedge fired with no straggler");
+    assert_eq!(snap.hedge_won, 0);
+    c.shutdown();
+}
+
+/// One shard crawls (deterministic straggler injection); the hedge
+/// re-dispatch lands on an idle sibling worker and beats it. The
+/// answer is still exact, the hedge provably won, and the query
+/// returned far sooner than the straggler's delay.
+#[test]
+fn hedge_rescues_a_slow_shard() {
+    let ds = gaussian_dataset(160, 64, 47);
+    let data = ds.vectors.clone();
+    let slow = Duration::from_millis(500);
+    let mut config = cfg(4, ShardSpec::contiguous(2));
+    config.hedge_delay = Some(Duration::from_millis(5));
+    config.debug_slow_shard = Some((0, slow));
+    let c = Coordinator::new(ds.vectors.clone(), config).unwrap();
+    for i in 0..3u64 {
+        let q = ds.sample_query(i);
+        let t0 = Instant::now();
+        let resp = c.query_blocking(QueryRequest::exact(q.clone(), 5)).unwrap();
+        let wall = t0.elapsed();
+        assert_eq!(resp.indices, ground_truth(&data, &q, 5), "query {i}");
+        assert_eq!(resp.shards, 2);
+        assert!(
+            wall < Duration::from_millis(400),
+            "query {i} took {wall:?} — hedge did not rescue the {slow:?} straggler"
+        );
+    }
+    let snap = c.metrics();
+    assert!(snap.hedge_fired >= 1, "no hedge fired against a {slow:?} straggler");
+    assert!(snap.hedge_won >= 1, "hedge never beat the straggler");
+    c.shutdown();
+}
+
+/// The S = 1 fast path must be bit-identical to the S = 1 reactor merge
+/// path on identical traffic — removing the reactor hop and the merge
+/// state is pure overhead elimination, not a semantic change.
+#[test]
+fn fast_path_bit_identical_to_reactor_merge_path() {
+    let ds = gaussian_dataset(150, 96, 7);
+    // Sequential singles (per-query path) plus a same-knob burst (fused
+    // path); default seeds keep the shared permutation identical no
+    // matter how the batcher groups the burst.
+    let mut reqs = request_mix(&ds, 12);
+    for i in 100..108u64 {
+        reqs.push(QueryRequest::bounded_me(ds.sample_query(i), 3, 0.2, 0.15));
+    }
+
+    let fast = Coordinator::new(ds.vectors.clone(), cfg(2, ShardSpec::single())).unwrap();
+    let via_fast = run_all(&fast, &reqs);
+    let fast_snap = fast.metrics();
+    fast.shutdown();
+
+    let mut reactor_cfg = cfg(2, ShardSpec::single());
+    reactor_cfg.force_reactor = true;
+    let reactor = Coordinator::new(ds.vectors.clone(), reactor_cfg).unwrap();
+    let via_reactor = run_all(&reactor, &reqs);
+    let reactor_snap = reactor.metrics();
+    reactor.shutdown();
+
+    assert_bit_identical(&via_fast, &via_reactor, "fast path vs reactor merge");
+    assert_eq!(fast_snap.fast_path, reqs.len() as u64, "fast path not taken at S=1");
+    assert_eq!(reactor_snap.fast_path, 0, "forced reactor still hit the fast path");
+    assert_eq!(reactor_snap.queries, reqs.len() as u64);
+    for resp in &via_fast {
+        assert_eq!(resp.shards, 1);
+    }
+}
+
+/// Shutdown with hedges in flight: the reactor keeps running until
+/// every in-flight (hedged or primary) dispatch has merged — no query
+/// is lost, none is answered twice.
+#[test]
+fn shutdown_drains_inflight_hedged_queries() {
+    let ds = gaussian_dataset(200, 128, 61);
+    let n = 24 * stress();
+    let reqs = request_mix(&ds, n);
+    let mut config = cfg(4, ShardSpec::contiguous(2));
+    config.hedge_delay = Some(Duration::ZERO);
+    config.debug_slow_shard = Some((0, Duration::from_millis(10)));
+    let c = Coordinator::new(ds.vectors.clone(), config).unwrap();
+    let handles: Vec<_> = reqs.iter().map(|r| c.submit(r.clone()).expect("submit")).collect();
+    // Shut down while the burst — and its hedge duplicates — is still
+    // in flight.
+    c.shutdown();
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = h.recv().unwrap_or_else(|e| panic!("query {i} lost in drain: {e:?}"));
+        assert!(!resp.shed, "query {i} spuriously shed");
+        assert!(!resp.indices.is_empty(), "query {i} returned empty");
+        assert!(h.recv().is_err(), "query {i} answered twice");
+    }
+}
+
+/// Clients that vanish mid-hedge (receiver dropped while both copies of
+/// their dispatch are in flight) must not wedge the reactor: surviving
+/// clients get exact answers and the pipeline keeps serving afterwards.
+#[test]
+fn client_disconnect_mid_hedge_does_not_wedge_the_reactor() {
+    let ds = gaussian_dataset(180, 96, 29);
+    let data = ds.vectors.clone();
+    let n = 16 * stress();
+    let mut config = cfg(3, ShardSpec::contiguous(3));
+    config.hedge_delay = Some(Duration::ZERO);
+    config.debug_slow_shard = Some((1, Duration::from_millis(5)));
+    let c = Coordinator::new(ds.vectors.clone(), config).unwrap();
+    let mut kept = Vec::new();
+    for i in 0..n {
+        let q = ds.sample_query(i);
+        let rx = c.submit(QueryRequest::exact(q.clone(), 4)).unwrap();
+        if i % 2 == 0 {
+            kept.push((q, rx));
+        } // odd receivers dropped here, mid-hedge
+    }
+    for (q, rx) in kept {
+        let resp = rx.recv().expect("kept client starved by disconnects");
+        assert_eq!(resp.indices, ground_truth(&data, &q, 4));
+    }
+    // The reactor is still alive and serving: a fresh query round-trips.
+    let q = ds.sample_query(9999);
+    let resp = c.query_blocking(QueryRequest::exact(q.clone(), 3)).unwrap();
+    assert_eq!(resp.indices, ground_truth(&data, &q, 3));
+    // Every query (answered or abandoned) executed exactly once.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while c.metrics().queries < n + 1 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(c.metrics().queries, n + 1, "abandoned queries lost or double-counted");
+    c.shutdown();
+}

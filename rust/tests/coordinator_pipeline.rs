@@ -1,7 +1,11 @@
 //! Deterministic end-to-end tests of the serving pipeline:
-//! batcher → shard router → shard-pinned worker loop — mixed
-//! exact/bandit batches, `QueryMode::Auto` routing before fan-out,
-//! disconnects mid-batch, and drain-on-shutdown without losing queries.
+//! batcher → reactor → shard-pinned worker loop (and the S = 1 direct
+//! fast path) — mixed exact/bandit batches, `QueryMode::Auto` routing
+//! at batching time, disconnects mid-batch, and drain-on-shutdown
+//! without losing queries.
+//!
+//! Set `RUST_PALLAS_STRESS=1` to elevate burst sizes (the CI stress leg
+//! runs this battery in release mode under both SIMD dispatch modes).
 
 use bandit_mips::algos::{ground_truth, MipsIndex, MipsParams, NaiveIndex};
 use bandit_mips::bandit::PullOrder;
@@ -12,6 +16,14 @@ use bandit_mips::data::shard::ShardSpec;
 use bandit_mips::data::synthetic::gaussian_dataset;
 use std::time::Duration;
 
+/// Burst multiplier: 1 normally, 8 under `RUST_PALLAS_STRESS=1`.
+fn stress() -> u64 {
+    match std::env::var("RUST_PALLAS_STRESS") {
+        Ok(v) if v == "1" => 8,
+        _ => 1,
+    }
+}
+
 fn cfg(workers: usize, shard: ShardSpec) -> CoordinatorConfig {
     CoordinatorConfig {
         workers,
@@ -21,6 +33,7 @@ fn cfg(workers: usize, shard: ShardSpec) -> CoordinatorConfig {
         backend: Backend::Native,
         pull_order: PullOrder::BlockShuffled(16),
         shard,
+        ..Default::default()
     }
 }
 
@@ -117,13 +130,14 @@ fn shutdown_drains_without_losing_queries() {
     let ds = gaussian_dataset(400, 256, 23);
     let c = Coordinator::new(ds.vectors.clone(), cfg(2, ShardSpec::contiguous(2))).unwrap();
     let mut handles = Vec::new();
-    for i in 0..40u64 {
+    for i in 0..40 * stress() {
         let q = ds.sample_query(i);
         handles.push(c.submit(QueryRequest::bounded_me(q, 3, 0.2, 0.2)).unwrap());
     }
     // Shutdown while (most of) the burst is still queued: the batcher
-    // drains its queue, the router fans everything out, the shard
-    // workers drain their channels, then all threads join.
+    // drains its queue, the reactor fans everything out and keeps
+    // running until every merge completes, the shard workers drain
+    // their channels, then all threads join.
     c.shutdown();
     for (i, h) in handles.into_iter().enumerate() {
         let resp = h.recv().unwrap_or_else(|e| panic!("query {i} lost in drain: {e:?}"));
@@ -139,9 +153,10 @@ fn client_disconnect_mid_batch_keeps_pipeline_alive() {
     let ds = gaussian_dataset(200, 64, 29);
     let data = ds.vectors.clone();
     let c = Coordinator::new(ds.vectors.clone(), cfg(2, ShardSpec::contiguous(2))).unwrap();
+    let count = 32 * stress();
     let mut kept = Vec::new();
     let mut kept_queries = Vec::new();
-    for i in 0..32u64 {
+    for i in 0..count {
         let q = ds.sample_query(i);
         let rx = c.submit(QueryRequest::exact(q.clone(), 3)).unwrap();
         if i % 2 == 0 {
@@ -155,11 +170,11 @@ fn client_disconnect_mid_batch_keeps_pipeline_alive() {
     }
     // The abandoned queries were still executed and counted (their
     // batches may trail the kept ones briefly — poll with a bound).
-    let deadline = std::time::Instant::now() + Duration::from_secs(5);
-    while c.metrics().queries < 32 && std::time::Instant::now() < deadline {
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while c.metrics().queries < count && std::time::Instant::now() < deadline {
         std::thread::sleep(Duration::from_millis(2));
     }
-    assert_eq!(c.metrics().queries, 32);
+    assert_eq!(c.metrics().queries, count);
     c.shutdown();
 }
 
@@ -208,6 +223,27 @@ fn worker_pool_raised_to_shard_count() {
     let resp = c.query_blocking(QueryRequest::exact(q.clone(), 5)).unwrap();
     assert_eq!(resp.shards, 3);
     assert_eq!(resp.indices, ground_truth(&data, &q, 5));
+    c.shutdown();
+}
+
+/// Unsharded deployments serve on the direct fast path: every answer
+/// is produced worker → client (counted in `fast_path`), reports one
+/// shard, and is still exact.
+#[test]
+fn fast_path_serves_unsharded_directly() {
+    let ds = gaussian_dataset(100, 64, 81);
+    let data = ds.vectors.clone();
+    let c = Coordinator::new(ds.vectors.clone(), cfg(2, ShardSpec::single())).unwrap();
+    for i in 0..10 {
+        let q = ds.sample_query(i);
+        let resp = c.query_blocking(QueryRequest::exact(q.clone(), 4)).unwrap();
+        assert_eq!(resp.shards, 1);
+        assert_eq!(resp.indices, ground_truth(&data, &q, 4));
+    }
+    let snap = c.metrics();
+    assert_eq!(snap.queries, 10);
+    assert_eq!(snap.fast_path, 10, "S=1 answers bypassed the fast path");
+    assert_eq!(snap.hedge_fired, 0);
     c.shutdown();
 }
 
