@@ -147,6 +147,51 @@ fn main() {
         }
     }
 
+    // L0c: the survivor-compacting panel layout vs scattered pulls —
+    // the BOUNDEDME elimination-core memory-layout decision. One
+    // 2000×4096 dataset under the serving block-shuffled order;
+    // survivor sets at fractions {1.0, 0.25, 0.05} of the rows (strided
+    // ids, so scattered reads walk the whole matrix); each iteration is
+    // one elimination round's pull batch over a 512-coordinate range.
+    // `pull_panel` measures the steady-state panel scan (the one-time
+    // compaction gather is amortized over all subsequent rounds, so it
+    // is set up outside the timed loop). Acceptance: panel no slower at
+    // fraction ≤ 0.25.
+    {
+        use bandit_mips::bandit::{MatrixArms, PullPanel, RewardSource};
+        let nrows = 2000usize;
+        let dim = 4096usize;
+        let data = Matrix::from_fn(nrows, dim, |_, _| rng.gaussian() as f32);
+        let q: Vec<f32> = rng.gaussian_vec(dim);
+        let arms = MatrixArms::new(&data, &q, 8.0, PullOrder::BlockShuffled(128), 7);
+        let (from, to) = (1024usize, 1536usize);
+        for (frac, label) in [(1.0f64, "1.00"), (0.25, "0.25"), (0.05, "0.05")] {
+            let keep = ((nrows as f64 * frac) as usize).max(1);
+            let stride = nrows / keep;
+            let ids: Vec<usize> = (0..keep).map(|i| i * stride).collect();
+            let mut out = vec![0f64; keep];
+            r.bench(&b, &format!("pull_scatter/f{label} {keep}x512"), || {
+                arms.pull_range_batch(&ids, from, to, &mut out);
+                out[0].to_bits()
+            });
+            let mut panel = PullPanel::new();
+            arms.compact_into(&ids, from, &mut panel);
+            let mut dense = vec![0f64; keep];
+            r.bench(&b, &format!("pull_panel/f{label} {keep}x512"), || {
+                arms.pull_range_batch_panel(&panel, from, to, &mut dense);
+                dense[0].to_bits()
+            });
+            // The two layouts must agree bit for bit (spot check; the
+            // test batteries pin it exhaustively).
+            arms.pull_range_batch(&ids, from, to, &mut out);
+            arms.pull_range_batch_panel(&panel, from, to, &mut dense);
+            assert!(
+                out.iter().zip(&dense).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "panel/scatter divergence at fraction {label}"
+            );
+        }
+    }
+
     // The query execution core on the acceptance dataset: 2000×4096
     // Gaussian, k=5, serving-default block order. Three paths answer
     // the same queries:
@@ -226,6 +271,7 @@ fn main() {
         extra.push(("allocs_per_query_ctx_reuse", Json::Num(per(reuse_allocs, LOOPS))));
         extra.push(("allocs_per_query_batch16", Json::Num(per(batch_allocs, 2 * refs.len()))));
         extra.push(("ctx_grow_events", Json::Num(ctx.grow_events() as f64)));
+        extra.push(("ctx_panel_grow_events", Json::Num(ctx.panel_grow_events() as f64)));
     }
 
     // Engines: native vs PJRT artifact (exact 256x512 block).

@@ -10,6 +10,7 @@ use bandit_mips::coordinator::{
 use bandit_mips::data::shard::ShardSpec;
 use bandit_mips::data::synthetic::gaussian_dataset;
 use bandit_mips::jsonlite::Json;
+use bandit_mips::linalg::simd;
 use std::time::Duration;
 
 fn run_load(coord: &Coordinator, queries: usize, q: &[f32]) -> f64 {
@@ -203,6 +204,9 @@ fn main() {
         "serving",
         "BENCH_serving.json",
         &[
+            // Detected ISA, so bench-trajectory diffs across machines
+            // are attributable (mirrors BENCH_hotpath.json).
+            ("simd_isa", Json::Str(simd::active_isa().to_string())),
             ("closed_loop", Json::Arr(load_points)),
             ("sharded", Json::Arr(shard_points)),
             ("hedging", Json::Arr(hedge_points)),

@@ -2,7 +2,7 @@
 //! interface. Zero preprocessing; per-query (ε, δ, K) knobs.
 
 use super::{MipsIndex, MipsParams, MipsResult};
-use crate::bandit::{BoundedMe, BoundedMeConfig, MatrixArms, PullOrder, RewardSource};
+use crate::bandit::{BoundedMe, BoundedMeConfig, Compaction, MatrixArms, PullOrder, RewardSource};
 use crate::data::shard::Shard;
 use crate::exec::shard::ShardPartial;
 use crate::exec::QueryContext;
@@ -21,6 +21,12 @@ pub struct BoundedMeIndex {
     /// than the global `max|v|·max|q|`.
     colmax: Vec<f32>,
     order: PullOrder,
+    /// Survivor-compaction policy for the elimination core (layout
+    /// only: results are bit-identical across policies). Defaults to
+    /// the serving policy — compact once the survivor fraction drops
+    /// to [`Compaction::DEFAULT_FRACTION`] — unless
+    /// `RUST_PALLAS_FORCE_NO_COMPACT` pins the scattered layout.
+    compaction: Compaction,
 }
 
 impl BoundedMeIndex {
@@ -34,7 +40,15 @@ impl BoundedMeIndex {
     /// block-shuffled order is the cache-friendly serving default).
     pub fn with_order(data: Matrix, order: PullOrder) -> Self {
         let colmax = column_maxima(&data);
-        Self { data, colmax, order }
+        Self { data, colmax, order, compaction: Compaction::default() }
+    }
+
+    /// Override the survivor-compaction policy (see [`Compaction`]);
+    /// panics here — at index construction — on an out-of-range
+    /// fraction, not on the first query.
+    pub fn with_compaction(mut self, compaction: Compaction) -> Self {
+        self.compaction = compaction.validated();
+        self
     }
 
     /// The dataset's largest |coordinate| (coarse reward-range input).
@@ -133,7 +147,9 @@ impl MipsIndex for BoundedMeIndex {
 
     /// The zero-allocation hot path: pull order and gathered query live
     /// in `ctx.pull` (rebuilt only when `(order, dim, seed)` changes, so
-    /// a batch with one seed shares one permutation), survivor state in
+    /// a batch with one seed shares one permutation), survivor state —
+    /// including the survivor-compacted pull panel the elimination core
+    /// switches to per the index's [`Compaction`] policy — in
     /// `ctx.bandit`.
     fn query_with(&self, q: &[f32], params: &MipsParams, ctx: &mut QueryContext) -> MipsResult {
         let bound = self.reward_bound(q);
@@ -152,7 +168,8 @@ impl MipsIndex for BoundedMeIndex {
             k: params.k.max(1),
             epsilon: eff_epsilon.max(f64::MIN_POSITIVE),
             delta: params.delta.clamp(f64::MIN_POSITIVE, 1.0 - 1e-12),
-        });
+        })
+        .with_compaction(self.compaction);
         let out = algo.run_in(&arms, bandit);
         MipsResult {
             indices: out.arms,
@@ -246,6 +263,15 @@ mod tests {
     fn zero_preprocessing() {
         let idx = BoundedMeIndex::new(gaussian(10, 10, 8));
         assert_eq!(idx.preprocessing_seconds(), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_compaction_fraction_fails_at_construction() {
+        // The invalid policy must panic in the builder, not on the
+        // first query.
+        let _ = BoundedMeIndex::new(gaussian(10, 10, 8))
+            .with_compaction(Compaction::AtFraction(2.0));
     }
 
     #[test]

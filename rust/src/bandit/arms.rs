@@ -19,8 +19,26 @@
 //! a whole batch) instead of allocating per query — see
 //! [`crate::exec::QueryContext`]. [`MatrixArms::new`] still owns a
 //! private scratch for one-shot callers.
+//!
+//! # Survivor compaction
+//!
+//! Every BOUNDEDME elimination round pulls the *same* positional range
+//! from every surviving arm, so once elimination has thinned the
+//! survivor set the scattered pull walks most of the dataset's cache
+//! lines to touch a few floats per line. [`PullPanel`] is the fix: a
+//! dense scratch panel holding the survivors' *not-yet-pulled* rewards
+//! in pull order, one contiguous row per survivor, built by one batched
+//! gather ([`RewardSource::compact_into`]) and re-compacted by dense
+//! copies as elimination proceeds ([`PullPanel::recompact`], ping-pong
+//! buffers — no re-gathering). Panel pulls
+//! ([`RewardSource::pull_range_batch_panel`]) replicate the scattered
+//! paths' per-coordinate f64 accumulation order **bit for bit**, so
+//! elimination decisions never depend on the layout; the panel scan
+//! also issues [`crate::linalg::simd::prefetch_read`] one row ahead.
+//! The panel lives in [`crate::bandit::BanditScratch`], so steady-state
+//! serving stays allocation-free.
 
-use crate::linalg::{dot, partial_dot_rows_chunked, Matrix, Rng};
+use crate::linalg::{dot, gather_idx, partial_dot_rows_chunked, simd, Matrix, Rng};
 
 /// How [`MatrixArms`] orders coordinates for without-replacement pulls.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -68,6 +86,37 @@ pub trait RewardSource {
             *o = self.pull_range(arm, from, to);
         }
     }
+    /// True when the environment can stage remaining rewards into a
+    /// [`PullPanel`] (see [`RewardSource::compact_into`]). Dense f32
+    /// matrix environments say yes; list environments (whose rewards
+    /// are f64 and already contiguous) keep the default `false`, and
+    /// BOUNDEDME then never compacts them.
+    fn supports_compaction(&self) -> bool {
+        false
+    }
+
+    /// Stage the not-yet-pulled rewards of `arms` — pull positions
+    /// `[from, list_len())` — into `panel`, one dense row per arm in the
+    /// given order (one batched gather). Only called when
+    /// [`RewardSource::supports_compaction`] is true.
+    fn compact_into(&self, arms: &[usize], from: usize, panel: &mut PullPanel) {
+        let _ = (arms, from, panel);
+        unreachable!("compact_into called on a non-compacting environment");
+    }
+
+    /// Batched pull served from a compacted panel:
+    /// `out[i]` = sum of panel row `i`'s rewards at pull positions
+    /// `[from, to)`. MUST be bit-identical to
+    /// [`RewardSource::pull_range_batch`] over the arms the panel was
+    /// compacted from (same per-coordinate f64 accumulation order) —
+    /// the elimination outcome of a run must not depend on the pull
+    /// layout. Only called when [`RewardSource::supports_compaction`]
+    /// is true and a panel covering `[from, to)` exists.
+    fn pull_range_batch_panel(&self, panel: &PullPanel, from: usize, to: usize, out: &mut [f64]) {
+        let _ = (panel, from, to, out);
+        unreachable!("pull_range_batch_panel called on a non-compacting environment");
+    }
+
     /// One i.i.d. *with-replacement* sample from arm `arm`'s list (what a
     /// classic bandit algorithm would observe).
     fn pull_iid(&self, arm: usize, rng: &mut Rng) -> f64;
@@ -201,7 +250,13 @@ impl PullScratch {
         self.qp.clear();
         match self.kind {
             OrderKind::Identity => self.qp.extend_from_slice(q),
-            OrderKind::Gather => self.qp.extend(self.perm.iter().map(|&j| q[j as usize])),
+            OrderKind::Gather => {
+                // Through the dispatched gather kernel (hardware
+                // vgatherdps on x86): pure data movement, identical
+                // values on every ISA.
+                self.qp.resize(self.dim, 0.0);
+                gather_idx(q, &self.perm, &mut self.qp);
+            }
             OrderKind::Runs => {
                 for r in 0..self.starts.len() {
                     let lo = self.starts[r] as usize;
@@ -238,6 +293,185 @@ impl PullScratch {
                 self.starts[r] as usize + (pos - self.offsets[r] as usize)
             }
         }
+    }
+
+    /// The dense segments of the run table covering pull positions
+    /// `[from, to)`: yields `(pos, stop, coord)` meaning pull positions
+    /// `[pos, stop)` read coordinates `[coord, coord + (stop − pos))`.
+    /// This is the ONE run-walk every Runs consumer iterates — per-run
+    /// pulls, batched pulls, panel compaction, and panel scans — so the
+    /// partition-point seeding and ragged-tail bookkeeping live in
+    /// exactly one place (a divergence here would silently break the
+    /// panel/scatter bit-identity contract). Only meaningful for the
+    /// `Runs` order kind.
+    fn run_segments(&self, from: usize, to: usize) -> RunSegments<'_> {
+        debug_assert_eq!(self.kind, OrderKind::Runs);
+        let r = if from < to {
+            // Last run whose first pull position is ≤ from.
+            self.offsets.partition_point(|&o| (o as usize) <= from) - 1
+        } else {
+            0 // never dereferenced: the iterator is immediately empty
+        };
+        RunSegments { starts: &self.starts, offsets: &self.offsets, pos: from, to, r }
+    }
+}
+
+/// Iterator behind [`PullScratch::run_segments`].
+struct RunSegments<'a> {
+    starts: &'a [u32],
+    offsets: &'a [u32],
+    pos: usize,
+    to: usize,
+    r: usize,
+}
+
+impl Iterator for RunSegments<'_> {
+    /// `(pos, stop, coord)`: pull positions `[pos, stop)` ↔ coordinates
+    /// `[coord, coord + (stop − pos))`.
+    type Item = (usize, usize, usize);
+
+    fn next(&mut self) -> Option<(usize, usize, usize)> {
+        if self.pos >= self.to {
+            return None;
+        }
+        let run_end = self.offsets[self.r + 1] as usize;
+        let stop = run_end.min(self.to);
+        let coord = self.starts[self.r] as usize + (self.pos - self.offsets[self.r] as usize);
+        let seg = (self.pos, stop, coord);
+        self.pos = stop;
+        self.r += 1;
+        Some(seg)
+    }
+}
+
+/// Dense survivor panel for compacted BOUNDEDME pulls: row `i` holds
+/// one arm's rewards at pull positions `[base, base + stride)` (its
+/// whole not-yet-pulled suffix), contiguously and in pull order.
+///
+/// The panel is double-buffered: [`PullPanel::recompact`] copies the
+/// surviving rows' remaining windows into the spare buffer and swaps,
+/// so re-compaction after an elimination round is pure dense `memcpy`
+/// traffic (no gathers, no aliasing hazards) and both buffers reach a
+/// steady-state capacity after the first few queries — the panel is
+/// part of [`crate::bandit::BanditScratch`]'s zero-allocation contract,
+/// observable via [`PullPanel::grow_events`].
+///
+/// # Memory high-water
+///
+/// Like every scratch arena in the crate, the buffers never shrink:
+/// each long-lived context retains the largest panel it ever staged —
+/// bounded by `survivor-fraction × rows × remaining-coords × 4 B`,
+/// ×2 for the ping-pong pair (on a 2000×4096 f32 dataset at the
+/// default 0.5 threshold, up to ~2×16 MB per context). Deployments
+/// that would rather re-walk the scattered dataset than hold a
+/// resident panel set [`crate::bandit::Compaction::Never`] (or the
+/// `RUST_PALLAS_FORCE_NO_COMPACT` hatch), or lower the fraction to
+/// shrink the bound; per-precision (`f16`/`bf16`) and NUMA-aware
+/// panels are tracked in the ROADMAP.
+pub struct PullPanel {
+    /// Active panel, `rows × stride`, row-major.
+    cur: Vec<f32>,
+    /// Spare buffer for the next ping-pong re-compaction.
+    alt: Vec<f32>,
+    rows: usize,
+    stride: usize,
+    /// Pull position of panel column 0.
+    base: usize,
+    /// Buffer-growth (capacity reallocation) events since construction.
+    grows: u64,
+}
+
+impl Default for PullPanel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PullPanel {
+    /// Empty panel; buffers grow to steady state on first use.
+    pub fn new() -> Self {
+        Self { cur: Vec::new(), alt: Vec::new(), rows: 0, stride: 0, base: 0, grows: 0 }
+    }
+
+    /// Reset to `rows × stride` at pull base `base` and expose the
+    /// staging buffer for an environment's gather
+    /// ([`RewardSource::compact_into`] fills row `i` with arm `i`'s
+    /// rewards at pull positions `base..base + stride`).
+    pub fn begin(&mut self, rows: usize, stride: usize, base: usize) -> &mut [f32] {
+        let caps = (self.cur.capacity(), self.alt.capacity());
+        self.cur.clear();
+        self.cur.resize(rows * stride, 0.0);
+        self.rows = rows;
+        self.stride = stride;
+        self.base = base;
+        if (self.cur.capacity(), self.alt.capacity()) != caps {
+            self.grows += 1;
+        }
+        &mut self.cur
+    }
+
+    /// Drop eliminated rows and the freshly pulled prefix: new row `i`
+    /// is old row `slots[i]`'s window from pull position `new_base` on.
+    /// Dense copies into the spare buffer, then swap.
+    pub fn recompact(&mut self, slots: &[usize], new_base: usize) {
+        debug_assert!(new_base >= self.base);
+        let delta = new_base - self.base;
+        debug_assert!(delta <= self.stride);
+        let ns = self.stride - delta;
+        let caps = (self.cur.capacity(), self.alt.capacity());
+        self.alt.clear();
+        self.alt.resize(slots.len() * ns, 0.0);
+        for (i, &slot) in slots.iter().enumerate() {
+            debug_assert!(slot < self.rows);
+            let src = slot * self.stride + delta;
+            self.alt[i * ns..(i + 1) * ns].copy_from_slice(&self.cur[src..src + ns]);
+        }
+        std::mem::swap(&mut self.cur, &mut self.alt);
+        self.rows = slots.len();
+        self.stride = ns;
+        self.base = new_base;
+        if (self.cur.capacity(), self.alt.capacity()) != caps {
+            self.grows += 1;
+        }
+    }
+
+    /// Number of survivor rows currently staged.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Pull position of panel column 0 (pulls must start at or after
+    /// this).
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
+    /// Pull positions covered per row: `[base, base + stride)`.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Row `i`'s rewards at pull positions `[from, to)`.
+    #[inline]
+    pub fn window(&self, i: usize, from: usize, to: usize) -> &[f32] {
+        debug_assert!(self.base <= from && from <= to && to <= self.base + self.stride);
+        let o = i * self.stride;
+        &self.cur[o + (from - self.base)..o + (to - self.base)]
+    }
+
+    /// Pointer to row `i`'s reward at pull position `from` (prefetch
+    /// target for the next row while scanning the current one).
+    #[inline]
+    fn window_ptr(&self, i: usize, from: usize) -> *const f32 {
+        // In-bounds by the same contract as `window`; raw pointer only
+        // because prefetch wants an address, not a borrow.
+        unsafe { self.cur.as_ptr().add(i * self.stride + (from - self.base)) }
+    }
+
+    /// Buffer-growth (reallocation) events since construction. A
+    /// steady-state hot loop holds this constant.
+    pub fn grow_events(&self) -> u64 {
+        self.grows
     }
 }
 
@@ -353,19 +587,10 @@ impl RewardSource for MatrixArms<'_> {
             }
             OrderKind::Runs => {
                 // Dense partial dots run-by-run (vectorizable).
-                let starts = &s.starts;
-                let offsets = &s.offsets;
                 let mut acc = 0f64;
-                let mut pos = from;
-                let mut r = offsets.partition_point(|&o| (o as usize) <= from) - 1;
-                while pos < to {
-                    let run_end = offsets[r + 1] as usize;
-                    let stop = run_end.min(to);
-                    let coord = starts[r] as usize + (pos - offsets[r] as usize);
+                for (pos, stop, coord) in s.run_segments(from, to) {
                     let len = stop - pos;
                     acc += dot(&row[coord..coord + len], &s.qp[pos..stop]) as f64;
-                    pos = stop;
-                    r += 1;
                 }
                 acc
             }
@@ -403,27 +628,114 @@ impl RewardSource for MatrixArms<'_> {
                 // (in the shared staging loop), accumulating per-arm in
                 // f64 in run order — the exact accumulation order of
                 // the per-arm `pull_range`, so sums stay bit-identical.
-                let starts = &s.starts;
-                let offsets = &s.offsets;
                 for o in out.iter_mut() {
                     *o = 0.0;
                 }
-                if from < to {
-                    let mut pos = from;
-                    let mut r = offsets.partition_point(|&o| (o as usize) <= from) - 1;
-                    while pos < to {
-                        let run_end = offsets[r + 1] as usize;
-                        let stop = run_end.min(to);
-                        let coord = starts[r] as usize + (pos - offsets[r] as usize);
+                for (pos, stop, coord) in s.run_segments(from, to) {
+                    let len = stop - pos;
+                    partial_dot_rows_chunked(
+                        arms.iter().map(|&arm| &self.data.row(arm)[coord..coord + len]),
+                        &s.qp[pos..stop],
+                        |i, score| out[i] += score as f64,
+                    );
+                }
+            }
+        }
+    }
+
+    fn supports_compaction(&self) -> bool {
+        true
+    }
+
+    /// One batched gather of every arm's not-yet-pulled coordinates
+    /// into the panel, in pull order: dense per-row copies for
+    /// `Sequential`, run-segment copies for `BlockShuffled`, and the
+    /// dispatched [`gather_idx`] kernel (hardware `vgatherdps` on x86)
+    /// for `Permuted`. Amortized over every subsequent pull of these
+    /// arms, which all become dense streaming scans.
+    fn compact_into(&self, arms: &[usize], from: usize, panel: &mut PullPanel) {
+        let s = self.scratch();
+        let n_list = self.list_len();
+        debug_assert!(from < n_list);
+        let stride = n_list - from;
+        let buf = panel.begin(arms.len(), stride, from);
+        match s.kind {
+            OrderKind::Identity => {
+                for (i, &arm) in arms.iter().enumerate() {
+                    buf[i * stride..(i + 1) * stride]
+                        .copy_from_slice(&self.data.row(arm)[from..]);
+                }
+            }
+            OrderKind::Gather => {
+                let idx = &s.perm[from..];
+                for (i, &arm) in arms.iter().enumerate() {
+                    gather_idx(self.data.row(arm), idx, &mut buf[i * stride..(i + 1) * stride]);
+                }
+            }
+            OrderKind::Runs => {
+                for (i, &arm) in arms.iter().enumerate() {
+                    let row = self.data.row(arm);
+                    let dst = &mut buf[i * stride..(i + 1) * stride];
+                    for (pos, stop, coord) in s.run_segments(from, n_list) {
                         let len = stop - pos;
-                        partial_dot_rows_chunked(
-                            arms.iter().map(|&arm| &self.data.row(arm)[coord..coord + len]),
-                            &s.qp[pos..stop],
-                            |i, score| out[i] += score as f64,
-                        );
-                        pos = stop;
-                        r += 1;
+                        dst[pos - from..pos - from + len]
+                            .copy_from_slice(&row[coord..coord + len]);
                     }
+                }
+            }
+        }
+    }
+
+    /// One pull batch over the compacted panel: per-order, the exact
+    /// f64 accumulation order of the scattered
+    /// [`RewardSource::pull_range_batch`] replayed over dense panel
+    /// rows (`Sequential`/`BlockShuffled`: the shared
+    /// [`partial_dot_rows_chunked`] staging loop over contiguous
+    /// windows; `Permuted`: the 4-wide gather unroll on now-contiguous
+    /// values) — bit-identical sums, streaming memory access, with a
+    /// software prefetch one row ahead.
+    fn pull_range_batch_panel(&self, panel: &PullPanel, from: usize, to: usize, out: &mut [f64]) {
+        debug_assert_eq!(panel.rows(), out.len());
+        debug_assert!(panel.base() <= from && from <= to && to <= self.list_len());
+        let s = self.scratch();
+        let nrows = panel.rows();
+        match s.kind {
+            OrderKind::Identity => {
+                partial_dot_rows_chunked(
+                    (0..nrows).map(|i| {
+                        if i + 1 < nrows {
+                            simd::prefetch_read(panel.window_ptr(i + 1, from));
+                        }
+                        panel.window(i, from, to)
+                    }),
+                    &s.qp[from..to],
+                    |i, score| out[i] = score as f64,
+                );
+            }
+            OrderKind::Gather => {
+                let qw = &s.qp[from..to];
+                for (i, o) in out.iter_mut().enumerate() {
+                    if i + 1 < nrows {
+                        simd::prefetch_read(panel.window_ptr(i + 1, from));
+                    }
+                    *o = gather_order_dot(panel.window(i, from, to), qw);
+                }
+            }
+            OrderKind::Runs => {
+                for o in out.iter_mut() {
+                    *o = 0.0;
+                }
+                for (pos, stop, _) in s.run_segments(from, to) {
+                    partial_dot_rows_chunked(
+                        (0..nrows).map(|i| {
+                            if i + 1 < nrows {
+                                simd::prefetch_read(panel.window_ptr(i + 1, pos));
+                            }
+                            panel.window(i, pos, stop)
+                        }),
+                        &s.qp[pos..stop],
+                        |i, score| out[i] += score as f64,
+                    );
                 }
             }
         }
@@ -438,6 +750,34 @@ impl RewardSource for MatrixArms<'_> {
     fn true_mean(&self, arm: usize) -> f64 {
         self.pull_range(arm, 0, self.list_len()) / self.list_len() as f64
     }
+}
+
+/// Dot over two contiguous slices in the *exact* arithmetic order of
+/// the `Permuted` scattered pull's 4-wide gather-multiply unroll (four
+/// independent f32 lane sums, sequential tail, `((s0+s1)+(s2+s3)+tail)`
+/// widened to f64 once). The panel's `Permuted` pulls go through this
+/// so compacted sums stay bit-identical to scattered ones — and unlike
+/// the scattered loop, the four lanes now read consecutive memory, so
+/// LLVM vectorizes them.
+#[inline]
+fn gather_order_dot(v: &[f32], q: &[f32]) -> f64 {
+    debug_assert_eq!(v.len(), q.len());
+    let n = v.len();
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    let mut j = 0usize;
+    while j + 4 <= n {
+        s0 += v[j] * q[j];
+        s1 += v[j + 1] * q[j + 1];
+        s2 += v[j + 2] * q[j + 2];
+        s3 += v[j + 3] * q[j + 3];
+        j += 4;
+    }
+    let mut tail = 0f32;
+    while j < n {
+        tail += v[j] * q[j];
+        j += 1;
+    }
+    ((s0 + s1) + (s2 + s3) + tail) as f64
 }
 
 /// The paper's adversarial environment (Figure 1): arm `a` has true mean
@@ -725,6 +1065,110 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn panel_pull_is_bit_identical_to_scatter() {
+        // Ragged dim (103) so run tails, chunk remainders, and the
+        // 4-wide gather tail are all exercised; scattered arm order.
+        let mut rng = Rng::new(0x7A11);
+        let m = Matrix::from_fn(21, 103, |_, _| rng.gaussian() as f32);
+        let q: Vec<f32> = rng.gaussian_vec(103);
+        let ids: Vec<usize> = (0..21).rev().step_by(2).collect();
+        for order in [
+            PullOrder::Sequential,
+            PullOrder::Permuted,
+            PullOrder::BlockShuffled(13),
+        ] {
+            let arms = MatrixArms::new(&m, &q, 16.0, order, 9);
+            for base in [0usize, 7, 41, 102] {
+                let mut panel = PullPanel::new();
+                arms.compact_into(&ids, base, &mut panel);
+                assert_eq!(panel.rows(), ids.len());
+                assert_eq!(panel.base(), base);
+                assert_eq!(panel.stride(), 103 - base);
+                for (from, to) in
+                    [(base, 103), (base, base), (base, base + 1), (base + 1, 103)]
+                {
+                    if to > 103 {
+                        continue;
+                    }
+                    let mut scatter = vec![0f64; ids.len()];
+                    arms.pull_range_batch(&ids, from, to, &mut scatter);
+                    let mut dense = vec![0f64; ids.len()];
+                    arms.pull_range_batch_panel(&panel, from, to, &mut dense);
+                    for (i, (a, b)) in scatter.iter().zip(&dense).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "order={order:?} base={base} range=[{from},{to}) row {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panel_recompact_matches_fresh_compaction() {
+        let mut rng = Rng::new(0xF00D);
+        let m = Matrix::from_fn(17, 96, |_, _| rng.gaussian() as f32);
+        let q: Vec<f32> = rng.gaussian_vec(96);
+        for order in [PullOrder::Permuted, PullOrder::BlockShuffled(11)] {
+            let arms = MatrixArms::new(&m, &q, 16.0, order, 4);
+            let ids: Vec<usize> = (0..17).collect();
+            let mut panel = PullPanel::new();
+            arms.compact_into(&ids, 5, &mut panel);
+            // Survive rows {14, 2, 9, 0} (arbitrary order), advance to 23.
+            let slots = vec![14usize, 2, 9, 0];
+            panel.recompact(&slots, 23);
+            let kept: Vec<usize> = slots.iter().map(|&s| ids[s]).collect();
+            let mut fresh = PullPanel::new();
+            arms.compact_into(&kept, 23, &mut fresh);
+            assert_eq!(panel.rows(), fresh.rows());
+            assert_eq!(panel.base(), fresh.base());
+            assert_eq!(panel.stride(), fresh.stride());
+            for i in 0..panel.rows() {
+                let a = panel.window(i, 23, 96);
+                let b = fresh.window(i, 23, 96);
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "order={order:?} row {i}");
+                }
+            }
+            // And pulls off the recompacted panel still match scatter.
+            let mut scatter = vec![0f64; kept.len()];
+            arms.pull_range_batch(&kept, 23, 96, &mut scatter);
+            let mut dense = vec![0f64; kept.len()];
+            arms.pull_range_batch_panel(&panel, 23, 96, &mut dense);
+            for (a, b) in scatter.iter().zip(&dense) {
+                assert_eq!(a.to_bits(), b.to_bits(), "order={order:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn panel_steady_state_is_growth_free() {
+        let mut rng = Rng::new(0x60);
+        let m = Matrix::from_fn(12, 64, |_, _| rng.gaussian() as f32);
+        let q: Vec<f32> = rng.gaussian_vec(64);
+        let arms = MatrixArms::new(&m, &q, 8.0, PullOrder::BlockShuffled(8), 2);
+        let ids: Vec<usize> = (0..12).collect();
+        let mut panel = PullPanel::new();
+        // Two warm passes: the ping-pong swap means both buffers must
+        // reach the high-water capacity before growth stops.
+        for _ in 0..2 {
+            arms.compact_into(&ids, 0, &mut panel);
+            panel.recompact(&[0, 3, 7, 9], 16);
+            panel.recompact(&[1, 2], 40);
+        }
+        let warm = panel.grow_events();
+        for _ in 0..20 {
+            arms.compact_into(&ids, 0, &mut panel);
+            panel.recompact(&[0, 3, 7, 9], 16);
+            panel.recompact(&[1, 2], 40);
+        }
+        assert_eq!(panel.grow_events(), warm, "steady-state panel reallocated");
     }
 
     #[test]

@@ -11,10 +11,114 @@
 //! until `K` arms remain. Theorem 1: the returned set is ε-optimal with
 //! probability ≥ 1 − δ. Corollary 2: per-arm pulls ≤ `N`, so BOUNDEDME
 //! is never asymptotically worse than exhaustive search.
+//!
+//! # Survivor-compacting pull layout
+//!
+//! The pull phase has two physical layouts. The *scattered* layout
+//! reads each survivor's coordinate window straight out of the
+//! row-major dataset — fine while most arms survive (the scan still
+//! streams), cache-hostile once elimination thins the set. The
+//! *panel* layout ([`crate::bandit::PullPanel`]) kicks in per the
+//! [`Compaction`] policy: the survivors' not-yet-pulled rewards are
+//! compacted into a dense scratch panel (one batched gather, then
+//! dense ping-pong copies each round), so every later pull batch is a
+//! streaming scan of exactly the bytes it needs. Both layouts produce
+//! **bit-identical** pull sums (tested), so elimination order, output
+//! arms, and flop accounting never depend on the layout. The serving
+//! default compacts once the survivor fraction drops to
+//! [`Compaction::DEFAULT_FRACTION`]; [`FORCE_NO_COMPACT_ENV`] pins the
+//! scattered layout process-wide (the CI leg that keeps it tested).
 
-use super::arms::RewardSource;
+use super::arms::{PullPanel, RewardSource};
 use super::bounds::m_bounded;
 use super::BanditResult;
+use std::sync::OnceLock;
+
+/// Environment variable pinning the scattered pull layout (debug/CI
+/// escape hatch, mirroring `RUST_PALLAS_FORCE_SCALAR`): any value other
+/// than empty or `"0"` makes [`Compaction::default`] resolve to
+/// [`Compaction::Never`]. Read once, at first use.
+pub const FORCE_NO_COMPACT_ENV: &str = "RUST_PALLAS_FORCE_NO_COMPACT";
+
+/// True when [`FORCE_NO_COMPACT_ENV`] requests the scattered layout.
+pub fn force_no_compact_requested() -> bool {
+    static FORCED: OnceLock<bool> = OnceLock::new();
+    *FORCED.get_or_init(|| match std::env::var(FORCE_NO_COMPACT_ENV) {
+        Ok(v) => !(v.is_empty() || v == "0"),
+        Err(_) => false,
+    })
+}
+
+/// When BOUNDEDME compacts the survivors' remaining coordinates into
+/// the scratch panel. Pure layout policy: every choice produces
+/// bit-identical [`BoundedMe::run`] output (the `prop_invariants`
+/// battery pins this), only the memory traffic differs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Compaction {
+    /// Never compact — every pull uses the scattered dataset layout.
+    Never,
+    /// Compact once the survivor count drops to the given fraction of
+    /// `n` (and every round after) — skip while the survivor set is
+    /// dense enough that scattered reads still stream well.
+    AtFraction(f64),
+    /// Compact from the first round regardless of fraction (benches /
+    /// tests; pays the full-set gather up front).
+    Always,
+}
+
+impl Default for Compaction {
+    /// The serving policy: [`Compaction::AtFraction`] of
+    /// [`Compaction::DEFAULT_FRACTION`], unless [`FORCE_NO_COMPACT_ENV`]
+    /// pins [`Compaction::Never`].
+    fn default() -> Self {
+        Self::policy(force_no_compact_requested())
+    }
+}
+
+impl Compaction {
+    /// Default survivor fraction at which compaction starts: below
+    /// half, the panel's dense rows beat re-walking the scattered
+    /// dataset every round (see the `pull_scatter` vs `pull_panel`
+    /// rows of the `hotpath` bench).
+    pub const DEFAULT_FRACTION: f64 = 0.5;
+
+    /// Policy selection, exposed for tests: `force_no_compact` bypasses
+    /// the heuristic exactly like the env var does (the env var is
+    /// consulted by [`Compaction::default`], not here, so tests can
+    /// exercise both branches in-process).
+    pub fn policy(force_no_compact: bool) -> Self {
+        if force_no_compact {
+            Self::Never
+        } else {
+            Self::AtFraction(Self::DEFAULT_FRACTION)
+        }
+    }
+
+    /// Panic on out-of-range fractions. Every builder accepting a
+    /// policy funnels through this, so a misconfigured policy fails at
+    /// construction time — never on the first serving request.
+    pub fn validated(self) -> Self {
+        if let Self::AtFraction(f) = self {
+            assert!((0.0..=1.0).contains(&f), "compaction fraction must be in [0,1]");
+        }
+        self
+    }
+
+    /// Whether a run with this policy may compact at all.
+    fn enabled(self) -> bool {
+        !matches!(self, Self::Never)
+    }
+
+    /// Whether to *start* compacting at `survivors` of `n` arms (once
+    /// started, a run keeps its panel compacted every round).
+    fn fires(self, survivors: usize, n: usize) -> bool {
+        match self {
+            Self::Never => false,
+            Self::Always => true,
+            Self::AtFraction(f) => (survivors as f64) <= f * (n as f64),
+        }
+    }
+}
 
 /// Parameters of a BOUNDEDME run.
 #[derive(Clone, Copy, Debug)]
@@ -47,6 +151,8 @@ pub struct RoundTrace {
     pub epsilon_l: f64,
     /// Round confidence budget `δ_l`.
     pub delta_l: f64,
+    /// Whether this round's pulls ran on the compacted survivor panel.
+    pub compacted: bool,
 }
 
 /// Full output of [`BoundedMe::run`]: the [`BanditResult`] plus the
@@ -68,16 +174,27 @@ pub struct BoundedMeOutput {
 #[derive(Default)]
 pub struct BanditScratch {
     survivors: Vec<ArmState>,
-    /// Survivor ids staged for [`RewardSource::pull_range_batch`].
+    /// Survivor ids staged for [`RewardSource::pull_range_batch`] (and,
+    /// between pulls, panel slots staged for [`PullPanel::recompact`]).
     pull_ids: Vec<usize>,
     /// Per-survivor range sums returned by the batched pull.
     pull_sums: Vec<f64>,
+    /// Survivor-compacted pull panel (see the module docs); sized by
+    /// the first compacting queries, then reused allocation-free.
+    panel: PullPanel,
 }
 
 impl BanditScratch {
     /// Empty arena; the survivor buffer grows to `n` on first use.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Panel buffer-growth (reallocation) events since construction —
+    /// constant in steady state, like
+    /// [`crate::bandit::PullScratch::grow_events`].
+    pub fn panel_grow_events(&self) -> u64 {
+        self.panel.grow_events()
     }
 }
 
@@ -86,6 +203,7 @@ impl BanditScratch {
 #[derive(Clone, Copy, Debug)]
 pub struct BoundedMe {
     cfg: BoundedMeConfig,
+    compaction: Compaction,
 }
 
 /// Internal survivor record.
@@ -94,6 +212,9 @@ struct ArmState {
     id: u32,
     sum: f64,
     pulls: u32,
+    /// Panel row holding this arm's remaining rewards, valid only while
+    /// the run's panel is active (rewritten at every compaction).
+    slot: u32,
 }
 
 impl ArmState {
@@ -108,12 +229,20 @@ impl ArmState {
 }
 
 impl BoundedMe {
-    /// New instance; panics on invalid config.
+    /// New instance with the default [`Compaction`] policy; panics on
+    /// invalid config.
     pub fn new(cfg: BoundedMeConfig) -> Self {
         assert!(cfg.k >= 1, "K must be ≥ 1");
         assert!(cfg.epsilon > 0.0, "ε must be > 0");
         assert!(cfg.delta > 0.0 && cfg.delta < 1.0, "δ must be in (0,1)");
-        Self { cfg }
+        Self { cfg, compaction: Compaction::default() }
+    }
+
+    /// Override the survivor-compaction policy (layout only — results
+    /// are bit-identical across policies).
+    pub fn with_compaction(mut self, compaction: Compaction) -> Self {
+        self.compaction = compaction.validated();
+        self
     }
 
     /// Run Algorithm 1 against the environment, collecting the per-round
@@ -144,20 +273,23 @@ impl BoundedMe {
         scratch: &mut BanditScratch,
         mut trace: Option<&mut Vec<RoundTrace>>,
     ) -> BanditResult {
-        let BanditScratch { survivors, pull_ids, pull_sums } = scratch;
+        let BanditScratch { survivors, pull_ids, pull_sums, panel } = scratch;
         let n = env.n_arms();
         let n_list = env.list_len();
         let k = self.cfg.k;
         let range = env.range_width();
 
         survivors.clear();
-        survivors.extend((0..n).map(|i| ArmState { id: i as u32, sum: 0.0, pulls: 0 }));
+        survivors
+            .extend((0..n).map(|i| ArmState { id: i as u32, sum: 0.0, pulls: 0, slot: 0 }));
         let mut total_pulls: u64 = 0;
 
         let mut eps_l = self.cfg.epsilon / 4.0;
         let mut delta_l = self.cfg.delta / 2.0;
         let mut t_prev = 0usize;
         let mut round: u32 = 0;
+        let compactable = self.compaction.enabled() && env.supports_compaction();
+        let mut panel_on = false;
 
         while survivors.len() > k {
             round += 1;
@@ -177,6 +309,29 @@ impl BoundedMe {
                 m_bounded(eps_l / 2.0, delta_arm, n_list, range).max(t_prev)
             };
 
+            // Survivor compaction: once the policy fires (and on every
+            // round after — fractions only shrink), stage the survivors'
+            // not-yet-pulled rewards [t_prev, N) as dense panel rows in
+            // survivor order. First activation is one batched gather
+            // from the environment; later rounds are dense ping-pong
+            // copies that drop eliminated rows and the pulled prefix.
+            // Panel sums are bit-identical to scattered ones, so this is
+            // purely a memory-layout decision.
+            if compactable && t_prev < n_list && (panel_on || self.compaction.fires(s, n)) {
+                pull_ids.clear();
+                if panel_on {
+                    pull_ids.extend(survivors.iter().map(|a| a.slot as usize));
+                    panel.recompact(pull_ids, t_prev);
+                } else {
+                    pull_ids.extend(survivors.iter().map(|a| a.id as usize));
+                    env.compact_into(pull_ids, t_prev, panel);
+                    panel_on = true;
+                }
+                for (i, a) in survivors.iter_mut().enumerate() {
+                    a.slot = i as u32;
+                }
+            }
+
             if let Some(trace) = trace.as_mut() {
                 trace.push(RoundTrace {
                     round,
@@ -184,6 +339,7 @@ impl BoundedMe {
                     t_l,
                     epsilon_l: eps_l,
                     delta_l,
+                    compacted: panel_on,
                 });
             }
 
@@ -192,17 +348,27 @@ impl BoundedMe {
             // of them up to the same t_l), so the whole round is one
             // batched pull over the uniform range [t_prev, t_l) — dense
             // environments run it as blocked SIMD kernels across the
-            // survivor set.
+            // survivor set, either over scattered dataset rows or over
+            // the compacted panel (panel row i ↔ survivors[i], by the
+            // compaction above).
             let delta_pulls = t_l - t_prev;
             if delta_pulls > 0 {
-                pull_ids.clear();
-                pull_ids.extend(survivors.iter().map(|a| {
-                    debug_assert_eq!(a.pulls as usize, t_prev);
-                    a.id as usize
-                }));
                 pull_sums.clear();
-                pull_sums.resize(pull_ids.len(), 0.0);
-                env.pull_range_batch(pull_ids, t_prev, t_l, pull_sums);
+                pull_sums.resize(s, 0.0);
+                if panel_on {
+                    debug_assert!(survivors
+                        .iter()
+                        .enumerate()
+                        .all(|(i, a)| a.pulls as usize == t_prev && a.slot as usize == i));
+                    env.pull_range_batch_panel(panel, t_prev, t_l, pull_sums);
+                } else {
+                    pull_ids.clear();
+                    pull_ids.extend(survivors.iter().map(|a| {
+                        debug_assert_eq!(a.pulls as usize, t_prev);
+                        a.id as usize
+                    }));
+                    env.pull_range_batch(pull_ids, t_prev, t_l, pull_sums);
+                }
                 for (a, &sum) in survivors.iter_mut().zip(pull_sums.iter()) {
                     a.sum += sum;
                     a.pulls = t_l as u32;
@@ -240,8 +406,8 @@ impl BoundedMe {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bandit::arms::{AdversarialArms, ExplicitArms};
-    use crate::linalg::Rng;
+    use crate::bandit::arms::{AdversarialArms, ExplicitArms, MatrixArms, PullOrder};
+    use crate::linalg::{Matrix, Rng};
 
     fn constant_arms(means: &[f64], n_list: usize) -> ExplicitArms {
         ExplicitArms::new(
@@ -391,6 +557,103 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn compaction_policy_never_changes_output() {
+        // The layout invariant: every compaction policy yields the same
+        // arms, the same means bit-for-bit, the same pull/round counts.
+        let mut rng = Rng::new(0xC0DE);
+        let m = Matrix::from_fn(60, 230, |_, _| rng.gaussian() as f32);
+        let q: Vec<f32> = rng.gaussian_vec(230);
+        for order in [
+            PullOrder::Sequential,
+            PullOrder::Permuted,
+            PullOrder::BlockShuffled(17),
+        ] {
+            let env = MatrixArms::new(&m, &q, 16.0, order, 3);
+            let algo = BoundedMe::new(BoundedMeConfig { k: 4, epsilon: 0.08, delta: 0.1 });
+            let base = algo.with_compaction(Compaction::Never).run(&env);
+            for policy in [
+                Compaction::Always,
+                Compaction::AtFraction(0.05),
+                Compaction::AtFraction(0.5),
+                Compaction::AtFraction(1.0),
+            ] {
+                let got = algo.with_compaction(policy).run(&env);
+                assert_eq!(got.result.arms, base.result.arms, "{order:?} {policy:?}");
+                assert_eq!(
+                    got.result.total_pulls, base.result.total_pulls,
+                    "{order:?} {policy:?}"
+                );
+                assert_eq!(got.result.rounds, base.result.rounds, "{order:?} {policy:?}");
+                for (a, b) in got.result.means.iter().zip(&base.result.means) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{order:?} {policy:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compaction_trace_flags_match_policy() {
+        let mut rng = Rng::new(0x9A);
+        let m = Matrix::from_fn(48, 180, |_, _| rng.gaussian() as f32);
+        let q: Vec<f32> = rng.gaussian_vec(180);
+        let env = MatrixArms::new(&m, &q, 16.0, PullOrder::BlockShuffled(16), 1);
+        let algo = BoundedMe::new(BoundedMeConfig { k: 2, epsilon: 0.1, delta: 0.1 });
+        let never = algo.with_compaction(Compaction::Never).run(&env);
+        assert!(never.trace.iter().all(|t| !t.compacted));
+        let always = algo.with_compaction(Compaction::Always).run(&env);
+        assert!(always.trace.iter().all(|t| t.compacted));
+        // AtFraction: scattered while dense, compacted from the first
+        // round at or below the threshold on.
+        let half = algo.with_compaction(Compaction::AtFraction(0.5)).run(&env);
+        let mut seen_compact = false;
+        for t in &half.trace {
+            if seen_compact {
+                assert!(t.compacted, "panel must stay on once activated");
+            } else if t.compacted {
+                assert!(t.survivors as f64 <= 0.5 * 48.0, "compacted too early");
+                seen_compact = true;
+            }
+        }
+    }
+
+    #[test]
+    fn non_compacting_env_ignores_policy() {
+        // ExplicitArms reports supports_compaction() == false, so even
+        // Always must run (identically) on the scattered path.
+        let mut rng = Rng::new(31);
+        let lists: Vec<Vec<f64>> =
+            (0..30).map(|_| (0..40).map(|_| rng.next_f64()).collect()).collect();
+        let env = ExplicitArms::new(lists).with_range(0.0, 1.0);
+        let algo = BoundedMe::new(BoundedMeConfig { k: 2, epsilon: 0.05, delta: 0.1 });
+        let base = algo.with_compaction(Compaction::Never).run(&env);
+        let forced = algo.with_compaction(Compaction::Always).run(&env);
+        assert_eq!(base.result.arms, forced.result.arms);
+        assert_eq!(base.result.total_pulls, forced.result.total_pulls);
+        assert!(forced.trace.iter().all(|t| !t.compacted));
+    }
+
+    #[test]
+    fn compaction_policy_selection() {
+        assert_eq!(Compaction::policy(true), Compaction::Never);
+        assert_eq!(
+            Compaction::policy(false),
+            Compaction::AtFraction(Compaction::DEFAULT_FRACTION)
+        );
+        // When the harness actually set the env var (the CI scatter
+        // leg), the process-wide default must have honored it.
+        if force_no_compact_requested() {
+            assert_eq!(Compaction::default(), Compaction::Never);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_compaction_fraction() {
+        let algo = BoundedMe::new(BoundedMeConfig::default());
+        let _ = algo.with_compaction(Compaction::AtFraction(1.5));
     }
 
     #[test]

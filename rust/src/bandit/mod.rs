@@ -14,8 +14,8 @@
 //! | item | file |
 //! |---|---|
 //! | concentration bounds (`m(u)`, Hoeffding, Serfling) | [`bounds`] |
-//! | [`RewardSource`] trait + matrix / adversarial / explicit arms | [`arms`] |
-//! | BOUNDEDME (Algorithm 1) | [`bounded_me`] |
+//! | [`RewardSource`] trait + matrix / adversarial / explicit arms, pull-order scratch + survivor-compacted [`PullPanel`] | [`arms`] |
+//! | BOUNDEDME (Algorithm 1) + [`Compaction`] pull-layout policy | [`bounded_me`] |
 //! | classic Median Elimination (Even-Dar et al. 2002) | [`median_elim`] |
 //! | Successive Elimination | [`successive_elim`] |
 //! | LUCB (Kalyanakrishnan et al. 2012) | [`lucb`] |
@@ -30,8 +30,13 @@ pub mod lucb;
 pub mod median_elim;
 pub mod successive_elim;
 
-pub use arms::{AdversarialArms, ExplicitArms, MatrixArms, PullOrder, PullScratch, RewardSource};
-pub use bounded_me::{BanditScratch, BoundedMe, BoundedMeConfig};
+pub use arms::{
+    AdversarialArms, ExplicitArms, MatrixArms, PullOrder, PullPanel, PullScratch, RewardSource,
+};
+pub use bounded_me::{
+    force_no_compact_requested, BanditScratch, BoundedMe, BoundedMeConfig, Compaction,
+    FORCE_NO_COMPACT_ENV,
+};
 pub use bounds::{hoeffding_sample_size, m_bounded, serfling_radius};
 
 /// Outcome of a fixed-confidence bandit run.

@@ -16,7 +16,10 @@
 //!   order keyed on `(order, dim, seed)` — every query of a batch shares
 //!   one block-shuffled permutation and only re-gathers its own values;
 //! * [`crate::bandit::BanditScratch`] reuses the `O(n)` survivor arena
-//!   of BOUNDEDME across runs;
+//!   of BOUNDEDME across runs — including the survivor-compacted
+//!   [`crate::bandit::PullPanel`] (ping-pong buffers sized by the first
+//!   compacting queries, then reused allocation-free; see the
+//!   [`crate::bandit::Compaction`] policy);
 //! * [`RankScratch`] holds the exact-scoring slab the engines / naive
 //!   index write into;
 //! * [`crate::algos::MipsIndex::query_with`] /
@@ -89,9 +92,19 @@ impl QueryContext {
 
     /// Buffer-growth (reallocation) events observed by the pull scratch
     /// since construction — constant in steady state; the `hotpath`
-    /// bench asserts on it.
+    /// bench asserts on it. (Pull-order buffers only; the survivor
+    /// panel is tracked separately by
+    /// [`QueryContext::panel_grow_events`], since its high-water size
+    /// depends on each query's elimination schedule.)
     pub fn grow_events(&self) -> u64 {
         self.pull.grow_events()
+    }
+
+    /// Survivor-panel buffer-growth events (see
+    /// [`crate::bandit::BanditScratch::panel_grow_events`]) — reaches a
+    /// high-water steady state after the first few compacting queries.
+    pub fn panel_grow_events(&self) -> u64 {
+        self.bandit.panel_grow_events()
     }
 }
 

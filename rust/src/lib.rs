@@ -32,8 +32,8 @@
 //!
 //! | module | contents |
 //! |---|---|
-//! | [`linalg`] | dense matrix/vector substrate (incl. zero-copy row views), RNG, PCA, top-K utilities; [`linalg::simd`] runtime-dispatched SIMD kernels (AVX2/NEON/scalar) |
-//! | [`bandit`] | MAB-BP framework, BOUNDEDME, bandit baselines, pull-order scratch |
+//! | [`linalg`] | dense matrix/vector substrate (incl. zero-copy row views), RNG, PCA, top-K utilities; [`linalg::simd`] runtime-dispatched SIMD kernels (AVX-512/AVX2/NEON/scalar incl. hardware gather + software prefetch) |
+//! | [`bandit`] | MAB-BP framework, BOUNDEDME with the survivor-compacting panel layout ([`bandit::PullPanel`] + [`bandit::Compaction`] policy), bandit baselines, pull-order scratch |
 //! | [`algos`]  | MIPS indexes: naive, BoundedME, Greedy-, LSH-, PCA-, RPT-MIPS — with shard-aware batch entry points |
 //! | [`exec`]   | zero-allocation execution core: `QueryContext` arena + `QueryPlan`; [`exec::shard`] fan-out/merge layer |
 //! | [`data`]   | dataset substrate: synthetic, adversarial, ALS matrix factorization; [`data::shard`] row sharding |
@@ -47,16 +47,35 @@
 //!
 //! Every flop — exact scans, BOUNDEDME pull batches, sharded confirm
 //! rescores — funnels through [`linalg::dot`] and its siblings, which
-//! dispatch once per process to a [`linalg::simd`] kernel table (AVX2
-//! on x86-64 with `avx2+fma` detected, NEON on aarch64, portable
-//! scalar otherwise; `RUST_PALLAS_FORCE_SCALAR=1` pins scalar). Two
-//! *blocked* kernels feed the batch paths: [`linalg::dot_rows`] scores
-//! several contiguous dataset rows per query register load (the Naive
-//! fused scan, engine batch scoring, confirm rescore) and
-//! [`linalg::partial_dot_rows`] runs one pull batch across a scattered
-//! BOUNDEDME survivor set. Blocked results are bit-identical per row
-//! to `dot`, so fused and per-query paths agree exactly; see
-//! [`linalg::simd`] for the cross-ISA tolerance contract.
+//! dispatch once per process to a [`linalg::simd`] kernel table
+//! (AVX-512 on x86-64 with `avx512f` detected, else AVX2 with
+//! `avx2+fma`, NEON on aarch64, portable scalar otherwise;
+//! `RUST_PALLAS_FORCE_SCALAR=1` pins scalar). Two *blocked* kernels
+//! feed the batch paths: [`linalg::dot_rows`] scores several contiguous
+//! dataset rows per query register load (the Naive fused scan, engine
+//! batch scoring, confirm rescore; 8 rows per pass on AVX-512) and
+//! [`linalg::partial_dot_rows`] runs one pull batch across a BOUNDEDME
+//! survivor set. [`linalg::gather_idx`] (hardware `vgatherdps` on x86)
+//! stages query gathers and panel compaction. Blocked results are
+//! bit-identical per row to `dot`, so fused and per-query paths agree
+//! exactly; see [`linalg::simd`] for the cross-ISA tolerance contract.
+//!
+//! ## Survivor-compacting elimination core
+//!
+//! BOUNDEDME pulls the same positional range from every surviving arm
+//! each round, so once elimination thins the survivor set the
+//! scattered row-major reads waste most of each cache line. Per the
+//! [`bandit::Compaction`] policy (default: at survivor fraction ≤ 1/2;
+//! `RUST_PALLAS_FORCE_NO_COMPACT=1` pins the scattered layout), the
+//! elimination core compacts the survivors' not-yet-pulled coordinates
+//! into a dense [`bandit::PullPanel`] owned by the query context — one
+//! batched gather, then dense ping-pong re-compaction per round — so
+//! every later pull batch is a streaming scan with software prefetch.
+//! Panel pulls are **bit-identical** to scattered ones (same f64
+//! accumulation order per arm), so results, flop accounting, and every
+//! fused/sharded/hedged byte-identity battery are layout-independent;
+//! the `hotpath` bench's `pull_scatter` vs `pull_panel` rows track the
+//! win at survivor fractions 1.0 / 0.25 / 0.05.
 //!
 //! ## Sharded execution
 //!

@@ -8,10 +8,11 @@
 //! ([`stats`]).
 //!
 //! The free functions below ([`dot`], [`partial_dot`], [`axpy`],
-//! [`dist_sq`], [`norm_sq`], [`dot_rows`], [`partial_dot_rows`]) are
-//! the single compute funnel of the whole system: every exact scan,
-//! pull batch, and confirm rescore goes through them, so the ISA
-//! selected by [`simd`] lifts every layer at once. Set
+//! [`dist_sq`], [`norm_sq`], [`dot_rows`], [`partial_dot_rows`],
+//! [`gather_idx`]) are the single compute funnel of the whole system:
+//! every exact scan, pull batch, confirm rescore, and panel/query
+//! gather goes through them, so the ISA selected by [`simd`] (AVX-512 /
+//! AVX2 / NEON / scalar) lifts every layer at once. Set
 //! `RUST_PALLAS_FORCE_SCALAR=1` to pin the portable scalar kernels
 //! (see [`simd`] for the dispatch and tolerance contract).
 
@@ -116,6 +117,21 @@ where
             sink(base + t, s);
         }
     }
+}
+
+/// Index gather: `out[t] = src[idx[t]]` with `idx.len() == out.len()`
+/// and every index within `src`.
+///
+/// The staging primitive behind the per-query coordinate gather
+/// ([`crate::bandit::PullScratch::gather`]) and BOUNDEDME's survivor
+/// panel compaction ([`crate::bandit::PullPanel`]). Pure data movement:
+/// results are identical on every ISA (x86 backends use the hardware
+/// `vgatherdps`), so unlike the dot kernels it carries no
+/// float-reassociation caveats.
+#[inline]
+pub fn gather_idx(src: &[f32], idx: &[u32], out: &mut [f32]) {
+    debug_assert_eq!(idx.len(), out.len());
+    (simd::kernels().gather)(src, idx, out)
 }
 
 /// Squared Euclidean norm.
@@ -252,6 +268,19 @@ mod tests {
                 assert_eq!(i, r, "rows={rows}: order");
                 let single = dot(&block[r * dim..(r + 1) * dim], &q);
                 assert_eq!(s.to_bits(), single.to_bits(), "rows={rows} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_idx_matches_index_loop() {
+        let src: Vec<f32> = (0..50).map(|i| (i as f32 * 0.7).sin()).collect();
+        for n in [0usize, 1, 7, 8, 9, 24] {
+            let idx: Vec<u32> = (0..n).map(|t| ((t * 13 + 5) % 50) as u32).collect();
+            let mut out = vec![0f32; n];
+            gather_idx(&src, &idx, &mut out);
+            for t in 0..n {
+                assert_eq!(out[t].to_bits(), src[idx[t] as usize].to_bits(), "n={n} t={t}");
             }
         }
     }

@@ -22,6 +22,7 @@ pub(super) static TABLE: KernelTable = KernelTable {
     norm_sq,
     dot_rows,
     partial_dot_rows,
+    gather,
 };
 
 fn dot(a: &[f32], b: &[f32]) -> f32 {
@@ -73,6 +74,39 @@ fn partial_dot_rows(rows: &[&[f32]], q: &[f32], out: &mut [f32]) {
     );
     // SAFETY: as above; shapes verified.
     unsafe { partial_dot_rows_fma(rows, q, out) }
+}
+
+fn gather(src: &[f32], idx: &[u32], out: &mut [f32]) {
+    // Real asserts: `vgatherdps` reads `src` unchecked once the indices
+    // are validated, so a bad index from safe code must panic exactly
+    // like the scalar backend's indexing would.
+    assert_eq!(idx.len(), out.len(), "gather: idx/out length mismatch");
+    assert!(
+        idx.iter().all(|&j| (j as usize) < src.len()),
+        "gather: index out of bounds"
+    );
+    // SAFETY: table selected only after avx2+fma detection; indices
+    // verified in bounds above.
+    unsafe { gather_i32(src, idx, out) }
+}
+
+/// Hardware index gather, 8 lanes per `vgatherdps`, scalar remainder.
+#[target_feature(enable = "avx2")]
+unsafe fn gather_i32(src: &[f32], idx: &[u32], out: &mut [f32]) {
+    let n = idx.len();
+    let base = src.as_ptr();
+    let pi = idx.as_ptr();
+    let po = out.as_mut_ptr();
+    let mut t = 0usize;
+    while t + 8 <= n {
+        let vi = _mm256_loadu_si256(pi.add(t) as *const __m256i);
+        _mm256_storeu_ps(po.add(t), _mm256_i32gather_ps::<4>(base, vi));
+        t += 8;
+    }
+    while t < n {
+        *po.add(t) = *base.add(*pi.add(t) as usize);
+        t += 1;
+    }
 }
 
 /// Horizontal sum of a 256-bit vector. Fixed reduction order: fold the

@@ -1,0 +1,306 @@
+//! AVX-512F backend (x86-64, 512-bit lanes).
+//!
+//! Every public entry is a safe wrapper over a `#[target_feature]`
+//! kernel. SAFETY: the wrappers are sound because [`TABLE`] is only
+//! selectable by the dispatcher after `is_x86_feature_detected!`
+//! confirms `avx512f` **and** `avx2`+`fma` on the running CPU — the
+//! gather kernel executes the AVX2 `vgatherdps`, and detection must
+//! not assume AVX2 from AVX512F (hypervisors can mask them
+//! independently).
+//!
+//! Accumulation order (the per-row contract shared by `dot`, `dot_rows`
+//! and `partial_dot_rows`, which the exact-path bit-identity tests pin):
+//! two 16-lane FMA accumulators over 32-float chunks, one optional
+//! 16-float chunk into the first accumulator, a fixed horizontal
+//! reduction of `acc0 + acc1`, then a sequential scalar tail. The
+//! blocked kernels process **8 rows per pass** sharing each query
+//! register load — 16 row accumulators plus 2 query registers sit
+//! comfortably inside the 32 zmm registers.
+
+use super::KernelTable;
+use core::arch::x86_64::*;
+
+pub(super) static TABLE: KernelTable = KernelTable {
+    isa: "avx512",
+    dot,
+    axpy,
+    dist_sq,
+    norm_sq,
+    dot_rows,
+    partial_dot_rows,
+    gather,
+};
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // min() mirrors the scalar backend's zip-truncation semantics, so a
+    // release-mode length mismatch degrades identically instead of
+    // reading out of bounds.
+    let n = a.len().min(b.len());
+    // SAFETY: table selected only after avx512f detection (module
+    // docs); n is within both slices.
+    unsafe { dot_512(a.as_ptr(), b.as_ptr(), n) }
+}
+
+fn norm_sq(a: &[f32]) -> f32 {
+    // SAFETY: as above.
+    unsafe { dot_512(a.as_ptr(), a.as_ptr(), a.len()) }
+}
+
+fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    // SAFETY: as above.
+    unsafe { axpy_512(alpha, x, y) }
+}
+
+fn dist_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: as above.
+    unsafe { dist_sq_512(a, b) }
+}
+
+fn dot_rows(block: &[f32], dim: usize, q: &[f32], out: &mut [f32]) {
+    // Real asserts, not debug: the unsafe kernel reads out.len()*dim
+    // floats from `block`, so a release-mode length mismatch from safe
+    // code must panic (like the scalar backend's slicing would), not
+    // read out of bounds.
+    assert_eq!(block.len(), out.len() * dim, "dot_rows: block/out shape mismatch");
+    assert_eq!(q.len(), dim, "dot_rows: query dim mismatch");
+    // SAFETY: as above; shapes verified.
+    unsafe { dot_rows_512(block, dim, q, out) }
+}
+
+fn partial_dot_rows(rows: &[&[f32]], q: &[f32], out: &mut [f32]) {
+    // Real asserts: the unsafe kernel reads q.len() floats from every
+    // row pointer.
+    assert_eq!(rows.len(), out.len(), "partial_dot_rows: rows/out mismatch");
+    assert!(
+        rows.iter().all(|r| r.len() == q.len()),
+        "partial_dot_rows: row/query length mismatch"
+    );
+    // SAFETY: as above; shapes verified.
+    unsafe { partial_dot_rows_512(rows, q, out) }
+}
+
+fn gather(src: &[f32], idx: &[u32], out: &mut [f32]) {
+    // Real asserts: the hardware gather reads `src` unchecked once the
+    // indices are validated.
+    assert_eq!(idx.len(), out.len(), "gather: idx/out length mismatch");
+    assert!(
+        idx.iter().all(|&j| (j as usize) < src.len()),
+        "gather: index out of bounds"
+    );
+    // SAFETY: this table is only selectable after avx2+fma detection
+    // alongside avx512f (see the dispatcher); indices verified in
+    // bounds above.
+    unsafe { gather_i32(src, idx, out) }
+}
+
+/// Horizontal sum of a 512-bit vector. One fixed, per-process
+/// deterministic reduction shared by every kernel in this table — that
+/// sharing is what keeps blocked ≡ single-row bit-identical.
+#[inline]
+#[target_feature(enable = "avx512f")]
+unsafe fn hsum512(v: __m512) -> f32 {
+    _mm512_reduce_add_ps(v)
+}
+
+/// Single-row dot over raw pointers; the canonical accumulation order
+/// every blocked kernel replicates per row.
+#[target_feature(enable = "avx512f")]
+unsafe fn dot_512(pa: *const f32, pb: *const f32, n: usize) -> f32 {
+    let mut acc0 = _mm512_setzero_ps();
+    let mut acc1 = _mm512_setzero_ps();
+    let mut i = 0usize;
+    while i + 32 <= n {
+        acc0 = _mm512_fmadd_ps(
+            _mm512_loadu_ps(pa.add(i)),
+            _mm512_loadu_ps(pb.add(i)),
+            acc0,
+        );
+        acc1 = _mm512_fmadd_ps(
+            _mm512_loadu_ps(pa.add(i + 16)),
+            _mm512_loadu_ps(pb.add(i + 16)),
+            acc1,
+        );
+        i += 32;
+    }
+    if i + 16 <= n {
+        acc0 = _mm512_fmadd_ps(
+            _mm512_loadu_ps(pa.add(i)),
+            _mm512_loadu_ps(pb.add(i)),
+            acc0,
+        );
+        i += 16;
+    }
+    let mut sum = hsum512(_mm512_add_ps(acc0, acc1));
+    while i < n {
+        sum += *pa.add(i) * *pb.add(i);
+        i += 1;
+    }
+    sum
+}
+
+/// Eight rows dotted against one query, sharing every query register
+/// load. Per-row accumulation is exactly [`dot_512`]'s order.
+#[target_feature(enable = "avx512f")]
+unsafe fn dot8_512(ps: &[*const f32; 8], pq: *const f32, n: usize) -> [f32; 8] {
+    let mut a0 = [_mm512_setzero_ps(); 8];
+    let mut a1 = [_mm512_setzero_ps(); 8];
+    let mut i = 0usize;
+    while i + 32 <= n {
+        let q0 = _mm512_loadu_ps(pq.add(i));
+        let q1 = _mm512_loadu_ps(pq.add(i + 16));
+        for r in 0..8 {
+            a0[r] = _mm512_fmadd_ps(_mm512_loadu_ps(ps[r].add(i)), q0, a0[r]);
+            a1[r] = _mm512_fmadd_ps(_mm512_loadu_ps(ps[r].add(i + 16)), q1, a1[r]);
+        }
+        i += 32;
+    }
+    if i + 16 <= n {
+        let q0 = _mm512_loadu_ps(pq.add(i));
+        for r in 0..8 {
+            a0[r] = _mm512_fmadd_ps(_mm512_loadu_ps(ps[r].add(i)), q0, a0[r]);
+        }
+        i += 16;
+    }
+    let mut s = [0f32; 8];
+    for r in 0..8 {
+        s[r] = hsum512(_mm512_add_ps(a0[r], a1[r]));
+    }
+    while i < n {
+        let qv = *pq.add(i);
+        for r in 0..8 {
+            s[r] += *ps[r].add(i) * qv;
+        }
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn dot_rows_512(block: &[f32], dim: usize, q: &[f32], out: &mut [f32]) {
+    let rows = out.len();
+    let pq = q.as_ptr();
+    let base = block.as_ptr();
+    let mut r = 0usize;
+    while r + 8 <= rows {
+        let p0 = base.add(r * dim);
+        let ps = [
+            p0,
+            p0.add(dim),
+            p0.add(2 * dim),
+            p0.add(3 * dim),
+            p0.add(4 * dim),
+            p0.add(5 * dim),
+            p0.add(6 * dim),
+            p0.add(7 * dim),
+        ];
+        let s = dot8_512(&ps, pq, dim);
+        out[r..r + 8].copy_from_slice(&s);
+        r += 8;
+    }
+    while r < rows {
+        out[r] = dot_512(base.add(r * dim), pq, dim);
+        r += 1;
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn partial_dot_rows_512(rows: &[&[f32]], q: &[f32], out: &mut [f32]) {
+    let n = q.len();
+    let pq = q.as_ptr();
+    let mut r = 0usize;
+    while r + 8 <= rows.len() {
+        debug_assert!(rows[r..r + 8].iter().all(|row| row.len() == n));
+        let ps = [
+            rows[r].as_ptr(),
+            rows[r + 1].as_ptr(),
+            rows[r + 2].as_ptr(),
+            rows[r + 3].as_ptr(),
+            rows[r + 4].as_ptr(),
+            rows[r + 5].as_ptr(),
+            rows[r + 6].as_ptr(),
+            rows[r + 7].as_ptr(),
+        ];
+        let s = dot8_512(&ps, pq, n);
+        out[r..r + 8].copy_from_slice(&s);
+        r += 8;
+    }
+    while r < rows.len() {
+        debug_assert_eq!(rows[r].len(), n);
+        out[r] = dot_512(rows[r].as_ptr(), pq, n);
+        r += 1;
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn axpy_512(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len().min(y.len());
+    let va = _mm512_set1_ps(alpha);
+    let px = x.as_ptr();
+    let py = y.as_mut_ptr();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let yv = _mm512_loadu_ps(py.add(i));
+        let xv = _mm512_loadu_ps(px.add(i));
+        _mm512_storeu_ps(py.add(i), _mm512_fmadd_ps(va, xv, yv));
+        i += 16;
+    }
+    while i < n {
+        *py.add(i) += alpha * *px.add(i);
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn dist_sq_512(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc0 = _mm512_setzero_ps();
+    let mut acc1 = _mm512_setzero_ps();
+    let mut i = 0usize;
+    while i + 32 <= n {
+        let d0 = _mm512_sub_ps(_mm512_loadu_ps(pa.add(i)), _mm512_loadu_ps(pb.add(i)));
+        let d1 = _mm512_sub_ps(
+            _mm512_loadu_ps(pa.add(i + 16)),
+            _mm512_loadu_ps(pb.add(i + 16)),
+        );
+        acc0 = _mm512_fmadd_ps(d0, d0, acc0);
+        acc1 = _mm512_fmadd_ps(d1, d1, acc1);
+        i += 32;
+    }
+    if i + 16 <= n {
+        let d0 = _mm512_sub_ps(_mm512_loadu_ps(pa.add(i)), _mm512_loadu_ps(pb.add(i)));
+        acc0 = _mm512_fmadd_ps(d0, d0, acc0);
+        i += 16;
+    }
+    let mut sum = hsum512(_mm512_add_ps(acc0, acc1));
+    while i < n {
+        let d = *pa.add(i) - *pb.add(i);
+        sum += d * d;
+        i += 1;
+    }
+    sum
+}
+
+/// Hardware index gather, 8 lanes per `vgatherdps` (the 256-bit form —
+/// universally present alongside avx512f), scalar remainder.
+#[target_feature(enable = "avx2")]
+unsafe fn gather_i32(src: &[f32], idx: &[u32], out: &mut [f32]) {
+    let n = idx.len();
+    let base = src.as_ptr();
+    let pi = idx.as_ptr();
+    let po = out.as_mut_ptr();
+    let mut t = 0usize;
+    while t + 8 <= n {
+        let vi = _mm256_loadu_si256(pi.add(t) as *const __m256i);
+        _mm256_storeu_ps(po.add(t), _mm256_i32gather_ps::<4>(base, vi));
+        t += 8;
+    }
+    while t < n {
+        *po.add(t) = *base.add(*pi.add(t) as usize);
+        t += 1;
+    }
+}

@@ -11,8 +11,13 @@
 //!
 //! # Dispatch strategy
 //!
-//! * **x86-64**: `is_x86_feature_detected!("avx2") && ("fma")` at first
-//!   use selects the `avx2` module's table (256-bit FMA kernels).
+//! * **x86-64, AVX-512**: `is_x86_feature_detected!("avx512f")` *plus*
+//!   the `avx2`/`fma` checks (the gather kernel runs the AVX2
+//!   `vgatherdps`, and a hypervisor can mask AVX2 independently)
+//!   selects the `avx512` module's table (512-bit FMA kernels, 8-row
+//!   blocking).
+//! * **x86-64, AVX2**: otherwise `is_x86_feature_detected!("avx2") &&
+//!   ("fma")` selects the `avx2` module's table (256-bit FMA kernels).
 //! * **aarch64**: NEON is architecturally mandatory, so the `neon`
 //!   module's table is selected unconditionally (128-bit FMA kernels).
 //! * **everything else / no features detected**: the portable
@@ -28,16 +33,27 @@
 //!
 //! Five scalar primitives — `dot`, `axpy`, `dist_sq`, `norm_sq` (and
 //! `partial_dot`, which is `dot` over sub-slices) — plus two *blocked*
-//! kernels the scalar layer never had:
+//! kernels the scalar layer never had, and one data-movement kernel:
 //!
 //! * [`KernelTable::dot_rows`] scores one query against `R` contiguous
 //!   dataset rows at a time, sharing each query register load across
-//!   all rows of the block (AVX2: 4 rows/block, NEON: 2). This is the
-//!   shape of the Naive fused scan and the sharded confirm rescore.
+//!   all rows of the block (AVX-512: 8 rows/block, AVX2: 4, NEON: 2).
+//!   This is the shape of the Naive fused scan, the sharded confirm
+//!   rescore, and the compacted survivor-panel scan.
 //! * [`KernelTable::partial_dot_rows`] takes *scattered* pre-sliced row
 //!   windows (`&[&[f32]]`) — one pull batch across a surviving arm set,
 //!   the shape of BOUNDEDME's inner loop, where survivors are
 //!   non-contiguous rows pulled over one dense coordinate run.
+//! * [`KernelTable::gather`] is the index gather `out[t] = src[idx[t]]`
+//!   — the staging primitive behind the per-query coordinate gather
+//!   ([`crate::bandit::PullScratch::gather`]) and BOUNDEDME's survivor
+//!   panel compaction ([`crate::bandit::PullPanel`]). Pure data
+//!   movement: results are identical across every ISA (x86 backends use
+//!   the hardware `vgatherdps`).
+//!
+//! [`prefetch_read`] rounds the set out: a best-effort software
+//! prefetch hint the panel scan issues one row ahead of the blocked
+//! kernels (no-op off x86-64).
 //!
 //! # Float-reassociation tolerance contract
 //!
@@ -76,6 +92,8 @@ use std::sync::OnceLock;
 
 #[cfg(target_arch = "x86_64")]
 mod avx2;
+#[cfg(target_arch = "x86_64")]
+mod avx512;
 #[cfg(target_arch = "aarch64")]
 mod neon;
 mod scalar;
@@ -96,7 +114,8 @@ pub const SCAN_TILE: usize = 16;
 /// per call).
 #[derive(Clone, Copy)]
 pub struct KernelTable {
-    /// ISA label (`"scalar"`, `"avx2"`, `"neon"`) for logs and benches.
+    /// ISA label (`"scalar"`, `"avx2"`, `"avx512"`, `"neon"`) for logs
+    /// and benches.
     pub isa: &'static str,
     /// Dot product of two equal-length slices.
     pub dot: fn(&[f32], &[f32]) -> f32,
@@ -114,6 +133,11 @@ pub struct KernelTable {
     /// `out[i] = dot(rows[i], q)` with `rows[i].len() == q.len()` for
     /// all `i`. One BOUNDEDME pull batch across a survivor set.
     pub partial_dot_rows: fn(&[&[f32]], &[f32], &mut [f32]),
+    /// Index gather `out[t] = src[idx[t]]` with
+    /// `idx.len() == out.len()` and every index within `src`. Pure data
+    /// movement (query gathers, survivor panel compaction): identical
+    /// results on every backend, so it carries no tolerance caveats.
+    pub gather: fn(&[f32], &[u32], &mut [f32]),
 }
 
 static SCALAR: KernelTable = KernelTable {
@@ -124,6 +148,7 @@ static SCALAR: KernelTable = KernelTable {
     norm_sq: scalar::norm_sq,
     dot_rows: scalar::dot_rows,
     partial_dot_rows: scalar::partial_dot_rows,
+    gather: scalar::gather,
 };
 
 static ACTIVE: OnceLock<&'static KernelTable> = OnceLock::new();
@@ -143,9 +168,26 @@ pub fn scalar_kernels() -> &'static KernelTable {
     &SCALAR
 }
 
-/// ISA label of the dispatched table (`"scalar"`, `"avx2"`, `"neon"`).
+/// ISA label of the dispatched table (`"scalar"`, `"avx2"`, `"avx512"`,
+/// `"neon"`).
 pub fn active_isa() -> &'static str {
     kernels().isa
+}
+
+/// Best-effort software prefetch of the cache line holding `p` into L1
+/// with read intent; a no-op off x86-64. The survivor-panel scan issues
+/// this one row ahead of the blocked kernels so the next panel row is
+/// in cache by the time its dots start.
+#[inline(always)]
+pub fn prefetch_read(p: *const f32) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: PREFETCHT0 is architecturally non-faulting for any
+    // address, and SSE is part of the x86-64 baseline.
+    unsafe {
+        core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(p as *const i8)
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = p;
 }
 
 /// True when [`FORCE_SCALAR_ENV`] requests the scalar table.
@@ -168,13 +210,30 @@ pub fn select(force_scalar: bool) -> &'static KernelTable {
 }
 
 /// Every table that is *runnable* on this machine right now: scalar
-/// always, plus each detected ISA table. Property tests iterate this to
-/// cross-check all compiled-in backends.
+/// always, plus **each** detected ISA table (an AVX-512 machine lists
+/// scalar, avx2, and avx512). Property tests iterate this to
+/// cross-check all compiled-in backends, independently of which table
+/// the process-wide dispatch pinned.
 pub fn available_tables() -> Vec<&'static KernelTable> {
-    let mut tables = vec![&SCALAR];
-    let detected = detect();
-    if !std::ptr::eq(detected, &SCALAR) {
-        tables.push(detected);
+    #[allow(unused_mut)]
+    let mut tables: Vec<&'static KernelTable> = vec![&SCALAR];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            tables.push(&avx2::TABLE);
+            // The avx512 table's gather kernel executes the AVX2
+            // vgatherdps, so it is only runnable when AVX2 is detected
+            // too (a hypervisor can mask AVX2 while exposing AVX512F).
+            if std::arch::is_x86_feature_detected!("avx512f") {
+                tables.push(&avx512::TABLE);
+            }
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        tables.push(&neon::TABLE);
     }
     tables
 }
@@ -187,6 +246,12 @@ fn detect() -> &'static KernelTable {
         if std::arch::is_x86_feature_detected!("avx2")
             && std::arch::is_x86_feature_detected!("fma")
         {
+            // avx512 requires the avx2+fma leg too: its gather kernel
+            // runs the AVX2 vgatherdps, and a hypervisor can mask AVX2
+            // while exposing AVX512F — never select on avx512f alone.
+            if std::arch::is_x86_feature_detected!("avx512f") {
+                return &avx512::TABLE;
+            }
             return &avx2::TABLE;
         }
     }
@@ -275,6 +340,29 @@ mod tests {
                         pout[r].to_bits(),
                         single.to_bits(),
                         "{} partial_dot_rows row {r} ({rows}x{dim})",
+                        table.isa
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_is_exact_per_table() {
+        // Pure data movement: every backend must reproduce the indexed
+        // loads exactly, including duplicate and reversed indices.
+        for table in available_tables() {
+            for n in [0usize, 1, 5, 8, 9, 16, 31, 100] {
+                let src: Vec<f32> = (0..64).map(|i| (i as f32 * 0.53).sin()).collect();
+                let idx: Vec<u32> =
+                    (0..n).map(|t| ((t * 37 + 11) % src.len()) as u32).collect();
+                let mut out = vec![0f32; n];
+                (table.gather)(&src, &idx, &mut out);
+                for t in 0..n {
+                    assert_eq!(
+                        out[t].to_bits(),
+                        src[idx[t] as usize].to_bits(),
+                        "{} gather n={n} t={t}",
                         table.isa
                     );
                 }

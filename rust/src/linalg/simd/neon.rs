@@ -18,6 +18,9 @@ pub(super) static TABLE: KernelTable = KernelTable {
     norm_sq,
     dot_rows,
     partial_dot_rows,
+    // NEON has no arbitrary-index gather instruction; the scalar loop
+    // is already optimal (and exact by construction).
+    gather: super::scalar::gather,
 };
 
 fn dot(a: &[f32], b: &[f32]) -> f32 {

@@ -97,6 +97,20 @@ pub fn dot_rows(block: &[f32], dim: usize, q: &[f32], out: &mut [f32]) {
     }
 }
 
+/// Index gather `out[t] = src[idx[t]]` (pure data movement — identical
+/// on every backend). Hard asserts mirror the SIMD backends, whose
+/// hardware gathers read `src` unchecked after validation.
+pub fn gather(src: &[f32], idx: &[u32], out: &mut [f32]) {
+    assert_eq!(idx.len(), out.len(), "gather: idx/out length mismatch");
+    assert!(
+        idx.iter().all(|&j| (j as usize) < src.len()),
+        "gather: index out of bounds"
+    );
+    for (o, &j) in out.iter_mut().zip(idx) {
+        *o = src[j as usize];
+    }
+}
+
 /// Scattered blocked scoring (per-row [`dot`] over pre-sliced windows).
 /// Hard asserts, for the same cross-backend consistency as [`dot_rows`].
 pub fn partial_dot_rows(rows: &[&[f32]], q: &[f32], out: &mut [f32]) {

@@ -7,7 +7,7 @@
 use bandit_mips::algos::{BoundedMeIndex, MipsIndex, MipsParams, NaiveIndex};
 use bandit_mips::bandit::{
     hoeffding_sample_size, m_bounded, serfling_radius, AdversarialArms, BanditScratch,
-    BoundedMe, BoundedMeConfig, ExplicitArms, MatrixArms, PullOrder, RewardSource,
+    BoundedMe, BoundedMeConfig, Compaction, ExplicitArms, MatrixArms, PullOrder, RewardSource,
 };
 use bandit_mips::data::shard::ShardSpec;
 use bandit_mips::exec::shard::ShardedIndex;
@@ -475,6 +475,52 @@ fn prop_query_batch_argmax_simd_scalar_invariant() {
                 assert!(
                     (got - w).abs() <= 1e-4 * (1.0 + w.abs()),
                     "case {case} q{qi}: score {got} vs scalar {w}"
+                );
+            }
+        }
+    }
+}
+
+/// The survivor-compaction policy is pure memory layout: for any random
+/// instance, pull order, and knob set, every `Compaction` choice —
+/// never, always, or any threshold fraction — produces bit-identical
+/// `BoundedMe::run` output through the index hot path (same arms, same
+/// score bits, same flop accounting).
+#[test]
+fn prop_compaction_threshold_never_changes_output() {
+    let mut rng = Rng::new(0xC0137);
+    for case in 0..25 {
+        let n = 10 + rng.next_below(90);
+        let d = 64 + rng.next_below(300);
+        let data = Matrix::from_fn(n, d, |_, _| rng.gaussian() as f32);
+        let order = match case % 3 {
+            0 => PullOrder::Permuted,
+            1 => PullOrder::Sequential,
+            _ => PullOrder::BlockShuffled(1 + rng.next_below(48)),
+        };
+        let q: Vec<f32> = rng.gaussian_vec(d);
+        let params = MipsParams {
+            k: 1 + rng.next_below(5),
+            epsilon: rng.uniform(1e-6, 0.5),
+            delta: rng.uniform(0.01, 0.4),
+            seed: 7000 + case as u64,
+        };
+        let run = |policy: Compaction| {
+            let idx =
+                BoundedMeIndex::with_order(data.clone(), order).with_compaction(policy);
+            idx.query_with(&q, &params, &mut QueryContext::new())
+        };
+        let base = run(Compaction::Never);
+        let frac = rng.uniform(0.0, 1.0);
+        for policy in [Compaction::Always, Compaction::AtFraction(frac)] {
+            let got = run(policy);
+            assert_eq!(got.indices, base.indices, "case {case} {order:?} {policy:?}");
+            assert_eq!(got.flops, base.flops, "case {case} {order:?} {policy:?}");
+            for (a, b) in got.scores.iter().zip(&base.scores) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "case {case} {order:?} {policy:?}: score bits differ"
                 );
             }
         }

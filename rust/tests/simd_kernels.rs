@@ -1,9 +1,11 @@
 //! Property battery for the `linalg::simd` runtime-dispatched kernel
-//! subsystem: every available ISA table must agree with the portable
-//! scalar reference within the module's 1e-4 tolerance contract, the
-//! blocked kernels must stay bit-identical per row to their table's
-//! `dot`, and the dispatched funnel (`linalg::dot` & co.) must match a
-//! forced-scalar recomputation on the exact query path.
+//! subsystem: every available ISA table (scalar, AVX2, AVX-512, NEON —
+//! whatever the runner detects) must agree with the portable scalar
+//! reference within the module's 1e-4 tolerance contract, the blocked
+//! kernels must stay bit-identical per row to their table's `dot`, the
+//! gather kernel must be exact on every backend, and the dispatched
+//! funnel (`linalg::dot` & co.) must match a forced-scalar
+//! recomputation on the exact query path.
 
 use bandit_mips::algos::{MipsIndex, MipsParams, NaiveIndex};
 use bandit_mips::exec::QueryContext;
@@ -108,6 +110,54 @@ fn all_tables_blocked_kernels_bit_identical_to_their_dot() {
             }
         }
     }
+}
+
+#[test]
+fn all_tables_gather_is_exact() {
+    // Gather is pure data movement, so unlike the dot kernels it must
+    // be EXACT on every backend — including the AVX-512 and AVX2
+    // hardware `vgatherdps` paths (exercised whenever the runner
+    // detects them, independent of the forced-scalar dispatch pin).
+    let mut rng = Rng::new(0x6A77);
+    for table in simd::available_tables() {
+        for src_len in [1usize, 7, 64, 300] {
+            let src: Vec<f32> = rng.gaussian_vec(src_len);
+            for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 64, 129] {
+                // Duplicates, reversals, and full coverage mixed in.
+                let idx: Vec<u32> =
+                    (0..n).map(|t| ((t * 31 + 3) % src_len) as u32).collect();
+                let mut out = vec![0f32; n];
+                (table.gather)(&src, &idx, &mut out);
+                for t in 0..n {
+                    assert_eq!(
+                        out[t].to_bits(),
+                        src[idx[t] as usize].to_bits(),
+                        "{} gather src_len={src_len} n={n} t={t}",
+                        table.isa
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn avx512_listed_exactly_when_detected() {
+    // The AVX-512 table must appear in available_tables() iff the CPU
+    // has avx512f AND avx2+fma (its gather kernel runs the AVX2
+    // vgatherdps) — the agreement tests above then cover it; on
+    // machines without it the table is silently absent (runtime
+    // gating, not compile-time).
+    let listed = simd::available_tables().iter().any(|t| t.isa == "avx512");
+    #[cfg(target_arch = "x86_64")]
+    assert_eq!(
+        listed,
+        std::arch::is_x86_feature_detected!("avx512f")
+            && std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+    );
+    #[cfg(not(target_arch = "x86_64"))]
+    assert!(!listed);
 }
 
 #[test]

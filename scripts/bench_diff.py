@@ -6,8 +6,12 @@ Usage: bench_diff.py CURRENT BASELINE [--threshold 0.10]
 Matches benchmark rows by name and compares `mean_s`. Regressions beyond
 the threshold are printed as GitHub advisory annotations (`::warning::`)
 so CI surfaces them without failing the build — bench runners are noisy,
-a hard gate would flap. Exits 0 always unless the current file is
-missing/unreadable (exit 2), so the CI step stays advisory.
+a hard gate would flap. Rows with no baseline counterpart (newly added
+benches, e.g. `pull_panel/*` before the next scheduled baseline refresh)
+are informational only: they are listed in one `::notice::` annotation
+and never diffed or counted as regressions. Exits 0 always unless the
+current file is missing/unreadable (exit 2), so the CI step stays
+advisory.
 
 If the baseline file does not exist, prints a notice and exits 0: the
 first run on a branch has nothing to diff against. Commit the produced
@@ -51,10 +55,11 @@ def main(argv):
         return 0
 
     regressions = 0
+    missing_baseline = []
     for name, row in sorted(current.items()):
         base = baseline.get(name)
         if base is None:
-            print(f"bench diff: new benchmark {name!r} (no baseline row)")
+            missing_baseline.append(name)
             continue
         cur_mean, base_mean = row.get("mean_s"), base.get("mean_s")
         if not cur_mean or not base_mean:
@@ -71,9 +76,17 @@ def main(argv):
             print(f"bench diff: {name}: {delta_pct:+.1f}%")
     for name in sorted(set(baseline) - set(current)):
         print(f"bench diff: benchmark {name!r} disappeared from current run")
+    if missing_baseline:
+        names = ", ".join(missing_baseline)
+        print(
+            f"::notice title=new benchmarks (no baseline)::{len(missing_baseline)} "
+            f"benchmark(s) have no baseline row and were not diffed: {names}. "
+            "The scheduled refresh-bench-baseline job will pick them up."
+        )
     print(
         f"bench diff: {regressions} regression(s) beyond {threshold * 100:.0f}% "
-        f"across {len(current)} benchmark(s)"
+        f"across {len(current)} benchmark(s) "
+        f"({len(missing_baseline)} informational, no baseline)"
     )
     return 0
 
