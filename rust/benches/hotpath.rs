@@ -192,6 +192,124 @@ fn main() {
         }
     }
 
+    // L0d: the mixed-precision Storage axis (see `data::quant` /
+    // `linalg::simd::wide`). Two shapes per tier, each tagged with
+    // `storage` / `bytes_per_coord` / `simd_isa` in the JSON so
+    // `scripts/bench_diff.py` can key on (name, storage):
+    //  * fused_scan_*  — one blocked scan of a 256×4096 block (the
+    //    widening dot_rows kernel vs the f32 baseline);
+    //  * pull_panel_*  — one elimination round's pull batch over a
+    //    survivor-compacted panel (500 survivors × 512 coords), the
+    //    compressed ping-pong buffers vs the f32 panel.
+    // Acceptance (ISSUE 6): f16/int8 ≥ 1.7× over f32 on both shapes on
+    // hardware with widening loads (F16C/AVX-512); scalar fallbacks are
+    // reported but not gated.
+    {
+        use bandit_mips::bandit::{MatrixArms, PullPanel, QuantArms, RewardSource};
+        use bandit_mips::data::quant::{QuantMatrix, Storage};
+        use bandit_mips::linalg::simd::wide;
+
+        extra.push((
+            "format_isas",
+            Json::obj(
+                wide::format_isas().into_iter().map(|(f, i)| (f, Json::Str(i.to_string()))),
+            ),
+        ));
+        let tags = |storage: Storage, isa: &str| {
+            [
+                ("storage", Json::Str(storage.label().into())),
+                ("bytes_per_coord", Json::Num(storage.bytes_per_coord() as f64)),
+                ("simd_isa", Json::Str(isa.to_string())),
+            ]
+        };
+
+        // --- fused scans ---
+        let dim = 4096usize;
+        let nrows = 256usize;
+        let block = Matrix::from_fn(nrows, dim, |_, _| rng.gaussian() as f32);
+        let q: Vec<f32> = rng.gaussian_vec(dim);
+        let mut out = vec![0f32; nrows];
+        r.bench_tagged(
+            &b,
+            "fused_scan_f32 256x4096",
+            &tags(Storage::F32, simd::active_isa()),
+            || {
+                dot_rows(block.as_slice(), dim, &q, &mut out);
+                out[0].to_bits()
+            },
+        );
+        {
+            let qm = QuantMatrix::quantize(&block, Storage::F16);
+            let k = wide::f16_kernels();
+            r.bench_tagged(&b, "fused_scan_f16 256x4096", &tags(Storage::F16, k.isa), || {
+                (k.dot_rows)(qm.codes_u16(), dim, &q, &mut out);
+                out[0].to_bits()
+            });
+        }
+        {
+            let qm = QuantMatrix::quantize(&block, Storage::Bf16);
+            let k = wide::bf16_kernels();
+            r.bench_tagged(&b, "fused_scan_bf16 256x4096", &tags(Storage::Bf16, k.isa), || {
+                (k.dot_rows)(qm.codes_u16(), dim, &q, &mut out);
+                out[0].to_bits()
+            });
+        }
+        {
+            let qm = QuantMatrix::quantize(&block, Storage::Int8);
+            let k = wide::int8_kernels();
+            let scales = qm.scales().to_vec();
+            r.bench_tagged(&b, "fused_scan_int8 256x4096", &tags(Storage::Int8, k.isa), || {
+                (k.dot_rows)(qm.codes_i8(), dim, &q, &mut out);
+                // int8 dot_rows yields raw code sums; one multiply per
+                // row applies the per-row scale (part of the tier's
+                // real cost, so it stays inside the timed loop).
+                for (o, &s) in out.iter_mut().zip(&scales) {
+                    *o *= s;
+                }
+                out[0].to_bits()
+            });
+        }
+
+        // --- survivor-panel pulls ---
+        let nrows = 2000usize;
+        let data = Matrix::from_fn(nrows, dim, |_, _| rng.gaussian() as f32);
+        let q: Vec<f32> = rng.gaussian_vec(dim);
+        let order = PullOrder::BlockShuffled(128);
+        let (from, to) = (1024usize, 1536usize);
+        let keep = 500usize;
+        let ids: Vec<usize> = (0..keep).map(|i| i * (nrows / keep)).collect();
+        let mut dense = vec![0f64; keep];
+        {
+            let arms = MatrixArms::new(&data, &q, 8.0, order, 7);
+            let mut panel = PullPanel::new();
+            arms.compact_into(&ids, from, &mut panel);
+            r.bench_tagged(
+                &b,
+                "pull_panel_f32 500x512",
+                &tags(Storage::F32, simd::active_isa()),
+                || {
+                    arms.pull_range_batch_panel(&panel, from, to, &mut dense);
+                    dense[0].to_bits()
+                },
+            );
+        }
+        for storage in [Storage::F16, Storage::Int8] {
+            let qm = QuantMatrix::quantize(&data, storage);
+            let arms = QuantArms::new(&qm, &q, 8.0, order, 7);
+            let mut panel = PullPanel::new();
+            arms.compact_into(&ids, from, &mut panel);
+            let isa = match storage {
+                Storage::F16 => wide::f16_kernels().isa,
+                _ => wide::int8_kernels().isa,
+            };
+            let name = format!("pull_panel_{} 500x512", storage.label());
+            r.bench_tagged(&b, &name, &tags(storage, isa), || {
+                arms.pull_range_batch_panel(&panel, from, to, &mut dense);
+                dense[0].to_bits()
+            });
+        }
+    }
+
     // The query execution core on the acceptance dataset: 2000×4096
     // Gaussian, k=5, serving-default block order. Three paths answer
     // the same queries:

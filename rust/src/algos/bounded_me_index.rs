@@ -2,7 +2,10 @@
 //! interface. Zero preprocessing; per-query (ε, δ, K) knobs.
 
 use super::{MipsIndex, MipsParams, MipsResult};
-use crate::bandit::{BoundedMe, BoundedMeConfig, Compaction, MatrixArms, PullOrder, RewardSource};
+use crate::bandit::{
+    BoundedMe, BoundedMeConfig, Compaction, MatrixArms, PullOrder, QuantArms, RewardSource,
+};
+use crate::data::quant::{QuantMatrix, Storage};
 use crate::data::shard::Shard;
 use crate::exec::shard::ShardPartial;
 use crate::exec::QueryContext;
@@ -11,8 +14,31 @@ use crate::linalg::{partial_dot_rows_chunked, Matrix};
 /// Preprocessing-free MIPS with a suboptimality guarantee: for any query
 /// and user-chosen `0 < ε, δ < 1`, the returned set is ε-optimal (in
 /// mean-reward units, `qᵀv/N`) with probability ≥ 1 − δ.
+///
+/// # The two-tier sample-then-confirm path ([`Self::with_storage`])
+///
+/// With a compressed [`Storage`] tier attached, a query *samples* from
+/// the f16/bf16/int8 codes (2–4× fewer bytes per pull) and *confirms*
+/// the surviving arms with exact f32 inner products. The (ε, δ)
+/// guarantee is preserved against the **true** f32 means by splitting
+/// the ε budget: quantization perturbs every arm's mean by at most
+/// `b = max_row_err · ‖q‖₁ / N` (the per-row error bound recorded at
+/// [`QuantMatrix::quantize`] time), so running the bandit at
+/// `ε' = ε·range − 2b` on dequantized means makes the returned set
+/// `(ε·range)`-optimal under true means. When the budget doesn't cover
+/// the noise (`ε' ≤ 0`, e.g. ε → 0 exact queries), the query silently
+/// drops to the f32 tier — exactness is never sacrificed. The
+/// `RUST_PALLAS_FORCE_F32` hatch disables the compressed tier globally,
+/// making every query bit-identical to an index built without
+/// [`Self::with_storage`].
 pub struct BoundedMeIndex {
     data: Matrix,
+    /// Compressed sampling tier (present iff `storage != F32`): the
+    /// same rows as `data`, re-coded, with recorded quantization error.
+    quant: Option<QuantMatrix>,
+    /// Effective storage of the sampling tier (after the
+    /// `RUST_PALLAS_FORCE_F32` hatch is applied at build time).
+    storage: Storage,
     /// Per-coordinate maxima `colmax[j] = max_i |v_i^(j)|`. The only
     /// dataset-wide metadata the method needs: one streaming scan at
     /// load time, no data structure — keeping the paper's "zero
@@ -40,7 +66,32 @@ impl BoundedMeIndex {
     /// block-shuffled order is the cache-friendly serving default).
     pub fn with_order(data: Matrix, order: PullOrder) -> Self {
         let colmax = column_maxima(&data);
-        Self { data, colmax, order, compaction: Compaction::default() }
+        Self {
+            data,
+            quant: None,
+            storage: Storage::F32,
+            colmax,
+            order,
+            compaction: Compaction::default(),
+        }
+    }
+
+    /// Attach a compressed sampling tier (see the struct docs for the
+    /// two-tier query path). `Storage::F32` (or any request under the
+    /// `RUST_PALLAS_FORCE_F32` hatch) is a no-op: queries stay on the
+    /// exact tier and are bit-identical to an unadorned index.
+    pub fn with_storage(mut self, storage: Storage) -> Self {
+        let eff = storage.effective();
+        self.quant =
+            (eff != Storage::F32).then(|| QuantMatrix::quantize(&self.data, eff));
+        self.storage = eff;
+        self
+    }
+
+    /// The effective storage tier queries sample from ([`Storage::F32`]
+    /// unless [`Self::with_storage`] attached a compressed tier).
+    pub fn storage(&self) -> Storage {
+        self.storage
     }
 
     /// Override the survivor-compaction policy (see [`Compaction`]);
@@ -111,6 +162,76 @@ impl BoundedMeIndex {
             .zip(q)
             .fold(f32::MIN_POSITIVE, |m, (&c, &qj)| m.max(c * qj.abs()))
     }
+
+    /// The compressed-tier query path: sample from the quantized codes,
+    /// confirm survivors exactly on f32. Returns `None` — caller falls
+    /// through to the f32 tier — when no compressed tier is attached or
+    /// the ε budget can't absorb the quantization bias.
+    fn query_quant(
+        &self,
+        q: &[f32],
+        params: &MipsParams,
+        ctx: &mut QueryContext,
+    ) -> Option<MipsResult> {
+        let qm = self.quant.as_ref()?;
+        let n_list = self.data.cols() as f64;
+        // ε is range-relative against the *f32* tier (the guarantee is
+        // stated on true means), so the absolute target comes from the
+        // f32 reward range `±reward_bound` — the same `ε · range_width`
+        // the f32 path computes through `MatrixArms::range_width`.
+        let eff_target =
+            params.epsilon * 2.0 * self.reward_bound(q).max(f32::MIN_POSITIVE) as f64;
+        // Quantization shifts every arm's mean by at most
+        // b = max_row_err · ‖q‖₁ / N; an ε'-optimal set under the
+        // dequantized means is (ε' + 2b)-optimal under true means, so
+        // spend ε' = target − 2b on the bandit.
+        let l1: f64 = q.iter().map(|&x| x.abs() as f64).sum();
+        let bias = qm.max_err() as f64 * l1 / n_list;
+        let eff_eps_q = eff_target - 2.0 * bias;
+        if eff_eps_q <= 0.0 {
+            return None;
+        }
+        // Dequantized rewards need their own bound: the codes' colmax
+        // can exceed the f32 colmax by up to the quantization error.
+        let qbound = qm
+            .colmax()
+            .iter()
+            .zip(q)
+            .fold(f32::MIN_POSITIVE, |m, (&c, &qj)| m.max(c * qj.abs()));
+        let QueryContext { pull, bandit, .. } = ctx;
+        pull.prepare(self.order, self.data.cols(), params.seed);
+        pull.gather(q);
+        let arms = QuantArms::with_scratch(qm, qbound, pull);
+        let algo = BoundedMe::new(BoundedMeConfig {
+            k: params.k.max(1),
+            epsilon: eff_eps_q.max(f64::MIN_POSITIVE),
+            delta: params.delta.clamp(f64::MIN_POSITIVE, 1.0 - 1e-12),
+        })
+        .with_compaction(self.compaction);
+        let out = algo.run_in(&arms, bandit);
+        // Confirm step: exact f32 rescore of the ≤ k survivors through
+        // the shared blocked staging loop (bit-identical per row to
+        // `dot`), then re-rank on exact scores (ties broken by id so
+        // the ordering is deterministic).
+        let mut entries: Vec<(f32, usize)> = Vec::with_capacity(out.arms.len());
+        partial_dot_rows_chunked(
+            out.arms.iter().map(|&arm| self.data.row(arm)),
+            q,
+            |i, score| entries.push((score, out.arms[i])),
+        );
+        entries.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+        });
+        let confirm_flops = (entries.len() * self.data.cols()) as u64;
+        Some(MipsResult {
+            indices: entries.iter().map(|&(_, id)| id).collect(),
+            scores: entries.iter().map(|&(s, _)| s).collect(),
+            flops: out.total_pulls + confirm_flops,
+            candidates: 0,
+        })
+    }
 }
 
 /// `colmax[j] = max_i |v_i^(j)|` over the dataset (one scan).
@@ -152,6 +273,12 @@ impl MipsIndex for BoundedMeIndex {
     /// switches to per the index's [`Compaction`] policy — in
     /// `ctx.bandit`.
     fn query_with(&self, q: &[f32], params: &MipsParams, ctx: &mut QueryContext) -> MipsResult {
+        // Compressed tier first (no-op without `with_storage`); falls
+        // through to the exact f32 tier when the ε budget can't absorb
+        // the quantization bias.
+        if let Some(res) = self.query_quant(q, params, ctx) {
+            return res;
+        }
         let bound = self.reward_bound(q);
         // Disjoint field borrows: `pull` is held immutably by the arms
         // while `bandit` is mutated by the run.
@@ -329,6 +456,97 @@ mod tests {
             // Confirm step: scores are exact inner products, bit-for-bit.
             let exact = crate::linalg::dot(data.row(gid), &q);
             assert_eq!(score.to_bits(), exact.to_bits());
+        }
+    }
+
+    #[test]
+    fn quant_tier_small_epsilon_falls_back_to_exact() {
+        // ε → 0 leaves no budget for quantization bias: the two-tier
+        // index must silently drop to the f32 tier and stay exact.
+        let data = gaussian(80, 64, 21);
+        let q: Vec<f32> = Rng::new(22).gaussian_vec(64);
+        let truth = ground_truth(&data, &q, 3);
+        for storage in [Storage::F16, Storage::Bf16, Storage::Int8] {
+            let idx = BoundedMeIndex::new(data.clone()).with_storage(storage);
+            let res = idx.query(
+                &q,
+                &MipsParams { k: 3, epsilon: 1e-9, delta: 0.05, seed: 7 },
+            );
+            let mut got = res.indices.clone();
+            got.sort_unstable();
+            let mut want = truth.clone();
+            want.sort_unstable();
+            assert_eq!(got, want, "{storage:?}");
+        }
+    }
+
+    #[test]
+    fn quant_tier_confirm_scores_are_exact_and_ranked() {
+        let data = gaussian(100, 256, 23);
+        let idx = BoundedMeIndex::with_order(data.clone(), PullOrder::BlockShuffled(32))
+            .with_storage(Storage::F16);
+        if idx.storage() == Storage::F32 {
+            return; // RUST_PALLAS_FORCE_F32 leg: no compressed tier to test
+        }
+        let q: Vec<f32> = Rng::new(24).gaussian_vec(256);
+        let res = idx.query(&q, &MipsParams { k: 4, epsilon: 0.2, delta: 0.1, seed: 3 });
+        assert_eq!(res.indices.len(), 4);
+        for (w, (&id, &score)) in res.indices.iter().zip(&res.scores).enumerate() {
+            // Confirm step: returned scores are exact f32 inner
+            // products, bit-for-bit, and ranked descending.
+            let exact = crate::linalg::dot(data.row(id), &q);
+            assert_eq!(score.to_bits(), exact.to_bits(), "survivor {w}");
+            if w > 0 {
+                assert!(score <= res.scores[w - 1], "not ranked at {w}");
+            }
+        }
+        // Confirm flops are accounted on top of the sampled pulls.
+        assert!(res.flops >= (4 * 256) as u64);
+    }
+
+    #[test]
+    fn quant_tier_reports_effective_storage() {
+        let idx = BoundedMeIndex::new(gaussian(10, 16, 25));
+        assert_eq!(idx.storage(), Storage::F32);
+        let idx = idx.with_storage(Storage::Int8);
+        assert_eq!(idx.storage(), Storage::Int8.effective());
+        // F32 request is always a no-op.
+        let idx = BoundedMeIndex::new(gaussian(10, 16, 25)).with_storage(Storage::F32);
+        assert_eq!(idx.storage(), Storage::F32);
+    }
+
+    #[test]
+    fn quant_tier_is_epsilon_optimal_on_true_means() {
+        // One-shot sanity check (the integration battery in
+        // tests/quant_tier.rs does the statistical version): every
+        // returned arm's true score must be within ε·range of the k-th
+        // best true score.
+        let data = gaussian(120, 128, 26);
+        let q: Vec<f32> = Rng::new(27).gaussian_vec(128);
+        let k = 5;
+        let exact: Vec<f32> =
+            (0..data.rows()).map(|i| crate::linalg::dot(data.row(i), &q)).collect();
+        let mut sorted = exact.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let kth = sorted[k - 1] as f64;
+        for storage in [Storage::F16, Storage::Bf16, Storage::Int8] {
+            let idx = BoundedMeIndex::new(data.clone()).with_storage(storage);
+            let params = MipsParams { k, epsilon: 0.05, delta: 0.05, seed: 11 };
+            let res = idx.query(&q, &params);
+            assert_eq!(res.indices.len(), k, "{storage:?}");
+            // ε is range-relative in *mean* units; scores are mean × N,
+            // so the allowed gap in score units is ε · 2·bound · N.
+            let slack = params.epsilon
+                * 2.0
+                * idx.reward_bound(&q) as f64
+                * data.cols() as f64;
+            for &id in &res.indices {
+                let score = exact[id] as f64;
+                assert!(
+                    score >= kth - slack - 1e-3,
+                    "{storage:?}: arm {id} score {score} below kth {kth} − slack {slack}"
+                );
+            }
         }
     }
 

@@ -38,6 +38,8 @@
 //! The panel lives in [`crate::bandit::BanditScratch`], so steady-state
 //! serving stays allocation-free.
 
+use crate::data::quant::{QuantMatrix, Storage};
+use crate::linalg::simd::wide;
 use crate::linalg::{dot, gather_idx, partial_dot_rows_chunked, simd, Matrix, Rng};
 
 /// How [`MatrixArms`] orders coordinates for without-replacement pulls.
@@ -366,19 +368,50 @@ impl Iterator for RunSegments<'_> {
 /// that would rather re-walk the scattered dataset than hold a
 /// resident panel set [`crate::bandit::Compaction::Never`] (or the
 /// `RUST_PALLAS_FORCE_NO_COMPACT` hatch), or lower the fraction to
-/// shrink the bound; per-precision (`f16`/`bf16`) and NUMA-aware
-/// panels are tracked in the ROADMAP.
+/// shrink the bound; NUMA-aware panels are tracked in the ROADMAP.
+///
+/// # Compressed panels (the Storage axis)
+///
+/// When the environment samples a compressed tier
+/// (see [`QuantArms`] / [`crate::data::quant`]), the panel stages the
+/// *compressed codes* instead of f32 — [`PullPanel::begin_u16`] /
+/// [`PullPanel::begin_i8`] fill typed ping-pong pairs (f16/bf16 share
+/// the `u16` pair; int8 additionally carries one f32 scale per row,
+/// permuted alongside rows on re-compaction) — so the resident
+/// high-water shrinks by the same 2–4× as the streaming reads. One
+/// element-kind tag selects which pair [`PullPanel::recompact`]
+/// operates on; the f32 pair and its code path are byte-identical to
+/// the pre-Storage behavior.
 pub struct PullPanel {
-    /// Active panel, `rows × stride`, row-major.
+    /// Active panel, `rows × stride`, row-major (f32 tier).
     cur: Vec<f32>,
-    /// Spare buffer for the next ping-pong re-compaction.
+    /// Spare buffer for the next ping-pong re-compaction (f32 tier).
     alt: Vec<f32>,
+    /// Active/spare pair for f16/bf16 codes.
+    cur16: Vec<u16>,
+    alt16: Vec<u16>,
+    /// Active/spare pair for int8 codes.
+    cur8: Vec<i8>,
+    alt8: Vec<i8>,
+    /// Per-row int8 scales (aligned with `cur8` rows) + spare.
+    scales: Vec<f32>,
+    alt_scales: Vec<f32>,
+    /// Which buffer pair the current staging lives in.
+    elem: PanelElem,
     rows: usize,
     stride: usize,
     /// Pull position of panel column 0.
     base: usize,
     /// Buffer-growth (capacity reallocation) events since construction.
     grows: u64,
+}
+
+/// Element kind of the currently staged panel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum PanelElem {
+    F32,
+    U16,
+    I8,
 }
 
 impl Default for PullPanel {
@@ -390,7 +423,36 @@ impl Default for PullPanel {
 impl PullPanel {
     /// Empty panel; buffers grow to steady state on first use.
     pub fn new() -> Self {
-        Self { cur: Vec::new(), alt: Vec::new(), rows: 0, stride: 0, base: 0, grows: 0 }
+        Self {
+            cur: Vec::new(),
+            alt: Vec::new(),
+            cur16: Vec::new(),
+            alt16: Vec::new(),
+            cur8: Vec::new(),
+            alt8: Vec::new(),
+            scales: Vec::new(),
+            alt_scales: Vec::new(),
+            elem: PanelElem::F32,
+            rows: 0,
+            stride: 0,
+            base: 0,
+            grows: 0,
+        }
+    }
+
+    /// Capacities of every buffer, for growth-event accounting.
+    #[inline]
+    fn caps(&self) -> [usize; 8] {
+        [
+            self.cur.capacity(),
+            self.alt.capacity(),
+            self.cur16.capacity(),
+            self.alt16.capacity(),
+            self.cur8.capacity(),
+            self.alt8.capacity(),
+            self.scales.capacity(),
+            self.alt_scales.capacity(),
+        ]
     }
 
     /// Reset to `rows × stride` at pull base `base` and expose the
@@ -398,39 +460,112 @@ impl PullPanel {
     /// ([`RewardSource::compact_into`] fills row `i` with arm `i`'s
     /// rewards at pull positions `base..base + stride`).
     pub fn begin(&mut self, rows: usize, stride: usize, base: usize) -> &mut [f32] {
-        let caps = (self.cur.capacity(), self.alt.capacity());
+        let caps = self.caps();
+        self.elem = PanelElem::F32;
         self.cur.clear();
         self.cur.resize(rows * stride, 0.0);
         self.rows = rows;
         self.stride = stride;
         self.base = base;
-        if (self.cur.capacity(), self.alt.capacity()) != caps {
+        if self.caps() != caps {
             self.grows += 1;
         }
         &mut self.cur
     }
 
+    /// [`PullPanel::begin`] for the f16/bf16 tiers: the staging buffer
+    /// holds raw 16-bit codes (the format is whatever the filling
+    /// environment stores — the panel only moves bytes).
+    pub fn begin_u16(&mut self, rows: usize, stride: usize, base: usize) -> &mut [u16] {
+        let caps = self.caps();
+        self.elem = PanelElem::U16;
+        self.cur16.clear();
+        self.cur16.resize(rows * stride, 0);
+        self.rows = rows;
+        self.stride = stride;
+        self.base = base;
+        if self.caps() != caps {
+            self.grows += 1;
+        }
+        &mut self.cur16
+    }
+
+    /// [`PullPanel::begin`] for the int8 tier: returns the code staging
+    /// buffer plus the per-row scale buffer (`rows` entries) the filler
+    /// must populate; scales ride along through every re-compaction.
+    pub fn begin_i8(&mut self, rows: usize, stride: usize, base: usize) -> (&mut [i8], &mut [f32]) {
+        let caps = self.caps();
+        self.elem = PanelElem::I8;
+        self.cur8.clear();
+        self.cur8.resize(rows * stride, 0);
+        self.scales.clear();
+        self.scales.resize(rows, 0.0);
+        self.rows = rows;
+        self.stride = stride;
+        self.base = base;
+        if self.caps() != caps {
+            self.grows += 1;
+        }
+        (&mut self.cur8, &mut self.scales)
+    }
+
+    /// Ping-pong copy of one buffer pair (shared by every element
+    /// kind — the f32 tier's copies are exactly the pre-Storage ones).
+    fn recompact_pair<T: Copy + Default>(
+        cur: &mut Vec<T>,
+        alt: &mut Vec<T>,
+        slots: &[usize],
+        rows: usize,
+        stride: usize,
+        delta: usize,
+        ns: usize,
+    ) {
+        alt.clear();
+        alt.resize(slots.len() * ns, T::default());
+        for (i, &slot) in slots.iter().enumerate() {
+            debug_assert!(slot < rows);
+            let src = slot * stride + delta;
+            alt[i * ns..(i + 1) * ns].copy_from_slice(&cur[src..src + ns]);
+        }
+        std::mem::swap(cur, alt);
+    }
+
     /// Drop eliminated rows and the freshly pulled prefix: new row `i`
     /// is old row `slots[i]`'s window from pull position `new_base` on.
-    /// Dense copies into the spare buffer, then swap.
+    /// Dense copies into the spare buffer, then swap — on whichever
+    /// buffer pair the current tier staged (int8 scales are permuted
+    /// alongside their rows).
     pub fn recompact(&mut self, slots: &[usize], new_base: usize) {
         debug_assert!(new_base >= self.base);
         let delta = new_base - self.base;
         debug_assert!(delta <= self.stride);
         let ns = self.stride - delta;
-        let caps = (self.cur.capacity(), self.alt.capacity());
-        self.alt.clear();
-        self.alt.resize(slots.len() * ns, 0.0);
-        for (i, &slot) in slots.iter().enumerate() {
-            debug_assert!(slot < self.rows);
-            let src = slot * self.stride + delta;
-            self.alt[i * ns..(i + 1) * ns].copy_from_slice(&self.cur[src..src + ns]);
+        let caps = self.caps();
+        match self.elem {
+            PanelElem::F32 => {
+                Self::recompact_pair(
+                    &mut self.cur, &mut self.alt, slots, self.rows, self.stride, delta, ns,
+                );
+            }
+            PanelElem::U16 => {
+                Self::recompact_pair(
+                    &mut self.cur16, &mut self.alt16, slots, self.rows, self.stride, delta, ns,
+                );
+            }
+            PanelElem::I8 => {
+                Self::recompact_pair(
+                    &mut self.cur8, &mut self.alt8, slots, self.rows, self.stride, delta, ns,
+                );
+                let scales = &self.scales;
+                self.alt_scales.clear();
+                self.alt_scales.extend(slots.iter().map(|&s| scales[s]));
+                std::mem::swap(&mut self.scales, &mut self.alt_scales);
+            }
         }
-        std::mem::swap(&mut self.cur, &mut self.alt);
         self.rows = slots.len();
         self.stride = ns;
         self.base = new_base;
-        if (self.cur.capacity(), self.alt.capacity()) != caps {
+        if self.caps() != caps {
             self.grows += 1;
         }
     }
@@ -466,6 +601,44 @@ impl PullPanel {
         // In-bounds by the same contract as `window`; raw pointer only
         // because prefetch wants an address, not a borrow.
         unsafe { self.cur.as_ptr().add(i * self.stride + (from - self.base)) }
+    }
+
+    /// Row `i`'s f16/bf16 codes at pull positions `[from, to)`.
+    #[inline]
+    pub fn window16(&self, i: usize, from: usize, to: usize) -> &[u16] {
+        debug_assert_eq!(self.elem, PanelElem::U16);
+        debug_assert!(self.base <= from && from <= to && to <= self.base + self.stride);
+        let o = i * self.stride;
+        &self.cur16[o + (from - self.base)..o + (to - self.base)]
+    }
+
+    /// Row `i`'s int8 codes at pull positions `[from, to)`.
+    #[inline]
+    pub fn window8(&self, i: usize, from: usize, to: usize) -> &[i8] {
+        debug_assert_eq!(self.elem, PanelElem::I8);
+        debug_assert!(self.base <= from && from <= to && to <= self.base + self.stride);
+        let o = i * self.stride;
+        &self.cur8[o + (from - self.base)..o + (to - self.base)]
+    }
+
+    /// Row `i`'s int8 scale (`value ≈ code · scale`).
+    #[inline]
+    pub fn row_scale(&self, i: usize) -> f32 {
+        debug_assert_eq!(self.elem, PanelElem::I8);
+        self.scales[i]
+    }
+
+    /// Prefetch address for compressed rows (the cast is only for the
+    /// address-taking prefetch hint, never dereferenced as f32).
+    #[inline]
+    fn window_ptr16(&self, i: usize, from: usize) -> *const f32 {
+        unsafe { self.cur16.as_ptr().add(i * self.stride + (from - self.base)) as *const f32 }
+    }
+
+    /// Prefetch address for int8 rows (cast as above).
+    #[inline]
+    fn window_ptr8(&self, i: usize, from: usize) -> *const f32 {
+        unsafe { self.cur8.as_ptr().add(i * self.stride + (from - self.base)) as *const f32 }
     }
 
     /// Buffer-growth (reallocation) events since construction. A
@@ -778,6 +951,383 @@ fn gather_order_dot(v: &[f32], q: &[f32]) -> f64 {
         j += 1;
     }
     ((s0 + s1) + (s2 + s3) + tail) as f64
+}
+
+/// [`gather_order_dot`]'s coded twin for the *scattered* `Permuted`
+/// pull over compressed rows: identical 4-lane structure, with each
+/// indexed element decoded before the multiply. `dec` must be exact and
+/// deterministic (f16/bf16 decode, int8 code→f32) so the panel replay
+/// below stays bit-identical.
+#[inline]
+fn gather_order_dot_coded<E: Copy>(
+    row: &[E],
+    p: &[u32],
+    qp: &[f32],
+    from: usize,
+    to: usize,
+    dec: impl Fn(E) -> f32,
+) -> f64 {
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    let mut j = from;
+    while j + 4 <= to {
+        s0 += dec(row[p[j] as usize]) * qp[j];
+        s1 += dec(row[p[j + 1] as usize]) * qp[j + 1];
+        s2 += dec(row[p[j + 2] as usize]) * qp[j + 2];
+        s3 += dec(row[p[j + 3] as usize]) * qp[j + 3];
+        j += 4;
+    }
+    let mut tail = 0f32;
+    while j < to {
+        tail += dec(row[p[j] as usize]) * qp[j];
+        j += 1;
+    }
+    ((s0 + s1) + (s2 + s3) + tail) as f64
+}
+
+/// [`gather_order_dot`]'s coded twin for *panel* `Permuted` pulls: the
+/// codes were already gathered into pull order, so the lanes read
+/// consecutive memory; same decode, same lane sums, same widening —
+/// bit-identical to [`gather_order_dot_coded`] over the source row.
+#[inline]
+fn gather_order_dot_decoded<E: Copy>(v: &[E], q: &[f32], dec: impl Fn(E) -> f32) -> f64 {
+    debug_assert_eq!(v.len(), q.len());
+    let n = v.len();
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    let mut j = 0usize;
+    while j + 4 <= n {
+        s0 += dec(v[j]) * q[j];
+        s1 += dec(v[j + 1]) * q[j + 1];
+        s2 += dec(v[j + 2]) * q[j + 2];
+        s3 += dec(v[j + 3]) * q[j + 3];
+        j += 4;
+    }
+    let mut tail = 0f32;
+    while j < n {
+        tail += dec(v[j]) * q[j];
+        j += 1;
+    }
+    ((s0 + s1) + (s2 + s3) + tail) as f64
+}
+
+/// MIPS as MAB-BP over a *compressed* dataset tier: arm `i` ↔ the
+/// dequantized row `deq(c_i)`, reward `j` ↔ one dequantized coordinate
+/// product. The sampling half of the two-tier query path
+/// (see [`crate::algos::BoundedMeIndex`]): the bandit eliminates on
+/// rewards read from f16/bf16/int8 codes (widened in registers by
+/// [`crate::linalg::simd::wide`], 2–4× less memory traffic), and the
+/// caller confirm-rescores the returned arms on f32.
+///
+/// This is a *legitimate* bounded-reward environment in its own right —
+/// `reward_bound` must bound the **dequantized** products (derive it
+/// from [`QuantMatrix::colmax`]), so the (ε, δ) guarantee holds exactly
+/// with respect to the dequantized means; the caller accounts for the
+/// quantization bias separately via [`QuantMatrix::row_err`].
+///
+/// Every layout contract of [`MatrixArms`] carries over per order:
+/// batched ≡ per-arm, panel ≡ scattered, bit for bit (the panel stages
+/// compressed codes — [`PullPanel::begin_u16`] / [`PullPanel::begin_i8`]
+/// — and replays the same decode + accumulation order; int8 raw code
+/// sums are widened to f64 and multiplied by the row scale identically
+/// on both paths).
+pub struct QuantArms<'a> {
+    data: &'a QuantMatrix,
+    scratch: ScratchRef<'a>,
+    range: (f64, f64),
+}
+
+impl<'a> QuantArms<'a> {
+    /// Build the compressed-tier environment for one query, allocating
+    /// a private scratch (one-shot convenience; the serving path uses
+    /// [`QuantArms::with_scratch`]).
+    ///
+    /// `reward_bound` must bound every *dequantized* reward:
+    /// `max_j colmax[j]·|q_j|` over [`QuantMatrix::colmax`].
+    pub fn new(
+        data: &'a QuantMatrix,
+        query: &[f32],
+        reward_bound: f32,
+        order: PullOrder,
+        seed: u64,
+    ) -> Self {
+        assert_eq!(query.len(), data.cols(), "query dim mismatch");
+        let mut scratch = Box::new(PullScratch::new());
+        scratch.prepare(order, data.cols(), seed);
+        scratch.gather(query);
+        Self {
+            data,
+            scratch: ScratchRef::Owned(scratch),
+            range: MatrixArms::range_from_bound(reward_bound),
+        }
+    }
+
+    /// Build over an externally-prepared [`PullScratch`] (the
+    /// zero-allocation serving path — the same prepared+gathered
+    /// scratch the f32 tier would use).
+    pub fn with_scratch(data: &'a QuantMatrix, reward_bound: f32, scratch: &'a PullScratch) -> Self {
+        assert_eq!(scratch.dim(), data.cols(), "scratch dim mismatch");
+        assert_eq!(scratch.qp.len(), data.cols(), "scratch not gathered");
+        Self {
+            data,
+            scratch: ScratchRef::Borrowed(scratch),
+            range: MatrixArms::range_from_bound(reward_bound),
+        }
+    }
+
+    /// The tier this environment samples from.
+    pub fn storage(&self) -> Storage {
+        self.data.storage()
+    }
+
+    #[inline]
+    fn scratch(&self) -> &PullScratch {
+        match &self.scratch {
+            ScratchRef::Owned(s) => s,
+            ScratchRef::Borrowed(s) => s,
+        }
+    }
+}
+
+impl RewardSource for QuantArms<'_> {
+    fn n_arms(&self) -> usize {
+        self.data.rows()
+    }
+
+    fn list_len(&self) -> usize {
+        self.data.cols()
+    }
+
+    fn reward_range(&self) -> (f64, f64) {
+        self.range
+    }
+
+    /// Per order, the compressed mirror of [`MatrixArms::pull_range`]:
+    /// `Sequential` / `BlockShuffled` run the dispatched widening dot
+    /// over code windows (per dense run for the latter, accumulating in
+    /// f64 in run order); `Permuted` runs the coded 4-wide gather
+    /// unroll. int8 dots are raw code sums widened to f64 then scaled
+    /// once per dot — the same scale application the panel path replays.
+    fn pull_range(&self, arm: usize, from: usize, to: usize) -> f64 {
+        debug_assert!(to <= self.list_len());
+        let s = self.scratch();
+        match (s.kind, self.data.storage()) {
+            (OrderKind::Identity, Storage::F16) => {
+                (wide::f16_kernels().dot)(&self.data.row_u16(arm)[from..to], &s.qp[from..to])
+                    as f64
+            }
+            (OrderKind::Identity, Storage::Bf16) => {
+                (wide::bf16_kernels().dot)(&self.data.row_u16(arm)[from..to], &s.qp[from..to])
+                    as f64
+            }
+            (OrderKind::Identity, Storage::Int8) => {
+                (wide::int8_kernels().dot)(&self.data.row_i8(arm)[from..to], &s.qp[from..to])
+                    as f64
+                    * self.data.scale(arm) as f64
+            }
+            (OrderKind::Gather, Storage::F16) => gather_order_dot_coded(
+                self.data.row_u16(arm),
+                &s.perm,
+                &s.qp,
+                from,
+                to,
+                wide::f16_to_f32,
+            ),
+            (OrderKind::Gather, Storage::Bf16) => gather_order_dot_coded(
+                self.data.row_u16(arm),
+                &s.perm,
+                &s.qp,
+                from,
+                to,
+                wide::bf16_to_f32,
+            ),
+            (OrderKind::Gather, Storage::Int8) => {
+                gather_order_dot_coded(
+                    self.data.row_i8(arm),
+                    &s.perm,
+                    &s.qp,
+                    from,
+                    to,
+                    |c: i8| c as f32,
+                ) * self.data.scale(arm) as f64
+            }
+            (OrderKind::Runs, storage) => {
+                let mut acc = 0f64;
+                match storage {
+                    Storage::F16 | Storage::Bf16 => {
+                        let k = if storage == Storage::F16 {
+                            wide::f16_kernels()
+                        } else {
+                            wide::bf16_kernels()
+                        };
+                        let row = self.data.row_u16(arm);
+                        for (pos, stop, coord) in s.run_segments(from, to) {
+                            let len = stop - pos;
+                            acc += (k.dot)(&row[coord..coord + len], &s.qp[pos..stop]) as f64;
+                        }
+                    }
+                    Storage::Int8 => {
+                        let k = wide::int8_kernels();
+                        let row = self.data.row_i8(arm);
+                        let scale = self.data.scale(arm) as f64;
+                        for (pos, stop, coord) in s.run_segments(from, to) {
+                            let len = stop - pos;
+                            acc += (k.dot)(&row[coord..coord + len], &s.qp[pos..stop]) as f64
+                                * scale;
+                        }
+                    }
+                    Storage::F32 => unreachable!("QuantMatrix never stores f32"),
+                }
+                acc
+            }
+            (_, Storage::F32) => unreachable!("QuantMatrix never stores f32"),
+        }
+    }
+
+    fn supports_compaction(&self) -> bool {
+        true
+    }
+
+    /// Stage *compressed codes* into the panel (2–4× smaller resident
+    /// panel than the f32 tier): dense row copies for `Sequential`,
+    /// run-segment copies for `BlockShuffled`, and the wide tables'
+    /// exact element gather for `Permuted`; int8 rows carry their scale
+    /// into the panel's per-row scale lane.
+    fn compact_into(&self, arms: &[usize], from: usize, panel: &mut PullPanel) {
+        let s = self.scratch();
+        let n_list = self.list_len();
+        debug_assert!(from < n_list);
+        let stride = n_list - from;
+        match self.data.storage() {
+            Storage::F16 | Storage::Bf16 => {
+                let gather = wide::f16_kernels().gather; // element move, format-agnostic
+                let buf = panel.begin_u16(arms.len(), stride, from);
+                for (i, &arm) in arms.iter().enumerate() {
+                    let row = self.data.row_u16(arm);
+                    let dst = &mut buf[i * stride..(i + 1) * stride];
+                    match s.kind {
+                        OrderKind::Identity => dst.copy_from_slice(&row[from..]),
+                        OrderKind::Gather => gather(row, &s.perm[from..], dst),
+                        OrderKind::Runs => {
+                            for (pos, stop, coord) in s.run_segments(from, n_list) {
+                                let len = stop - pos;
+                                dst[pos - from..pos - from + len]
+                                    .copy_from_slice(&row[coord..coord + len]);
+                            }
+                        }
+                    }
+                }
+            }
+            Storage::Int8 => {
+                let gather = wide::int8_kernels().gather;
+                let (buf, scales) = panel.begin_i8(arms.len(), stride, from);
+                for (i, &arm) in arms.iter().enumerate() {
+                    scales[i] = self.data.scale(arm);
+                    let row = self.data.row_i8(arm);
+                    let dst = &mut buf[i * stride..(i + 1) * stride];
+                    match s.kind {
+                        OrderKind::Identity => dst.copy_from_slice(&row[from..]),
+                        OrderKind::Gather => gather(row, &s.perm[from..], dst),
+                        OrderKind::Runs => {
+                            for (pos, stop, coord) in s.run_segments(from, n_list) {
+                                let len = stop - pos;
+                                dst[pos - from..pos - from + len]
+                                    .copy_from_slice(&row[coord..coord + len]);
+                            }
+                        }
+                    }
+                }
+            }
+            Storage::F32 => unreachable!("QuantMatrix never stores f32"),
+        }
+    }
+
+    /// Panel pulls replaying [`QuantArms::pull_range`]'s exact decode +
+    /// accumulation order over dense code rows (per-row widening dots;
+    /// the coded 4-wide unroll for `Permuted`), with a software
+    /// prefetch one row ahead — bit-identical sums to the scattered
+    /// batch, streaming compressed bytes.
+    fn pull_range_batch_panel(&self, panel: &PullPanel, from: usize, to: usize, out: &mut [f64]) {
+        debug_assert_eq!(panel.rows(), out.len());
+        debug_assert!(panel.base() <= from && from <= to && to <= self.list_len());
+        let s = self.scratch();
+        let nrows = panel.rows();
+        let storage = self.data.storage();
+        // One dense-window dot per panel row, in the scattered path's
+        // arithmetic order for the active (order, storage) pair.
+        let dot_row = |i: usize, wfrom: usize, wto: usize| -> f64 {
+            match (s.kind, storage) {
+                (OrderKind::Gather, Storage::F16) => gather_order_dot_decoded(
+                    panel.window16(i, wfrom, wto),
+                    &s.qp[wfrom..wto],
+                    wide::f16_to_f32,
+                ),
+                (OrderKind::Gather, Storage::Bf16) => gather_order_dot_decoded(
+                    panel.window16(i, wfrom, wto),
+                    &s.qp[wfrom..wto],
+                    wide::bf16_to_f32,
+                ),
+                (OrderKind::Gather, Storage::Int8) => {
+                    gather_order_dot_decoded(
+                        panel.window8(i, wfrom, wto),
+                        &s.qp[wfrom..wto],
+                        |c: i8| c as f32,
+                    ) * panel.row_scale(i) as f64
+                }
+                (_, Storage::F16) => (wide::f16_kernels().dot)(
+                    panel.window16(i, wfrom, wto),
+                    &s.qp[wfrom..wto],
+                ) as f64,
+                (_, Storage::Bf16) => (wide::bf16_kernels().dot)(
+                    panel.window16(i, wfrom, wto),
+                    &s.qp[wfrom..wto],
+                ) as f64,
+                (_, Storage::Int8) => {
+                    (wide::int8_kernels().dot)(
+                        panel.window8(i, wfrom, wto),
+                        &s.qp[wfrom..wto],
+                    ) as f64
+                        * panel.row_scale(i) as f64
+                }
+                (_, Storage::F32) => unreachable!("QuantMatrix never stores f32"),
+            }
+        };
+        let prefetch = |i: usize, at: usize| {
+            if i + 1 < nrows {
+                match storage {
+                    Storage::Int8 => simd::prefetch_read(panel.window_ptr8(i + 1, at)),
+                    _ => simd::prefetch_read(panel.window_ptr16(i + 1, at)),
+                }
+            }
+        };
+        match s.kind {
+            OrderKind::Identity | OrderKind::Gather => {
+                for (i, o) in out.iter_mut().enumerate() {
+                    prefetch(i, from);
+                    *o = dot_row(i, from, to);
+                }
+            }
+            OrderKind::Runs => {
+                for o in out.iter_mut() {
+                    *o = 0.0;
+                }
+                for (pos, stop, _) in s.run_segments(from, to) {
+                    for (i, o) in out.iter_mut().enumerate() {
+                        prefetch(i, pos);
+                        *o += dot_row(i, pos, stop);
+                    }
+                }
+            }
+        }
+    }
+
+    fn pull_iid(&self, arm: usize, rng: &mut Rng) -> f64 {
+        let j = rng.next_below(self.list_len());
+        let s = self.scratch();
+        (self.data.dequantize(arm, s.coord_at(j)) * s.qp[j]) as f64
+    }
+
+    fn true_mean(&self, arm: usize) -> f64 {
+        self.pull_range(arm, 0, self.list_len()) / self.list_len() as f64
+    }
 }
 
 /// The paper's adversarial environment (Figure 1): arm `a` has true mean
@@ -1236,5 +1786,156 @@ mod tests {
         // Sum over full range must equal plain sum regardless of order.
         let full = arms.pull_range(0, 0, 4);
         assert!((full - 10.0).abs() < 1e-6);
+    }
+
+    /// Dequantized reward bound for a quant environment (what the index
+    /// layer computes from colmax).
+    fn quant_bound(qm: &QuantMatrix, q: &[f32]) -> f32 {
+        qm.colmax()
+            .iter()
+            .zip(q)
+            .fold(f32::MIN_POSITIVE, |b, (&c, &x)| b.max(c * x.abs()))
+    }
+
+    #[test]
+    fn quant_pull_paths_are_bit_identical_across_layouts() {
+        // The Storage-axis mirror of panel_pull_is_bit_identical_to_scatter
+        // + pull_range_batch_is_bit_identical_to_per_arm: for every
+        // (order, tier), batched ≡ per-arm and panel ≡ scattered, bit
+        // for bit. Ragged dim 103 exercises run tails, wide-kernel chunk
+        // remainders, and the 4-wide gather tail.
+        let mut rng = Rng::new(0x9A27);
+        let m = Matrix::from_fn(21, 103, |_, _| rng.gaussian() as f32);
+        let q: Vec<f32> = rng.gaussian_vec(103);
+        let ids: Vec<usize> = (0..21).rev().step_by(2).collect();
+        for storage in [Storage::F16, Storage::Bf16, Storage::Int8] {
+            let qm = QuantMatrix::quantize(&m, storage);
+            for order in [
+                PullOrder::Sequential,
+                PullOrder::Permuted,
+                PullOrder::BlockShuffled(13),
+            ] {
+                let arms = QuantArms::new(&qm, &q, quant_bound(&qm, &q), order, 9);
+                // Batched ≡ per-arm.
+                for (from, to) in [(0usize, 103usize), (0, 1), (7, 61), (33, 33)] {
+                    let mut batch = vec![0f64; ids.len()];
+                    arms.pull_range_batch(&ids, from, to, &mut batch);
+                    for (i, &arm) in ids.iter().enumerate() {
+                        assert_eq!(
+                            batch[i].to_bits(),
+                            arms.pull_range(arm, from, to).to_bits(),
+                            "{storage:?} {order:?} arm={arm} [{from},{to})"
+                        );
+                    }
+                }
+                // Panel ≡ scattered, across bases and windows.
+                for base in [0usize, 7, 41, 102] {
+                    let mut panel = PullPanel::new();
+                    arms.compact_into(&ids, base, &mut panel);
+                    assert_eq!(panel.rows(), ids.len());
+                    assert_eq!(panel.base(), base);
+                    for (from, to) in
+                        [(base, 103), (base, base), (base, base + 1), (base + 1, 103)]
+                    {
+                        if to > 103 {
+                            continue;
+                        }
+                        let mut scatter = vec![0f64; ids.len()];
+                        arms.pull_range_batch(&ids, from, to, &mut scatter);
+                        let mut dense = vec![0f64; ids.len()];
+                        arms.pull_range_batch_panel(&panel, from, to, &mut dense);
+                        for (i, (a, b)) in scatter.iter().zip(&dense).enumerate() {
+                            assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "{storage:?} {order:?} base={base} [{from},{to}) row {i}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_panel_recompact_matches_fresh_compaction() {
+        // The compressed ping-pong pairs must re-compact exactly like
+        // the f32 pair (including the int8 scale lane riding along).
+        let mut rng = Rng::new(0x5CA1_F00D);
+        let m = Matrix::from_fn(17, 96, |_, _| rng.gaussian() as f32);
+        let q: Vec<f32> = rng.gaussian_vec(96);
+        for storage in [Storage::F16, Storage::Int8] {
+            let qm = QuantMatrix::quantize(&m, storage);
+            for order in [PullOrder::Permuted, PullOrder::BlockShuffled(11)] {
+                let arms = QuantArms::new(&qm, &q, quant_bound(&qm, &q), order, 4);
+                let ids: Vec<usize> = (0..17).collect();
+                let mut panel = PullPanel::new();
+                arms.compact_into(&ids, 5, &mut panel);
+                let slots = vec![14usize, 2, 9, 0];
+                panel.recompact(&slots, 23);
+                let kept: Vec<usize> = slots.iter().map(|&s| ids[s]).collect();
+                let mut fresh = PullPanel::new();
+                arms.compact_into(&kept, 23, &mut fresh);
+                assert_eq!(panel.rows(), fresh.rows());
+                assert_eq!(panel.base(), fresh.base());
+                assert_eq!(panel.stride(), fresh.stride());
+                // Pulls off the recompacted panel still match scatter.
+                let mut scatter = vec![0f64; kept.len()];
+                arms.pull_range_batch(&kept, 23, 96, &mut scatter);
+                let mut dense = vec![0f64; kept.len()];
+                arms.pull_range_batch_panel(&panel, 23, 96, &mut dense);
+                for (a, b) in scatter.iter().zip(&dense) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{storage:?} {order:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_means_are_within_recorded_error_of_f32_means() {
+        // |lossy mean − true mean| ≤ row_err·‖q‖₁/N (+ float-eval slack):
+        // the bias bound the two-tier index inflates its ε by.
+        let mut rng = Rng::new(0xB1A5);
+        let m = Matrix::from_fn(15, 128, |_, _| rng.gaussian() as f32);
+        let q: Vec<f32> = rng.gaussian_vec(128);
+        let l1: f32 = q.iter().map(|x| x.abs()).sum();
+        let f32_arms = MatrixArms::new(&m, &q, 16.0, PullOrder::Sequential, 3);
+        for storage in [Storage::F16, Storage::Bf16, Storage::Int8] {
+            let qm = QuantMatrix::quantize(&m, storage);
+            let arms =
+                QuantArms::new(&qm, &q, quant_bound(&qm, &q), PullOrder::Sequential, 3);
+            for i in 0..15 {
+                let bias = (qm.row_err(i) * l1) as f64 / 128.0;
+                let gap = (arms.true_mean(i) - f32_arms.true_mean(i)).abs();
+                assert!(
+                    gap <= bias + 1e-6,
+                    "{storage:?} arm {i}: gap {gap} > bias {bias}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quant_range_bounds_dequantized_rewards() {
+        let mut rng = Rng::new(0x0B0E);
+        let m = Matrix::from_fn(9, 40, |_, _| rng.gaussian() as f32);
+        let q: Vec<f32> = rng.gaussian_vec(40);
+        for storage in [Storage::F16, Storage::Bf16, Storage::Int8] {
+            let qm = QuantMatrix::quantize(&m, storage);
+            let arms = QuantArms::new(&qm, &q, quant_bound(&qm, &q), PullOrder::Permuted, 1);
+            let (a, b) = arms.reward_range();
+            // quant_bound is tight (no manual slack like the f32 toy
+            // test's 8.0), so allow one f32 product rounding of noise.
+            let tol = b * 1e-6 + 1e-9;
+            for i in 0..9 {
+                for j in 0..40 {
+                    let r = arms.pull_range(i, j, j + 1);
+                    assert!(
+                        r >= a - tol && r <= b + tol,
+                        "{storage:?} reward {r} outside [{a},{b}]"
+                    );
+                }
+            }
+        }
     }
 }

@@ -11,10 +11,23 @@
 //! MIPS reduces to MAB-BP by setting `R_i^(j) = v_i^(j) q^(j)`; a pull is
 //! one floating-point multiply, so *sample complexity = flop count*.
 //!
+//! # The Storage axis
+//!
+//! The reduction also works over a *compressed* dataset tier:
+//! [`QuantArms`] serves rewards `deq(c_i^(π(j))) · q^(π(j))` from
+//! f16/bf16/int8 codes (see [`crate::data::quant`]), streaming 2–4×
+//! fewer bytes per pull, with [`PullPanel`] staging compressed codes so
+//! survivor compaction shrinks proportionally. The bandit's confidence
+//! argument is untouched — [`QuantArms`] is a bounded-reward
+//! environment whose guarantee is stated against the *dequantized*
+//! means; the index layer (see [`crate::algos::BoundedMeIndex`])
+//! bridges to the true f32 means by shrinking ε by the recorded
+//! quantization bias and confirm-rescoring survivors on f32.
+//!
 //! | item | file |
 //! |---|---|
 //! | concentration bounds (`m(u)`, Hoeffding, Serfling) | [`bounds`] |
-//! | [`RewardSource`] trait + matrix / adversarial / explicit arms, pull-order scratch + survivor-compacted [`PullPanel`] | [`arms`] |
+//! | [`RewardSource`] trait + matrix / quantized / adversarial / explicit arms, pull-order scratch + survivor-compacted [`PullPanel`] | [`arms`] |
 //! | BOUNDEDME (Algorithm 1) + [`Compaction`] pull-layout policy | [`bounded_me`] |
 //! | classic Median Elimination (Even-Dar et al. 2002) | [`median_elim`] |
 //! | Successive Elimination | [`successive_elim`] |
@@ -31,7 +44,8 @@ pub mod median_elim;
 pub mod successive_elim;
 
 pub use arms::{
-    AdversarialArms, ExplicitArms, MatrixArms, PullOrder, PullPanel, PullScratch, RewardSource,
+    AdversarialArms, ExplicitArms, MatrixArms, PullOrder, PullPanel, PullScratch, QuantArms,
+    RewardSource,
 };
 pub use bounded_me::{
     force_no_compact_requested, BanditScratch, BoundedMe, BoundedMeConfig, Compaction,

@@ -26,9 +26,19 @@ pub struct Measurement {
     pub min: f64,
     /// Median iteration.
     pub median: f64,
+    /// Extra per-row fields serialized alongside the timing columns in
+    /// the JSON output (e.g. `storage`, `bytes_per_coord`, `simd_isa`
+    /// on mixed-precision rows). Diff tooling keys on `(name, storage)`
+    /// — see `scripts/bench_diff.py`.
+    pub tags: Vec<(&'static str, Json)>,
 }
 
 impl Measurement {
+    /// Attach a per-row JSON field (builder-style).
+    pub fn with_tag(mut self, key: &'static str, value: Json) -> Self {
+        self.tags.push((key, value));
+        self
+    }
     /// `value ± σ` with adaptive units.
     pub fn human(&self) -> String {
         fn fmt(s: f64) -> String {
@@ -106,6 +116,7 @@ impl Bencher {
             std: var.sqrt(),
             min: sorted.first().copied().unwrap_or(0.0),
             median: sorted.get(sorted.len() / 2).copied().unwrap_or(0.0),
+            tags: Vec::new(),
         }
     }
 }
@@ -134,6 +145,20 @@ impl Reporter {
         self.push(m);
     }
 
+    /// Measure + record with per-row JSON tags (see
+    /// [`Measurement::tags`]).
+    pub fn bench_tagged<T>(
+        &mut self,
+        b: &Bencher,
+        name: &str,
+        tags: &[(&'static str, Json)],
+        f: impl FnMut() -> T,
+    ) {
+        let mut m = b.iter(name, f);
+        m.tags.extend(tags.iter().cloned());
+        self.push(m);
+    }
+
     /// Recorded measurements.
     pub fn rows(&self) -> &[Measurement] {
         &self.rows
@@ -146,14 +171,16 @@ impl Reporter {
             .rows
             .iter()
             .map(|m| {
-                Json::obj([
+                let mut fields = vec![
                     ("name", Json::Str(m.name.clone())),
                     ("iters", Json::Num(m.iters as f64)),
                     ("mean_s", Json::Num(m.mean)),
                     ("std_s", Json::Num(m.std)),
                     ("min_s", Json::Num(m.min)),
                     ("median_s", Json::Num(m.median)),
-                ])
+                ];
+                fields.extend(m.tags.iter().cloned());
+                Json::obj(fields)
             })
             .collect();
         let mut fields = vec![
@@ -222,6 +249,29 @@ mod tests {
         r.bench(&b, "noop", || 1);
         assert_eq!(r.rows().len(), 1);
         r.finish("test");
+    }
+
+    #[test]
+    fn tags_serialize_per_row() {
+        let b = Bencher::new(Duration::from_millis(1), Duration::from_millis(5));
+        let mut r = Reporter::new();
+        r.bench_tagged(
+            &b,
+            "fused_scan_f16",
+            &[
+                ("storage", Json::Str("f16".into())),
+                ("bytes_per_coord", Json::Num(2.0)),
+            ],
+            || 1,
+        );
+        let doc = r.to_json("unit", &[]);
+        let parsed = crate::jsonlite::parse(&doc.dump()).unwrap();
+        let rows = match parsed.get("results").unwrap() {
+            Json::Arr(v) => v,
+            other => panic!("results not an array: {other:?}"),
+        };
+        assert_eq!(rows[0].get("storage").unwrap().as_str(), Some("f16"));
+        assert_eq!(rows[0].get("bytes_per_coord").unwrap().as_f64(), Some(2.0));
     }
 
     #[test]

@@ -13,8 +13,8 @@
 //! 2. **Batch (plan-aware).** The batcher resolves [`QueryMode::Auto`]
 //!    through [`QueryPlan`] **once per query at arrival**, then groups
 //!    queries by *execution shape* — exact scans together, BOUNDEDME
-//!    queries together per `(k, ε, δ)` knob triple — instead of by raw
-//!    arrival order. A group closes when it reaches `max_batch` or its
+//!    queries together per `(k, ε, δ)` knob triple and storage tier —
+//!    instead of by raw arrival order. A group closes when it reaches `max_batch` or its
 //!    oldest member has waited `batch_timeout`. Because a flushed group
 //!    is already knob-uniform, it hits the fused
 //!    [`crate::algos::MipsIndex::query_batch`] path (one shared
@@ -94,6 +94,7 @@ pub use stats::{MetricsRegistry, MetricsSnapshot};
 
 use crate::algos::{BoundedMeIndex, MipsIndex, MipsParams, MipsResult};
 use crate::bandit::PullOrder;
+use crate::data::quant::Storage;
 use crate::data::shard::{Shard, ShardSpec, ShardedMatrix};
 use crate::exec::shard::{shard_params, ShardPartial};
 use crate::exec::{PlanAlgo, QueryContext, QueryPlan};
@@ -143,6 +144,15 @@ pub struct CoordinatorConfig {
     /// on the direct fast path. With `S ≥ 2` shards the worker count is
     /// raised to at least `S` so every shard has a pinned worker.
     pub shard: ShardSpec,
+    /// Storage tier BOUNDEDME queries sample from (see
+    /// [`crate::data::quant::Storage`] and the two-tier path on
+    /// [`BoundedMeIndex::with_storage`]). Each shard index quantizes its
+    /// rows once at startup; exact scans always score on f32. The
+    /// batcher keys BOUNDEDME groups on the effective tier, and every
+    /// [`QueryResponse`] reports the tier it actually sampled from.
+    /// `RUST_PALLAS_FORCE_F32` collapses this to [`Storage::F32`]
+    /// process-wide. Default: [`Storage::F32`] (no compressed tier).
+    pub storage: Storage,
     /// Shard-level straggler hedging (reactor path only): after a
     /// dispatched shard batch has gone this long without completing,
     /// re-dispatch it to the shared hedge queue where any idle worker
@@ -182,6 +192,7 @@ impl Default for CoordinatorConfig {
             backend: Backend::Native,
             pull_order: PullOrder::BlockShuffled(0),
             shard: ShardSpec::single(),
+            storage: Storage::F32,
             hedge_delay: None,
             force_reactor: false,
             debug_slow_shard: None,
@@ -267,11 +278,13 @@ pub struct QueryResponse {
     pub indices: Vec<usize>,
     /// Scores, best first. Exact-mode answers always carry exact inner
     /// products. BOUNDEDME answers carry the bandit's estimates
-    /// (`N·p̂`) on an unsharded coordinator, but **exact rescored**
-    /// inner products on a sharded one (`S ≥ 2`) — the
-    /// sample-then-confirm merge ranks on true products (see
-    /// [`crate::exec::shard`]). Don't compare raw BOUNDEDME score
-    /// values across deployments with different shard counts.
+    /// (`N·p̂`) on an unsharded f32-tier coordinator, but **exact
+    /// rescored** inner products on a sharded one (`S ≥ 2`) or whenever
+    /// a compressed storage tier served the query (its confirm step
+    /// rescores survivors on f32; see
+    /// [`BoundedMeIndex::with_storage`]). Don't compare raw BOUNDEDME
+    /// score values across deployments with different shard counts or
+    /// storage tiers.
     pub scores: Vec<f32>,
     /// Flops spent.
     pub flops: u64,
@@ -297,6 +310,11 @@ pub struct QueryResponse {
     /// Shard partials merged into this answer (1 when unsharded, 0 for
     /// shed requests — they never produced shard work).
     pub shards: usize,
+    /// Storage tier the sampling step ran on: the deployment's
+    /// effective [`CoordinatorConfig::storage`] for BOUNDEDME answers,
+    /// [`Storage::F32`] for exact scans and shed replies. Compressed
+    /// answers were still *confirmed* on f32 (sample-then-confirm).
+    pub storage: Storage,
 }
 
 /// Submission failures.
@@ -403,14 +421,21 @@ impl Coordinator {
             PullOrder::BlockShuffled(0) => PullOrder::BlockShuffled(QueryPlan::block_width(dim)),
             o => o,
         };
-        // One shared index per shard: the colmax scan runs once per
-        // shard, and `Matrix` clones share storage, so the whole pool
-        // holds O(S·dim) metadata. Workers can serve *any* shard's
-        // hedge batches through these.
+        // One shared index per shard: the colmax scan (and, when a
+        // compressed tier is configured, the one-time quantization of
+        // the shard's rows) runs once per shard, and `Matrix` clones
+        // share storage, so the whole pool holds O(S·dim) metadata plus
+        // at most one compressed copy per shard. Workers can serve
+        // *any* shard's hedge batches through these.
         let indexes: Vec<Arc<BoundedMeIndex>> = sharded
             .shards()
             .iter()
-            .map(|s| Arc::new(BoundedMeIndex::with_order(s.matrix().clone(), order)))
+            .map(|s| {
+                Arc::new(
+                    BoundedMeIndex::with_order(s.matrix().clone(), order)
+                        .with_storage(cfg.storage),
+                )
+            })
             .collect();
 
         if use_reactor {
@@ -430,11 +455,13 @@ impl Coordinator {
             {
                 let metrics = metrics.clone();
                 let hedge_delay = cfg.hedge_delay;
+                let storage = indexes[0].storage();
                 threads.push(std::thread::Builder::new().name("reactor".into()).spawn(
                     move || {
                         Reactor {
                             n_shards,
                             dim,
+                            storage,
                             hedge_delay,
                             max_backlog: per_shard_cap,
                             batch_rx,
@@ -559,12 +586,13 @@ impl Coordinator {
 
 /// Group key for plan-aware batching: exact scans fuse regardless of
 /// `k` (one shared scoring slab, per-query top-K after), BOUNDEDME
-/// fuses only under equal `(k, ε, δ)` (one shared pull budget and
-/// permutation).
+/// fuses only under equal `(k, ε, δ)` *and* storage tier (one shared
+/// pull budget, permutation, and panel element type — a batch never
+/// mixes compressed and f32 sampling).
 #[derive(Clone, Copy, PartialEq, Eq)]
 enum GroupKey {
     Exact,
-    BoundedMe { k: usize, eps_bits: u64, delta_bits: u64 },
+    BoundedMe { k: usize, eps_bits: u64, delta_bits: u64, storage: Storage },
 }
 
 /// Resolve a request's execution mode: `Auto` goes through
@@ -642,6 +670,10 @@ fn run_batcher(
                         k: p.req.k,
                         eps_bits: p.req.epsilon.to_bits(),
                         delta_bits: p.req.delta.to_bits(),
+                        // The tier the deployment samples from (the
+                        // force-f32 hatch already applied): groups stay
+                        // tier-uniform if per-request tiers ever land.
+                        storage: cfg.storage.effective(),
                     },
                 };
                 let deadline = p.submitted + cfg.batch_timeout;
@@ -743,6 +775,10 @@ struct MergeState {
     /// could reorder ties.
     passthrough: bool,
     entries_direct: Vec<(f32, usize)>,
+    /// Tier the sampling step ran on (reported in the reply):
+    /// `Storage::F32` for exact queries, the deployment tier for
+    /// BOUNDEDME ones.
+    storage: Storage,
     flops: u64,
     remaining: usize,
     shed: bool,
@@ -780,6 +816,9 @@ struct Dispatch {
 struct Reactor {
     n_shards: usize,
     dim: usize,
+    /// Effective storage tier of the shard indexes (what BOUNDEDME
+    /// replies report).
+    storage: Storage,
     hedge_delay: Option<Duration>,
     /// Per-shard backlog bound; admission pauses while any shard's
     /// backlog is at the bound, preserving end-to-end backpressure.
@@ -873,6 +912,7 @@ impl Reactor {
                         worker: usize::MAX, // shed before any worker touched it
                         shed: true,
                         shards: 0,
+                        storage: Storage::F32,
                     });
                     continue;
                 }
@@ -895,6 +935,10 @@ impl Reactor {
                     top: TopK::new(top_k),
                     passthrough: self.n_shards == 1 && mode == QueryMode::BoundedMe,
                     entries_direct: Vec::new(),
+                    storage: match mode {
+                        QueryMode::Exact => Storage::F32,
+                        _ => self.storage,
+                    },
                     flops: 0,
                     remaining: self.n_shards,
                     shed: false,
@@ -1066,6 +1110,7 @@ impl Reactor {
                 worker,
                 shed: true,
                 shards: 0,
+                storage: Storage::F32,
             });
             return;
         }
@@ -1082,6 +1127,7 @@ impl Reactor {
             worker,
             shed: false,
             shards: self.n_shards,
+            storage: m.storage,
         });
     }
 }
@@ -1381,6 +1427,7 @@ fn serve_direct_batch(
                     worker: usize::MAX, // shed: no worker computed anything
                     shed: true,
                     shards: 0,
+                    storage: Storage::F32,
                 });
                 continue;
             }
@@ -1391,7 +1438,11 @@ fn serve_direct_batch(
         }
     }
 
-    let respond = |pending: &Pending, indices: Vec<usize>, scores: Vec<f32>, flops: u64| {
+    let respond = |pending: &Pending,
+                   indices: Vec<usize>,
+                   scores: Vec<f32>,
+                   flops: u64,
+                   storage: Storage| {
         let queue_wait = picked_up - pending.submitted;
         let service = picked_up.elapsed();
         metrics.record_query(queue_wait, service, flops);
@@ -1406,6 +1457,7 @@ fn serve_direct_batch(
             worker: worker_id,
             shed: false,
             shards: 1,
+            storage,
         });
     };
 
@@ -1432,6 +1484,7 @@ fn serve_direct_batch(
                 ranked.iter().map(|&(_, i)| i).collect(),
                 ranked.iter().map(|&(s, _)| s).collect(),
                 (rows * dim) as u64,
+                Storage::F32,
             );
         }
     }
@@ -1448,7 +1501,7 @@ fn serve_direct_batch(
             MipsParams { k: first.k, epsilon: first.epsilon, delta: first.delta, seed: first.seed };
         let queries: Vec<&[f32]> = bme.iter().map(|p| p.req.vector.as_slice()).collect();
         for (pending, res) in bme.iter().zip(index.query_batch(&queries, &params, ctx)) {
-            respond(pending, res.indices, res.scores, res.flops);
+            respond(pending, res.indices, res.scores, res.flops, index.storage());
         }
     } else {
         for pending in &bme {
@@ -1459,7 +1512,7 @@ fn serve_direct_batch(
                 seed: pending.req.seed,
             };
             let res = index.query_with(&pending.req.vector, &params, ctx);
-            respond(pending, res.indices, res.scores, res.flops);
+            respond(pending, res.indices, res.scores, res.flops, index.storage());
         }
     }
 }
@@ -1691,6 +1744,47 @@ mod tests {
             c.query_blocking(QueryRequest::bounded_me(q.clone(), 4, 1e-9, 0.1)).unwrap();
         assert_eq!(resp.indices, crate::algos::ground_truth(&data, &q, 4));
         assert_eq!(resp.shards, 3);
+        c.shutdown();
+    }
+
+    #[test]
+    fn compressed_tier_round_trips_and_reports_storage() {
+        let ds = gaussian_dataset(150, 128, 55);
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(1),
+            queue_capacity: 128,
+            backend: Backend::Native,
+            pull_order: PullOrder::BlockShuffled(16),
+            shard: ShardSpec::single(),
+            storage: Storage::F16,
+            ..Default::default()
+        };
+        let data = ds.vectors.clone();
+        let q = ds.sample_query(4);
+        let c = Coordinator::new(ds.vectors, cfg).unwrap();
+        // Exact scans never touch the compressed tier.
+        let resp = c.query_blocking(QueryRequest::exact(q.clone(), 5)).unwrap();
+        assert_eq!(resp.storage, Storage::F32);
+        assert_eq!(resp.indices, crate::algos::ground_truth(&data, &q, 5));
+        // BOUNDEDME reports the deployment tier (F32 under the
+        // RUST_PALLAS_FORCE_F32 leg) and ε→0 stays exact — the index
+        // falls back to the f32 tier when the budget can't absorb the
+        // quantization bias.
+        let resp =
+            c.query_blocking(QueryRequest::bounded_me(q.clone(), 3, 1e-9, 0.05)).unwrap();
+        assert_eq!(resp.storage, Storage::F16.effective());
+        let mut got = resp.indices.clone();
+        got.sort_unstable();
+        let mut want = crate::algos::ground_truth(&data, &q, 3);
+        want.sort_unstable();
+        assert_eq!(got, want);
+        // A loose-ε query actually samples compressed; the answer is
+        // still a full k-set.
+        let resp = c.query_blocking(QueryRequest::bounded_me(q, 3, 0.3, 0.2)).unwrap();
+        assert_eq!(resp.storage, Storage::F16.effective());
+        assert_eq!(resp.indices.len(), 3);
         c.shutdown();
     }
 

@@ -192,6 +192,7 @@ pub fn handle_line(line: &str, coord: &Coordinator) -> Json {
                     ("flops", Json::Num(resp.flops as f64)),
                     ("service_ms", Json::Num(resp.service.as_secs_f64() * 1e3)),
                     ("batch", Json::Num(resp.batch_size as f64)),
+                    ("storage", Json::Str(resp.storage.label().into())),
                 ]),
                 Err(CoordinatorError::QueueFull) => err_response("overloaded"),
                 Err(e) => err_response(&e.to_string()),

@@ -1,0 +1,435 @@
+//! Mixed-precision dataset tier: compressed storage with recorded
+//! quantization error.
+//!
+//! Every hot path is memory-bandwidth-bound, so the [`Storage`] axis —
+//! `f16`, `bf16`, or `int8` with a per-row scale — halves or quarters
+//! the bytes streamed per coordinate pull. The catch is that the
+//! bandit's (ε, δ) confidence argument assumes the rewards it samples
+//! are the true rewards; a lossy tier breaks that unless the error is
+//! *accounted for*. [`QuantMatrix::quantize`] therefore records, per
+//! row, the max absolute dequantization error
+//! (`max_j |deq(code_ij) − v_ij|`). The two-tier query path (see
+//! [`crate::algos::BoundedMeIndex`]) turns that into a bound on the
+//! mean-reward bias — for a query `q`, the lossy mean of arm `i` is
+//! within `row_err(i)·‖q‖₁/N` of the true mean — shrinks its effective
+//! ε by twice that bias, samples the bandit on the compressed tier, and
+//! confirm-rescores the returned arms exactly on f32. The guarantee
+//! survives because ε-optimality under the lossy means plus a uniform
+//! mean bias `b` implies (ε + 2b)-optimality under the true means.
+//!
+//! The compressed codes live in [`Arc`]s so a `QuantMatrix` clones
+//! cheaply alongside its parent [`Matrix`] (same pattern as the
+//! zero-copy shard views). Scoring kernels over the codes live in
+//! [`crate::linalg::simd::wide`]; this module is storage + error
+//! accounting only.
+//!
+//! `RUST_PALLAS_FORCE_F32` (any value other than empty or `"0"`) is the
+//! tier escape hatch, mirroring `RUST_PALLAS_FORCE_SCALAR` /
+//! `RUST_PALLAS_FORCE_NO_COMPACT`: [`Storage::effective`] collapses
+//! every tier to [`Storage::F32`], so a pinned process is bit-identical
+//! to a build without the mixed-precision subsystem. The variable is
+//! read once per process.
+
+use crate::linalg::simd::wide::{bf16_from_f32, bf16_to_f32, f16_from_f32, f16_to_f32};
+use crate::linalg::Matrix;
+use std::sync::{Arc, OnceLock};
+
+/// Environment variable pinning the f32 tier (escape hatch + CI matrix
+/// leg). Any value other than empty or `"0"` forces f32.
+pub const FORCE_F32_ENV: &str = "RUST_PALLAS_FORCE_F32";
+
+static FORCE_F32: OnceLock<bool> = OnceLock::new();
+
+/// True when [`FORCE_F32_ENV`] pins the f32 tier. Read once per process
+/// (cached), like the no-compact hatch: tier selection happens at index
+/// build time, so mid-process env flips must not split an index's
+/// tiers.
+pub fn force_f32_requested() -> bool {
+    *FORCE_F32.get_or_init(|| match std::env::var(FORCE_F32_ENV) {
+        Ok(v) => !(v.is_empty() || v == "0"),
+        Err(_) => false,
+    })
+}
+
+/// Dataset storage tier: how the indexed vectors are laid out for the
+/// bandit's sampling reads. `F32` is the exact (and default) tier; the
+/// compressed tiers trade per-read precision for memory bandwidth and
+/// are always paired with an f32 confirm pass by the query path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Storage {
+    /// Exact single-precision rows (the seed behavior).
+    #[default]
+    F32,
+    /// IEEE binary16: 2 bytes/coord, ~3 decimal digits, hardware
+    /// widening via F16C / AVX-512.
+    F16,
+    /// bfloat16 (truncated f32): 2 bytes/coord, f32's dynamic range,
+    /// 8-bit mantissa; widening is an integer shift on every ISA.
+    Bf16,
+    /// Signed 8-bit codes with one f32 scale per row: 1 byte/coord.
+    Int8,
+}
+
+impl Storage {
+    /// Bytes streamed per coordinate on this tier (the bandwidth lever;
+    /// benches emit this next to their timings).
+    pub fn bytes_per_coord(self) -> usize {
+        match self {
+            Storage::F32 => 4,
+            Storage::F16 | Storage::Bf16 => 2,
+            Storage::Int8 => 1,
+        }
+    }
+
+    /// Stable lowercase label for logs, bench rows, and response
+    /// reporting.
+    pub fn label(self) -> &'static str {
+        match self {
+            Storage::F32 => "f32",
+            Storage::F16 => "f16",
+            Storage::Bf16 => "bf16",
+            Storage::Int8 => "int8",
+        }
+    }
+
+    /// The tier actually used once the process-wide
+    /// [`FORCE_F32_ENV`] pin is applied.
+    pub fn effective(self) -> Storage {
+        self.effective_with(force_f32_requested())
+    }
+
+    /// Pin policy, exposed for tests: `force_f32` collapses every tier
+    /// to [`Storage::F32`] exactly like the env var does (the env var
+    /// is consulted by [`Storage::effective`], not here, so tests can
+    /// exercise both branches in-process).
+    pub fn effective_with(self, force_f32: bool) -> Storage {
+        if force_f32 {
+            Storage::F32
+        } else {
+            self
+        }
+    }
+}
+
+/// The compressed codes of one tier. `u16` payloads are f16 or bf16
+/// bit patterns depending on the variant; int8 carries one f32 scale
+/// per row (`value ≈ code · scale`).
+#[derive(Clone, Debug)]
+enum QuantData {
+    F16(Arc<Vec<u16>>),
+    Bf16(Arc<Vec<u16>>),
+    Int8 {
+        codes: Arc<Vec<i8>>,
+        scales: Arc<Vec<f32>>,
+    },
+}
+
+/// A row-major compressed copy of a [`Matrix`] with per-row recorded
+/// quantization error — the sampling tier of a two-tier index. Cheap to
+/// clone (the code buffers are shared).
+#[derive(Clone, Debug)]
+pub struct QuantMatrix {
+    rows: usize,
+    cols: usize,
+    storage: Storage,
+    data: QuantData,
+    /// `row_err[i] = max_j |deq(code_ij) − v_ij|`: the per-row bound
+    /// the two-tier query path inflates its elimination ε by.
+    row_err: Vec<f32>,
+    /// `max(row_err)` — the uniform bound used when one number must
+    /// cover every arm.
+    max_err: f32,
+    /// Per-column max |dequantized value|: the compressed tier's own
+    /// reward-range bound (computed over *dequantized* values so the
+    /// range covers exactly what the bandit reads).
+    colmax: Vec<f32>,
+}
+
+impl QuantMatrix {
+    /// Compress `m` onto `storage`, recording per-row max
+    /// dequantization error and the dequantized per-column range.
+    ///
+    /// int8 uses a symmetric per-row scale `maxabs/127` (an all-zero
+    /// row gets scale 0 and exact codes). Round-to-nearest-even for the
+    /// float formats, round-half-away for int8 codes — both errors are
+    /// *measured* after the fact rather than trusted from theory, so
+    /// the recorded bounds are exact for the data at hand.
+    ///
+    /// # Panics
+    /// If `storage` is [`Storage::F32`] — the exact tier has no
+    /// compressed representation; gate on `storage.effective()` first.
+    pub fn quantize(m: &Matrix, storage: Storage) -> QuantMatrix {
+        assert!(
+            storage != Storage::F32,
+            "QuantMatrix::quantize: F32 is the uncompressed tier"
+        );
+        let (rows, cols) = (m.rows(), m.cols());
+        let mut row_err = vec![0f32; rows];
+        let mut colmax = vec![0f32; cols];
+        let mut track = |i: usize, j: usize, orig: f32, deq: f32| {
+            let err = (deq - orig).abs();
+            if err > row_err[i] {
+                row_err[i] = err;
+            }
+            if deq.abs() > colmax[j] {
+                colmax[j] = deq.abs();
+            }
+        };
+        let data = match storage {
+            Storage::F32 => unreachable!(),
+            Storage::F16 => {
+                let mut codes = Vec::with_capacity(rows * cols);
+                for i in 0..rows {
+                    for (j, &v) in m.row(i).iter().enumerate() {
+                        let c = f16_from_f32(v);
+                        track(i, j, v, f16_to_f32(c));
+                        codes.push(c);
+                    }
+                }
+                QuantData::F16(Arc::new(codes))
+            }
+            Storage::Bf16 => {
+                let mut codes = Vec::with_capacity(rows * cols);
+                for i in 0..rows {
+                    for (j, &v) in m.row(i).iter().enumerate() {
+                        let c = bf16_from_f32(v);
+                        track(i, j, v, bf16_to_f32(c));
+                        codes.push(c);
+                    }
+                }
+                QuantData::Bf16(Arc::new(codes))
+            }
+            Storage::Int8 => {
+                let mut codes = Vec::with_capacity(rows * cols);
+                let mut scales = Vec::with_capacity(rows);
+                for i in 0..rows {
+                    let row = m.row(i);
+                    let maxabs = row.iter().fold(0f32, |m, &v| m.max(v.abs()));
+                    let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 0.0 };
+                    let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+                    for (j, &v) in row.iter().enumerate() {
+                        let c = (v * inv).round().clamp(-127.0, 127.0) as i8;
+                        track(i, j, v, c as f32 * scale);
+                        codes.push(c);
+                    }
+                    scales.push(scale);
+                }
+                QuantData::Int8 { codes: Arc::new(codes), scales: Arc::new(scales) }
+            }
+        };
+        let max_err = row_err.iter().fold(0f32, |m, &e| m.max(e));
+        QuantMatrix { rows, cols, storage, data, row_err, max_err, colmax }
+    }
+
+    /// Number of rows (arms).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Row length (coordinates / pulls per arm).
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The tier these codes are stored on (never [`Storage::F32`]).
+    pub fn storage(&self) -> Storage {
+        self.storage
+    }
+
+    /// Full f16/bf16 code buffer (row-major).
+    ///
+    /// # Panics
+    /// On the int8 tier.
+    pub fn codes_u16(&self) -> &[u16] {
+        match &self.data {
+            QuantData::F16(c) | QuantData::Bf16(c) => c,
+            QuantData::Int8 { .. } => panic!("codes_u16 on int8 tier"),
+        }
+    }
+
+    /// Full int8 code buffer (row-major).
+    ///
+    /// # Panics
+    /// On the f16/bf16 tiers.
+    pub fn codes_i8(&self) -> &[i8] {
+        match &self.data {
+            QuantData::Int8 { codes, .. } => codes,
+            _ => panic!("codes_i8 on float tier"),
+        }
+    }
+
+    /// One row of f16/bf16 codes.
+    pub fn row_u16(&self, i: usize) -> &[u16] {
+        &self.codes_u16()[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// One row of int8 codes.
+    pub fn row_i8(&self, i: usize) -> &[i8] {
+        &self.codes_i8()[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Per-row int8 scales (`value ≈ code · scale`).
+    ///
+    /// # Panics
+    /// On the f16/bf16 tiers.
+    pub fn scales(&self) -> &[f32] {
+        match &self.data {
+            QuantData::Int8 { scales, .. } => scales,
+            _ => panic!("scales on float tier"),
+        }
+    }
+
+    /// Row `i`'s int8 scale.
+    pub fn scale(&self, i: usize) -> f32 {
+        self.scales()[i]
+    }
+
+    /// Recorded max |dequantized − original| of row `i`.
+    pub fn row_err(&self, i: usize) -> f32 {
+        self.row_err[i]
+    }
+
+    /// Max of [`QuantMatrix::row_err`] over all rows.
+    pub fn max_err(&self) -> f32 {
+        self.max_err
+    }
+
+    /// Per-column max |dequantized value| — the compressed tier's
+    /// reward-range fold input (the analog of the f32 index's colmax).
+    pub fn colmax(&self) -> &[f32] {
+        &self.colmax
+    }
+
+    /// Dequantize one element (reference path for tests and the bandit's
+    /// single-coordinate `pull_iid`).
+    pub fn dequantize(&self, i: usize, j: usize) -> f32 {
+        match &self.data {
+            QuantData::F16(c) => f16_to_f32(c[i * self.cols + j]),
+            QuantData::Bf16(c) => bf16_to_f32(c[i * self.cols + j]),
+            QuantData::Int8 { codes, scales } => {
+                codes[i * self.cols + j] as f32 * scales[i]
+            }
+        }
+    }
+
+    /// Dequantize a full row into a fresh vector (test/diagnostic path;
+    /// the hot paths widen in registers instead).
+    pub fn dequantize_row(&self, i: usize) -> Vec<f32> {
+        (0..self.cols).map(|j| self.dequantize(i, j)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    fn gaussian_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(rows, cols, |_, _| rng.gaussian() as f32)
+    }
+
+    #[test]
+    fn round_trip_error_is_recorded_exactly_and_bounded() {
+        let m = gaussian_matrix(23, 97, 0xC0DE);
+        for storage in [Storage::F16, Storage::Bf16, Storage::Int8] {
+            let qm = QuantMatrix::quantize(&m, storage);
+            assert_eq!(qm.rows(), 23);
+            assert_eq!(qm.cols(), 97);
+            assert_eq!(qm.storage(), storage);
+            let mut global = 0f32;
+            for i in 0..qm.rows() {
+                let row = m.row(i);
+                let maxabs = row.iter().fold(0f32, |a, &v| a.max(v.abs()));
+                let mut worst = 0f32;
+                for j in 0..qm.cols() {
+                    let err = (qm.dequantize(i, j) - row[j]).abs();
+                    // Recorded per-row bound covers every element…
+                    assert!(err <= qm.row_err(i), "{storage:?} row {i} col {j}");
+                    worst = worst.max(err);
+                }
+                // …and is tight (it IS the max, not an over-estimate).
+                assert_eq!(worst, qm.row_err(i), "{storage:?} row {i}");
+                global = global.max(worst);
+                // Theoretical format bounds: f16 ≈ 2^-11, bf16 ≈ 2^-8
+                // relative (half-ulp, slackened 2× for exponent-bucket
+                // edges), int8 = half a code step.
+                let theory = match storage {
+                    Storage::F16 => maxabs * 2f32.powi(-10),
+                    Storage::Bf16 => maxabs * 2f32.powi(-7),
+                    Storage::Int8 => maxabs / 127.0 * 0.5 + 1e-6,
+                    Storage::F32 => unreachable!(),
+                };
+                assert!(
+                    qm.row_err(i) <= theory,
+                    "{storage:?} row {i}: err {} vs theory {theory}",
+                    qm.row_err(i)
+                );
+            }
+            assert_eq!(global, qm.max_err(), "{storage:?} max_err");
+        }
+    }
+
+    #[test]
+    fn colmax_bounds_every_dequantized_element() {
+        let m = gaussian_matrix(17, 64, 0xFACE);
+        for storage in [Storage::F16, Storage::Bf16, Storage::Int8] {
+            let qm = QuantMatrix::quantize(&m, storage);
+            for i in 0..qm.rows() {
+                for j in 0..qm.cols() {
+                    assert!(
+                        qm.dequantize(i, j).abs() <= qm.colmax()[j],
+                        "{storage:?} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_zero_row_is_exact() {
+        let mut m = gaussian_matrix(3, 16, 7);
+        m = Matrix::from_fn(3, 16, |i, j| if i == 1 { 0.0 } else { m.row(i)[j] });
+        let qm = QuantMatrix::quantize(&m, Storage::Int8);
+        assert_eq!(qm.scale(1), 0.0);
+        assert_eq!(qm.row_err(1), 0.0);
+        assert!(qm.row_i8(1).iter().all(|&c| c == 0));
+        assert_eq!(qm.dequantize_row(1), vec![0.0; 16]);
+    }
+
+    #[test]
+    fn int8_codes_saturate_at_127() {
+        let m = Matrix::from_fn(1, 4, |_, j| [1.0f32, -1.0, 0.5, 0.0][j]);
+        let qm = QuantMatrix::quantize(&m, Storage::Int8);
+        assert_eq!(qm.row_i8(0), &[127, -127, 64, 0]);
+        // Scale reconstructs the max element exactly.
+        assert_eq!(qm.dequantize(0, 0), 1.0);
+    }
+
+    #[test]
+    fn storage_metadata_and_pin_policy() {
+        assert_eq!(Storage::F32.bytes_per_coord(), 4);
+        assert_eq!(Storage::F16.bytes_per_coord(), 2);
+        assert_eq!(Storage::Bf16.bytes_per_coord(), 2);
+        assert_eq!(Storage::Int8.bytes_per_coord(), 1);
+        assert_eq!(Storage::default(), Storage::F32);
+        for s in [Storage::F32, Storage::F16, Storage::Bf16, Storage::Int8] {
+            // The pin collapses every tier to f32; unpinned is identity.
+            assert_eq!(s.effective_with(true), Storage::F32);
+            assert_eq!(s.effective_with(false), s);
+            assert!(!s.label().is_empty());
+        }
+        // When CI's f32 leg pinned the process, effective() must honor it.
+        if force_f32_requested() {
+            assert_eq!(Storage::Int8.effective(), Storage::F32);
+        }
+    }
+
+    #[test]
+    fn quant_matrix_clones_share_codes() {
+        let m = gaussian_matrix(8, 32, 3);
+        let qm = QuantMatrix::quantize(&m, Storage::F16);
+        let cl = qm.clone();
+        assert!(std::ptr::eq(qm.codes_u16().as_ptr(), cl.codes_u16().as_ptr()));
+    }
+}

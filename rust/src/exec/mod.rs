@@ -46,6 +46,7 @@
 pub mod shard;
 
 use crate::bandit::{m_bounded, BanditScratch, PullOrder, PullScratch};
+use crate::data::quant::Storage;
 
 /// Reusable scoring scratch: the exact-score slab (one `f32` per
 /// row × query).
@@ -140,6 +141,12 @@ pub struct QueryPlan {
     pub order: PullOrder,
     /// Estimated first-round pulls per arm (diagnostic).
     pub first_round_pulls: usize,
+    /// Storage tier the execution should sample from ([`Storage::F32`]
+    /// unless overridden via [`QueryPlan::with_storage`]; `Exact` plans
+    /// always score on f32 regardless). The coordinator's plan-aware
+    /// batcher groups on it so a batch shares one tier's kernels and
+    /// panel element type end-to-end.
+    pub storage: Storage,
 }
 
 impl QueryPlan {
@@ -149,7 +156,12 @@ impl QueryPlan {
         let order = PullOrder::BlockShuffled(Self::block_width(dim));
         if dim < 64 {
             // Too few coordinates for sampling to amortize its overhead.
-            return Self { algo: PlanAlgo::Exact, order, first_round_pulls: dim };
+            return Self {
+                algo: PlanAlgo::Exact,
+                order,
+                first_round_pulls: dim,
+                storage: Storage::F32,
+            };
         }
         let eps = epsilon.clamp(f64::MIN_POSITIVE, 1.0);
         let delta = delta.clamp(1e-12, 1.0 - 1e-12);
@@ -158,7 +170,15 @@ impl QueryPlan {
         let first = m_bounded(eps / 8.0, delta / 2.0, dim, 1.0);
         let algo = if first >= dim { PlanAlgo::Exact } else { PlanAlgo::BoundedMe };
         let _ = k;
-        Self { algo, order, first_round_pulls: first }
+        Self { algo, order, first_round_pulls: first, storage: Storage::F32 }
+    }
+
+    /// Route the plan's sampling step to a compressed storage tier (the
+    /// `RUST_PALLAS_FORCE_F32` hatch is applied here, so a plan never
+    /// carries a tier the process has disabled).
+    pub fn with_storage(mut self, storage: Storage) -> Self {
+        self.storage = storage.effective();
+        self
     }
 
     /// Block width for the block-shuffled pull order: dense enough for
@@ -216,6 +236,16 @@ mod tests {
         assert_eq!(QueryPlan::block_width(64), 16);
         assert_eq!(QueryPlan::block_width(100_000), 256);
         assert!(QueryPlan::block_width(8) <= 8);
+    }
+
+    #[test]
+    fn plans_default_to_f32_storage() {
+        let p = QueryPlan::pick(5, 0.3, 0.2, 4096);
+        assert_eq!(p.storage, Storage::F32);
+        let p = p.with_storage(Storage::F16);
+        // `with_storage` applies the force-f32 hatch eagerly.
+        assert_eq!(p.storage, Storage::F16.effective());
+        assert_eq!(p.with_storage(Storage::F32).storage, Storage::F32);
     }
 
     #[test]

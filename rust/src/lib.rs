@@ -32,11 +32,11 @@
 //!
 //! | module | contents |
 //! |---|---|
-//! | [`linalg`] | dense matrix/vector substrate (incl. zero-copy row views), RNG, PCA, top-K utilities; [`linalg::simd`] runtime-dispatched SIMD kernels (AVX-512/AVX2/NEON/scalar incl. hardware gather + software prefetch) |
-//! | [`bandit`] | MAB-BP framework, BOUNDEDME with the survivor-compacting panel layout ([`bandit::PullPanel`] + [`bandit::Compaction`] policy), bandit baselines, pull-order scratch |
-//! | [`algos`]  | MIPS indexes: naive, BoundedME, Greedy-, LSH-, PCA-, RPT-MIPS — with shard-aware batch entry points |
-//! | [`exec`]   | zero-allocation execution core: `QueryContext` arena + `QueryPlan`; [`exec::shard`] fan-out/merge layer |
-//! | [`data`]   | dataset substrate: synthetic, adversarial, ALS matrix factorization; [`data::shard`] row sharding |
+//! | [`linalg`] | dense matrix/vector substrate (incl. zero-copy row views), RNG, PCA, top-K utilities; [`linalg::simd`] runtime-dispatched SIMD kernels (AVX-512/AVX2/NEON/scalar incl. hardware gather + software prefetch); [`linalg::simd::wide`] widening kernels over compressed f16/bf16/int8 codes |
+//! | [`bandit`] | MAB-BP framework, BOUNDEDME with the survivor-compacting panel layout ([`bandit::PullPanel`] + [`bandit::Compaction`] policy), compressed-tier arms ([`bandit::QuantArms`]), bandit baselines, pull-order scratch |
+//! | [`algos`]  | MIPS indexes: naive, BoundedME (incl. the two-tier sample-then-confirm compressed path), Greedy-, LSH-, PCA-, RPT-MIPS — with shard-aware batch entry points |
+//! | [`exec`]   | zero-allocation execution core: `QueryContext` arena + `QueryPlan` (incl. the [`data::quant::Storage`] axis); [`exec::shard`] fan-out/merge layer |
+//! | [`data`]   | dataset substrate: synthetic, adversarial, ALS matrix factorization; [`data::shard`] row sharding; [`data::quant`] mixed-precision compressed dataset tiers |
 //! | [`metrics`] | precision@K, flop accounting, latency sketches |
 //! | [`runtime`] | scoring engines; PJRT/XLA artifact execution behind the `pjrt` feature |
 //! | [`coordinator`] | serving layer: plan-aware dynamic batcher, event-driven reactor (shard fan-out, completion-event merge, straggler hedging), S = 1 fast path, shard-pinned worker pool |
@@ -76,6 +76,31 @@
 //! fused/sharded/hedged byte-identity battery are layout-independent;
 //! the `hotpath` bench's `pull_scatter` vs `pull_panel` rows track the
 //! win at survivor fractions 1.0 / 0.25 / 0.05.
+//!
+//! ## Mixed-precision storage tier
+//!
+//! The hot paths are memory-bandwidth-bound, so the biggest raw-speed
+//! lever left is bytes per coordinate. [`data::quant`] adds a
+//! [`data::quant::Storage`] axis — `f32 | f16 | bf16 | int8` (int8 with
+//! a per-row scale) — building a compressed copy of the dataset with
+//! the **per-row max quantization error recorded**, and
+//! [`linalg::simd::wide`] supplies widening kernel tables per format
+//! (F16C / AVX-512 on x86-64, NEON widening on aarch64, scalar always)
+//! that keep the blocked ≡ `dot` per-row bit contract on the compressed
+//! codes. A storage-configured [`algos::BoundedMeIndex`]
+//! (`with_storage`) answers in **two tiers**: BOUNDEDME *samples* the
+//! compressed codes with its ε budget shrunk by the worst-case
+//! quantization bias `2·max_row_err·‖q‖₁/N` — so the (ε, δ) guarantee
+//! stays stated against the **true f32 means** — then *confirms* the
+//! ≤ k survivors with an exact f32 rescore and re-ranks on exact
+//! scores. When the bias would exhaust the ε budget (e.g. ε → 0) the
+//! query silently falls back to the f32 tier: compression never costs
+//! correctness, only the bandwidth win. `RUST_PALLAS_FORCE_F32=1`
+//! collapses every tier back to f32 (a CI leg runs the whole suite
+//! under it — storage-configured deployments must be bit-identical to
+//! ones without the subsystem). The serving layer takes its tier from
+//! [`coordinator::CoordinatorConfig::storage`], batches by it, and
+//! reports the answering tier in each [`coordinator::QueryResponse`].
 //!
 //! ## Sharded execution
 //!
@@ -135,6 +160,14 @@
 //! let refs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
 //! let batch = index.query_batch(&refs, &params, &mut ctx);
 //! assert_eq!(batch.len(), 32);
+//!
+//! // Mixed-precision: sample int8 codes (4× less memory traffic),
+//! // confirm survivors exactly on f32 — same (ε, δ) guarantee.
+//! use bandit_mips::data::quant::Storage;
+//! let compressed =
+//!     BoundedMeIndex::new(ds.vectors.clone()).with_storage(Storage::Int8);
+//! let res = compressed.query_with(&ds.sample_query(7), &params, &mut ctx);
+//! assert_eq!(res.indices.len(), 5);
 //! ```
 
 pub mod algos;

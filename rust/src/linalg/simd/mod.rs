@@ -55,6 +55,22 @@
 //! prefetch hint the panel scan issues one row ahead of the blocked
 //! kernels (no-op off x86-64).
 //!
+//! # The Storage axis: widening kernels ([`wide`])
+//!
+//! The mixed-precision dataset tier (`f16` / `bf16` / `int8` storage,
+//! see [`crate::data::quant`]) adds a second dispatch axis: per
+//! compressed format, [`wide`] holds a [`wide::WideKernels`] table of
+//! `dot` / `dot_rows` / `partial_dot_rows` / `gather` kernels that load
+//! compressed elements and widen them to f32 *in registers* (F16C /
+//! AVX-512 / NEON integer widening), so the bandit's sampling tier
+//! streams 2 or 4 bytes per coordinate instead of 4. The wide tables
+//! follow this module's contracts — per-process [`OnceLock`] dispatch,
+//! the `RUST_PALLAS_FORCE_SCALAR` pin, blocked ≡ dot per-row
+//! bit-identity, exact gathers — and [`wide::format_isas`] reports the
+//! per-format capability (`"f16c"`, `"avx2-widen"`, …) alongside
+//! [`active_isa`] so benches and batteries know which formats are
+//! hardware-backed on the runner.
+//!
 //! # Float-reassociation tolerance contract
 //!
 //! Different ISAs accumulate in different orders (scalar: 16 f32 lanes,
@@ -97,6 +113,7 @@ mod avx512;
 #[cfg(target_arch = "aarch64")]
 mod neon;
 mod scalar;
+pub mod wide;
 
 /// Environment variable pinning the scalar table (debug/CI escape
 /// hatch). Any value other than empty or `"0"` forces scalar.

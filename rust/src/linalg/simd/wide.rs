@@ -1,0 +1,983 @@
+//! Widening kernels for the compressed dataset tiers (`f16`, `bf16`,
+//! `int8`): the hardware floor of mixed-precision scoring.
+//!
+//! Every hot path in the repo is memory-bandwidth-bound, so halving or
+//! quartering bytes-per-coordinate is the biggest raw-speed lever left
+//! (see the `fused_scan_*` / `pull_panel_*` rows of the `hotpath`
+//! bench). This module mirrors the parent module's design one axis
+//! over: per compressed element type there is a [`WideKernels`] table
+//! of plain `fn` pointers — `dot`, `dot_rows`, `partial_dot_rows`,
+//! `gather` — selected **once per process** per format and cached in a
+//! [`OnceLock`], honoring the same `RUST_PALLAS_FORCE_SCALAR` escape
+//! hatch as the f32 tables. Kernels *load compressed, widen in
+//! registers, accumulate in f32* — the dataset stays 2 or 4 bytes per
+//! coordinate in memory and only becomes f32 inside the FMA loop.
+//!
+//! # Formats
+//!
+//! * **f16** (IEEE 754 binary16, stored as `u16`): exact 8/16-lane
+//!   hardware widening via F16C `vcvtph2ps` on x86 (`f16c` detected)
+//!   and the AVX-512F form on `avx512f` machines. Decode is *exact*
+//!   (every f16 is representable in f32), so scalar and hardware
+//!   widening produce identical element values.
+//! * **bf16** (truncated f32, stored as `u16`): widening is a zero-cost
+//!   integer shift (`u32 << 16`), done 8/16-lanes at a time on x86 and
+//!   4-lanes on NEON. Exact decode, same agreement story as f16.
+//! * **int8** (per-row-scaled codes, stored as `i8`): kernels compute
+//!   the **raw unscaled** code·query sum (`i8 → f32` conversion is
+//!   exact); the caller multiplies by the row's scale. Keeping the
+//!   scale outside the kernel keeps the table shape uniform and lets
+//!   the panel paths carry one scale per survivor row.
+//!
+//! # Contracts (mirroring the parent module)
+//!
+//! 1. Within one table, `dot_rows` / `partial_dot_rows` ≡ `dot` per row
+//!    **bit for bit** (the blocked kernels are per-row loops over the
+//!    table's own `dot`; row-blocking with shared query registers is a
+//!    recorded follow-on).
+//! 2. The scalar wide `dot` replicates the f32 scalar backend's
+//!    16-lane pairwise accumulation structure exactly, so for the
+//!    exact-decode formats (f16/bf16) `scalar_wide(dot)(codes, q)` is
+//!    bit-identical to `scalar(dot)(decode(codes), q)`.
+//! 3. Cross-table agreement is the parent module's ~1e-4 relative
+//!    tolerance (different accumulation orders).
+//! 4. `gather` is pure element movement (no widening) and exact on
+//!    every backend.
+//!
+//! # Capability reporting
+//!
+//! ISA labels distinguish *hardware-backed* widening from
+//! *scalar-widened* fallbacks: `"f16c"` / `"avx512"` for hardware f16,
+//! `"avx2-widen"` / `"avx512-widen"` / `"neon-widen"` for integer-path
+//! widening, `"scalar"` otherwise. On aarch64 the f16 table is the
+//! scalar one — Rust's native NEON fp16 intrinsics are not yet stable
+//! (recorded follow-on); bf16/int8 get real NEON kernels.
+//! [`format_isas`] summarizes all four formats for benches and the
+//! agreement batteries.
+
+use super::force_scalar_requested;
+use std::sync::OnceLock;
+
+/// Accumulator width of the scalar wide kernels — must equal the f32
+/// scalar backend's lane count so contract 2 (module docs) holds.
+const LANES: usize = 16;
+
+// ---------------------------------------------------------------------------
+// Element conversions (exact decodes; round-to-nearest-even encodes)
+// ---------------------------------------------------------------------------
+
+/// Decode one IEEE binary16 value to f32. Exact for every input,
+/// including subnormals, infinities, and NaN (payload preserved in the
+/// top 10 bits, quiet bit kept).
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let mant = (h & 0x03ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign // signed zero
+        } else {
+            // Subnormal: value = mant·2⁻²⁴ = 1.x·2^(p−24) where p is the
+            // mantissa's MSB position; f32 exponent field = p + 103.
+            let p = 31 - mant.leading_zeros();
+            sign | ((p + 103) << 23) | ((mant << (23 - p)) & 0x007f_ffff)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13) // inf / NaN
+    } else {
+        sign | ((exp as u32 + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Encode an f32 to IEEE binary16 with round-to-nearest-even, the
+/// rounding F16C `vcvtps2ph` performs. Overflow saturates to infinity;
+/// NaN stays NaN (quiet bit forced).
+#[inline]
+pub fn f16_from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32 - 127;
+    let mant = bits & 0x007f_ffff;
+    if exp == 128 {
+        // Inf or NaN; 0x200 keeps NaN-ness even when the payload's top
+        // 10 bits are zero.
+        return if mant == 0 {
+            sign | 0x7c00
+        } else {
+            sign | 0x7c00 | 0x0200 | ((mant >> 13) as u16 & 0x03ff)
+        };
+    }
+    if exp >= 16 {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if exp >= -14 {
+        // Normal half: drop 13 mantissa bits with RNE; a mantissa carry
+        // correctly bumps the exponent (up to inf).
+        let base = (((exp + 15) as u32) << 10) | (mant >> 13);
+        let round = (mant >> 12) & 1;
+        let sticky = (mant & 0x0fff) != 0;
+        let lsb = (mant >> 13) & 1;
+        let inc = (round == 1 && (sticky || lsb == 1)) as u32;
+        return sign | (base + inc) as u16;
+    }
+    if exp >= -25 {
+        // Subnormal half: m_h = (2²³+mant)·2^(exp+1), RNE on the shift.
+        let m = mant | 0x0080_0000;
+        let shift = (-exp - 1) as u32; // 14..=24
+        let base = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let inc = (rem > half || (rem == half && (base & 1) == 1)) as u32;
+        // A carry out of base = 0x3ff lands on 0x400 — exactly the
+        // smallest normal half, which is the correct rounding.
+        return sign | (base + inc) as u16;
+    }
+    sign // underflow → signed zero
+}
+
+/// Decode one bfloat16 value to f32: the stored bits are the f32's top
+/// 16 bits. Exact by construction.
+#[inline]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Encode an f32 to bfloat16 with round-to-nearest-even (truncate the
+/// low 16 bits after adding the RNE bias). NaN keeps a nonzero
+/// mantissa.
+#[inline]
+pub fn bf16_from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    (bits.wrapping_add(0x7fff + ((bits >> 16) & 1)) >> 16) as u16
+}
+
+/// Decode one int8 code to f32 (exact: every i8 is representable).
+/// The per-row scale is applied by the caller, not here.
+#[inline]
+pub fn i8_to_f32(c: i8) -> f32 {
+    c as f32
+}
+
+// ---------------------------------------------------------------------------
+// Kernel table
+// ---------------------------------------------------------------------------
+
+/// One ISA's widening kernel set over compressed element type `E`
+/// (`u16` for f16/bf16 — separate tables per format — `i8` for int8).
+/// Same plain-`fn`-pointer design as the parent module's
+/// [`super::KernelTable`]; for int8 the dot kernels return the **raw**
+/// code·query sum (caller applies the per-row scale).
+pub struct WideKernels<E: 'static> {
+    /// Capability label: `"scalar"`, `"f16c"`, `"avx2-widen"`,
+    /// `"avx512"`, `"avx512-widen"`, `"neon-widen"`. Anything other
+    /// than `"scalar"` means the widening loads are hardware-backed.
+    pub isa: &'static str,
+    /// Widening dot product: `Σ decode(a[j])·q[j]` (raw codes for int8).
+    pub dot: fn(&[E], &[f32]) -> f32,
+    /// Blocked row scoring over a compressed row-major block; per-row
+    /// accumulation is exactly this table's `dot`.
+    pub dot_rows: fn(&[E], usize, &[f32], &mut [f32]),
+    /// Scattered blocked scoring over pre-sliced compressed row windows.
+    pub partial_dot_rows: fn(&[&[E]], &[f32], &mut [f32]),
+    /// Index gather `out[t] = src[idx[t]]` over compressed elements —
+    /// pure data movement (query-order gathers, panel compaction).
+    pub gather: fn(&[E], &[u32], &mut [E]),
+}
+
+// Manual impls: `derive` would put an unwanted `E: Clone/Copy` bound on
+// the element type parameter of a struct that only stores fn pointers.
+impl<E: 'static> Clone for WideKernels<E> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<E: 'static> Copy for WideKernels<E> {}
+
+// ---------------------------------------------------------------------------
+// Scalar backends (always available; the reference for the batteries)
+// ---------------------------------------------------------------------------
+
+/// Scalar widening dot: byte-for-byte the f32 scalar backend's 16-lane
+/// pairwise structure with a per-element decode — so for exact decodes
+/// the result is bit-identical to decoding first and running the f32
+/// scalar `dot` (contract 2 of the module docs).
+#[inline(always)]
+fn dot_coded<E: Copy>(a: &[E], b: &[f32], dec: impl Fn(E) -> f32) -> f32 {
+    let mut acc = [0f32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for i in 0..LANES {
+            acc[i] += dec(xa[i]) * xb[i];
+        }
+    }
+    let mut tail = 0f32;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += dec(*x) * y;
+    }
+    let mut width = LANES / 2;
+    while width > 0 {
+        for i in 0..width {
+            acc[i] += acc[i + width];
+        }
+        width /= 2;
+    }
+    acc[0] + tail
+}
+
+/// Generates the safe blocked kernels (per-row loops over `$dot`, which
+/// makes blocked ≡ single-row bit-identity trivial) for one table.
+macro_rules! blocked_from_dot {
+    ($elem:ty, $dot:path, $dot_rows:ident, $partial:ident) => {
+        fn $dot_rows(block: &[$elem], dim: usize, q: &[f32], out: &mut [f32]) {
+            assert_eq!(block.len(), out.len() * dim, "dot_rows: block/out shape mismatch");
+            assert_eq!(q.len(), dim, "dot_rows: query dim mismatch");
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = $dot(&block[i * dim..(i + 1) * dim], q);
+            }
+        }
+        fn $partial(rows: &[&[$elem]], q: &[f32], out: &mut [f32]) {
+            assert_eq!(rows.len(), out.len(), "partial_dot_rows: rows/out mismatch");
+            assert!(
+                rows.iter().all(|r| r.len() == q.len()),
+                "partial_dot_rows: row/query length mismatch"
+            );
+            for (r, o) in rows.iter().zip(out.iter_mut()) {
+                *o = $dot(r, q);
+            }
+        }
+    };
+}
+
+/// Element gather shared by every table of an element type: compressed
+/// elements are sub-word, so the scalar move loop is already optimal
+/// (x86's `vgatherdps` only gathers 32-bit lanes). Hard asserts mirror
+/// the f32 backends.
+#[inline(always)]
+fn gather_elem<E: Copy>(src: &[E], idx: &[u32], out: &mut [E]) {
+    assert_eq!(idx.len(), out.len(), "gather: idx/out length mismatch");
+    assert!(
+        idx.iter().all(|&j| (j as usize) < src.len()),
+        "gather: index out of bounds"
+    );
+    for (o, &j) in out.iter_mut().zip(idx) {
+        *o = src[j as usize];
+    }
+}
+
+fn gather_u16(src: &[u16], idx: &[u32], out: &mut [u16]) {
+    gather_elem(src, idx, out);
+}
+
+fn gather_i8(src: &[i8], idx: &[u32], out: &mut [i8]) {
+    gather_elem(src, idx, out);
+}
+
+fn dot_f16_scalar(a: &[u16], q: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), q.len());
+    dot_coded(a, q, f16_to_f32)
+}
+
+fn dot_bf16_scalar(a: &[u16], q: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), q.len());
+    dot_coded(a, q, bf16_to_f32)
+}
+
+fn dot_i8_scalar(a: &[i8], q: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), q.len());
+    dot_coded(a, q, i8_to_f32)
+}
+
+blocked_from_dot!(u16, dot_f16_scalar, dot_rows_f16_scalar, partial_f16_scalar);
+blocked_from_dot!(u16, dot_bf16_scalar, dot_rows_bf16_scalar, partial_bf16_scalar);
+blocked_from_dot!(i8, dot_i8_scalar, dot_rows_i8_scalar, partial_i8_scalar);
+
+static F16_SCALAR: WideKernels<u16> = WideKernels {
+    isa: "scalar",
+    dot: dot_f16_scalar,
+    dot_rows: dot_rows_f16_scalar,
+    partial_dot_rows: partial_f16_scalar,
+    gather: gather_u16,
+};
+
+static BF16_SCALAR: WideKernels<u16> = WideKernels {
+    isa: "scalar",
+    dot: dot_bf16_scalar,
+    dot_rows: dot_rows_bf16_scalar,
+    partial_dot_rows: partial_bf16_scalar,
+    gather: gather_u16,
+};
+
+static INT8_SCALAR: WideKernels<i8> = WideKernels {
+    isa: "scalar",
+    dot: dot_i8_scalar,
+    dot_rows: dot_rows_i8_scalar,
+    partial_dot_rows: partial_i8_scalar,
+    gather: gather_i8,
+};
+
+// ---------------------------------------------------------------------------
+// x86-64 backends: F16C / integer-widening loads feeding 256/512-bit FMA
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{
+        bf16_to_f32, f16_to_f32, gather_i8, gather_u16, i8_to_f32, WideKernels,
+    };
+    use core::arch::x86_64::*;
+
+    /// Horizontal sum of a 256-bit vector — the exact reduction ladder
+    /// of the parent module's AVX2 backend (fold halves, then
+    /// movehdup/movehl).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum256(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let s = _mm_add_ps(lo, hi);
+        let shuf = _mm_movehdup_ps(s);
+        let sums = _mm_add_ps(s, shuf);
+        let shuf2 = _mm_movehl_ps(shuf, sums);
+        _mm_cvtss_f32(_mm_add_ss(sums, shuf2))
+    }
+
+    // ---- 256-bit widening loads (8 elements each) ----
+
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "f16c")]
+    unsafe fn widen_f16_256(p: *const u16) -> __m256 {
+        _mm256_cvtph_ps(_mm_loadu_si128(p as *const __m128i))
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen_bf16_256(p: *const u16) -> __m256 {
+        let h = _mm_loadu_si128(p as *const __m128i);
+        _mm256_castsi256_ps(_mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(h)))
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen_i8_256(p: *const i8) -> __m256 {
+        let b = _mm_loadl_epi64(p as *const __m128i);
+        _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(b))
+    }
+
+    /// Generates one 256-bit widening dot (the AVX2 f32 backend's
+    /// accumulation order: two 8-lane FMA accumulators over 16-element
+    /// chunks, optional 8-chunk into acc0, `hsum256(acc0+acc1)`, then a
+    /// software-decoded scalar tail) plus its safe table entries.
+    macro_rules! wide_dot_256 {
+        ([$($feat:literal),+], $elem:ty, $widen:ident, $dec:path,
+         $kern:ident, $dot:ident, $dot_rows:ident, $partial:ident) => {
+            #[target_feature($(enable = $feat),+)]
+            unsafe fn $kern(pa: *const $elem, pb: *const f32, n: usize) -> f32 {
+                let mut acc0 = _mm256_setzero_ps();
+                let mut acc1 = _mm256_setzero_ps();
+                let mut i = 0usize;
+                while i + 16 <= n {
+                    acc0 = _mm256_fmadd_ps($widen(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+                    acc1 = _mm256_fmadd_ps(
+                        $widen(pa.add(i + 8)),
+                        _mm256_loadu_ps(pb.add(i + 8)),
+                        acc1,
+                    );
+                    i += 16;
+                }
+                if i + 8 <= n {
+                    acc0 = _mm256_fmadd_ps($widen(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+                    i += 8;
+                }
+                let mut sum = hsum256(_mm256_add_ps(acc0, acc1));
+                while i < n {
+                    sum += $dec(*pa.add(i)) * *pb.add(i);
+                    i += 1;
+                }
+                sum
+            }
+
+            fn $dot(a: &[$elem], q: &[f32]) -> f32 {
+                debug_assert_eq!(a.len(), q.len());
+                // min() mirrors the f32 backends' zip-truncation
+                // semantics on a release-mode length mismatch.
+                let n = a.len().min(q.len());
+                // SAFETY: this table is only selectable after runtime
+                // detection of avx2+fma (+ the format feature); n is
+                // within both slices.
+                unsafe { $kern(a.as_ptr(), q.as_ptr(), n) }
+            }
+
+            blocked_from_dot!($elem, $dot, $dot_rows, $partial);
+        };
+    }
+
+    /// Generates one 512-bit widening dot (the AVX-512 f32 backend's
+    /// accumulation order: two 16-lane FMA accumulators over 32-element
+    /// chunks, optional 16-chunk into acc0, `_mm512_reduce_add_ps`,
+    /// then a software-decoded scalar tail) plus its safe entries.
+    macro_rules! wide_dot_512 {
+        ($elem:ty, $widen:ident, $dec:path,
+         $kern:ident, $dot:ident, $dot_rows:ident, $partial:ident) => {
+            #[target_feature(enable = "avx512f")]
+            unsafe fn $kern(pa: *const $elem, pb: *const f32, n: usize) -> f32 {
+                let mut acc0 = _mm512_setzero_ps();
+                let mut acc1 = _mm512_setzero_ps();
+                let mut i = 0usize;
+                while i + 32 <= n {
+                    acc0 = _mm512_fmadd_ps($widen(pa.add(i)), _mm512_loadu_ps(pb.add(i)), acc0);
+                    acc1 = _mm512_fmadd_ps(
+                        $widen(pa.add(i + 16)),
+                        _mm512_loadu_ps(pb.add(i + 16)),
+                        acc1,
+                    );
+                    i += 32;
+                }
+                if i + 16 <= n {
+                    acc0 = _mm512_fmadd_ps($widen(pa.add(i)), _mm512_loadu_ps(pb.add(i)), acc0);
+                    i += 16;
+                }
+                let mut sum = _mm512_reduce_add_ps(_mm512_add_ps(acc0, acc1));
+                while i < n {
+                    sum += $dec(*pa.add(i)) * *pb.add(i);
+                    i += 1;
+                }
+                sum
+            }
+
+            fn $dot(a: &[$elem], q: &[f32]) -> f32 {
+                debug_assert_eq!(a.len(), q.len());
+                let n = a.len().min(q.len());
+                // SAFETY: table selectable only after avx512f (+ format
+                // feature) detection; n is within both slices.
+                unsafe { $kern(a.as_ptr(), q.as_ptr(), n) }
+            }
+
+            blocked_from_dot!($elem, $dot, $dot_rows, $partial);
+        };
+    }
+
+    // ---- 512-bit widening loads (16 elements each) ----
+
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn widen_f16_512(p: *const u16) -> __m512 {
+        _mm512_cvtph_ps(_mm256_loadu_si256(p as *const __m256i))
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn widen_bf16_512(p: *const u16) -> __m512 {
+        let h = _mm256_loadu_si256(p as *const __m256i);
+        _mm512_castsi512_ps(_mm512_slli_epi32::<16>(_mm512_cvtepu16_epi32(h)))
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn widen_i8_512(p: *const i8) -> __m512 {
+        let b = _mm_loadu_si128(p as *const __m128i);
+        _mm512_cvtepi32_ps(_mm512_cvtepi8_epi32(b))
+    }
+
+    wide_dot_256!(["avx2", "fma", "f16c"], u16, widen_f16_256, f16_to_f32,
+        dot_f16_kern, dot_f16, dot_rows_f16, partial_f16);
+    wide_dot_256!(["avx2", "fma"], u16, widen_bf16_256, bf16_to_f32,
+        dot_bf16_kern, dot_bf16, dot_rows_bf16, partial_bf16);
+    wide_dot_256!(["avx2", "fma"], i8, widen_i8_256, i8_to_f32,
+        dot_i8_kern, dot_i8, dot_rows_i8, partial_i8);
+
+    wide_dot_512!(u16, widen_f16_512, f16_to_f32,
+        dot_f16_kern512, dot_f16_512, dot_rows_f16_512, partial_f16_512);
+    wide_dot_512!(u16, widen_bf16_512, bf16_to_f32,
+        dot_bf16_kern512, dot_bf16_512, dot_rows_bf16_512, partial_bf16_512);
+    wide_dot_512!(i8, widen_i8_512, i8_to_f32,
+        dot_i8_kern512, dot_i8_512, dot_rows_i8_512, partial_i8_512);
+
+    pub(super) static F16_AVX2: WideKernels<u16> = WideKernels {
+        isa: "f16c",
+        dot: dot_f16,
+        dot_rows: dot_rows_f16,
+        partial_dot_rows: partial_f16,
+        gather: gather_u16,
+    };
+
+    pub(super) static BF16_AVX2: WideKernels<u16> = WideKernels {
+        isa: "avx2-widen",
+        dot: dot_bf16,
+        dot_rows: dot_rows_bf16,
+        partial_dot_rows: partial_bf16,
+        gather: gather_u16,
+    };
+
+    pub(super) static INT8_AVX2: WideKernels<i8> = WideKernels {
+        isa: "avx2-widen",
+        dot: dot_i8,
+        dot_rows: dot_rows_i8,
+        partial_dot_rows: partial_i8,
+        gather: gather_i8,
+    };
+
+    pub(super) static F16_AVX512: WideKernels<u16> = WideKernels {
+        isa: "avx512",
+        dot: dot_f16_512,
+        dot_rows: dot_rows_f16_512,
+        partial_dot_rows: partial_f16_512,
+        gather: gather_u16,
+    };
+
+    pub(super) static BF16_AVX512: WideKernels<u16> = WideKernels {
+        isa: "avx512-widen",
+        dot: dot_bf16_512,
+        dot_rows: dot_rows_bf16_512,
+        partial_dot_rows: partial_bf16_512,
+        gather: gather_u16,
+    };
+
+    pub(super) static INT8_AVX512: WideKernels<i8> = WideKernels {
+        isa: "avx512-widen",
+        dot: dot_i8_512,
+        dot_rows: dot_rows_i8_512,
+        partial_dot_rows: partial_i8_512,
+        gather: gather_i8,
+    };
+}
+
+// ---------------------------------------------------------------------------
+// aarch64 backends: integer-widening NEON for bf16 / int8
+// (native NEON fp16 FMA is a recorded follow-on — the intrinsics are
+// not yet stable — so the f16 table on aarch64 is the scalar one)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon_wide {
+    use super::{bf16_to_f32, gather_i8, gather_u16, i8_to_f32, WideKernels};
+    use core::arch::aarch64::*;
+
+    /// bf16 → f32 widen, 4 lanes: zero-extend u16 → u32 and shift into
+    /// the mantissa-aligned position (exact, purely integer).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn widen_bf16_4(p: *const u16) -> float32x4_t {
+        vreinterpretq_f32_u32(vshlq_n_u32::<16>(vmovl_u16(vld1_u16(p))))
+    }
+
+    /// int8 → f32 widen, 8 lanes in two quads (exact conversions).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn widen_i8_8(p: *const i8) -> (float32x4_t, float32x4_t) {
+        let w = vmovl_s8(vld1_s8(p));
+        (
+            vcvtq_f32_s32(vmovl_s16(vget_low_s16(w))),
+            vcvtq_f32_s32(vmovl_s16(vget_high_s16(w))),
+        )
+    }
+
+    /// NEON bf16 dot in the f32 NEON backend's accumulation order: four
+    /// 4-lane FMA accumulators over 16-element chunks, a 4-element
+    /// cleanup loop into acc0, the fixed vaddvq ladder, scalar tail.
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_bf16_kern(pa: *const u16, pb: *const f32, n: usize) -> f32 {
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut acc2 = vdupq_n_f32(0.0);
+        let mut acc3 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = vfmaq_f32(acc0, widen_bf16_4(pa.add(i)), vld1q_f32(pb.add(i)));
+            acc1 = vfmaq_f32(acc1, widen_bf16_4(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
+            acc2 = vfmaq_f32(acc2, widen_bf16_4(pa.add(i + 8)), vld1q_f32(pb.add(i + 8)));
+            acc3 = vfmaq_f32(acc3, widen_bf16_4(pa.add(i + 12)), vld1q_f32(pb.add(i + 12)));
+            i += 16;
+        }
+        while i + 4 <= n {
+            acc0 = vfmaq_f32(acc0, widen_bf16_4(pa.add(i)), vld1q_f32(pb.add(i)));
+            i += 4;
+        }
+        let mut sum = vaddvq_f32(vaddq_f32(vaddq_f32(acc0, acc1), vaddq_f32(acc2, acc3)));
+        while i < n {
+            sum += bf16_to_f32(*pa.add(i)) * *pb.add(i);
+            i += 1;
+        }
+        sum
+    }
+
+    /// NEON int8 dot (raw code sums): two 8-lane widens per 16-element
+    /// chunk feeding the same four accumulators, then the 8-element
+    /// cleanup, vaddvq ladder, and scalar tail.
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_i8_kern(pa: *const i8, pb: *const f32, n: usize) -> f32 {
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut acc2 = vdupq_n_f32(0.0);
+        let mut acc3 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let (w0, w1) = widen_i8_8(pa.add(i));
+            let (w2, w3) = widen_i8_8(pa.add(i + 8));
+            acc0 = vfmaq_f32(acc0, w0, vld1q_f32(pb.add(i)));
+            acc1 = vfmaq_f32(acc1, w1, vld1q_f32(pb.add(i + 4)));
+            acc2 = vfmaq_f32(acc2, w2, vld1q_f32(pb.add(i + 8)));
+            acc3 = vfmaq_f32(acc3, w3, vld1q_f32(pb.add(i + 12)));
+            i += 16;
+        }
+        while i + 8 <= n {
+            let (w0, w1) = widen_i8_8(pa.add(i));
+            acc0 = vfmaq_f32(acc0, w0, vld1q_f32(pb.add(i)));
+            acc1 = vfmaq_f32(acc1, w1, vld1q_f32(pb.add(i + 4)));
+            i += 8;
+        }
+        let mut sum = vaddvq_f32(vaddq_f32(vaddq_f32(acc0, acc1), vaddq_f32(acc2, acc3)));
+        while i < n {
+            sum += i8_to_f32(*pa.add(i)) * *pb.add(i);
+            i += 1;
+        }
+        sum
+    }
+
+    fn dot_bf16(a: &[u16], q: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), q.len());
+        let n = a.len().min(q.len());
+        // SAFETY: NEON is mandatory on aarch64; n is within both slices.
+        unsafe { dot_bf16_kern(a.as_ptr(), q.as_ptr(), n) }
+    }
+
+    fn dot_i8(a: &[i8], q: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), q.len());
+        let n = a.len().min(q.len());
+        // SAFETY: as above.
+        unsafe { dot_i8_kern(a.as_ptr(), q.as_ptr(), n) }
+    }
+
+    blocked_from_dot!(u16, dot_bf16, dot_rows_bf16, partial_bf16);
+    blocked_from_dot!(i8, dot_i8, dot_rows_i8, partial_i8);
+
+    pub(super) static BF16_NEON: WideKernels<u16> = WideKernels {
+        isa: "neon-widen",
+        dot: dot_bf16,
+        dot_rows: dot_rows_bf16,
+        partial_dot_rows: partial_bf16,
+        gather: gather_u16,
+    };
+
+    pub(super) static INT8_NEON: WideKernels<i8> = WideKernels {
+        isa: "neon-widen",
+        dot: dot_i8,
+        dot_rows: dot_rows_i8,
+        partial_dot_rows: partial_i8,
+        gather: gather_i8,
+    };
+}
+
+// ---------------------------------------------------------------------------
+// Per-format dispatch and capability listing
+// ---------------------------------------------------------------------------
+
+#[allow(unreachable_code)] // the aarch64 arms return unconditionally
+fn detect_f16() -> &'static WideKernels<u16> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        // The wide tables share the parent module's AVX2+FMA floor (and
+        // f16c for hardware vcvtph2ps); the 512-bit upgrade additionally
+        // needs avx512f.
+        if std::arch::is_x86_feature_detected!("f16c")
+            && std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            if std::arch::is_x86_feature_detected!("avx512f") {
+                return &x86::F16_AVX512;
+            }
+            return &x86::F16_AVX2;
+        }
+    }
+    // aarch64: native NEON fp16 widening is a recorded follow-on (the
+    // intrinsics are unstable), so f16 decodes in scalar there.
+    &F16_SCALAR
+}
+
+#[allow(unreachable_code)]
+fn detect_bf16() -> &'static WideKernels<u16> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            if std::arch::is_x86_feature_detected!("avx512f") {
+                return &x86::BF16_AVX512;
+            }
+            return &x86::BF16_AVX2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return &neon_wide::BF16_NEON;
+    }
+    &BF16_SCALAR
+}
+
+#[allow(unreachable_code)]
+fn detect_int8() -> &'static WideKernels<i8> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            if std::arch::is_x86_feature_detected!("avx512f") {
+                return &x86::INT8_AVX512;
+            }
+            return &x86::INT8_AVX2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return &neon_wide::INT8_NEON;
+    }
+    &INT8_SCALAR
+}
+
+static F16_ACTIVE: OnceLock<&'static WideKernels<u16>> = OnceLock::new();
+static BF16_ACTIVE: OnceLock<&'static WideKernels<u16>> = OnceLock::new();
+static INT8_ACTIVE: OnceLock<&'static WideKernels<i8>> = OnceLock::new();
+
+/// The process-wide dispatched f16 widening table (honors
+/// `RUST_PALLAS_FORCE_SCALAR` exactly like [`super::kernels`]).
+#[inline]
+pub fn f16_kernels() -> &'static WideKernels<u16> {
+    *F16_ACTIVE.get_or_init(|| {
+        if force_scalar_requested() {
+            &F16_SCALAR
+        } else {
+            detect_f16()
+        }
+    })
+}
+
+/// The process-wide dispatched bf16 widening table.
+#[inline]
+pub fn bf16_kernels() -> &'static WideKernels<u16> {
+    *BF16_ACTIVE.get_or_init(|| {
+        if force_scalar_requested() {
+            &BF16_SCALAR
+        } else {
+            detect_bf16()
+        }
+    })
+}
+
+/// The process-wide dispatched int8 widening table (raw code sums; the
+/// caller applies per-row scales).
+#[inline]
+pub fn int8_kernels() -> &'static WideKernels<i8> {
+    *INT8_ACTIVE.get_or_init(|| {
+        if force_scalar_requested() {
+            &INT8_SCALAR
+        } else {
+            detect_int8()
+        }
+    })
+}
+
+/// The always-available scalar f16 table (the reference the agreement
+/// batteries compare against).
+pub fn f16_scalar_kernels() -> &'static WideKernels<u16> {
+    &F16_SCALAR
+}
+
+/// The always-available scalar bf16 table.
+pub fn bf16_scalar_kernels() -> &'static WideKernels<u16> {
+    &BF16_SCALAR
+}
+
+/// The always-available scalar int8 table.
+pub fn int8_scalar_kernels() -> &'static WideKernels<i8> {
+    &INT8_SCALAR
+}
+
+/// Every f16 table runnable on this machine right now (scalar always,
+/// plus each detected hardware-widening table), independent of the
+/// process-wide dispatch pin — the property tests iterate this.
+pub fn available_f16_tables() -> Vec<&'static WideKernels<u16>> {
+    #[allow(unused_mut)]
+    let mut tables: Vec<&'static WideKernels<u16>> = vec![&F16_SCALAR];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("f16c")
+            && std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            tables.push(&x86::F16_AVX2);
+            if std::arch::is_x86_feature_detected!("avx512f") {
+                tables.push(&x86::F16_AVX512);
+            }
+        }
+    }
+    tables
+}
+
+/// Every bf16 table runnable on this machine right now.
+pub fn available_bf16_tables() -> Vec<&'static WideKernels<u16>> {
+    #[allow(unused_mut)]
+    let mut tables: Vec<&'static WideKernels<u16>> = vec![&BF16_SCALAR];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            tables.push(&x86::BF16_AVX2);
+            if std::arch::is_x86_feature_detected!("avx512f") {
+                tables.push(&x86::BF16_AVX512);
+            }
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        tables.push(&neon_wide::BF16_NEON);
+    }
+    tables
+}
+
+/// Every int8 table runnable on this machine right now.
+pub fn available_int8_tables() -> Vec<&'static WideKernels<i8>> {
+    #[allow(unused_mut)]
+    let mut tables: Vec<&'static WideKernels<i8>> = vec![&INT8_SCALAR];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            tables.push(&x86::INT8_AVX2);
+            if std::arch::is_x86_feature_detected!("avx512f") {
+                tables.push(&x86::INT8_AVX512);
+            }
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        tables.push(&neon_wide::INT8_NEON);
+    }
+    tables
+}
+
+/// Per-format capability summary of the *dispatched* tables:
+/// `[("f32", ...), ("f16", ...), ("bf16", ...), ("int8", ...)]`. Labels
+/// other than `"scalar"` mean the format's widening loads are
+/// hardware-backed on this machine (see the module docs); benches emit
+/// this next to `bytes_per_coord` so trajectory rows are
+/// self-describing.
+pub fn format_isas() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("f32", super::kernels().isa),
+        ("f16", f16_kernels().isa),
+        ("bf16", bf16_kernels().isa),
+        ("int8", int8_kernels().isa),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_round_trip_exact_on_representables() {
+        // Every finite f16 bit pattern decodes to an f32 that encodes
+        // back to the same bits (RNE is exact on exact values).
+        for h in 0..=0xffffu32 {
+            let h = h as u16;
+            let exp = (h >> 10) & 0x1f;
+            if exp == 0x1f {
+                continue; // inf/NaN handled below
+            }
+            let x = f16_to_f32(h);
+            assert_eq!(f16_from_f32(x), h, "bits {h:#06x} → {x} did not round-trip");
+        }
+    }
+
+    #[test]
+    fn f16_decode_known_values() {
+        assert_eq!(f16_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_to_f32(0xbc00), -1.0);
+        assert_eq!(f16_to_f32(0x4000), 2.0);
+        assert_eq!(f16_to_f32(0x3555), 0.333_251_95); // nearest f16 to 1/3
+        assert_eq!(f16_to_f32(0x0001), 5.960_464_5e-8); // smallest subnormal
+        assert_eq!(f16_to_f32(0x0400), 6.103_515_6e-5); // smallest normal
+        assert_eq!(f16_to_f32(0x7bff), 65504.0); // largest finite
+        assert!(f16_to_f32(0x7c00).is_infinite());
+        assert!(f16_to_f32(0x7c01).is_nan());
+        assert_eq!(f16_to_f32(0x8000).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn f16_encode_rounds_to_nearest_even() {
+        // 1 + 2^-11 sits exactly between 1.0 and the next f16; RNE → 1.0.
+        assert_eq!(f16_from_f32(1.0 + 2f32.powi(-11)), 0x3c00);
+        // 1 + 3·2^-11 sits between 1+2^-10 and 1+2^-9; RNE → even (0x3c02).
+        assert_eq!(f16_from_f32(1.0 + 3.0 * 2f32.powi(-11)), 0x3c02);
+        // Overflow saturates to inf, underflow to signed zero.
+        assert_eq!(f16_from_f32(1e6), 0x7c00);
+        assert_eq!(f16_from_f32(-1e6), 0xfc00);
+        assert_eq!(f16_from_f32(1e-10), 0x0000);
+        assert_eq!(f16_from_f32(-1e-10), 0x8000);
+        assert!(f16_to_f32(f16_from_f32(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn bf16_round_trip_and_rounding() {
+        for x in [0.0f32, 1.0, -1.0, 0.5, 65504.0, 3.0e38, 1.0e-38] {
+            let back = bf16_to_f32(bf16_from_f32(x));
+            let err = (back - x).abs();
+            // bf16 has 8 mantissa bits: relative error ≤ 2^-8.
+            assert!(err <= x.abs() * 0.00391 + f32::MIN_POSITIVE, "{x} → {back}");
+        }
+        // Values whose low 16 bits are zero are exact.
+        assert_eq!(bf16_to_f32(bf16_from_f32(1.5)), 1.5);
+        assert_eq!(bf16_to_f32(bf16_from_f32(-2.0)), -2.0);
+        assert!(bf16_to_f32(bf16_from_f32(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn scalar_wide_dot_matches_decoded_f32_dot_bitwise() {
+        // Contract 2: the scalar wide dot on codes ≡ the f32 scalar dot
+        // on the decoded values, bit for bit (exact decodes).
+        let scalar = super::super::scalar_kernels();
+        for n in [0usize, 1, 7, 15, 16, 17, 33, 100, 257] {
+            let codes: Vec<u16> =
+                (0..n).map(|i| f16_from_f32((i as f32 * 0.37).sin())).collect();
+            let q: Vec<f32> = (0..n).map(|i| (i as f32 * 0.73).cos()).collect();
+            let decoded: Vec<f32> = codes.iter().map(|&h| f16_to_f32(h)).collect();
+            assert_eq!(
+                (F16_SCALAR.dot)(&codes, &q).to_bits(),
+                (scalar.dot)(&decoded, &q).to_bits(),
+                "f16 n={n}"
+            );
+            let bcodes: Vec<u16> =
+                (0..n).map(|i| bf16_from_f32((i as f32 * 0.41).sin())).collect();
+            let bdecoded: Vec<f32> = bcodes.iter().map(|&h| bf16_to_f32(h)).collect();
+            assert_eq!(
+                (BF16_SCALAR.dot)(&bcodes, &q).to_bits(),
+                (scalar.dot)(&bdecoded, &q).to_bits(),
+                "bf16 n={n}"
+            );
+            let icodes: Vec<i8> = (0..n).map(|i| (i as i32 % 255 - 127) as i8).collect();
+            let idecoded: Vec<f32> = icodes.iter().map(|&c| c as f32).collect();
+            assert_eq!(
+                (INT8_SCALAR.dot)(&icodes, &q).to_bits(),
+                (scalar.dot)(&idecoded, &q).to_bits(),
+                "int8 n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn format_isas_lists_all_four_formats() {
+        let isas = format_isas();
+        let names: Vec<&str> = isas.iter().map(|&(f, _)| f).collect();
+        assert_eq!(names, vec!["f32", "f16", "bf16", "int8"]);
+        for (_, isa) in isas {
+            assert!(!isa.is_empty());
+        }
+    }
+}

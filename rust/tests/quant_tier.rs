@@ -1,0 +1,215 @@
+//! Statistical acceptance battery for the mixed-precision storage tier:
+//! BOUNDEDME queries sampling a compressed f16 / bf16 / int8 copy of
+//! the dataset (and confirm-rescoring survivors on f32) must preserve
+//! the paper's (ε, δ) guarantee **stated against the true f32 means**,
+//! on both synthetic Gaussian data and matrix-factorization embeddings.
+//! The ε → 0 limit must stay exact (the tier silently falls back to
+//! the f32 path when the quantization-bias budget would exceed ε), and
+//! the `RUST_PALLAS_FORCE_F32` escape hatch must make a
+//! storage-configured index behave bit-for-bit like a plain one.
+
+use bandit_mips::algos::{ground_truth, BoundedMeIndex, MipsIndex, MipsParams};
+use bandit_mips::data::mf::netflix_like;
+use bandit_mips::data::quant::{force_f32_requested, Storage};
+use bandit_mips::data::synthetic::gaussian_dataset;
+use bandit_mips::exec::QueryContext;
+use bandit_mips::linalg::{dot, Matrix, Rng};
+
+const TIERS: [Storage; 3] = [Storage::F16, Storage::Bf16, Storage::Int8];
+
+/// Exact score of every row against `q`, plus the k-th best (the
+/// ε-optimality reference point μ_[k] in score units).
+fn exact_scores(data: &Matrix, q: &[f32]) -> Vec<f32> {
+    (0..data.rows()).map(|i| dot(data.row(i), q)).collect()
+}
+
+/// Run `queries` against a `storage`-tier index and count queries where
+/// ANY returned arm is worse than ε-optimal w.r.t. the TRUE f32 scores.
+/// The guarantee is per-query failure probability ≤ δ, so the count is
+/// stochastically dominated by Binomial(Q, δ); the caller asserts a
+/// 3σ-slack bound on it.
+fn count_epsilon_violations(
+    data: &Matrix,
+    queries: &[Vec<f32>],
+    storage: Storage,
+    params: &MipsParams,
+) -> usize {
+    let idx = BoundedMeIndex::new(data.clone()).with_storage(storage);
+    let mut ctx = QueryContext::new();
+    let mut violations = 0usize;
+    for (qi, q) in queries.iter().enumerate() {
+        let res = idx.query_with(q, &MipsParams { seed: qi as u64, ..*params }, &mut ctx);
+        assert_eq!(res.indices.len(), params.k, "{} q{qi}", storage.label());
+        // ε is stated in mean units over a per-query range of width
+        // 2·reward_bound(q); scores are N·mean.
+        let slack = params.epsilon
+            * 2.0
+            * idx.reward_bound(q).max(f32::MIN_POSITIVE) as f64
+            * data.cols() as f64;
+        let mut truth = exact_scores(data, q);
+        truth.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let kth = truth[params.k - 1] as f64;
+        // Judge the returned ARMS by their exact scores (don't trust
+        // the reported ones here — that contract has its own tests).
+        let ok = res
+            .indices
+            .iter()
+            .all(|&arm| dot(data.row(arm), q) as f64 >= kth - slack - 1e-3);
+        if !ok {
+            violations += 1;
+        }
+    }
+    violations
+}
+
+/// Binomial(Q, δ) upper bound with 3σ of slack (+1 so tiny Q·δ never
+/// rounds to an impossible zero-tolerance).
+fn violation_budget(n_queries: usize, delta: f64) -> usize {
+    let q = n_queries as f64;
+    (q * delta + 3.0 * (q * delta * (1.0 - delta)).sqrt() + 1.0).ceil() as usize
+}
+
+#[test]
+fn compressed_tiers_preserve_epsilon_delta_on_gaussian() {
+    let data = gaussian_dataset(150, 64, 0xE9D1).vectors;
+    let mut rng = Rng::new(0x9A55);
+    let queries: Vec<Vec<f32>> = (0..40).map(|_| rng.gaussian_vec(64)).collect();
+    let params = MipsParams { k: 3, epsilon: 0.15, delta: 0.1, seed: 0 };
+    let budget = violation_budget(queries.len(), params.delta);
+    for storage in TIERS {
+        let violations = count_epsilon_violations(&data, &queries, storage, &params);
+        assert!(
+            violations <= budget,
+            "{}: {violations} ε-violations over {} queries (budget {budget})",
+            storage.label(),
+            queries.len()
+        );
+    }
+}
+
+#[test]
+fn compressed_tiers_preserve_epsilon_delta_on_mf_embeddings() {
+    // MF embeddings are the adversarial case for per-row int8 scales:
+    // popularity skew gives rows wildly different norms, and the
+    // user-factor queries are correlated with the item space instead of
+    // isotropic.
+    let mf = netflix_like(240, 48, 0x4EF1);
+    let data = mf.dataset.vectors;
+    let queries: Vec<Vec<f32>> = mf.user_queries.into_iter().take(40).collect();
+    assert!(queries.len() >= 30, "MF pipeline produced too few user queries");
+    let params = MipsParams { k: 5, epsilon: 0.15, delta: 0.1, seed: 0 };
+    let budget = violation_budget(queries.len(), params.delta);
+    for storage in TIERS {
+        let violations = count_epsilon_violations(&data, &queries, storage, &params);
+        assert!(
+            violations <= budget,
+            "{}: {violations} ε-violations over {} MF queries (budget {budget})",
+            storage.label(),
+            queries.len()
+        );
+    }
+}
+
+#[test]
+fn zero_epsilon_with_compressed_tier_stays_exact() {
+    // The quantization-bias budget 2b always exceeds an ε → 0 target,
+    // so the tier must silently fall back to the exact-capable f32
+    // path — compressed storage never costs correctness.
+    let data = gaussian_dataset(100, 48, 0x0EA7).vectors;
+    let mut rng = Rng::new(0x5EED);
+    let params = MipsParams { k: 4, epsilon: 1e-9, delta: 0.05, seed: 3 };
+    for storage in TIERS {
+        let idx = BoundedMeIndex::new(data.clone()).with_storage(storage);
+        let mut ctx = QueryContext::new();
+        for case in 0..10 {
+            let q: Vec<f32> = rng.gaussian_vec(48);
+            let res = idx.query_with(&q, &params, &mut ctx);
+            let mut got = res.indices.clone();
+            got.sort_unstable();
+            let mut want = ground_truth(&data, &q, params.k);
+            want.sort_unstable();
+            assert_eq!(got, want, "{} case {case}", storage.label());
+        }
+    }
+}
+
+#[test]
+fn compressed_tier_recall_tracks_f32_at_equal_params() {
+    // Same (ε, δ), same queries: the two-tier path's ground-truth
+    // recall must stay in the same regime as the f32 path's. Not an
+    // equality (different sampling noise), but compression must not
+    // collapse answer quality.
+    let data = gaussian_dataset(150, 64, 0x7EC0).vectors;
+    let mut rng = Rng::new(0xCA11);
+    let queries: Vec<Vec<f32>> = (0..30).map(|_| rng.gaussian_vec(64)).collect();
+    let params = MipsParams { k: 5, epsilon: 0.15, delta: 0.1, seed: 0 };
+    let recall = |storage: Storage| -> f64 {
+        let idx = BoundedMeIndex::new(data.clone()).with_storage(storage);
+        let mut ctx = QueryContext::new();
+        let mut hits = 0usize;
+        for (qi, q) in queries.iter().enumerate() {
+            let res =
+                idx.query_with(q, &MipsParams { seed: qi as u64, ..params }, &mut ctx);
+            let truth = ground_truth(&data, q, params.k);
+            hits += res.indices.iter().filter(|i| truth.contains(i)).count();
+        }
+        hits as f64 / (queries.len() * params.k) as f64
+    };
+    let f32_recall = recall(Storage::F32);
+    for storage in TIERS {
+        let tier_recall = recall(storage);
+        assert!(
+            tier_recall >= f32_recall - 0.25 && tier_recall >= 0.5,
+            "{}: recall {tier_recall:.3} vs f32 {f32_recall:.3}",
+            storage.label()
+        );
+    }
+}
+
+#[test]
+fn force_f32_pin_collapses_every_tier() {
+    for storage in TIERS {
+        assert_eq!(storage.effective_with(true), Storage::F32);
+        assert_eq!(storage.effective_with(false), storage);
+    }
+    assert_eq!(Storage::F32.effective_with(true), Storage::F32);
+    // Under the CI f32 leg the pin is process-wide: a storage-configured
+    // index must report F32…
+    if force_f32_requested() {
+        for storage in TIERS {
+            let data = gaussian_dataset(40, 16, 1).vectors;
+            let idx = BoundedMeIndex::new(data).with_storage(storage);
+            assert_eq!(idx.storage(), Storage::F32);
+        }
+    }
+}
+
+#[test]
+fn force_f32_leg_is_bit_identical_to_plain_index() {
+    // …and answer bit-for-bit like an index that never heard of the
+    // mixed-precision subsystem (indices, score bits, AND flops — the
+    // whole observable surface). Runs its real assertion only on the
+    // RUST_PALLAS_FORCE_F32 CI leg; elsewhere the compressed tier is
+    // live and legitimately diverges.
+    let data = gaussian_dataset(120, 64, 0xB17F).vectors;
+    let plain = BoundedMeIndex::new(data.clone());
+    let tiered = BoundedMeIndex::new(data).with_storage(Storage::Int8);
+    if tiered.storage() != Storage::F32 {
+        return;
+    }
+    let mut rng = Rng::new(0xFACE);
+    let mut ctx_a = QueryContext::new();
+    let mut ctx_b = QueryContext::new();
+    for case in 0..8u64 {
+        let q: Vec<f32> = rng.gaussian_vec(64);
+        let params = MipsParams { k: 3, epsilon: 0.1, delta: 0.1, seed: case };
+        let a = plain.query_with(&q, &params, &mut ctx_a);
+        let b = tiered.query_with(&q, &params, &mut ctx_b);
+        assert_eq!(a.indices, b.indices, "case {case}");
+        assert_eq!(a.flops, b.flops, "case {case}");
+        assert_eq!(a.candidates, b.candidates, "case {case}");
+        for (x, y) in a.scores.iter().zip(&b.scores) {
+            assert_eq!(x.to_bits(), y.to_bits(), "case {case}: score bits");
+        }
+    }
+}

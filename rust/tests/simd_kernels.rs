@@ -6,9 +6,16 @@
 //! gather kernel must be exact on every backend, and the dispatched
 //! funnel (`linalg::dot` & co.) must match a forced-scalar
 //! recomputation on the exact query path.
+//!
+//! The same batteries run over the `simd::wide` widening tables that
+//! score the compressed f16/bf16/int8 storage tiers: every available
+//! hardware table agrees with its format's scalar reference within the
+//! 1e-4 contract, blocked ≡ dot bitwise, and gather is exact on the
+//! compressed element types.
 
 use bandit_mips::algos::{MipsIndex, MipsParams, NaiveIndex};
 use bandit_mips::exec::QueryContext;
+use bandit_mips::linalg::simd::wide;
 use bandit_mips::linalg::{
     axpy, dist_sq, dot, dot_rows, norm_sq, partial_dot, partial_dot_rows, simd, Matrix,
     Rng,
@@ -268,6 +275,199 @@ fn dispatched_query_batch_argmax_matches_forced_scalar_recompute() {
                 close(*got as f64, want as f64, 1e-4),
                 "q{qi}: score {got} vs scalar {want}"
             );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Widening (compressed-tier) kernel batteries — same invariants, run
+// per format over `wide::available_*_tables()`.
+// ---------------------------------------------------------------------------
+
+/// Dot agreement battery for one compressed format: every available
+/// table within 1e-4 of the format's scalar reference AND of the f64
+/// dot over the *decoded* codes, across the probe lengths.
+fn wide_dot_agreement<E: Copy>(
+    format: &str,
+    tables: Vec<&'static wide::WideKernels<E>>,
+    scalar: &wide::WideKernels<E>,
+    encode: impl Fn(f32) -> E,
+    decode: impl Fn(E) -> f32,
+) {
+    let mut rng = Rng::new(0x31DE);
+    for table in tables {
+        for n in probe_lengths() {
+            let codes: Vec<E> = rng.gaussian_vec(n).into_iter().map(&encode).collect();
+            let q: Vec<f32> = rng.gaussian_vec(n);
+            let want = (scalar.dot)(&codes, &q) as f64;
+            let got = (table.dot)(&codes, &q) as f64;
+            assert!(
+                close(got, want, 1e-4),
+                "{format}/{} vs scalar dot n={n}: {got} vs {want}",
+                table.isa
+            );
+            // And against the f64 truth on the decoded values — the
+            // codes are whatever they are; the kernels must only agree
+            // on what they decode to.
+            let decoded: Vec<f32> = codes.iter().map(|&c| decode(c)).collect();
+            assert!(
+                close(got, ref_dot(&decoded, &q), 1e-4),
+                "{format}/{} dot n={n} vs decoded f64 reference",
+                table.isa
+            );
+        }
+    }
+}
+
+/// Blocked ≡ dot bit-identity battery for one compressed format: the
+/// quant-tier panel equivalence (blocked panel scoring ≡ scattered
+/// pulls) stands on dot_rows / partial_dot_rows being per-row
+/// bit-identical to the same table's `dot`.
+fn wide_blocked_bit_identity<E: Copy>(
+    format: &str,
+    tables: Vec<&'static wide::WideKernels<E>>,
+    encode: impl Fn(f32) -> E,
+) {
+    let mut rng = Rng::new(0xB17E);
+    for table in tables {
+        for rows in 0..=9usize {
+            for dim in [0usize, 1, 7, 15, 16, 17, 33, 130] {
+                let block: Vec<E> =
+                    rng.gaussian_vec(rows * dim).into_iter().map(&encode).collect();
+                let q: Vec<f32> = rng.gaussian_vec(dim);
+                let mut out = vec![0f32; rows];
+                (table.dot_rows)(&block, dim, &q, &mut out);
+                let refs: Vec<&[E]> =
+                    (0..rows).map(|r| &block[r * dim..(r + 1) * dim]).collect();
+                let mut pout = vec![0f32; rows];
+                (table.partial_dot_rows)(&refs, &q, &mut pout);
+                for r in 0..rows {
+                    let single = (table.dot)(&block[r * dim..(r + 1) * dim], &q);
+                    assert_eq!(
+                        out[r].to_bits(),
+                        single.to_bits(),
+                        "{format}/{} dot_rows {rows}x{dim} row {r}",
+                        table.isa
+                    );
+                    assert_eq!(
+                        pout[r].to_bits(),
+                        single.to_bits(),
+                        "{format}/{} partial_dot_rows {rows}x{dim} row {r}",
+                        table.isa
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Gather exactness battery for one compressed format — pure data
+/// movement over the code type, so code-for-code equality everywhere.
+fn wide_gather_exact<E: Copy + PartialEq + std::fmt::Debug>(
+    format: &str,
+    tables: Vec<&'static wide::WideKernels<E>>,
+    encode: impl Fn(f32) -> E,
+) {
+    let mut rng = Rng::new(0x6A78);
+    for table in tables {
+        for src_len in [1usize, 7, 64, 300] {
+            let src: Vec<E> =
+                rng.gaussian_vec(src_len).into_iter().map(&encode).collect();
+            for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 64, 129] {
+                let idx: Vec<u32> =
+                    (0..n).map(|t| ((t * 31 + 3) % src_len) as u32).collect();
+                let mut out = vec![src[0]; n];
+                (table.gather)(&src, &idx, &mut out);
+                for t in 0..n {
+                    assert_eq!(
+                        out[t],
+                        src[idx[t] as usize],
+                        "{format}/{} gather src_len={src_len} n={n} t={t}",
+                        table.isa
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Representative int8 code for a gaussian draw (encode proper needs a
+/// per-row scale — see `QuantMatrix::quantize` — but the kernels only
+/// see raw codes, so any spread over the i8 range exercises them).
+fn i8_code(x: f32) -> i8 {
+    (x * 40.0).clamp(-127.0, 127.0) as i8
+}
+
+#[test]
+fn wide_f16_tables_agree_with_scalar_reference() {
+    wide_dot_agreement(
+        "f16",
+        wide::available_f16_tables(),
+        wide::f16_scalar_kernels(),
+        wide::f16_from_f32,
+        wide::f16_to_f32,
+    );
+}
+
+#[test]
+fn wide_bf16_tables_agree_with_scalar_reference() {
+    wide_dot_agreement(
+        "bf16",
+        wide::available_bf16_tables(),
+        wide::bf16_scalar_kernels(),
+        wide::bf16_from_f32,
+        wide::bf16_to_f32,
+    );
+}
+
+#[test]
+fn wide_int8_tables_agree_with_scalar_reference() {
+    // int8 dots are RAW code·query sums — the per-row scale lives with
+    // the caller — so the decoded reference is just `c as f32`.
+    wide_dot_agreement(
+        "int8",
+        wide::available_int8_tables(),
+        wide::int8_scalar_kernels(),
+        i8_code,
+        wide::i8_to_f32,
+    );
+}
+
+#[test]
+fn wide_blocked_kernels_bit_identical_to_their_dot() {
+    wide_blocked_bit_identity("f16", wide::available_f16_tables(), wide::f16_from_f32);
+    wide_blocked_bit_identity("bf16", wide::available_bf16_tables(), wide::bf16_from_f32);
+    wide_blocked_bit_identity("int8", wide::available_int8_tables(), i8_code);
+}
+
+#[test]
+fn wide_gather_is_exact_on_compressed_elements() {
+    wide_gather_exact("f16", wide::available_f16_tables(), wide::f16_from_f32);
+    wide_gather_exact("bf16", wide::available_bf16_tables(), wide::bf16_from_f32);
+    wide_gather_exact("int8", wide::available_int8_tables(), i8_code);
+}
+
+#[test]
+fn format_isas_reports_every_format_and_matches_dispatch() {
+    // The capability listing benches/servers emit must cover all four
+    // storage formats and mirror the actually-dispatched tables.
+    let listing = wide::format_isas();
+    let get = |f: &str| {
+        listing
+            .iter()
+            .find(|(name, _)| *name == f)
+            .map(|&(_, isa)| isa)
+            .unwrap_or_else(|| panic!("format {f} missing from format_isas()"))
+    };
+    assert_eq!(listing.len(), 4);
+    assert_eq!(get("f32"), simd::active_isa());
+    assert_eq!(get("f16"), wide::f16_kernels().isa);
+    assert_eq!(get("bf16"), wide::bf16_kernels().isa);
+    assert_eq!(get("int8"), wide::int8_kernels().isa);
+    // The forced-scalar escape hatch pins every widening table too.
+    if simd::force_scalar_requested() {
+        for (format, isa) in &listing {
+            assert_eq!(*isa, "scalar", "{format} not pinned under FORCE_SCALAR");
         }
     }
 }

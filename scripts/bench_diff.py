@@ -3,7 +3,9 @@
 
 Usage: bench_diff.py CURRENT BASELINE [--threshold 0.10]
 
-Matches benchmark rows by name and compares `mean_s`. Regressions beyond
+Matches benchmark rows by (name, storage) — `storage` is the optional
+per-row tier tag the mixed-precision rows carry ("f16", "int8", ...);
+untagged rows key on name alone — and compares `mean_s`. Regressions beyond
 the threshold are printed as GitHub advisory annotations (`::warning::`)
 so CI surfaces them without failing the build — bench runners are noisy,
 a hard gate would flap. Rows with no baseline counterpart (newly added
@@ -25,7 +27,14 @@ import sys
 def load_rows(path):
     with open(path) as f:
         doc = json.load(f)
-    return {row["name"]: row for row in doc.get("results", [])}
+    return {
+        (row["name"], row.get("storage", "")): row for row in doc.get("results", [])
+    }
+
+
+def label(key):
+    name, storage = key
+    return f"{name} [{storage}]" if storage else name
 
 
 def main(argv):
@@ -56,10 +65,10 @@ def main(argv):
 
     regressions = 0
     missing_baseline = []
-    for name, row in sorted(current.items()):
-        base = baseline.get(name)
+    for key, row in sorted(current.items()):
+        base = baseline.get(key)
         if base is None:
-            missing_baseline.append(name)
+            missing_baseline.append(label(key))
             continue
         cur_mean, base_mean = row.get("mean_s"), base.get("mean_s")
         if not cur_mean or not base_mean:
@@ -69,13 +78,14 @@ def main(argv):
         if ratio > 1.0 + threshold:
             regressions += 1
             print(
-                f"::warning title=bench regression::{name}: {base_mean * 1e3:.3f} ms "
+                f"::warning title=bench regression::{label(key)}: "
+                f"{base_mean * 1e3:.3f} ms "
                 f"-> {cur_mean * 1e3:.3f} ms ({delta_pct:+.1f}%)"
             )
         else:
-            print(f"bench diff: {name}: {delta_pct:+.1f}%")
-    for name in sorted(set(baseline) - set(current)):
-        print(f"bench diff: benchmark {name!r} disappeared from current run")
+            print(f"bench diff: {label(key)}: {delta_pct:+.1f}%")
+    for key in sorted(set(baseline) - set(current)):
+        print(f"bench diff: benchmark {label(key)!r} disappeared from current run")
     if missing_baseline:
         names = ", ".join(missing_baseline)
         print(
