@@ -7,10 +7,13 @@ use bandit_mips::benchkit::{Bencher, Reporter};
 use bandit_mips::coordinator::{
     Backend, Coordinator, CoordinatorConfig, QueryRequest,
 };
+use bandit_mips::data::generation::Delta;
 use bandit_mips::data::shard::ShardSpec;
 use bandit_mips::data::synthetic::gaussian_dataset;
 use bandit_mips::jsonlite::Json;
-use bandit_mips::linalg::simd;
+use bandit_mips::linalg::{simd, Rng};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 fn run_load(coord: &Coordinator, queries: usize, q: &[f32]) -> f64 {
@@ -199,6 +202,104 @@ fn main() {
         coord.shutdown();
     }
 
+    // Live-mutation churn: the same closed-loop load with a writer
+    // thread streaming upsert batches at a fixed fraction of the
+    // dataset per second (0%, 1%, 10% of rows/s). Each batch builds a
+    // COW generation and flips it under the readers, so this row
+    // tracks how much query latency the flip protocol costs — the 0%
+    // row is the no-churn control, and `generations_alive` at the end
+    // proves retired generations were reclaimed, not leaked.
+    let mut churn_points: Vec<Json> = Vec::new();
+    for shards in [1usize, 4] {
+        for churn_pct in [0u64, 1, 10] {
+            let coord = Arc::new(
+                Coordinator::new(
+                    ds.vectors.clone(),
+                    CoordinatorConfig {
+                        workers: 4,
+                        max_batch: 32,
+                        batch_timeout: Duration::from_micros(500),
+                        queue_capacity: 4096,
+                        backend: Backend::Native,
+                        shard: ShardSpec::contiguous(shards),
+                        ..Default::default()
+                    },
+                )
+                .unwrap(),
+            );
+            let stop = Arc::new(AtomicBool::new(false));
+            let writer = if churn_pct > 0 {
+                let wc = Arc::clone(&coord);
+                let wstop = Arc::clone(&stop);
+                let rows = ds.vectors.rows();
+                let dim = ds.vectors.cols();
+                Some(std::thread::spawn(move || {
+                    // churn_pct% of rows per second, paced in small
+                    // batches so 1% still flips several times per
+                    // bench window instead of once a second.
+                    let rows_per_sec = rows as u64 * churn_pct / 100;
+                    let batch = (rows_per_sec as usize / 50).max(1);
+                    let interval =
+                        Duration::from_secs_f64(batch as f64 / rows_per_sec as f64);
+                    let mut rng = Rng::new(0xC0C0_0000 ^ churn_pct);
+                    while !wstop.load(Ordering::Relaxed) {
+                        let deltas: Vec<Delta> = (0..batch)
+                            .map(|_| Delta::Upsert {
+                                id: rng.next_below(rows),
+                                vector: rng.gaussian_vec(dim),
+                            })
+                            .collect();
+                        if wc.mutate(&deltas).is_err() {
+                            break;
+                        }
+                        std::thread::sleep(interval);
+                    }
+                }))
+            } else {
+                None
+            };
+            let mut qps = 0.0;
+            r.bench_tagged(
+                &b,
+                &format!("serving/churn upsert={churn_pct}%rows/s shards={shards} (100q)"),
+                &[
+                    ("churn", Json::Str(format!("{churn_pct}%"))),
+                    ("shards", Json::Num(shards as f64)),
+                ],
+                || {
+                    qps = run_load(&coord, 100, &q);
+                    qps as u64
+                },
+            );
+            stop.store(true, Ordering::Relaxed);
+            if let Some(w) = writer {
+                w.join().unwrap();
+            }
+            let m = coord.metrics();
+            let alive = coord.generations_alive();
+            println!(
+                "    ~{qps:.0} qps; service p50 {:.3} ms p99 {:.3} ms; {} flips; {} generations alive",
+                m.service.0 * 1e3,
+                m.service.2 * 1e3,
+                m.mutations,
+                alive
+            );
+            churn_points.push(Json::obj([
+                ("shards", Json::Num(shards as f64)),
+                ("churn_pct_rows_per_s", Json::Num(churn_pct as f64)),
+                ("qps", Json::Num(qps)),
+                ("service_p50_s", Json::Num(m.service.0)),
+                ("service_p99_s", Json::Num(m.service.2)),
+                ("mutations", Json::Num(m.mutations as f64)),
+                ("mutation_rows", Json::Num(m.mutation_rows as f64)),
+                ("generations_alive", Json::Num(alive as f64)),
+            ]));
+            if let Ok(c) = Arc::try_unwrap(coord) {
+                c.shutdown();
+            }
+        }
+    }
+
     r.finish("serving coordinator");
     r.write_json(
         "serving",
@@ -210,6 +311,7 @@ fn main() {
             ("closed_loop", Json::Arr(load_points)),
             ("sharded", Json::Arr(shard_points)),
             ("hedging", Json::Arr(hedge_points)),
+            ("churn", Json::Arr(churn_points)),
             ("fast_path_served", Json::Num(fast_path_served as f64)),
         ],
     );

@@ -75,6 +75,24 @@
 //! track how often hedges launch and how often they beat the
 //! straggler.
 //!
+//! **Live mutation** ([`Coordinator::mutate`]): the dataset is served
+//! as a lineage of immutable [`Generation`]s (see
+//! [`crate::data::generation`]) wrapped in `Arc`-shared
+//! [`ShardSet`]s. A writer builds generation `N+1` copy-on-write from
+//! `N` under a mutex that only writers touch, then delivers the new
+//! set to every serving thread over dedicated flip channels; the
+//! reactor (and each S = 1 direct worker) swaps its local `Arc`
+//! **between batches** and acks. `mutate` blocks until every consumer
+//! acked, so once it returns, every subsequently submitted query is
+//! answered at or above the new generation — the witness window the
+//! `generation_equivalence` battery asserts. Queries already in
+//! flight finish on the generation their batch captured at admission
+//! (pinning is an `Arc` clone per batch, not per query, and never
+//! mid-batch), and the superseded generation is reclaimed when its
+//! last pinned batch drops — epoch-observed via
+//! [`crate::sync::EpochGauge`]. **The query hot path takes no lock
+//! anywhere in this protocol**; only writers serialize.
+//!
 //! * **Backpressure**: bounded everywhere — submit queue, batch
 //!   channel, per-shard channels, reactor backlog, hedge channel.
 //! * **Load shedding**: a request whose deadline expired in queue is
@@ -94,17 +112,20 @@ pub use stats::{MetricsRegistry, MetricsSnapshot};
 
 use crate::algos::{BoundedMeIndex, MipsIndex, MipsParams, MipsResult};
 use crate::bandit::PullOrder;
+use crate::data::generation::{Delta, Generation, GenerationBuilder};
 use crate::data::quant::Storage;
-use crate::data::shard::{Shard, ShardSpec, ShardedMatrix};
-use crate::exec::shard::{shard_params, ShardPartial};
+use crate::data::shard::ShardSpec;
+use crate::exec::shard::{shard_params, ShardPartial, ShardSet};
 use crate::exec::{PlanAlgo, QueryContext, QueryPlan};
 use crate::linalg::{Matrix, TopK};
 use crate::runtime::{NativeEngine, PjrtEngine, ScoringEngine};
-use crate::sync::{bounded, Receiver, RecvError, Selector, SendError, Sender, TryRecvError};
+use crate::sync::{
+    bounded, EpochGauge, Receiver, RecvError, Selector, SendError, Sender, TryRecvError,
+};
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Which compute backend workers use for exact scoring.
@@ -315,6 +336,14 @@ pub struct QueryResponse {
     /// [`Storage::F32`] for exact scans and shed replies. Compressed
     /// answers were still *confirmed* on f32 (sample-then-confirm).
     pub storage: Storage,
+    /// Dataset generation this answer (or shed decision) was pinned to.
+    /// Result indices refer to this generation's row numbering; with
+    /// live mutation ([`Coordinator::mutate`]) the id identifies *which*
+    /// snapshot the answer is exact for. Always some generation whose
+    /// lifetime overlapped the request: at least the highest generation
+    /// acked before submission, at most the highest started before the
+    /// reply.
+    pub generation: u64,
 }
 
 /// Submission failures.
@@ -331,6 +360,10 @@ pub enum CoordinatorError {
         /// Dimension expected.
         want: usize,
     },
+    /// A [`Coordinator::mutate`] delta batch was rejected (bad row id,
+    /// wrong dimension, upsert/delete conflict, or shrinking below one
+    /// row per shard); the serving generation is unchanged.
+    Mutation(String),
 }
 
 impl std::fmt::Display for CoordinatorError {
@@ -341,6 +374,7 @@ impl std::fmt::Display for CoordinatorError {
             Self::DimMismatch { got, want } => {
                 write!(f, "query dim {got} != dataset dim {want}")
             }
+            Self::Mutation(msg) => write!(f, "mutation rejected: {msg}"),
         }
     }
 }
@@ -359,11 +393,60 @@ struct Batch {
     items: Vec<Pending>,
 }
 
+/// A generation flip delivered to one serving thread (the reactor, or
+/// one S = 1 direct worker). The consumer swaps its local `Arc` between
+/// batches and acks; [`Coordinator::mutate`] blocks on every ack so the
+/// post-return visibility guarantee holds (see the module docs).
+struct Flip {
+    set: Arc<ShardSet>,
+    ack: Sender<()>,
+}
+
+/// Writer-side state: the newest fully-acked shard set. Only
+/// [`Coordinator::mutate`] locks this — the query path never does.
+struct MutationState {
+    current: Arc<ShardSet>,
+}
+
+/// What one applied [`Coordinator::mutate`] batch did.
+#[derive(Clone, Debug)]
+pub struct MutationOutcome {
+    /// Id of the generation now serving (every consumer acked it).
+    pub generation: u64,
+    /// Row count of that generation.
+    pub rows: usize,
+    /// Shards re-materialized and re-indexed (delta rows re-quantized
+    /// with fresh per-row error bounds).
+    pub shards_rebuilt: usize,
+    /// Shards carried over as zero-copy `Arc` clones, derived state
+    /// (colmax, quantized codes) included.
+    pub shards_reused: usize,
+    /// Deltas the batch carried (upserts + deletes + appends).
+    pub delta_rows: usize,
+}
+
 /// The serving coordinator. See module docs.
 pub struct Coordinator {
     submit_tx: Sender<Pending>,
     metrics: Arc<MetricsRegistry>,
     dim: usize,
+    /// Observes generation lifetimes (every [`Generation`] of this
+    /// coordinator's lineage registers here).
+    gauge: EpochGauge,
+    /// Writer-only lock; see [`MutationState`].
+    mutator: Mutex<MutationState>,
+    /// One flip channel per consumer: `[reactor]`, or one per direct
+    /// worker at S = 1.
+    flip_txs: Vec<Sender<Flip>>,
+    /// Highest generation id *started* (stored before flips are sent).
+    /// Workers read it (Relaxed) for the superseded-shed check; it is
+    /// also the sound upper witness bound — a reply can only carry a
+    /// generation already recorded here.
+    latest_gen: Arc<AtomicU64>,
+    /// Highest generation id every consumer has acked (stored after
+    /// [`Coordinator::mutate`] collected all acks) — the sound lower
+    /// witness bound for queries submitted afterwards.
+    acked_gen: AtomicU64,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -392,8 +475,11 @@ impl Coordinator {
     pub fn new(data: Matrix, cfg: CoordinatorConfig) -> crate::Result<Self> {
         assert!(cfg.workers >= 1 && cfg.max_batch >= 1);
         let dim = data.cols();
-        let sharded = Arc::new(ShardedMatrix::new(data, cfg.shard));
-        let n_shards = sharded.num_shards();
+        let gauge = EpochGauge::new();
+        // Generation 0: identical shard layout to a plain ShardedMatrix
+        // build (contiguous shards are zero-copy views).
+        let gen0 = Generation::initial(data, cfg.shard, gauge.clone());
+        let n_shards = gen0.num_shards();
         let use_reactor = n_shards > 1 || cfg.force_reactor;
         // Every shard needs at least one pinned worker; extra workers
         // round-robin across shards.
@@ -421,22 +507,16 @@ impl Coordinator {
             PullOrder::BlockShuffled(0) => PullOrder::BlockShuffled(QueryPlan::block_width(dim)),
             o => o,
         };
-        // One shared index per shard: the colmax scan (and, when a
-        // compressed tier is configured, the one-time quantization of
-        // the shard's rows) runs once per shard, and `Matrix` clones
-        // share storage, so the whole pool holds O(S·dim) metadata plus
-        // at most one compressed copy per shard. Workers can serve
-        // *any* shard's hedge batches through these.
-        let indexes: Vec<Arc<BoundedMeIndex>> = sharded
-            .shards()
-            .iter()
-            .map(|s| {
-                Arc::new(
-                    BoundedMeIndex::with_order(s.matrix().clone(), order)
-                        .with_storage(cfg.storage),
-                )
-            })
-            .collect();
+        // Generation 0's shard set: one BoundedMeIndex per shard (the
+        // colmax scan and, for compressed tiers, the one-time
+        // quantization run once per shard; `Matrix` clones share
+        // storage). Batches pin the set they were admitted under; a
+        // `mutate` flip swaps the serving `Arc` without touching this
+        // one. Workers serve *any* shard's hedge batches through the
+        // indexes the batch itself carries.
+        let set0 = ShardSet::with_order(gen0, order, cfg.storage);
+        let latest_gen = Arc::new(AtomicU64::new(0));
+        let mut flip_txs: Vec<Sender<Flip>> = Vec::new();
 
         if use_reactor {
             let per_shard_cap = (workers / n_shards).max(1) * 2;
@@ -449,13 +529,17 @@ impl Coordinator {
             }
             let (hedge_tx, hedge_rx) = bounded::<ShardBatch>(workers * 2);
             let (done_tx, done_rx) = bounded::<ShardDone>(workers * 4);
+            let (flip_tx, flip_rx) = bounded::<Flip>(4);
+            flip_txs.push(flip_tx);
 
             // Reactor thread: owns all cross-shard state, never blocks
-            // on a channel.
+            // on a channel. The only flip consumer at S ≥ 2: it swaps
+            // its `current` set between admits.
             {
                 let metrics = metrics.clone();
                 let hedge_delay = cfg.hedge_delay;
-                let storage = indexes[0].storage();
+                let storage = set0.index(0).storage();
+                let current = set0.clone();
                 threads.push(std::thread::Builder::new().name("reactor".into()).spawn(
                     move || {
                         Reactor {
@@ -466,6 +550,7 @@ impl Coordinator {
                             max_backlog: per_shard_cap,
                             batch_rx,
                             done_rx,
+                            flip_rx,
                             shard_txs,
                             hedge_tx,
                             selector: Selector::new(),
@@ -475,6 +560,7 @@ impl Coordinator {
                             next_query: 0,
                             next_dispatch: 0,
                             draining: false,
+                            current,
                             metrics,
                         }
                         .run()
@@ -487,24 +573,25 @@ impl Coordinator {
                 let rx = shard_rxs[shard_id].clone();
                 let hedge_rx = hedge_rx.clone();
                 let done_tx = done_tx.clone();
-                let indexes = indexes.clone();
-                let sharded = sharded.clone();
+                // The generation-0 shard the engine preloads; later
+                // generations' batches carry their own data and are
+                // pointer-checked against this at serve time.
+                let resident = set0.shard(shard_id).matrix().clone();
                 let backend = cfg.backend.clone();
                 let slow = cfg.debug_slow_shard;
+                let latest = latest_gen.clone();
                 threads.push(std::thread::Builder::new().name(format!("worker-{w}")).spawn(
                     move || {
-                        let engine =
-                            build_engine(&backend, sharded.shard(shard_id).matrix(), w);
+                        let engine = build_engine(&backend, &resident, w);
                         run_reactor_worker(
                             w,
-                            n_shards,
                             shard_id,
                             rx,
                             hedge_rx,
                             done_tx,
-                            &indexes,
-                            &sharded,
+                            &resident,
                             engine.as_ref(),
+                            &latest,
                             slow,
                         );
                     },
@@ -513,21 +600,26 @@ impl Coordinator {
         } else {
             // S = 1 fast path: workers consume batches straight from
             // the batcher (MPMC) and reply directly — no reactor
-            // thread, no per-query Arc, no merge state.
+            // thread, no per-query Arc, no merge state. Every worker
+            // is a flip consumer (it swaps its local set between
+            // batches), so mutate() acks cover the whole pool.
             for w in 0..workers {
+                let (flip_tx, flip_rx) = bounded::<Flip>(4);
+                flip_txs.push(flip_tx);
                 let rx = batch_rx.clone();
-                let index = indexes[0].clone();
-                let sharded = sharded.clone();
+                let set = set0.clone();
                 let metrics = metrics.clone();
                 let backend = cfg.backend.clone();
                 threads.push(std::thread::Builder::new().name(format!("worker-{w}")).spawn(
                     move || {
-                        let engine = build_engine(&backend, sharded.shard(0).matrix(), w);
+                        let resident = set.shard(0).matrix().clone();
+                        let engine = build_engine(&backend, &resident, w);
                         run_direct_worker(
                             w,
                             rx,
-                            index.as_ref(),
-                            sharded.shard(0),
+                            flip_rx,
+                            set,
+                            &resident,
                             engine.as_ref(),
                             &metrics,
                         );
@@ -536,7 +628,17 @@ impl Coordinator {
             }
         }
 
-        Ok(Self { submit_tx, metrics, dim, threads })
+        Ok(Self {
+            submit_tx,
+            metrics,
+            dim,
+            gauge,
+            mutator: Mutex::new(MutationState { current: set0 }),
+            flip_txs,
+            latest_gen,
+            acked_gen: AtomicU64::new(0),
+            threads,
+        })
     }
 
     /// Submit a request; returns the response channel. Fails fast under
@@ -571,6 +673,85 @@ impl Coordinator {
     /// Dataset dimension served.
     pub fn dim(&self) -> usize {
         self.dim
+    }
+
+    /// Apply one delta batch atomically and flip the serving generation.
+    ///
+    /// Builds generation `N+1` copy-on-write from the current `N`
+    /// (untouched shards carried as zero-copy `Arc` clones, dirty ones
+    /// re-indexed — and re-quantized, on compressed tiers — from
+    /// scratch), delivers the new [`ShardSet`] to every serving thread,
+    /// and **blocks until all of them acked the swap**. On return,
+    /// every query submitted afterwards is answered at generation ≥ the
+    /// returned id; queries already in flight finish on the snapshot
+    /// they pinned at admission. Writers serialize on an internal mutex
+    /// the query path never touches. An empty batch is a no-op (no
+    /// flip, current generation reported). A rejected batch
+    /// ([`CoordinatorError::Mutation`]) leaves the serving generation
+    /// unchanged.
+    pub fn mutate(&self, deltas: &[Delta]) -> Result<MutationOutcome, CoordinatorError> {
+        let mut st = self.mutator.lock().expect("mutator lock poisoned");
+        if deltas.is_empty() {
+            return Ok(MutationOutcome {
+                generation: st.current.generation().id(),
+                rows: st.current.generation().rows(),
+                shards_rebuilt: 0,
+                shards_reused: st.current.num_shards(),
+                delta_rows: 0,
+            });
+        }
+        let mut builder = GenerationBuilder::new(st.current.generation());
+        for d in deltas {
+            builder.apply(d).map_err(|e| CoordinatorError::Mutation(e.to_string()))?;
+        }
+        let delta_rows = builder.delta_rows();
+        let built =
+            builder.build().map_err(|e| CoordinatorError::Mutation(e.to_string()))?;
+        let next = ShardSet::advance(&st.current, &built);
+        let shards_reused = built.reuse.iter().filter(|r| r.is_some()).count();
+        let shards_rebuilt = built.reuse.len() - shards_reused;
+        let generation = next.generation().id();
+        let rows = next.generation().rows();
+        // Publish the started id *before* any consumer can hold the
+        // set: a reply carrying `generation` therefore implies
+        // `latest_generation() ≥ generation` — the upper witness bound.
+        self.latest_gen.store(generation, Ordering::Release);
+        let mut acks = Vec::with_capacity(self.flip_txs.len());
+        for tx in &self.flip_txs {
+            let (ack_tx, ack_rx) = bounded(1);
+            if tx.send(Flip { set: next.clone(), ack: ack_tx }).is_err() {
+                return Err(CoordinatorError::Shutdown);
+            }
+            acks.push(ack_rx);
+        }
+        for rx in acks {
+            rx.recv().map_err(|_| CoordinatorError::Shutdown)?;
+        }
+        self.acked_gen.store(generation, Ordering::Release);
+        st.current = next;
+        self.metrics.record_mutation(delta_rows);
+        Ok(MutationOutcome { generation, rows, shards_rebuilt, shards_reused, delta_rows })
+    }
+
+    /// Highest generation id every serving thread has acked: queries
+    /// submitted after this read are answered at a generation ≥ it (the
+    /// lower witness bound of the equivalence battery).
+    pub fn generation(&self) -> u64 {
+        self.acked_gen.load(Ordering::Acquire)
+    }
+
+    /// Highest generation id a [`Coordinator::mutate`] call has started
+    /// flipping to (≥ [`Coordinator::generation`]): no reply can carry
+    /// a generation above this (the upper witness bound).
+    pub fn latest_generation(&self) -> u64 {
+        self.latest_gen.load(Ordering::Acquire)
+    }
+
+    /// Generations currently alive (pinned by serving state or
+    /// in-flight batches). Returns to 1 after churn quiesces — the
+    /// epoch-reclamation leak check.
+    pub fn generations_alive(&self) -> usize {
+        self.gauge.alive()
     }
 
     /// Drain and stop all threads: the batcher flushes its open groups,
@@ -744,6 +925,11 @@ struct ShardBatch {
     /// optimization — suppression itself happens at the reactor's
     /// dispatch table, and the first copy always sees `true`.
     live: Arc<AtomicBool>,
+    /// The generation-pinned shard set captured at reactor admission.
+    /// Every copy of the dispatch (hedges included) serves from this
+    /// set, however many flips happen while the batch is in flight —
+    /// that pin is what makes answers exact for one specific snapshot.
+    set: Arc<ShardSet>,
     items: Vec<Arc<QueryJob>>,
 }
 
@@ -754,6 +940,10 @@ struct QueryDone {
     /// The worker observed the query's deadline expired at pickup; the
     /// partial is empty and the merge will reply `shed`.
     expired: bool,
+    /// `expired` *and* the batch's pinned generation had already been
+    /// superseded by a flip at pickup — the stale-and-late shed the
+    /// `shed_superseded` counter tracks.
+    superseded: bool,
 }
 
 /// Completion event: one executed [`ShardBatch`], reported back to the
@@ -779,9 +969,15 @@ struct MergeState {
     /// `Storage::F32` for exact queries, the deployment tier for
     /// BOUNDEDME ones.
     storage: Storage,
+    /// Generation id the query's batch pinned at admission (reported in
+    /// the reply).
+    generation: u64,
     flops: u64,
     remaining: usize,
     shed: bool,
+    /// Some shard shed this query while its pinned generation was
+    /// already superseded (see [`QueryDone::superseded`]).
+    superseded: bool,
     queue_wait: Duration,
     batch_size: usize,
     started: Instant,
@@ -808,6 +1004,10 @@ struct Dispatch {
     /// Shared with every queued copy of this dispatch; cleared on
     /// completion so stale copies skip their scan at pickup.
     live: Arc<AtomicBool>,
+    /// The pinned set, so a hedge re-dispatch serves the *same*
+    /// generation as the primary (an `Arc` bump, kept regardless of
+    /// whether hedging is enabled).
+    set: Arc<ShardSet>,
 }
 
 /// The event-driven shard coordinator core. Single-threaded event loop:
@@ -825,6 +1025,7 @@ struct Reactor {
     max_backlog: usize,
     batch_rx: Receiver<Batch>,
     done_rx: Receiver<ShardDone>,
+    flip_rx: Receiver<Flip>,
     shard_txs: Vec<Sender<ShardBatch>>,
     hedge_tx: Sender<ShardBatch>,
     selector: Selector,
@@ -834,6 +1035,9 @@ struct Reactor {
     next_query: u64,
     next_dispatch: u64,
     draining: bool,
+    /// The shard set new admissions pin — swapped by generation flips,
+    /// always between batches (admission happens after the flip drain).
+    current: Arc<ShardSet>,
     metrics: Arc<MetricsRegistry>,
 }
 
@@ -841,11 +1045,21 @@ impl Reactor {
     fn run(mut self) {
         self.selector.watch(&self.batch_rx);
         self.selector.watch(&self.done_rx);
+        self.selector.watch(&self.flip_rx);
         for tx in &self.shard_txs {
             self.selector.watch_sender(tx); // wake on pop: backlog can flush
         }
         self.selector.watch_sender(&self.hedge_tx);
         loop {
+            // 0. Generation flips, before any admission this iteration:
+            //    a batch never straddles a flip, and acking here (after
+            //    the swap) upholds mutate()'s post-return guarantee for
+            //    every batch admitted afterwards. In-flight dispatches
+            //    keep serving the set they pinned.
+            while let Ok(flip) = self.flip_rx.try_recv() {
+                self.current = flip.set;
+                let _ = flip.ack.send(());
+            }
             // 1. Completions first: they retire merge/dispatch state and
             //    free backlog headroom.
             loop {
@@ -894,6 +1108,7 @@ impl Reactor {
     /// the per-shard backlogs.
     fn admit(&mut self, batch: Batch) {
         let picked_up = Instant::now();
+        let generation = self.current.generation().id();
         let batch_size = batch.items.len();
         let mut jobs: Vec<Arc<QueryJob>> = Vec::with_capacity(batch_size);
         for pending in batch.items {
@@ -913,6 +1128,7 @@ impl Reactor {
                         shed: true,
                         shards: 0,
                         storage: Storage::F32,
+                        generation,
                     });
                     continue;
                 }
@@ -939,9 +1155,11 @@ impl Reactor {
                         QueryMode::Exact => Storage::F32,
                         _ => self.storage,
                     },
+                    generation,
                     flops: 0,
                     remaining: self.n_shards,
                     shed: false,
+                    superseded: false,
                     queue_wait,
                     batch_size,
                     started: Instant::now(),
@@ -979,6 +1197,7 @@ impl Reactor {
                     sent_at: None,
                     hedge_sent: false,
                     live: live.clone(),
+                    set: self.current.clone(),
                 },
             );
             self.backlog[shard].push_back(ShardBatch {
@@ -986,6 +1205,7 @@ impl Reactor {
                 shard,
                 hedged: false,
                 live,
+                set: self.current.clone(),
                 items: jobs.clone(),
             });
         }
@@ -1042,6 +1262,7 @@ impl Reactor {
                     shard: disp.shard,
                     hedged: true,
                     live: disp.live.clone(),
+                    set: disp.set.clone(),
                     items: disp.items.clone(),
                 };
                 if self.hedge_tx.try_send(sb).is_ok() {
@@ -1074,9 +1295,10 @@ impl Reactor {
         if done.hedged {
             self.metrics.record_hedge_won();
         }
-        for QueryDone { query, partial, expired } in done.results {
+        for QueryDone { query, partial, expired, superseded } in done.results {
             let Some(m) = self.merges.get_mut(&query) else { continue };
             m.shed |= expired;
+            m.superseded |= superseded;
             m.flops += partial.flops;
             if m.passthrough {
                 m.entries_direct = partial.entries;
@@ -1100,6 +1322,9 @@ impl Reactor {
             // has timed out, reply shed (no results; `flops` reports
             // whatever work other shards had already sunk).
             self.metrics.record_shed();
+            if m.superseded {
+                self.metrics.record_shed_superseded();
+            }
             let _ = m.reply.send(QueryResponse {
                 indices: Vec::new(),
                 scores: Vec::new(),
@@ -1111,6 +1336,7 @@ impl Reactor {
                 shed: true,
                 shards: 0,
                 storage: Storage::F32,
+                generation: m.generation,
             });
             return;
         }
@@ -1128,6 +1354,7 @@ impl Reactor {
             shed: false,
             shards: self.n_shards,
             storage: m.storage,
+            generation: m.generation,
         });
     }
 }
@@ -1139,14 +1366,13 @@ impl Reactor {
 #[allow(clippy::too_many_arguments)]
 fn run_reactor_worker(
     worker_id: usize,
-    n_shards: usize,
     pinned: usize,
     primary: Receiver<ShardBatch>,
     hedge_rx: Receiver<ShardBatch>,
     done_tx: Sender<ShardDone>,
-    indexes: &[Arc<BoundedMeIndex>],
-    sharded: &ShardedMatrix,
+    resident: &Matrix,
     engine: &dyn ScoringEngine,
+    latest_gen: &AtomicU64,
     slow: Option<(usize, Duration)>,
 ) {
     let mut ctx = QueryContext::new();
@@ -1172,7 +1398,7 @@ fn run_reactor_worker(
                     continue;
                 }
                 let done = serve_reactor_batch(
-                    sb, n_shards, worker_id, pinned, indexes, sharded, engine, &mut ctx, slow,
+                    sb, worker_id, pinned, resident, engine, &mut ctx, latest_gen, slow,
                 );
                 if done_tx.send(done).is_err() {
                     return; // reactor gone (shutdown): stop serving
@@ -1202,13 +1428,12 @@ fn run_reactor_worker(
 #[allow(clippy::too_many_arguments)]
 fn serve_reactor_batch(
     sb: ShardBatch,
-    n_shards: usize,
     worker_id: usize,
     pinned: usize,
-    indexes: &[Arc<BoundedMeIndex>],
-    sharded: &ShardedMatrix,
+    resident: &Matrix,
     engine: &dyn ScoringEngine,
     ctx: &mut QueryContext,
+    latest_gen: &AtomicU64,
     slow: Option<(usize, Duration)>,
 ) -> ShardDone {
     if let Some((slow_shard, delay)) = slow {
@@ -1218,10 +1443,16 @@ fn serve_reactor_batch(
             std::thread::sleep(delay);
         }
     }
-    let shard = sharded.shard(sb.shard);
-    let index = indexes[sb.shard].as_ref();
+    let set = &sb.set;
+    let n_shards = set.num_shards();
+    let shard = set.shard(sb.shard);
+    let index = set.index(sb.shard).as_ref();
     let data = index.data();
     let (rows, dim) = (data.rows(), data.cols());
+    // Stale-generation marker for the shed path: a flip has started
+    // past this batch's pin (Relaxed is enough — the flag only
+    // annotates sheds, it never gates correctness).
+    let superseded_gen = set.generation().id() < latest_gen.load(Ordering::Relaxed);
     let mut results: Vec<QueryDone> = Vec::with_capacity(sb.items.len());
 
     let mut exact: Vec<&Arc<QueryJob>> = Vec::new();
@@ -1230,13 +1461,17 @@ fn serve_reactor_batch(
         // Re-check the deadline at shard pickup: the reactor's check can
         // be long past by the time a backed-up shard channel drains, and
         // computing an answer the client timed out on wastes a full
-        // shard scan (× S shards).
+        // shard scan (× S shards). A query that is late *and* pinned to
+        // a superseded generation is the churn-specific shed —
+        // `shed_superseded` makes that visible; in-deadline queries
+        // always finish on their pin, superseded or not.
         if let Some(deadline) = item.deadline {
             if item.submitted.elapsed() > deadline {
                 results.push(QueryDone {
                     query: item.id,
                     partial: ShardPartial { entries: Vec::new(), flops: 0, scanned: 0 },
                     expired: true,
+                    superseded: superseded_gen,
                 });
                 continue;
             }
@@ -1250,11 +1485,18 @@ fn serve_reactor_batch(
     // --- Exact group: one engine call for the whole group. ---
     if !exact.is_empty() {
         let queries: Vec<&[f32]> = exact.iter().map(|it| it.vector.as_slice()).collect();
-        // The worker's engine may hold a *different* shard
-        // device-resident (PJRT preload); cross-shard (hedged) batches
-        // score through the native blocked kernels instead —
-        // bit-identical to the engine path under the Native backend.
-        let fused_ok = if sb.shard == pinned {
+        // The worker's engine may hold a *different* shard, or a
+        // *previous generation* of its own shard, device-resident (PJRT
+        // preloads generation 0 of the pinned shard). A flipped shard
+        // can alias different bytes at an equal row count, so the
+        // device-path gate is pointer identity with the preloaded
+        // matrix; everything else scores through the native blocked
+        // kernels — bit-identical to the engine path under the Native
+        // backend.
+        let resident_ok = sb.shard == pinned
+            && data.rows() == resident.rows()
+            && std::ptr::eq(data.as_slice().as_ptr(), resident.as_slice().as_ptr());
+        let fused_ok = if resident_ok {
             engine.score_dataset_batch(data, &queries, &mut ctx.rank.scores).is_ok()
         } else {
             NativeEngine.score_dataset_batch(data, &queries, &mut ctx.rank.scores).is_ok()
@@ -1281,6 +1523,7 @@ fn serve_reactor_batch(
                     scanned: rows,
                 },
                 expired: false,
+                superseded: false,
             });
         }
     }
@@ -1311,6 +1554,7 @@ fn serve_reactor_batch(
                         scanned: res.candidates,
                     },
                     expired: false,
+                    superseded: false,
                 });
             };
             if uniform && bme.len() > 1 {
@@ -1351,7 +1595,12 @@ fn serve_reactor_batch(
             for (item, partial) in
                 bme.iter().zip(index.query_batch_shard(&queries, &split, ctx, shard))
             {
-                results.push(QueryDone { query: item.id, partial, expired: false });
+                results.push(QueryDone {
+                    query: item.id,
+                    partial,
+                    expired: false,
+                    superseded: false,
+                });
             }
         } else {
             for item in &bme {
@@ -1366,7 +1615,12 @@ fn serve_reactor_batch(
                     .query_batch_shard(&[item.vector.as_slice()], &split, ctx, shard)
                     .pop()
                     .expect("one partial per query");
-                results.push(QueryDone { query: item.id, partial, expired: false });
+                results.push(QueryDone {
+                    query: item.id,
+                    partial,
+                    expired: false,
+                    superseded: false,
+                });
             }
         }
     }
@@ -1376,18 +1630,39 @@ fn serve_reactor_batch(
 
 /// S = 1 fast-path worker loop: batches arrive straight from the
 /// batcher, answers go straight to the client. One long-lived
-/// [`QueryContext`]; no reactor state anywhere on this path.
+/// [`QueryContext`]; no reactor state anywhere on this path. Each
+/// worker is its own generation-flip consumer: flips drain (and ack)
+/// between batches, so the serving set swap is a local `Arc` move —
+/// still no lock anywhere on the fast path.
 fn run_direct_worker(
     worker_id: usize,
     rx: Receiver<Batch>,
-    index: &BoundedMeIndex,
-    shard: &Shard,
+    flip_rx: Receiver<Flip>,
+    mut set: Arc<ShardSet>,
+    resident: &Matrix,
     engine: &dyn ScoringEngine,
     metrics: &MetricsRegistry,
 ) {
     let mut ctx = QueryContext::new();
-    while let Ok(batch) = rx.recv() {
-        serve_direct_batch(worker_id, batch, index, shard, engine, &mut ctx, metrics);
+    let selector = Selector::new();
+    selector.watch(&rx);
+    selector.watch(&flip_rx);
+    loop {
+        // Flips apply between batches only; the ack (sent after the
+        // swap) is what lets mutate() promise post-return visibility.
+        while let Ok(flip) = flip_rx.try_recv() {
+            set = flip.set;
+            let _ = flip.ack.send(());
+        }
+        match rx.try_recv() {
+            Ok(batch) => {
+                serve_direct_batch(
+                    worker_id, batch, &set, resident, engine, &mut ctx, metrics,
+                );
+            }
+            Err(TryRecvError::Empty) => selector.wait(),
+            Err(TryRecvError::Disconnected) => return,
+        }
     }
 }
 
@@ -1399,13 +1674,16 @@ fn run_direct_worker(
 fn serve_direct_batch(
     worker_id: usize,
     batch: Batch,
-    index: &BoundedMeIndex,
-    shard: &Shard,
+    set: &ShardSet,
+    resident: &Matrix,
     engine: &dyn ScoringEngine,
     ctx: &mut QueryContext,
     metrics: &MetricsRegistry,
 ) {
     let picked_up = Instant::now();
+    let index = set.index(0).as_ref();
+    let shard = set.shard(0);
+    let generation = set.generation().id();
     let data = index.data();
     let (rows, dim) = (data.rows(), data.cols());
     let batch_size = batch.items.len();
@@ -1428,6 +1706,7 @@ fn serve_direct_batch(
                     shed: true,
                     shards: 0,
                     storage: Storage::F32,
+                    generation,
                 });
                 continue;
             }
@@ -1458,13 +1737,23 @@ fn serve_direct_batch(
             shed: false,
             shards: 1,
             storage,
+            generation,
         });
     };
 
     // --- Exact group: one engine call for the whole group. ---
     if !exact.is_empty() {
         let queries: Vec<&[f32]> = exact.iter().map(|p| p.req.vector.as_slice()).collect();
-        let fused_ok = engine.score_dataset_batch(data, &queries, &mut ctx.rank.scores).is_ok();
+        // The engine preloaded generation 0 (PJRT device residency);
+        // after a flip this set's rows are different bytes — pointer
+        // identity gates the device path, native kernels otherwise.
+        let resident_ok = data.rows() == resident.rows()
+            && std::ptr::eq(data.as_slice().as_ptr(), resident.as_slice().as_ptr());
+        let fused_ok = if resident_ok {
+            engine.score_dataset_batch(data, &queries, &mut ctx.rank.scores).is_ok()
+        } else {
+            NativeEngine.score_dataset_batch(data, &queries, &mut ctx.rank.scores).is_ok()
+        };
         for (gi, pending) in exact.iter().enumerate() {
             let mut top = TopK::new(pending.req.k);
             if fused_ok {
@@ -1863,6 +2152,113 @@ mod tests {
             }
         }
         assert_eq!(c.metrics().queries, 24);
+        c.shutdown();
+    }
+
+    /// Shadow a delta batch through [`GenerationBuilder`] on the side and
+    /// check the coordinator's post-flip answers against ground truth on
+    /// the materialized snapshot.
+    fn mutated_truth(data: &Matrix, deltas: &[Delta], q: &[f32], k: usize) -> Vec<usize> {
+        let g0 = Generation::initial(data.clone(), ShardSpec::single(), EpochGauge::new());
+        let mut b = GenerationBuilder::new(&g0);
+        for d in deltas {
+            b.apply(d).unwrap();
+        }
+        let snap = b.build().unwrap().generation.materialize();
+        crate::algos::ground_truth(&snap, q, k)
+    }
+
+    #[test]
+    fn mutate_flips_generation_and_answers() {
+        // S = 1 direct path: queries before the flip answer on generation
+        // 0, queries after answer on generation 1 against the mutated
+        // rows, and the superseded generation is reclaimed.
+        let (c, data) = small_coordinator(2, 64);
+        let q = vec![0.5f32; 64];
+        let resp = c.query_blocking(QueryRequest::exact(q.clone(), 5)).unwrap();
+        assert_eq!(resp.generation, 0);
+        assert_eq!(resp.indices, crate::algos::ground_truth(&data, &q, 5));
+        assert_eq!(c.generation(), 0);
+        assert_eq!(c.generations_alive(), 1);
+
+        let deltas = vec![
+            Delta::Upsert { id: 3, vector: vec![1.0; 64] },
+            Delta::Delete { id: 7 },
+            Delta::Append { vector: vec![-1.0; 64] },
+        ];
+        let out = c.mutate(&deltas).unwrap();
+        assert_eq!(out.generation, 1);
+        assert_eq!(out.rows, 200);
+        assert_eq!(out.delta_rows, 3);
+        assert_eq!(c.generation(), 1);
+        assert_eq!(c.latest_generation(), 1);
+
+        let resp = c.query_blocking(QueryRequest::exact(q.clone(), 5)).unwrap();
+        assert_eq!(resp.generation, 1);
+        assert_eq!(resp.indices, mutated_truth(&data, &deltas, &q, 5));
+        // ε→0 BOUNDEDME agrees on the new generation too.
+        let resp = c.query_blocking(QueryRequest::bounded_me(q.clone(), 5, 1e-9, 0.05)).unwrap();
+        assert_eq!(resp.generation, 1);
+        let mut got = resp.indices.clone();
+        got.sort_unstable();
+        let mut want = mutated_truth(&data, &deltas, &q, 5);
+        want.sort_unstable();
+        assert_eq!(got, want);
+
+        // Generation 0 has no pins left once the flip is acked.
+        assert_eq!(c.generations_alive(), 1);
+        let snap = c.metrics();
+        assert_eq!(snap.mutations, 1);
+        assert_eq!(snap.mutation_rows, 3);
+        c.shutdown();
+    }
+
+    #[test]
+    fn mutate_under_reactor_serves_new_generation() {
+        // S = 3 reactor path: the flip lands at the admission point, so a
+        // query submitted after mutate() returns must answer on the new
+        // generation with exact sharded answers.
+        let ds = gaussian_dataset(101, 64, 33);
+        let cfg = CoordinatorConfig {
+            workers: 3,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(1),
+            queue_capacity: 128,
+            backend: Backend::Native,
+            pull_order: PullOrder::BlockShuffled(16),
+            shard: ShardSpec::contiguous(3),
+            ..Default::default()
+        };
+        let data = ds.vectors.clone();
+        let q = ds.sample_query(2);
+        let c = Coordinator::new(ds.vectors, cfg).unwrap();
+
+        let mut deltas = Vec::new();
+        for id in [0usize, 50, 100] {
+            let mut v = ds.sample_query(900 + id as u64);
+            v[0] += 2.0;
+            deltas.push(Delta::Upsert { id, vector: v });
+        }
+        let out = c.mutate(&deltas).unwrap();
+        assert_eq!(out.generation, 1);
+        // Pure upserts keep the shard layout: only dirty shards rebuild.
+        assert_eq!(out.shards_rebuilt + out.shards_reused, 3);
+        assert!(out.shards_rebuilt >= 1);
+
+        let resp = c.query_blocking(QueryRequest::exact(q.clone(), 5)).unwrap();
+        assert_eq!(resp.generation, 1);
+        assert_eq!(resp.shards, 3);
+        assert_eq!(resp.indices, mutated_truth(&data, &deltas, &q, 5));
+        let resp = c.query_blocking(QueryRequest::bounded_me(q.clone(), 4, 1e-9, 0.1)).unwrap();
+        assert_eq!(resp.generation, 1);
+        assert_eq!(resp.indices, mutated_truth(&data, &deltas, &q, 4));
+        assert_eq!(c.generations_alive(), 1);
+
+        // An empty batch is a no-op, not a flip.
+        let out = c.mutate(&[]).unwrap();
+        assert_eq!(out.generation, 1);
+        assert_eq!(out.delta_rows, 0);
+        assert_eq!(c.metrics().mutations, 1);
         c.shutdown();
     }
 }

@@ -10,15 +10,25 @@
 //! ← {"ok":true,"indices":[…],"scores":[…],"flops":123,"service_ms":0.8,"batch":4}
 //! → {"op":"metrics"}
 //! ← {"ok":true,"queries":10,"batches":4,"flops":…, "service_p50_ms":…, …}
+//! → {"op":"mutate","upserts":[{"id":3,"vector":[…]}],"deletes":[7],
+//!    "appends":[[…]]}
+//! ← {"ok":true,"generation":1,"rows":200,"shards_rebuilt":1,
+//!    "shards_reused":2,"delta_rows":3}
 //! → {"op":"ping"}
 //! ← {"ok":true,"pong":true}
 //! ```
+//!
+//! `mutate` applies one delta batch atomically: the reply's
+//! `generation` is live for every query submitted after it arrives
+//! (the flip is acked by all serving threads before `mutate` returns).
+//! Query replies carry the `generation` their indices refer to.
 //!
 //! Errors come back as `{"ok":false,"error":"…"}`; malformed lines do
 //! not kill the connection. One thread per connection (bounded by
 //! `max_conns`).
 
 use super::{Coordinator, CoordinatorError, QueryMode, QueryRequest};
+use crate::data::generation::Delta;
 use crate::jsonlite::{parse, Json};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -161,7 +171,62 @@ pub fn handle_line(line: &str, coord: &Coordinator) -> Json {
                 ("hedge_fired", Json::Num(m.hedge_fired as f64)),
                 ("hedge_won", Json::Num(m.hedge_won as f64)),
                 ("fast_path", Json::Num(m.fast_path as f64)),
+                ("mutations", Json::Num(m.mutations as f64)),
+                ("mutation_rows", Json::Num(m.mutation_rows as f64)),
+                ("shed_superseded", Json::Num(m.shed_superseded as f64)),
+                ("generation", Json::Num(coord.generation() as f64)),
+                ("generations_alive", Json::Num(coord.generations_alive() as f64)),
             ])
+        }
+        Some("mutate") => {
+            let mut deltas = Vec::new();
+            if let Some(ups) = req.get("upserts") {
+                let Json::Arr(items) = ups else {
+                    return err_response("'upserts' must be an array");
+                };
+                for item in items {
+                    let Some(id) = item.get("id").and_then(Json::as_usize) else {
+                        return err_response("upsert needs an integer 'id'");
+                    };
+                    let Some(vector) = item.get("vector").and_then(Json::as_f32_vec) else {
+                        return err_response("upsert needs a numeric 'vector'");
+                    };
+                    deltas.push(Delta::Upsert { id, vector });
+                }
+            }
+            if let Some(dels) = req.get("deletes") {
+                let Json::Arr(items) = dels else {
+                    return err_response("'deletes' must be an array");
+                };
+                for item in items {
+                    let Some(id) = item.as_usize() else {
+                        return err_response("delete ids must be integers");
+                    };
+                    deltas.push(Delta::Delete { id });
+                }
+            }
+            if let Some(apps) = req.get("appends") {
+                let Json::Arr(items) = apps else {
+                    return err_response("'appends' must be an array");
+                };
+                for item in items {
+                    let Some(vector) = item.as_f32_vec() else {
+                        return err_response("appends must be numeric vectors");
+                    };
+                    deltas.push(Delta::Append { vector });
+                }
+            }
+            match coord.mutate(&deltas) {
+                Ok(out) => Json::obj([
+                    ("ok", Json::Bool(true)),
+                    ("generation", Json::Num(out.generation as f64)),
+                    ("rows", Json::Num(out.rows as f64)),
+                    ("shards_rebuilt", Json::Num(out.shards_rebuilt as f64)),
+                    ("shards_reused", Json::Num(out.shards_reused as f64)),
+                    ("delta_rows", Json::Num(out.delta_rows as f64)),
+                ]),
+                Err(e) => err_response(&e.to_string()),
+            }
         }
         Some("query") => {
             let Some(vector) = req.get("vector").and_then(Json::as_f32_vec) else {
@@ -193,6 +258,7 @@ pub fn handle_line(line: &str, coord: &Coordinator) -> Json {
                     ("service_ms", Json::Num(resp.service.as_secs_f64() * 1e3)),
                     ("batch", Json::Num(resp.batch_size as f64)),
                     ("storage", Json::Str(resp.storage.label().into())),
+                    ("generation", Json::Num(resp.generation as f64)),
                 ]),
                 Err(CoordinatorError::QueueFull) => err_response("overloaded"),
                 Err(e) => err_response(&e.to_string()),
@@ -285,6 +351,56 @@ mod tests {
             let resp = handle_line(bad, &coord);
             assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{bad}");
         }
+    }
+
+    #[test]
+    fn handle_line_mutate_flips_and_serves() {
+        let coord = coordinator();
+        // Upsert row 0 and append one row, both to the all-ones spike;
+        // delete row 5. The dataset has 100 rows, so afterwards the
+        // appended row is id 99 (ids above the deletion shift down).
+        let v: Vec<String> = (0..32).map(|_| "1".to_string()).collect();
+        let v = v.join(",");
+        let line = format!(
+            r#"{{"op":"mutate","upserts":[{{"id":0,"vector":[{v}]}}],"deletes":[5],"appends":[[{v}]]}}"#
+        );
+        let resp = handle_line(&line, &coord);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+        assert_eq!(resp.get("generation").unwrap().as_usize(), Some(1));
+        assert_eq!(resp.get("rows").unwrap().as_usize(), Some(100));
+        assert_eq!(resp.get("delta_rows").unwrap().as_usize(), Some(3));
+
+        // An exact query along the spike must surface both planted rows
+        // on the new generation.
+        let line = format!(r#"{{"op":"query","vector":[{v}],"k":2,"mode":"exact"}}"#);
+        let resp = handle_line(&line, &coord);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(resp.get("generation").unwrap().as_usize(), Some(1));
+        let mut got: Vec<f32> = resp.get("indices").unwrap().as_f32_vec().unwrap();
+        got.sort_by(f32::total_cmp);
+        assert_eq!(got, vec![0.0, 99.0]);
+
+        let m = handle_line(r#"{"op":"metrics"}"#, &coord);
+        assert_eq!(m.get("generation").unwrap().as_usize(), Some(1));
+        assert_eq!(m.get("mutations").unwrap().as_usize(), Some(1));
+        assert_eq!(m.get("mutation_rows").unwrap().as_usize(), Some(3));
+        assert_eq!(m.get("generations_alive").unwrap().as_usize(), Some(1));
+
+        // Malformed or rejected batches answer ok:false and leave the
+        // serving generation untouched.
+        for bad in [
+            r#"{"op":"mutate","upserts":[{"id":0}]}"#.to_string(),
+            r#"{"op":"mutate","upserts":{"id":0}}"#.to_string(),
+            r#"{"op":"mutate","deletes":["x"]}"#.to_string(),
+            r#"{"op":"mutate","appends":[3]}"#.to_string(),
+            format!(r#"{{"op":"mutate","upserts":[{{"id":5000,"vector":[{v}]}}]}}"#),
+            r#"{"op":"mutate","appends":[[1,2]]}"#.to_string(), // dim mismatch
+        ] {
+            let resp = handle_line(&bad, &coord);
+            assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{bad}");
+        }
+        let m = handle_line(r#"{"op":"metrics"}"#, &coord);
+        assert_eq!(m.get("generation").unwrap().as_usize(), Some(1));
     }
 
     #[test]

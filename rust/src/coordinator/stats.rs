@@ -99,6 +99,9 @@ pub struct MetricsRegistry {
     hedge_fired: AtomicU64,
     hedge_won: AtomicU64,
     fast_path: AtomicU64,
+    mutations: AtomicU64,
+    mutation_rows: AtomicU64,
+    shed_superseded: AtomicU64,
     queue_wait: AtomicDurHistogram,
     service: AtomicDurHistogram,
 }
@@ -131,6 +134,15 @@ pub struct MetricsSnapshot {
     /// Queries answered on the S = 1 fast path (worker → client
     /// directly, no reactor hop, no merge state).
     pub fast_path: u64,
+    /// Generation flips applied (non-empty [`super::Coordinator::mutate`]
+    /// batches acknowledged by every serving thread).
+    pub mutations: u64,
+    /// Total delta rows (upserts + appends + deletes) across all flips.
+    pub mutation_rows: u64,
+    /// Requests shed at shard pickup because their pinned generation had
+    /// been superseded by a flip **and** their deadline had expired —
+    /// the stale-and-late subset of `shed` (also counted there).
+    pub shed_superseded: u64,
 }
 
 impl Default for MetricsRegistry {
@@ -151,6 +163,9 @@ impl MetricsRegistry {
             hedge_fired: AtomicU64::new(0),
             hedge_won: AtomicU64::new(0),
             fast_path: AtomicU64::new(0),
+            mutations: AtomicU64::new(0),
+            mutation_rows: AtomicU64::new(0),
+            shed_superseded: AtomicU64::new(0),
             queue_wait: AtomicDurHistogram::new(),
             service: AtomicDurHistogram::new(),
         }
@@ -190,6 +205,18 @@ impl MetricsRegistry {
         self.fast_path.fetch_add(1, Relaxed);
     }
 
+    /// Record an applied generation flip carrying `delta_rows` deltas.
+    pub fn record_mutation(&self, delta_rows: usize) {
+        self.mutations.fetch_add(1, Relaxed);
+        self.mutation_rows.fetch_add(delta_rows as u64, Relaxed);
+    }
+
+    /// Record a shed whose pinned generation was superseded (the request
+    /// is *also* recorded via [`Self::record_shed`] by the caller).
+    pub fn record_shed_superseded(&self) {
+        self.shed_superseded.fetch_add(1, Relaxed);
+    }
+
     /// Copy out a snapshot (relaxed — see module docs).
     pub fn snapshot(&self) -> MetricsSnapshot {
         let batches = self.batches.load(Relaxed);
@@ -218,6 +245,9 @@ impl MetricsRegistry {
             hedge_fired: self.hedge_fired.load(Relaxed),
             hedge_won: self.hedge_won.load(Relaxed),
             fast_path: self.fast_path.load(Relaxed),
+            mutations: self.mutations.load(Relaxed),
+            mutation_rows: self.mutation_rows.load(Relaxed),
+            shed_superseded: self.shed_superseded.load(Relaxed),
         }
     }
 }
@@ -276,6 +306,20 @@ mod tests {
         m.record_fast_path();
         let s = m.snapshot();
         assert_eq!((s.hedge_fired, s.hedge_won, s.fast_path), (2, 1, 1));
+    }
+
+    #[test]
+    fn mutation_and_superseded_counters() {
+        let m = MetricsRegistry::new();
+        m.record_mutation(3);
+        m.record_mutation(7);
+        m.record_shed();
+        m.record_shed_superseded();
+        let s = m.snapshot();
+        assert_eq!(s.mutations, 2);
+        assert_eq!(s.mutation_rows, 10);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.shed_superseded, 1);
     }
 
     #[test]

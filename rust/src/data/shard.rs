@@ -73,6 +73,7 @@ impl ShardSpec {
 }
 
 /// Row-id mapping of one shard: local row → dataset-global row.
+#[derive(Clone)]
 enum ShardIds {
     /// Contiguous: `global = offset + local`.
     Offset(usize),
@@ -81,12 +82,30 @@ enum ShardIds {
 }
 
 /// One shard: a dense matrix of its rows plus the local→global row map.
+/// Cloning is cheap for contiguous shards (the matrix is an `Arc`-backed
+/// view) — [`crate::data::generation`] relies on that to carry untouched
+/// shards across generations without copying a byte.
+#[derive(Clone)]
 pub struct Shard {
     matrix: Matrix,
     ids: ShardIds,
 }
 
 impl Shard {
+    /// Crate-internal: a contiguous shard whose local row `i` is global
+    /// row `offset + i`. Used by the generation builder, which assembles
+    /// shard sets directly instead of slicing one backing matrix.
+    pub(crate) fn from_offset(matrix: Matrix, offset: usize) -> Self {
+        Self { matrix, ids: ShardIds::Offset(offset) }
+    }
+
+    /// Crate-internal: a gathered shard with an explicit local→global id
+    /// list (`ids.len()` must equal `matrix.rows()`).
+    pub(crate) fn from_ids(matrix: Matrix, ids: Vec<usize>) -> Self {
+        debug_assert_eq!(ids.len(), matrix.rows(), "shard id list / row mismatch");
+        Self { matrix, ids: ShardIds::List(ids) }
+    }
+
     /// The shard's rows as a dense matrix (a zero-copy view for
     /// contiguous shards).
     #[inline]

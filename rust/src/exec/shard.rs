@@ -51,9 +51,13 @@
 //! verbatim by a sibling worker because partials are deterministic
 //! functions of (shard data, knobs, seed) (see [`crate::coordinator`]).
 
+use std::sync::Arc;
+
 use crate::algos::{BoundedMeIndex, MipsIndex, MipsParams, MipsResult, NaiveIndex};
 use crate::bandit::PullOrder;
-use crate::data::shard::{ShardSpec, ShardedMatrix};
+use crate::data::generation::{Generation, GenerationBuild};
+use crate::data::quant::Storage;
+use crate::data::shard::{Shard, ShardSpec, ShardedMatrix};
 use crate::exec::{PlanAlgo, QueryContext, QueryPlan};
 use crate::linalg::{Matrix, TopK};
 
@@ -242,10 +246,183 @@ impl ShardedIndex {
     }
 }
 
+/// A [`Generation`] pinned to its per-shard serving state: one
+/// [`BoundedMeIndex`] (column maxima, quantized codes for compressed
+/// tiers) and one [`NaiveIndex`] per shard. This is the
+/// generation-pinned sibling of [`ShardedIndex`]: immutable and
+/// `Arc`-shared, so a query that captured the set at admission keeps
+/// answering from it however many flips happen behind its back —
+/// queries pin a `ShardSet`, the coordinator swaps `Arc<ShardSet>`s
+/// between batches.
+///
+/// [`ShardSet::advance`] is the copy-on-write step of the flip: shards
+/// the [`GenerationBuild`] marks as reused carry their *derived* state
+/// (colmax, `QuantMatrix` incl. per-row error bounds) by `Arc` clone —
+/// valid because the reuse contract is byte-identical rows in identical
+/// order — while re-materialized shards are indexed from scratch, which
+/// is precisely what re-quantizes delta rows with fresh error bounds
+/// and keeps the two-tier ε-bias accounting stated against the live
+/// bytes.
+pub struct ShardSet {
+    generation: Arc<Generation>,
+    indexes: Vec<Arc<BoundedMeIndex>>,
+    naive: Vec<NaiveIndex>,
+    order: PullOrder,
+    storage: Storage,
+}
+
+impl ShardSet {
+    /// Index `generation` with the planner-chosen pull order for its
+    /// dimension.
+    pub fn build(generation: Arc<Generation>, storage: Storage) -> Arc<ShardSet> {
+        let order = PullOrder::BlockShuffled(QueryPlan::block_width(generation.dim()));
+        Self::with_order(generation, order, storage)
+    }
+
+    /// Index `generation` with an explicit pull order (all shards from
+    /// scratch — generation 0, or a reference build for equivalence
+    /// tests).
+    pub fn with_order(
+        generation: Arc<Generation>,
+        order: PullOrder,
+        storage: Storage,
+    ) -> Arc<ShardSet> {
+        let indexes = generation
+            .shards()
+            .iter()
+            .map(|s| {
+                Arc::new(
+                    BoundedMeIndex::with_order(s.matrix().clone(), order).with_storage(storage),
+                )
+            })
+            .collect();
+        let naive = Self::naive_for(&generation);
+        Arc::new(Self { generation, indexes, naive, order, storage })
+    }
+
+    /// Flip step: index `built.generation`, reusing the derived state of
+    /// every shard `built.reuse` proves untouched and re-indexing (and
+    /// re-quantizing) only the re-materialized ones.
+    pub fn advance(prev: &ShardSet, built: &GenerationBuild) -> Arc<ShardSet> {
+        let generation = Arc::clone(&built.generation);
+        debug_assert_eq!(built.reuse.len(), generation.num_shards());
+        let indexes = generation
+            .shards()
+            .iter()
+            .zip(&built.reuse)
+            .map(|(s, reuse)| match reuse {
+                Some(j) => Arc::clone(&prev.indexes[*j]),
+                None => Arc::new(
+                    BoundedMeIndex::with_order(s.matrix().clone(), prev.order)
+                        .with_storage(prev.storage),
+                ),
+            })
+            .collect();
+        let naive = Self::naive_for(&generation);
+        Arc::new(Self {
+            generation,
+            indexes,
+            naive,
+            order: prev.order,
+            storage: prev.storage,
+        })
+    }
+
+    fn naive_for(generation: &Generation) -> Vec<NaiveIndex> {
+        // NaiveIndex has no derived state (it is the raw rows), so a
+        // fresh wrap per flip is just an `Arc` bump per shard.
+        generation.shards().iter().map(|s| NaiveIndex::new(s.matrix().clone())).collect()
+    }
+
+    /// The pinned generation.
+    pub fn generation(&self) -> &Arc<Generation> {
+        &self.generation
+    }
+
+    /// Shard count (fixed across the lineage).
+    pub fn num_shards(&self) -> usize {
+        self.indexes.len()
+    }
+
+    /// Shard `s` of the pinned generation.
+    pub fn shard(&self, s: usize) -> &Shard {
+        self.generation.shard(s)
+    }
+
+    /// Shard `s`'s BOUNDEDME index.
+    pub fn index(&self, s: usize) -> &Arc<BoundedMeIndex> {
+        &self.indexes[s]
+    }
+
+    /// The storage tier every shard is indexed with.
+    pub fn storage(&self) -> Storage {
+        self.storage
+    }
+
+    /// Exact batch against the pinned generation: identical protocol to
+    /// [`ShardedIndex::query_batch_exact`] (S = 1 delegates to the
+    /// plain fused scan; S ≥ 2 merges per-shard partials), with
+    /// caller-supplied shard-pinned contexts so the set itself stays
+    /// shareable.
+    pub fn query_batch_exact(
+        &self,
+        queries: &[&[f32]],
+        k: usize,
+        ctxs: &mut [QueryContext],
+    ) -> Vec<MipsResult> {
+        let s_count = self.num_shards();
+        debug_assert_eq!(ctxs.len(), s_count, "one context per shard");
+        if s_count == 1 {
+            return self.naive[0].query_batch(
+                queries,
+                &MipsParams { k, ..MipsParams::default() },
+                &mut ctxs[0],
+            );
+        }
+        let mut acc: Vec<Vec<ShardPartial>> =
+            queries.iter().map(|_| Vec::with_capacity(s_count)).collect();
+        for s in 0..s_count {
+            let partials = self.naive[s].query_batch_shard(queries, k, self.shard(s));
+            for (qi, p) in partials.into_iter().enumerate() {
+                acc[qi].push(p);
+            }
+        }
+        acc.into_iter().map(|ps| merge_partials(k, ps)).collect()
+    }
+
+    /// BOUNDEDME batch against the pinned generation: identical
+    /// protocol to [`ShardedIndex::query_batch_bounded_me`].
+    pub fn query_batch_bounded_me(
+        &self,
+        queries: &[&[f32]],
+        params: &MipsParams,
+        ctxs: &mut [QueryContext],
+    ) -> Vec<MipsResult> {
+        let s_count = self.num_shards();
+        debug_assert_eq!(ctxs.len(), s_count, "one context per shard");
+        if s_count == 1 {
+            return self.indexes[0].query_batch(queries, params, &mut ctxs[0]);
+        }
+        let mut acc: Vec<Vec<ShardPartial>> =
+            queries.iter().map(|_| Vec::with_capacity(s_count)).collect();
+        for (s, ctx) in ctxs.iter_mut().enumerate() {
+            let split = shard_params(params, s_count, self.shard(s).rows());
+            let partials =
+                self.indexes[s].query_batch_shard(queries, &split, ctx, self.shard(s));
+            for (qi, p) in partials.into_iter().enumerate() {
+                acc[qi].push(p);
+            }
+        }
+        acc.into_iter().map(|ps| merge_partials(params.k.max(1), ps)).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::generation::GenerationBuilder;
     use crate::linalg::Rng;
+    use crate::sync::EpochGauge;
 
     fn gaussian(n: usize, d: usize, seed: u64) -> Matrix {
         let mut rng = Rng::new(seed);
@@ -332,6 +509,83 @@ mod tests {
             // confirm rescore ranks by exact products, so the merged
             // result *is* the exact top-k, in exact order.
             assert_eq!(results[0].indices, truth, "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn shard_set_matches_sharded_index_on_generation_zero() {
+        let data = gaussian(41, 96, 11);
+        let queries: Vec<Vec<f32>> = (0..5).map(|i| Rng::new(70 + i).gaussian_vec(96)).collect();
+        let refs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        for spec in [ShardSpec::contiguous(3), ShardSpec::single(), ShardSpec::round_robin(2)] {
+            let g0 = Generation::initial(data.clone(), spec, EpochGauge::new());
+            let set = ShardSet::build(Arc::clone(&g0), Storage::F32);
+            let mut sx = ShardedIndex::new(data.clone(), spec);
+            let mut ctxs: Vec<QueryContext> =
+                (0..set.num_shards()).map(|_| QueryContext::new()).collect();
+            let a = set.query_batch_exact(&refs, 4, &mut ctxs);
+            let b = sx.query_batch_exact(&refs, 4);
+            let params = MipsParams { k: 4, epsilon: 0.1, delta: 0.1, seed: 9 };
+            let mut ctxs2: Vec<QueryContext> =
+                (0..set.num_shards()).map(|_| QueryContext::new()).collect();
+            let c = set.query_batch_bounded_me(&refs, &params, &mut ctxs2);
+            let d = sx.query_batch_bounded_me(&refs, &params);
+            for qi in 0..queries.len() {
+                assert_eq!(a[qi].indices, b[qi].indices, "{spec:?} exact q{qi}");
+                assert_eq!(a[qi].flops, b[qi].flops, "{spec:?} exact q{qi}");
+                for (x, y) in a[qi].scores.iter().zip(&b[qi].scores) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{spec:?} exact q{qi}");
+                }
+                assert_eq!(c[qi].indices, d[qi].indices, "{spec:?} bme q{qi}");
+                assert_eq!(c[qi].flops, d[qi].flops, "{spec:?} bme q{qi}");
+                for (x, y) in c[qi].scores.iter().zip(&d[qi].scores) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{spec:?} bme q{qi}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn advanced_shard_set_matches_from_scratch_after_flip() {
+        let data = gaussian(36, 64, 21);
+        let g0 = Generation::initial(data, ShardSpec::contiguous(3), EpochGauge::new());
+        let set0 = ShardSet::build(Arc::clone(&g0), Storage::F32);
+        let mut b = GenerationBuilder::new(&g0);
+        b.upsert(2, Rng::new(77).gaussian_vec(64)).unwrap();
+        b.upsert(30, Rng::new(78).gaussian_vec(64)).unwrap();
+        let built = b.build().unwrap();
+        assert!(built.reuse.iter().any(Option::is_some), "flip should reuse a shard");
+        let pinned = ShardSet::advance(&set0, &built);
+        // Reference: index the materialized snapshot from scratch.
+        let fresh = ShardSet::build(
+            Generation::initial(
+                built.generation.materialize(),
+                ShardSpec::contiguous(3),
+                EpochGauge::new(),
+            ),
+            Storage::F32,
+        );
+        let queries: Vec<Vec<f32>> = (0..4).map(|i| Rng::new(90 + i).gaussian_vec(64)).collect();
+        let refs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        let params = MipsParams { k: 3, epsilon: 0.1, delta: 0.1, seed: 4 };
+        let mut ca: Vec<QueryContext> = (0..3).map(|_| QueryContext::new()).collect();
+        let mut cb: Vec<QueryContext> = (0..3).map(|_| QueryContext::new()).collect();
+        let a = pinned.query_batch_bounded_me(&refs, &params, &mut ca);
+        let b = fresh.query_batch_bounded_me(&refs, &params, &mut cb);
+        let mut ca2: Vec<QueryContext> = (0..3).map(|_| QueryContext::new()).collect();
+        let mut cb2: Vec<QueryContext> = (0..3).map(|_| QueryContext::new()).collect();
+        let ea = pinned.query_batch_exact(&refs, 3, &mut ca2);
+        let eb = fresh.query_batch_exact(&refs, 3, &mut cb2);
+        for qi in 0..queries.len() {
+            assert_eq!(a[qi].indices, b[qi].indices, "bme q{qi}");
+            assert_eq!(a[qi].flops, b[qi].flops, "bme q{qi}");
+            for (x, y) in a[qi].scores.iter().zip(&b[qi].scores) {
+                assert_eq!(x.to_bits(), y.to_bits(), "bme q{qi}");
+            }
+            assert_eq!(ea[qi].indices, eb[qi].indices, "exact q{qi}");
+            for (x, y) in ea[qi].scores.iter().zip(&eb[qi].scores) {
+                assert_eq!(x.to_bits(), y.to_bits(), "exact q{qi}");
+            }
         }
     }
 

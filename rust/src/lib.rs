@@ -36,12 +36,12 @@
 //! | [`bandit`] | MAB-BP framework, BOUNDEDME with the survivor-compacting panel layout ([`bandit::PullPanel`] + [`bandit::Compaction`] policy), compressed-tier arms ([`bandit::QuantArms`]), bandit baselines, pull-order scratch |
 //! | [`algos`]  | MIPS indexes: naive, BoundedME (incl. the two-tier sample-then-confirm compressed path), Greedy-, LSH-, PCA-, RPT-MIPS — with shard-aware batch entry points |
 //! | [`exec`]   | zero-allocation execution core: `QueryContext` arena + `QueryPlan` (incl. the [`data::quant::Storage`] axis); [`exec::shard`] fan-out/merge layer |
-//! | [`data`]   | dataset substrate: synthetic, adversarial, ALS matrix factorization; [`data::shard`] row sharding; [`data::quant`] mixed-precision compressed dataset tiers |
+//! | [`data`]   | dataset substrate: synthetic, adversarial, ALS matrix factorization; [`data::shard`] row sharding; [`data::quant`] mixed-precision compressed dataset tiers; [`data::generation`] copy-on-write dataset generations for live mutation |
 //! | [`metrics`] | precision@K, flop accounting, latency sketches |
 //! | [`runtime`] | scoring engines; PJRT/XLA artifact execution behind the `pjrt` feature |
 //! | [`coordinator`] | serving layer: plan-aware dynamic batcher, event-driven reactor (shard fan-out, completion-event merge, straggler hedging), S = 1 fast path, shard-pinned worker pool |
 //! | [`experiments`] | harness regenerating every paper table/figure |
-//! | [`errors`], [`logkit`], [`jsonlite`], [`sync`], [`benchkit`], [`cli`] | offline substrates (no external deps); [`sync`] adds `try_recv`/`Waker`/`Selector` polling primitives for the reactor |
+//! | [`errors`], [`logkit`], [`jsonlite`], [`sync`], [`benchkit`], [`cli`] | offline substrates (no external deps); [`sync`] adds `try_recv`/`Waker`/`Selector` polling primitives for the reactor and the [`sync::EpochGauge`] generation-reclamation gauge |
 //!
 //! ## SIMD kernel funnel
 //!
@@ -131,6 +131,31 @@
 //! deployments skip the reactor entirely — workers answer clients
 //! directly. All of it rides the [`sync`] substrate's non-blocking
 //! primitives (`try_recv`, `Waker`, `Selector`).
+//!
+//! ## Live mutation
+//!
+//! Datasets mutate under traffic without pausing queries.
+//! [`data::generation`] models the dataset as a chain of immutable
+//! **generations**: [`data::generation::GenerationBuilder`] applies a
+//! batch of [`data::generation::Delta`]s (upsert / delete / append) to
+//! generation *N* and builds *N + 1*, reusing every untouched shard's
+//! rows by copy and rebuilding only dirty shards (pure-upsert batches;
+//! size-changing batches renumber, so they rebuild all). Writers go
+//! through [`coordinator::Coordinator::mutate`] — serialized by a
+//! writer lock that queries never touch — which builds the new
+//! [`exec::shard::ShardSet`] off the hot path, then flips it into the
+//! reactor and every S = 1 worker **between batches**: in-flight
+//! queries finish on the generation they started on, and every
+//! [`coordinator::QueryResponse`] reports the generation that answered
+//! it. Retired generations are reclaimed by the [`sync::EpochGauge`] —
+//! each live `ShardSet` holds an epoch guard, so the moment the last
+//! pinned query drops, the old generation's memory goes with it (the
+//! `generations_alive` metric watches for leaks). The concurrent
+//! equivalence battery (`tests/generation_equivalence.rs`) proves the
+//! protocol: mutator and query threads race while every response is
+//! checked bit-for-bit against a from-scratch index on the matching
+//! generation's materialized snapshot, bracketed by a
+//! generation-witness bound.
 //!
 //! ## Quick start
 //!

@@ -1,0 +1,145 @@
+//! Epoch-based reclamation observer for generation-swapped state.
+//!
+//! The mutation subsystem publishes immutable generations behind
+//! `Arc`s: a query *pins* the generation it was admitted under by
+//! cloning the `Arc`, and reclamation is the last clone dropping — no
+//! deferred free lists, no hazard pointers, because the data is
+//! reference-counted to begin with. What `Arc` alone cannot answer is
+//! the operational question *"how many generations are still alive
+//! right now?"* — the signal a leak check or a churn bench needs to
+//! prove that superseded generations actually drain once their pinned
+//! queries finish.
+//!
+//! [`EpochGauge`] answers it with two atomics and an RAII guard:
+//! every generation registers an [`EpochGuard`] at construction and
+//! the guard's `Drop` retires it. All operations are single relaxed
+//! atomic RMWs — registering/retiring a generation never takes a lock,
+//! and reading the gauge is a plain load, so the gauge can sit on the
+//! mutation path and be sampled from the serving path for free.
+//!
+//! Counter semantics are *eventually consistent* in the usual relaxed
+//! sense: `alive()` observed concurrently with registrations/retires
+//! may be off by in-flight increments, but once the system quiesces
+//! (no builds in progress, all pinned queries drained) it is exact —
+//! which is precisely the moment the leak check reads it.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+#[derive(Default)]
+struct GaugeInner {
+    alive: AtomicUsize,
+    created: AtomicU64,
+    peak: AtomicUsize,
+}
+
+/// Shared gauge counting live epochs (generations). Cheap to clone —
+/// clones observe the same counters.
+#[derive(Clone, Default)]
+pub struct EpochGauge {
+    inner: Arc<GaugeInner>,
+}
+
+impl EpochGauge {
+    /// Fresh gauge with zero live epochs.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a new epoch; the returned guard retires it on drop.
+    pub fn register(&self) -> EpochGuard {
+        let alive = self.inner.alive.fetch_add(1, Ordering::Relaxed) + 1;
+        self.inner.created.fetch_add(1, Ordering::Relaxed);
+        self.inner.peak.fetch_max(alive, Ordering::Relaxed);
+        EpochGuard { inner: Arc::clone(&self.inner) }
+    }
+
+    /// Epochs currently alive (registered, guard not yet dropped).
+    pub fn alive(&self) -> usize {
+        self.inner.alive.load(Ordering::Relaxed)
+    }
+
+    /// Total epochs ever registered.
+    pub fn created(&self) -> u64 {
+        self.inner.created.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of concurrently alive epochs.
+    pub fn peak(&self) -> usize {
+        self.inner.peak.load(Ordering::Relaxed)
+    }
+}
+
+/// RAII registration token: dropping it retires the epoch. Not `Clone`
+/// — exactly one retire per register.
+pub struct EpochGuard {
+    inner: Arc<GaugeInner>,
+}
+
+impl Drop for EpochGuard {
+    fn drop(&mut self) {
+        self.inner.alive.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl std::fmt::Debug for EpochGuard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EpochGuard")
+            .field("alive", &self.inner.alive.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_drop_balance() {
+        let g = EpochGauge::new();
+        assert_eq!(g.alive(), 0);
+        let a = g.register();
+        let b = g.register();
+        assert_eq!(g.alive(), 2);
+        assert_eq!(g.created(), 2);
+        assert_eq!(g.peak(), 2);
+        drop(a);
+        assert_eq!(g.alive(), 1);
+        drop(b);
+        assert_eq!(g.alive(), 0);
+        // Peak and created survive retirement.
+        assert_eq!(g.peak(), 2);
+        assert_eq!(g.created(), 2);
+    }
+
+    #[test]
+    fn clones_share_counters() {
+        let g = EpochGauge::new();
+        let g2 = g.clone();
+        let guard = g2.register();
+        assert_eq!(g.alive(), 1);
+        drop(guard);
+        assert_eq!(g.alive(), 0);
+    }
+
+    #[test]
+    fn concurrent_register_retire_is_exact_at_quiesce() {
+        let g = EpochGauge::new();
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let g = g.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    let guard = g.register();
+                    std::hint::black_box(&guard);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(g.alive(), 0);
+        assert_eq!(g.created(), 8000);
+        assert!(g.peak() >= 1);
+    }
+}

@@ -41,6 +41,16 @@
 //! Any push that lands between the final `try_recv` and the `wait`
 //! leaves the latch set, so `wait` returns immediately and the loop
 //! re-polls. Spurious wakeups only cost one extra poll pass.
+//!
+//! The [`epoch`] submodule adds the reclamation observer for
+//! generation-swapped state ([`EpochGauge`]/[`EpochGuard`]): pinning is
+//! `Arc` cloning, reclamation is the last clone dropping, and the gauge
+//! makes "how many generations are still alive" observable with relaxed
+//! atomics only.
+
+pub mod epoch;
+
+pub use epoch::{EpochGauge, EpochGuard};
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};

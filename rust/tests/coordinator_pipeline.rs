@@ -12,6 +12,7 @@ use bandit_mips::bandit::PullOrder;
 use bandit_mips::coordinator::{
     Backend, Coordinator, CoordinatorConfig, CoordinatorError, QueryRequest,
 };
+use bandit_mips::data::generation::Delta;
 use bandit_mips::data::shard::ShardSpec;
 use bandit_mips::data::synthetic::gaussian_dataset;
 use std::time::Duration;
@@ -209,6 +210,70 @@ fn shedding_on_the_sharded_path() {
     assert_eq!(shed + served, 48);
     assert!(shed > 0, "nothing shed under a 1ns deadline");
     assert_eq!(c.metrics().shed, shed);
+    c.shutdown();
+}
+
+/// The worker-side deadline re-check composes with live mutation:
+/// queries dispatched on generation 0 that expire behind a deliberately
+/// slow shard are shed at shard pickup, and the ones picked up *after*
+/// a flip has started are additionally counted in `shed_superseded` —
+/// the stale-and-late subset of `shed`. In-deadline queries still
+/// finish on their pinned generation, and post-flip traffic serves on
+/// the new one.
+#[test]
+fn superseded_and_expired_queries_shed_with_counter() {
+    let ds = gaussian_dataset(200, 64, 0x51AB);
+    let mut config = cfg(2, ShardSpec::contiguous(2));
+    config.max_batch = 4;
+    config.batch_timeout = Duration::from_millis(1);
+    // Shard 0 primaries crawl: a 32-query burst piles ~8 batches
+    // (~200ms of queue) behind it while deadlines expire at 5ms.
+    config.debug_slow_shard = Some((0, Duration::from_millis(25)));
+    let c = Coordinator::new(ds.vectors.clone(), config).unwrap();
+    let mut rxs = Vec::new();
+    for i in 0..32u64 {
+        let req = QueryRequest::exact(ds.sample_query(i), 3)
+            .with_deadline(Duration::from_millis(5));
+        rxs.push(c.submit(req).unwrap());
+    }
+    // Let the burst admit and dispatch pinned to generation 0, then
+    // flip mid-queue: every later shard-0 pickup sees an expired
+    // deadline AND a superseded pin.
+    std::thread::sleep(Duration::from_millis(10));
+    let out = c
+        .mutate(&[Delta::Upsert { id: 0, vector: ds.sample_query(999) }])
+        .unwrap();
+    assert_eq!(out.generation, 1);
+
+    let (mut shed, mut served) = (0u64, 0u64);
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        if resp.shed {
+            assert!(resp.indices.is_empty());
+            shed += 1;
+        } else {
+            assert_eq!(resp.indices.len(), 3);
+            served += 1;
+        }
+    }
+    assert_eq!(shed + served, 32);
+    assert!(shed > 0, "nothing shed behind the slow shard");
+    let m = c.metrics();
+    assert_eq!(m.shed, shed);
+    assert!(
+        m.shed_superseded >= 1,
+        "no shed was attributed to a superseded generation (shed={shed})"
+    );
+    assert!(
+        m.shed_superseded <= m.shed,
+        "shed_superseded must be a subset of shed"
+    );
+
+    // The pipeline is healthy on the new generation afterwards.
+    let q = ds.sample_query(7);
+    let resp = c.query_blocking(QueryRequest::exact(q, 3)).unwrap();
+    assert!(!resp.shed);
+    assert_eq!(resp.generation, 1);
     c.shutdown();
 }
 

@@ -1,0 +1,325 @@
+//! Concurrent-equivalence battery for generation-swapped live mutation:
+//! writer threads stream upsert/delete/append batches through
+//! [`Coordinator::mutate`] while query threads keep traffic in flight,
+//! and **every** answer must be correct for *some* generation snapshot
+//! whose lifetime overlapped the query — a linearizability-style
+//! witness, not a "mostly fresh" smoke test.
+//!
+//! The witness works because the coordinator exposes both ends of the
+//! overlap window:
+//!
+//! * `generation()` — highest id every serving thread had acked before
+//!   the query was submitted (no answer may be older), and
+//! * `latest_generation()` — highest id any `mutate` call had started
+//!   flipping to by the time the reply arrived (no answer may be newer).
+//!
+//! A shadow catalog maps generation id → materialized snapshot (the
+//! writer records the snapshot *before* calling `mutate`, so any id a
+//! reply can carry is already resolvable). Exact answers must match the
+//! snapshot's ground truth in order; BOUNDEDME answers use ε → 0, where
+//! elimination is provably exact, and must match as a set (concurrent
+//! batches may fuse under the first item's pull-order seed, so score
+//! bits are checked single-threadedly in `prop_invariants`, not here).
+//!
+//! The battery runs the S = 1 direct fast path, the forced-reactor
+//! S = 1 path, and sharded S ∈ {2, 4} (both split kinds), exact and
+//! BOUNDEDME interleaved. After the churn quiesces, the epoch gauge
+//! must report exactly one generation alive — the reclamation leak
+//! check.
+//!
+//! Set `RUST_PALLAS_STRESS=1` to multiply batch and query counts (the
+//! CI `churn` stress leg runs this battery in release mode).
+
+use bandit_mips::algos::ground_truth;
+use bandit_mips::bandit::PullOrder;
+use bandit_mips::coordinator::{Backend, Coordinator, CoordinatorConfig, QueryRequest};
+use bandit_mips::data::generation::{Delta, Generation, GenerationBuilder};
+use bandit_mips::data::shard::ShardSpec;
+use bandit_mips::data::synthetic::gaussian_dataset;
+use bandit_mips::linalg::{Matrix, Rng};
+use bandit_mips::sync::EpochGauge;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Burst multiplier: 1 normally, 8 under `RUST_PALLAS_STRESS=1`.
+fn stress() -> u64 {
+    match std::env::var("RUST_PALLAS_STRESS") {
+        Ok(v) if v == "1" => 8,
+        _ => 1,
+    }
+}
+
+fn cfg(workers: usize, shard: ShardSpec, force_reactor: bool) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers,
+        max_batch: 8,
+        batch_timeout: Duration::from_millis(1),
+        queue_capacity: 4096,
+        backend: Backend::Native,
+        pull_order: PullOrder::BlockShuffled(16),
+        shard,
+        force_reactor,
+        ..Default::default()
+    }
+}
+
+/// One deterministic delta batch. Batches rotate through pure upserts
+/// (COW shard reuse), mixed upsert/delete/append (full rebalance), and
+/// growth-only appends; ids are arranged to never upsert and delete the
+/// same row in one batch.
+fn delta_batch(b: u64, rows: usize, dim: usize) -> Vec<Delta> {
+    let vec_for = |salt: u64| {
+        Rng::new(0xD00D_5EED ^ (b << 20) ^ salt.wrapping_mul(0x9E37_79B9)).gaussian_vec(dim)
+    };
+    let bu = b as usize;
+    match b % 3 {
+        0 => {
+            let a = (bu * 7 + 3) % rows;
+            let mut c = (bu * 13 + 11) % rows;
+            if c == a {
+                c = (c + 1) % rows;
+            }
+            vec![
+                Delta::Upsert { id: a, vector: vec_for(1) },
+                Delta::Upsert { id: c, vector: vec_for(2) },
+            ]
+        }
+        1 => {
+            let up = (bu * 5) % rows;
+            let mut del = (bu * 17 + 1) % rows;
+            if del == up {
+                del = (del + 1) % rows;
+            }
+            vec![
+                Delta::Upsert { id: up, vector: vec_for(3) },
+                Delta::Delete { id: del },
+                Delta::Append { vector: vec_for(4) },
+            ]
+        }
+        _ => vec![
+            Delta::Append { vector: vec_for(5) },
+            Delta::Append { vector: vec_for(6) },
+        ],
+    }
+}
+
+/// Run the concurrent battery against one deployment shape. Returns the
+/// number of queries answered (for the caller's metrics assertions).
+fn run_battery(spec: ShardSpec, workers: usize, force_reactor: bool, seed: u64) {
+    let n = 120;
+    let dim = 48;
+    let k = 4;
+    let batches = 6 * stress();
+    let min_queries = 24 * stress();
+    let query_threads = 2usize;
+
+    let ds = gaussian_dataset(n, dim, seed);
+    let shards = spec.shards();
+    let c = Arc::new(Coordinator::new(ds.vectors.clone(), cfg(workers, spec, force_reactor)).unwrap());
+
+    // Shadow catalog: generation id → materialized snapshot. Written by
+    // the mutator *before* the coordinator flips, so every id a reply
+    // can legally carry resolves here.
+    let snaps: Arc<Mutex<HashMap<u64, Matrix>>> = Arc::new(Mutex::new(HashMap::new()));
+    snaps.lock().unwrap().insert(0, ds.vectors.clone());
+
+    let done = Arc::new(AtomicBool::new(false));
+
+    // Writer: stream delta batches through a shadow GenerationBuilder
+    // (content is spec-independent: surviving rows in base order, then
+    // appends) and then through the live coordinator.
+    let mutator = {
+        let c = c.clone();
+        let snaps = snaps.clone();
+        let mut shadow = Generation::initial(ds.vectors.clone(), ShardSpec::single(), EpochGauge::new());
+        std::thread::spawn(move || {
+            for b in 0..batches {
+                let deltas = delta_batch(b, shadow.rows(), shadow.dim());
+                let mut bld = GenerationBuilder::new(&shadow);
+                for d in &deltas {
+                    bld.apply(d).unwrap();
+                }
+                let built = bld.build().unwrap();
+                snaps
+                    .lock()
+                    .unwrap()
+                    .insert(built.generation.id(), built.generation.materialize());
+                shadow = built.generation.clone();
+                let out = c.mutate(&deltas).unwrap();
+                assert_eq!(out.generation, shadow.id(), "coordinator/shadow ids diverged");
+                assert_eq!(out.rows, shadow.rows(), "coordinator/shadow rows diverged");
+                // Let queries land on this generation before the next flip.
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        })
+    };
+
+    let mut readers = Vec::new();
+    for t in 0..query_threads {
+        let c = c.clone();
+        let snaps = snaps.clone();
+        let done = done.clone();
+        let ds = ds.clone();
+        readers.push(std::thread::spawn(move || {
+            let mut i = 0u64;
+            while !done.load(Ordering::Relaxed) || i < min_queries {
+                let salt = t as u64 * 1_000_003 + i;
+                let q = ds.sample_query(salt);
+                let exact = (t as u64 + i) % 2 == 0;
+                let req = if exact {
+                    QueryRequest::exact(q.clone(), k)
+                } else {
+                    // ε → 0: elimination recovers the exact top-k set.
+                    QueryRequest::bounded_me(q.clone(), k, 1e-9, 0.05)
+                };
+                let g_lo = c.generation();
+                let resp = c.query_blocking(req).unwrap();
+                let g_hi = c.latest_generation();
+                assert!(!resp.shed, "no deadline set, nothing may shed");
+                assert!(
+                    g_lo <= resp.generation && resp.generation <= g_hi,
+                    "witness violated: answer generation {} outside [{g_lo}, {g_hi}]",
+                    resp.generation
+                );
+                assert_eq!(resp.shards, shards, "wrong fan-out width");
+                let snap = snaps
+                    .lock()
+                    .unwrap()
+                    .get(&resp.generation)
+                    .unwrap_or_else(|| panic!("reply carries unknown generation {}", resp.generation))
+                    .clone();
+                let truth = ground_truth(&snap, &q, k);
+                if exact {
+                    assert_eq!(
+                        resp.indices, truth,
+                        "exact answer wrong for generation {} (thread {t}, query {i})",
+                        resp.generation
+                    );
+                } else {
+                    let mut got = resp.indices.clone();
+                    got.sort_unstable();
+                    let mut want = truth;
+                    want.sort_unstable();
+                    assert_eq!(
+                        got, want,
+                        "ε→0 BOUNDEDME set wrong for generation {} (thread {t}, query {i})",
+                        resp.generation
+                    );
+                }
+                i += 1;
+            }
+            i
+        }));
+    }
+
+    mutator.join().unwrap();
+    done.store(true, Ordering::Relaxed);
+    let mut total = 0u64;
+    for r in readers {
+        total += r.join().unwrap();
+    }
+
+    // Epoch-reclamation leak check: once churn quiesces, only the live
+    // generation may hold a guard (superseded sets are reclaimed when
+    // their last pin drops — poll briefly for trailing batches).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while c.generations_alive() > 1 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(
+        c.generations_alive(),
+        1,
+        "epoch leak: superseded generations still pinned after quiesce"
+    );
+    assert_eq!(c.generation(), batches, "not every flip was acked");
+    assert_eq!(c.latest_generation(), batches);
+
+    let m = c.metrics();
+    assert_eq!(m.queries, total, "lost or double-counted queries under churn");
+    assert_eq!(m.mutations, batches);
+    assert_eq!(m.shed, 0);
+
+    if let Ok(c) = Arc::try_unwrap(c) {
+        c.shutdown();
+    }
+}
+
+#[test]
+fn battery_s1_direct_fast_path() {
+    run_battery(ShardSpec::single(), 2, false, 0xA11CE);
+}
+
+#[test]
+fn battery_s1_forced_reactor() {
+    run_battery(ShardSpec::single(), 2, true, 0xB0B);
+}
+
+#[test]
+fn battery_s2_contiguous() {
+    run_battery(ShardSpec::contiguous(2), 2, false, 0xCAFE);
+}
+
+#[test]
+fn battery_s4_round_robin() {
+    run_battery(ShardSpec::round_robin(4), 4, false, 0xD1CE);
+}
+
+/// Deterministic (single-threaded) flip sequence: after every batch the
+/// coordinator's answers equal ground truth on the shadow snapshot, the
+/// reported generation is exactly the flip count, and the superseded
+/// generation is reclaimed immediately (no traffic holds it).
+#[test]
+fn serial_flips_track_snapshots_exactly() {
+    let ds = gaussian_dataset(90, 32, 0x5E7);
+    let c = Coordinator::new(ds.vectors.clone(), cfg(2, ShardSpec::contiguous(2), false)).unwrap();
+    let mut shadow = Generation::initial(ds.vectors.clone(), ShardSpec::single(), EpochGauge::new());
+    for b in 0..9 * stress() {
+        let deltas = delta_batch(b, shadow.rows(), shadow.dim());
+        let mut bld = GenerationBuilder::new(&shadow);
+        for d in &deltas {
+            bld.apply(d).unwrap();
+        }
+        shadow = bld.build().unwrap().generation.clone();
+        let out = c.mutate(&deltas).unwrap();
+        assert_eq!(out.generation, b + 1);
+        let snap = shadow.materialize();
+        for salt in 0..3u64 {
+            let q = ds.sample_query(b * 100 + salt);
+            let resp = c.query_blocking(QueryRequest::exact(q.clone(), 5)).unwrap();
+            assert_eq!(resp.generation, b + 1);
+            assert_eq!(resp.indices, ground_truth(&snap, &q, 5), "batch {b} salt {salt}");
+            let resp =
+                c.query_blocking(QueryRequest::bounded_me(q.clone(), 5, 1e-9, 0.05)).unwrap();
+            assert_eq!(resp.generation, b + 1);
+            let mut got = resp.indices.clone();
+            got.sort_unstable();
+            let mut want = ground_truth(&snap, &q, 5);
+            want.sort_unstable();
+            assert_eq!(got, want, "batch {b} salt {salt} (bounded_me)");
+        }
+        assert_eq!(c.generations_alive(), 1, "batch {b}: superseded generation leaked");
+    }
+    c.shutdown();
+}
+
+/// A batch the builder rejects (bad row id) must leave the serving
+/// generation untouched and not poison the writer lock.
+#[test]
+fn rejected_batch_leaves_generation_live() {
+    let ds = gaussian_dataset(60, 32, 0xBAD);
+    let c = Coordinator::new(ds.vectors.clone(), cfg(2, ShardSpec::single(), false)).unwrap();
+    let err = c.mutate(&[Delta::Delete { id: 999 }]).unwrap_err();
+    assert!(err.to_string().contains("mutation rejected"), "{err}");
+    assert_eq!(c.generation(), 0);
+    assert_eq!(c.generations_alive(), 1);
+    let q = ds.sample_query(1);
+    let resp = c.query_blocking(QueryRequest::exact(q.clone(), 3)).unwrap();
+    assert_eq!(resp.generation, 0);
+    assert_eq!(resp.indices, ground_truth(&ds.vectors, &q, 3));
+    // The next well-formed batch still flips.
+    let out = c.mutate(&[Delta::Append { vector: ds.sample_query(2) }]).unwrap();
+    assert_eq!(out.generation, 1);
+    c.shutdown();
+}

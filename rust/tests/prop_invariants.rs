@@ -481,6 +481,110 @@ fn prop_query_batch_argmax_simd_scalar_invariant() {
     }
 }
 
+/// Generation-pinned queries are bit-identical to a from-scratch index
+/// on the materialized snapshot: a `ShardSet` advanced copy-on-write
+/// through a chain of random delta batches (pure upserts, mixed
+/// upsert/delete/append, growth-only) must return the same indices,
+/// score bits, and flop counts as a `ShardSet` built fresh on
+/// `Generation::materialize()` — for both split kinds, S ∈ {1, 2, 3},
+/// and every storage tier. This is the single-threaded bit-level half
+/// of the live-mutation contract (the concurrent set-level half lives
+/// in `generation_equivalence`): rebuild-free mutation may not perturb
+/// answers by even one ULP, including re-quantized delta rows on
+/// compressed tiers.
+#[test]
+fn prop_generation_cow_bit_identical_to_from_scratch() {
+    use bandit_mips::data::generation::{Generation, GenerationBuilder};
+    use bandit_mips::data::quant::Storage;
+    use bandit_mips::exec::shard::ShardSet;
+    use bandit_mips::sync::EpochGauge;
+
+    let tiers = [Storage::F32, Storage::F16, Storage::Bf16, Storage::Int8];
+    let mut rng = Rng::new(0x6E6E);
+    for case in 0..12 {
+        let n = 40 + rng.next_below(60);
+        let d = 16 + rng.next_below(64);
+        let data = Matrix::from_fn(n, d, |_, _| rng.gaussian() as f32);
+        let s = 1 + case % 3;
+        let spec = if case % 2 == 0 {
+            ShardSpec::contiguous(s)
+        } else {
+            ShardSpec::round_robin(s)
+        };
+        let storage = tiers[case % tiers.len()];
+        let mut gen = Generation::initial(data, spec, EpochGauge::new());
+        let mut set = ShardSet::build(gen.clone(), storage);
+        for step in 0..4u64 {
+            // One random delta batch; upsert ids come from the lower
+            // half and delete ids from the upper half of the id space so
+            // a batch never upserts and deletes the same row.
+            let rows = gen.rows();
+            let mut bld = GenerationBuilder::new(&gen);
+            match (case as u64 + step) % 3 {
+                0 => {
+                    for _ in 0..1 + rng.next_below(3) {
+                        bld.upsert(rng.next_below(rows), rng.gaussian_vec(d)).unwrap();
+                    }
+                }
+                1 => {
+                    bld.upsert(rng.next_below(rows / 2), rng.gaussian_vec(d)).unwrap();
+                    bld.delete(rows / 2 + rng.next_below(rows / 2)).unwrap();
+                    bld.append(rng.gaussian_vec(d)).unwrap();
+                }
+                _ => {
+                    for _ in 0..1 + rng.next_below(2) {
+                        bld.append(rng.gaussian_vec(d)).unwrap();
+                    }
+                }
+            }
+            let built = bld.build().unwrap();
+            gen = built.generation.clone();
+            set = ShardSet::advance(&set, &built);
+
+            // Reference: same snapshot, same spec and tier, no history.
+            let fresh = ShardSet::build(
+                Generation::initial(gen.materialize(), spec, EpochGauge::new()),
+                storage,
+            );
+
+            let queries: Vec<Vec<f32>> = (0..3).map(|_| rng.gaussian_vec(d)).collect();
+            let refs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+            let params = MipsParams {
+                k: 1 + rng.next_below(5),
+                epsilon: rng.uniform(1e-6, 0.4),
+                delta: rng.uniform(0.01, 0.3),
+                seed: 9000 + case as u64 * 31 + step,
+            };
+            let mut ctx_a: Vec<QueryContext> =
+                (0..set.num_shards()).map(|_| QueryContext::new()).collect();
+            let mut ctx_b: Vec<QueryContext> =
+                (0..set.num_shards()).map(|_| QueryContext::new()).collect();
+
+            let a = set.query_batch_bounded_me(&refs, &params, &mut ctx_a);
+            let b = fresh.query_batch_bounded_me(&refs, &params, &mut ctx_b);
+            for (qi, (ra, rb)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(ra.indices, rb.indices, "case {case} step {step} q{qi} {spec:?}");
+                assert_eq!(ra.flops, rb.flops, "case {case} step {step} q{qi} {spec:?}");
+                for (x, y) in ra.scores.iter().zip(&rb.scores) {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "case {case} step {step} q{qi} {spec:?} {storage:?}: score bits"
+                    );
+                }
+            }
+            let a = set.query_batch_exact(&refs, params.k, &mut ctx_a);
+            let b = fresh.query_batch_exact(&refs, params.k, &mut ctx_b);
+            for (qi, (ra, rb)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(ra.indices, rb.indices, "case {case} step {step} exact q{qi}");
+                for (x, y) in ra.scores.iter().zip(&rb.scores) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "case {case} step {step} exact q{qi}");
+                }
+            }
+        }
+    }
+}
+
 /// The survivor-compaction policy is pure memory layout: for any random
 /// instance, pull order, and knob set, every `Compaction` choice —
 /// never, always, or any threshold fraction — produces bit-identical

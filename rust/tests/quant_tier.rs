@@ -166,6 +166,146 @@ fn compressed_tier_recall_tracks_f32_at_equal_params() {
     }
 }
 
+/// Compressed tiers survive generation flips. Delta rows land in
+/// rebuilt shards whose `QuantMatrix` (codes, per-row scales, per-row
+/// error bounds) is recomputed from the new bytes — a stale int8 scale
+/// on a rescaled row would clip its codes and silently break the (ε, δ)
+/// guarantee. Three checks per tier, all on a flip whose upserts rescale
+/// rows by 8× (the adversarial case for per-row scales):
+///
+/// 1. ε = 0.15 violation counting straddling the flip — pre-flip
+///    queries judged against the base snapshot, post-flip queries
+///    against the mutated one — stays within the Binomial(Q, δ) budget;
+/// 2. ε → 0 stays exact on the flipped set (bias fallback intact);
+/// 3. the advanced set is bit-identical to a from-scratch tiered build
+///    on the materialized snapshot, including a COW-reused shard (S=2).
+#[test]
+fn compressed_tiers_survive_generation_flips() {
+    use bandit_mips::data::generation::{Generation, GenerationBuilder};
+    use bandit_mips::data::shard::ShardSpec;
+    use bandit_mips::exec::shard::ShardSet;
+    use bandit_mips::sync::EpochGauge;
+
+    fn count_violations_on_set(
+        set: &ShardSet,
+        snap: &Matrix,
+        queries: &[Vec<f32>],
+        params: &MipsParams,
+        salt: u64,
+    ) -> usize {
+        let mut ctxs = vec![QueryContext::new()];
+        let mut violations = 0usize;
+        for (qi, q) in queries.iter().enumerate() {
+            let res = &set.query_batch_bounded_me(
+                &[q.as_slice()],
+                &MipsParams { seed: salt + qi as u64, ..*params },
+                &mut ctxs,
+            )[0];
+            assert_eq!(res.indices.len(), params.k);
+            let slack = params.epsilon
+                * 2.0
+                * set.index(0).reward_bound(q).max(f32::MIN_POSITIVE) as f64
+                * snap.cols() as f64;
+            let mut truth = exact_scores(snap, q);
+            truth.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let kth = truth[params.k - 1] as f64;
+            let ok = res
+                .indices
+                .iter()
+                .all(|&arm| dot(snap.row(arm), q) as f64 >= kth - slack - 1e-3);
+            if !ok {
+                violations += 1;
+            }
+        }
+        violations
+    }
+
+    let data = gaussian_dataset(140, 48, 0xF11B).vectors;
+    let mut rng = Rng::new(0xF11C);
+    let pre: Vec<Vec<f32>> = (0..20).map(|_| rng.gaussian_vec(48)).collect();
+    let post: Vec<Vec<f32>> = (0..20).map(|_| rng.gaussian_vec(48)).collect();
+    let params = MipsParams { k: 3, epsilon: 0.15, delta: 0.1, seed: 0 };
+    let budget = violation_budget(pre.len() + post.len(), params.delta);
+
+    // The flip: rescale two rows by 8×, delete one, append a tiny-norm
+    // row — every delta row needs fresh quantization state.
+    let flip = |gen: &Generation| {
+        let mut bld = GenerationBuilder::new(gen);
+        for id in [5usize, 70] {
+            let v: Vec<f32> = (0..gen.dim())
+                .map(|j| gen.row(id)[j] * 8.0)
+                .collect();
+            bld.upsert(id, v).unwrap();
+        }
+        bld.delete(100).unwrap();
+        let tiny: Vec<f32> = (0..gen.dim()).map(|j| gen.row(3)[j] * 0.05).collect();
+        bld.append(tiny).unwrap();
+        bld.build().unwrap()
+    };
+
+    for storage in TIERS {
+        // (1) + (2): S = 1, violation counting across the flip.
+        let gen0 = Generation::initial(data.clone(), ShardSpec::single(), EpochGauge::new());
+        let set = ShardSet::build(gen0.clone(), storage);
+        let mut violations = count_violations_on_set(&set, &data, &pre, &params, 0);
+        let built = flip(&gen0);
+        let set = ShardSet::advance(&set, &built);
+        let snap = built.generation.materialize();
+        violations += count_violations_on_set(&set, &snap, &post, &params, 10_000);
+        assert!(
+            violations <= budget,
+            "{}: {violations} ε-violations across the flip (budget {budget})",
+            storage.label()
+        );
+
+        // ε → 0 on the flipped set: the bias fallback must still see the
+        // *new* per-row error bounds and stay exact.
+        let tight = MipsParams { k: 4, epsilon: 1e-9, delta: 0.05, seed: 7 };
+        let mut ctxs = vec![QueryContext::new()];
+        for (case, q) in post.iter().take(6).enumerate() {
+            let res = &set.query_batch_bounded_me(&[q.as_slice()], &tight, &mut ctxs)[0];
+            let mut got = res.indices.clone();
+            got.sort_unstable();
+            let mut want = ground_truth(&snap, q, tight.k);
+            want.sort_unstable();
+            assert_eq!(got, want, "{} post-flip case {case}", storage.label());
+        }
+
+        // (3): S = 2 pure-upsert flip — shard 0 rebuilds (and
+        // re-quantizes), shard 1 is COW-reused — must be bit-identical
+        // to a from-scratch tiered build on the snapshot.
+        let gen0 =
+            Generation::initial(data.clone(), ShardSpec::contiguous(2), EpochGauge::new());
+        let cow = ShardSet::build(gen0.clone(), storage);
+        let mut bld = GenerationBuilder::new(&gen0);
+        let v: Vec<f32> = (0..gen0.dim()).map(|j| gen0.row(9)[j] * 8.0).collect();
+        bld.upsert(9, v).unwrap();
+        let built = bld.build().unwrap();
+        assert!(
+            built.reuse.iter().any(|r| r.is_some()),
+            "pure upsert should reuse the untouched shard"
+        );
+        let cow = ShardSet::advance(&cow, &built);
+        let fresh = ShardSet::build(
+            Generation::initial(built.generation.materialize(), ShardSpec::contiguous(2), EpochGauge::new()),
+            storage,
+        );
+        let refs: Vec<&[f32]> = post.iter().take(4).map(|q| q.as_slice()).collect();
+        let p = MipsParams { k: 3, epsilon: 0.2, delta: 0.1, seed: 42 };
+        let mut ctx_a = vec![QueryContext::new(), QueryContext::new()];
+        let mut ctx_b = vec![QueryContext::new(), QueryContext::new()];
+        let a = cow.query_batch_bounded_me(&refs, &p, &mut ctx_a);
+        let b = fresh.query_batch_bounded_me(&refs, &p, &mut ctx_b);
+        for (qi, (ra, rb)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(ra.indices, rb.indices, "{} q{qi}", storage.label());
+            assert_eq!(ra.flops, rb.flops, "{} q{qi}", storage.label());
+            for (x, y) in ra.scores.iter().zip(&rb.scores) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{} q{qi}: score bits", storage.label());
+            }
+        }
+    }
+}
+
 #[test]
 fn force_f32_pin_collapses_every_tier() {
     for storage in TIERS {

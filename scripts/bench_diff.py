@@ -3,9 +3,11 @@
 
 Usage: bench_diff.py CURRENT BASELINE [--threshold 0.10]
 
-Matches benchmark rows by (name, storage) — `storage` is the optional
-per-row tier tag the mixed-precision rows carry ("f16", "int8", ...);
-untagged rows key on name alone — and compares `mean_s`. Regressions beyond
+Matches benchmark rows by (name, storage, churn) — `storage` is the
+optional per-row tier tag the mixed-precision rows carry ("f16", "int8",
+...), `churn` the optional live-mutation rate tag the serving churn rows
+carry ("0%", "1%", "10%"); untagged rows key on name alone — and
+compares `mean_s`. Regressions beyond
 the threshold are printed as GitHub advisory annotations (`::warning::`)
 so CI surfaces them without failing the build — bench runners are noisy,
 a hard gate would flap. Rows with no baseline counterpart (newly added
@@ -28,13 +30,15 @@ def load_rows(path):
     with open(path) as f:
         doc = json.load(f)
     return {
-        (row["name"], row.get("storage", "")): row for row in doc.get("results", [])
+        (row["name"], row.get("storage", ""), row.get("churn", "")): row
+        for row in doc.get("results", [])
     }
 
 
 def label(key):
-    name, storage = key
-    return f"{name} [{storage}]" if storage else name
+    name, storage, churn = key
+    tags = "/".join(t for t in (storage, churn) if t)
+    return f"{name} [{tags}]" if tags else name
 
 
 def main(argv):
