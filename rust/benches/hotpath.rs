@@ -340,6 +340,20 @@ fn main() {
             index.query_with(&refs[qi], &params, &mut ctx).flops
         });
 
+        // The same path with the flight recorder armed (what the
+        // coordinator does under `RUST_PALLAS_TRACE=1`): per-round wall
+        // clocks plus one QueryExec record per query. This row keeps
+        // the tracing tax visible on the bench trajectory
+        // (`scripts/bench_diff.py` diffs it against `query/ctx_reuse`).
+        let mut qi = 0usize;
+        r.bench(&b, "query/ctx_reuse_traced 2000x4096", || {
+            qi = (qi + 1) % queries.len();
+            ctx.trace.arm();
+            let flops = index.query_with(&refs[qi], &params, &mut ctx).flops;
+            std::hint::black_box(ctx.trace.finish());
+            flops
+        });
+
         // Each iteration runs the whole 16-query batch; scale the
         // measurement down so the row is per-query comparable with the
         // two rows above.
@@ -374,20 +388,58 @@ fn main() {
             std::hint::black_box(index.query_batch(&refs, &params, &mut ctx));
             std::hint::black_box(index.query_batch(&refs, &params, &mut ctx));
         });
+        // Tracing accounting: armed, each query records a QueryExec
+        // plus its round vector (reported, not gated); disarmed — the
+        // serving default — must add exactly zero allocations over the
+        // plain ctx-reuse loop (the ISSUE 8 acceptance gate). The
+        // disarmed loop runs *after* the armed one so any lazily grown
+        // trace scratch is already warm and can't mask a leak.
+        let traced_allocs = count_allocs(|| {
+            for i in 0..LOOPS {
+                ctx.trace.arm();
+                std::hint::black_box(index.query_with(
+                    &refs[i % refs.len()],
+                    &params,
+                    &mut ctx,
+                ));
+                std::hint::black_box(ctx.trace.finish());
+            }
+        });
+        let disarmed_allocs = count_allocs(|| {
+            for i in 0..LOOPS {
+                std::hint::black_box(index.query_with(
+                    &refs[i % refs.len()],
+                    &params,
+                    &mut ctx,
+                ));
+            }
+        });
         let per = |a: u64, n: usize| a as f64 / n as f64;
         println!(
-            "allocs/query: per_query {:.1}, ctx_reuse {:.1}, batch16 {:.1}",
+            "allocs/query: per_query {:.1}, ctx_reuse {:.1}, batch16 {:.1}, \
+             traced {:.1}, trace_disarmed {:.1}",
             per(fresh_allocs, LOOPS),
             per(reuse_allocs, LOOPS),
             per(batch_allocs, 2 * refs.len()),
+            per(traced_allocs, LOOPS),
+            per(disarmed_allocs, LOOPS),
         );
         assert!(
             reuse_allocs < fresh_allocs,
             "context reuse must allocate less: {reuse_allocs} vs {fresh_allocs}"
         );
+        assert_eq!(
+            disarmed_allocs, reuse_allocs,
+            "disabled tracing must be allocation-free on the hot path"
+        );
         extra.push(("allocs_per_query_fresh", Json::Num(per(fresh_allocs, LOOPS))));
         extra.push(("allocs_per_query_ctx_reuse", Json::Num(per(reuse_allocs, LOOPS))));
         extra.push(("allocs_per_query_batch16", Json::Num(per(batch_allocs, 2 * refs.len()))));
+        extra.push(("allocs_per_query_traced", Json::Num(per(traced_allocs, LOOPS))));
+        extra.push((
+            "allocs_per_query_trace_disarmed",
+            Json::Num(per(disarmed_allocs, LOOPS)),
+        ));
         extra.push(("ctx_grow_events", Json::Num(ctx.grow_events() as f64)));
         extra.push(("ctx_panel_grow_events", Json::Num(ctx.panel_grow_events() as f64)));
     }

@@ -16,6 +16,28 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+/// Per-shard counter breakdown (mirrors the `metrics_prom` exposition)
+/// as a JSON array, so bench-trajectory diffs can attribute a hedging
+/// or churn regression to the shard that caused it.
+fn shard_breakdown(m: &bandit_mips::coordinator::MetricsSnapshot) -> Json {
+    Json::Arr(
+        m.shards
+            .iter()
+            .map(|s| {
+                Json::obj([
+                    ("shard", Json::Num(s.shard as f64)),
+                    ("dispatches", Json::Num(s.dispatches as f64)),
+                    ("hedges_fired", Json::Num(s.hedges_fired as f64)),
+                    ("hedges_won", Json::Num(s.hedges_won as f64)),
+                    ("merges", Json::Num(s.merges as f64)),
+                    ("mean_merge_s", Json::Num(s.mean_merge_s)),
+                    ("queue_depth", Json::Num(s.queue_depth as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 fn run_load(coord: &Coordinator, queries: usize, q: &[f32]) -> f64 {
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::with_capacity(queries);
@@ -155,6 +177,16 @@ fn main() {
             m.hedge_fired,
             m.hedge_won
         );
+        for s in &m.shards {
+            println!(
+                "      shard {}: {} dispatches, {} hedges fired / {} won, merge mean {:.3} ms",
+                s.shard,
+                s.dispatches,
+                s.hedges_fired,
+                s.hedges_won,
+                s.mean_merge_s * 1e3
+            );
+        }
         hedge_points.push(Json::obj([
             ("hedge_us", Json::Num(hedge_us as f64)),
             ("qps", Json::Num(qps)),
@@ -162,6 +194,7 @@ fn main() {
             ("service_p99_s", Json::Num(m.service.2)),
             ("hedge_fired", Json::Num(m.hedge_fired as f64)),
             ("hedge_won", Json::Num(m.hedge_won as f64)),
+            ("shard_breakdown", shard_breakdown(&m)),
         ]));
         coord.shutdown();
     }
@@ -293,6 +326,7 @@ fn main() {
                 ("mutations", Json::Num(m.mutations as f64)),
                 ("mutation_rows", Json::Num(m.mutation_rows as f64)),
                 ("generations_alive", Json::Num(alive as f64)),
+                ("shard_breakdown", shard_breakdown(&m)),
             ]));
             if let Ok(c) = Arc::try_unwrap(coord) {
                 c.shutdown();

@@ -10,6 +10,8 @@ use crate::data::shard::Shard;
 use crate::exec::shard::ShardPartial;
 use crate::exec::QueryContext;
 use crate::linalg::{partial_dot_rows_chunked, Matrix};
+use crate::trace::QueryExec;
+use std::time::Instant;
 
 /// Preprocessing-free MIPS with a suboptimality guarantee: for any query
 /// and user-chosen `0 < ε, δ < 1`, the returned set is ε-optimal (in
@@ -133,6 +135,8 @@ impl BoundedMeIndex {
             .iter()
             .map(|q| {
                 let res = self.query_with(q, params, ctx);
+                let confirm_t0 =
+                    if ctx.trace.armed { Some(Instant::now()) } else { None };
                 // Confirm step as blocked kernels: survivors are
                 // scattered rows, scored through the shared
                 // `partial_dot_rows` staging loop (bit-identical per
@@ -145,6 +149,12 @@ impl BoundedMeIndex {
                     q,
                     |i, score| entries.push((score, shard.global_id(res.indices[i]))),
                 );
+                if let Some(t0) = confirm_t0 {
+                    if let Some(exec) = ctx.trace.queries.last_mut() {
+                        exec.confirm_ns += t0.elapsed().as_nanos() as u64;
+                        exec.ended = Instant::now();
+                    }
+                }
                 let confirm_flops = (entries.len() * dim) as u64;
                 ShardPartial {
                     flops: res.flops + confirm_flops,
@@ -189,6 +199,11 @@ impl BoundedMeIndex {
         let bias = qm.max_err() as f64 * l1 / n_list;
         let eff_eps_q = eff_target - 2.0 * bias;
         if eff_eps_q <= 0.0 {
+            // A tier is present but ε can't absorb the bias; flag the
+            // fallback so the f32 run the caller drops to records it.
+            if ctx.trace.armed {
+                ctx.trace.quant_fallback = true;
+            }
             return None;
         }
         // Dequantized rewards need their own bound: the codes' colmax
@@ -198,7 +213,7 @@ impl BoundedMeIndex {
             .iter()
             .zip(q)
             .fold(f32::MIN_POSITIVE, |m, (&c, &qj)| m.max(c * qj.abs()));
-        let QueryContext { pull, bandit, .. } = ctx;
+        let QueryContext { pull, bandit, trace, .. } = ctx;
         pull.prepare(self.order, self.data.cols(), params.seed);
         pull.gather(q);
         let arms = QuantArms::with_scratch(qm, qbound, pull);
@@ -208,7 +223,18 @@ impl BoundedMeIndex {
             delta: params.delta.clamp(f64::MIN_POSITIVE, 1.0 - 1e-12),
         })
         .with_compaction(self.compaction);
-        let out = algo.run_in(&arms, bandit);
+        let out = if trace.armed {
+            let mut exec = QueryExec::begin();
+            exec.quant = true;
+            let out = algo.run_in_traced(&arms, bandit, Some(&mut exec.rounds));
+            exec.total_pulls = out.total_pulls;
+            exec.bandit_ns = exec.started.elapsed().as_nanos() as u64;
+            trace.queries.push(exec);
+            out
+        } else {
+            algo.run_in(&arms, bandit)
+        };
+        let confirm_t0 = if trace.armed { Some(Instant::now()) } else { None };
         // Confirm step: exact f32 rescore of the ≤ k survivors through
         // the shared blocked staging loop (bit-identical per row to
         // `dot`), then re-rank on exact scores (ties broken by id so
@@ -224,6 +250,12 @@ impl BoundedMeIndex {
                 .unwrap_or(std::cmp::Ordering::Equal)
                 .then(a.1.cmp(&b.1))
         });
+        if let Some(t0) = confirm_t0 {
+            if let Some(exec) = trace.queries.last_mut() {
+                exec.confirm_ns = t0.elapsed().as_nanos() as u64;
+                exec.ended = Instant::now();
+            }
+        }
         let confirm_flops = (entries.len() * self.data.cols()) as u64;
         Some(MipsResult {
             indices: entries.iter().map(|&(_, id)| id).collect(),
@@ -281,8 +313,9 @@ impl MipsIndex for BoundedMeIndex {
         }
         let bound = self.reward_bound(q);
         // Disjoint field borrows: `pull` is held immutably by the arms
-        // while `bandit` is mutated by the run.
-        let QueryContext { pull, bandit, .. } = ctx;
+        // while `bandit` is mutated by the run (and `trace` is staged
+        // independently of both).
+        let QueryContext { pull, bandit, trace, .. } = ctx;
         pull.prepare(self.order, self.data.cols(), params.seed);
         pull.gather(q);
         let arms = MatrixArms::with_scratch(&self.data, bound, pull);
@@ -297,7 +330,20 @@ impl MipsIndex for BoundedMeIndex {
             delta: params.delta.clamp(f64::MIN_POSITIVE, 1.0 - 1e-12),
         })
         .with_compaction(self.compaction);
-        let out = algo.run_in(&arms, bandit);
+        let out = if trace.armed {
+            let mut exec = QueryExec::begin();
+            // Set when a compressed tier bailed on the ε-bias just
+            // before this f32 run (see `query_quant`).
+            exec.quant_fallback = std::mem::take(&mut trace.quant_fallback);
+            let out = algo.run_in_traced(&arms, bandit, Some(&mut exec.rounds));
+            exec.total_pulls = out.total_pulls;
+            exec.bandit_ns = exec.started.elapsed().as_nanos() as u64;
+            exec.ended = Instant::now();
+            trace.queries.push(exec);
+            out
+        } else {
+            algo.run_in(&arms, bandit)
+        };
         MipsResult {
             indices: out.arms,
             // Empirical mean × N ≈ inner product estimate.

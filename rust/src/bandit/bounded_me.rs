@@ -33,6 +33,7 @@ use super::arms::{PullPanel, RewardSource};
 use super::bounds::m_bounded;
 use super::BanditResult;
 use std::sync::OnceLock;
+use std::time::Instant;
 
 /// Environment variable pinning the scattered pull layout (debug/CI
 /// escape hatch, mirroring `RUST_PALLAS_FORCE_SCALAR`): any value other
@@ -153,6 +154,11 @@ pub struct RoundTrace {
     pub delta_l: f64,
     /// Whether this round's pulls ran on the compacted survivor panel.
     pub compacted: bool,
+    /// Wall time of the round (batched pull + elimination), in
+    /// nanoseconds. Only measured when a trace is being collected —
+    /// the traceless [`BoundedMe::run_in`] hot path never reads the
+    /// clock — so it is `0` exactly when nobody is looking.
+    pub nanos: u64,
 }
 
 /// Full output of [`BoundedMe::run`]: the [`BanditResult`] plus the
@@ -267,6 +273,20 @@ impl BoundedMe {
         self.run_core(env, scratch, None)
     }
 
+    /// [`BoundedMe::run_in`] with optional per-round trace collection
+    /// into a caller-owned buffer (the flight recorder's entry point:
+    /// scratch reuse *and* a round schedule, without the allocation of
+    /// [`BoundedMe::run`]). `None` is exactly `run_in` — same pulls,
+    /// same elimination order, no clock reads.
+    pub fn run_in_traced<R: RewardSource>(
+        &self,
+        env: &R,
+        scratch: &mut BanditScratch,
+        trace: Option<&mut Vec<RoundTrace>>,
+    ) -> BanditResult {
+        self.run_core(env, scratch, trace)
+    }
+
     fn run_core<R: RewardSource>(
         &self,
         env: &R,
@@ -340,8 +360,10 @@ impl BoundedMe {
                     epsilon_l: eps_l,
                     delta_l,
                     compacted: panel_on,
+                    nanos: 0,
                 });
             }
+            let round_t0 = if trace.is_some() { Some(Instant::now()) } else { None };
 
             // Pull every survivor up to t_l cumulative pulls. Every
             // survivor sits at exactly t_prev pulls (each round tops all
@@ -383,6 +405,12 @@ impl BoundedMe {
                 a.mean().partial_cmp(&b.mean()).unwrap_or(std::cmp::Ordering::Equal)
             });
             survivors.drain(..drop);
+
+            if let (Some(trace), Some(t0)) = (trace.as_mut(), round_t0) {
+                if let Some(entry) = trace.last_mut() {
+                    entry.nanos = t0.elapsed().as_nanos() as u64;
+                }
+            }
 
             eps_l *= 0.75;
             delta_l *= 0.5;

@@ -48,8 +48,8 @@ pub use arms::{
     RewardSource,
 };
 pub use bounded_me::{
-    force_no_compact_requested, BanditScratch, BoundedMe, BoundedMeConfig, Compaction,
-    FORCE_NO_COMPACT_ENV,
+    force_no_compact_requested, BanditScratch, BoundedMe, BoundedMeConfig, BoundedMeOutput,
+    Compaction, RoundTrace, FORCE_NO_COMPACT_ENV,
 };
 pub use bounds::{hoeffding_sample_size, m_bounded, serfling_radius};
 

@@ -122,6 +122,10 @@ use crate::runtime::{NativeEngine, PjrtEngine, ScoringEngine};
 use crate::sync::{
     bounded, EpochGauge, Receiver, RecvError, Selector, SendError, Sender, TryRecvError,
 };
+use crate::trace::{
+    trace_env_requested, QueryExec, QueryTrace, TraceBuilder, TraceConfig, TraceRecorder,
+    TraceSink,
+};
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -201,6 +205,12 @@ pub struct CoordinatorConfig {
     /// Hedge copies run full speed. Reactor path only.
     #[doc(hidden)]
     pub debug_slow_shard: Option<(usize, Duration)>,
+    /// Flight-recorder knobs (see [`crate::trace`]). Whether tracing is
+    /// on is decided **once at construction** — `trace.enabled` or the
+    /// `RUST_PALLAS_TRACE` env pin — and carried as a plain bool
+    /// through every thread, so a disabled deployment pays zero
+    /// allocations and zero atomics for the subsystem.
+    pub trace: TraceConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -217,6 +227,7 @@ impl Default for CoordinatorConfig {
             hedge_delay: None,
             force_reactor: false,
             debug_slow_shard: None,
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -447,6 +458,9 @@ pub struct Coordinator {
     /// [`Coordinator::mutate`] collected all acks) — the sound lower
     /// witness bound for queries submitted afterwards.
     acked_gen: AtomicU64,
+    /// Flight-recorder rings (`None` when tracing is off — the common
+    /// case; the absence is what makes tracing free when disabled).
+    trace_sink: Option<Arc<TraceSink>>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -484,7 +498,17 @@ impl Coordinator {
         // Every shard needs at least one pinned worker; extra workers
         // round-robin across shards.
         let workers = cfg.workers.max(n_shards);
-        let metrics = Arc::new(MetricsRegistry::new());
+        let metrics = Arc::new(MetricsRegistry::with_shards(n_shards));
+        // Tracing is resolved exactly once, here: config switch or the
+        // `RUST_PALLAS_TRACE` pin. Recording threads are the reactor
+        // (S ≥ 2) or each direct worker (S = 1) — one ring each.
+        let trace_on = cfg.trace.enabled || trace_env_requested();
+        let trace_sink: Option<Arc<TraceSink>> = if trace_on {
+            let rings = if use_reactor { 1 } else { workers };
+            Some(Arc::new(TraceSink::new(&cfg.trace, rings)))
+        } else {
+            None
+        };
         let (submit_tx, submit_rx) = bounded::<Pending>(cfg.queue_capacity);
         let (batch_tx, batch_rx) = bounded::<Batch>(workers * 2);
 
@@ -540,6 +564,7 @@ impl Coordinator {
                 let hedge_delay = cfg.hedge_delay;
                 let storage = set0.index(0).storage();
                 let current = set0.clone();
+                let recorder = trace_sink.as_ref().map(|s| s.recorder(0));
                 threads.push(std::thread::Builder::new().name("reactor".into()).spawn(
                     move || {
                         Reactor {
@@ -562,6 +587,7 @@ impl Coordinator {
                             draining: false,
                             current,
                             metrics,
+                            recorder,
                         }
                         .run()
                     },
@@ -610,6 +636,7 @@ impl Coordinator {
                 let set = set0.clone();
                 let metrics = metrics.clone();
                 let backend = cfg.backend.clone();
+                let recorder = trace_sink.as_ref().map(|s| s.recorder(w));
                 threads.push(std::thread::Builder::new().name(format!("worker-{w}")).spawn(
                     move || {
                         let resident = set.shard(0).matrix().clone();
@@ -622,6 +649,7 @@ impl Coordinator {
                             &resident,
                             engine.as_ref(),
                             &metrics,
+                            recorder,
                         );
                     },
                 )?);
@@ -637,6 +665,7 @@ impl Coordinator {
             flip_txs,
             latest_gen,
             acked_gen: AtomicU64::new(0),
+            trace_sink,
             threads,
         })
     }
@@ -668,6 +697,14 @@ impl Coordinator {
     /// Current metrics snapshot.
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// The most recent `limit` retained query traces, newest first.
+    /// Empty unless the flight recorder is on
+    /// ([`CoordinatorConfig::trace`] or `RUST_PALLAS_TRACE`). Reading
+    /// is non-destructive — a trace stays in its ring until overwritten.
+    pub fn traces(&self, limit: usize) -> Vec<QueryTrace> {
+        self.trace_sink.as_ref().map(|s| s.collect(limit)).unwrap_or_default()
     }
 
     /// Dataset dimension served.
@@ -930,6 +967,10 @@ struct ShardBatch {
     /// set, however many flips happen while the batch is in flight —
     /// that pin is what makes answers exact for one specific snapshot.
     set: Arc<ShardSet>,
+    /// Whether the flight recorder wants this batch's executions
+    /// staged: a plain bool resolved once at coordinator construction,
+    /// so the disabled hot path never touches the trace subsystem.
+    traced: bool,
     items: Vec<Arc<QueryJob>>,
 }
 
@@ -944,6 +985,10 @@ struct QueryDone {
     /// superseded by a flip at pickup — the stale-and-late shed the
     /// `shed_superseded` counter tracks.
     superseded: bool,
+    /// Execution telemetry staged by the BOUNDEDME index for this
+    /// query (traced batches only; boxed so the untraced `QueryDone`
+    /// stays one pointer wider, not a struct wider).
+    exec: Option<Box<QueryExec>>,
 }
 
 /// Completion event: one executed [`ShardBatch`], reported back to the
@@ -952,6 +997,11 @@ struct ShardDone {
     dispatch: u64,
     worker: usize,
     hedged: bool,
+    /// When the worker picked the batch up (traced batches only) —
+    /// lets the reactor split the shard window into channel wait vs
+    /// compute. Taken *before* the `debug_slow_shard` sleep, so an
+    /// injected straggler shows up as compute, like a real one would.
+    picked: Option<Instant>,
     results: Vec<QueryDone>,
 }
 
@@ -981,6 +1031,9 @@ struct MergeState {
     queue_wait: Duration,
     batch_size: usize,
     started: Instant,
+    /// Span accumulator for the flight recorder (traced queries only;
+    /// boxed to keep the untraced merge state small).
+    trace: Option<Box<TraceBuilder>>,
     reply: Sender<QueryResponse>,
 }
 
@@ -1039,6 +1092,9 @@ struct Reactor {
     /// always between batches (admission happens after the flip drain).
     current: Arc<ShardSet>,
     metrics: Arc<MetricsRegistry>,
+    /// Flight-recorder handle (`None` when tracing is off). Its
+    /// presence is the per-batch `traced` bit workers see.
+    recorder: Option<TraceRecorder>,
 }
 
 impl Reactor {
@@ -1145,16 +1201,44 @@ impl Reactor {
             };
             let id = self.next_query;
             self.next_query += 1;
+            let storage = match mode {
+                QueryMode::Exact => Storage::F32,
+                _ => self.storage,
+            };
+            // Flight recorder: anchor the builder at submission, record
+            // the queue span and the plan resolution. (Sheds decided
+            // above, before any fan-out, are deliberately not traced —
+            // no worker ever touches them.)
+            let trace = self.recorder.as_ref().map(|_| {
+                let kind = match mode {
+                    QueryMode::Exact => "exact",
+                    _ => "bounded_me",
+                };
+                let mut b = Box::new(TraceBuilder::new(pending.submitted, id, kind));
+                b.trace.k = req.k;
+                b.trace.epsilon = req.epsilon;
+                b.trace.delta = req.delta;
+                b.trace.storage = storage.label();
+                b.trace.generation = generation;
+                b.trace.batch_size = batch_size;
+                b.trace.shards = self.n_shards;
+                b.trace.queue_wait_ns = queue_wait.as_nanos() as u64;
+                b.span(
+                    "queue",
+                    -1,
+                    pending.submitted,
+                    picked_up,
+                    Vec::new(),
+                );
+                b
+            });
             self.merges.insert(
                 id,
                 MergeState {
                     top: TopK::new(top_k),
                     passthrough: self.n_shards == 1 && mode == QueryMode::BoundedMe,
                     entries_direct: Vec::new(),
-                    storage: match mode {
-                        QueryMode::Exact => Storage::F32,
-                        _ => self.storage,
-                    },
+                    storage,
                     generation,
                     flops: 0,
                     remaining: self.n_shards,
@@ -1163,6 +1247,7 @@ impl Reactor {
                     queue_wait,
                     batch_size,
                     started: Instant::now(),
+                    trace,
                     reply: pending.reply,
                 },
             );
@@ -1206,6 +1291,7 @@ impl Reactor {
                 hedged: false,
                 live,
                 set: self.current.clone(),
+                traced: self.recorder.is_some(),
                 items: jobs.clone(),
             });
         }
@@ -1219,6 +1305,7 @@ impl Reactor {
                 let dispatch = sb.dispatch;
                 match self.shard_txs[s].try_send(sb) {
                     Ok(()) => {
+                        self.metrics.record_dispatch(s);
                         if let Some(d) = self.dispatches.get_mut(&dispatch) {
                             if d.sent_at.is_none() {
                                 d.sent_at = Some(Instant::now());
@@ -1234,6 +1321,9 @@ impl Reactor {
                     Err(SendError::Disconnected(_)) => break,
                 }
             }
+            // Backlog depth after the flush = what's still queued on
+            // the reactor side for this shard (a gauge, not a counter).
+            self.metrics.set_queue_depth(s, self.backlog[s].len());
         }
     }
 
@@ -1263,11 +1353,12 @@ impl Reactor {
                     hedged: true,
                     live: disp.live.clone(),
                     set: disp.set.clone(),
+                    traced: self.recorder.is_some(),
                     items: disp.items.clone(),
                 };
                 if self.hedge_tx.try_send(sb).is_ok() {
                     disp.hedge_sent = true;
-                    self.metrics.record_hedge_fired();
+                    self.metrics.record_hedge_fired(disp.shard);
                 } else {
                     // Hedge queue full: the pool is saturated and a
                     // duplicate would only add load. Back off one delay
@@ -1286,20 +1377,55 @@ impl Reactor {
     /// copy of a hedged dispatch finds no entry and is dropped whole,
     /// so no shard ever contributes twice to a merge.
     fn on_done(&mut self, done: ShardDone) {
-        match self.dispatches.remove(&done.dispatch) {
+        let now = Instant::now();
+        let (shard, sent_at, hedge_sent) = match self.dispatches.remove(&done.dispatch) {
             // Retire the dispatch: any still-queued sibling copy sees
             // the cleared flag at pickup and skips its scan.
-            Some(d) => d.live.store(false, Ordering::Relaxed),
+            Some(d) => {
+                d.live.store(false, Ordering::Relaxed);
+                (d.shard, d.sent_at, d.hedge_sent)
+            }
             None => return, // losing copy of a hedged dispatch
-        }
+        };
         if done.hedged {
-            self.metrics.record_hedge_won();
+            self.metrics.record_hedge_won(shard);
         }
-        for QueryDone { query, partial, expired, superseded } in done.results {
+        if let Some(sent) = sent_at {
+            // Fan-out → fold window of this shard's slice: the
+            // per-shard merge latency an adaptive hedge delay would
+            // consume.
+            self.metrics.record_merge(shard, now.saturating_duration_since(sent));
+        }
+        for QueryDone { query, partial, expired, superseded, exec } in done.results {
             let Some(m) = self.merges.get_mut(&query) else { continue };
             m.shed |= expired;
             m.superseded |= superseded;
             m.flops += partial.flops;
+            if let Some(tb) = m.trace.as_deref_mut() {
+                tb.trace.hedge_fired |= hedge_sent;
+                tb.trace.hedge_won |= done.hedged;
+                let sid = shard as i64;
+                let start = sent_at.unwrap_or(now);
+                tb.span(
+                    "shard",
+                    sid,
+                    start,
+                    now,
+                    vec![
+                        ("worker", done.worker as f64),
+                        ("hedged", if done.hedged { 1.0 } else { 0.0 }),
+                        ("hedge_fired", if hedge_sent { 1.0 } else { 0.0 }),
+                    ],
+                );
+                if let Some(picked) = done.picked {
+                    // Channel wait vs compute split of the shard window.
+                    tb.span("shard_wait", sid, start, picked, Vec::new());
+                    tb.span("shard_compute", sid, picked, now, Vec::new());
+                }
+                if let Some(exec) = exec.as_deref() {
+                    push_exec_spans(tb, sid, exec);
+                }
+            }
             if m.passthrough {
                 m.entries_direct = partial.entries;
             } else {
@@ -1317,6 +1443,16 @@ impl Reactor {
 
     fn send_reply(&self, m: MergeState, worker: usize) {
         let service = m.started.elapsed();
+        // Flight recorder: stamp the roll-up and publish (sampling and
+        // the slow-query warn line both happen inside `publish`).
+        if let (Some(rec), Some(mut tb)) = (self.recorder.as_ref(), m.trace) {
+            tb.trace.service_ns = service.as_nanos() as u64;
+            tb.trace.shed = m.shed;
+            if m.shed {
+                tb.trace.kind = "shed";
+            }
+            rec.publish(*tb);
+        }
         if m.shed {
             // Some shard saw the deadline expired at pickup: the client
             // has timed out, reply shed (no results; `flops` reports
@@ -1436,6 +1572,12 @@ fn serve_reactor_batch(
     latest_gen: &AtomicU64,
     slow: Option<(usize, Duration)>,
 ) -> ShardDone {
+    // Pickup timestamp before the straggler injection so an injected
+    // slow shard is attributed to compute, like a genuinely slow one.
+    let picked = if sb.traced { Some(Instant::now()) } else { None };
+    if sb.traced {
+        ctx.trace.arm();
+    }
     if let Some((slow_shard, delay)) = slow {
         // Deterministic straggler injection: primaries on the slow
         // shard crawl, hedge copies run full speed.
@@ -1472,6 +1614,7 @@ fn serve_reactor_batch(
                     partial: ShardPartial { entries: Vec::new(), flops: 0, scanned: 0 },
                     expired: true,
                     superseded: superseded_gen,
+                    exec: None,
                 });
                 continue;
             }
@@ -1524,6 +1667,7 @@ fn serve_reactor_batch(
                 },
                 expired: false,
                 superseded: false,
+                exec: None,
             });
         }
     }
@@ -1555,6 +1699,7 @@ fn serve_reactor_batch(
                     },
                     expired: false,
                     superseded: false,
+                    exec: None,
                 });
             };
             if uniform && bme.len() > 1 {
@@ -1600,6 +1745,7 @@ fn serve_reactor_batch(
                     partial,
                     expired: false,
                     superseded: false,
+                    exec: None,
                 });
             }
         } else {
@@ -1620,12 +1766,73 @@ fn serve_reactor_batch(
                     partial,
                     expired: false,
                     superseded: false,
+                    exec: None,
                 });
             }
         }
     }
 
-    ShardDone { dispatch: sb.dispatch, worker: worker_id, hedged: sb.hedged, results }
+    // Traced batches: the BOUNDEDME paths above staged exactly one
+    // QueryExec per *served* (non-expired) bme query, in query order —
+    // and those results are the tail of `results` in the same order.
+    if sb.traced {
+        let execs = ctx.trace.finish();
+        let base = results.len() - execs.len();
+        for (i, exec) in execs.into_iter().enumerate() {
+            results[base + i].exec = Some(Box::new(exec));
+        }
+    }
+
+    ShardDone {
+        dispatch: sb.dispatch,
+        worker: worker_id,
+        hedged: sb.hedged,
+        picked,
+        results,
+    }
+}
+
+/// Append a staged execution's bandit / per-round / confirm spans to a
+/// trace. The round spans tile the bandit window front-to-back
+/// (cumulative [`crate::bandit::RoundTrace::nanos`] offsets), so their
+/// sum never exceeds `bandit_ns`. Shared by the reactor merge and the
+/// S = 1 direct path.
+fn push_exec_spans(tb: &mut TraceBuilder, shard: i64, exec: &QueryExec) {
+    let b0 = tb.offset_ns(exec.started);
+    tb.span_ns(
+        "bandit",
+        shard,
+        b0,
+        b0 + exec.bandit_ns,
+        vec![
+            ("pulls", exec.total_pulls as f64),
+            ("rounds", exec.rounds.len() as f64),
+            ("quant", if exec.quant { 1.0 } else { 0.0 }),
+            ("quant_fallback", if exec.quant_fallback { 1.0 } else { 0.0 }),
+        ],
+    );
+    let mut off = b0;
+    for r in &exec.rounds {
+        tb.span_ns(
+            "round",
+            shard,
+            off,
+            off + r.nanos,
+            vec![
+                ("round", r.round as f64),
+                ("survivors", r.survivors as f64),
+                ("t_l", r.t_l as f64),
+                ("epsilon_l", r.epsilon_l),
+                ("delta_l", r.delta_l),
+                ("compacted", if r.compacted { 1.0 } else { 0.0 }),
+            ],
+        );
+        off += r.nanos;
+    }
+    if exec.confirm_ns > 0 {
+        let c0 = b0 + exec.bandit_ns;
+        tb.span_ns("confirm", shard, c0, c0 + exec.confirm_ns, Vec::new());
+    }
 }
 
 /// S = 1 fast-path worker loop: batches arrive straight from the
@@ -1634,6 +1841,7 @@ fn serve_reactor_batch(
 /// worker is its own generation-flip consumer: flips drain (and ack)
 /// between batches, so the serving set swap is a local `Arc` move —
 /// still no lock anywhere on the fast path.
+#[allow(clippy::too_many_arguments)]
 fn run_direct_worker(
     worker_id: usize,
     rx: Receiver<Batch>,
@@ -1642,8 +1850,13 @@ fn run_direct_worker(
     resident: &Matrix,
     engine: &dyn ScoringEngine,
     metrics: &MetricsRegistry,
+    recorder: Option<TraceRecorder>,
 ) {
     let mut ctx = QueryContext::new();
+    // Direct-path trace ids: worker-local submission counter (there is
+    // no reactor to hand out global ids; the published seq orders
+    // traces globally).
+    let mut next_trace_id: u64 = 0;
     let selector = Selector::new();
     selector.watch(&rx);
     selector.watch(&flip_rx);
@@ -1657,7 +1870,15 @@ fn run_direct_worker(
         match rx.try_recv() {
             Ok(batch) => {
                 serve_direct_batch(
-                    worker_id, batch, &set, resident, engine, &mut ctx, metrics,
+                    worker_id,
+                    batch,
+                    &set,
+                    resident,
+                    engine,
+                    &mut ctx,
+                    metrics,
+                    recorder.as_ref(),
+                    &mut next_trace_id,
                 );
             }
             Err(TryRecvError::Empty) => selector.wait(),
@@ -1671,6 +1892,7 @@ fn run_direct_worker(
 /// groups, same fused/per-query BOUNDEDME paths — so answers are
 /// bit-identical to the merge path; the saving is pure overhead (no
 /// `Arc`-wrapped merge state, no completion event, no reactor hop).
+#[allow(clippy::too_many_arguments)]
 fn serve_direct_batch(
     worker_id: usize,
     batch: Batch,
@@ -1679,8 +1901,13 @@ fn serve_direct_batch(
     engine: &dyn ScoringEngine,
     ctx: &mut QueryContext,
     metrics: &MetricsRegistry,
+    recorder: Option<&TraceRecorder>,
+    next_trace_id: &mut u64,
 ) {
     let picked_up = Instant::now();
+    if recorder.is_some() {
+        ctx.trace.arm();
+    }
     let index = set.index(0).as_ref();
     let shard = set.shard(0);
     let generation = set.generation().id();
@@ -1717,15 +1944,46 @@ fn serve_direct_batch(
         }
     }
 
-    let respond = |pending: &Pending,
-                   indices: Vec<usize>,
-                   scores: Vec<f32>,
-                   flops: u64,
-                   storage: Storage| {
+    let mut respond = |pending: &Pending,
+                       indices: Vec<usize>,
+                       scores: Vec<f32>,
+                       flops: u64,
+                       storage: Storage,
+                       exec: Option<&QueryExec>| {
         let queue_wait = picked_up - pending.submitted;
         let service = picked_up.elapsed();
         metrics.record_query(queue_wait, service, flops);
         metrics.record_fast_path();
+        if let Some(rec) = recorder {
+            let kind = match pending.req.mode {
+                QueryMode::Exact => "exact",
+                _ => "bounded_me",
+            };
+            let id = *next_trace_id;
+            *next_trace_id += 1;
+            let mut tb = TraceBuilder::new(pending.submitted, id, kind);
+            tb.trace.k = pending.req.k;
+            tb.trace.epsilon = pending.req.epsilon;
+            tb.trace.delta = pending.req.delta;
+            tb.trace.storage = storage.label();
+            tb.trace.generation = generation;
+            tb.trace.batch_size = batch_size;
+            tb.trace.shards = 1;
+            tb.trace.queue_wait_ns = queue_wait.as_nanos() as u64;
+            tb.trace.service_ns = service.as_nanos() as u64;
+            tb.span("queue", -1, pending.submitted, picked_up, Vec::new());
+            tb.span(
+                "compute",
+                0,
+                picked_up,
+                Instant::now(),
+                vec![("worker", worker_id as f64)],
+            );
+            if let Some(exec) = exec {
+                push_exec_spans(&mut tb, 0, exec);
+            }
+            rec.publish(tb);
+        }
         let _ = pending.reply.send(QueryResponse {
             indices,
             scores,
@@ -1774,6 +2032,7 @@ fn serve_direct_batch(
                 ranked.iter().map(|&(s, _)| s).collect(),
                 (rows * dim) as u64,
                 Storage::F32,
+                None,
             );
         }
     }
@@ -1789,8 +2048,12 @@ fn serve_direct_batch(
         let params =
             MipsParams { k: first.k, epsilon: first.epsilon, delta: first.delta, seed: first.seed };
         let queries: Vec<&[f32]> = bme.iter().map(|p| p.req.vector.as_slice()).collect();
-        for (pending, res) in bme.iter().zip(index.query_batch(&queries, &params, ctx)) {
-            respond(pending, res.indices, res.scores, res.flops, index.storage());
+        let batch_res = index.query_batch(&queries, &params, ctx);
+        // One staged QueryExec per bme query, in order (empty when the
+        // stage is disarmed — `get` then yields None throughout).
+        let execs = ctx.trace.finish();
+        for (i, (pending, res)) in bme.iter().zip(batch_res).enumerate() {
+            respond(pending, res.indices, res.scores, res.flops, index.storage(), execs.get(i));
         }
     } else {
         for pending in &bme {
@@ -1801,7 +2064,15 @@ fn serve_direct_batch(
                 seed: pending.req.seed,
             };
             let res = index.query_with(&pending.req.vector, &params, ctx);
-            respond(pending, res.indices, res.scores, res.flops, index.storage());
+            let exec = ctx.trace.queries.pop();
+            respond(
+                pending,
+                res.indices,
+                res.scores,
+                res.flops,
+                index.storage(),
+                exec.as_ref(),
+            );
         }
     }
 }

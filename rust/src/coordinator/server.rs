@@ -16,7 +16,16 @@
 //!    "shards_reused":2,"delta_rows":3}
 //! → {"op":"ping"}
 //! ← {"ok":true,"pong":true}
+//! → {"op":"trace","limit":8}
+//! ← {"ok":true,"traces":[{"seq":…,"kind":"bounded_me","spans":[…]},…]}
+//! → {"op":"metrics_prom"}
+//! ← {"ok":true,"content_type":"text/plain; version=0.0.4","body":"# HELP …"}
 //! ```
+//!
+//! `trace` returns the flight recorder's most recent retained query
+//! traces (empty unless tracing is enabled — see [`crate::trace`]);
+//! `metrics_prom` renders the metrics snapshot, including the
+//! per-shard breakdown, in Prometheus text exposition format.
 //!
 //! `mutate` applies one delta batch atomically: the reply's
 //! `generation` is live for every query submitted after it arrives
@@ -168,8 +177,10 @@ pub fn handle_line(line: &str, coord: &Coordinator) -> Json {
                 ("service_p99_ms", Json::Num(m.service.2 * 1e3)),
                 ("queue_p99_ms", Json::Num(m.queue_wait.2 * 1e3)),
                 ("shed", Json::Num(m.shed as f64)),
+                ("batch_items", Json::Num(m.batch_items as f64)),
                 ("hedge_fired", Json::Num(m.hedge_fired as f64)),
                 ("hedge_won", Json::Num(m.hedge_won as f64)),
+                ("hedge_lost", Json::Num(m.hedge_lost as f64)),
                 ("fast_path", Json::Num(m.fast_path as f64)),
                 ("mutations", Json::Num(m.mutations as f64)),
                 ("mutation_rows", Json::Num(m.mutation_rows as f64)),
@@ -177,6 +188,22 @@ pub fn handle_line(line: &str, coord: &Coordinator) -> Json {
                 ("generation", Json::Num(coord.generation() as f64)),
                 ("generations_alive", Json::Num(coord.generations_alive() as f64)),
             ])
+        }
+        Some("metrics_prom") => {
+            let body = coord
+                .metrics()
+                .to_prometheus(coord.generation(), coord.generations_alive());
+            Json::obj([
+                ("ok", Json::Bool(true)),
+                ("content_type", Json::Str("text/plain; version=0.0.4".into())),
+                ("body", Json::Str(body)),
+            ])
+        }
+        Some("trace") => {
+            let limit = req.get("limit").and_then(Json::as_usize).unwrap_or(32);
+            let traces: Vec<Json> =
+                coord.traces(limit).iter().map(crate::trace::trace_to_json).collect();
+            Json::obj([("ok", Json::Bool(true)), ("traces", Json::Arr(traces))])
         }
         Some("mutate") => {
             let mut deltas = Vec::new();
@@ -401,6 +428,102 @@ mod tests {
         }
         let m = handle_line(r#"{"op":"metrics"}"#, &coord);
         assert_eq!(m.get("generation").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn metrics_op_exposes_full_field_set() {
+        let coord = coordinator();
+        let q: Vec<String> = (0..32).map(|i| format!("{}", i as f32 * 0.1)).collect();
+        let line = format!(
+            r#"{{"op":"query","vector":[{}],"k":3,"epsilon":0.2,"delta":0.2}}"#,
+            q.join(",")
+        );
+        assert_eq!(handle_line(&line, &coord).get("ok").unwrap().as_bool(), Some(true));
+        let m = handle_line(r#"{"op":"metrics"}"#, &coord);
+        assert_eq!(m.get("ok").unwrap().as_bool(), Some(true));
+        // The op's complete contract: every exported field present (a
+        // missing field silently breaks downstream scrapers).
+        for field in [
+            "queries",
+            "batches",
+            "flops",
+            "mean_batch",
+            "service_p50_ms",
+            "service_p99_ms",
+            "queue_p99_ms",
+            "shed",
+            "batch_items",
+            "hedge_fired",
+            "hedge_won",
+            "hedge_lost",
+            "fast_path",
+            "mutations",
+            "mutation_rows",
+            "shed_superseded",
+            "generation",
+            "generations_alive",
+        ] {
+            assert!(m.get(field).is_some(), "metrics op missing field {field:?}");
+        }
+        assert_eq!(m.get("queries").unwrap().as_usize(), Some(1));
+        assert_eq!(m.get("batch_items").unwrap().as_usize(), Some(1));
+        // No hedging configured: fired = won = lost = 0.
+        assert_eq!(m.get("hedge_lost").unwrap().as_usize(), Some(0));
+        assert_eq!(m.get("generations_alive").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn metrics_prom_op_renders_exposition() {
+        let coord = coordinator();
+        let resp = handle_line(r#"{"op":"metrics_prom"}"#, &coord);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            resp.get("content_type").unwrap().as_str(),
+            Some("text/plain; version=0.0.4")
+        );
+        let body = resp.get("body").unwrap().as_str().unwrap();
+        assert!(body.contains("# TYPE pallas_queries_total counter"));
+        assert!(body.contains("pallas_shard_dispatches_total{shard=\"0\"}"));
+        assert!(body.contains("pallas_generation "));
+    }
+
+    #[test]
+    fn trace_op_returns_empty_without_recorder_and_traces_with() {
+        // Tracing off: the op answers ok with an empty list.
+        let coord = coordinator();
+        let resp = handle_line(r#"{"op":"trace"}"#, &coord);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        let Json::Arr(traces) = resp.get("traces").unwrap() else {
+            panic!("traces not an array");
+        };
+        assert!(traces.is_empty());
+
+        // Tracing on (config switch): a served query shows up.
+        let ds = gaussian_dataset(100, 32, 1);
+        let cfg = CoordinatorConfig {
+            trace: crate::trace::TraceConfig { enabled: true, ..Default::default() },
+            ..Default::default()
+        };
+        let coord = Arc::new(Coordinator::new(ds.vectors, cfg).unwrap());
+        let q: Vec<String> = (0..32).map(|i| format!("{}", i as f32 * 0.1)).collect();
+        let line = format!(
+            r#"{{"op":"query","vector":[{}],"k":3,"epsilon":0.2,"delta":0.2}}"#,
+            q.join(",")
+        );
+        assert_eq!(handle_line(&line, &coord).get("ok").unwrap().as_bool(), Some(true));
+        let resp = handle_line(r#"{"op":"trace","limit":4}"#, &coord);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        let Json::Arr(traces) = resp.get("traces").unwrap() else {
+            panic!("traces not an array");
+        };
+        assert_eq!(traces.len(), 1);
+        let t = &traces[0];
+        assert_eq!(t.get("kind").unwrap().as_str(), Some("bounded_me"));
+        assert_eq!(t.get("k").unwrap().as_usize(), Some(3));
+        let Json::Arr(spans) = t.get("spans").unwrap() else {
+            panic!("spans not an array");
+        };
+        assert!(!spans.is_empty());
     }
 
     #[test]

@@ -88,6 +88,31 @@ impl AtomicDurHistogram {
     }
 }
 
+/// Per-shard counters: dispatch / hedge / merge attribution plus the
+/// reactor-side backlog gauge, so shard skew (a slow or hot shard) is
+/// visible instead of averaged away in the global snapshot.
+struct ShardStats {
+    dispatches: AtomicU64,
+    hedges_fired: AtomicU64,
+    hedges_won: AtomicU64,
+    merges: AtomicU64,
+    merge_nanos: AtomicU64,
+    queue_depth: AtomicU64,
+}
+
+impl ShardStats {
+    fn new() -> Self {
+        Self {
+            dispatches: AtomicU64::new(0),
+            hedges_fired: AtomicU64::new(0),
+            hedges_won: AtomicU64::new(0),
+            merges: AtomicU64::new(0),
+            merge_nanos: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+        }
+    }
+}
+
 /// Shared metrics sink for the coordinator threads. All-atomic; see the
 /// module docs for the relaxed snapshot contract.
 pub struct MetricsRegistry {
@@ -104,6 +129,26 @@ pub struct MetricsRegistry {
     shed_superseded: AtomicU64,
     queue_wait: AtomicDurHistogram,
     service: AtomicDurHistogram,
+    shards: Box<[ShardStats]>,
+}
+
+/// A point-in-time copy of one shard's counters.
+#[derive(Clone, Debug)]
+pub struct ShardSnapshot {
+    /// Shard index.
+    pub shard: usize,
+    /// Shard batches dispatched to this shard's workers.
+    pub dispatches: u64,
+    /// Straggler hedges fired against this shard.
+    pub hedges_fired: u64,
+    /// Hedges that beat this shard's original dispatch.
+    pub hedges_won: u64,
+    /// Dispatch completions merged from this shard.
+    pub merges: u64,
+    /// Mean dispatch→completion latency, seconds.
+    pub mean_merge_s: f64,
+    /// Reactor backlog depth at snapshot time (gauge).
+    pub queue_depth: u64,
 }
 
 /// A point-in-time copy of the registry.
@@ -143,6 +188,15 @@ pub struct MetricsSnapshot {
     /// been superseded by a flip **and** their deadline had expired —
     /// the stale-and-late subset of `shed` (also counted there).
     pub shed_superseded: u64,
+    /// Total items across all formed batches (`mean_batch_size`'s
+    /// numerator, exposed so dashboards need no derived math).
+    pub batch_items: u64,
+    /// Hedges that fired but lost the race (`hedge_fired − hedge_won`,
+    /// saturating): the duplicated work that bought no latency.
+    pub hedge_lost: u64,
+    /// Per-shard breakdown (one entry per shard; S = 1 deployments have
+    /// exactly one, fed by the direct-worker path's shard 0).
+    pub shards: Vec<ShardSnapshot>,
 }
 
 impl Default for MetricsRegistry {
@@ -152,8 +206,15 @@ impl Default for MetricsRegistry {
 }
 
 impl MetricsRegistry {
-    /// Fresh registry.
+    /// Fresh registry with one shard slot.
     pub fn new() -> Self {
+        Self::with_shards(1)
+    }
+
+    /// Fresh registry with `n_shards` per-shard counter slots.
+    pub fn with_shards(n_shards: usize) -> Self {
+        let shards: Vec<ShardStats> =
+            (0..n_shards.max(1)).map(|_| ShardStats::new()).collect();
         Self {
             queries: AtomicU64::new(0),
             batches: AtomicU64::new(0),
@@ -168,6 +229,7 @@ impl MetricsRegistry {
             shed_superseded: AtomicU64::new(0),
             queue_wait: AtomicDurHistogram::new(),
             service: AtomicDurHistogram::new(),
+            shards: shards.into_boxed_slice(),
         }
     }
 
@@ -190,14 +252,45 @@ impl MetricsRegistry {
         self.batches.fetch_add(1, Relaxed);
     }
 
-    /// Record a straggler hedge dispatch.
-    pub fn record_hedge_fired(&self) {
+    /// Record a straggler hedge dispatch against `shard`.
+    pub fn record_hedge_fired(&self, shard: usize) {
         self.hedge_fired.fetch_add(1, Relaxed);
+        if let Some(s) = self.shards.get(shard) {
+            s.hedges_fired.fetch_add(1, Relaxed);
+        }
     }
 
-    /// Record a hedge completing before its straggling original.
-    pub fn record_hedge_won(&self) {
+    /// Record a hedge completing before its straggling original on
+    /// `shard`.
+    pub fn record_hedge_won(&self, shard: usize) {
         self.hedge_won.fetch_add(1, Relaxed);
+        if let Some(s) = self.shards.get(shard) {
+            s.hedges_won.fetch_add(1, Relaxed);
+        }
+    }
+
+    /// Record a shard-batch dispatch to `shard`'s workers.
+    pub fn record_dispatch(&self, shard: usize) {
+        if let Some(s) = self.shards.get(shard) {
+            s.dispatches.fetch_add(1, Relaxed);
+        }
+    }
+
+    /// Record one dispatch completion merged from `shard`, with its
+    /// dispatch→completion latency.
+    pub fn record_merge(&self, shard: usize, latency: Duration) {
+        if let Some(s) = self.shards.get(shard) {
+            s.merges.fetch_add(1, Relaxed);
+            s.merge_nanos.fetch_add(latency.as_nanos() as u64, Relaxed);
+        }
+    }
+
+    /// Set `shard`'s backlog-depth gauge (reactor-side batches waiting
+    /// for a worker slot).
+    pub fn set_queue_depth(&self, shard: usize, depth: usize) {
+        if let Some(s) = self.shards.get(shard) {
+            s.queue_depth.store(depth as u64, Relaxed);
+        }
     }
 
     /// Record a query answered on the S = 1 fast path.
@@ -221,6 +314,29 @@ impl MetricsRegistry {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let batches = self.batches.load(Relaxed);
         let batch_items = self.batch_items.load(Relaxed);
+        let hedge_fired = self.hedge_fired.load(Relaxed);
+        let hedge_won = self.hedge_won.load(Relaxed);
+        let shards = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let merges = s.merges.load(Relaxed);
+                ShardSnapshot {
+                    shard: i,
+                    dispatches: s.dispatches.load(Relaxed),
+                    hedges_fired: s.hedges_fired.load(Relaxed),
+                    hedges_won: s.hedges_won.load(Relaxed),
+                    merges,
+                    mean_merge_s: if merges == 0 {
+                        0.0
+                    } else {
+                        s.merge_nanos.load(Relaxed) as f64 * 1e-9 / merges as f64
+                    },
+                    queue_depth: s.queue_depth.load(Relaxed),
+                }
+            })
+            .collect();
         MetricsSnapshot {
             queries: self.queries.load(Relaxed),
             batches,
@@ -242,13 +358,130 @@ impl MetricsRegistry {
             ),
             mean_service: self.service.mean(),
             shed: self.shed.load(Relaxed),
-            hedge_fired: self.hedge_fired.load(Relaxed),
-            hedge_won: self.hedge_won.load(Relaxed),
+            hedge_fired,
+            hedge_won,
             fast_path: self.fast_path.load(Relaxed),
             mutations: self.mutations.load(Relaxed),
             mutation_rows: self.mutation_rows.load(Relaxed),
             shed_superseded: self.shed_superseded.load(Relaxed),
+            batch_items,
+            hedge_lost: hedge_fired.saturating_sub(hedge_won),
+            shards,
         }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Render the snapshot as Prometheus text exposition (version
+    /// 0.0.4): every global counter/gauge plus the per-shard breakdown
+    /// as `{shard="i"}`-labeled series. `generation` and
+    /// `generations_alive` come from the coordinator (they live outside
+    /// the registry).
+    pub fn to_prometheus(&self, generation: u64, generations_alive: usize) -> String {
+        use crate::metrics::prom::PromWriter;
+        let mut w = PromWriter::new();
+        let counters: [(&str, &str, u64); 12] = [
+            ("pallas_queries_total", "Queries served.", self.queries),
+            ("pallas_batches_total", "Batches formed.", self.batches),
+            ("pallas_batch_items_total", "Items across all formed batches.", self.batch_items),
+            ("pallas_flops_total", "Flops spent on the query path.", self.flops),
+            ("pallas_shed_total", "Requests shed for missing their deadline.", self.shed),
+            (
+                "pallas_shed_superseded_total",
+                "Sheds whose pinned generation was superseded.",
+                self.shed_superseded,
+            ),
+            ("pallas_hedge_fired_total", "Straggler hedges dispatched.", self.hedge_fired),
+            ("pallas_hedge_won_total", "Hedges that beat their original.", self.hedge_won),
+            (
+                "pallas_hedge_lost_total",
+                "Hedges that fired but lost the race (duplicated work).",
+                self.hedge_lost,
+            ),
+            ("pallas_fast_path_total", "Queries answered on the S=1 fast path.", self.fast_path),
+            ("pallas_mutations_total", "Generation flips applied.", self.mutations),
+            ("pallas_mutation_rows_total", "Delta rows across all flips.", self.mutation_rows),
+        ];
+        for (name, help, v) in counters {
+            w.header(name, help, "counter");
+            w.sample(name, &[], v as f64);
+        }
+        w.header("pallas_generation", "Current dataset generation id.", "gauge");
+        w.sample("pallas_generation", &[], generation as f64);
+        w.header("pallas_generations_alive", "Dataset generations not yet reclaimed.", "gauge");
+        w.sample("pallas_generations_alive", &[], generations_alive as f64);
+        w.header("pallas_mean_batch_size", "Mean items per batch.", "gauge");
+        w.sample("pallas_mean_batch_size", &[], self.mean_batch_size);
+        for (name, help, (p50, p90, p99), mean) in [
+            (
+                "pallas_service_seconds",
+                "Service time quantiles (pickup to reply).",
+                self.service,
+                Some(self.mean_service),
+            ),
+            (
+                "pallas_queue_wait_seconds",
+                "Queue wait quantiles (submit to pickup).",
+                self.queue_wait,
+                None,
+            ),
+        ] {
+            w.header(name, help, "summary");
+            w.sample(name, &[("quantile", "0.5")], p50);
+            w.sample(name, &[("quantile", "0.9")], p90);
+            w.sample(name, &[("quantile", "0.99")], p99);
+            if let Some(mean) = mean {
+                let mean_name = format!("{name}_mean");
+                w.header(&mean_name, "Mean of the summary above.", "gauge");
+                w.sample(&mean_name, &[], mean);
+            }
+        }
+        let shard_counters: [(&str, &str, fn(&ShardSnapshot) -> f64, &str); 6] = [
+            (
+                "pallas_shard_dispatches_total",
+                "Shard batches dispatched, per shard.",
+                |s| s.dispatches as f64,
+                "counter",
+            ),
+            (
+                "pallas_shard_hedges_fired_total",
+                "Straggler hedges fired, per shard.",
+                |s| s.hedges_fired as f64,
+                "counter",
+            ),
+            (
+                "pallas_shard_hedges_won_total",
+                "Hedges that beat the original, per shard.",
+                |s| s.hedges_won as f64,
+                "counter",
+            ),
+            (
+                "pallas_shard_merges_total",
+                "Dispatch completions merged, per shard.",
+                |s| s.merges as f64,
+                "counter",
+            ),
+            (
+                "pallas_shard_merge_seconds_mean",
+                "Mean dispatch-to-completion latency, per shard.",
+                |s| s.mean_merge_s,
+                "gauge",
+            ),
+            (
+                "pallas_shard_queue_depth",
+                "Reactor backlog depth, per shard.",
+                |s| s.queue_depth as f64,
+                "gauge",
+            ),
+        ];
+        for (name, help, get, kind) in shard_counters {
+            w.header(name, help, kind);
+            for s in &self.shards {
+                let label = s.shard.to_string();
+                w.sample(name, &[("shard", &label)], get(s));
+            }
+        }
+        w.finish()
     }
 }
 
@@ -299,13 +532,79 @@ mod tests {
 
     #[test]
     fn hedge_and_fast_path_counters() {
-        let m = MetricsRegistry::new();
-        m.record_hedge_fired();
-        m.record_hedge_fired();
-        m.record_hedge_won();
+        let m = MetricsRegistry::with_shards(2);
+        m.record_hedge_fired(0);
+        m.record_hedge_fired(1);
+        m.record_hedge_won(1);
         m.record_fast_path();
         let s = m.snapshot();
         assert_eq!((s.hedge_fired, s.hedge_won, s.fast_path), (2, 1, 1));
+        assert_eq!(s.hedge_lost, 1);
+        assert_eq!(s.shards.len(), 2);
+        assert_eq!((s.shards[0].hedges_fired, s.shards[0].hedges_won), (1, 0));
+        assert_eq!((s.shards[1].hedges_fired, s.shards[1].hedges_won), (1, 1));
+    }
+
+    #[test]
+    fn per_shard_dispatch_merge_and_depth() {
+        let m = MetricsRegistry::with_shards(3);
+        m.record_dispatch(0);
+        m.record_dispatch(0);
+        m.record_dispatch(2);
+        m.record_merge(0, Duration::from_millis(2));
+        m.record_merge(0, Duration::from_millis(4));
+        m.set_queue_depth(2, 5);
+        // Out-of-range shard ids are ignored, not panics (the direct
+        // path always records against shard 0).
+        m.record_dispatch(99);
+        m.record_hedge_fired(99);
+        let s = m.snapshot();
+        assert_eq!(s.shards[0].dispatches, 2);
+        assert_eq!(s.shards[0].merges, 2);
+        assert!((s.shards[0].mean_merge_s - 3e-3).abs() < 1e-4);
+        assert_eq!(s.shards[1].dispatches, 0);
+        assert_eq!(s.shards[2].dispatches, 1);
+        assert_eq!(s.shards[2].queue_depth, 5);
+        // The global hedge counter still saw the out-of-range fire.
+        assert_eq!(s.hedge_fired, 1);
+    }
+
+    #[test]
+    fn batch_items_exposed() {
+        let m = MetricsRegistry::new();
+        m.record_batch(4);
+        m.record_batch(8);
+        let s = m.snapshot();
+        assert_eq!(s.batch_items, 12);
+        assert_eq!(s.shards.len(), 1);
+    }
+
+    #[test]
+    fn prometheus_exposition_has_global_and_per_shard_series() {
+        let m = MetricsRegistry::with_shards(2);
+        m.record_batch(3);
+        m.record_query(Duration::from_micros(100), Duration::from_millis(1), 500);
+        m.record_dispatch(1);
+        m.record_hedge_fired(1);
+        m.record_merge(1, Duration::from_millis(2));
+        m.set_queue_depth(0, 4);
+        let text = m.snapshot().to_prometheus(7, 2);
+        for needle in [
+            "# TYPE pallas_queries_total counter\n",
+            "pallas_queries_total 1\n",
+            "pallas_batch_items_total 3\n",
+            "pallas_hedge_lost_total 1\n",
+            "pallas_generation 7\n",
+            "pallas_generations_alive 2\n",
+            "pallas_service_seconds{quantile=\"0.99\"}",
+            "pallas_shard_dispatches_total{shard=\"0\"} 0\n",
+            "pallas_shard_dispatches_total{shard=\"1\"} 1\n",
+            "pallas_shard_hedges_fired_total{shard=\"1\"} 1\n",
+            "pallas_shard_merges_total{shard=\"1\"} 1\n",
+            "pallas_shard_queue_depth{shard=\"0\"} 4\n",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
     }
 
     #[test]

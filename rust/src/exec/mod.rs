@@ -47,6 +47,7 @@ pub mod shard;
 
 use crate::bandit::{m_bounded, BanditScratch, PullOrder, PullScratch};
 use crate::data::quant::Storage;
+use crate::trace::TraceStage;
 
 /// Reusable scoring scratch: the exact-score slab (one `f32` per
 /// row × query).
@@ -82,6 +83,11 @@ pub struct QueryContext {
     pub bandit: BanditScratch,
     /// Exact-scoring slab + candidate gather buffer.
     pub rank: RankScratch,
+    /// Flight-recorder staging ([`crate::trace::TraceStage`]): while
+    /// armed, the BOUNDEDME index stages one
+    /// [`crate::trace::QueryExec`] per executed query. Disarmed by
+    /// default — one bool check per query, nothing else.
+    pub trace: TraceStage,
 }
 
 impl QueryContext {

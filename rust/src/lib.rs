@@ -37,7 +37,8 @@
 //! | [`algos`]  | MIPS indexes: naive, BoundedME (incl. the two-tier sample-then-confirm compressed path), Greedy-, LSH-, PCA-, RPT-MIPS — with shard-aware batch entry points |
 //! | [`exec`]   | zero-allocation execution core: `QueryContext` arena + `QueryPlan` (incl. the [`data::quant::Storage`] axis); [`exec::shard`] fan-out/merge layer |
 //! | [`data`]   | dataset substrate: synthetic, adversarial, ALS matrix factorization; [`data::shard`] row sharding; [`data::quant`] mixed-precision compressed dataset tiers; [`data::generation`] copy-on-write dataset generations for live mutation |
-//! | [`metrics`] | precision@K, flop accounting, latency sketches |
+//! | [`metrics`] | precision@K, flop accounting, latency sketches; [`metrics::prom`] Prometheus text-exposition writer |
+//! | [`trace`]  | flight recorder: per-query [`trace::QueryTrace`] span trees, sampling + slow-query retention, lossy lock-free rings |
 //! | [`runtime`] | scoring engines; PJRT/XLA artifact execution behind the `pjrt` feature |
 //! | [`coordinator`] | serving layer: plan-aware dynamic batcher, event-driven reactor (shard fan-out, completion-event merge, straggler hedging), S = 1 fast path, shard-pinned worker pool |
 //! | [`experiments`] | harness regenerating every paper table/figure |
@@ -157,6 +158,36 @@
 //! generation's materialized snapshot, bracketed by a
 //! generation-witness bound.
 //!
+//! ## Observability
+//!
+//! Process-wide aggregates can't explain one slow query of an
+//! *adaptive* algorithm, so the serving layer carries a flight
+//! recorder ([`trace`]). Enabled via
+//! [`coordinator::CoordinatorConfig::trace`] or the `RUST_PALLAS_TRACE`
+//! env pin (mirroring the forced-scalar/no-compact hatches), it
+//! records a [`trace::QueryTrace`] span tree per query — queue wait,
+//! resolved plan (kind / k / ε / δ / storage tier / generation pin),
+//! per-shard dispatch→merge windows with hedge fire/win attribution,
+//! and the BOUNDEDME per-round schedule
+//! ([`bandit::RoundTrace`], incl. wall time, survivors, pull targets,
+//! panel compaction, and the quant ε-bias fallback) — into lossy
+//! lock-free per-thread rings ([`sync::SlotRing`]). Completed traces
+//! are **sampled** (`sample_every`) and any query at or above
+//! [`trace::TraceConfig::slow_threshold`] is retained unconditionally
+//! plus warn-logged with its span breakdown. When disabled (the
+//! default), the hot path spends zero allocations and zero atomics on
+//! tracing — the decision is one bool resolved at coordinator
+//! construction. Exposition: the server `trace` op returns the last N
+//! traces as JSON; the `metrics` op carries the global counters
+//! (now incl. `batch_items`, `hedge_lost`, `generations_alive`); and
+//! the `metrics_prom` op renders Prometheus text exposition with a
+//! **per-shard** breakdown (queue depth, dispatches, hedges, merge
+//! latency) next to the global snapshot. Tracing on vs off is
+//! bit-identity-tested (`tests/trace_observability.rs`) and a CI leg
+//! runs the whole suite under `RUST_PALLAS_TRACE=1`; the hotpath
+//! bench's `query/ctx_reuse_traced` row keeps the tracing tax on the
+//! bench trajectory.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -210,6 +241,7 @@ pub mod logkit;
 pub mod metrics;
 pub mod runtime;
 pub mod sync;
+pub mod trace;
 
 /// Crate-wide result alias.
 pub type Result<T> = errors::Result<T>;

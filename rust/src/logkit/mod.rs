@@ -3,9 +3,11 @@
 //!
 //! Provides the [`error!`]/[`warn!`]/[`info!`]/[`debug!`]/[`trace!`]
 //! macros the serving layer uses. The level comes from `RUST_LOG`
-//! (`error|warn|info|debug|trace`, default `info`) on first use, or
-//! explicitly via [`set_level`]. Filtering is one relaxed atomic load,
-//! so disabled call sites cost nothing measurable.
+//! (`off|error|warn|info|debug|trace`, default `info`; an unrecognized
+//! value warns once to stderr and falls back to `info`) on first use,
+//! or explicitly via [`set_level`] / [`set_off`]. Filtering is one
+//! relaxed atomic load, so disabled call sites cost nothing
+//! measurable.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
@@ -37,27 +39,57 @@ impl Level {
     }
 }
 
-/// 0 = uninitialized (read RUST_LOG lazily).
+/// Stored filter, shifted by one so 0 can stay "uninitialized":
+/// 0 = read `RUST_LOG` lazily, [`FILTER_OFF`] = emit nothing,
+/// otherwise `Level as u8 + 1`.
 static MAX_LEVEL: AtomicU8 = AtomicU8::new(0);
 
-fn level_from_env() -> Level {
+/// The `RUST_LOG=off` filter value (below even `error`).
+const FILTER_OFF: u8 = 1;
+
+fn filter_from_env() -> u8 {
     match std::env::var("RUST_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("warn") => Level::Warn,
-        Ok("debug") => Level::Debug,
-        Ok("trace") => Level::Trace,
-        _ => Level::Info,
+        Ok("off") => FILTER_OFF,
+        Ok("error") => Level::Error as u8 + 1,
+        Ok("warn") => Level::Warn as u8 + 1,
+        Ok("info") => Level::Info as u8 + 1,
+        Ok("debug") => Level::Debug as u8 + 1,
+        Ok("trace") => Level::Trace as u8 + 1,
+        Ok("") | Err(_) => Level::Info as u8 + 1,
+        Ok(other) => {
+            warn_unrecognized(other);
+            Level::Info as u8 + 1
+        }
     }
+}
+
+/// One-time stderr warning for an unrecognized `RUST_LOG` value — the
+/// old behavior silently defaulted to `info`, which made typos
+/// (`RUST_LOG=verbose`) indistinguishable from intent.
+fn warn_unrecognized(value: &str) {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        eprintln!(
+            "[{:<5}] RUST_LOG={value:?} is not recognized \
+             (expected off|error|warn|info|debug|trace); defaulting to info",
+            "WARN"
+        );
+    });
 }
 
 /// Set the maximum emitted level explicitly.
 pub fn set_level(level: Level) {
-    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+    MAX_LEVEL.store(level as u8 + 1, Ordering::Relaxed);
+}
+
+/// Disable all logging (the explicit form of `RUST_LOG=off`).
+pub fn set_off() {
+    MAX_LEVEL.store(FILTER_OFF, Ordering::Relaxed);
 }
 
 /// Initialize from `RUST_LOG` (also happens lazily on first log call).
 pub fn init_from_env() {
-    set_level(level_from_env());
+    MAX_LEVEL.store(filter_from_env(), Ordering::Relaxed);
 }
 
 /// True when messages at `level` should be emitted.
@@ -67,7 +99,7 @@ pub fn enabled(level: Level) -> bool {
         init_from_env();
         max = MAX_LEVEL.load(Ordering::Relaxed);
     }
-    (level as u8) <= max
+    (level as u8) < max
 }
 
 /// Emit one record (used by the macros; call those instead).
@@ -130,8 +162,11 @@ mod tests {
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
+        set_off();
+        assert!(!enabled(Level::Error));
         set_level(Level::Info);
         assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
     }
 
     #[test]

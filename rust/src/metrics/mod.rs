@@ -10,6 +10,8 @@
 //! * **online speedup** — cost(naive) / cost(algo), measured both in
 //!   flops (the paper's pull-count currency) and wall-clock.
 
+pub mod prom;
+
 use crate::linalg::{dot, stats::LogHistogram, Matrix};
 
 /// Precision@K: |truth ∩ returned| / |truth|. Returns 1.0 for empty

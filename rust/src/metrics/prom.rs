@@ -1,0 +1,104 @@
+//! Minimal Prometheus text-exposition (version 0.0.4) writer — the
+//! offline counterpart of a `prometheus` client crate, sized to what
+//! the coordinator's `metrics_prom` server op needs: `# HELP`/`# TYPE`
+//! headers, unlabeled samples, and label sets (the per-shard
+//! breakdown).
+//!
+//! Values go through `f64`'s `Display`, which prints integral values
+//! without a fractional part (`123`, not `123.0`) — both forms are
+//! valid exposition floats.
+
+/// Incremental text-exposition builder.
+pub struct PromWriter {
+    out: String,
+}
+
+impl Default for PromWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PromWriter {
+    /// Empty exposition.
+    pub fn new() -> Self {
+        PromWriter { out: String::new() }
+    }
+
+    /// Emit the `# HELP` / `# TYPE` header for a metric family.
+    /// `kind` is one of `counter`, `gauge`, `summary`.
+    pub fn header(&mut self, name: &str, help: &str, kind: &str) {
+        self.out.push_str("# HELP ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(help);
+        self.out.push_str("\n# TYPE ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(kind);
+        self.out.push('\n');
+    }
+
+    /// Emit one sample line. `labels` render as
+    /// `name{k1="v1",k2="v2"} value`; empty renders `name value`.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                for c in v.chars() {
+                    // Label-value escapes per the exposition format.
+                    match c {
+                        '\\' => self.out.push_str("\\\\"),
+                        '"' => self.out.push_str("\\\""),
+                        '\n' => self.out.push_str("\\n"),
+                        c => self.out.push(c),
+                    }
+                }
+                self.out.push('"');
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(&value.to_string());
+        self.out.push('\n');
+    }
+
+    /// The finished exposition body.
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_headers_and_samples() {
+        let mut w = PromWriter::new();
+        w.header("pallas_queries_total", "Queries served.", "counter");
+        w.sample("pallas_queries_total", &[], 42.0);
+        w.sample("pallas_shard_dispatches_total", &[("shard", "0")], 7.0);
+        let text = w.finish();
+        assert!(text.contains("# HELP pallas_queries_total Queries served.\n"));
+        assert!(text.contains("# TYPE pallas_queries_total counter\n"));
+        assert!(text.contains("\npallas_queries_total 42\n"));
+        assert!(text.contains("pallas_shard_dispatches_total{shard=\"0\"} 7\n"));
+    }
+
+    #[test]
+    fn integral_floats_print_clean_and_labels_escape() {
+        let mut w = PromWriter::new();
+        w.sample("m", &[("q", "0.99")], 0.125);
+        w.sample("weird", &[("v", "a\"b\\c\nd")], 1.0);
+        let text = w.finish();
+        assert!(text.contains("m{q=\"0.99\"} 0.125\n"));
+        assert!(text.contains("weird{v=\"a\\\"b\\\\c\\nd\"} 1\n"));
+    }
+}

@@ -47,10 +47,16 @@
 //! `Arc` cloning, reclamation is the last clone dropping, and the gauge
 //! makes "how many generations are still alive" observable with relaxed
 //! atomics only.
+//!
+//! The [`ring`] submodule adds the flight recorder's lossy lock-free
+//! slot ring ([`SlotRing`]): writers overwrite in submission order and
+//! never block, readers snapshot without consuming.
 
 pub mod epoch;
+pub mod ring;
 
 pub use epoch::{EpochGauge, EpochGuard};
+pub use ring::SlotRing;
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};

@@ -1,0 +1,194 @@
+//! Lock-free flight-recorder ring: a fixed-capacity slot array that
+//! producers overwrite in submission order and readers snapshot without
+//! consuming.
+//!
+//! The discipline mirrors `coordinator/stats.rs`: every shared word is
+//! an atomic, there are no locks, and contention degrades gracefully
+//! instead of blocking. Each slot carries a tiny state machine
+//! (`EMPTY → BUSY → FULL`); a writer claims the next slot by CAS,
+//! moves the value in, and releases it `FULL`. If the claim fails —
+//! a reader is mid-snapshot on exactly that slot — the write is
+//! **dropped** (and counted) rather than waited on: a flight recorder
+//! must never stall the serving path it observes.
+//!
+//! Readers ([`SlotRing::snapshot_into`]) clone each `FULL` slot and put
+//! it back, so the recorder keeps its history across server `trace`
+//! calls; entries are only ever displaced by newer traces lapping the
+//! ring.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+const EMPTY: u8 = 0;
+const BUSY: u8 = 1;
+const FULL: u8 = 2;
+
+struct Slot<T> {
+    state: AtomicU8,
+    value: UnsafeCell<Option<T>>,
+}
+
+/// Lossy lock-free ring of the most recent ~`capacity` published
+/// values. Writers never block; readers never consume.
+pub struct SlotRing<T> {
+    slots: Box<[Slot<T>]>,
+    head: AtomicU64,
+    dropped: AtomicU64,
+}
+
+// The UnsafeCell is only dereferenced while its slot's state is BUSY,
+// and BUSY is only entered through a successful CAS — exactly one
+// thread holds a slot at a time, so sharing the ring is sound whenever
+// the payload itself can move between threads.
+unsafe impl<T: Send> Send for SlotRing<T> {}
+unsafe impl<T: Send> Sync for SlotRing<T> {}
+
+impl<T: Clone> SlotRing<T> {
+    /// Ring with room for `capacity` entries (at least 1).
+    pub fn new(capacity: usize) -> Self {
+        let slots: Vec<Slot<T>> = (0..capacity.max(1))
+            .map(|_| Slot { state: AtomicU8::new(EMPTY), value: UnsafeCell::new(None) })
+            .collect();
+        SlotRing {
+            slots: slots.into_boxed_slice(),
+            head: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Slot count.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Writes abandoned because a reader held the target slot.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Publish `value` into the next slot, overwriting whatever the
+    /// ring lapped. Obstruction-free: if the slot is held by a
+    /// concurrent snapshot, the value is dropped and counted instead
+    /// of waiting.
+    pub fn push(&self, value: T) {
+        let i = (self.head.fetch_add(1, Ordering::Relaxed) as usize) % self.slots.len();
+        let slot = &self.slots[i];
+        let seen = slot.state.load(Ordering::Relaxed);
+        if seen == BUSY
+            || slot
+                .state
+                .compare_exchange(seen, BUSY, Ordering::Acquire, Ordering::Relaxed)
+                .is_err()
+        {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        // SAFETY: the CAS above made this thread the unique holder of
+        // the BUSY slot.
+        unsafe { *slot.value.get() = Some(value) };
+        slot.state.store(FULL, Ordering::Release);
+    }
+
+    /// Clone every published entry into `out` without consuming it.
+    /// Slots a writer holds at this instant are skipped (their next
+    /// value shows up on the following snapshot).
+    pub fn snapshot_into(&self, out: &mut Vec<T>) {
+        for slot in self.slots.iter() {
+            if slot
+                .state
+                .compare_exchange(FULL, BUSY, Ordering::Acquire, Ordering::Relaxed)
+                .is_err()
+            {
+                continue;
+            }
+            // SAFETY: the CAS above made this thread the unique holder
+            // of the BUSY slot.
+            let v = unsafe { (*slot.value.get()).clone() };
+            slot.state.store(FULL, Ordering::Release);
+            if let Some(v) = v {
+                out.push(v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn keeps_latest_on_wraparound() {
+        let ring = SlotRing::new(4);
+        for i in 0..10u64 {
+            ring.push(i);
+        }
+        let mut got = Vec::new();
+        ring.snapshot_into(&mut got);
+        got.sort_unstable();
+        assert_eq!(got, vec![6, 7, 8, 9]);
+        assert_eq!(ring.dropped(), 0);
+    }
+
+    #[test]
+    fn snapshot_does_not_consume() {
+        let ring = SlotRing::new(8);
+        ring.push(41u64);
+        ring.push(42);
+        for _ in 0..3 {
+            let mut got = Vec::new();
+            ring.snapshot_into(&mut got);
+            got.sort_unstable();
+            assert_eq!(got, vec![41, 42]);
+        }
+    }
+
+    #[test]
+    fn capacity_floor_is_one() {
+        let ring = SlotRing::new(0);
+        assert_eq!(ring.capacity(), 1);
+        ring.push(7u32);
+        let mut got = Vec::new();
+        ring.snapshot_into(&mut got);
+        assert_eq!(got, vec![7]);
+    }
+
+    #[test]
+    fn concurrent_writers_and_reader_stay_sound() {
+        let ring = Arc::new(SlotRing::new(16));
+        let mut hs = Vec::new();
+        for t in 0..4u64 {
+            let ring = Arc::clone(&ring);
+            hs.push(std::thread::spawn(move || {
+                for i in 0..2000u64 {
+                    ring.push(t * 1_000_000 + i);
+                }
+            }));
+        }
+        let reader = {
+            let ring = Arc::clone(&ring);
+            std::thread::spawn(move || {
+                let mut seen = 0usize;
+                for _ in 0..200 {
+                    let mut got = Vec::new();
+                    ring.snapshot_into(&mut got);
+                    assert!(got.len() <= ring.capacity());
+                    seen += got.len();
+                }
+                seen
+            })
+        };
+        for h in hs {
+            h.join().unwrap();
+        }
+        reader.join().unwrap();
+        let mut fin = Vec::new();
+        ring.snapshot_into(&mut fin);
+        assert!(!fin.is_empty() && fin.len() <= 16);
+        // Everything surviving must be a value some writer actually
+        // produced.
+        for v in fin {
+            assert!(v % 1_000_000 < 2000 && v / 1_000_000 < 4);
+        }
+    }
+}

@@ -1,0 +1,287 @@
+//! Flight-recorder battery: tracing must be a pure observer.
+//!
+//! Four groups:
+//!
+//! 1. **Bit-identity** — a traced coordinator and an untraced one serve
+//!    the same deterministic request mix and must return byte-identical
+//!    answers (indices, score bits, flops), across shard counts and on
+//!    both the direct fast path and the reactor merge path. Tracing
+//!    reads clocks and copies metadata; it must never perturb the
+//!    arithmetic.
+//! 2. **Ring wraparound** — with a tiny per-thread ring, a long query
+//!    stream keeps only the newest `ring_capacity` traces and the
+//!    published counter still counts every query.
+//! 3. **Slow-query retention** — an injected straggler pushes service
+//!    time over `slow_threshold`; those traces are retained (and
+//!    warn-logged) even when sampling would otherwise discard them.
+//! 4. **Span accounting (acceptance)** — for a hedged, sharded
+//!    BOUNDEDME run, every span of every trace ends within the
+//!    recorded `queue_wait + service` window, and each shard's round
+//!    spans tile within its bandit span.
+//!
+//! Set `RUST_PALLAS_STRESS=1` to elevate stream lengths (the CI trace
+//! leg runs tier-1 with `RUST_PALLAS_TRACE=1`, exercising the traced
+//! code path under every existing battery as well).
+
+use bandit_mips::bandit::PullOrder;
+use bandit_mips::coordinator::{
+    Backend, Coordinator, CoordinatorConfig, QueryRequest, QueryResponse,
+};
+use bandit_mips::data::shard::ShardSpec;
+use bandit_mips::data::synthetic::gaussian_dataset;
+use bandit_mips::trace::{trace_env_requested, TraceConfig};
+use std::time::Duration;
+
+/// Burst multiplier: 1 normally, 8 under `RUST_PALLAS_STRESS=1`.
+fn stress() -> u64 {
+    match std::env::var("RUST_PALLAS_STRESS") {
+        Ok(v) if v == "1" => 8,
+        _ => 1,
+    }
+}
+
+fn cfg(workers: usize, shard: ShardSpec) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers,
+        max_batch: 8,
+        batch_timeout: Duration::from_millis(2),
+        queue_capacity: 4096,
+        backend: Backend::Native,
+        pull_order: PullOrder::BlockShuffled(16),
+        shard,
+        ..Default::default()
+    }
+}
+
+/// Deterministic mix of exact and knob-uniform BOUNDEDME queries, all
+/// on the default seed so grouping and hedging cannot change bytes.
+fn request_mix(ds: &bandit_mips::data::Dataset, n: u64) -> Vec<QueryRequest> {
+    (0..n)
+        .map(|i| {
+            let q = ds.sample_query(i);
+            if i % 2 == 0 {
+                QueryRequest::exact(q, 5)
+            } else {
+                QueryRequest::bounded_me(q, 4, 0.15, 0.1)
+            }
+        })
+        .collect()
+}
+
+fn run_all(c: &Coordinator, reqs: &[QueryRequest]) -> Vec<QueryResponse> {
+    let handles: Vec<_> =
+        reqs.iter().map(|r| c.submit(r.clone()).expect("submit")).collect();
+    handles.into_iter().map(|h| h.recv().expect("reply")).collect()
+}
+
+fn assert_bit_identical(a: &[QueryResponse], b: &[QueryResponse], label: &str) {
+    assert_eq!(a.len(), b.len());
+    for (i, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ra.indices, rb.indices, "{label}: query {i} indices");
+        assert_eq!(ra.scores.len(), rb.scores.len(), "{label}: query {i}");
+        for (sa, sb) in ra.scores.iter().zip(&rb.scores) {
+            assert_eq!(sa.to_bits(), sb.to_bits(), "{label}: query {i} score bits");
+        }
+        assert_eq!(ra.flops, rb.flops, "{label}: query {i} flops");
+    }
+}
+
+/// Group 1: the flight recorder is a pure observer. Traced and
+/// untraced coordinators over the same data and request stream return
+/// bit-identical answers on the direct path (S = 1) and the reactor
+/// merge path (S = 2, 3).
+#[test]
+fn tracing_on_vs_off_is_bit_identical() {
+    let ds = gaussian_dataset(180, 128, 77);
+    let n = 24 * stress();
+    let reqs = request_mix(&ds, n);
+
+    for shards in [1usize, 2, 3] {
+        let plain =
+            Coordinator::new(ds.vectors.clone(), cfg(2 * shards, ShardSpec::contiguous(shards)))
+                .unwrap();
+        let baseline = run_all(&plain, &reqs);
+        plain.shutdown();
+
+        let mut traced_cfg = cfg(2 * shards, ShardSpec::contiguous(shards));
+        traced_cfg.trace = TraceConfig { enabled: true, ..Default::default() };
+        let traced = Coordinator::new(ds.vectors.clone(), traced_cfg).unwrap();
+        let got = run_all(&traced, &reqs);
+        assert_bit_identical(&baseline, &got, &format!("S={shards} traced vs plain"));
+        assert!(
+            !traced.traces(usize::MAX).is_empty(),
+            "S={shards}: traced coordinator recorded nothing"
+        );
+        traced.shutdown();
+
+        // And the untraced coordinator must expose no traces at all —
+        // unless the `RUST_PALLAS_TRACE` pin is set (the CI trace leg),
+        // which deliberately traces every coordinator in the suite.
+        if !trace_env_requested() {
+            let plain2 = Coordinator::new(
+                ds.vectors.clone(),
+                cfg(2 * shards, ShardSpec::contiguous(shards)),
+            )
+            .unwrap();
+            run_all(&plain2, &reqs);
+            assert!(
+                plain2.traces(usize::MAX).is_empty(),
+                "S={shards}: untraced coord has traces"
+            );
+            plain2.shutdown();
+        }
+    }
+}
+
+/// Group 2: a tiny ring keeps only the newest traces. With
+/// `ring_capacity = 4` and a single recording thread, a long stream
+/// retains at most 4 traces, they are the most recent ones by `seq`,
+/// and `collect` returns them newest-first.
+#[test]
+fn ring_wraparound_retains_newest() {
+    let ds = gaussian_dataset(120, 64, 31);
+    let n = 32 * stress();
+    let reqs = request_mix(&ds, n);
+
+    let mut config = cfg(2, ShardSpec::contiguous(2));
+    config.trace = TraceConfig { enabled: true, ring_capacity: 4, ..Default::default() };
+    let coord = Coordinator::new(ds.vectors.clone(), config).unwrap();
+    // Sequential submission: each query fully completes (and publishes)
+    // before the next, so retained seqs are exactly the last 4.
+    for r in &reqs {
+        coord.submit(r.clone()).expect("submit").recv().expect("reply");
+    }
+    let traces = coord.traces(usize::MAX);
+    assert_eq!(traces.len(), 4, "ring of 4 retained {} traces", traces.len());
+    // The reactor publishes on one thread, so seqs are 0..n and the
+    // survivors are the newest 4, returned newest-first.
+    let seqs: Vec<u64> = traces.iter().map(|t| t.seq).collect();
+    assert_eq!(seqs, vec![n - 1, n - 2, n - 3, n - 4], "wraparound kept stale traces");
+    // `limit` truncates from the newest end.
+    assert_eq!(coord.traces(2).len(), 2);
+    assert_eq!(coord.traces(2)[0].seq, n - 1);
+    coord.shutdown();
+}
+
+/// Group 3: slow queries beat the sampler. `sample_every` is set high
+/// enough to discard everything in a short run, but an injected
+/// straggler pushes shard-0 service time over `slow_threshold`, so
+/// those traces are retained and flagged `slow`.
+#[test]
+fn slow_queries_are_always_retained() {
+    let ds = gaussian_dataset(120, 64, 43);
+    let reqs = request_mix(&ds, 8);
+
+    let mut config = cfg(4, ShardSpec::contiguous(2));
+    config.debug_slow_shard = Some((0, Duration::from_millis(5)));
+    config.trace = TraceConfig {
+        enabled: true,
+        sample_every: 1_000_000, // sampler alone would keep nothing
+        slow_threshold: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let coord = Coordinator::new(ds.vectors.clone(), config).unwrap();
+    for r in &reqs {
+        coord.submit(r.clone()).expect("submit").recv().expect("reply");
+    }
+    let traces = coord.traces(usize::MAX);
+    assert!(!traces.is_empty(), "straggler-delayed queries were not retained");
+    for t in &traces {
+        // seq 0 is also sampler-kept (0 % sample_every == 0); everything
+        // else present must be here because it crossed the threshold.
+        if t.seq != 0 {
+            assert!(t.slow, "retained trace seq={} is not slow", t.seq);
+        }
+        if t.slow {
+            assert!(
+                t.service_ns >= 1_000_000,
+                "slow trace seq={} has service_ns={} below the 1ms threshold",
+                t.seq,
+                t.service_ns
+            );
+        }
+    }
+    assert!(traces.iter().any(|t| t.slow), "no trace crossed the slow threshold");
+    coord.shutdown();
+}
+
+/// Group 4 (acceptance): span accounting for a hedged, sharded
+/// BOUNDEDME run. Every span of every trace must end within the
+/// trace's own `queue_wait + service` window (plus a small slack for
+/// the clock reads between span close and publish), and within each
+/// shard the round spans tile inside the bandit span.
+#[test]
+fn acceptance_hedged_sharded_spans_fit_service_window() {
+    let ds = gaussian_dataset(200, 128, 91);
+    let n = 12 * stress();
+
+    let mut config = cfg(4, ShardSpec::contiguous(2));
+    config.hedge_delay = Some(Duration::from_micros(300));
+    config.debug_slow_shard = Some((0, Duration::from_millis(3)));
+    config.trace = TraceConfig { enabled: true, ..Default::default() };
+    let coord = Coordinator::new(ds.vectors.clone(), config).unwrap();
+    for i in 0..n {
+        let q = ds.sample_query(i);
+        coord
+            .submit(QueryRequest::bounded_me(q, 4, 0.15, 0.1))
+            .expect("submit")
+            .recv()
+            .expect("reply");
+    }
+    let traces = coord.traces(usize::MAX);
+    assert!(!traces.is_empty(), "no traces recorded");
+    assert!(
+        traces.iter().any(|t| t.hedge_fired),
+        "3ms straggler under a 300µs hedge delay never fired a hedge"
+    );
+
+    const SLACK_NS: u64 = 2_000_000; // clock reads between span close and publish
+    for t in &traces {
+        assert_eq!(t.kind, "bounded_me");
+        assert_eq!(t.shards, 2);
+        let window = t.queue_wait_ns + t.service_ns + SLACK_NS;
+        assert!(!t.spans.is_empty(), "seq={}: empty span tree", t.seq);
+        for s in &t.spans {
+            assert!(s.end_ns >= s.start_ns, "seq={}: inverted span {}", t.seq, s.label);
+            assert!(
+                s.end_ns <= window,
+                "seq={}: span {} (shard {}) ends at {}ns, outside the {}ns \
+                 queue+service window",
+                t.seq,
+                s.label,
+                s.shard,
+                s.end_ns,
+                window
+            );
+        }
+        // Per-shard: rounds tile front-to-back inside the bandit span.
+        for shard in 0..2i64 {
+            let bandit: Vec<_> =
+                t.spans.iter().filter(|s| s.label == "bandit" && s.shard == shard).collect();
+            let round_total: u64 = t
+                .spans
+                .iter()
+                .filter(|s| s.label == "round" && s.shard == shard)
+                .map(|s| s.duration_ns())
+                .sum();
+            for b in &bandit {
+                assert!(
+                    round_total <= bandit.iter().map(|s| s.duration_ns()).sum::<u64>(),
+                    "seq={}: shard {shard} rounds ({round_total}ns) overflow bandit \
+                     span ({}ns)",
+                    t.seq,
+                    b.duration_ns()
+                );
+            }
+        }
+        // Query-wide sanity: the queue span matches the recorded wait.
+        let queue = t.spans.iter().find(|s| s.label == "queue").expect("queue span");
+        assert_eq!(queue.start_ns, 0, "queue span is anchored at submission");
+        assert!(
+            queue.duration_ns() <= t.queue_wait_ns + SLACK_NS,
+            "seq={}: queue span exceeds recorded queue_wait_ns",
+            t.seq
+        );
+    }
+    coord.shutdown();
+}
