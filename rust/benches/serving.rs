@@ -1,20 +1,61 @@
 //! Bench P1: the serving coordinator under closed-loop load — batcher
 //! and queue overhead, worker scaling, sharded fan-out, straggler
-//! hedging, and the S = 1 fast path vs the reactor merge path
-//! (`per_request_overhead` vs `per_request_overhead_reactor`).
+//! hedging, the S = 1 fast path vs the reactor merge path
+//! (`per_request_overhead` vs `per_request_overhead_reactor`), and the
+//! wire codecs (`wire_json` vs `wire_binary`: decode-only cost per
+//! request plus client-observed end-to-end latency over TCP). Binary
+//! decode is additionally gated by a counting global allocator — the
+//! steady state must be allocation-free.
 
-use bandit_mips::benchkit::{Bencher, Reporter};
+use bandit_mips::benchkit::{Bencher, Measurement, Reporter};
+use bandit_mips::coordinator::server::{Client, Server};
 use bandit_mips::coordinator::{
     Backend, Coordinator, CoordinatorConfig, QueryRequest,
 };
 use bandit_mips::data::generation::Delta;
 use bandit_mips::data::shard::ShardSpec;
 use bandit_mips::data::synthetic::gaussian_dataset;
-use bandit_mips::jsonlite::Json;
+use bandit_mips::jsonlite::{parse, Json};
 use bandit_mips::linalg::{simd, Rng};
-use std::sync::atomic::{AtomicBool, Ordering};
+use bandit_mips::wire::frame::FrameDecoder;
+use bandit_mips::wire::{binary, QueryOpts};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// Counts every heap allocation so the `wire_binary` decode rows can
+/// prove their steady state is allocation-free (mirrors the hotpath
+/// bench's gate).
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Allocations performed by `f`.
+fn count_allocs(mut f: impl FnMut()) -> u64 {
+    let before = ALLOCS.load(Ordering::Relaxed);
+    f();
+    ALLOCS.load(Ordering::Relaxed) - before
+}
 
 /// Per-shard counter breakdown (mirrors the `metrics_prom` exposition)
 /// as a JSON array, so bench-trajectory diffs can attribute a hedging
@@ -50,6 +91,8 @@ fn run_load(coord: &Coordinator, queries: usize, q: &[f32]) -> f64 {
             mode: bandit_mips::coordinator::QueryMode::BoundedMe,
             seed: i as u64,
             deadline: None,
+            storage: None,
+            decode_ns: 0,
         };
         rxs.push(coord.submit(req).expect("submit"));
     }
@@ -334,6 +377,169 @@ fn main() {
         }
     }
 
+    // Wire codecs, decode only: what each protocol charges to turn raw
+    // socket bytes into a submittable query — line-JSON pays a full
+    // parse plus numeric vector extraction, binary pays a frame scan
+    // plus one bulk LE-f32 conversion into a reused buffer. The binary
+    // path's steady state is asserted allocation-free, and at d = 4096
+    // it must beat JSON by at least 5× (the point of the codec).
+    let mut wire_decode_points: Vec<Json> = Vec::new();
+    for dim in [128usize, 4096] {
+        let vec: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.37).sin()).collect();
+
+        let line = Json::obj([
+            ("op", Json::Str("query".into())),
+            ("vector", Json::f32s(&vec)),
+            ("k", Json::Num(5.0)),
+            ("epsilon", Json::Num(0.05)),
+            ("delta", Json::Num(0.1)),
+        ])
+        .dump();
+        r.bench_tagged(
+            &b,
+            &format!("wire_json/decode d={dim}"),
+            &[("codec", Json::Str("json".into())), ("dim", Json::Num(dim as f64))],
+            || {
+                let doc = parse(&line).expect("bench line parses");
+                doc.get("vector").unwrap().as_f32_vec().unwrap().len()
+            },
+        );
+        let json_mean = r.rows().last().unwrap().mean;
+
+        let mut frame_bytes = Vec::new();
+        binary::encode_query_frame(
+            &[&vec],
+            &QueryOpts { k: 5, epsilon: 0.05, ..Default::default() },
+            &mut frame_bytes,
+        )
+        .unwrap();
+        let mut dec = FrameDecoder::new();
+        let mut coords: Vec<f32> = Vec::new();
+        r.bench_tagged(
+            &b,
+            &format!("wire_binary/decode d={dim}"),
+            &[("codec", Json::Str("binary".into())), ("dim", Json::Num(dim as f64))],
+            || {
+                dec.feed(&frame_bytes);
+                let f = dec.try_frame().unwrap().expect("whole frame fed");
+                binary::decode_query_payload(f.body, &mut coords).unwrap().dim
+            },
+        );
+        let bin_mean = r.rows().last().unwrap().mean;
+
+        // Steady state (decoder + coords warmed by the bench above):
+        // zero allocations, gated hard.
+        let allocs = count_allocs(|| {
+            for _ in 0..100 {
+                dec.feed(&frame_bytes);
+                let f = dec.try_frame().unwrap().unwrap();
+                std::hint::black_box(
+                    binary::decode_query_payload(f.body, &mut coords).unwrap(),
+                );
+            }
+        });
+        assert_eq!(
+            allocs, 0,
+            "binary decode steady state allocated (d={dim}) — zero-copy contract broken"
+        );
+
+        let speedup = json_mean / bin_mean;
+        println!(
+            "    decode d={dim}: json {:.2} µs vs binary {:.2} µs ({speedup:.1}×, 0 allocs)",
+            json_mean * 1e6,
+            bin_mean * 1e6
+        );
+        if dim == 4096 {
+            assert!(
+                speedup >= 5.0,
+                "binary decode must be ≥ 5× faster than line-JSON at d=4096, got {speedup:.1}×"
+            );
+        }
+        wire_decode_points.push(Json::obj([
+            ("dim", Json::Num(dim as f64)),
+            ("json_decode_s", Json::Num(json_mean)),
+            ("binary_decode_s", Json::Num(bin_mean)),
+            ("speedup", Json::Num(speedup)),
+            ("binary_decode_allocs", Json::Num(allocs as f64)),
+        ]));
+    }
+
+    // Wire codecs, end to end: client-observed round-trip latency per
+    // codec against one live TCP server (same coordinator, same
+    // query), p50/p99 over a fixed sample count.
+    let wds = gaussian_dataset(512, 128, 9);
+    let wq = wds.sample_query(2);
+    let wcoord = Arc::new(
+        Coordinator::new(
+            wds.vectors.clone(),
+            CoordinatorConfig {
+                workers: 2,
+                max_batch: 32,
+                batch_timeout: Duration::from_micros(500),
+                queue_capacity: 4096,
+                backend: Backend::Native,
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    let server = Server::start(wcoord, "127.0.0.1:0", 8).unwrap();
+    let mut wire_e2e_points: Vec<Json> = Vec::new();
+    for codec in ["json", "binary"] {
+        let mut client = if codec == "json" {
+            Client::connect_json(server.addr()).unwrap()
+        } else {
+            Client::connect_binary(server.addr()).unwrap()
+        };
+        let warmup = 50usize;
+        let mut lat = Vec::with_capacity(300);
+        for i in 0..(warmup + 300) {
+            let t = Instant::now();
+            if codec == "json" {
+                let resp = client.query(&wq, 5, 0.05, 0.1).unwrap();
+                assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+            } else {
+                let replies = client
+                    .query_binary(
+                        &[&wq],
+                        &QueryOpts { k: 5, epsilon: 0.05, delta: 0.1, ..Default::default() },
+                    )
+                    .unwrap();
+                assert!(replies[0].ok);
+            }
+            if i >= warmup {
+                lat.push(t.elapsed().as_secs_f64());
+            }
+        }
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = lat.iter().sum::<f64>() / lat.len() as f64;
+        let var = lat.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / lat.len() as f64;
+        let p50 = lat[lat.len() / 2];
+        let p99 = lat[lat.len() * 99 / 100];
+        println!(
+            "    e2e {codec}: p50 {:.3} ms p99 {:.3} ms (d=128, k=5, tcp loopback)",
+            p50 * 1e3,
+            p99 * 1e3
+        );
+        r.push(Measurement {
+            name: format!("wire_{codec}/e2e d=128 (tcp)"),
+            iters: lat.len() as u64,
+            mean,
+            std: var.sqrt(),
+            min: lat[0],
+            median: p50,
+            tags: vec![("codec", Json::Str(codec.into())), ("dim", Json::Num(128.0))],
+        });
+        wire_e2e_points.push(Json::obj([
+            ("codec", Json::Str(codec.into())),
+            ("dim", Json::Num(128.0)),
+            ("p50_s", Json::Num(p50)),
+            ("p99_s", Json::Num(p99)),
+            ("mean_s", Json::Num(mean)),
+        ]));
+    }
+    server.shutdown();
+
     r.finish("serving coordinator");
     r.write_json(
         "serving",
@@ -346,6 +552,8 @@ fn main() {
             ("sharded", Json::Arr(shard_points)),
             ("hedging", Json::Arr(hedge_points)),
             ("churn", Json::Arr(churn_points)),
+            ("wire_decode", Json::Arr(wire_decode_points)),
+            ("wire_e2e", Json::Arr(wire_e2e_points)),
             ("fast_path_served", Json::Num(fast_path_served as f64)),
         ],
     );

@@ -129,12 +129,28 @@ impl BoundedMeIndex {
         ctx: &mut QueryContext,
         shard: &Shard,
     ) -> Vec<ShardPartial> {
+        self.query_batch_shard_tier(queries, params, ctx, shard, self.storage)
+    }
+
+    /// [`Self::query_batch_shard`] with an explicit **resolved** sampling
+    /// tier (see [`crate::coordinator::resolve_storage`]): the
+    /// deployment's own tier behaves identically to the plain entry
+    /// point; [`Storage::F32`] on a compressed deployment opts the
+    /// queries out of the compressed codes for this call only.
+    pub fn query_batch_shard_tier(
+        &self,
+        queries: &[&[f32]],
+        params: &MipsParams,
+        ctx: &mut QueryContext,
+        shard: &Shard,
+        tier: Storage,
+    ) -> Vec<ShardPartial> {
         debug_assert_eq!(self.data.rows(), shard.rows(), "index/shard row mismatch");
         let dim = self.data.cols();
         queries
             .iter()
             .map(|q| {
-                let res = self.query_with(q, params, ctx);
+                let res = self.query_with_tier(q, params, ctx, tier);
                 let confirm_t0 =
                     if ctx.trace.armed { Some(Instant::now()) } else { None };
                 // Confirm step as blocked kernels: survivors are
@@ -264,53 +280,53 @@ impl BoundedMeIndex {
             candidates: 0,
         })
     }
-}
 
-/// `colmax[j] = max_i |v_i^(j)|` over the dataset (one scan).
-pub fn column_maxima(data: &Matrix) -> Vec<f32> {
-    let mut colmax = vec![f32::MIN_POSITIVE; data.cols()];
-    for row in data.iter_rows() {
-        for (m, &x) in colmax.iter_mut().zip(row) {
-            *m = m.max(x.abs());
+    /// [`MipsIndex::query_with`] with an explicit **resolved** sampling
+    /// tier. The coordinator resolves a per-request [`Storage`] override
+    /// (see [`crate::coordinator::resolve_storage`]) to either this
+    /// index's own tier — identical to [`MipsIndex::query_with`] — or
+    /// [`Storage::F32`], which skips the compressed codes entirely for
+    /// this query (a deliberate opt-out, distinct from the ε-bias
+    /// fallback inside [`Self::query_quant`], so no `quant_fallback`
+    /// flag is raised).
+    pub fn query_with_tier(
+        &self,
+        q: &[f32],
+        params: &MipsParams,
+        ctx: &mut QueryContext,
+        tier: Storage,
+    ) -> MipsResult {
+        if tier == self.storage {
+            if let Some(res) = self.query_quant(q, params, ctx) {
+                return res;
+            }
         }
+        self.query_f32(q, params, ctx)
     }
-    colmax
-}
 
-impl MipsIndex for BoundedMeIndex {
-    fn name(&self) -> &str {
-        match self.order {
-            PullOrder::Permuted => "BoundedME",
-            PullOrder::BlockShuffled(_) => "BoundedME(block)",
-            PullOrder::Sequential => "BoundedME(seq)",
+    /// [`MipsIndex::query_batch`] with an explicit resolved sampling
+    /// tier (shares one pull permutation across the batch exactly like
+    /// the trait entry point).
+    pub fn query_batch_tier(
+        &self,
+        queries: &[&[f32]],
+        params: &MipsParams,
+        ctx: &mut QueryContext,
+        tier: Storage,
+    ) -> Vec<MipsResult> {
+        let mut out = Vec::with_capacity(queries.len());
+        for q in queries {
+            out.push(self.query_with_tier(q, params, ctx, tier));
         }
+        out
     }
 
-    fn data(&self) -> &Matrix {
-        &self.data
-    }
-
-    fn preprocessing_seconds(&self) -> f64 {
-        0.0
-    }
-
-    fn query(&self, q: &[f32], params: &MipsParams) -> MipsResult {
-        self.query_with(q, params, &mut QueryContext::new())
-    }
-
-    /// The zero-allocation hot path: pull order and gathered query live
-    /// in `ctx.pull` (rebuilt only when `(order, dim, seed)` changes, so
-    /// a batch with one seed shares one permutation), survivor state —
-    /// including the survivor-compacted pull panel the elimination core
-    /// switches to per the index's [`Compaction`] policy — in
-    /// `ctx.bandit`.
-    fn query_with(&self, q: &[f32], params: &MipsParams, ctx: &mut QueryContext) -> MipsResult {
-        // Compressed tier first (no-op without `with_storage`); falls
-        // through to the exact f32 tier when the ε budget can't absorb
-        // the quantization bias.
-        if let Some(res) = self.query_quant(q, params, ctx) {
-            return res;
-        }
+    /// The exact f32 tier: the zero-allocation elimination hot path.
+    /// Pull order and gathered query live in `ctx.pull` (rebuilt only
+    /// when `(order, dim, seed)` changes, so a batch with one seed
+    /// shares one permutation), survivor state — including the
+    /// survivor-compacted pull panel — in `ctx.bandit`.
+    fn query_f32(&self, q: &[f32], params: &MipsParams, ctx: &mut QueryContext) -> MipsResult {
         let bound = self.reward_bound(q);
         // Disjoint field borrows: `pull` is held immutably by the arms
         // while `bandit` is mutated by the run (and `trace` is staged
@@ -352,6 +368,48 @@ impl MipsIndex for BoundedMeIndex {
             candidates: 0,
         }
     }
+}
+
+/// `colmax[j] = max_i |v_i^(j)|` over the dataset (one scan).
+pub fn column_maxima(data: &Matrix) -> Vec<f32> {
+    let mut colmax = vec![f32::MIN_POSITIVE; data.cols()];
+    for row in data.iter_rows() {
+        for (m, &x) in colmax.iter_mut().zip(row) {
+            *m = m.max(x.abs());
+        }
+    }
+    colmax
+}
+
+impl MipsIndex for BoundedMeIndex {
+    fn name(&self) -> &str {
+        match self.order {
+            PullOrder::Permuted => "BoundedME",
+            PullOrder::BlockShuffled(_) => "BoundedME(block)",
+            PullOrder::Sequential => "BoundedME(seq)",
+        }
+    }
+
+    fn data(&self) -> &Matrix {
+        &self.data
+    }
+
+    fn preprocessing_seconds(&self) -> f64 {
+        0.0
+    }
+
+    fn query(&self, q: &[f32], params: &MipsParams) -> MipsResult {
+        self.query_with(q, params, &mut QueryContext::new())
+    }
+
+    /// The zero-allocation hot path (see [`Self::query_f32`] for the
+    /// scratch discipline): compressed tier first (a no-op without
+    /// [`Self::with_storage`]), falling through to the exact f32 tier
+    /// when the ε budget can't absorb the quantization bias. Equivalent
+    /// to [`Self::query_with_tier`] at the index's own tier.
+    fn query_with(&self, q: &[f32], params: &MipsParams, ctx: &mut QueryContext) -> MipsResult {
+        self.query_with_tier(q, params, ctx, self.storage)
+    }
 
     /// Batched execution: all queries share `params` (including the
     /// seed), so [`crate::bandit::PullScratch::prepare`] builds the
@@ -364,11 +422,7 @@ impl MipsIndex for BoundedMeIndex {
         params: &MipsParams,
         ctx: &mut QueryContext,
     ) -> Vec<MipsResult> {
-        let mut out = Vec::with_capacity(queries.len());
-        for q in queries {
-            out.push(self.query_with(q, params, ctx));
-        }
-        out
+        self.query_batch_tier(queries, params, ctx, self.storage)
     }
 }
 
@@ -594,6 +648,38 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn f32_tier_override_is_bit_identical_to_plain_index() {
+        // `query_with_tier(.., Storage::F32)` on a compressed deployment
+        // must take exactly the plain-f32 code path: bit-identical
+        // indices, scores, and flops to an index built without a tier.
+        let data = gaussian(90, 128, 31);
+        let plain = BoundedMeIndex::with_order(data.clone(), PullOrder::BlockShuffled(16));
+        let quant = BoundedMeIndex::with_order(data, PullOrder::BlockShuffled(16))
+            .with_storage(Storage::F16);
+        let mut ctx_a = QueryContext::new();
+        let mut ctx_b = QueryContext::new();
+        for seed in 0..4u64 {
+            let q: Vec<f32> = Rng::new(300 + seed).gaussian_vec(128);
+            let params = MipsParams { k: 3, epsilon: 0.1, delta: 0.1, seed };
+            let a = plain.query_with(&q, &params, &mut ctx_a);
+            let b = quant.query_with_tier(&q, &params, &mut ctx_b, Storage::F32);
+            assert_eq!(a.indices, b.indices, "seed={seed}");
+            assert_eq!(a.flops, b.flops, "seed={seed}");
+            for (x, y) in a.scores.iter().zip(&b.scores) {
+                assert_eq!(x.to_bits(), y.to_bits(), "seed={seed}");
+            }
+        }
+        // And the index's own tier delegates identically to the trait
+        // entry point.
+        let q: Vec<f32> = Rng::new(400).gaussian_vec(128);
+        let params = MipsParams { k: 3, epsilon: 0.1, delta: 0.1, seed: 9 };
+        let via_trait = quant.query_with(&q, &params, &mut ctx_a);
+        let via_tier = quant.query_with_tier(&q, &params, &mut ctx_b, quant.storage());
+        assert_eq!(via_trait.indices, via_tier.indices);
+        assert_eq!(via_trait.flops, via_tier.flops);
     }
 
     #[test]

@@ -269,12 +269,38 @@ pub struct QueryRequest {
     /// with `shed = true` and no results) instead of wasting worker
     /// time — classic load-shedding under overload.
     pub deadline: Option<Duration>,
+    /// Optional per-request storage-tier override for BOUNDEDME
+    /// sampling (see [`resolve_storage`]). `None` (the default) samples
+    /// from the deployment tier ([`CoordinatorConfig::storage`]).
+    /// `Some(tier)` requests that tier: granted when it is the one the
+    /// shard indexes actually hold, otherwise the request is served on
+    /// the always-present exact f32 tier — a *conservative* downgrade,
+    /// never a silently different compression. The batcher keys
+    /// BOUNDEDME groups on the resolved tier, so mixed-override traffic
+    /// still fuses per tier. Exact-mode requests ignore this (exact
+    /// scans always score f32).
+    pub storage: Option<Storage>,
+    /// Wire-decode wall time in nanoseconds, stamped by the server's
+    /// codec before submission (0 = unmeasured / in-process caller).
+    /// Purely observability: the flight recorder turns it into a
+    /// `decode` span so the protocol tax is visible per query.
+    pub decode_ns: u64,
 }
 
 impl QueryRequest {
     /// A BOUNDEDME request with the given knobs.
     pub fn bounded_me(vector: Vec<f32>, k: usize, epsilon: f64, delta: f64) -> Self {
-        Self { vector, k, epsilon, delta, mode: QueryMode::BoundedMe, seed: 0, deadline: None }
+        Self {
+            vector,
+            k,
+            epsilon,
+            delta,
+            mode: QueryMode::BoundedMe,
+            seed: 0,
+            deadline: None,
+            storage: None,
+            decode_ns: 0,
+        }
     }
 
     /// Attach a deadline (see [`QueryRequest::deadline`]).
@@ -283,10 +309,26 @@ impl QueryRequest {
         self
     }
 
+    /// Request a specific sampling tier (see [`QueryRequest::storage`]).
+    pub fn with_storage(mut self, storage: Storage) -> Self {
+        self.storage = Some(storage);
+        self
+    }
+
     /// A planner-routed request: [`QueryPlan`] picks exact vs BOUNDEDME
     /// from the knobs at batching time.
     pub fn auto(vector: Vec<f32>, k: usize, epsilon: f64, delta: f64) -> Self {
-        Self { vector, k, epsilon, delta, mode: QueryMode::Auto, seed: 0, deadline: None }
+        Self {
+            vector,
+            k,
+            epsilon,
+            delta,
+            mode: QueryMode::Auto,
+            seed: 0,
+            deadline: None,
+            storage: None,
+            decode_ns: 0,
+        }
     }
 
     /// An exact request.
@@ -299,7 +341,24 @@ impl QueryRequest {
             mode: QueryMode::Exact,
             seed: 0,
             deadline: None,
+            storage: None,
+            decode_ns: 0,
         }
+    }
+}
+
+/// Resolve a request's effective BOUNDEDME sampling tier against the
+/// deployment's. `None` takes the deployed tier. A `Some(tier)` request
+/// is granted only when its effective tier (the `RUST_PALLAS_FORCE_F32`
+/// hatch applied) is exactly what the shard indexes hold; any other
+/// request downgrades to [`Storage::F32`] — the exact tier every index
+/// carries — rather than approximating with a different compression
+/// than the client asked for.
+pub fn resolve_storage(requested: Option<Storage>, deployed: Storage) -> Storage {
+    match requested {
+        None => deployed,
+        Some(s) if s.effective() == deployed => deployed,
+        Some(_) => Storage::F32,
     }
 }
 
@@ -699,6 +758,14 @@ impl Coordinator {
         self.metrics.snapshot()
     }
 
+    /// Count one wire request decoded by the TCP front-end against its
+    /// codec (see [`crate::wire`]); the server calls this per decoded
+    /// line or frame so the protocol mix is visible in `metrics` /
+    /// `metrics_prom`.
+    pub fn record_wire(&self, binary: bool) {
+        self.metrics.record_wire(binary);
+    }
+
     /// The most recent `limit` retained query traces, newest first.
     /// Empty unless the flight recorder is on
     /// ([`CoordinatorConfig::trace`] or `RUST_PALLAS_TRACE`). Reading
@@ -888,10 +955,12 @@ fn run_batcher(
                         k: p.req.k,
                         eps_bits: p.req.epsilon.to_bits(),
                         delta_bits: p.req.delta.to_bits(),
-                        // The tier the deployment samples from (the
-                        // force-f32 hatch already applied): groups stay
-                        // tier-uniform if per-request tiers ever land.
-                        storage: cfg.storage.effective(),
+                        // The tier this request will actually sample
+                        // from: its override resolved against the
+                        // deployment tier (force-f32 hatch applied), so
+                        // groups stay tier-uniform under mixed
+                        // per-request overrides.
+                        storage: resolve_storage(p.req.storage, cfg.storage.effective()),
                     },
                 };
                 let deadline = p.submitted + cfg.batch_timeout;
@@ -942,6 +1011,11 @@ struct QueryJob {
     seed: u64,
     /// Resolved mode: `Exact` or `BoundedMe`, never `Auto`.
     mode: QueryMode,
+    /// Resolved sampling tier (see [`resolve_storage`]): the
+    /// deployment's for exact jobs (they score f32 regardless), the
+    /// request's resolved override for BOUNDEDME ones. Workers pass it
+    /// to the `_tier` query entry points.
+    storage: Storage,
     /// Original submission instant — workers re-check `deadline`
     /// against it at shard pickup.
     submitted: Instant,
@@ -1203,7 +1277,7 @@ impl Reactor {
             self.next_query += 1;
             let storage = match mode {
                 QueryMode::Exact => Storage::F32,
-                _ => self.storage,
+                _ => resolve_storage(req.storage, self.storage),
             };
             // Flight recorder: anchor the builder at submission, record
             // the queue span and the plan resolution. (Sheds decided
@@ -1223,6 +1297,14 @@ impl Reactor {
                 b.trace.batch_size = batch_size;
                 b.trace.shards = self.n_shards;
                 b.trace.queue_wait_ns = queue_wait.as_nanos() as u64;
+                if req.decode_ns > 0 {
+                    // Wire decode happened *before* submission (the
+                    // trace origin), so the span is re-anchored at
+                    // [0, decode_ns] — it reads as the protocol tax
+                    // paid ahead of the queue wait.
+                    b.trace.decode_ns = req.decode_ns;
+                    b.span_ns("decode", -1, 0, req.decode_ns, Vec::new());
+                }
                 b.span(
                     "queue",
                     -1,
@@ -1259,6 +1341,7 @@ impl Reactor {
                 delta: req.delta,
                 seed: req.seed,
                 mode,
+                storage,
                 submitted: pending.submitted,
                 deadline: req.deadline,
             }));
@@ -1676,7 +1759,8 @@ fn serve_reactor_batch(
     // grouping makes whole groups uniform, so the fused path is the
     // common case. ---
     if !bme.is_empty() {
-        let knobs = |it: &Arc<QueryJob>| (it.k, it.epsilon.to_bits(), it.delta.to_bits());
+        let knobs =
+            |it: &Arc<QueryJob>| (it.k, it.epsilon.to_bits(), it.delta.to_bits(), it.storage);
         let uniform = bme.windows(2).all(|w| knobs(w[0]) == knobs(w[1]));
         if n_shards == 1 {
             // Forced reactor over a single shard: legacy unsharded
@@ -1712,7 +1796,9 @@ fn serve_reactor_batch(
                     seed: first.seed,
                 };
                 let queries: Vec<&[f32]> = bme.iter().map(|it| it.vector.as_slice()).collect();
-                for (item, res) in bme.iter().zip(index.query_batch(&queries, &params, ctx)) {
+                for (item, res) in
+                    bme.iter().zip(index.query_batch_tier(&queries, &params, ctx, first.storage))
+                {
                     push_direct(item.id, res);
                 }
             } else {
@@ -1723,7 +1809,7 @@ fn serve_reactor_batch(
                         delta: item.delta,
                         seed: item.seed,
                     };
-                    let res = index.query_with(&item.vector, &params, ctx);
+                    let res = index.query_with_tier(&item.vector, &params, ctx, item.storage);
                     push_direct(item.id, res);
                 }
             }
@@ -1737,8 +1823,9 @@ fn serve_reactor_batch(
             };
             let split = shard_params(&params, n_shards, shard.rows());
             let queries: Vec<&[f32]> = bme.iter().map(|it| it.vector.as_slice()).collect();
-            for (item, partial) in
-                bme.iter().zip(index.query_batch_shard(&queries, &split, ctx, shard))
+            for (item, partial) in bme
+                .iter()
+                .zip(index.query_batch_shard_tier(&queries, &split, ctx, shard, first.storage))
             {
                 results.push(QueryDone {
                     query: item.id,
@@ -1758,7 +1845,13 @@ fn serve_reactor_batch(
                 };
                 let split = shard_params(&params, n_shards, shard.rows());
                 let partial = index
-                    .query_batch_shard(&[item.vector.as_slice()], &split, ctx, shard)
+                    .query_batch_shard_tier(
+                        &[item.vector.as_slice()],
+                        &split,
+                        ctx,
+                        shard,
+                        item.storage,
+                    )
                     .pop()
                     .expect("one partial per query");
                 results.push(QueryDone {
@@ -1971,6 +2064,12 @@ fn serve_direct_batch(
             tb.trace.shards = 1;
             tb.trace.queue_wait_ns = queue_wait.as_nanos() as u64;
             tb.trace.service_ns = service.as_nanos() as u64;
+            if pending.req.decode_ns > 0 {
+                // Decode precedes submission (the trace origin); the
+                // span is re-anchored at [0, decode_ns].
+                tb.trace.decode_ns = pending.req.decode_ns;
+                tb.span_ns("decode", -1, 0, pending.req.decode_ns, Vec::new());
+            }
             tb.span("queue", -1, pending.submitted, picked_up, Vec::new());
             tb.span(
                 "compute",
@@ -2041,38 +2140,37 @@ fn serve_direct_batch(
     if bme.is_empty() {
         return;
     }
-    let knobs = |p: &Pending| (p.req.k, p.req.epsilon.to_bits(), p.req.delta.to_bits());
+    // Per-request tier overrides resolve against the deployment tier
+    // the shard index holds; the batcher already grouped by the
+    // resolved tier, so `uniform` batches hit the fused path per tier.
+    let tier = |p: &Pending| resolve_storage(p.req.storage, index.storage());
+    let knobs = |p: &Pending| (p.req.k, p.req.epsilon.to_bits(), p.req.delta.to_bits(), tier(p));
     let uniform = bme.windows(2).all(|w| knobs(w[0]) == knobs(w[1]));
     if uniform && bme.len() > 1 {
         let first = &bme[0].req;
+        let storage = tier(bme[0]);
         let params =
             MipsParams { k: first.k, epsilon: first.epsilon, delta: first.delta, seed: first.seed };
         let queries: Vec<&[f32]> = bme.iter().map(|p| p.req.vector.as_slice()).collect();
-        let batch_res = index.query_batch(&queries, &params, ctx);
+        let batch_res = index.query_batch_tier(&queries, &params, ctx, storage);
         // One staged QueryExec per bme query, in order (empty when the
         // stage is disarmed — `get` then yields None throughout).
         let execs = ctx.trace.finish();
         for (i, (pending, res)) in bme.iter().zip(batch_res).enumerate() {
-            respond(pending, res.indices, res.scores, res.flops, index.storage(), execs.get(i));
+            respond(pending, res.indices, res.scores, res.flops, storage, execs.get(i));
         }
     } else {
         for pending in &bme {
+            let storage = tier(pending);
             let params = MipsParams {
                 k: pending.req.k,
                 epsilon: pending.req.epsilon,
                 delta: pending.req.delta,
                 seed: pending.req.seed,
             };
-            let res = index.query_with(&pending.req.vector, &params, ctx);
+            let res = index.query_with_tier(&pending.req.vector, &params, ctx, storage);
             let exec = ctx.trace.queries.pop();
-            respond(
-                pending,
-                res.indices,
-                res.scores,
-                res.flops,
-                index.storage(),
-                exec.as_ref(),
-            );
+            respond(pending, res.indices, res.scores, res.flops, storage, exec.as_ref());
         }
     }
 }
@@ -2423,6 +2521,121 @@ mod tests {
             }
         }
         assert_eq!(c.metrics().queries, 24);
+        c.shutdown();
+    }
+
+    #[test]
+    fn resolve_storage_semantics() {
+        // No override: deployment tier.
+        assert_eq!(resolve_storage(None, Storage::F16), Storage::F16);
+        assert_eq!(resolve_storage(None, Storage::F32), Storage::F32);
+        // Matching override: granted.
+        assert_eq!(
+            resolve_storage(Some(Storage::F16), Storage::F16.effective()),
+            Storage::F16.effective()
+        );
+        // F32 is always available (exact tier) — requesting it on a
+        // compressed deployment opts the query out of sampling codes.
+        assert_eq!(resolve_storage(Some(Storage::F32), Storage::F32), Storage::F32);
+        // A tier the deployment does not hold downgrades conservatively
+        // to f32 — never to a different compression. (Skip under the
+        // force-f32 leg, where every tier is "held": it collapses to
+        // f32 anyway.)
+        if Storage::Int8.effective() == Storage::Int8 {
+            assert_eq!(resolve_storage(Some(Storage::Int8), Storage::F16), Storage::F32);
+            assert_eq!(resolve_storage(Some(Storage::F32), Storage::F16), Storage::F32);
+        }
+    }
+
+    #[test]
+    fn per_request_storage_override_round_trips() {
+        // F16 deployment; the assertions below hold on every CI leg
+        // (under RUST_PALLAS_FORCE_F32 all tiers collapse to f32 and
+        // every expected value below collapses with them).
+        let ds = gaussian_dataset(150, 128, 56);
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(1),
+            queue_capacity: 128,
+            backend: Backend::Native,
+            pull_order: PullOrder::BlockShuffled(16),
+            shard: ShardSpec::single(),
+            storage: Storage::F16,
+            ..Default::default()
+        };
+        let data = ds.vectors.clone();
+        let q = ds.sample_query(4);
+        let c = Coordinator::new(ds.vectors, cfg).unwrap();
+        let deployed = Storage::F16.effective();
+
+        // No override: the deployment tier answers.
+        let resp = c.query_blocking(QueryRequest::bounded_me(q.clone(), 3, 0.3, 0.2)).unwrap();
+        assert_eq!(resp.storage, deployed);
+
+        // Explicit f32: opts out of compressed sampling per request.
+        let resp = c
+            .query_blocking(
+                QueryRequest::bounded_me(q.clone(), 3, 1e-9, 0.05).with_storage(Storage::F32),
+            )
+            .unwrap();
+        assert_eq!(resp.storage, Storage::F32);
+        let mut got = resp.indices.clone();
+        got.sort_unstable();
+        let mut want = crate::algos::ground_truth(&data, &q, 3);
+        want.sort_unstable();
+        assert_eq!(got, want);
+
+        // Matching override: granted the deployed tier.
+        let resp = c
+            .query_blocking(
+                QueryRequest::bounded_me(q.clone(), 3, 0.3, 0.2).with_storage(Storage::F16),
+            )
+            .unwrap();
+        assert_eq!(resp.storage, deployed);
+
+        // Unavailable tier: conservative f32, still a correct answer.
+        let resp = c
+            .query_blocking(
+                QueryRequest::bounded_me(q.clone(), 3, 1e-9, 0.05).with_storage(Storage::Int8),
+            )
+            .unwrap();
+        assert_eq!(resp.storage, Storage::F32);
+        let mut got = resp.indices.clone();
+        got.sort_unstable();
+        assert_eq!(got, want);
+        c.shutdown();
+    }
+
+    #[test]
+    fn per_request_storage_override_sharded() {
+        // Same resolution through the reactor path (S = 3): the
+        // override rides GroupKey → QueryJob → query_batch_shard_tier.
+        let ds = gaussian_dataset(101, 64, 34);
+        let cfg = CoordinatorConfig {
+            workers: 3,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(1),
+            queue_capacity: 128,
+            backend: Backend::Native,
+            pull_order: PullOrder::BlockShuffled(16),
+            shard: ShardSpec::contiguous(3),
+            storage: Storage::F16,
+            ..Default::default()
+        };
+        let data = ds.vectors.clone();
+        let q = ds.sample_query(2);
+        let c = Coordinator::new(ds.vectors, cfg).unwrap();
+        let resp = c
+            .query_blocking(
+                QueryRequest::bounded_me(q.clone(), 4, 1e-9, 0.1).with_storage(Storage::F32),
+            )
+            .unwrap();
+        assert_eq!(resp.storage, Storage::F32);
+        assert_eq!(resp.shards, 3);
+        // ε→0 through sample-then-confirm on the f32 tier: exact top-k
+        // in exact order.
+        assert_eq!(resp.indices, crate::algos::ground_truth(&data, &q, 4));
         c.shutdown();
     }
 

@@ -1,15 +1,26 @@
-//! TCP front-end for the coordinator: newline-delimited JSON over a
-//! plain socket, so any client (curl-less scripts, other services) can
-//! issue MIPS queries with per-request (ε, δ) knobs.
+//! TCP front-end for the coordinator, speaking a **negotiated** wire
+//! protocol (see [`crate::wire`]): every connection's first byte picks
+//! its codec and the choice sticks for the connection's lifetime.
 //!
-//! Protocol (one JSON document per line):
+//! * Anything that can start a JSON document (`{`, whitespace, …)
+//!   selects the line-JSON codec — the original protocol, bit-for-bit,
+//!   so existing clients need no changes.
+//! * The frame magic's leading `b'P'` selects the binary codec:
+//!   length-prefixed frames carrying either an embedded JSON document
+//!   (every op below works unchanged over binary transport) or a raw
+//!   little-endian f32 query batch that skips JSON entirely — at
+//!   d = 4096 the decimal text of one vector costs more to parse than
+//!   the SIMD scan that answers it.
+//!
+//! Line protocol (one JSON document per line; the same documents ride
+//! `OP_JSON`/`RESP_JSON` frames over binary transport):
 //!
 //! ```text
 //! → {"op":"query","vector":[…],"k":5,"epsilon":0.1,"delta":0.1,
-//!    "mode":"bounded_me","deadline_ms":50}
+//!    "mode":"bounded_me","deadline_ms":50,"storage":"f32"}
 //! ← {"ok":true,"indices":[…],"scores":[…],"flops":123,"service_ms":0.8,"batch":4}
 //! → {"op":"metrics"}
-//! ← {"ok":true,"queries":10,"batches":4,"flops":…, "service_p50_ms":…, …}
+//! ← {"ok":true,"queries":10,"batches":4,"flops":…, "wire_binary":…, …}
 //! → {"op":"mutate","upserts":[{"id":3,"vector":[…]}],"deletes":[7],
 //!    "appends":[[…]]}
 //! ← {"ok":true,"generation":1,"rows":200,"shards_rebuilt":1,
@@ -22,27 +33,34 @@
 //! ← {"ok":true,"content_type":"text/plain; version=0.0.4","body":"# HELP …"}
 //! ```
 //!
-//! `trace` returns the flight recorder's most recent retained query
-//! traces (empty unless tracing is enabled — see [`crate::trace`]);
-//! `metrics_prom` renders the metrics snapshot, including the
-//! per-shard breakdown, in Prometheus text exposition format.
+//! The optional query `storage` field (`"f32"`/`"f16"`/`"bf16"`/
+//! `"int8"`) requests a per-query sampling tier; resolution against the
+//! deployment is [`super::resolve_storage`]'s. Binary query frames
+//! carry the same override as a header byte.
 //!
-//! `mutate` applies one delta batch atomically: the reply's
-//! `generation` is live for every query submitted after it arrives
-//! (the flip is acked by all serving threads before `mutate` returns).
-//! Query replies carry the `generation` their indices refer to.
+//! A binary `OP_QUERY` frame with B vectors is submitted as one group —
+//! the batcher admits it whole — and answered by B `RESP_QUERY` frames
+//! in request order.
 //!
-//! Errors come back as `{"ok":false,"error":"…"}`; malformed lines do
-//! not kill the connection. One thread per connection (bounded by
+//! Errors come back as `{"ok":false,"error":"…"}` (or a `RESP_ERROR`
+//! frame); malformed *documents* do not kill the connection, but
+//! frame-level violations (bad magic, hostile length prefix) do — the
+//! server replies once and closes, since resync inside a corrupt byte
+//! stream is guesswork. One thread per connection (bounded by
 //! `max_conns`).
 
 use super::{Coordinator, CoordinatorError, QueryMode, QueryRequest};
 use crate::data::generation::Delta;
+use crate::data::quant::Storage;
 use crate::jsonlite::{parse, Json};
-use std::io::{BufRead, BufReader, Write};
+use crate::wire::{
+    self, binary, frame, Codec, FrameDecoder, QueryOpts, QueryReply, WireRequest,
+};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Handle to a running TCP server.
 pub struct Server {
@@ -111,35 +129,32 @@ impl Server {
     }
 }
 
+/// Over-capacity rejection happens before negotiation, so it speaks the
+/// line protocol (a binary client sees a failed magic and closes —
+/// which is the point either way).
 fn reject(mut stream: TcpStream) -> std::io::Result<()> {
     stream.write_all(b"{\"ok\":false,\"error\":\"too many connections\"}\n")
 }
 
 fn handle_conn(
-    stream: TcpStream,
+    mut stream: TcpStream,
     coord: &Coordinator,
     stop: &AtomicBool,
 ) -> std::io::Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
     let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
+    // The codec is chosen lazily from the first byte received; until
+    // then the connection has no protocol.
+    let mut codec: Option<Box<dyn Codec + Send>> = None;
+    let mut rbuf = vec![0u8; 16 * 1024];
+    let mut out = Vec::new();
     loop {
         if stop.load(Ordering::Relaxed) {
             return Ok(());
         }
-        line.clear();
-        match reader.read_line(&mut line) {
+        let n = match stream.read(&mut rbuf) {
             Ok(0) => return Ok(()), // client closed
-            Ok(_) => {
-                let trimmed = line.trim();
-                if trimmed.is_empty() {
-                    continue;
-                }
-                let response = handle_line(trimmed, coord);
-                writer.write_all(response.dump().as_bytes())?;
-                writer.write_all(b"\n")?;
-            }
+            Ok(n) => n,
             Err(e)
                 if matches!(
                     e.kind(),
@@ -149,16 +164,78 @@ fn handle_conn(
                 continue; // poll the stop flag
             }
             Err(_) => return Ok(()),
+        };
+        if codec.is_none() {
+            codec = Some(wire::negotiate(rbuf[0]));
+        }
+        let c = codec.as_mut().expect("codec negotiated above");
+        c.feed(&rbuf[..n]);
+        loop {
+            match c.try_decode() {
+                Ok(Some(req)) => {
+                    out.clear();
+                    process_request(req, coord, c.as_mut(), &mut out);
+                    writer.write_all(&out)?;
+                }
+                Ok(None) => break, // need more bytes
+                Err(e) => {
+                    // Frame-level violation: reply once, close.
+                    out.clear();
+                    c.encode_error(&format!("protocol error: {e}"), &mut out);
+                    let _ = writer.write_all(&out);
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+/// Serve one decoded wire request, appending the encoded replies.
+fn process_request(
+    req: WireRequest,
+    coord: &Coordinator,
+    codec: &mut dyn Codec,
+    out: &mut Vec<u8>,
+) {
+    coord.record_wire(codec.name() == "binary");
+    match req {
+        WireRequest::Line(line) => {
+            if line.is_empty() {
+                return;
+            }
+            let resp = handle_line(&line, coord);
+            codec.encode_json(&resp, out);
+        }
+        WireRequest::Query(requests) => {
+            // Submit the whole batch before reaping any reply, so the
+            // coordinator's batcher sees the frame as one group instead
+            // of B lockstep singletons.
+            let handles: Vec<_> =
+                requests.into_iter().map(|r| coord.submit(r)).collect();
+            for h in handles {
+                match h {
+                    Ok(rx) => match rx.recv() {
+                        Ok(resp) => codec.encode_reply(&resp, out),
+                        Err(_) => codec.encode_error("shutdown", out),
+                    },
+                    Err(CoordinatorError::QueueFull) => codec.encode_error("overloaded", out),
+                    Err(e) => codec.encode_error(&e.to_string(), out),
+                }
+            }
         }
     }
 }
 
 fn err_response(msg: &str) -> Json {
-    Json::obj([("ok", Json::Bool(false)), ("error", Json::Str(msg.to_string()))])
+    wire::error_json(msg)
 }
 
-/// Dispatch one request line (exposed for unit tests).
+/// Dispatch one request document (exposed for unit tests and reused by
+/// both codecs' JSON paths).
 pub fn handle_line(line: &str, coord: &Coordinator) -> Json {
+    // Decode clock: parse + vector extraction are the protocol tax the
+    // flight recorder's `decode` span reports for JSON-borne queries.
+    let decode_t0 = Instant::now();
     let req = match parse(line) {
         Ok(v) => v,
         Err(e) => return err_response(&format!("bad json: {e}")),
@@ -185,6 +262,8 @@ pub fn handle_line(line: &str, coord: &Coordinator) -> Json {
                 ("mutations", Json::Num(m.mutations as f64)),
                 ("mutation_rows", Json::Num(m.mutation_rows as f64)),
                 ("shed_superseded", Json::Num(m.shed_superseded as f64)),
+                ("wire_json", Json::Num(m.wire_json as f64)),
+                ("wire_binary", Json::Num(m.wire_binary as f64)),
                 ("generation", Json::Num(coord.generation() as f64)),
                 ("generations_alive", Json::Num(coord.generations_alive() as f64)),
             ])
@@ -269,24 +348,33 @@ pub fn handle_line(line: &str, coord: &Coordinator) -> Json {
                 Some("auto") => QueryMode::Auto,
                 Some(other) => return err_response(&format!("unknown mode {other:?}")),
             };
+            let storage = match req.get("storage").and_then(Json::as_str) {
+                None => None,
+                Some(label) => match Storage::from_label(label) {
+                    Some(s) => Some(s),
+                    None => return err_response(&format!("unknown storage {label:?}")),
+                },
+            };
             let deadline = req
                 .get("deadline_ms")
                 .and_then(Json::as_f64)
                 .map(std::time::Duration::from_secs_f64)
                 .map(|d| d / 1000);
-            let qr = QueryRequest { vector, k, epsilon, delta, mode, seed, deadline };
+            let decode_ns = decode_t0.elapsed().as_nanos() as u64;
+            let qr = QueryRequest {
+                vector,
+                k,
+                epsilon,
+                delta,
+                mode,
+                seed,
+                deadline,
+                storage,
+                decode_ns,
+            };
             match coord.query_blocking(qr) {
                 Ok(resp) if resp.shed => err_response("deadline exceeded (shed)"),
-                Ok(resp) => Json::obj([
-                    ("ok", Json::Bool(true)),
-                    ("indices", Json::usizes(&resp.indices)),
-                    ("scores", Json::f32s(&resp.scores)),
-                    ("flops", Json::Num(resp.flops as f64)),
-                    ("service_ms", Json::Num(resp.service.as_secs_f64() * 1e3)),
-                    ("batch", Json::Num(resp.batch_size as f64)),
-                    ("storage", Json::Str(resp.storage.label().into())),
-                    ("generation", Json::Num(resp.generation as f64)),
-                ]),
+                Ok(resp) => wire::json::query_response_json(&resp),
                 Err(CoordinatorError::QueueFull) => err_response("overloaded"),
                 Err(e) => err_response(&e.to_string()),
             }
@@ -296,33 +384,94 @@ pub fn handle_line(line: &str, coord: &Coordinator) -> Json {
     }
 }
 
-/// Minimal blocking client for the line protocol (used by tests and the
-/// serving example).
+/// Minimal blocking client for either wire codec (used by tests and the
+/// serving example). [`Client::connect`] honors the
+/// [`wire::WIRE_ENV`] pin (`RUST_PALLAS_WIRE=binary`), so the whole TCP
+/// test battery runs over binary framing on the CI `wire` leg without a
+/// single call-site change.
 pub struct Client {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
+    transport: Transport,
+}
+
+enum Transport {
+    Json { reader: BufReader<TcpStream>, writer: TcpStream },
+    Binary { stream: TcpStream, dec: FrameDecoder },
 }
 
 impl Client {
-    /// Connect to a server.
+    /// Connect with the codec the [`wire::WIRE_ENV`] pin selects
+    /// (line-JSON unless pinned to binary).
     pub fn connect(addr: SocketAddr) -> std::io::Result<Client> {
-        let stream = TcpStream::connect(addr)?;
-        let writer = stream.try_clone()?;
-        Ok(Client { reader: BufReader::new(stream), writer })
+        if wire::binary_env_requested() {
+            Self::connect_binary(addr)
+        } else {
+            Self::connect_json(addr)
+        }
     }
 
-    /// Send one request object, wait for the response line.
-    pub fn call(&mut self, req: &Json) -> std::io::Result<Json> {
-        self.writer.write_all(req.dump().as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        parse(line.trim()).map_err(|e| {
-            std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+    /// Connect speaking newline-delimited JSON (the default protocol).
+    pub fn connect_json(addr: SocketAddr) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client {
+            transport: Transport::Json { reader: BufReader::new(stream), writer },
         })
     }
 
-    /// Convenience: a BOUNDEDME query.
+    /// Connect speaking the binary frame protocol (negotiated by the
+    /// first frame's magic; nothing is sent until the first call).
+    pub fn connect_binary(addr: SocketAddr) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client { transport: Transport::Binary { stream, dec: FrameDecoder::new() } })
+    }
+
+    /// Whether this client speaks the binary codec.
+    pub fn is_binary(&self) -> bool {
+        matches!(self.transport, Transport::Binary { .. })
+    }
+
+    /// Send one request object, wait for the response document. Over
+    /// binary transport the document rides an `OP_JSON` frame — every
+    /// op works identically on either codec.
+    pub fn call(&mut self, req: &Json) -> std::io::Result<Json> {
+        match &mut self.transport {
+            Transport::Json { reader, writer } => {
+                writer.write_all(req.dump().as_bytes())?;
+                writer.write_all(b"\n")?;
+                let mut line = String::new();
+                reader.read_line(&mut line)?;
+                parse(line.trim()).map_err(|e| {
+                    std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+                })
+            }
+            Transport::Binary { stream, dec } => {
+                let mut out = Vec::new();
+                frame::encode_frame(frame::OP_JSON, req.dump().as_bytes(), &mut out);
+                stream.write_all(&out)?;
+                let (op, body) = read_frame(stream, dec)?;
+                match op {
+                    frame::RESP_JSON => {
+                        parse(String::from_utf8_lossy(&body).trim()).map_err(|e| {
+                            std::io::Error::new(
+                                std::io::ErrorKind::InvalidData,
+                                e.to_string(),
+                            )
+                        })
+                    }
+                    frame::RESP_ERROR => {
+                        Ok(wire::error_json(&String::from_utf8_lossy(&body)))
+                    }
+                    _ => Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        "unexpected response op",
+                    )),
+                }
+            }
+        }
+    }
+
+    /// Convenience: a BOUNDEDME query (as a JSON document, on either
+    /// codec).
     pub fn query(
         &mut self,
         vector: &[f32],
@@ -337,6 +486,74 @@ impl Client {
             ("epsilon", Json::Num(epsilon)),
             ("delta", Json::Num(delta)),
         ]))
+    }
+
+    /// Send `vectors` as **one** binary `OP_QUERY` frame (admitted by
+    /// the coordinator as one batch group) and collect the per-vector
+    /// replies, in request order. Requires a binary connection.
+    pub fn query_binary(
+        &mut self,
+        vectors: &[&[f32]],
+        opts: &QueryOpts,
+    ) -> std::io::Result<Vec<QueryReply>> {
+        let Transport::Binary { stream, dec } = &mut self.transport else {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "query_binary requires a binary connection (Client::connect_binary)",
+            ));
+        };
+        let mut out = Vec::new();
+        binary::encode_query_frame(vectors, opts, &mut out).map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidInput, e.to_string())
+        })?;
+        stream.write_all(&out)?;
+        let mut replies = Vec::with_capacity(vectors.len());
+        for _ in 0..vectors.len() {
+            let (op, body) = read_frame(stream, dec)?;
+            replies.push(match op {
+                frame::RESP_QUERY => binary::decode_reply(&body).map_err(|e| {
+                    std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+                })?,
+                frame::RESP_ERROR => {
+                    QueryReply::from_error(String::from_utf8_lossy(&body).into_owned())
+                }
+                _ => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        "unexpected response op",
+                    ))
+                }
+            });
+        }
+        Ok(replies)
+    }
+}
+
+/// Block until one complete frame arrives, returning it owned.
+fn read_frame(
+    stream: &mut TcpStream,
+    dec: &mut FrameDecoder,
+) -> std::io::Result<(u8, Vec<u8>)> {
+    let mut tmp = [0u8; 16 * 1024];
+    loop {
+        match dec.try_frame() {
+            Ok(Some(f)) => return Ok((f.op, f.body.to_vec())),
+            Ok(None) => {}
+            Err(e) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    e.to_string(),
+                ))
+            }
+        }
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed mid-frame",
+            ));
+        }
+        dec.feed(&tmp[..n]);
     }
 }
 
@@ -378,6 +595,21 @@ mod tests {
             let resp = handle_line(bad, &coord);
             assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{bad}");
         }
+
+        // Storage overrides: a known tier is accepted, junk is not.
+        let line = format!(
+            r#"{{"op":"query","vector":[{}],"k":3,"epsilon":0.2,"delta":0.2,"storage":"f32"}}"#,
+            q.join(",")
+        );
+        let resp = handle_line(&line, &coord);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(resp.get("storage").unwrap().as_str(), Some("f32"));
+        let line = format!(
+            r#"{{"op":"query","vector":[{}],"storage":"f8"}}"#,
+            q.join(",")
+        );
+        let resp = handle_line(&line, &coord);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
     }
 
     #[test]
@@ -460,6 +692,8 @@ mod tests {
             "mutations",
             "mutation_rows",
             "shed_superseded",
+            "wire_json",
+            "wire_binary",
             "generation",
             "generations_alive",
         ] {
@@ -470,6 +704,9 @@ mod tests {
         // No hedging configured: fired = won = lost = 0.
         assert_eq!(m.get("hedge_lost").unwrap().as_usize(), Some(0));
         assert_eq!(m.get("generations_alive").unwrap().as_usize(), Some(1));
+        // handle_line was called in-process: no wire requests recorded.
+        assert_eq!(m.get("wire_json").unwrap().as_usize(), Some(0));
+        assert_eq!(m.get("wire_binary").unwrap().as_usize(), Some(0));
     }
 
     #[test]
@@ -485,6 +722,7 @@ mod tests {
         assert!(body.contains("# TYPE pallas_queries_total counter"));
         assert!(body.contains("pallas_shard_dispatches_total{shard=\"0\"}"));
         assert!(body.contains("pallas_generation "));
+        assert!(body.contains("pallas_wire_requests_total{codec=\"json\"}"));
     }
 
     #[test]
@@ -524,6 +762,12 @@ mod tests {
             panic!("spans not an array");
         };
         assert!(!spans.is_empty());
+        // handle_line stamps a decode time, so the trace carries a
+        // decode span ahead of the queue wait.
+        assert!(
+            spans.iter().any(|s| s.get("label").unwrap().as_str() == Some("decode")),
+            "no decode span in {spans:?}"
+        );
     }
 
     #[test]
@@ -544,6 +788,42 @@ mod tests {
         let metrics =
             client.call(&Json::obj([("op", Json::Str("metrics".into()))])).unwrap();
         assert!(metrics.get("queries").unwrap().as_usize().unwrap() >= 1);
+
+        server.shutdown();
+    }
+
+    #[test]
+    fn binary_transport_serves_json_ops_and_query_frames() {
+        let coord = coordinator();
+        let server = Server::start(coord, "127.0.0.1:0", 4).unwrap();
+        let addr = server.addr();
+
+        let mut bin = Client::connect_binary(addr).unwrap();
+        assert!(bin.is_binary());
+        // JSON ops ride OP_JSON frames transparently.
+        let pong = bin.call(&Json::obj([("op", Json::Str("ping".into()))])).unwrap();
+        assert_eq!(pong.get("pong").unwrap().as_bool(), Some(true));
+
+        // A binary query frame answers with typed replies.
+        let v = vec![0.5f32; 32];
+        let replies = bin
+            .query_binary(
+                &[&v],
+                &QueryOpts { k: 5, epsilon: 0.1, delta: 0.1, ..Default::default() },
+            )
+            .unwrap();
+        assert_eq!(replies.len(), 1);
+        assert!(replies[0].ok, "{:?}", replies[0].error);
+        assert_eq!(replies[0].indices.len(), 5);
+
+        // Both codecs were recorded against the wire counters.
+        let m = bin.call(&Json::obj([("op", Json::Str("metrics".into()))])).unwrap();
+        assert!(m.get("wire_binary").unwrap().as_usize().unwrap() >= 2);
+
+        // A JSON client coexists on the same server.
+        let mut js = Client::connect_json(addr).unwrap();
+        let resp = js.query(&v, 5, 0.1, 0.1).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
 
         server.shutdown();
     }

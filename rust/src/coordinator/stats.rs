@@ -127,6 +127,8 @@ pub struct MetricsRegistry {
     mutations: AtomicU64,
     mutation_rows: AtomicU64,
     shed_superseded: AtomicU64,
+    wire_json: AtomicU64,
+    wire_binary: AtomicU64,
     queue_wait: AtomicDurHistogram,
     service: AtomicDurHistogram,
     shards: Box<[ShardStats]>,
@@ -191,6 +193,13 @@ pub struct MetricsSnapshot {
     /// Total items across all formed batches (`mean_batch_size`'s
     /// numerator, exposed so dashboards need no derived math).
     pub batch_items: u64,
+    /// Wire requests decoded by the TCP front-end over the line-JSON
+    /// codec (one per JSON line or JSON-framed document). Zero for
+    /// in-process callers — the coordinator itself never records these.
+    pub wire_json: u64,
+    /// Wire requests decoded over the binary codec (one per frame; a
+    /// batch-query frame carrying B vectors counts once).
+    pub wire_binary: u64,
     /// Hedges that fired but lost the race (`hedge_fired − hedge_won`,
     /// saturating): the duplicated work that bought no latency.
     pub hedge_lost: u64,
@@ -227,6 +236,8 @@ impl MetricsRegistry {
             mutations: AtomicU64::new(0),
             mutation_rows: AtomicU64::new(0),
             shed_superseded: AtomicU64::new(0),
+            wire_json: AtomicU64::new(0),
+            wire_binary: AtomicU64::new(0),
             queue_wait: AtomicDurHistogram::new(),
             service: AtomicDurHistogram::new(),
             shards: shards.into_boxed_slice(),
@@ -310,6 +321,18 @@ impl MetricsRegistry {
         self.shed_superseded.fetch_add(1, Relaxed);
     }
 
+    /// Record one wire request decoded by the TCP front-end against the
+    /// codec that carried it (`binary` = length-prefixed frames, else
+    /// line-JSON). A binary batch-query frame counts once however many
+    /// vectors it carries — the unit is *wire requests*, not queries.
+    pub fn record_wire(&self, binary: bool) {
+        if binary {
+            self.wire_binary.fetch_add(1, Relaxed);
+        } else {
+            self.wire_json.fetch_add(1, Relaxed);
+        }
+    }
+
     /// Copy out a snapshot (relaxed — see module docs).
     pub fn snapshot(&self) -> MetricsSnapshot {
         let batches = self.batches.load(Relaxed);
@@ -365,6 +388,8 @@ impl MetricsRegistry {
             mutation_rows: self.mutation_rows.load(Relaxed),
             shed_superseded: self.shed_superseded.load(Relaxed),
             batch_items,
+            wire_json: self.wire_json.load(Relaxed),
+            wire_binary: self.wire_binary.load(Relaxed),
             hedge_lost: hedge_fired.saturating_sub(hedge_won),
             shards,
         }
@@ -406,6 +431,17 @@ impl MetricsSnapshot {
             w.header(name, help, "counter");
             w.sample(name, &[], v as f64);
         }
+        w.header(
+            "pallas_wire_requests_total",
+            "Wire requests decoded by the TCP front-end, per codec.",
+            "counter",
+        );
+        w.sample("pallas_wire_requests_total", &[("codec", "json")], self.wire_json as f64);
+        w.sample(
+            "pallas_wire_requests_total",
+            &[("codec", "binary")],
+            self.wire_binary as f64,
+        );
         w.header("pallas_generation", "Current dataset generation id.", "gauge");
         w.sample("pallas_generation", &[], generation as f64);
         w.header("pallas_generations_alive", "Dataset generations not yet reclaimed.", "gauge");
@@ -602,9 +638,24 @@ mod tests {
             "pallas_shard_hedges_fired_total{shard=\"1\"} 1\n",
             "pallas_shard_merges_total{shard=\"1\"} 1\n",
             "pallas_shard_queue_depth{shard=\"0\"} 4\n",
+            "pallas_wire_requests_total{codec=\"json\"} 0\n",
+            "pallas_wire_requests_total{codec=\"binary\"} 0\n",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
         }
+    }
+
+    #[test]
+    fn wire_codec_counters() {
+        let m = MetricsRegistry::new();
+        m.record_wire(false);
+        m.record_wire(false);
+        m.record_wire(true);
+        let s = m.snapshot();
+        assert_eq!((s.wire_json, s.wire_binary), (2, 1));
+        let text = s.to_prometheus(0, 1);
+        assert!(text.contains("pallas_wire_requests_total{codec=\"json\"} 2\n"));
+        assert!(text.contains("pallas_wire_requests_total{codec=\"binary\"} 1\n"));
     }
 
     #[test]

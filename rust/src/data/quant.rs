@@ -92,6 +92,19 @@ impl Storage {
         }
     }
 
+    /// Parse a [`Self::label`] back to a tier (`None` for unknown
+    /// text). The wire layer uses this for the per-request `storage`
+    /// override in both codecs.
+    pub fn from_label(s: &str) -> Option<Storage> {
+        match s {
+            "f32" => Some(Storage::F32),
+            "f16" => Some(Storage::F16),
+            "bf16" => Some(Storage::Bf16),
+            "int8" => Some(Storage::Int8),
+            _ => None,
+        }
+    }
+
     /// The tier actually used once the process-wide
     /// [`FORCE_F32_ENV`] pin is applied.
     pub fn effective(self) -> Storage {

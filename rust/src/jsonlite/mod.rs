@@ -105,8 +105,17 @@ impl Json {
             Json::Bool(false) => out.push_str("false"),
             Json::Num(x) => {
                 if x.is_finite() {
-                    if x.fract() == 0.0 && x.abs() < 9e15 {
+                    // `-0.0` must keep its sign bit, so it takes the
+                    // float branch (the i64 cast would print "0").
+                    if x.fract() == 0.0 && x.abs() < 9e15 && (*x != 0.0 || x.is_sign_positive())
+                    {
                         let _ = write!(out, "{}", *x as i64);
+                    } else if x.abs() >= 1e17 || (*x != 0.0 && x.abs() < 1e-5) {
+                        // Positional `{}` never uses an exponent, so
+                        // extreme magnitudes would print hundreds of
+                        // digits. `{:e}` is shortest scientific
+                        // notation and still round-trips bit-exactly.
+                        let _ = write!(out, "{x:e}");
                     } else {
                         let _ = write!(out, "{x}");
                     }
@@ -175,6 +184,14 @@ impl std::fmt::Display for ParseError {
 }
 
 impl std::error::Error for ParseError {}
+
+/// Exact decimal powers of ten for the number fast path. Every entry
+/// is exactly representable in f64 (10¹⁵ < 2⁵³), which is what makes
+/// the fast path's single division correctly rounded — `10f64.powi`
+/// carries no such guarantee.
+const POW10: [f64; 16] = [
+    1e0, 1e1, 1e2, 1e3, 1e4, 1e5, 1e6, 1e7, 1e8, 1e9, 1e10, 1e11, 1e12, 1e13, 1e14, 1e15,
+];
 
 struct Parser<'a> {
     b: &'a [u8],
@@ -288,7 +305,68 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Single-pass fast path for the common wire-format number shape:
+    /// optional sign, digits, optional fraction, **no exponent**, and
+    /// at most 15 total digits. The accumulated mantissa (< 2⁵³) and
+    /// the divisor (10^frac ≤ 10¹⁵, from the exact [`POW10`] table)
+    /// are both exactly representable, so the single IEEE division is
+    /// correctly rounded — bit-identical to `str::parse::<f64>` on the
+    /// same text (Clinger's strtod fast path). Returns `None` without
+    /// consuming input on any shape it cannot prove exact; the caller
+    /// falls back to the general parse.
+    fn number_fast(&mut self) -> Option<f64> {
+        let b = self.b;
+        let mut j = self.i;
+        let neg = b.get(j) == Some(&b'-');
+        if neg {
+            j += 1;
+        }
+        let mut mant: u64 = 0;
+        let mut digits = 0usize;
+        let int_start = j;
+        while let Some(c) = b.get(j) {
+            if !c.is_ascii_digit() {
+                break;
+            }
+            mant = mant.wrapping_mul(10).wrapping_add((c - b'0') as u64);
+            digits += 1;
+            j += 1;
+        }
+        if j == int_start {
+            return None; // no integer digits — not a shape we handle
+        }
+        let mut frac = 0usize;
+        if b.get(j) == Some(&b'.') {
+            j += 1;
+            let frac_start = j;
+            while let Some(c) = b.get(j) {
+                if !c.is_ascii_digit() {
+                    break;
+                }
+                mant = mant.wrapping_mul(10).wrapping_add((c - b'0') as u64);
+                digits += 1;
+                frac += 1;
+                j += 1;
+            }
+            if j == frac_start {
+                return None; // "1." — defer to the general path
+            }
+        }
+        if matches!(b.get(j), Some(b'e') | Some(b'E')) {
+            return None; // exponent: general path
+        }
+        if digits > 15 {
+            return None; // mantissa may no longer be exact
+        }
+        self.i = j;
+        let v = mant as f64 / POW10[frac];
+        Some(if neg { -v } else { v })
+    }
+
     fn number(&mut self) -> Result<Json, ParseError> {
+        if let Some(v) = self.number_fast() {
+            return Ok(Json::Num(v));
+        }
         let start = self.i;
         if self.peek() == Some(b'-') {
             self.i += 1;
@@ -439,6 +517,78 @@ mod tests {
         assert_eq!(v.get("missing"), None);
         assert_eq!(Json::Num(1.5).as_usize(), None);
         assert_eq!(Json::Num(-2.0).as_usize(), None);
+    }
+
+    #[test]
+    fn number_fast_path_is_bit_identical_to_std_parse() {
+        // Shapes the single-pass accumulator handles directly.
+        for text in [
+            "0",
+            "-0",
+            "1",
+            "42",
+            "-3.5",
+            "0.1",
+            "123.456",
+            "999999999999999",
+            "-0.0",
+            "0.000123",
+            "7.25",
+        ] {
+            let want: f64 = text.parse().unwrap();
+            match parse(text).unwrap() {
+                Json::Num(x) => {
+                    assert_eq!(x.to_bits(), want.to_bits(), "fast path diverged on {text}")
+                }
+                other => panic!("{text} parsed to {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn number_slow_path_covers_exponents_and_long_mantissas() {
+        // Exponents and > 15-digit mantissas must fall back to the
+        // general parse and still agree with `str::parse` bit for bit.
+        for text in [
+            "1e3",
+            "-2.5E-4",
+            "1.7976931348623157e308",
+            "5e-324",
+            "0.1234567890123456789",
+            "3.141592653589793",
+        ] {
+            let want: f64 = text.parse().unwrap();
+            match parse(text).unwrap() {
+                Json::Num(x) => {
+                    assert_eq!(x.to_bits(), want.to_bits(), "slow path diverged on {text}")
+                }
+                other => panic!("{text} parsed to {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn extreme_magnitudes_dump_scientific_and_roundtrip() {
+        for v in
+            [1e300f64, -1e300, 1e-300, 5e-324, 1.5e18, f64::MAX, f64::MIN_POSITIVE, 2.5e-7]
+        {
+            let d = Json::Num(v).dump();
+            assert!(d.len() < 32, "{v} should dump compactly, got {d:?}");
+            match parse(&d).unwrap() {
+                Json::Num(x) => assert_eq!(x.to_bits(), v.to_bits(), "{v} via {d}"),
+                other => panic!("{d} parsed to {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn negative_zero_keeps_its_sign_bit() {
+        let d = Json::Num(-0.0).dump();
+        assert_eq!(d, "-0");
+        match parse(&d).unwrap() {
+            Json::Num(x) => assert_eq!(x.to_bits(), (-0.0f64).to_bits()),
+            other => panic!("-0 parsed to {other:?}"),
+        }
     }
 
     #[test]

@@ -41,6 +41,7 @@
 //! | [`trace`]  | flight recorder: per-query [`trace::QueryTrace`] span trees, sampling + slow-query retention, lossy lock-free rings |
 //! | [`runtime`] | scoring engines; PJRT/XLA artifact execution behind the `pjrt` feature |
 //! | [`coordinator`] | serving layer: plan-aware dynamic batcher, event-driven reactor (shard fan-out, completion-event merge, straggler hedging), S = 1 fast path, shard-pinned worker pool |
+//! | [`wire`] | pluggable TCP wire codecs: newline-delimited JSON (default) and length-prefixed binary frames with raw f32 query payloads, negotiated per connection from the first byte |
 //! | [`experiments`] | harness regenerating every paper table/figure |
 //! | [`errors`], [`logkit`], [`jsonlite`], [`sync`], [`benchkit`], [`cli`] | offline substrates (no external deps); [`sync`] adds `try_recv`/`Waker`/`Selector` polling primitives for the reactor and the [`sync::EpochGauge`] generation-reclamation gauge |
 //!
@@ -188,6 +189,44 @@
 //! bench's `query/ctx_reuse_traced` row keeps the tracing tax on the
 //! bench trajectory.
 //!
+//! ## Wire protocol
+//!
+//! The TCP front-end's protocol is a pluggable [`wire::Codec`] axis,
+//! negotiated **per connection from the first byte**: anything that can
+//! start a JSON document keeps the original newline-delimited JSON
+//! protocol bit-for-bit ([`wire::LineJsonCodec`]), while the frame
+//! magic's leading `b'P'` — which no JSON document can start with —
+//! selects [`wire::BinaryCodec`]. Binary transport exists because at
+//! d = 4096 a query vector costs ~13 ASCII bytes per coordinate as
+//! decimal JSON but exactly 4 as raw little-endian f32, and parsing the
+//! text costs more than answering the query. Every frame is
+//!
+//! ```text
+//! ┌──────────┬─────┬────┬──────────┬─────────────┬──────────────────┐
+//! │ "PLW1"   │ op  │ 0  │ body_len │ QueryHeader │ B·d raw LE f32   │
+//! │ magic ×4 │ u8  │ ×3 │ u32 LE   │ 48 bytes    │ coordinates      │
+//! └──────────┴─────┴────┴──────────┴─────────────┴──────────────────┘
+//! ```
+//!
+//! where `OP_QUERY` bodies carry one [`wire::frame::QueryHeader`]
+//! (k, ε, δ, seed, deadline, mode, storage-tier override, count, dim)
+//! followed by B vectors of contiguous raw coordinates — decoded
+//! straight off the frame buffer into [`coordinator::QueryRequest`]s
+//! with no intermediate JSON values, and submitted together so the
+//! batcher admits the frame as **one group**. `OP_JSON` frames embed a
+//! line-protocol document verbatim, so every op (metrics, mutate,
+//! trace, …) works identically over either codec. Hostile length
+//! prefixes (zero or > 64 MiB) are rejected from the 12-byte preamble
+//! alone, before any allocation. Queries may override the sampling
+//! tier per request (`"storage"` field / header byte); resolution
+//! against the deployed tier is [`coordinator::resolve_storage`]'s.
+//! The codec split is observable end-to-end: wire requests count into
+//! `pallas_wire_requests_total{codec=…}` and the flight recorder's
+//! `decode` span carries the protocol tax per query. The codec
+//! equivalence battery (`tests/wire_protocol.rs`) proves both codecs
+//! produce byte-identical answers; `benches/serving.rs` tracks
+//! decode-only and end-to-end rows per codec.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -242,6 +281,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod sync;
 pub mod trace;
+pub mod wire;
 
 /// Crate-wide result alias.
 pub type Result<T> = errors::Result<T>;

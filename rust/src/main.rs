@@ -101,7 +101,7 @@ fn cmd_serve(args: &Args) -> bandit_mips::Result<()> {
     };
     let cfg = CoordinatorConfig { workers, backend, ..Default::default() };
 
-    // TCP mode: expose the line-protocol server and block forever.
+    // TCP mode: expose the wire server and block forever.
     if let Some(bind) = args.get_str("tcp") {
         let coord = std::sync::Arc::new(Coordinator::new(ds.vectors.clone(), cfg)?);
         let server = bandit_mips::coordinator::server::Server::start(
@@ -110,7 +110,10 @@ fn cmd_serve(args: &Args) -> bandit_mips::Result<()> {
             args.get("max-conns", 64usize),
         )?;
         println!("serving {} ({}x{}) on {}", ds.name, ds.n(), ds.dim(), server.addr());
-        println!("protocol: newline-delimited JSON; ops: query | metrics | ping");
+        println!(
+            "protocol: negotiated per connection — newline-delimited JSON (default) \
+             or PLW1 binary frames; ops: query | mutate | metrics | metrics_prom | trace | ping"
+        );
         loop {
             std::thread::sleep(Duration::from_secs(3600));
         }

@@ -93,8 +93,8 @@ impl Default for TraceConfig {
 /// comparable.
 #[derive(Clone, Debug)]
 pub struct Span {
-    /// What the interval covers (`"queue"`, `"shard"`, `"bandit"`,
-    /// `"round"`, `"confirm"`, `"compute"`).
+    /// What the interval covers (`"decode"`, `"queue"`, `"shard"`,
+    /// `"bandit"`, `"round"`, `"confirm"`, `"compute"`).
     pub label: &'static str,
     /// Shard the span is scoped to, `-1` for query-wide spans.
     pub shard: i64,
@@ -144,6 +144,11 @@ pub struct QueryTrace {
     pub hedge_fired: bool,
     /// Whether a hedge dispatch delivered the winning partial.
     pub hedge_won: bool,
+    /// Wire-decode wall time, ns (0 for in-process submissions). The
+    /// codec pays this *before* submission, so the matching `"decode"`
+    /// span is re-anchored at `[0, decode_ns]` — the protocol tax shows
+    /// up ahead of the queue wait instead of vanishing off-trace.
+    pub decode_ns: u64,
     /// Submission → pickup, ns.
     pub queue_wait_ns: u64,
     /// Pickup → reply, ns.
@@ -181,6 +186,7 @@ impl TraceBuilder {
                 shards: 1,
                 hedge_fired: false,
                 hedge_won: false,
+                decode_ns: 0,
                 queue_wait_ns: 0,
                 service_ns: 0,
                 shed: false,
@@ -425,6 +431,7 @@ pub fn trace_to_json(t: &QueryTrace) -> Json {
         ("shards", Json::Num(t.shards as f64)),
         ("hedge_fired", Json::Bool(t.hedge_fired)),
         ("hedge_won", Json::Bool(t.hedge_won)),
+        ("decode_us", Json::Num(t.decode_ns as f64 / 1e3)),
         ("queue_wait_us", Json::Num(t.queue_wait_ns as f64 / 1e3)),
         ("service_us", Json::Num(t.service_ns as f64 / 1e3)),
         ("shed", Json::Bool(t.shed)),

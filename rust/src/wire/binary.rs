@@ -1,0 +1,482 @@
+//! The binary codec: [`super::frame`] frames over the socket, with the
+//! query payload as raw little-endian f32 — one bulk byte-to-float
+//! conversion straight off the frame buffer, no JSON values anywhere on
+//! the path. A warmed decoder extracts query payloads with zero
+//! allocations (gated by the counting allocator in the serving bench).
+
+use super::frame::{
+    self, FrameError, QueryHeader, RespHeader, FLAG_OK, FLAG_SHED, QUERY_HEADER_LEN,
+    RESP_HEADER_LEN,
+};
+use super::{Codec, WireRequest};
+use crate::coordinator::{QueryMode, QueryRequest, QueryResponse};
+use crate::data::quant::Storage;
+use crate::jsonlite::Json;
+use std::time::{Duration, Instant};
+
+/// [`QueryHeader::mode`] encoding.
+pub fn mode_to_byte(mode: QueryMode) -> u8 {
+    match mode {
+        QueryMode::BoundedMe => 0,
+        QueryMode::Exact => 1,
+        QueryMode::Auto => 2,
+    }
+}
+
+/// Inverse of [`mode_to_byte`].
+pub fn mode_from_byte(b: u8) -> Result<QueryMode, FrameError> {
+    match b {
+        0 => Ok(QueryMode::BoundedMe),
+        1 => Ok(QueryMode::Exact),
+        2 => Ok(QueryMode::Auto),
+        _ => Err(FrameError::BadHeader("unknown query mode byte")),
+    }
+}
+
+/// [`QueryHeader::storage`] encoding: 0 = no override (deployment
+/// default), 1–4 = an explicit tier.
+pub fn storage_to_byte(storage: Option<Storage>) -> u8 {
+    match storage {
+        None => 0,
+        Some(Storage::F32) => 1,
+        Some(Storage::F16) => 2,
+        Some(Storage::Bf16) => 3,
+        Some(Storage::Int8) => 4,
+    }
+}
+
+/// Inverse of [`storage_to_byte`].
+pub fn storage_from_byte(b: u8) -> Result<Option<Storage>, FrameError> {
+    match b {
+        0 => Ok(None),
+        1 => Ok(Some(Storage::F32)),
+        2 => Ok(Some(Storage::F16)),
+        3 => Ok(Some(Storage::Bf16)),
+        4 => Ok(Some(Storage::Int8)),
+        _ => Err(FrameError::BadHeader("unknown storage byte")),
+    }
+}
+
+/// Per-batch query knobs for [`encode_query_frame`] /
+/// [`crate::coordinator::server::Client::query_binary`]. Defaults
+/// mirror the JSON protocol's (k=10, ε=δ=0.1, BOUNDEDME, no deadline,
+/// deployment storage).
+#[derive(Clone, Debug)]
+pub struct QueryOpts {
+    /// Top-K per query.
+    pub k: usize,
+    /// Range-relative ε.
+    pub epsilon: f64,
+    /// Failure probability δ.
+    pub delta: f64,
+    /// Pull-order seed shared by the batch.
+    pub seed: u64,
+    /// Query mode.
+    pub mode: QueryMode,
+    /// Per-request deadline.
+    pub deadline: Option<Duration>,
+    /// Storage-tier override (see
+    /// [`crate::coordinator::resolve_storage`]).
+    pub storage: Option<Storage>,
+}
+
+impl Default for QueryOpts {
+    fn default() -> Self {
+        QueryOpts {
+            k: 10,
+            epsilon: 0.1,
+            delta: 0.1,
+            seed: 0,
+            mode: QueryMode::BoundedMe,
+            deadline: None,
+            storage: None,
+        }
+    }
+}
+
+/// One decoded [`frame::RESP_QUERY`] (or [`frame::RESP_ERROR`]) reply.
+#[derive(Clone, Debug)]
+pub struct QueryReply {
+    /// The query produced results.
+    pub ok: bool,
+    /// The query was shed (deadline exceeded; no results).
+    pub shed: bool,
+    /// Error message when the reply was a [`frame::RESP_ERROR`] frame.
+    pub error: Option<String>,
+    /// Result row ids, best first.
+    pub indices: Vec<u64>,
+    /// Result scores, best first (bit-exact f32 off the wire).
+    pub scores: Vec<f32>,
+    /// Flops the query spent.
+    pub flops: u64,
+    /// Service time, ns.
+    pub service_ns: u64,
+    /// Generation the indices refer to.
+    pub generation: u64,
+    /// Batch size the query rode in.
+    pub batch: u32,
+    /// Storage tier the sampling step ran on.
+    pub storage: Storage,
+}
+
+impl QueryReply {
+    /// Reply shape of a [`frame::RESP_ERROR`] frame.
+    pub fn from_error(msg: String) -> QueryReply {
+        QueryReply {
+            ok: false,
+            shed: false,
+            error: Some(msg),
+            indices: Vec::new(),
+            scores: Vec::new(),
+            flops: 0,
+            service_ns: 0,
+            generation: 0,
+            batch: 0,
+            storage: Storage::F32,
+        }
+    }
+}
+
+/// Encode one [`frame::OP_QUERY`] frame carrying `vectors` as one
+/// batch. All vectors must share one nonzero dimension.
+pub fn encode_query_frame(
+    vectors: &[&[f32]],
+    opts: &QueryOpts,
+    out: &mut Vec<u8>,
+) -> Result<(), FrameError> {
+    if vectors.is_empty() {
+        return Err(FrameError::BadHeader("query count must be >= 1"));
+    }
+    let dim = vectors[0].len();
+    if dim == 0 || vectors.iter().any(|v| v.len() != dim) {
+        return Err(FrameError::BadHeader("vectors must share one nonzero dim"));
+    }
+    let at = frame::begin_frame(frame::OP_QUERY, out);
+    QueryHeader {
+        k: opts.k as u32,
+        epsilon: opts.epsilon,
+        delta: opts.delta,
+        seed: opts.seed,
+        deadline_ns: opts.deadline.map(|d| d.as_nanos() as u64).unwrap_or(0),
+        mode: mode_to_byte(opts.mode),
+        storage: storage_to_byte(opts.storage),
+        count: vectors.len() as u32,
+        dim: dim as u32,
+    }
+    .write(out);
+    out.reserve(vectors.len() * dim * 4);
+    for v in vectors {
+        for x in *v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    frame::end_frame(at, out);
+    Ok(())
+}
+
+/// Decode-only fast path (the serving bench's `wire_binary` rows):
+/// parse an [`frame::OP_QUERY`] body's header and bulk-convert every
+/// coordinate into `coords`. A warmed `coords` is reused without
+/// reallocation, so the steady state is allocation-free.
+pub fn decode_query_payload(
+    body: &[u8],
+    coords: &mut Vec<f32>,
+) -> Result<QueryHeader, FrameError> {
+    let h = QueryHeader::parse(body)?;
+    coords.clear();
+    coords.reserve(h.count as usize * h.dim as usize);
+    coords.extend(
+        body[QUERY_HEADER_LEN..]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+    );
+    Ok(h)
+}
+
+/// Decode one [`frame::RESP_QUERY`] body.
+pub fn decode_reply(body: &[u8]) -> Result<QueryReply, FrameError> {
+    let h = RespHeader::parse(body)?;
+    let storage = storage_from_byte(h.storage)?
+        .ok_or(FrameError::BadHeader("response storage byte must name a tier"))?;
+    let n = h.count as usize;
+    let mut indices = Vec::with_capacity(n);
+    let mut off = RESP_HEADER_LEN;
+    for _ in 0..n {
+        indices.push(u64::from_le_bytes(body[off..off + 8].try_into().unwrap()));
+        off += 8;
+    }
+    let mut scores = Vec::with_capacity(n);
+    for _ in 0..n {
+        scores.push(f32::from_le_bytes(body[off..off + 4].try_into().unwrap()));
+        off += 4;
+    }
+    Ok(QueryReply {
+        ok: h.flags & FLAG_OK != 0,
+        shed: h.flags & FLAG_SHED != 0,
+        error: None,
+        indices,
+        scores,
+        flops: h.flops,
+        service_ns: h.service_ns,
+        generation: h.generation,
+        batch: h.batch,
+        storage,
+    })
+}
+
+/// Length-prefixed binary codec (negotiated by a leading frame magic).
+#[derive(Default)]
+pub struct BinaryCodec {
+    dec: frame::FrameDecoder,
+}
+
+impl BinaryCodec {
+    /// Fresh codec.
+    pub fn new() -> Self {
+        BinaryCodec { dec: frame::FrameDecoder::new() }
+    }
+}
+
+impl Codec for BinaryCodec {
+    fn name(&self) -> &'static str {
+        "binary"
+    }
+
+    fn feed(&mut self, bytes: &[u8]) {
+        self.dec.feed(bytes);
+    }
+
+    fn try_decode(&mut self) -> Result<Option<WireRequest>, FrameError> {
+        let t0 = Instant::now();
+        let Some(f) = self.dec.try_frame()? else {
+            return Ok(None);
+        };
+        match f.op {
+            frame::OP_JSON => {
+                let text = String::from_utf8_lossy(f.body).trim().to_string();
+                Ok(Some(WireRequest::Line(text)))
+            }
+            frame::OP_QUERY => {
+                let h = QueryHeader::parse(f.body)?;
+                let mode = mode_from_byte(h.mode)?;
+                let storage = storage_from_byte(h.storage)?;
+                let deadline =
+                    (h.deadline_ns > 0).then(|| Duration::from_nanos(h.deadline_ns));
+                let dim = h.dim as usize;
+                let mut requests = Vec::with_capacity(h.count as usize);
+                let mut off = QUERY_HEADER_LEN;
+                for _ in 0..h.count {
+                    // The one unavoidable copy: bulk LE bytes → the
+                    // owned coordinate vector the coordinator takes.
+                    let mut vector = Vec::with_capacity(dim);
+                    vector.extend(
+                        f.body[off..off + dim * 4]
+                            .chunks_exact(4)
+                            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+                    );
+                    off += dim * 4;
+                    requests.push(QueryRequest {
+                        vector,
+                        k: h.k as usize,
+                        epsilon: h.epsilon,
+                        delta: h.delta,
+                        mode,
+                        seed: h.seed,
+                        deadline,
+                        storage,
+                        decode_ns: 0,
+                    });
+                }
+                // Frame decode happened before submission; the
+                // coordinator re-anchors this as a `decode` span.
+                let decode_ns = t0.elapsed().as_nanos() as u64;
+                for r in &mut requests {
+                    r.decode_ns = decode_ns;
+                }
+                Ok(Some(WireRequest::Query(requests)))
+            }
+            _ => Err(FrameError::BadHeader("unknown request op")),
+        }
+    }
+
+    fn encode_json(&mut self, doc: &Json, out: &mut Vec<u8>) {
+        frame::encode_frame(frame::RESP_JSON, doc.dump().as_bytes(), out);
+    }
+
+    fn encode_reply(&mut self, resp: &QueryResponse, out: &mut Vec<u8>) {
+        let at = frame::begin_frame(frame::RESP_QUERY, out);
+        RespHeader {
+            flags: if resp.shed { FLAG_SHED } else { FLAG_OK },
+            storage: storage_to_byte(Some(resp.storage)),
+            count: resp.indices.len() as u32,
+            flops: resp.flops,
+            service_ns: resp.service.as_nanos() as u64,
+            generation: resp.generation,
+            batch: resp.batch_size as u32,
+        }
+        .write(out);
+        for &i in &resp.indices {
+            out.extend_from_slice(&(i as u64).to_le_bytes());
+        }
+        for &s in &resp.scores {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        frame::end_frame(at, out);
+    }
+
+    fn encode_error(&mut self, msg: &str, out: &mut Vec<u8>) {
+        frame::encode_frame(frame::RESP_ERROR, msg.as_bytes(), out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_maps_roundtrip_and_reject_unknowns() {
+        for mode in [QueryMode::BoundedMe, QueryMode::Exact, QueryMode::Auto] {
+            assert_eq!(mode_from_byte(mode_to_byte(mode)).unwrap(), mode);
+        }
+        assert!(mode_from_byte(9).is_err());
+        for s in [
+            None,
+            Some(Storage::F32),
+            Some(Storage::F16),
+            Some(Storage::Bf16),
+            Some(Storage::Int8),
+        ] {
+            assert_eq!(storage_from_byte(storage_to_byte(s)).unwrap(), s);
+        }
+        assert!(storage_from_byte(200).is_err());
+    }
+
+    #[test]
+    fn query_frame_roundtrips_through_the_codec() {
+        let v0: Vec<f32> = (0..8).map(|i| i as f32 * 0.5 - 2.0).collect();
+        let v1: Vec<f32> = (0..8).map(|i| -(i as f32) * 0.25).collect();
+        let opts = QueryOpts {
+            k: 3,
+            epsilon: 0.07,
+            delta: 0.02,
+            seed: 99,
+            mode: QueryMode::Auto,
+            deadline: Some(Duration::from_millis(40)),
+            storage: Some(Storage::Int8),
+        };
+        let mut wire = Vec::new();
+        encode_query_frame(&[&v0, &v1], &opts, &mut wire).unwrap();
+        let mut codec = BinaryCodec::new();
+        codec.feed(&wire);
+        let Ok(Some(WireRequest::Query(reqs))) = codec.try_decode() else {
+            panic!("expected a query batch");
+        };
+        assert_eq!(reqs.len(), 2);
+        for (req, v) in reqs.iter().zip([&v0, &v1]) {
+            assert_eq!(req.k, 3);
+            assert_eq!(req.epsilon, 0.07);
+            assert_eq!(req.delta, 0.02);
+            assert_eq!(req.seed, 99);
+            assert_eq!(req.mode, QueryMode::Auto);
+            assert_eq!(req.deadline, Some(Duration::from_millis(40)));
+            assert_eq!(req.storage, Some(Storage::Int8));
+            // Coordinates survive bit-exactly (raw LE f32, no decimal
+            // round-trip).
+            for (a, b) in req.vector.iter().zip(v.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn reply_roundtrips_bit_exactly() {
+        let resp = QueryResponse {
+            indices: vec![4, 17, 0],
+            scores: vec![3.5, -0.25, f32::MIN_POSITIVE],
+            flops: 9876,
+            queue_wait: Duration::from_micros(12),
+            service: Duration::from_micros(345),
+            batch_size: 7,
+            worker: 2,
+            shed: false,
+            shards: 1,
+            storage: Storage::Bf16,
+            generation: 5,
+        };
+        let mut codec = BinaryCodec::new();
+        let mut wire = Vec::new();
+        codec.encode_reply(&resp, &mut wire);
+        let mut dec = frame::FrameDecoder::new();
+        dec.feed(&wire);
+        let f = dec.try_frame().unwrap().unwrap();
+        assert_eq!(f.op, frame::RESP_QUERY);
+        let reply = decode_reply(f.body).unwrap();
+        assert!(reply.ok && !reply.shed);
+        assert_eq!(reply.indices, vec![4, 17, 0]);
+        for (a, b) in reply.scores.iter().zip(&resp.scores) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(reply.flops, 9876);
+        assert_eq!(reply.service_ns, 345_000);
+        assert_eq!(reply.generation, 5);
+        assert_eq!(reply.batch, 7);
+        assert_eq!(reply.storage, Storage::Bf16);
+    }
+
+    #[test]
+    fn shed_reply_carries_the_flag_and_no_results() {
+        let resp = QueryResponse {
+            indices: Vec::new(),
+            scores: Vec::new(),
+            flops: 0,
+            queue_wait: Duration::from_micros(900),
+            service: Duration::ZERO,
+            batch_size: 0,
+            worker: usize::MAX,
+            shed: true,
+            shards: 0,
+            storage: Storage::F32,
+            generation: 0,
+        };
+        let mut codec = BinaryCodec::new();
+        let mut wire = Vec::new();
+        codec.encode_reply(&resp, &mut wire);
+        let mut dec = frame::FrameDecoder::new();
+        dec.feed(&wire);
+        let f = dec.try_frame().unwrap().unwrap();
+        let reply = decode_reply(f.body).unwrap();
+        assert!(!reply.ok && reply.shed);
+        assert!(reply.indices.is_empty() && reply.scores.is_empty());
+    }
+
+    #[test]
+    fn decode_payload_reuses_its_buffer() {
+        let v: Vec<f32> = (0..128).map(|i| (i as f32).sin()).collect();
+        let mut wire = Vec::new();
+        encode_query_frame(&[&v], &QueryOpts::default(), &mut wire).unwrap();
+        let body = &wire[frame::PREAMBLE_LEN..];
+        let mut coords = Vec::new();
+        for _ in 0..3 {
+            let h = decode_query_payload(body, &mut coords).unwrap();
+            assert_eq!((h.count, h.dim), (1, 128));
+            assert_eq!(coords.len(), 128);
+            for (a, b) in coords.iter().zip(&v) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let v = vec![1.0f32; 16];
+        let mut wire = Vec::new();
+        encode_query_frame(&[&v], &QueryOpts::default(), &mut wire).unwrap();
+        // Lie about the body length: shrink the payload but keep the
+        // header's count·dim claim.
+        let body = &wire[frame::PREAMBLE_LEN..wire.len() - 4];
+        assert!(matches!(
+            QueryHeader::parse(body),
+            Err(FrameError::BadHeader(_))
+        ));
+    }
+}

@@ -1,0 +1,470 @@
+//! Length-prefixed binary frames: preamble layout, the incremental
+//! [`FrameDecoder`], and the fixed request/response headers.
+//!
+//! Every frame is
+//!
+//! ```text
+//! ┌────────────┬────┬─────────────┬──────────────┬────────────┐
+//! │ "PLW1"     │ op │ reserved    │ body_len     │ body       │
+//! │ 4 B magic  │ u8 │ 3 B zeroes  │ u32 LE       │ body_len B │
+//! └────────────┴────┴─────────────┴──────────────┴────────────┘
+//! ```
+//!
+//! The magic's last byte is the protocol version (`'1'`), so a future
+//! layout bumps the magic instead of growing a separate field; the
+//! reserved bytes are written as zeroes and ignored on decode. A
+//! `body_len` of zero or above [`MAX_BODY`] is rejected as soon as the
+//! 12-byte preamble is visible — **before** any buffer is sized to it,
+//! so a hostile length prefix cannot make the server allocate.
+
+use std::fmt;
+
+/// Frame magic; the last byte is the wire-format version.
+pub const MAGIC: [u8; 4] = *b"PLW1";
+/// Bytes before the body: magic + op + 3 reserved + `body_len` u32.
+pub const PREAMBLE_LEN: usize = 12;
+/// Upper bound on `body_len` (64 MiB ≈ a 4096-dim f32 batch of 4096
+/// vectors — far above any sane request, far below an allocation DoS).
+pub const MAX_BODY: usize = 64 << 20;
+
+/// Request op: the body is one JSON document, dispatched exactly like a
+/// line of the line-JSON protocol (any op: `ping`, `metrics`, `mutate`,
+/// even `query`).
+pub const OP_JSON: u8 = 0x00;
+/// Request op: a binary query batch ([`QueryHeader`] + raw LE f32
+/// vectors). All vectors in one frame are admitted together, so the
+/// batcher sees them as one group.
+pub const OP_QUERY: u8 = 0x01;
+/// Response op: body is one JSON document (the reply to [`OP_JSON`]).
+pub const RESP_JSON: u8 = 0x80;
+/// Response op: one [`RespHeader`] + indices/scores payload. An
+/// [`OP_QUERY`] frame with B vectors is answered by B of these, in
+/// request order.
+pub const RESP_QUERY: u8 = 0x81;
+/// Response op: UTF-8 error message (protocol violations and rejected
+/// submissions).
+pub const RESP_ERROR: u8 = 0x82;
+
+/// Frame-layer violations. All of these are unrecoverable for the
+/// connection: after [`FrameDecoder::try_frame`] returns one, resync
+/// inside the byte stream is not attempted — the server replies with a
+/// [`RESP_ERROR`] frame and closes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// First four bytes of a frame were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// `body_len` was zero (no op has an empty body).
+    EmptyBody,
+    /// `body_len` exceeded [`MAX_BODY`].
+    Oversized(usize),
+    /// A body ended before its fixed header was complete.
+    Truncated {
+        /// Bytes the header needed.
+        need: usize,
+        /// Bytes the body actually carried.
+        got: usize,
+    },
+    /// A structurally complete header carried an invalid field.
+    BadHeader(&'static str),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            FrameError::EmptyBody => write!(f, "zero-length frame body"),
+            FrameError::Oversized(n) => {
+                write!(f, "frame body of {n} bytes exceeds the {MAX_BODY}-byte cap")
+            }
+            FrameError::Truncated { need, got } => {
+                write!(f, "truncated frame body: header needs {need} bytes, got {got}")
+            }
+            FrameError::BadHeader(what) => write!(f, "bad frame header: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// One complete frame, borrowed from the decoder's buffer (zero-copy:
+/// the body slice lives until the next `feed`/`try_frame`).
+#[derive(Debug)]
+pub struct FrameRef<'a> {
+    /// The frame's op byte (`OP_*` / `RESP_*`).
+    pub op: u8,
+    /// The frame body.
+    pub body: &'a [u8],
+}
+
+/// Incremental frame extractor over a raw byte stream. Feed socket
+/// reads in whatever chunks they arrive, pull complete frames out;
+/// partial frames stay buffered until their bytes show up. Consumed
+/// bytes are compacted away on the next `feed`, so the buffer's high
+///-water mark tracks the largest single frame, not the stream length —
+/// and a warmed decoder re-uses its buffer allocation-free.
+#[derive(Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// Offset of the first unconsumed byte in `buf`.
+    start: usize,
+}
+
+impl FrameDecoder {
+    /// Decoder with a pre-sized buffer (one socket read's worth), so
+    /// typical control frames never allocate.
+    pub fn new() -> Self {
+        FrameDecoder { buf: Vec::with_capacity(16 * 1024), start: 0 }
+    }
+
+    /// Bytes buffered but not yet consumed by a returned frame.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Append raw stream bytes, compacting consumed ones first.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        } else if self.start > 0 {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Extract the next complete frame, if the buffer holds one.
+    ///
+    /// `Ok(None)` means "need more bytes" — including a partial
+    /// preamble. Length sanity (zero / oversized) is checked the moment
+    /// the preamble is complete, independent of how much of the body has
+    /// arrived, so a hostile prefix is rejected without buffering toward
+    /// it.
+    pub fn try_frame(&mut self) -> Result<Option<FrameRef<'_>>, FrameError> {
+        let avail = self.buf.len() - self.start;
+        if avail < PREAMBLE_LEN {
+            // A wrong magic is detectable from the first divergent byte,
+            // but waiting for the full preamble keeps the reject path
+            // single: every error is raised from a complete preamble.
+            return Ok(None);
+        }
+        let p = self.start;
+        if self.buf[p..p + 4] != MAGIC {
+            return Err(FrameError::BadMagic([
+                self.buf[p],
+                self.buf[p + 1],
+                self.buf[p + 2],
+                self.buf[p + 3],
+            ]));
+        }
+        let op = self.buf[p + 4];
+        let body_len = u32::from_le_bytes([
+            self.buf[p + 8],
+            self.buf[p + 9],
+            self.buf[p + 10],
+            self.buf[p + 11],
+        ]) as usize;
+        if body_len == 0 {
+            return Err(FrameError::EmptyBody);
+        }
+        if body_len > MAX_BODY {
+            return Err(FrameError::Oversized(body_len));
+        }
+        if avail < PREAMBLE_LEN + body_len {
+            return Ok(None);
+        }
+        let body_start = p + PREAMBLE_LEN;
+        let end = body_start + body_len;
+        self.start = end;
+        Ok(Some(FrameRef { op, body: &self.buf[body_start..end] }))
+    }
+}
+
+/// Append one complete frame (preamble + body) to `out`.
+pub fn encode_frame(op: u8, body: &[u8], out: &mut Vec<u8>) {
+    let at = begin_frame(op, out);
+    out.extend_from_slice(body);
+    end_frame(at, out);
+}
+
+/// Start a frame whose body is written directly into `out` (avoids a
+/// staging buffer for vector payloads); returns the patch cookie for
+/// [`end_frame`].
+pub fn begin_frame(op: u8, out: &mut Vec<u8>) -> usize {
+    out.extend_from_slice(&MAGIC);
+    out.push(op);
+    out.extend_from_slice(&[0u8; 3]);
+    let at = out.len();
+    out.extend_from_slice(&[0u8; 4]);
+    at
+}
+
+/// Patch the `body_len` of a frame started with [`begin_frame`] once
+/// its body bytes are in place.
+pub fn end_frame(at: usize, out: &mut Vec<u8>) {
+    let body_len = (out.len() - at - 4) as u32;
+    out[at..at + 4].copy_from_slice(&body_len.to_le_bytes());
+}
+
+/// Fixed header of an [`OP_QUERY`] body. One header covers the whole
+/// batch: `count` vectors of `dim` raw little-endian f32 coordinates
+/// follow contiguously, and `body_len` must equal
+/// `QUERY_HEADER_LEN + count·dim·4` exactly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QueryHeader {
+    /// Top-K per query.
+    pub k: u32,
+    /// Range-relative ε.
+    pub epsilon: f64,
+    /// Failure probability δ.
+    pub delta: f64,
+    /// Pull-order seed shared by the batch.
+    pub seed: u64,
+    /// Deadline in nanoseconds (0 = none).
+    pub deadline_ns: u64,
+    /// Query mode (see `mode_to_byte` in [`super::binary`]).
+    pub mode: u8,
+    /// Storage-tier override (see `storage_to_byte`; 0 = deployment
+    /// default).
+    pub storage: u8,
+    /// Vectors in the batch (≥ 1).
+    pub count: u32,
+    /// Coordinates per vector (≥ 1).
+    pub dim: u32,
+}
+
+/// Bytes of a serialized [`QueryHeader`].
+pub const QUERY_HEADER_LEN: usize = 48;
+
+impl QueryHeader {
+    /// Serialize into `out` (exactly [`QUERY_HEADER_LEN`] bytes).
+    pub fn write(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.k.to_le_bytes());
+        out.extend_from_slice(&self.epsilon.to_le_bytes());
+        out.extend_from_slice(&self.delta.to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&self.deadline_ns.to_le_bytes());
+        out.push(self.mode);
+        out.push(self.storage);
+        out.extend_from_slice(&[0u8; 2]);
+        out.extend_from_slice(&self.count.to_le_bytes());
+        out.extend_from_slice(&self.dim.to_le_bytes());
+    }
+
+    /// Parse from an [`OP_QUERY`] body, validating the payload length
+    /// against `count · dim` (in u64 so a hostile header cannot
+    /// overflow the check itself).
+    pub fn parse(body: &[u8]) -> Result<QueryHeader, FrameError> {
+        if body.len() < QUERY_HEADER_LEN {
+            return Err(FrameError::Truncated { need: QUERY_HEADER_LEN, got: body.len() });
+        }
+        let h = QueryHeader {
+            k: u32::from_le_bytes(body[0..4].try_into().unwrap()),
+            epsilon: f64::from_le_bytes(body[4..12].try_into().unwrap()),
+            delta: f64::from_le_bytes(body[12..20].try_into().unwrap()),
+            seed: u64::from_le_bytes(body[20..28].try_into().unwrap()),
+            deadline_ns: u64::from_le_bytes(body[28..36].try_into().unwrap()),
+            mode: body[36],
+            storage: body[37],
+            count: u32::from_le_bytes(body[40..44].try_into().unwrap()),
+            dim: u32::from_le_bytes(body[44..48].try_into().unwrap()),
+        };
+        if h.count == 0 {
+            return Err(FrameError::BadHeader("query count must be >= 1"));
+        }
+        if h.dim == 0 {
+            return Err(FrameError::BadHeader("query dim must be >= 1"));
+        }
+        let want = QUERY_HEADER_LEN as u64 + h.count as u64 * h.dim as u64 * 4;
+        if body.len() as u64 != want {
+            return Err(FrameError::BadHeader("payload length != count * dim * 4"));
+        }
+        Ok(h)
+    }
+}
+
+/// Fixed header of a [`RESP_QUERY`] body, followed by `count` u64 LE
+/// indices then `count` f32 LE scores.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RespHeader {
+    /// [`FLAG_OK`] / [`FLAG_SHED`] bits.
+    pub flags: u8,
+    /// Storage tier the answer sampled on (`storage_to_byte` of a
+    /// concrete tier, never 0).
+    pub storage: u8,
+    /// Result entries in the payload.
+    pub count: u32,
+    /// Flops the query spent.
+    pub flops: u64,
+    /// Service time, ns.
+    pub service_ns: u64,
+    /// Generation the indices refer to.
+    pub generation: u64,
+    /// Batch size the query rode in.
+    pub batch: u32,
+}
+
+/// Bytes of a serialized [`RespHeader`].
+pub const RESP_HEADER_LEN: usize = 40;
+/// [`RespHeader::flags`] bit: the query produced results.
+pub const FLAG_OK: u8 = 1;
+/// [`RespHeader::flags`] bit: the query was shed (deadline exceeded;
+/// no results).
+pub const FLAG_SHED: u8 = 2;
+
+impl RespHeader {
+    /// Serialize into `out` (exactly [`RESP_HEADER_LEN`] bytes).
+    pub fn write(&self, out: &mut Vec<u8>) {
+        out.push(self.flags);
+        out.push(self.storage);
+        out.extend_from_slice(&[0u8; 2]);
+        out.extend_from_slice(&self.count.to_le_bytes());
+        out.extend_from_slice(&self.flops.to_le_bytes());
+        out.extend_from_slice(&self.service_ns.to_le_bytes());
+        out.extend_from_slice(&self.generation.to_le_bytes());
+        out.extend_from_slice(&self.batch.to_le_bytes());
+        out.extend_from_slice(&[0u8; 4]);
+    }
+
+    /// Parse from a [`RESP_QUERY`] body, validating the payload length
+    /// against `count` (12 bytes per entry: u64 index + f32 score).
+    pub fn parse(body: &[u8]) -> Result<RespHeader, FrameError> {
+        if body.len() < RESP_HEADER_LEN {
+            return Err(FrameError::Truncated { need: RESP_HEADER_LEN, got: body.len() });
+        }
+        let h = RespHeader {
+            flags: body[0],
+            storage: body[1],
+            count: u32::from_le_bytes(body[4..8].try_into().unwrap()),
+            flops: u64::from_le_bytes(body[8..16].try_into().unwrap()),
+            service_ns: u64::from_le_bytes(body[16..24].try_into().unwrap()),
+            generation: u64::from_le_bytes(body[24..32].try_into().unwrap()),
+            batch: u32::from_le_bytes(body[32..36].try_into().unwrap()),
+        };
+        let want = RESP_HEADER_LEN as u64 + h.count as u64 * 12;
+        if body.len() as u64 != want {
+            return Err(FrameError::BadHeader("payload length != count * 12"));
+        }
+        Ok(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_in_one_feed() {
+        let mut dec = FrameDecoder::new();
+        let mut wire = Vec::new();
+        encode_frame(OP_JSON, b"{\"op\":\"ping\"}", &mut wire);
+        encode_frame(RESP_ERROR, b"nope", &mut wire);
+        dec.feed(&wire);
+        let f = dec.try_frame().unwrap().unwrap();
+        assert_eq!((f.op, f.body), (OP_JSON, &b"{\"op\":\"ping\"}"[..]));
+        let f = dec.try_frame().unwrap().unwrap();
+        assert_eq!((f.op, f.body), (RESP_ERROR, &b"nope"[..]));
+        assert!(dec.try_frame().unwrap().is_none());
+        assert_eq!(dec.buffered(), 0);
+    }
+
+    #[test]
+    fn partial_reads_at_every_byte_boundary() {
+        let mut wire = Vec::new();
+        encode_frame(OP_JSON, b"abc", &mut wire);
+        for cut in 0..=wire.len() {
+            let mut dec = FrameDecoder::new();
+            dec.feed(&wire[..cut]);
+            if cut < wire.len() {
+                assert!(dec.try_frame().unwrap().is_none(), "cut={cut}");
+                dec.feed(&wire[cut..]);
+            }
+            let f = dec.try_frame().unwrap().unwrap();
+            assert_eq!((f.op, f.body), (OP_JSON, &b"abc"[..]), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn zero_and_oversized_lengths_rejected_from_preamble_alone() {
+        for (len, want_err) in [
+            (0u32, FrameError::EmptyBody),
+            ((MAX_BODY + 1) as u32, FrameError::Oversized(MAX_BODY + 1)),
+        ] {
+            let mut dec = FrameDecoder::new();
+            let mut preamble = Vec::new();
+            preamble.extend_from_slice(&MAGIC);
+            preamble.push(OP_QUERY);
+            preamble.extend_from_slice(&[0u8; 3]);
+            preamble.extend_from_slice(&len.to_le_bytes());
+            dec.feed(&preamble);
+            assert_eq!(dec.try_frame().unwrap_err(), want_err);
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut dec = FrameDecoder::new();
+        dec.feed(b"GET / HTTP/1.1\r\n");
+        assert!(matches!(dec.try_frame(), Err(FrameError::BadMagic(_))));
+    }
+
+    #[test]
+    fn query_header_roundtrip_and_length_check() {
+        let h = QueryHeader {
+            k: 5,
+            epsilon: 0.1,
+            delta: 0.05,
+            seed: 42,
+            deadline_ns: 1_000_000,
+            mode: 0,
+            storage: 2,
+            count: 3,
+            dim: 4,
+        };
+        let mut body = Vec::new();
+        h.write(&mut body);
+        assert_eq!(body.len(), QUERY_HEADER_LEN);
+        body.extend_from_slice(&[0u8; 3 * 4 * 4]); // count * dim * 4
+        assert_eq!(QueryHeader::parse(&body).unwrap(), h);
+        // Any other payload length is rejected.
+        body.push(0);
+        assert!(matches!(QueryHeader::parse(&body), Err(FrameError::BadHeader(_))));
+        body.truncate(QUERY_HEADER_LEN - 1);
+        assert!(matches!(QueryHeader::parse(&body), Err(FrameError::Truncated { .. })));
+    }
+
+    #[test]
+    fn resp_header_roundtrip() {
+        let h = RespHeader {
+            flags: FLAG_OK,
+            storage: 1,
+            count: 2,
+            flops: 12345,
+            service_ns: 67890,
+            generation: 3,
+            batch: 8,
+        };
+        let mut body = Vec::new();
+        h.write(&mut body);
+        assert_eq!(body.len(), RESP_HEADER_LEN);
+        body.extend_from_slice(&[0u8; 2 * 12]);
+        assert_eq!(RespHeader::parse(&body).unwrap(), h);
+        body.pop();
+        assert!(matches!(RespHeader::parse(&body), Err(FrameError::BadHeader(_))));
+    }
+
+    #[test]
+    fn decoder_compacts_consumed_bytes() {
+        let mut dec = FrameDecoder::new();
+        let mut wire = Vec::new();
+        encode_frame(OP_JSON, &[7u8; 100], &mut wire);
+        for _ in 0..50 {
+            dec.feed(&wire);
+            assert!(dec.try_frame().unwrap().is_some());
+            assert!(dec.try_frame().unwrap().is_none());
+        }
+        // Fully drained between feeds ⇒ the buffer never grows past one
+        // frame's worth.
+        assert_eq!(dec.buffered(), 0);
+    }
+}

@@ -1,0 +1,128 @@
+//! The default codec: newline-delimited JSON, bit-for-bit the protocol
+//! the server spoke before codecs existed. Decoding is line splitting
+//! only — parsing (and its `bad json` error text) stays inside
+//! `coordinator::server::handle_line` so the behavior is provably
+//! unchanged; encoding owns the response *shapes* (shared with
+//! [`super::BinaryCodec`]'s embedded-JSON path).
+
+use super::{error_json, Codec, FrameError, WireRequest};
+use crate::coordinator::QueryResponse;
+use crate::jsonlite::Json;
+
+/// Build the line protocol's successful query reply object (the
+/// single source for both codecs' JSON paths and `handle_line`).
+pub fn query_response_json(resp: &QueryResponse) -> Json {
+    Json::obj([
+        ("ok", Json::Bool(true)),
+        ("indices", Json::usizes(&resp.indices)),
+        ("scores", Json::f32s(&resp.scores)),
+        ("flops", Json::Num(resp.flops as f64)),
+        ("service_ms", Json::Num(resp.service.as_secs_f64() * 1e3)),
+        ("batch", Json::Num(resp.batch_size as f64)),
+        ("storage", Json::Str(resp.storage.label().into())),
+        ("generation", Json::Num(resp.generation as f64)),
+    ])
+}
+
+/// Newline-delimited JSON codec (the negotiation default).
+#[derive(Default)]
+pub struct LineJsonCodec {
+    buf: Vec<u8>,
+    /// Offset of the first byte not yet consumed by a returned line.
+    start: usize,
+}
+
+impl LineJsonCodec {
+    /// Fresh codec with a pre-sized line buffer.
+    pub fn new() -> Self {
+        LineJsonCodec { buf: Vec::with_capacity(16 * 1024), start: 0 }
+    }
+}
+
+impl Codec for LineJsonCodec {
+    fn name(&self) -> &'static str {
+        "json"
+    }
+
+    fn feed(&mut self, bytes: &[u8]) {
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        } else if self.start > 0 {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    fn try_decode(&mut self) -> Result<Option<WireRequest>, FrameError> {
+        // Skip blank lines the way the old read_line loop did.
+        loop {
+            let Some(nl) = self.buf[self.start..].iter().position(|&b| b == b'\n') else {
+                return Ok(None);
+            };
+            let line = &self.buf[self.start..self.start + nl];
+            // Invalid UTF-8 becomes replacement chars and fails in
+            // `handle_line` as `bad json` — an application-level reply,
+            // never a framing error.
+            let text = String::from_utf8_lossy(line).trim().to_string();
+            self.start += nl + 1;
+            if !text.is_empty() {
+                return Ok(Some(WireRequest::Line(text)));
+            }
+        }
+    }
+
+    fn encode_json(&mut self, doc: &Json, out: &mut Vec<u8>) {
+        out.extend_from_slice(doc.dump().as_bytes());
+        out.push(b'\n');
+    }
+
+    fn encode_reply(&mut self, resp: &QueryResponse, out: &mut Vec<u8>) {
+        let doc = if resp.shed {
+            error_json("deadline exceeded (shed)")
+        } else {
+            query_response_json(resp)
+        };
+        self.encode_json(&doc, out);
+    }
+
+    fn encode_error(&mut self, msg: &str, out: &mut Vec<u8>) {
+        self.encode_json(&error_json(msg), out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_lines_across_arbitrary_feeds() {
+        let mut c = LineJsonCodec::new();
+        c.feed(b"{\"op\":\"pi");
+        assert!(matches!(c.try_decode(), Ok(None)));
+        c.feed(b"ng\"}\n\n  \n{\"op\":\"metrics\"}\n");
+        let Ok(Some(WireRequest::Line(a))) = c.try_decode() else { panic!() };
+        assert_eq!(a, "{\"op\":\"ping\"}");
+        // Blank lines are skipped, not surfaced.
+        let Ok(Some(WireRequest::Line(b))) = c.try_decode() else { panic!() };
+        assert_eq!(b, "{\"op\":\"metrics\"}");
+        assert!(matches!(c.try_decode(), Ok(None)));
+    }
+
+    #[test]
+    fn trims_carriage_returns_and_whitespace() {
+        let mut c = LineJsonCodec::new();
+        c.feed(b"  {\"op\":\"ping\"}\r\n");
+        let Ok(Some(WireRequest::Line(a))) = c.try_decode() else { panic!() };
+        assert_eq!(a, "{\"op\":\"ping\"}");
+    }
+
+    #[test]
+    fn encodes_replies_with_trailing_newline() {
+        let mut c = LineJsonCodec::new();
+        let mut out = Vec::new();
+        c.encode_error("nope", &mut out);
+        assert_eq!(out, b"{\"ok\":false,\"error\":\"nope\"}\n");
+    }
+}

@@ -1,0 +1,141 @@
+//! Pluggable wire codecs for the TCP front-end.
+//!
+//! The paper's serving pitch — no preprocessing, cheap per-query
+//! compute — means the *transport* tax can dominate at scale: a d=4096
+//! query vector is ~13 ASCII bytes per coordinate as decimal JSON but
+//! exactly 4 as a raw little-endian f32. This module makes the protocol
+//! a [`Codec`] axis with two implementations:
+//!
+//! * [`LineJsonCodec`] — today's newline-delimited JSON, bit-for-bit
+//!   (requests dispatch through `coordinator::server::handle_line`
+//!   unchanged). The default; any JSON-speaking client keeps working.
+//! * [`BinaryCodec`] — length-prefixed frames
+//!   (see [`frame`] for the layout) carrying either an embedded JSON
+//!   document ([`frame::OP_JSON`], so *every* op is reachable over
+//!   binary transport) or a binary query batch ([`frame::OP_QUERY`]):
+//!   one fixed [`frame::QueryHeader`] with the (k, ε, δ, seed,
+//!   deadline, mode, storage) knobs, then B vectors of raw LE f32
+//!   coordinates, contiguous, decoded straight off the frame buffer
+//!   into the submission path — no intermediate JSON values. The B
+//!   requests are submitted before any reply is awaited, so the
+//!   coordinator's batcher admits them as one group.
+//!
+//! # Negotiation
+//!
+//! Per connection, on the first byte ([`negotiate`]): binary frames
+//! lead with [`frame::MAGIC`]'s `b'P'`, which can never start a JSON
+//! document, so existing clients need no changes and mixed fleets can
+//! share one server port. A connection's codec is fixed once chosen.
+//!
+//! # Errors
+//!
+//! Application-level failures (unknown op, dimension mismatch, shed
+//! deadline) are ordinary replies in either codec. *Frame*-level
+//! violations ([`frame::FrameError`]: bad magic, zero/oversized length
+//! prefix, truncated or inconsistent headers) are unrecoverable — the
+//! server sends one encoded error and closes, since resync inside a
+//! corrupted byte stream is guesswork.
+
+use crate::coordinator::QueryRequest;
+use crate::jsonlite::Json;
+use std::sync::OnceLock;
+
+pub mod binary;
+pub mod frame;
+pub mod json;
+
+pub use binary::{BinaryCodec, QueryOpts, QueryReply};
+pub use frame::{FrameDecoder, FrameError, FrameRef};
+pub use json::LineJsonCodec;
+
+/// Environment pin: `RUST_PALLAS_WIRE=binary` makes
+/// [`crate::coordinator::server::Client::connect`] negotiate the binary
+/// codec (JSON documents ride [`frame::OP_JSON`] frames transparently),
+/// so the whole TCP test battery exercises [`BinaryCodec`] framing on
+/// the CI `wire` leg. Any other value stays on line-JSON.
+pub const WIRE_ENV: &str = "RUST_PALLAS_WIRE";
+
+/// True when [`WIRE_ENV`] selects the binary codec (read once, cached).
+pub fn binary_env_requested() -> bool {
+    static PIN: OnceLock<bool> = OnceLock::new();
+    *PIN.get_or_init(|| matches!(std::env::var(WIRE_ENV).as_deref(), Ok("binary")))
+}
+
+/// One decoded unit of client input, codec-agnostic.
+pub enum WireRequest {
+    /// A JSON document (from a text line or an [`frame::OP_JSON`]
+    /// frame), raw — the server dispatches it through `handle_line`, so
+    /// the line protocol's behavior (including its error strings) is
+    /// preserved bit-for-bit.
+    Line(String),
+    /// A decoded binary query batch. The server submits every request
+    /// before reaping replies, keeping the batch together through the
+    /// coordinator's group-forming batcher.
+    Query(Vec<QueryRequest>),
+}
+
+/// A wire protocol: buffered streaming decode of requests plus reply
+/// encoding. One instance per connection (codecs carry buffer state).
+pub trait Codec {
+    /// Stable codec label for metrics and bench rows (`"json"` /
+    /// `"binary"`).
+    fn name(&self) -> &'static str;
+
+    /// Buffer raw socket bytes.
+    fn feed(&mut self, bytes: &[u8]);
+
+    /// Decode the next complete request, if buffered bytes hold one.
+    /// `Ok(None)` = need more bytes; `Err` = frame-level violation, the
+    /// connection must close after one encoded error reply.
+    fn try_decode(&mut self) -> Result<Option<WireRequest>, FrameError>;
+
+    /// Encode a JSON reply document (responses to [`WireRequest::Line`]).
+    fn encode_json(&mut self, doc: &Json, out: &mut Vec<u8>);
+
+    /// Encode one query reply (responses to [`WireRequest::Query`],
+    /// one per submitted request, in order).
+    fn encode_reply(&mut self, resp: &crate::coordinator::QueryResponse, out: &mut Vec<u8>);
+
+    /// Encode a terminal error (failed submissions and protocol
+    /// violations).
+    fn encode_error(&mut self, msg: &str, out: &mut Vec<u8>);
+}
+
+/// The line protocol's error shape, shared by both codecs (and by
+/// `handle_line` itself).
+pub fn error_json(msg: &str) -> Json {
+    Json::obj([("ok", Json::Bool(false)), ("error", Json::Str(msg.to_string()))])
+}
+
+/// Pick a connection's codec from its first byte: [`frame::MAGIC`]'s
+/// leading `b'P'` selects [`BinaryCodec`] (no JSON document can start
+/// with `P`), anything else stays on the [`LineJsonCodec`] default —
+/// including garbage, which then fails with the line protocol's
+/// `bad json` reply exactly as before.
+pub fn negotiate(first_byte: u8) -> Box<dyn Codec + Send> {
+    if first_byte == frame::MAGIC[0] {
+        Box::new(BinaryCodec::new())
+    } else {
+        Box::new(LineJsonCodec::new())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn negotiation_sniffs_the_first_byte() {
+        assert_eq!(negotiate(b'P').name(), "binary");
+        assert_eq!(negotiate(b'{').name(), "json");
+        assert_eq!(negotiate(b' ').name(), "json");
+        assert_eq!(negotiate(0x00).name(), "json");
+    }
+
+    #[test]
+    fn error_shape_matches_line_protocol() {
+        let e = error_json("nope");
+        assert_eq!(e.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(e.get("error").unwrap().as_str(), Some("nope"));
+    }
+}

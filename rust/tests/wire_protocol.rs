@@ -1,0 +1,599 @@
+//! Wire-protocol battery: the negotiated TCP front-end end-to-end.
+//!
+//! Proves the [`bandit_mips::wire`] contract against a **live server**,
+//! not just the codec units:
+//!
+//! * partial reads — a frame delivered one byte at a time decodes once,
+//!   correctly;
+//! * hostile length prefixes (zero / oversized) are rejected without a
+//!   single allocation, straight off the 12-byte preamble;
+//! * truncated payloads and garbage magic take the reply-once-and-close
+//!   path;
+//! * mixed JSON and binary clients coexist on one server, and both show
+//!   up in the wire metrics;
+//! * **codec equivalence**: the same query asked over line-JSON and
+//!   over binary frames produces byte-identical answers (indices, score
+//!   bits, flops, storage, generation);
+//! * per-request storage-tier overrides ride both codecs;
+//! * every line-protocol op works over binary transport (the CI `wire`
+//!   leg pins `RUST_PALLAS_WIRE=binary` and replays the TCP batteries
+//!   through the binary codec).
+
+use bandit_mips::algos::ground_truth;
+use bandit_mips::coordinator::server::{Client, Server};
+use bandit_mips::coordinator::{Coordinator, CoordinatorConfig, QueryMode};
+use bandit_mips::data::quant::Storage;
+use bandit_mips::data::shard::ShardSpec;
+use bandit_mips::data::synthetic::gaussian_dataset;
+use bandit_mips::jsonlite::{parse, Json};
+use bandit_mips::linalg::Matrix;
+use bandit_mips::wire::frame::{
+    self, FrameDecoder, FrameError, MAGIC, OP_QUERY, PREAMBLE_LEN, RESP_ERROR,
+};
+use bandit_mips::wire::{binary, BinaryCodec, Codec, QueryOpts};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Counts heap allocations so the hostile-prefix test can prove the
+/// reject path never sizes a buffer to the attacker's length.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn count_allocs(mut f: impl FnMut()) -> u64 {
+    let before = ALLOCS.load(Ordering::Relaxed);
+    f();
+    ALLOCS.load(Ordering::Relaxed) - before
+}
+
+const DIM: usize = 64;
+
+fn serve(shards: usize, storage: Storage) -> (Server, Matrix) {
+    let ds = gaussian_dataset(160, DIM, 77);
+    let data = ds.vectors.clone();
+    let cfg = CoordinatorConfig {
+        workers: shards.max(1),
+        shard: ShardSpec::contiguous(shards),
+        storage,
+        ..Default::default()
+    };
+    let coord = Arc::new(Coordinator::new(ds.vectors, cfg).unwrap());
+    let server = Server::start(coord, "127.0.0.1:0", 16).unwrap();
+    (server, data)
+}
+
+/// Read exactly one frame off a raw socket.
+fn read_raw_frame(stream: &mut TcpStream, dec: &mut FrameDecoder) -> (u8, Vec<u8>) {
+    let mut tmp = [0u8; 4096];
+    loop {
+        match dec.try_frame() {
+            Ok(Some(f)) => return (f.op, f.body.to_vec()),
+            Ok(None) => {}
+            Err(e) => panic!("frame error from server: {e}"),
+        }
+        let n = stream.read(&mut tmp).unwrap();
+        assert!(n > 0, "connection closed mid-frame");
+        dec.feed(&tmp[..n]);
+    }
+}
+
+/// A query frame trickled in one byte per write still decodes exactly
+/// once and answers correctly — the server's read loop must tolerate
+/// every possible split point, including mid-preamble and mid-f32.
+#[test]
+fn partial_reads_at_every_frame_boundary() {
+    let (server, data) = serve(1, Storage::F32);
+    let q = vec![0.25f32; DIM];
+    let mut wire = Vec::new();
+    binary::encode_query_frame(
+        &[&q],
+        &QueryOpts { k: 3, epsilon: 1e-9, mode: QueryMode::BoundedMe, ..Default::default() },
+        &mut wire,
+    )
+    .unwrap();
+
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    for b in &wire {
+        stream.write_all(std::slice::from_ref(b)).unwrap();
+        stream.flush().unwrap();
+    }
+    let mut dec = FrameDecoder::new();
+    let (op, body) = read_raw_frame(&mut stream, &mut dec);
+    assert_eq!(op, frame::RESP_QUERY);
+    let reply = binary::decode_reply(&body).unwrap();
+    assert!(reply.ok);
+    let mut got: Vec<usize> = reply.indices.iter().map(|&i| i as usize).collect();
+    got.sort_unstable();
+    let mut want = ground_truth(&data, &q, 3);
+    want.sort_unstable();
+    assert_eq!(got, want);
+    server.shutdown();
+}
+
+/// Zero and oversized length prefixes are rejected from the preamble
+/// alone — decoder-level without any allocation, server-level with one
+/// error reply and a closed connection.
+#[test]
+fn hostile_length_prefixes_rejected_without_allocation() {
+    // Decoder level: warm the codec, then prove the reject is
+    // allocation-free (nothing is ever sized to the hostile length).
+    for (len, is_oversized) in [(0u32, false), (u32::MAX, true)] {
+        let mut preamble = Vec::with_capacity(PREAMBLE_LEN);
+        preamble.extend_from_slice(&MAGIC);
+        preamble.push(OP_QUERY);
+        preamble.extend_from_slice(&[0u8; 3]);
+        preamble.extend_from_slice(&len.to_le_bytes());
+        let mut codec = BinaryCodec::new();
+        codec.feed(&preamble);
+        let mut err = None;
+        let allocs = count_allocs(|| {
+            err = Some(codec.try_decode().unwrap_err());
+        });
+        assert_eq!(allocs, 0, "hostile prefix len={len} allocated on the reject path");
+        match err.unwrap() {
+            FrameError::EmptyBody => assert!(!is_oversized),
+            FrameError::Oversized(n) => {
+                assert!(is_oversized);
+                assert_eq!(n, u32::MAX as usize);
+            }
+            other => panic!("unexpected error {other:?}"),
+        }
+    }
+
+    // Server level: one RESP_ERROR frame, then EOF.
+    let (server, _) = serve(1, Storage::F32);
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    let mut preamble = Vec::new();
+    preamble.extend_from_slice(&MAGIC);
+    preamble.push(OP_QUERY);
+    preamble.extend_from_slice(&[0u8; 3]);
+    preamble.extend_from_slice(&u32::MAX.to_le_bytes());
+    stream.write_all(&preamble).unwrap();
+    let mut dec = FrameDecoder::new();
+    let (op, body) = read_raw_frame(&mut stream, &mut dec);
+    assert_eq!(op, RESP_ERROR);
+    let msg = String::from_utf8_lossy(&body);
+    assert!(msg.contains("protocol error"), "{msg}");
+    // The server closes after a frame-level violation.
+    let mut rest = Vec::new();
+    assert_eq!(stream.read_to_end(&mut rest).unwrap_or(0), 0);
+    server.shutdown();
+}
+
+/// A frame whose header claims more payload than the body carries is a
+/// protocol error: reply once, close.
+#[test]
+fn truncated_payload_is_a_protocol_error() {
+    let (server, _) = serve(1, Storage::F32);
+    let q = vec![1.0f32; DIM];
+    let mut wire = Vec::new();
+    binary::encode_query_frame(&[&q], &QueryOpts::default(), &mut wire).unwrap();
+    // Shrink the frame's body_len and drop the tail: the QueryHeader's
+    // count·dim claim no longer matches the payload.
+    let cut = 16usize;
+    let body_len = (wire.len() - PREAMBLE_LEN - cut) as u32;
+    wire[8..12].copy_from_slice(&body_len.to_le_bytes());
+    wire.truncate(wire.len() - cut);
+
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.write_all(&wire).unwrap();
+    let mut dec = FrameDecoder::new();
+    let (op, body) = read_raw_frame(&mut stream, &mut dec);
+    assert_eq!(op, RESP_ERROR);
+    assert!(String::from_utf8_lossy(&body).contains("protocol error"));
+    let mut rest = Vec::new();
+    assert_eq!(stream.read_to_end(&mut rest).unwrap_or(0), 0);
+    server.shutdown();
+}
+
+/// Garbage that doesn't start with the magic's `b'P'` negotiates the
+/// line codec and fails softly (`bad json`, connection stays open);
+/// garbage that *does* start with `b'P'` negotiates binary, fails the
+/// magic check, and takes the reply-once-and-close path.
+#[test]
+fn garbage_negotiates_by_first_byte() {
+    let (server, _) = serve(1, Storage::F32);
+
+    // Non-'P' garbage → line codec → bad json reply, connection alive.
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.write_all(b"GET / HTTP/1.1\n").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = parse(line.trim()).unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    assert!(resp.get("error").unwrap().as_str().unwrap().contains("bad json"));
+    // Still serving: a valid line now gets a real answer.
+    stream.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let resp = parse(line.trim()).unwrap();
+    assert_eq!(resp.get("pong").unwrap().as_bool(), Some(true));
+
+    // 'P'-led garbage → binary codec → bad magic → error frame + close.
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.write_all(b"PSTL not a frame").unwrap();
+    let mut dec = FrameDecoder::new();
+    let (op, body) = read_raw_frame(&mut stream, &mut dec);
+    assert_eq!(op, RESP_ERROR);
+    assert!(String::from_utf8_lossy(&body).contains("bad frame magic"));
+    let mut rest = Vec::new();
+    assert_eq!(stream.read_to_end(&mut rest).unwrap_or(0), 0);
+    server.shutdown();
+}
+
+/// The same query over line-JSON and over binary frames must produce
+/// **byte-identical** answers: same indices in the same order, same
+/// score bits, same flops, same storage tier, same generation. JSON
+/// carries f64 shortest-round-trip decimals and jsonlite's parse is
+/// bit-exact, so not even the vector differs in flight.
+#[test]
+fn codec_equivalence_is_byte_identical() {
+    let (server, _) = serve(2, Storage::F32);
+    let mut json = Client::connect_json(server.addr()).unwrap();
+    let mut bin = Client::connect_binary(server.addr()).unwrap();
+
+    for seed in 0..6u64 {
+        let q: Vec<f32> =
+            (0..DIM).map(|i| ((i as f32 + seed as f32) * 0.37).sin()).collect();
+        let mode = if seed % 2 == 0 { "exact" } else { "bounded_me" };
+        let jresp = json
+            .call(&Json::obj([
+                ("op", Json::Str("query".into())),
+                ("vector", Json::f32s(&q)),
+                ("k", Json::Num(4.0)),
+                ("epsilon", Json::Num(0.1)),
+                ("delta", Json::Num(0.1)),
+                ("seed", Json::Num(seed as f64)),
+                ("mode", Json::Str(mode.into())),
+            ]))
+            .unwrap();
+        assert_eq!(jresp.get("ok").unwrap().as_bool(), Some(true), "seed {seed}");
+
+        let breply = bin
+            .query_binary(
+                &[&q],
+                &QueryOpts {
+                    k: 4,
+                    epsilon: 0.1,
+                    delta: 0.1,
+                    seed,
+                    mode: if seed % 2 == 0 {
+                        QueryMode::Exact
+                    } else {
+                        QueryMode::BoundedMe
+                    },
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+            .remove(0);
+        assert!(breply.ok, "seed {seed}: {:?}", breply.error);
+
+        let jindices: Vec<u64> = jresp
+            .get("indices")
+            .unwrap()
+            .as_f32_vec()
+            .unwrap()
+            .iter()
+            .map(|&x| x as u64)
+            .collect();
+        let jscores = jresp.get("scores").unwrap().as_f32_vec().unwrap();
+        assert_eq!(jindices, breply.indices, "seed {seed} ({mode}): index mismatch");
+        assert_eq!(jscores.len(), breply.scores.len());
+        for (a, b) in jscores.iter().zip(&breply.scores) {
+            assert_eq!(a.to_bits(), b.to_bits(), "seed {seed} ({mode}): score bits");
+        }
+        assert_eq!(
+            jresp.get("flops").unwrap().as_usize().unwrap() as u64,
+            breply.flops,
+            "seed {seed} ({mode}): flops"
+        );
+        assert_eq!(
+            jresp.get("storage").unwrap().as_str(),
+            Some(breply.storage.label()),
+            "seed {seed} ({mode}): storage"
+        );
+        assert_eq!(
+            jresp.get("generation").unwrap().as_usize().unwrap() as u64,
+            breply.generation,
+            "seed {seed} ({mode}): generation"
+        );
+    }
+    server.shutdown();
+}
+
+/// A multi-vector binary frame is answered by exactly B in-order
+/// replies, each correct for its own vector.
+#[test]
+fn batch_frame_answers_in_request_order() {
+    let (server, data) = serve(1, Storage::F32);
+    let queries: Vec<Vec<f32>> = (0..8)
+        .map(|s| (0..DIM).map(|i| ((i * 7 + s * 13) as f32 * 0.11).cos()).collect())
+        .collect();
+    let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+
+    let mut bin = Client::connect_binary(server.addr()).unwrap();
+    let replies = bin
+        .query_binary(
+            &qrefs,
+            &QueryOpts { k: 3, mode: QueryMode::Exact, ..Default::default() },
+        )
+        .unwrap();
+    assert_eq!(replies.len(), 8);
+    for (q, reply) in queries.iter().zip(&replies) {
+        assert!(reply.ok);
+        let got: Vec<usize> = reply.indices.iter().map(|&i| i as usize).collect();
+        assert_eq!(got, ground_truth(&data, q, 3));
+    }
+    server.shutdown();
+}
+
+/// Storage-tier overrides ride both codecs: on an f16 deployment an
+/// explicit f32 override answers exactly (and says so), and both codecs
+/// agree on the no-override deployment tier.
+#[test]
+fn storage_override_rides_both_codecs() {
+    let (server, data) = serve(1, Storage::F16);
+    let q: Vec<f32> = (0..DIM).map(|i| (i as f32 * 0.29).sin()).collect();
+    let mut want = ground_truth(&data, &q, 3);
+    want.sort_unstable();
+
+    // JSON: explicit f32 override → exact f32 sampling at ε → 0.
+    let mut json = Client::connect_json(server.addr()).unwrap();
+    let jresp = json
+        .call(&Json::obj([
+            ("op", Json::Str("query".into())),
+            ("vector", Json::f32s(&q)),
+            ("k", Json::Num(3.0)),
+            ("epsilon", Json::Num(1e-9)),
+            ("delta", Json::Num(0.05)),
+            ("storage", Json::Str("f32".into())),
+        ]))
+        .unwrap();
+    assert_eq!(jresp.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(jresp.get("storage").unwrap().as_str(), Some("f32"));
+    let mut got: Vec<usize> = jresp
+        .get("indices")
+        .unwrap()
+        .as_f32_vec()
+        .unwrap()
+        .iter()
+        .map(|&x| x as usize)
+        .collect();
+    got.sort_unstable();
+    assert_eq!(got, want);
+
+    // Binary: same override through the header byte.
+    let mut bin = Client::connect_binary(server.addr()).unwrap();
+    let breply = bin
+        .query_binary(
+            &[&q],
+            &QueryOpts {
+                k: 3,
+                epsilon: 1e-9,
+                delta: 0.05,
+                storage: Some(Storage::F32),
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .remove(0);
+    assert!(breply.ok);
+    assert_eq!(breply.storage, Storage::F32);
+    let mut got: Vec<usize> = breply.indices.iter().map(|&i| i as usize).collect();
+    got.sort_unstable();
+    assert_eq!(got, want);
+
+    // No override: both codecs land on the same deployment tier (its
+    // exact label depends on the RUST_PALLAS_FORCE_F32 leg, so assert
+    // agreement rather than a fixed name).
+    let jresp = json
+        .call(&Json::obj([
+            ("op", Json::Str("query".into())),
+            ("vector", Json::f32s(&q)),
+            ("k", Json::Num(3.0)),
+        ]))
+        .unwrap();
+    let breply = bin
+        .query_binary(&[&q], &QueryOpts { k: 3, ..Default::default() })
+        .unwrap()
+        .remove(0);
+    assert_eq!(
+        jresp.get("storage").unwrap().as_str(),
+        Some(breply.storage.label()),
+        "codecs disagree on the deployment tier"
+    );
+    server.shutdown();
+}
+
+/// JSON and binary clients hammer one server concurrently; everyone
+/// gets correct answers and both codecs land in the wire counters.
+#[test]
+fn mixed_codec_clients_share_a_server() {
+    let (server, _) = serve(2, Storage::F32);
+    let addr = server.addr();
+    let mut handles = Vec::new();
+    for t in 0..3 {
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect_json(addr).unwrap();
+            for i in 0..6 {
+                let q = vec![(t * 6 + i) as f32 * 0.01 + 0.1; DIM];
+                let r = c.query(&q, 2, 0.3, 0.2).unwrap();
+                assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+            }
+        }));
+    }
+    for t in 0..3 {
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect_binary(addr).unwrap();
+            for i in 0..3 {
+                let a = vec![(t * 3 + i) as f32 * 0.02 + 0.2; DIM];
+                let b = vec![(t * 3 + i) as f32 * 0.03 + 0.3; DIM];
+                let replies = c
+                    .query_binary(
+                        &[&a, &b],
+                        &QueryOpts { k: 2, epsilon: 0.3, delta: 0.2, ..Default::default() },
+                    )
+                    .unwrap();
+                assert_eq!(replies.len(), 2);
+                assert!(replies.iter().all(|r| r.ok));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut c = Client::connect_json(addr).unwrap();
+    let m = c.call(&Json::obj([("op", Json::Str("metrics".into()))])).unwrap();
+    // 3 JSON clients × 6 lines (+ this metrics call) vs 3 binary
+    // clients × 3 frames (a batch frame counts once).
+    assert!(m.get("wire_json").unwrap().as_usize().unwrap() >= 18);
+    assert_eq!(m.get("wire_binary").unwrap().as_usize(), Some(9));
+    server.shutdown();
+}
+
+/// Pipeline/hedging-style load over the pin-honoring [`Client::connect`]
+/// (line-JSON by default, binary on the CI `wire` leg): a sharded
+/// deployment with an artificially slow shard and hedging enabled
+/// serves concurrent exact queries correctly through whichever codec
+/// the `RUST_PALLAS_WIRE` pin negotiates.
+#[test]
+fn hedged_sharded_load_over_negotiated_codec() {
+    let ds = gaussian_dataset(160, DIM, 77);
+    let data = ds.vectors.clone();
+    let mut cfg = CoordinatorConfig {
+        workers: 4,
+        shard: ShardSpec::contiguous(2),
+        ..Default::default()
+    };
+    cfg.debug_slow_shard = Some((0, Duration::from_millis(2)));
+    cfg.hedge_delay = Some(Duration::from_micros(300));
+    let coord = Arc::new(Coordinator::new(ds.vectors, cfg).unwrap());
+    let server = Server::start(coord, "127.0.0.1:0", 16).unwrap();
+    let addr = server.addr();
+    let data = Arc::new(data);
+
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let data = Arc::clone(&data);
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            for i in 0..6u64 {
+                let q: Vec<f32> = (0..DIM)
+                    .map(|j| ((j as u64 + t * 31 + i * 7) as f32 * 0.13).sin())
+                    .collect();
+                let r = c
+                    .call(&Json::obj([
+                        ("op", Json::Str("query".into())),
+                        ("vector", Json::f32s(&q)),
+                        ("k", Json::Num(3.0)),
+                        ("mode", Json::Str("exact".into())),
+                    ]))
+                    .unwrap();
+                assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "client {t} query {i}");
+                let got: Vec<usize> = r
+                    .get("indices")
+                    .unwrap()
+                    .as_f32_vec()
+                    .unwrap()
+                    .iter()
+                    .map(|&x| x as usize)
+                    .collect();
+                assert_eq!(got, ground_truth(&data, &q, 3), "client {t} query {i}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.shutdown();
+}
+
+/// Every line-protocol op — mutate, trace, metrics_prom included —
+/// works over binary transport, which is what lets the CI `wire` leg
+/// replay the TCP batteries through the binary codec wholesale.
+#[test]
+fn all_ops_work_over_binary_transport() {
+    let ds = gaussian_dataset(120, DIM, 5);
+    let cfg = CoordinatorConfig {
+        trace: bandit_mips::trace::TraceConfig { enabled: true, ..Default::default() },
+        ..Default::default()
+    };
+    let coord = Arc::new(Coordinator::new(ds.vectors, cfg).unwrap());
+    let server = Server::start(coord, "127.0.0.1:0", 4).unwrap();
+    let mut c = Client::connect_binary(server.addr()).unwrap();
+
+    // mutate: plant a spike, then find it with a binary query frame.
+    let ones: Vec<f32> = vec![1.0; DIM];
+    let m = c
+        .call(&Json::obj([
+            ("op", Json::Str("mutate".into())),
+            ("appends", Json::Arr(vec![Json::f32s(&ones)])),
+        ]))
+        .unwrap();
+    assert_eq!(m.get("ok").unwrap().as_bool(), Some(true), "{m:?}");
+    assert_eq!(m.get("generation").unwrap().as_usize(), Some(1));
+    let reply = c
+        .query_binary(
+            &[&ones],
+            &QueryOpts { k: 1, mode: QueryMode::Exact, ..Default::default() },
+        )
+        .unwrap()
+        .remove(0);
+    assert!(reply.ok);
+    assert_eq!(reply.generation, 1);
+    assert_eq!(reply.indices, vec![120u64]);
+
+    // trace: the flight recorder saw the query and carries its decode
+    // span (stamped by the binary codec before submission).
+    std::thread::sleep(Duration::from_millis(50));
+    let t = c
+        .call(&Json::obj([
+            ("op", Json::Str("trace".into())),
+            ("limit", Json::Num(8.0)),
+        ]))
+        .unwrap();
+    assert_eq!(t.get("ok").unwrap().as_bool(), Some(true));
+    let Json::Arr(traces) = t.get("traces").unwrap() else { panic!() };
+    assert!(!traces.is_empty());
+    let mut saw_decode = false;
+    for tr in traces {
+        if let Some(Json::Arr(spans)) = tr.get("spans") {
+            saw_decode |= spans
+                .iter()
+                .any(|s| s.get("label").and_then(Json::as_str) == Some("decode"));
+        }
+    }
+    assert!(saw_decode, "no decode span in binary-transport traces");
+
+    // metrics_prom: exposition renders, wire counters included.
+    let p = c.call(&Json::obj([("op", Json::Str("metrics_prom".into()))])).unwrap();
+    assert_eq!(p.get("ok").unwrap().as_bool(), Some(true));
+    let body = p.get("body").unwrap().as_str().unwrap();
+    assert!(body.contains("pallas_wire_requests_total{codec=\"binary\"}"));
+    server.shutdown();
+}

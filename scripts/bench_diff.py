@@ -3,11 +3,12 @@
 
 Usage: bench_diff.py CURRENT BASELINE [--threshold 0.10]
 
-Matches benchmark rows by (name, storage, churn) — `storage` is the
-optional per-row tier tag the mixed-precision rows carry ("f16", "int8",
-...), `churn` the optional live-mutation rate tag the serving churn rows
-carry ("0%", "1%", "10%"); untagged rows key on name alone — and
-compares `mean_s`. Regressions beyond
+Matches benchmark rows by (name, storage, churn, codec) — `storage` is
+the optional per-row tier tag the mixed-precision rows carry ("f16",
+"int8", ...), `churn` the optional live-mutation rate tag the serving
+churn rows carry ("0%", "1%", "10%"), `codec` the optional wire-codec
+tag the serving wire rows carry ("json", "binary"); untagged rows key
+on name alone — and compares `mean_s`. Regressions beyond
 the threshold are printed as GitHub advisory annotations (`::warning::`)
 so CI surfaces them without failing the build — bench runners are noisy,
 a hard gate would flap. Rows with no baseline counterpart (newly added
@@ -30,14 +31,19 @@ def load_rows(path):
     with open(path) as f:
         doc = json.load(f)
     return {
-        (row["name"], row.get("storage", ""), row.get("churn", "")): row
+        (
+            row["name"],
+            row.get("storage", ""),
+            row.get("churn", ""),
+            row.get("codec", ""),
+        ): row
         for row in doc.get("results", [])
     }
 
 
 def label(key):
-    name, storage, churn = key
-    tags = "/".join(t for t in (storage, churn) if t)
+    name, storage, churn, codec = key
+    tags = "/".join(t for t in (storage, churn, codec) if t)
     return f"{name} [{tags}]" if tags else name
 
 
