@@ -15,6 +15,7 @@ use bandit_mips::coordinator::{
 use bandit_mips::data::generation::Delta;
 use bandit_mips::data::shard::ShardSpec;
 use bandit_mips::data::synthetic::gaussian_dataset;
+use bandit_mips::exec::DegradePolicy;
 use bandit_mips::jsonlite::{parse, Json};
 use bandit_mips::linalg::{simd, Rng};
 use bandit_mips::wire::frame::FrameDecoder;
@@ -91,6 +92,7 @@ fn run_load(coord: &Coordinator, queries: usize, q: &[f32]) -> f64 {
             mode: bandit_mips::coordinator::QueryMode::BoundedMe,
             seed: i as u64,
             deadline: None,
+            budget_flops: None,
             storage: None,
             decode_ns: 0,
         };
@@ -377,6 +379,146 @@ fn main() {
         }
     }
 
+    // Overload sweep (harvest-not-shed): open-loop arrivals at a
+    // multiple of the measured closed-loop capacity, every query
+    // carrying a soft deadline. The shed-only baseline answers a
+    // shrinking fraction within the deadline as load grows; the
+    // anytime configuration harvests checkpointed elimination rounds
+    // at the deadline instead of shedding or running to completion, so
+    // its answered-within-deadline fraction should sit strictly above
+    // the baseline at ≥ 2× capacity. A reply counts as answered when
+    // it is not shed and its pipeline time (queue wait + service)
+    // lands inside 1.5× the deadline — the slack absorbs the one-round
+    // overshoot a harvest at a round boundary is allowed.
+    let ods = gaussian_dataset(1000, 256, 41);
+    let oq = ods.sample_query(5);
+    let ocfg = |harvest: bool, degrade| CoordinatorConfig {
+        workers: 2,
+        max_batch: 16,
+        batch_timeout: Duration::from_micros(200),
+        queue_capacity: 16384,
+        backend: Backend::Native,
+        harvest,
+        degrade,
+        ..Default::default()
+    };
+    let cap_coord = Coordinator::new(ods.vectors.clone(), ocfg(true, None)).unwrap();
+    run_load(&cap_coord, 50, &oq); // warm the pipeline
+    let capacity_qps = run_load(&cap_coord, 200, &oq);
+    let service_p50 = cap_coord.metrics().service.0;
+    cap_coord.shutdown();
+    // Deadline: a few median service times, so the mid-run budget has
+    // rounds to cut under pressure (floored for scheduler jitter).
+    let deadline = Duration::from_secs_f64((service_p50 * 4.0).max(0.002));
+    println!(
+        "  overload sweep: capacity ~{capacity_qps:.0} qps, deadline {:.2} ms",
+        deadline.as_secs_f64() * 1e3
+    );
+    let mut overload_points: Vec<Json> = Vec::new();
+    for (mode_label, harvest, degrade) in [
+        ("shed_only", false, None),
+        ("harvest", true, None),
+        ("harvest_admit", true, Some(DegradePolicy::default())),
+    ] {
+        for mult in [1.0f64, 2.0, 4.0] {
+            let coord = Coordinator::new(ods.vectors.clone(), ocfg(harvest, degrade)).unwrap();
+            let rate = capacity_qps * mult;
+            let window = Duration::from_millis(600);
+            let interval = Duration::from_secs_f64(1.0 / rate);
+            let t0 = Instant::now();
+            let mut rxs = Vec::with_capacity((rate * 0.7) as usize);
+            let mut dropped = 0u64;
+            let mut i = 0u64;
+            loop {
+                let target = t0 + interval.mul_f64(i as f64);
+                if target >= t0 + window {
+                    break;
+                }
+                while Instant::now() < target {
+                    std::hint::spin_loop();
+                }
+                let req = QueryRequest {
+                    vector: oq.to_vec(),
+                    k: 5,
+                    epsilon: 0.05,
+                    delta: 0.1,
+                    mode: bandit_mips::coordinator::QueryMode::BoundedMe,
+                    seed: i,
+                    deadline: Some(deadline),
+                    budget_flops: None,
+                    storage: None,
+                    decode_ns: 0,
+                };
+                match coord.submit(req) {
+                    Ok(rx) => rxs.push(rx),
+                    Err(_) => dropped += 1, // queue full: counts against answered
+                }
+                i += 1;
+            }
+            let submitted = (rxs.len() as u64) + dropped;
+            let grace = deadline.mul_f64(1.5);
+            let (mut answered, mut sheds, mut degraded_ct) = (0u64, 0u64, 0u64);
+            let mut eps_hat_sum = 0.0f64;
+            for rx in rxs {
+                let resp = rx.recv().expect("recv");
+                if resp.shed {
+                    sheds += 1;
+                    continue;
+                }
+                if resp.queue_wait + resp.service <= grace {
+                    answered += 1;
+                }
+                if resp.degraded {
+                    degraded_ct += 1;
+                    eps_hat_sum += resp.epsilon_hat;
+                }
+            }
+            let answered_frac = answered as f64 / submitted as f64;
+            let mean_eps_hat = if degraded_ct > 0 {
+                eps_hat_sum / degraded_ct as f64
+            } else {
+                0.0
+            };
+            println!(
+                "    overload {mode_label} load={mult}x: answered {:.1}% shed {:.1}% degraded {:.1}% (mean eps_hat {:.4}, {} dropped)",
+                answered_frac * 1e2,
+                sheds as f64 / submitted as f64 * 1e2,
+                degraded_ct as f64 / submitted as f64 * 1e2,
+                mean_eps_hat,
+                dropped
+            );
+            // Rows keyed by (name, offered_load) so bench_diff can
+            // track answered-within-deadline per load point; `mean` is
+            // the answered fraction (higher is better).
+            r.push(Measurement {
+                name: format!("serving/overload {mode_label} load={mult}x"),
+                iters: submitted,
+                mean: answered_frac,
+                std: 0.0,
+                min: answered_frac,
+                median: answered_frac,
+                tags: vec![
+                    ("offered_load", Json::Num(mult)),
+                    ("harvest", Json::Str(mode_label.into())),
+                    ("answered_within_deadline", Json::Num(answered_frac)),
+                ],
+            });
+            overload_points.push(Json::obj([
+                ("mode", Json::Str(mode_label.into())),
+                ("offered_load_x", Json::Num(mult)),
+                ("capacity_qps", Json::Num(capacity_qps)),
+                ("deadline_ms", Json::Num(deadline.as_secs_f64() * 1e3)),
+                ("submitted", Json::Num(submitted as f64)),
+                ("dropped", Json::Num(dropped as f64)),
+                ("answered_within_deadline_frac", Json::Num(answered_frac)),
+                ("shed_frac", Json::Num(sheds as f64 / submitted as f64)),
+                ("degraded_frac", Json::Num(degraded_ct as f64 / submitted as f64)),
+                ("mean_epsilon_hat", Json::Num(mean_eps_hat)),
+            ]));
+            coord.shutdown();
+        }
+    }
+
     // Wire codecs, decode only: what each protocol charges to turn raw
     // socket bytes into a submittable query — line-JSON pays a full
     // parse plus numeric vector extraction, binary pays a frame scan
@@ -422,7 +564,7 @@ fn main() {
             || {
                 dec.feed(&frame_bytes);
                 let f = dec.try_frame().unwrap().expect("whole frame fed");
-                binary::decode_query_payload(f.body, &mut coords).unwrap().dim
+                binary::decode_query_payload(f.body, f.version, &mut coords).unwrap().dim
             },
         );
         let bin_mean = r.rows().last().unwrap().mean;
@@ -434,7 +576,7 @@ fn main() {
                 dec.feed(&frame_bytes);
                 let f = dec.try_frame().unwrap().unwrap();
                 std::hint::black_box(
-                    binary::decode_query_payload(f.body, &mut coords).unwrap(),
+                    binary::decode_query_payload(f.body, f.version, &mut coords).unwrap(),
                 );
             }
         });
@@ -552,6 +694,7 @@ fn main() {
             ("sharded", Json::Arr(shard_points)),
             ("hedging", Json::Arr(hedge_points)),
             ("churn", Json::Arr(churn_points)),
+            ("overload", Json::Arr(overload_points)),
             ("wire_decode", Json::Arr(wire_decode_points)),
             ("wire_e2e", Json::Arr(wire_e2e_points)),
             ("fast_path_served", Json::Num(fast_path_served as f64)),

@@ -3,7 +3,8 @@
 
 use super::{MipsIndex, MipsParams, MipsResult};
 use crate::bandit::{
-    BoundedMe, BoundedMeConfig, Compaction, MatrixArms, PullOrder, QuantArms, RewardSource,
+    AnytimeBudget, BoundedMe, BoundedMeConfig, Compaction, Harvest, MatrixArms, PullOrder,
+    QuantArms, RewardSource,
 };
 use crate::data::quant::{QuantMatrix, Storage};
 use crate::data::shard::Shard;
@@ -145,40 +146,58 @@ impl BoundedMeIndex {
         shard: &Shard,
         tier: Storage,
     ) -> Vec<ShardPartial> {
-        debug_assert_eq!(self.data.rows(), shard.rows(), "index/shard row mismatch");
-        let dim = self.data.cols();
         queries
             .iter()
-            .map(|q| {
-                let res = self.query_with_tier(q, params, ctx, tier);
-                let confirm_t0 =
-                    if ctx.trace.armed { Some(Instant::now()) } else { None };
-                // Confirm step as blocked kernels: survivors are
-                // scattered rows, scored through the shared
-                // `partial_dot_rows` staging loop (bit-identical per
-                // row to `dot`), several candidates per query register
-                // load.
-                let mut entries: Vec<(f32, usize)> =
-                    Vec::with_capacity(res.indices.len());
-                partial_dot_rows_chunked(
-                    res.indices.iter().map(|&local| self.data.row(local)),
-                    q,
-                    |i, score| entries.push((score, shard.global_id(res.indices[i]))),
-                );
-                if let Some(t0) = confirm_t0 {
-                    if let Some(exec) = ctx.trace.queries.last_mut() {
-                        exec.confirm_ns += t0.elapsed().as_nanos() as u64;
-                        exec.ended = Instant::now();
-                    }
-                }
-                let confirm_flops = (entries.len() * dim) as u64;
-                ShardPartial {
-                    flops: res.flops + confirm_flops,
-                    scanned: entries.len(),
-                    entries,
-                }
-            })
+            .map(|q| self.query_shard_tier_budget(q, params, ctx, shard, tier, AnytimeBudget::NONE).0)
             .collect()
+    }
+
+    /// Single-query form of [`Self::query_batch_shard_tier`] that also
+    /// threads an [`AnytimeBudget`] through the bandit. With
+    /// [`AnytimeBudget::NONE`] this is bit-identical to one iteration of
+    /// the batch entry point (which delegates here); with an armed
+    /// budget the *sample* step may stop early at a round checkpoint, in
+    /// which case the harvested survivors still go through the exact
+    /// confirm rescore and the returned [`Harvest`] carries the achieved
+    /// ε̂ in the same request-relative units as [`MipsParams::epsilon`].
+    pub fn query_shard_tier_budget(
+        &self,
+        q: &[f32],
+        params: &MipsParams,
+        ctx: &mut QueryContext,
+        shard: &Shard,
+        tier: Storage,
+        budget: AnytimeBudget,
+    ) -> (ShardPartial, Option<Harvest>) {
+        debug_assert_eq!(self.data.rows(), shard.rows(), "index/shard row mismatch");
+        let dim = self.data.cols();
+        let (res, harvest) = self.query_with_tier_budget(q, params, ctx, tier, budget);
+        let confirm_t0 = if ctx.trace.armed { Some(Instant::now()) } else { None };
+        // Confirm step as blocked kernels: survivors are scattered rows,
+        // scored through the shared `partial_dot_rows` staging loop
+        // (bit-identical per row to `dot`), several candidates per query
+        // register load.
+        let mut entries: Vec<(f32, usize)> = Vec::with_capacity(res.indices.len());
+        partial_dot_rows_chunked(
+            res.indices.iter().map(|&local| self.data.row(local)),
+            q,
+            |i, score| entries.push((score, shard.global_id(res.indices[i]))),
+        );
+        if let Some(t0) = confirm_t0 {
+            if let Some(exec) = ctx.trace.queries.last_mut() {
+                exec.confirm_ns += t0.elapsed().as_nanos() as u64;
+                exec.ended = Instant::now();
+            }
+        }
+        let confirm_flops = (entries.len() * dim) as u64;
+        (
+            ShardPartial {
+                flops: res.flops + confirm_flops,
+                scanned: entries.len(),
+                entries,
+            },
+            harvest,
+        )
     }
 
     /// The per-query reward bound `b = max_j colmax[j]·|q_j|`.
@@ -198,7 +217,8 @@ impl BoundedMeIndex {
         q: &[f32],
         params: &MipsParams,
         ctx: &mut QueryContext,
-    ) -> Option<MipsResult> {
+        budget: AnytimeBudget,
+    ) -> Option<(MipsResult, Option<Harvest>)> {
         let qm = self.quant.as_ref()?;
         let n_list = self.data.cols() as f64;
         // ε is range-relative against the *f32* tier (the guarantee is
@@ -242,14 +262,26 @@ impl BoundedMeIndex {
         let out = if trace.armed {
             let mut exec = QueryExec::begin();
             exec.quant = true;
-            let out = algo.run_in_traced(&arms, bandit, Some(&mut exec.rounds));
+            let out = algo.run_in_traced_budget(&arms, bandit, Some(&mut exec.rounds), budget);
             exec.total_pulls = out.total_pulls;
             exec.bandit_ns = exec.started.elapsed().as_nanos() as u64;
             trace.queries.push(exec);
             out
         } else {
-            algo.run_in(&arms, bandit)
+            algo.run_in_budget(&arms, bandit, budget)
         };
+        // An ε̂'-optimal harvest under dequantized means is
+        // (ε̂' + 2b)-optimal under true means (same argument as the ε
+        // split above); convert back to request-relative units.
+        let harvest = bandit.last_harvest().map(|h| Harvest {
+            epsilon_hat: (h.epsilon_hat + 2.0 * bias) / eff_target * params.epsilon,
+            rounds: h.rounds,
+        });
+        if let (Some(h), true) = (harvest, trace.armed) {
+            if let Some(exec) = trace.queries.last_mut() {
+                exec.harvest = Some(h.epsilon_hat);
+            }
+        }
         let confirm_t0 = if trace.armed { Some(Instant::now()) } else { None };
         // Confirm step: exact f32 rescore of the ≤ k survivors through
         // the shared blocked staging loop (bit-identical per row to
@@ -273,12 +305,15 @@ impl BoundedMeIndex {
             }
         }
         let confirm_flops = (entries.len() * self.data.cols()) as u64;
-        Some(MipsResult {
-            indices: entries.iter().map(|&(_, id)| id).collect(),
-            scores: entries.iter().map(|&(s, _)| s).collect(),
-            flops: out.total_pulls + confirm_flops,
-            candidates: 0,
-        })
+        Some((
+            MipsResult {
+                indices: entries.iter().map(|&(_, id)| id).collect(),
+                scores: entries.iter().map(|&(s, _)| s).collect(),
+                flops: out.total_pulls + confirm_flops,
+                candidates: 0,
+            },
+            harvest,
+        ))
     }
 
     /// [`MipsIndex::query_with`] with an explicit **resolved** sampling
@@ -296,12 +331,34 @@ impl BoundedMeIndex {
         ctx: &mut QueryContext,
         tier: Storage,
     ) -> MipsResult {
+        self.query_with_tier_budget(q, params, ctx, tier, AnytimeBudget::NONE).0
+    }
+
+    /// [`Self::query_with_tier`] with an [`AnytimeBudget`] threaded
+    /// through to the elimination core. With [`AnytimeBudget::NONE`]
+    /// (or under `RUST_PALLAS_FORCE_NO_DEGRADE`) the result is
+    /// bit-identical to the plain entry point and the harvest slot is
+    /// `None`. When the budget expires mid-run, the best-so-far round
+    /// checkpoint is returned instead and the [`Harvest`] reports the
+    /// achieved confidence width ε̂ **in the same request-relative
+    /// units as [`MipsParams::epsilon`]** (converted from the config
+    /// units the bandit ran at: divided by the f32 reward-range width
+    /// on the exact tier, bias-inflated then normalized on the
+    /// compressed tier) plus the number of completed rounds.
+    pub fn query_with_tier_budget(
+        &self,
+        q: &[f32],
+        params: &MipsParams,
+        ctx: &mut QueryContext,
+        tier: Storage,
+        budget: AnytimeBudget,
+    ) -> (MipsResult, Option<Harvest>) {
         if tier == self.storage {
-            if let Some(res) = self.query_quant(q, params, ctx) {
+            if let Some(res) = self.query_quant(q, params, ctx, budget) {
                 return res;
             }
         }
-        self.query_f32(q, params, ctx)
+        self.query_f32(q, params, ctx, budget)
     }
 
     /// [`MipsIndex::query_batch`] with an explicit resolved sampling
@@ -326,7 +383,13 @@ impl BoundedMeIndex {
     /// when `(order, dim, seed)` changes, so a batch with one seed
     /// shares one permutation), survivor state — including the
     /// survivor-compacted pull panel — in `ctx.bandit`.
-    fn query_f32(&self, q: &[f32], params: &MipsParams, ctx: &mut QueryContext) -> MipsResult {
+    fn query_f32(
+        &self,
+        q: &[f32],
+        params: &MipsParams,
+        ctx: &mut QueryContext,
+        budget: AnytimeBudget,
+    ) -> (MipsResult, Option<Harvest>) {
         let bound = self.reward_bound(q);
         // Disjoint field borrows: `pull` is held immutably by the arms
         // while `bandit` is mutated by the run (and `trace` is staged
@@ -346,27 +409,42 @@ impl BoundedMeIndex {
             delta: params.delta.clamp(f64::MIN_POSITIVE, 1.0 - 1e-12),
         })
         .with_compaction(self.compaction);
+        let range_width = arms.range_width();
         let out = if trace.armed {
             let mut exec = QueryExec::begin();
             // Set when a compressed tier bailed on the ε-bias just
             // before this f32 run (see `query_quant`).
             exec.quant_fallback = std::mem::take(&mut trace.quant_fallback);
-            let out = algo.run_in_traced(&arms, bandit, Some(&mut exec.rounds));
+            let out = algo.run_in_traced_budget(&arms, bandit, Some(&mut exec.rounds), budget);
             exec.total_pulls = out.total_pulls;
             exec.bandit_ns = exec.started.elapsed().as_nanos() as u64;
             exec.ended = Instant::now();
             trace.queries.push(exec);
             out
         } else {
-            algo.run_in(&arms, bandit)
+            algo.run_in_budget(&arms, bandit, budget)
         };
-        MipsResult {
-            indices: out.arms,
-            // Empirical mean × N ≈ inner product estimate.
-            scores: out.means.iter().map(|&m| (m * n_list) as f32).collect(),
-            flops: out.total_pulls,
-            candidates: 0,
+        // ε̂ comes back in config units (ε · range) — divide the range
+        // width back out so callers see request-relative units.
+        let harvest = bandit.last_harvest().map(|h| Harvest {
+            epsilon_hat: h.epsilon_hat / range_width.max(f64::MIN_POSITIVE),
+            rounds: h.rounds,
+        });
+        if let (Some(h), true) = (harvest, trace.armed) {
+            if let Some(exec) = trace.queries.last_mut() {
+                exec.harvest = Some(h.epsilon_hat);
+            }
         }
+        (
+            MipsResult {
+                indices: out.arms,
+                // Empirical mean × N ≈ inner product estimate.
+                scores: out.means.iter().map(|&m| (m * n_list) as f32).collect(),
+                flops: out.total_pulls,
+                candidates: 0,
+            },
+            harvest,
+        )
     }
 }
 
@@ -680,6 +758,102 @@ mod tests {
         let via_tier = quant.query_with_tier(&q, &params, &mut ctx_b, quant.storage());
         assert_eq!(via_trait.indices, via_tier.indices);
         assert_eq!(via_trait.flops, via_tier.flops);
+    }
+
+    #[test]
+    fn unarmed_budget_entry_points_are_bit_identical_to_plain() {
+        // `AnytimeBudget::NONE` must be invisible: same code path, same
+        // bits, no harvest record — across tiers.
+        use crate::bandit::AnytimeBudget;
+        let data = gaussian(90, 128, 41);
+        for storage in [Storage::F32, Storage::F16, Storage::Int8] {
+            let idx = BoundedMeIndex::with_order(data.clone(), PullOrder::BlockShuffled(16))
+                .with_storage(storage);
+            let tier = idx.storage();
+            let mut ctx_a = QueryContext::new();
+            let mut ctx_b = QueryContext::new();
+            for seed in 0..3u64 {
+                let q: Vec<f32> = Rng::new(500 + seed).gaussian_vec(128);
+                let params = MipsParams { k: 3, epsilon: 0.1, delta: 0.1, seed };
+                let plain = idx.query_with_tier(&q, &params, &mut ctx_a, tier);
+                let (budgeted, harvest) = idx.query_with_tier_budget(
+                    &q,
+                    &params,
+                    &mut ctx_b,
+                    tier,
+                    AnytimeBudget::NONE,
+                );
+                assert!(harvest.is_none(), "{storage:?} seed={seed}");
+                assert_eq!(plain.indices, budgeted.indices, "{storage:?} seed={seed}");
+                assert_eq!(plain.flops, budgeted.flops, "{storage:?} seed={seed}");
+                for (a, b) in plain.scores.iter().zip(&budgeted.scores) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{storage:?} seed={seed}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_flop_budget_harvests_with_relative_epsilon_hat() {
+        use crate::bandit::{force_no_degrade_requested, AnytimeBudget};
+        let data = gaussian(120, 400, 43);
+        let idx = BoundedMeIndex::with_order(data, PullOrder::BlockShuffled(16));
+        let q: Vec<f32> = Rng::new(44).gaussian_vec(400);
+        let params = MipsParams { k: 4, epsilon: 0.05, delta: 0.1, seed: 2 };
+        let mut ctx = QueryContext::new();
+        let budget =
+            AnytimeBudget { deadline: None, budget_flops: Some(1) };
+        let (res, harvest) = idx.query_with_tier_budget(&q, &params, &mut ctx, Storage::F32, budget);
+        if force_no_degrade_requested() {
+            // Degrade-leg CI: the kill switch must make the armed run
+            // bit-identical to plain.
+            assert!(harvest.is_none());
+            let plain = idx.query(&q, &params);
+            assert_eq!(res.indices, plain.indices);
+            return;
+        }
+        let h = harvest.expect("1-flop budget must harvest");
+        assert_eq!(h.rounds, 1);
+        // Round-1 checkpoint: ε̂ = ε/2 in the same request-relative
+        // units the caller supplied.
+        assert!(
+            (h.epsilon_hat - params.epsilon / 2.0).abs() < 1e-9,
+            "epsilon_hat {} != eps/2 {}",
+            h.epsilon_hat,
+            params.epsilon / 2.0
+        );
+        assert_eq!(res.indices.len(), params.k);
+        let full = idx.query(&q, &params);
+        assert!(res.flops < full.flops, "harvest must cost less than a full run");
+    }
+
+    #[test]
+    fn shard_budget_entry_point_confirms_harvested_survivors() {
+        use crate::bandit::{force_no_degrade_requested, AnytimeBudget};
+        use crate::data::shard::{ShardSpec, ShardedMatrix};
+        let data = gaussian(80, 200, 45);
+        let sm = ShardedMatrix::new(data.clone(), ShardSpec::contiguous(2));
+        let shard = sm.shard(1); // rows 40..80
+        let idx =
+            BoundedMeIndex::with_order(shard.matrix().clone(), PullOrder::BlockShuffled(16));
+        let q: Vec<f32> = Rng::new(46).gaussian_vec(200);
+        let mut ctx = QueryContext::new();
+        let params = MipsParams { k: 3, epsilon: 0.05, delta: 0.1, seed: 5 };
+        let budget =
+            AnytimeBudget { deadline: None, budget_flops: Some(1) };
+        let (partial, harvest) =
+            idx.query_shard_tier_budget(&q, &params, &mut ctx, shard, Storage::F32, budget);
+        if !force_no_degrade_requested() {
+            assert!(harvest.is_some(), "1-flop budget must harvest");
+        }
+        // Harvested or not, the confirm step still rescores exactly
+        // under global ids.
+        assert_eq!(partial.entries.len(), 3);
+        for &(score, gid) in &partial.entries {
+            assert!((40..80).contains(&gid), "id {gid} not lifted to global");
+            let exact = crate::linalg::dot(data.row(gid), &q);
+            assert_eq!(score.to_bits(), exact.to_bits());
+        }
     }
 
     #[test]

@@ -50,6 +50,83 @@ pub fn force_no_compact_requested() -> bool {
     })
 }
 
+/// Environment variable disabling every anytime/degradation path (the
+/// CI leg proving the feature's off-path is bit-identical): any value
+/// other than empty or `"0"` makes [`BoundedMe`] ignore any
+/// [`AnytimeBudget`] and the coordinator skip budget arming and
+/// [`crate::exec::DegradePolicy`] application. Read once, at first use.
+pub const FORCE_NO_DEGRADE_ENV: &str = "RUST_PALLAS_FORCE_NO_DEGRADE";
+
+/// True when [`FORCE_NO_DEGRADE_ENV`] pins degradation off.
+pub fn force_no_degrade_requested() -> bool {
+    static FORCED: OnceLock<bool> = OnceLock::new();
+    *FORCED.get_or_init(|| match std::env::var(FORCE_NO_DEGRADE_ENV) {
+        Ok(v) => !(v.is_empty() || v == "0"),
+        Err(_) => false,
+    })
+}
+
+/// An anytime stopping budget for one BOUNDEDME run. When armed, the
+/// run checks it at the top of every elimination round *after the
+/// first*: round 1 always completes (without one completed round there
+/// is no checkpoint to harvest — the caller sheds instead), and an
+/// exhausted budget returns the latest round's checkpointed top-k with
+/// its achieved width ε̂ (see [`Harvest`]). Unarmed (the default), the
+/// run is byte-for-byte the plain Algorithm 1: no clock reads, no
+/// checkpoint writes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AnytimeBudget {
+    /// Soft wall-clock deadline: harvest at the first round boundary at
+    /// or past this instant.
+    pub deadline: Option<Instant>,
+    /// FLOP budget (bandit pulls): harvest at the first round boundary
+    /// where `total_pulls` has reached it.
+    pub budget_flops: Option<u64>,
+}
+
+impl AnytimeBudget {
+    /// The unarmed budget (plain Algorithm 1).
+    pub const NONE: Self = Self { deadline: None, budget_flops: None };
+
+    /// Whether any limit is set.
+    pub fn armed(&self) -> bool {
+        self.deadline.is_some() || self.budget_flops.is_some()
+    }
+
+    /// Whether the budget is spent at `total_pulls` pulls. Reads the
+    /// clock only when a deadline is set.
+    fn exhausted(&self, total_pulls: u64) -> bool {
+        if let Some(b) = self.budget_flops {
+            if total_pulls >= b {
+                return true;
+            }
+        }
+        if let Some(d) = self.deadline {
+            if Instant::now() >= d {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// Outcome record of an anytime harvest, left in [`BanditScratch`] by a
+/// budget-exhausted run (and `None` after any run that completed all
+/// rounds). `epsilon_hat` is the *achieved* suboptimality width in the
+/// same units as [`BoundedMeConfig::epsilon`] — always `< ε`: after
+/// completing round `l` the elimination debt is `Σ_{j≤l} ε_j = ε −
+/// 3ε_l`, and ranking survivors by means estimated at radius `ε_l/2`
+/// adds `ε_l`, so ε̂ = ε − 2ε_l. The degradation is *coverage*, not
+/// width: a harvested run answered from a partially-eliminated survivor
+/// pool with δ budget already spent, at fewer pulls than the full run.
+#[derive(Clone, Copy, Debug)]
+pub struct Harvest {
+    /// Achieved width ε̂ (units of [`BoundedMeConfig::epsilon`]).
+    pub epsilon_hat: f64,
+    /// Completed elimination rounds at harvest time (≥ 1).
+    pub rounds: u32,
+}
+
 /// When BOUNDEDME compacts the survivors' remaining coordinates into
 /// the scratch panel. Pure layout policy: every choice produces
 /// bit-identical [`BoundedMe::run`] output (the `prop_invariants`
@@ -152,6 +229,10 @@ pub struct RoundTrace {
     pub epsilon_l: f64,
     /// Round confidence budget `δ_l`.
     pub delta_l: f64,
+    /// Width ε̂ an anytime harvest at the *end* of this round would
+    /// report: elimination debt through this round plus the round's
+    /// estimation radius, `Σ_{j≤l} ε_j + ε_l = ε − 2ε_l`.
+    pub epsilon_hat: f64,
     /// Whether this round's pulls ran on the compacted survivor panel.
     pub compacted: bool,
     /// Wall time of the round (batched pull + elimination), in
@@ -188,6 +269,15 @@ pub struct BanditScratch {
     /// Survivor-compacted pull panel (see the module docs); sized by
     /// the first compacting queries, then reused allocation-free.
     panel: PullPanel,
+    /// Anytime checkpoint: the best-so-far top-k `(mean, id)` set,
+    /// rewritten at the end of every completed round **only while an
+    /// [`AnytimeBudget`] is armed** — unarmed runs never touch it (the
+    /// bit-identity contract costs nothing on the common path). Sized
+    /// by the first armed query, then reused allocation-free.
+    checkpoint: Vec<(f64, u32)>,
+    /// Harvest record of the most recent run: `Some` iff the run was
+    /// cut short by its budget (see [`Harvest`]).
+    harvest: Option<Harvest>,
 }
 
 impl BanditScratch {
@@ -201,6 +291,13 @@ impl BanditScratch {
     /// [`crate::bandit::PullScratch::grow_events`].
     pub fn panel_grow_events(&self) -> u64 {
         self.panel.grow_events()
+    }
+
+    /// Harvest record of the most recent run through this scratch:
+    /// `Some` iff that run returned an anytime checkpoint instead of
+    /// completing its elimination schedule.
+    pub fn last_harvest(&self) -> Option<Harvest> {
+        self.harvest
     }
 }
 
@@ -257,7 +354,8 @@ impl BoundedMe {
     pub fn run<R: RewardSource>(&self, env: &R) -> BoundedMeOutput {
         let mut scratch = BanditScratch::new();
         let mut trace = Vec::new();
-        let result = self.run_core(env, &mut scratch, Some(&mut trace));
+        let result =
+            self.run_core(env, &mut scratch, Some(&mut trace), AnytimeBudget::NONE);
         BoundedMeOutput { result, trace }
     }
 
@@ -270,7 +368,33 @@ impl BoundedMe {
         env: &R,
         scratch: &mut BanditScratch,
     ) -> BanditResult {
-        self.run_core(env, scratch, None)
+        self.run_core(env, scratch, None, AnytimeBudget::NONE)
+    }
+
+    /// [`BoundedMe::run_in`] under an [`AnytimeBudget`]: identical
+    /// (bit-for-bit) while the budget is not exhausted; once it is, the
+    /// run returns the latest round's checkpointed top-k and records a
+    /// [`Harvest`] in the scratch ([`BanditScratch::last_harvest`]).
+    /// [`FORCE_NO_DEGRADE_ENV`] disarms any budget process-wide.
+    pub fn run_in_budget<R: RewardSource>(
+        &self,
+        env: &R,
+        scratch: &mut BanditScratch,
+        budget: AnytimeBudget,
+    ) -> BanditResult {
+        self.run_core(env, scratch, None, budget)
+    }
+
+    /// [`BoundedMe::run_in_traced`] under an [`AnytimeBudget`] (see
+    /// [`BoundedMe::run_in_budget`]).
+    pub fn run_in_traced_budget<R: RewardSource>(
+        &self,
+        env: &R,
+        scratch: &mut BanditScratch,
+        trace: Option<&mut Vec<RoundTrace>>,
+        budget: AnytimeBudget,
+    ) -> BanditResult {
+        self.run_core(env, scratch, trace, budget)
     }
 
     /// [`BoundedMe::run_in`] with optional per-round trace collection
@@ -284,7 +408,7 @@ impl BoundedMe {
         scratch: &mut BanditScratch,
         trace: Option<&mut Vec<RoundTrace>>,
     ) -> BanditResult {
-        self.run_core(env, scratch, trace)
+        self.run_core(env, scratch, trace, AnytimeBudget::NONE)
     }
 
     fn run_core<R: RewardSource>(
@@ -292,8 +416,15 @@ impl BoundedMe {
         env: &R,
         scratch: &mut BanditScratch,
         mut trace: Option<&mut Vec<RoundTrace>>,
+        budget: AnytimeBudget,
     ) -> BanditResult {
-        let BanditScratch { survivors, pull_ids, pull_sums, panel } = scratch;
+        let BanditScratch { survivors, pull_ids, pull_sums, panel, checkpoint, harvest } =
+            scratch;
+        *harvest = None;
+        // The global kill switch: with the pin set, an armed budget is
+        // indistinguishable from no budget at all (the CI `degrade` leg
+        // proves the off-path bit-identical this way).
+        let armed = budget.armed() && !force_no_degrade_requested();
         let n = env.n_arms();
         let n_list = env.list_len();
         let k = self.cfg.k;
@@ -306,12 +437,26 @@ impl BoundedMe {
 
         let mut eps_l = self.cfg.epsilon / 4.0;
         let mut delta_l = self.cfg.delta / 2.0;
+        // Elimination debt Σ_{j≤l} ε_j of the completed rounds.
+        let mut eps_debt = 0.0f64;
+        // ε̂ a harvest would report right now (valid once a round has
+        // completed and written a checkpoint).
+        let mut eps_hat = 0.0f64;
         let mut t_prev = 0usize;
         let mut round: u32 = 0;
         let compactable = self.compaction.enabled() && env.supports_compaction();
         let mut panel_on = false;
 
         while survivors.len() > k {
+            // Anytime stop: only at a round boundary with ≥ 1 completed
+            // round (round 1 always runs — before it there is nothing
+            // to harvest, and the caller sheds instead).
+            if armed && round >= 1 && budget.exhausted(total_pulls) {
+                *harvest = Some(Harvest { epsilon_hat: eps_hat, rounds: round });
+                let arms = checkpoint.iter().map(|&(_, id)| id as usize).collect();
+                let means = checkpoint.iter().map(|&(m, _)| m).collect();
+                return BanditResult { arms, means, total_pulls, rounds: round };
+            }
             round += 1;
             let s = survivors.len();
             let gap = s - k; // |S_l| − K ≥ 1 here
@@ -359,6 +504,9 @@ impl BoundedMe {
                     t_l,
                     epsilon_l: eps_l,
                     delta_l,
+                    // Debt through this round (eps_debt + ε_l) plus the
+                    // round's estimation radius allowance ε_l.
+                    epsilon_hat: eps_debt + 2.0 * eps_l,
                     compacted: panel_on,
                     nanos: 0,
                 });
@@ -410,6 +558,28 @@ impl BoundedMe {
                 if let Some(entry) = trace.last_mut() {
                     entry.nanos = t0.elapsed().as_nanos() as u64;
                 }
+            }
+
+            // Round complete: checkpoint the best-so-far top-k for a
+            // possible harvest next round. Armed runs only — the plain
+            // path never writes (or reads) the checkpoint. The partial
+            // selection works on a copy, so survivor order (and thus
+            // every later pull and elimination) is untouched.
+            eps_debt += eps_l;
+            if armed {
+                eps_hat = eps_debt + eps_l;
+                let by_best = |a: &(f64, u32), b: &(f64, u32)| {
+                    b.0.partial_cmp(&a.0)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.1.cmp(&b.1))
+                };
+                checkpoint.clear();
+                checkpoint.extend(survivors.iter().map(|a| (a.mean(), a.id)));
+                if checkpoint.len() > k {
+                    checkpoint.select_nth_unstable_by(k - 1, by_best);
+                    checkpoint.truncate(k);
+                }
+                checkpoint.sort_by(by_best);
             }
 
             eps_l *= 0.75;
@@ -675,6 +845,87 @@ mod tests {
         if force_no_compact_requested() {
             assert_eq!(Compaction::default(), Compaction::Never);
         }
+    }
+
+    #[test]
+    fn generous_budget_is_bit_identical_to_unbudgeted() {
+        // Armed-but-never-exhausted budgets must not perturb the run:
+        // same arms, same means bit-for-bit, same pull accounting, and
+        // no harvest record.
+        let mut rng = Rng::new(0xAB);
+        let m = Matrix::from_fn(50, 200, |_, _| rng.gaussian() as f32);
+        let q: Vec<f32> = rng.gaussian_vec(200);
+        let env = MatrixArms::new(&m, &q, 16.0, PullOrder::BlockShuffled(16), 7);
+        let algo = BoundedMe::new(BoundedMeConfig { k: 3, epsilon: 0.05, delta: 0.1 });
+        let mut s1 = BanditScratch::new();
+        let mut s2 = BanditScratch::new();
+        let plain = algo.run_in(&env, &mut s1);
+        let generous = AnytimeBudget {
+            deadline: Some(Instant::now() + std::time::Duration::from_secs(3600)),
+            budget_flops: Some(u64::MAX),
+        };
+        let armed = algo.run_in_budget(&env, &mut s2, generous);
+        assert_eq!(plain.arms, armed.arms);
+        assert_eq!(plain.total_pulls, armed.total_pulls);
+        assert_eq!(plain.rounds, armed.rounds);
+        for (a, b) in plain.means.iter().zip(&armed.means) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(s2.last_harvest().is_none());
+    }
+
+    #[test]
+    fn flop_budget_harvests_a_checkpoint() {
+        let mut rng = Rng::new(0xCD);
+        let m = Matrix::from_fn(80, 400, |_, _| rng.gaussian() as f32);
+        let q: Vec<f32> = rng.gaussian_vec(400);
+        let env = MatrixArms::new(&m, &q, 16.0, PullOrder::BlockShuffled(16), 9);
+        let algo = BoundedMe::new(BoundedMeConfig { k: 4, epsilon: 0.02, delta: 0.1 });
+        let mut scratch = BanditScratch::new();
+        let full = algo.run_in(&env, &mut scratch);
+        assert!(full.rounds >= 2, "instance too easy to exercise a harvest");
+        // A 1-flop budget exhausts right after round 1.
+        let budget = AnytimeBudget { deadline: None, budget_flops: Some(1) };
+        let cut = algo.run_in_budget(&env, &mut scratch, budget);
+        if force_no_degrade_requested() {
+            // Degrade pin live (CI `degrade` leg): the budget must have
+            // been ignored entirely.
+            assert_eq!(cut.arms, full.arms);
+            assert!(scratch.last_harvest().is_none());
+            return;
+        }
+        let h = scratch.last_harvest().expect("tiny budget must harvest");
+        assert_eq!(h.rounds, 1);
+        assert_eq!(cut.rounds, 1);
+        assert_eq!(cut.arms.len(), 4);
+        assert!(cut.total_pulls < full.total_pulls);
+        // ε̂ = ε − 2ε_1 = ε − 2·(ε/4) = ε/2 after round 1.
+        assert!((h.epsilon_hat - 0.01).abs() < 1e-12, "ε̂ = {}", h.epsilon_hat);
+        assert!(h.epsilon_hat < 0.02);
+        // Means come sorted best-first with the run's tie-break.
+        for w in cut.means.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        // A later plain run through the same scratch clears the record.
+        let again = algo.run_in(&env, &mut scratch);
+        assert_eq!(again.arms, full.arms);
+        assert!(scratch.last_harvest().is_none());
+    }
+
+    #[test]
+    fn round_trace_epsilon_hat_schedule() {
+        // ε̂ after round l is ε − 2ε_l: strictly increasing toward ε,
+        // starting at ε/2.
+        let env = constant_arms(&[0.5; 300], 256);
+        let algo = BoundedMe::new(BoundedMeConfig { k: 1, epsilon: 0.2, delta: 0.1 });
+        let out = algo.run(&env);
+        let mut prev = 0.0;
+        for t in &out.trace {
+            assert!((t.epsilon_hat - (0.2 - 2.0 * t.epsilon_l)).abs() < 1e-12);
+            assert!(t.epsilon_hat > prev && t.epsilon_hat < 0.2);
+            prev = t.epsilon_hat;
+        }
+        assert!((out.trace[0].epsilon_hat - 0.1).abs() < 1e-12);
     }
 
     #[test]

@@ -48,8 +48,9 @@ pub use arms::{
     RewardSource,
 };
 pub use bounded_me::{
-    force_no_compact_requested, BanditScratch, BoundedMe, BoundedMeConfig, BoundedMeOutput,
-    Compaction, RoundTrace, FORCE_NO_COMPACT_ENV,
+    force_no_compact_requested, force_no_degrade_requested, AnytimeBudget, BanditScratch,
+    BoundedMe, BoundedMeConfig, BoundedMeOutput, Compaction, Harvest, RoundTrace,
+    FORCE_NO_COMPACT_ENV, FORCE_NO_DEGRADE_ENV,
 };
 pub use bounds::{hoeffding_sample_size, m_bounded, serfling_radius};
 

@@ -93,12 +93,58 @@
 //! [`crate::sync::EpochGauge`]. **The query hot path takes no lock
 //! anywhere in this protocol**; only writers serialize.
 //!
+//! # Deadline lifecycle: harvest, not shed
+//!
+//! A [`QueryRequest::deadline`] (and/or [`QueryRequest::budget_flops`])
+//! starts a budget clock at **submit**, and the wire decode time the
+//! front-end stamps into [`QueryRequest::decode_ns`] counts against it
+//! — a query that burned its whole deadline being parsed sheds without
+//! computing. The clock is then checked at three points, each with a
+//! different outcome:
+//!
+//! 1. **Admission** (reactor admit / direct-worker pickup): already
+//!    expired ⇒ reply `shed = true` immediately, no compute. This is
+//!    the only *pure* shed left for BOUNDEDME queries — nothing ran, so
+//!    there is nothing to harvest.
+//! 2. **Shard pickup** (reactor path): a query expiring inside a
+//!    backed-up shard channel produces an empty `expired` partial for
+//!    that shard. For budget-armed queries — BOUNDEDME with a deadline
+//!    or FLOP cap, under [`CoordinatorConfig::harvest`] (the default)
+//!    — the merge *degrades* instead of shedding: it folds whatever
+//!    non-expired shards delivered and replies `degraded = true` with
+//!    `shards` < `shards_total` coverage. The merge still sheds when
+//!    **no** shard produced a usable partial, and unarmed queries
+//!    (exact mode, or harvesting disabled) keep the pre-anytime
+//!    contract: any expired shard sheds whole.
+//! 3. **Mid-run** (inside BOUNDEDME): budget-armed queries run under an
+//!    [`AnytimeBudget`]; each elimination round checkpoints a
+//!    best-so-far top-k into the bandit scratch, and when the budget
+//!    fires the round loop stops and returns the checkpoint — the
+//!    achieved confidence width ε̂ rides the reply as
+//!    [`QueryResponse::epsilon_hat`], with `degraded = true`. Round 1
+//!    always runs; a budget too small for even one round is a shed at
+//!    the caller.
+//!
+//! Every reply is therefore exactly one of **shed** (empty, `shed`),
+//! **degraded** (results present at reduced fidelity, `degraded`, ε̂ /
+//! coverage reported), or **exact-complete** (neither flag). The
+//! [`MetricsSnapshot`] splits terminal outcomes the same three ways
+//! (`shed` / `degraded` / the remainder of `queries`).
+//!
+//! Separately, sustained backlog can trigger **admission degradation**:
+//! with a [`DegradePolicy`] configured, the batcher widens ε / clamps k
+//! on arriving non-exact queries while [`MetricsRegistry::backlog`]
+//! exceeds the policy threshold, reporting the applied knobs via
+//! [`QueryResponse::applied_epsilon`] / [`QueryResponse::applied_k`].
+//! This is load-aware *planning*, not harvesting — such replies are not
+//! marked `degraded` unless their budget also fired.
+//!
+//! With no deadline and no budget set (or under
+//! `RUST_PALLAS_FORCE_NO_DEGRADE=1`), none of this machinery runs and
+//! answers are bit-identical to the pre-anytime coordinator.
+//!
 //! * **Backpressure**: bounded everywhere — submit queue, batch
 //!   channel, per-shard channels, reactor backlog, hedge channel.
-//! * **Load shedding**: a request whose deadline expired in queue is
-//!   answered `shed = true` without computing; workers re-check at
-//!   shard pickup so queries expiring inside a backed-up shard channel
-//!   are shed, not computed.
 //! * **Backends**: workers score through a [`ScoringEngine`] —
 //!   pure-Rust or the PJRT AOT artifact (see [`crate::runtime`]).
 //!   Hedged batches for a *different* shard score through the native
@@ -111,12 +157,12 @@ pub mod stats;
 pub use stats::{MetricsRegistry, MetricsSnapshot};
 
 use crate::algos::{BoundedMeIndex, MipsIndex, MipsParams, MipsResult};
-use crate::bandit::PullOrder;
+use crate::bandit::{force_no_degrade_requested, AnytimeBudget, Harvest, PullOrder};
 use crate::data::generation::{Delta, Generation, GenerationBuilder};
 use crate::data::quant::Storage;
 use crate::data::shard::ShardSpec;
 use crate::exec::shard::{shard_params, ShardPartial, ShardSet};
-use crate::exec::{PlanAlgo, QueryContext, QueryPlan};
+use crate::exec::{DegradePolicy, PlanAlgo, QueryContext, QueryPlan};
 use crate::linalg::{Matrix, TopK};
 use crate::runtime::{NativeEngine, PjrtEngine, ScoringEngine};
 use crate::sync::{
@@ -211,6 +257,25 @@ pub struct CoordinatorConfig {
     /// through every thread, so a disabled deployment pays zero
     /// allocations and zero atomics for the subsystem.
     pub trace: TraceConfig,
+    /// Harvest-not-shed switch (default `true`): BOUNDEDME queries
+    /// carrying a deadline or a [`QueryRequest::budget_flops`] cap run
+    /// the anytime elimination core and, when the budget expires
+    /// mid-run, answer from the best-so-far round checkpoint with
+    /// `degraded = true` and the achieved ε̂ — instead of shedding
+    /// whole. Partial shard coverage is likewise merged instead of
+    /// shed (shedding remains only for queries that expired before any
+    /// round / any shard completed). `false` restores pure shed-only
+    /// deadline handling (the pre-anytime contract); the
+    /// `RUST_PALLAS_FORCE_NO_DEGRADE` env pin forces that process-wide
+    /// regardless of this flag.
+    pub harvest: bool,
+    /// Load-aware admission degradation (default `None` = off): under
+    /// sustained queue backlog, admit BOUNDEDME queries with widened ε
+    /// / clamped k per the policy, reporting the applied knobs in
+    /// [`QueryResponse::applied_epsilon`] /
+    /// [`QueryResponse::applied_k`]. Exact queries are never degraded
+    /// at admission.
+    pub degrade: Option<DegradePolicy>,
 }
 
 impl Default for CoordinatorConfig {
@@ -228,6 +293,8 @@ impl Default for CoordinatorConfig {
             force_reactor: false,
             debug_slow_shard: None,
             trace: TraceConfig::default(),
+            harvest: true,
+            degrade: None,
         }
     }
 }
@@ -264,11 +331,24 @@ pub struct QueryRequest {
     /// with heterogeneous knobs land in different batch groups and are
     /// served with their own seeds.
     pub seed: u64,
-    /// Optional service-level deadline, measured from submission. A
-    /// request whose queue wait already exceeds it is *shed* (answered
-    /// with `shed = true` and no results) instead of wasting worker
-    /// time — classic load-shedding under overload.
+    /// Optional service-level deadline, measured from submission —
+    /// wire decode time ([`QueryRequest::decode_ns`]) counts against
+    /// it. A request that expires before any work could start is *shed*
+    /// (answered with `shed = true` and no results); a BOUNDEDME
+    /// request that expires mid-elimination is **harvested** instead
+    /// (answered from the best-so-far round checkpoint with
+    /// `degraded = true` and the achieved ε̂) unless
+    /// [`CoordinatorConfig::harvest`] is off. Exact-mode requests never
+    /// degrade: they either complete or shed.
     pub deadline: Option<Duration>,
+    /// Optional FLOP budget for BOUNDEDME sampling (pulls ≈ multiplies,
+    /// the paper's cost model): the elimination core checks it at every
+    /// round boundary and harvests the checkpoint once the spend
+    /// crosses it — a deadline in deterministic compute units, immune
+    /// to wall-clock noise. `None` (the default) leaves the spend
+    /// bounded only by (ε, δ). Rides both wire codecs (PLW2 frames /
+    /// `budget_flops` on the JSON line codec).
+    pub budget_flops: Option<u64>,
     /// Optional per-request storage-tier override for BOUNDEDME
     /// sampling (see [`resolve_storage`]). `None` (the default) samples
     /// from the deployment tier ([`CoordinatorConfig::storage`]).
@@ -298,6 +378,7 @@ impl QueryRequest {
             mode: QueryMode::BoundedMe,
             seed: 0,
             deadline: None,
+            budget_flops: None,
             storage: None,
             decode_ns: 0,
         }
@@ -306,6 +387,13 @@ impl QueryRequest {
     /// Attach a deadline (see [`QueryRequest::deadline`]).
     pub fn with_deadline(mut self, d: Duration) -> Self {
         self.deadline = Some(d);
+        self
+    }
+
+    /// Cap the BOUNDEDME sampling spend (see
+    /// [`QueryRequest::budget_flops`]).
+    pub fn with_budget_flops(mut self, flops: u64) -> Self {
+        self.budget_flops = Some(flops);
         self
     }
 
@@ -326,6 +414,7 @@ impl QueryRequest {
             mode: QueryMode::Auto,
             seed: 0,
             deadline: None,
+            budget_flops: None,
             storage: None,
             decode_ns: 0,
         }
@@ -341,6 +430,7 @@ impl QueryRequest {
             mode: QueryMode::Exact,
             seed: 0,
             deadline: None,
+            budget_flops: None,
             storage: None,
             decode_ns: 0,
         }
@@ -395,12 +485,42 @@ pub struct QueryResponse {
     /// completion event closed the merge). `usize::MAX` when no worker
     /// computed anything (shed).
     pub worker: usize,
-    /// True when the request was shed (deadline exceeded in queue): no
-    /// results were computed.
+    /// True when the request was shed (deadline exceeded before any
+    /// round of work completed): no results were computed.
     pub shed: bool,
+    /// True when the answer was **harvested** rather than served to the
+    /// full (ε, δ) contract: the deadline / FLOP budget expired
+    /// mid-elimination and the best-so-far round checkpoint answered
+    /// (ε̂ in [`QueryResponse::epsilon_hat`]), and/or some shards
+    /// expired and the reply merges only the covering subset
+    /// ([`QueryResponse::shards`] < [`QueryResponse::shards_total`]).
+    /// Exactly one of `shed` / `degraded` / neither (exact-complete)
+    /// holds.
+    pub degraded: bool,
+    /// Achieved confidence width ε̂ of a degraded answer, in the same
+    /// request-relative units as [`QueryRequest::epsilon`] (the max
+    /// over harvested shards; 0 when not degraded or when degradation
+    /// was coverage-only). Always < the requested ε: the checkpoint
+    /// after round *l* is ε − 2ε_l optimal **over the surviving pool**
+    /// — degradation is reduced elimination depth and (under sharding)
+    /// reduced coverage, not a widened guarantee against the full set.
+    pub epsilon_hat: f64,
     /// Shard partials merged into this answer (1 when unsharded, 0 for
-    /// shed requests — they never produced shard work).
+    /// shed requests — they never produced shard work; < `shards_total`
+    /// for a coverage-degraded reply).
     pub shards: usize,
+    /// Shards the deployment serves (the fan-out this query was meant
+    /// to cover). `shards / shards_total` is a degraded reply's
+    /// coverage fraction.
+    pub shards_total: usize,
+    /// ε actually admitted under load-aware degradation
+    /// ([`CoordinatorConfig::degrade`]): `Some(widened)` when the
+    /// admission policy widened the requested ε, `None` when the
+    /// request ran at its own knobs.
+    pub applied_epsilon: Option<f64>,
+    /// k actually admitted under load-aware degradation (`Some(clamped)`
+    /// when the policy clamped it).
+    pub applied_k: Option<usize>,
     /// Storage tier the sampling step ran on: the deployment's
     /// effective [`CoordinatorConfig::storage`] for BOUNDEDME answers,
     /// [`Storage::F32`] for exact scans and shed replies. Compressed
@@ -453,9 +573,14 @@ impl std::error::Error for CoordinatorError {}
 
 struct Pending {
     /// The request; `mode` is resolved (never `Auto`) once the batcher
-    /// has planned it.
+    /// has planned it, and `(epsilon, k)` may have been rewritten by
+    /// the admission [`DegradePolicy`] (recorded in `applied_*`).
     req: QueryRequest,
     submitted: Instant,
+    /// ε the admission policy widened to (`None` = admitted as asked).
+    applied_epsilon: Option<f64>,
+    /// k the admission policy clamped to (`None` = admitted as asked).
+    applied_k: Option<usize>,
     reply: Sender<QueryResponse>,
 }
 
@@ -554,6 +679,10 @@ impl Coordinator {
         let gen0 = Generation::initial(data, cfg.shard, gauge.clone());
         let n_shards = gen0.num_shards();
         let use_reactor = n_shards > 1 || cfg.force_reactor;
+        // Harvest-not-shed is resolved once, here: the config switch
+        // gated by the process-wide kill pin. Off means every deadline
+        // path behaves exactly as the pre-anytime coordinator.
+        let harvest_on = cfg.harvest && !force_no_degrade_requested();
         // Every shard needs at least one pinned worker; extra workers
         // round-robin across shards.
         let workers = cfg.workers.max(n_shards);
@@ -631,6 +760,7 @@ impl Coordinator {
                             dim,
                             storage,
                             hedge_delay,
+                            harvest: harvest_on,
                             max_backlog: per_shard_cap,
                             batch_rx,
                             done_rx,
@@ -709,6 +839,7 @@ impl Coordinator {
                             engine.as_ref(),
                             &metrics,
                             recorder,
+                            harvest_on,
                         );
                     },
                 )?);
@@ -739,11 +870,20 @@ impl Coordinator {
             return Err(CoordinatorError::DimMismatch { got: req.vector.len(), want: self.dim });
         }
         let (reply, rx) = bounded(1);
-        let pending = Pending { req, submitted: Instant::now(), reply };
+        let pending = Pending {
+            req,
+            submitted: Instant::now(),
+            applied_epsilon: None,
+            applied_k: None,
+            reply,
+        };
         self.submit_tx.try_send(pending).map_err(|e| match e {
             SendError::Full(_) => CoordinatorError::QueueFull,
             SendError::Disconnected(_) => CoordinatorError::Shutdown,
         })?;
+        // Submission counter feeds the batcher's backlog signal
+        // (submitted − completed) for admission degradation.
+        self.metrics.record_submit();
         Ok(rx)
     }
 
@@ -949,6 +1089,27 @@ fn run_batcher(
         match next {
             Some(mut p) => {
                 p.req.mode = plan_mode(&p.req, dim);
+                // Load-aware admission degradation: under sustained
+                // backlog, admit BOUNDEDME queries with widened ε /
+                // clamped k (exact queries keep their contract). The
+                // applied knobs ride the Pending into the reply.
+                if let Some(policy) = cfg.degrade {
+                    if p.req.mode != QueryMode::Exact
+                        && metrics.backlog() >= policy.backlog_threshold as u64
+                    {
+                        if let Some((eps, k)) = policy.apply(p.req.epsilon, p.req.k) {
+                            if eps > p.req.epsilon {
+                                p.applied_epsilon = Some(eps);
+                                p.req.epsilon = eps;
+                            }
+                            if k < p.req.k {
+                                p.applied_k = Some(k);
+                                p.req.k = k;
+                            }
+                            metrics.record_degraded_admit();
+                        }
+                    }
+                }
                 let key = match p.req.mode {
                     QueryMode::Exact => GroupKey::Exact,
                     _ => GroupKey::BoundedMe {
@@ -1020,6 +1181,23 @@ struct QueryJob {
     /// against it at shard pickup.
     submitted: Instant,
     deadline: Option<Duration>,
+    /// FLOP cap for the anytime elimination core (see
+    /// [`QueryRequest::budget_flops`]).
+    budget_flops: Option<u64>,
+    /// Wire-decode time, counted against the deadline at every check
+    /// site (a query that burned its whole deadline in decode sheds).
+    decode_ns: u64,
+    /// Arm the anytime budget for this job: resolved at admission to
+    /// `cfg.harvest && BOUNDEDME && (deadline or FLOP budget present)`.
+    /// Unarmed jobs take exactly the pre-anytime code path.
+    harvest: bool,
+}
+
+/// The instant a request's budget clock runs out: submission plus the
+/// deadline *minus the wire-decode time already spent* — decode is not
+/// free ([`QueryRequest::decode_ns`]).
+fn deadline_instant(submitted: Instant, deadline: Duration, decode_ns: u64) -> Instant {
+    submitted + deadline.saturating_sub(Duration::from_nanos(decode_ns))
 }
 
 /// One shard's slice of a dispatched batch. `dispatch` identifies the
@@ -1059,6 +1237,11 @@ struct QueryDone {
     /// superseded by a flip at pickup — the stale-and-late shed the
     /// `shed_superseded` counter tracks.
     superseded: bool,
+    /// Set when this shard's bandit run harvested its round checkpoint
+    /// (anytime budget expired mid-run): the achieved ε̂ in
+    /// request-relative units plus completed rounds. The partial still
+    /// carries real (confirm-rescored) entries.
+    harvest: Option<Harvest>,
     /// Execution telemetry staged by the BOUNDEDME index for this
     /// query (traced batches only; boxed so the untraced `QueryDone`
     /// stays one pointer wider, not a struct wider).
@@ -1099,9 +1282,28 @@ struct MergeState {
     flops: u64,
     remaining: usize,
     shed: bool,
+    /// Shards that contributed a real (non-expired) partial. For
+    /// harvest-armed queries, `shed && covered > 0` replies degraded
+    /// over the covering subset instead of shedding whole.
+    covered: usize,
+    /// Whether this query was admitted with the anytime budget armed
+    /// (BOUNDEDME with a deadline or FLOP cap, harvesting enabled).
+    /// Unarmed queries — exact ones included — keep the pre-anytime
+    /// shed contract even when some shards delivered.
+    harvest: bool,
+    /// Any folded partial came from a harvested (budget-expired)
+    /// bandit run.
+    harvested: bool,
+    /// Worst (max) achieved ε̂ across harvested shards,
+    /// request-relative units.
+    epsilon_hat: f64,
     /// Some shard shed this query while its pinned generation was
     /// already superseded (see [`QueryDone::superseded`]).
     superseded: bool,
+    /// Admission-degradation knobs carried from the [`Pending`]
+    /// (reported in the reply).
+    applied_epsilon: Option<f64>,
+    applied_k: Option<usize>,
     queue_wait: Duration,
     batch_size: usize,
     started: Instant,
@@ -1147,6 +1349,11 @@ struct Reactor {
     /// replies report).
     storage: Storage,
     hedge_delay: Option<Duration>,
+    /// Harvest-not-shed (config switch × env kill pin, resolved at
+    /// construction): arm anytime budgets on deadline/FLOP-capped
+    /// BOUNDEDME jobs and merge partial shard coverage instead of
+    /// shedding it.
+    harvest: bool,
     /// Per-shard backlog bound; admission pauses while any shard's
     /// backlog is at the bound, preserving end-to-end backpressure.
     max_backlog: usize,
@@ -1243,9 +1450,12 @@ impl Reactor {
         let mut jobs: Vec<Arc<QueryJob>> = Vec::with_capacity(batch_size);
         for pending in batch.items {
             let queue_wait = picked_up - pending.submitted;
-            // Load shedding: don't fan out answers nobody is waiting for.
+            // Load shedding: don't fan out answers nobody is waiting
+            // for. Wire decode happened before submission and counts
+            // against the deadline — a query that burned its whole
+            // deadline in decode sheds here, not after computing.
             if let Some(deadline) = pending.req.deadline {
-                if queue_wait > deadline {
+                if queue_wait + Duration::from_nanos(pending.req.decode_ns) > deadline {
                     self.metrics.record_shed();
                     let _ = pending.reply.send(QueryResponse {
                         indices: Vec::new(),
@@ -1256,7 +1466,12 @@ impl Reactor {
                         batch_size,
                         worker: usize::MAX, // shed before any worker touched it
                         shed: true,
+                        degraded: false,
+                        epsilon_hat: 0.0,
                         shards: 0,
+                        shards_total: self.n_shards,
+                        applied_epsilon: pending.applied_epsilon,
+                        applied_k: pending.applied_k,
                         storage: Storage::F32,
                         generation,
                     });
@@ -1314,6 +1529,9 @@ impl Reactor {
                 );
                 b
             });
+            let harvest = self.harvest
+                && mode == QueryMode::BoundedMe
+                && (req.deadline.is_some() || req.budget_flops.is_some());
             self.merges.insert(
                 id,
                 MergeState {
@@ -1325,7 +1543,13 @@ impl Reactor {
                     flops: 0,
                     remaining: self.n_shards,
                     shed: false,
+                    covered: 0,
+                    harvest,
+                    harvested: false,
+                    epsilon_hat: 0.0,
                     superseded: false,
+                    applied_epsilon: pending.applied_epsilon,
+                    applied_k: pending.applied_k,
                     queue_wait,
                     batch_size,
                     started: Instant::now(),
@@ -1344,6 +1568,9 @@ impl Reactor {
                 storage,
                 submitted: pending.submitted,
                 deadline: req.deadline,
+                budget_flops: req.budget_flops,
+                decode_ns: req.decode_ns,
+                harvest,
             }));
         }
         if jobs.is_empty() {
@@ -1479,9 +1706,16 @@ impl Reactor {
             // consume.
             self.metrics.record_merge(shard, now.saturating_duration_since(sent));
         }
-        for QueryDone { query, partial, expired, superseded, exec } in done.results {
+        for QueryDone { query, partial, expired, superseded, harvest, exec } in done.results {
             let Some(m) = self.merges.get_mut(&query) else { continue };
             m.shed |= expired;
+            if !expired {
+                m.covered += 1;
+            }
+            if let Some(h) = harvest {
+                m.harvested = true;
+                m.epsilon_hat = m.epsilon_hat.max(h.epsilon_hat);
+            }
             m.superseded |= superseded;
             m.flops += partial.flops;
             if let Some(tb) = m.trace.as_deref_mut() {
@@ -1526,20 +1760,33 @@ impl Reactor {
 
     fn send_reply(&self, m: MergeState, worker: usize) {
         let service = m.started.elapsed();
+        // Harvest-not-shed: a budget-armed merge sheds only when *no*
+        // shard produced a usable partial. Any expired shard otherwise
+        // degrades the reply — partial coverage — and a mid-flight
+        // harvest (checkpointed rounds) degrades it too. Unarmed
+        // queries (exact mode, or harvesting disabled) keep the
+        // pre-anytime contract: any expired shard sheds whole.
+        let shed = m.shed && (m.covered == 0 || !m.harvest);
+        let degraded = !shed && (m.harvested || (m.shed && m.covered < self.n_shards));
         // Flight recorder: stamp the roll-up and publish (sampling and
         // the slow-query warn line both happen inside `publish`).
         if let (Some(rec), Some(mut tb)) = (self.recorder.as_ref(), m.trace) {
             tb.trace.service_ns = service.as_nanos() as u64;
-            tb.trace.shed = m.shed;
-            if m.shed {
+            tb.trace.shed = shed;
+            tb.trace.degraded = degraded;
+            tb.trace.epsilon_hat = m.epsilon_hat;
+            if shed {
                 tb.trace.kind = "shed";
+            } else if degraded {
+                tb.trace.kind = "degraded";
             }
             rec.publish(*tb);
         }
-        if m.shed {
-            // Some shard saw the deadline expired at pickup: the client
-            // has timed out, reply shed (no results; `flops` reports
-            // whatever work other shards had already sunk).
+        if shed {
+            // Every shard saw the deadline expired at pickup (or
+            // harvesting is off): the client has timed out with nothing
+            // usable, reply shed (no results; `flops` reports whatever
+            // work other shards had already sunk).
             self.metrics.record_shed();
             if m.superseded {
                 self.metrics.record_shed_superseded();
@@ -1553,13 +1800,21 @@ impl Reactor {
                 batch_size: m.batch_size,
                 worker,
                 shed: true,
+                degraded: false,
+                epsilon_hat: 0.0,
                 shards: 0,
+                shards_total: self.n_shards,
                 storage: Storage::F32,
                 generation: m.generation,
+                applied_epsilon: m.applied_epsilon,
+                applied_k: m.applied_k,
             });
             return;
         }
         self.metrics.record_query(m.queue_wait, service, m.flops);
+        if degraded {
+            self.metrics.record_degraded();
+        }
         let ranked =
             if m.passthrough { m.entries_direct } else { m.top.into_sorted() };
         let _ = m.reply.send(QueryResponse {
@@ -1571,9 +1826,14 @@ impl Reactor {
             batch_size: m.batch_size,
             worker,
             shed: false,
-            shards: self.n_shards,
+            degraded,
+            epsilon_hat: m.epsilon_hat,
+            shards: if m.shed { m.covered } else { self.n_shards },
+            shards_total: self.n_shards,
             storage: m.storage,
             generation: m.generation,
+            applied_epsilon: m.applied_epsilon,
+            applied_k: m.applied_k,
         });
     }
 }
@@ -1691,12 +1951,15 @@ fn serve_reactor_batch(
         // `shed_superseded` makes that visible; in-deadline queries
         // always finish on their pin, superseded or not.
         if let Some(deadline) = item.deadline {
-            if item.submitted.elapsed() > deadline {
+            // Decode time already spent on the wire thread counts
+            // against the budget clock (see `deadline_instant`).
+            if Instant::now() > deadline_instant(item.submitted, deadline, item.decode_ns) {
                 results.push(QueryDone {
                     query: item.id,
                     partial: ShardPartial { entries: Vec::new(), flops: 0, scanned: 0 },
                     expired: true,
                     superseded: superseded_gen,
+                    harvest: None,
                     exec: None,
                 });
                 continue;
@@ -1750,6 +2013,7 @@ fn serve_reactor_batch(
                 },
                 expired: false,
                 superseded: false,
+                harvest: None,
                 exec: None,
             });
         }
@@ -1762,12 +2026,29 @@ fn serve_reactor_batch(
         let knobs =
             |it: &Arc<QueryJob>| (it.k, it.epsilon.to_bits(), it.delta.to_bits(), it.storage);
         let uniform = bme.windows(2).all(|w| knobs(w[0]) == knobs(w[1]));
+        // Anytime budget per item: only budget-armed items (harvest
+        // resolved at admission) carry a live deadline / flop cap into
+        // the bandit; everything else runs under `NONE`, which is
+        // bit-identical to the plain entry points.
+        let any_armed = bme.iter().any(|it| it.harvest);
+        let item_budget = |it: &Arc<QueryJob>| {
+            if it.harvest {
+                AnytimeBudget {
+                    deadline: it
+                        .deadline
+                        .map(|d| deadline_instant(it.submitted, d, it.decode_ns)),
+                    budget_flops: it.budget_flops,
+                }
+            } else {
+                AnytimeBudget::NONE
+            }
+        };
         if n_shards == 1 {
             // Forced reactor over a single shard: legacy unsharded
             // semantics (estimate scores, no confirm). The merge passes
             // these entries through in the bandit's ranking
             // (`passthrough`), bit-identical to the fast path.
-            let mut push_direct = |id: u64, res: MipsResult| {
+            let mut push_direct = |id: u64, res: MipsResult, harvest: Option<Harvest>| {
                 let entries: Vec<(f32, usize)> = res
                     .scores
                     .iter()
@@ -1783,10 +2064,11 @@ fn serve_reactor_batch(
                     },
                     expired: false,
                     superseded: false,
+                    harvest,
                     exec: None,
                 });
             };
-            if uniform && bme.len() > 1 {
+            if uniform && bme.len() > 1 && !any_armed {
                 // The first item's seed keys the batch's shared pull order.
                 let first = bme[0];
                 let params = MipsParams {
@@ -1799,9 +2081,13 @@ fn serve_reactor_batch(
                 for (item, res) in
                     bme.iter().zip(index.query_batch_tier(&queries, &params, ctx, first.storage))
                 {
-                    push_direct(item.id, res);
+                    push_direct(item.id, res, None);
                 }
             } else {
+                // Per-item path (mixed knobs, singleton batches, or any
+                // budget-armed item). `query_batch_tier` is itself a
+                // per-query loop, so this split changes no bits for
+                // unarmed items.
                 for item in &bme {
                     let params = MipsParams {
                         k: item.k,
@@ -1809,11 +2095,17 @@ fn serve_reactor_batch(
                         delta: item.delta,
                         seed: item.seed,
                     };
-                    let res = index.query_with_tier(&item.vector, &params, ctx, item.storage);
-                    push_direct(item.id, res);
+                    let (res, harvest) = index.query_with_tier_budget(
+                        &item.vector,
+                        &params,
+                        ctx,
+                        item.storage,
+                        item_budget(item),
+                    );
+                    push_direct(item.id, res, harvest);
                 }
             }
-        } else if uniform && bme.len() > 1 {
+        } else if uniform && bme.len() > 1 && !any_armed {
             let first = bme[0];
             let params = MipsParams {
                 k: first.k,
@@ -1832,6 +2124,7 @@ fn serve_reactor_batch(
                     partial,
                     expired: false,
                     superseded: false,
+                    harvest: None,
                     exec: None,
                 });
             }
@@ -1844,21 +2137,20 @@ fn serve_reactor_batch(
                     seed: item.seed,
                 };
                 let split = shard_params(&params, n_shards, shard.rows());
-                let partial = index
-                    .query_batch_shard_tier(
-                        &[item.vector.as_slice()],
-                        &split,
-                        ctx,
-                        shard,
-                        item.storage,
-                    )
-                    .pop()
-                    .expect("one partial per query");
+                let (partial, harvest) = index.query_shard_tier_budget(
+                    &item.vector,
+                    &split,
+                    ctx,
+                    shard,
+                    item.storage,
+                    item_budget(item),
+                );
                 results.push(QueryDone {
                     query: item.id,
                     partial,
                     expired: false,
                     superseded: false,
+                    harvest,
                     exec: None,
                 });
             }
@@ -1917,6 +2209,7 @@ fn push_exec_spans(tb: &mut TraceBuilder, shard: i64, exec: &QueryExec) {
                 ("t_l", r.t_l as f64),
                 ("epsilon_l", r.epsilon_l),
                 ("delta_l", r.delta_l),
+                ("epsilon_hat", r.epsilon_hat),
                 ("compacted", if r.compacted { 1.0 } else { 0.0 }),
             ],
         );
@@ -1925,6 +2218,12 @@ fn push_exec_spans(tb: &mut TraceBuilder, shard: i64, exec: &QueryExec) {
     if exec.confirm_ns > 0 {
         let c0 = b0 + exec.bandit_ns;
         tb.span_ns("confirm", shard, c0, c0 + exec.confirm_ns, Vec::new());
+    }
+    if let Some(eps_hat) = exec.harvest {
+        // Budget fired mid-run: a zero-width marker span carrying the
+        // achieved width of the checkpointed answer.
+        let h0 = b0 + exec.bandit_ns;
+        tb.span_ns("harvest", shard, h0, h0, vec![("epsilon_hat", eps_hat)]);
     }
 }
 
@@ -1944,6 +2243,7 @@ fn run_direct_worker(
     engine: &dyn ScoringEngine,
     metrics: &MetricsRegistry,
     recorder: Option<TraceRecorder>,
+    harvest_enabled: bool,
 ) {
     let mut ctx = QueryContext::new();
     // Direct-path trace ids: worker-local submission counter (there is
@@ -1972,6 +2272,7 @@ fn run_direct_worker(
                     metrics,
                     recorder.as_ref(),
                     &mut next_trace_id,
+                    harvest_enabled,
                 );
             }
             Err(TryRecvError::Empty) => selector.wait(),
@@ -1996,6 +2297,7 @@ fn serve_direct_batch(
     metrics: &MetricsRegistry,
     recorder: Option<&TraceRecorder>,
     next_trace_id: &mut u64,
+    harvest_enabled: bool,
 ) {
     let picked_up = Instant::now();
     if recorder.is_some() {
@@ -2013,7 +2315,10 @@ fn serve_direct_batch(
     for pending in &batch.items {
         let queue_wait = picked_up - pending.submitted;
         if let Some(deadline) = pending.req.deadline {
-            if queue_wait > deadline {
+            // Decode time counts against the budget clock: a query
+            // that burned its whole deadline in the wire decoder sheds
+            // here even if it reached the worker instantly.
+            if queue_wait + Duration::from_nanos(pending.req.decode_ns) > deadline {
                 metrics.record_shed();
                 let _ = pending.reply.send(QueryResponse {
                     indices: Vec::new(),
@@ -2024,9 +2329,14 @@ fn serve_direct_batch(
                     batch_size,
                     worker: usize::MAX, // shed: no worker computed anything
                     shed: true,
+                    degraded: false,
+                    epsilon_hat: 0.0,
                     shards: 0,
+                    shards_total: 1,
                     storage: Storage::F32,
                     generation,
+                    applied_epsilon: pending.applied_epsilon,
+                    applied_k: pending.applied_k,
                 });
                 continue;
             }
@@ -2042,15 +2352,25 @@ fn serve_direct_batch(
                        scores: Vec<f32>,
                        flops: u64,
                        storage: Storage,
+                       harvest: Option<f64>,
                        exec: Option<&QueryExec>| {
         let queue_wait = picked_up - pending.submitted;
         let service = picked_up.elapsed();
+        let degraded = harvest.is_some();
+        let epsilon_hat = harvest.unwrap_or(0.0);
         metrics.record_query(queue_wait, service, flops);
         metrics.record_fast_path();
+        if degraded {
+            metrics.record_degraded();
+        }
         if let Some(rec) = recorder {
-            let kind = match pending.req.mode {
-                QueryMode::Exact => "exact",
-                _ => "bounded_me",
+            let kind = if degraded {
+                "degraded"
+            } else {
+                match pending.req.mode {
+                    QueryMode::Exact => "exact",
+                    _ => "bounded_me",
+                }
             };
             let id = *next_trace_id;
             *next_trace_id += 1;
@@ -2064,6 +2384,8 @@ fn serve_direct_batch(
             tb.trace.shards = 1;
             tb.trace.queue_wait_ns = queue_wait.as_nanos() as u64;
             tb.trace.service_ns = service.as_nanos() as u64;
+            tb.trace.degraded = degraded;
+            tb.trace.epsilon_hat = epsilon_hat;
             if pending.req.decode_ns > 0 {
                 // Decode precedes submission (the trace origin); the
                 // span is re-anchored at [0, decode_ns].
@@ -2092,9 +2414,14 @@ fn serve_direct_batch(
             batch_size,
             worker: worker_id,
             shed: false,
+            degraded,
+            epsilon_hat,
             shards: 1,
+            shards_total: 1,
             storage,
             generation,
+            applied_epsilon: pending.applied_epsilon,
+            applied_k: pending.applied_k,
         });
     };
 
@@ -2132,6 +2459,7 @@ fn serve_direct_batch(
                 (rows * dim) as u64,
                 Storage::F32,
                 None,
+                None,
             );
         }
     }
@@ -2146,7 +2474,30 @@ fn serve_direct_batch(
     let tier = |p: &Pending| resolve_storage(p.req.storage, index.storage());
     let knobs = |p: &Pending| (p.req.k, p.req.epsilon.to_bits(), p.req.delta.to_bits(), tier(p));
     let uniform = bme.windows(2).all(|w| knobs(w[0]) == knobs(w[1]));
-    if uniform && bme.len() > 1 {
+    // Anytime budget arming mirrors the reactor's admission logic: only
+    // BOUNDEDME queries that actually set a deadline or flop budget run
+    // under a live `AnytimeBudget`; everything else stays on the plain
+    // (bit-identical) entry points.
+    let armed = |p: &Pending| {
+        harvest_enabled
+            && p.req.mode == QueryMode::BoundedMe
+            && (p.req.deadline.is_some() || p.req.budget_flops.is_some())
+    };
+    let item_budget = |p: &Pending| {
+        if armed(p) {
+            AnytimeBudget {
+                deadline: p
+                    .req
+                    .deadline
+                    .map(|d| deadline_instant(p.submitted, d, p.req.decode_ns)),
+                budget_flops: p.req.budget_flops,
+            }
+        } else {
+            AnytimeBudget::NONE
+        }
+    };
+    let any_armed = bme.iter().any(|p| armed(p));
+    if uniform && bme.len() > 1 && !any_armed {
         let first = &bme[0].req;
         let storage = tier(bme[0]);
         let params =
@@ -2157,9 +2508,12 @@ fn serve_direct_batch(
         // stage is disarmed — `get` then yields None throughout).
         let execs = ctx.trace.finish();
         for (i, (pending, res)) in bme.iter().zip(batch_res).enumerate() {
-            respond(pending, res.indices, res.scores, res.flops, storage, execs.get(i));
+            respond(pending, res.indices, res.scores, res.flops, storage, None, execs.get(i));
         }
     } else {
+        // Per-item path (mixed knobs, singletons, or budget-armed
+        // items). `query_batch_tier` is itself a per-query loop, so
+        // this split changes no bits for unarmed items.
         for pending in &bme {
             let storage = tier(pending);
             let params = MipsParams {
@@ -2168,9 +2522,23 @@ fn serve_direct_batch(
                 delta: pending.req.delta,
                 seed: pending.req.seed,
             };
-            let res = index.query_with_tier(&pending.req.vector, &params, ctx, storage);
+            let (res, harvest) = index.query_with_tier_budget(
+                &pending.req.vector,
+                &params,
+                ctx,
+                storage,
+                item_budget(pending),
+            );
             let exec = ctx.trace.queries.pop();
-            respond(pending, res.indices, res.scores, res.flops, storage, exec.as_ref());
+            respond(
+                pending,
+                res.indices,
+                res.scores,
+                res.flops,
+                storage,
+                harvest.map(|h| h.epsilon_hat),
+                exec.as_ref(),
+            );
         }
     }
 }
@@ -2801,9 +3169,94 @@ mod deadline_tests {
                 .with_deadline(Duration::from_secs(30));
             let resp = c.query_blocking(req).unwrap();
             assert!(!resp.shed);
+            assert!(!resp.degraded, "a 30s deadline must never fire the budget");
+            assert_eq!(resp.epsilon_hat, 0.0);
             assert_eq!(resp.indices.len(), 2);
         }
-        assert_eq!(c.metrics().shed, 0);
+        let m = c.metrics();
+        assert_eq!(m.shed, 0);
+        assert_eq!(m.degraded, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn flop_budget_harvests_instead_of_shedding() {
+        // A 1-pull FLOP budget exhausts after round 1 on any instance
+        // that needs ≥ 2 rounds: the reply must carry the checkpointed
+        // top-k (`degraded = true`, ε̂ ∈ (0, ε)), never shed.
+        let ds = gaussian_dataset(2000, 64, 23);
+        let c = Coordinator::new(ds.vectors.clone(), CoordinatorConfig::default()).unwrap();
+        let mut degraded = 0u64;
+        for i in 0..8 {
+            let req =
+                QueryRequest::bounded_me(ds.vectors.row(i).to_vec(), 5, 0.05, 0.05)
+                    .with_budget_flops(1);
+            let resp = c.query_blocking(req).unwrap();
+            assert!(!resp.shed, "budget exhaustion must harvest, not shed");
+            assert_eq!(resp.indices.len(), 5);
+            if resp.degraded {
+                assert!(
+                    resp.epsilon_hat > 0.0 && resp.epsilon_hat < 0.05,
+                    "harvested ε̂ must lie strictly inside (0, ε), got {}",
+                    resp.epsilon_hat
+                );
+                degraded += 1;
+            } else {
+                assert_eq!(resp.epsilon_hat, 0.0);
+            }
+        }
+        assert!(degraded > 0, "ε = 0.05 on n = 2000 should need ≥ 2 rounds");
+        let m = c.metrics();
+        assert_eq!(m.shed, 0);
+        assert_eq!(m.degraded, degraded);
+        c.shutdown();
+    }
+
+    #[test]
+    fn harvest_disabled_runs_budgets_to_completion() {
+        // `harvest: false` disarms the anytime budget entirely: the
+        // same 1-pull budget queries complete exactly, no degradation.
+        let ds = gaussian_dataset(2000, 64, 23);
+        let cfg = CoordinatorConfig { harvest: false, ..Default::default() };
+        let c = Coordinator::new(ds.vectors.clone(), cfg).unwrap();
+        for i in 0..4 {
+            let req =
+                QueryRequest::bounded_me(ds.vectors.row(i).to_vec(), 5, 0.05, 0.05)
+                    .with_budget_flops(1);
+            let resp = c.query_blocking(req).unwrap();
+            assert!(!resp.shed && !resp.degraded);
+            assert_eq!(resp.epsilon_hat, 0.0);
+            assert_eq!(resp.indices.len(), 5);
+        }
+        let m = c.metrics();
+        assert_eq!(m.degraded, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn straggler_shard_degrades_with_partial_coverage() {
+        // Two shards, one artificially slow past the deadline: the fast
+        // shard's partial is harvested into a `degraded` reply with
+        // coverage 1/2 — the pre-anytime coordinator shed these.
+        let ds = gaussian_dataset(600, 64, 24);
+        let cfg = CoordinatorConfig {
+            shard: ShardSpec::contiguous(2),
+            workers: 2,
+            debug_slow_shard: Some((1, Duration::from_millis(300))),
+            ..Default::default()
+        };
+        let c = Coordinator::new(ds.vectors.clone(), cfg).unwrap();
+        let req = QueryRequest::bounded_me(ds.vectors.row(0).to_vec(), 5, 0.2, 0.1)
+            .with_deadline(Duration::from_millis(60));
+        let resp = c.query_blocking(req).unwrap();
+        assert!(!resp.shed, "one covered shard must degrade, not shed");
+        assert!(resp.degraded);
+        assert_eq!(resp.shards, 1, "only the fast shard should be folded");
+        assert_eq!(resp.shards_total, 2);
+        assert!(!resp.indices.is_empty());
+        let m = c.metrics();
+        assert_eq!(m.shed, 0);
+        assert_eq!(m.degraded, 1);
         c.shutdown();
     }
 }

@@ -17,8 +17,10 @@
 //!
 //! ```text
 //! → {"op":"query","vector":[…],"k":5,"epsilon":0.1,"delta":0.1,
-//!    "mode":"bounded_me","deadline_ms":50,"storage":"f32"}
-//! ← {"ok":true,"indices":[…],"scores":[…],"flops":123,"service_ms":0.8,"batch":4}
+//!    "mode":"bounded_me","deadline_ms":50,"budget_flops":100000,
+//!    "storage":"f32"}
+//! ← {"ok":true,"indices":[…],"scores":[…],"flops":123,"service_ms":0.8,"batch":4,
+//!    "degraded":false,"epsilon_hat":0.0,"shards":1,"shards_total":1}
 //! → {"op":"metrics"}
 //! ← {"ok":true,"queries":10,"batches":4,"flops":…, "wire_binary":…, …}
 //! → {"op":"mutate","upserts":[{"id":3,"vector":[…]}],"deletes":[7],
@@ -254,6 +256,9 @@ pub fn handle_line(line: &str, coord: &Coordinator) -> Json {
                 ("service_p99_ms", Json::Num(m.service.2 * 1e3)),
                 ("queue_p99_ms", Json::Num(m.queue_wait.2 * 1e3)),
                 ("shed", Json::Num(m.shed as f64)),
+                ("submitted", Json::Num(m.submitted as f64)),
+                ("degraded", Json::Num(m.degraded as f64)),
+                ("degraded_admitted", Json::Num(m.degraded_admitted as f64)),
                 ("batch_items", Json::Num(m.batch_items as f64)),
                 ("hedge_fired", Json::Num(m.hedge_fired as f64)),
                 ("hedge_won", Json::Num(m.hedge_won as f64)),
@@ -360,6 +365,11 @@ pub fn handle_line(line: &str, coord: &Coordinator) -> Json {
                 .and_then(Json::as_f64)
                 .map(std::time::Duration::from_secs_f64)
                 .map(|d| d / 1000);
+            let budget_flops = req
+                .get("budget_flops")
+                .and_then(Json::as_usize)
+                .filter(|&b| b > 0)
+                .map(|b| b as u64);
             let decode_ns = decode_t0.elapsed().as_nanos() as u64;
             let qr = QueryRequest {
                 vector,
@@ -369,6 +379,7 @@ pub fn handle_line(line: &str, coord: &Coordinator) -> Json {
                 mode,
                 seed,
                 deadline,
+                budget_flops,
                 storage,
                 decode_ns,
             };
@@ -684,6 +695,9 @@ mod tests {
             "service_p99_ms",
             "queue_p99_ms",
             "shed",
+            "submitted",
+            "degraded",
+            "degraded_admitted",
             "batch_items",
             "hedge_fired",
             "hedge_won",

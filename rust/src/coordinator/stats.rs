@@ -117,10 +117,13 @@ impl ShardStats {
 /// module docs for the relaxed snapshot contract.
 pub struct MetricsRegistry {
     queries: AtomicU64,
+    submitted: AtomicU64,
     batches: AtomicU64,
     batch_items: AtomicU64,
     flops: AtomicU64,
     shed: AtomicU64,
+    degraded: AtomicU64,
+    degraded_admitted: AtomicU64,
     hedge_fired: AtomicU64,
     hedge_won: AtomicU64,
     fast_path: AtomicU64,
@@ -172,6 +175,20 @@ pub struct MetricsSnapshot {
     pub mean_service: f64,
     /// Requests shed for missing their deadline in queue.
     pub shed: u64,
+    /// Requests accepted by [`super::Coordinator::submit`] (the
+    /// backlog gauge's numerator; `submitted − queries − shed` is the
+    /// in-flight population).
+    pub submitted: u64,
+    /// Replies that were **degraded** rather than shed or exact:
+    /// harvested mid-run checkpoints and/or partial shard coverage.
+    /// Together with `shed`, splits terminal outcomes three ways —
+    /// `queries − degraded` answered exact-complete, `degraded`
+    /// answered with reduced fidelity, `shed` answered empty.
+    pub degraded: u64,
+    /// Queries admitted with widened ε / clamped k by the
+    /// [`super::DegradePolicy`] under sustained backlog (reported
+    /// per-reply via `applied_epsilon` / `applied_k`).
+    pub degraded_admitted: u64,
     /// Straggler hedges dispatched (a shard batch re-sent to the hedge
     /// queue after [`super::CoordinatorConfig::hedge_delay`]).
     pub hedge_fired: u64,
@@ -226,10 +243,13 @@ impl MetricsRegistry {
             (0..n_shards.max(1)).map(|_| ShardStats::new()).collect();
         Self {
             queries: AtomicU64::new(0),
+            submitted: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batch_items: AtomicU64::new(0),
             flops: AtomicU64::new(0),
             shed: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+            degraded_admitted: AtomicU64::new(0),
             hedge_fired: AtomicU64::new(0),
             hedge_won: AtomicU64::new(0),
             fast_path: AtomicU64::new(0),
@@ -255,6 +275,35 @@ impl MetricsRegistry {
     /// Record a shed (deadline-expired) request.
     pub fn record_shed(&self) {
         self.shed.fetch_add(1, Relaxed);
+    }
+
+    /// Record a request accepted into the pipeline (submit time).
+    pub fn record_submit(&self) {
+        self.submitted.fetch_add(1, Relaxed);
+    }
+
+    /// Record a degraded reply (harvested checkpoint and/or partial
+    /// shard coverage; the request is *also* recorded via
+    /// [`Self::record_query`] by the caller).
+    pub fn record_degraded(&self) {
+        self.degraded.fetch_add(1, Relaxed);
+    }
+
+    /// Record a query admitted with widened ε / clamped k under the
+    /// backlog [`super::DegradePolicy`].
+    pub fn record_degraded_admit(&self) {
+        self.degraded_admitted.fetch_add(1, Relaxed);
+    }
+
+    /// In-flight population: requests submitted but not yet terminally
+    /// answered or shed. The batcher's [`super::DegradePolicy`] reads
+    /// this as its sustained-backlog signal. Relaxed loads: a racing
+    /// reply can briefly overstate it by the number of in-flight
+    /// updates, which is noise at the thresholds that matter.
+    pub fn backlog(&self) -> u64 {
+        let submitted = self.submitted.load(Relaxed);
+        let done = self.queries.load(Relaxed).saturating_add(self.shed.load(Relaxed));
+        submitted.saturating_sub(done)
     }
 
     /// Record a formed batch.
@@ -381,6 +430,9 @@ impl MetricsRegistry {
             ),
             mean_service: self.service.mean(),
             shed: self.shed.load(Relaxed),
+            submitted: self.submitted.load(Relaxed),
+            degraded: self.degraded.load(Relaxed),
+            degraded_admitted: self.degraded_admitted.load(Relaxed),
             hedge_fired,
             hedge_won,
             fast_path: self.fast_path.load(Relaxed),
@@ -405,12 +457,23 @@ impl MetricsSnapshot {
     pub fn to_prometheus(&self, generation: u64, generations_alive: usize) -> String {
         use crate::metrics::prom::PromWriter;
         let mut w = PromWriter::new();
-        let counters: [(&str, &str, u64); 12] = [
+        let counters: [(&str, &str, u64); 15] = [
             ("pallas_queries_total", "Queries served.", self.queries),
+            ("pallas_submitted_total", "Requests accepted by submit().", self.submitted),
             ("pallas_batches_total", "Batches formed.", self.batches),
             ("pallas_batch_items_total", "Items across all formed batches.", self.batch_items),
             ("pallas_flops_total", "Flops spent on the query path.", self.flops),
             ("pallas_shed_total", "Requests shed for missing their deadline.", self.shed),
+            (
+                "pallas_degraded_total",
+                "Degraded replies (harvested checkpoint or partial shard coverage).",
+                self.degraded,
+            ),
+            (
+                "pallas_degraded_admitted_total",
+                "Queries admitted with widened epsilon or clamped k under backlog.",
+                self.degraded_admitted,
+            ),
             (
                 "pallas_shed_superseded_total",
                 "Sheds whose pinned generation was superseded.",
@@ -670,6 +733,36 @@ mod tests {
         assert_eq!(s.mutation_rows, 10);
         assert_eq!(s.shed, 1);
         assert_eq!(s.shed_superseded, 1);
+    }
+
+    #[test]
+    fn degradation_counters_and_backlog() {
+        let m = MetricsRegistry::new();
+        for _ in 0..5 {
+            m.record_submit();
+        }
+        assert_eq!(m.backlog(), 5);
+        m.record_query(Duration::from_micros(10), Duration::from_micros(20), 1);
+        m.record_degraded();
+        m.record_shed();
+        m.record_degraded_admit();
+        assert_eq!(m.backlog(), 3); // 5 submitted − 1 served − 1 shed
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 5);
+        assert_eq!(s.degraded, 1);
+        assert_eq!(s.degraded_admitted, 1);
+        let text = s.to_prometheus(0, 1);
+        for needle in [
+            "pallas_submitted_total 5\n",
+            "pallas_degraded_total 1\n",
+            "pallas_degraded_admitted_total 1\n",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // Replies never recorded as submitted can't underflow the gauge.
+        let fresh = MetricsRegistry::new();
+        fresh.record_query(Duration::ZERO, Duration::ZERO, 0);
+        assert_eq!(fresh.backlog(), 0);
     }
 
     #[test]

@@ -195,6 +195,48 @@ impl QueryPlan {
     }
 }
 
+/// Load-aware admission degradation policy (part of
+/// [`crate::coordinator::CoordinatorConfig`]): when the coordinator's
+/// queue backlog has stayed at or above `backlog_threshold` items, new
+/// BOUNDEDME queries are admitted with a widened ε and a clamped k —
+/// trading per-query precision for throughput *before* deadlines start
+/// expiring, the admission-side half of harvest-not-shed. Exact-mode
+/// queries are never touched (their contract is exactness), and the
+/// applied knobs are reported back in
+/// [`crate::coordinator::QueryResponse::applied_epsilon`] /
+/// [`crate::coordinator::QueryResponse::applied_k`] so clients can see
+/// what they actually paid for.
+#[derive(Clone, Copy, Debug)]
+pub struct DegradePolicy {
+    /// Queue backlog (submitted − completed) at or above which
+    /// admission degradation kicks in.
+    pub backlog_threshold: usize,
+    /// Multiplier (> 1 to widen) applied to the requested ε of admitted
+    /// BOUNDEDME queries under backlog.
+    pub epsilon_widen: f64,
+    /// Upper bound applied to the requested k under backlog (0 = leave
+    /// k alone).
+    pub max_k: usize,
+}
+
+impl Default for DegradePolicy {
+    fn default() -> Self {
+        DegradePolicy { backlog_threshold: 64, epsilon_widen: 2.0, max_k: 0 }
+    }
+}
+
+impl DegradePolicy {
+    /// Apply the policy to a request's `(ε, k)` under backlog: returns
+    /// the degraded knobs, or `None` when the policy leaves this
+    /// request untouched (ε already wider than the widened value and k
+    /// within the clamp).
+    pub fn apply(&self, epsilon: f64, k: usize) -> Option<(f64, usize)> {
+        let new_eps = (epsilon * self.epsilon_widen.max(1.0)).min(1.0).max(epsilon);
+        let new_k = if self.max_k > 0 { k.min(self.max_k) } else { k };
+        (new_eps > epsilon || new_k < k).then_some((new_eps, new_k))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -252,6 +294,20 @@ mod tests {
         // `with_storage` applies the force-f32 hatch eagerly.
         assert_eq!(p.storage, Storage::F16.effective());
         assert_eq!(p.with_storage(Storage::F32).storage, Storage::F32);
+    }
+
+    #[test]
+    fn degrade_policy_widens_and_clamps() {
+        let p = DegradePolicy { backlog_threshold: 8, epsilon_widen: 2.0, max_k: 5 };
+        let (eps, k) = p.apply(0.1, 10).unwrap();
+        assert!((eps - 0.2).abs() < 1e-12);
+        assert_eq!(k, 5);
+        // ε is capped at 1.0 and never shrinks.
+        let (eps, _) = p.apply(0.9, 3).unwrap();
+        assert_eq!(eps, 1.0);
+        // Nothing to degrade: wide ε, small k, no clamp.
+        let p = DegradePolicy { backlog_threshold: 8, epsilon_widen: 1.0, max_k: 0 };
+        assert!(p.apply(0.5, 3).is_none());
     }
 
     #[test]

@@ -189,6 +189,40 @@
 //! bench's `query/ctx_reuse_traced` row keeps the tracing tax on the
 //! bench trajectory.
 //!
+//! ## Graceful degradation
+//!
+//! BOUNDEDME is an *anytime* algorithm: every elimination round ends
+//! with a well-defined best-so-far answer and an achieved confidence
+//! width ε̂ that halves per round. The serving layer exploits that to
+//! **harvest instead of shed** under overload. The elimination core
+//! checkpoints its round-end top-k + ε̂ into the query context's
+//! [`bandit::BanditScratch`] whenever an [`bandit::AnytimeBudget`]
+//! (soft deadline and/or FLOP cap) is armed — zero extra steady-state
+//! allocations, and bit-identical results when the budget never fires.
+//! [`coordinator::QueryRequest`] carries the budget over both wire
+//! codecs (`deadline_ms`/`budget_flops` JSON fields; the binary frame
+//! promotes itself to the `PLW2` revision per frame when a FLOP cap
+//! rides the header, and the decode span's cost counts against the
+//! deadline). A deadline crosses three checks: expired at admission →
+//! shed (nothing was computed); expired at shard pickup → armed
+//! queries fold whichever shard partials arrived and reply with
+//! partial coverage, unarmed (exact-mode) queries keep the pre-anytime
+//! shed-whole contract; mid-run → the bandit harvests its checkpoint.
+//! Replies are a **three-way contract** — exact-complete, `degraded`
+//! (results + ε̂ + shard coverage), or shed (empty) — visible in both
+//! codecs, the `shed`/`degraded` metrics split, Prometheus, and a
+//! `harvest` trace span. Under sustained backlog an optional
+//! [`exec::DegradePolicy`] widens ε / clamps k at admission (reported
+//! via `applied_epsilon`/`applied_k`, *not* marked degraded).
+//! `RUST_PALLAS_FORCE_NO_DEGRADE=1` pins the whole subsystem off (a CI
+//! leg runs the full suite under it — budget-armed deployments must be
+//! bit-identical to a build without the subsystem), and the
+//! `tests/anytime_degradation.rs` battery proves harvested answers
+//! honor their reported ε̂ statistically. The serving bench's overload
+//! sweep tracks the payoff: at ≥ 2× capacity the harvest path answers
+//! a strictly higher fraction of queries within deadline than the
+//! shed-only baseline.
+//!
 //! ## Wire protocol
 //!
 //! The TCP front-end's protocol is a pluggable [`wire::Codec`] axis,

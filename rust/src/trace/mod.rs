@@ -124,7 +124,8 @@ pub struct QueryTrace {
     pub seq: u64,
     /// Reactor query id, or the submission counter on the S = 1 path.
     pub query_id: u64,
-    /// Resolved plan: `"exact"`, `"bounded_me"`, or `"shed"`.
+    /// Resolved plan: `"exact"`, `"bounded_me"`, `"shed"`, or
+    /// `"degraded"` (a deadline-harvested partial answer).
     pub kind: &'static str,
     /// Requested top-K.
     pub k: usize,
@@ -155,6 +156,12 @@ pub struct QueryTrace {
     pub service_ns: u64,
     /// Deadline-shed (no result was produced).
     pub shed: bool,
+    /// Deadline-degraded: a harvested partial answer was returned
+    /// instead of shedding (see the coordinator's deadline lifecycle).
+    pub degraded: bool,
+    /// Achieved confidence width ε̂ of a degraded reply
+    /// (request-relative units; 0 when not degraded).
+    pub epsilon_hat: f64,
     /// Service time reached [`TraceConfig::slow_threshold`].
     pub slow: bool,
     /// The span tree.
@@ -190,6 +197,8 @@ impl TraceBuilder {
                 queue_wait_ns: 0,
                 service_ns: 0,
                 shed: false,
+                degraded: false,
+                epsilon_hat: 0.0,
                 slow: false,
                 spans: Vec::new(),
             },
@@ -395,6 +404,10 @@ pub struct QueryExec {
     /// Whether a present compressed tier fell back to f32 because the
     /// quantization bias exhausted ε.
     pub quant_fallback: bool,
+    /// Set when an armed [`crate::bandit::AnytimeBudget`] expired
+    /// mid-run and the round checkpoint was harvested: the achieved
+    /// confidence width ε̂ in request-relative units.
+    pub harvest: Option<f64>,
     /// Per-round schedule (with wall time) from the elimination core.
     pub rounds: Vec<RoundTrace>,
 }
@@ -411,6 +424,7 @@ impl QueryExec {
             total_pulls: 0,
             quant: false,
             quant_fallback: false,
+            harvest: None,
             rounds: Vec::new(),
         }
     }
@@ -435,6 +449,8 @@ pub fn trace_to_json(t: &QueryTrace) -> Json {
         ("queue_wait_us", Json::Num(t.queue_wait_ns as f64 / 1e3)),
         ("service_us", Json::Num(t.service_ns as f64 / 1e3)),
         ("shed", Json::Bool(t.shed)),
+        ("degraded", Json::Bool(t.degraded)),
+        ("epsilon_hat", Json::Num(t.epsilon_hat)),
         ("slow", Json::Bool(t.slow)),
         ("spans", Json::Arr(t.spans.iter().map(span_to_json).collect())),
     ])

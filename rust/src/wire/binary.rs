@@ -5,7 +5,7 @@
 //! allocations (gated by the counting allocator in the serving bench).
 
 use super::frame::{
-    self, FrameError, QueryHeader, RespHeader, FLAG_OK, FLAG_SHED, QUERY_HEADER_LEN,
+    self, FrameError, QueryHeader, RespHeader, FLAG_DEGRADED, FLAG_OK, FLAG_SHED,
     RESP_HEADER_LEN,
 };
 use super::{Codec, WireRequest};
@@ -75,6 +75,9 @@ pub struct QueryOpts {
     pub mode: QueryMode,
     /// Per-request deadline.
     pub deadline: Option<Duration>,
+    /// Anytime FLOP budget. `Some` promotes the frame to the PLW2
+    /// layout; `None` keeps it byte-identical to the v1 protocol.
+    pub budget_flops: Option<u64>,
     /// Storage-tier override (see
     /// [`crate::coordinator::resolve_storage`]).
     pub storage: Option<Storage>,
@@ -89,6 +92,7 @@ impl Default for QueryOpts {
             seed: 0,
             mode: QueryMode::BoundedMe,
             deadline: None,
+            budget_flops: None,
             storage: None,
         }
     }
@@ -99,8 +103,20 @@ impl Default for QueryOpts {
 pub struct QueryReply {
     /// The query produced results.
     pub ok: bool,
-    /// The query was shed (deadline exceeded; no results).
+    /// The query was shed (deadline exceeded with nothing harvestable;
+    /// no results).
     pub shed: bool,
+    /// The reply is degraded: a mid-run harvest and/or partial shard
+    /// coverage. Results are present; `epsilon_hat` and `covered`
+    /// report the achieved fidelity. Exactly one of `shed`, `degraded`,
+    /// or neither (exact-complete) holds for an ok/shed reply.
+    pub degraded: bool,
+    /// Achieved confidence width ε̂ of a degraded reply (0 otherwise).
+    pub epsilon_hat: f32,
+    /// Shards whose partials the answer folded.
+    pub covered: u8,
+    /// Shards the deployment serves.
+    pub shards_total: u8,
     /// Error message when the reply was a [`frame::RESP_ERROR`] frame.
     pub error: Option<String>,
     /// Result row ids, best first.
@@ -125,6 +141,10 @@ impl QueryReply {
         QueryReply {
             ok: false,
             shed: false,
+            degraded: false,
+            epsilon_hat: 0.0,
+            covered: 0,
+            shards_total: 0,
             error: Some(msg),
             indices: Vec::new(),
             scores: Vec::new(),
@@ -151,8 +171,7 @@ pub fn encode_query_frame(
     if dim == 0 || vectors.iter().any(|v| v.len() != dim) {
         return Err(FrameError::BadHeader("vectors must share one nonzero dim"));
     }
-    let at = frame::begin_frame(frame::OP_QUERY, out);
-    QueryHeader {
+    let h = QueryHeader {
         k: opts.k as u32,
         epsilon: opts.epsilon,
         delta: opts.delta,
@@ -162,8 +181,12 @@ pub fn encode_query_frame(
         storage: storage_to_byte(opts.storage),
         count: vectors.len() as u32,
         dim: dim as u32,
-    }
-    .write(out);
+        budget_flops: opts.budget_flops.unwrap_or(0),
+    };
+    // Budget-free frames stay on the v1 magic + 48-byte header, so an
+    // unbudgeted stream is byte-identical to the original protocol.
+    let at = frame::begin_frame_v(frame::OP_QUERY, h.version(), out);
+    h.write(out);
     out.reserve(vectors.len() * dim * 4);
     for v in vectors {
         for x in *v {
@@ -180,13 +203,14 @@ pub fn encode_query_frame(
 /// reallocation, so the steady state is allocation-free.
 pub fn decode_query_payload(
     body: &[u8],
+    version: u8,
     coords: &mut Vec<f32>,
 ) -> Result<QueryHeader, FrameError> {
-    let h = QueryHeader::parse(body)?;
+    let h = QueryHeader::parse(body, version)?;
     coords.clear();
     coords.reserve(h.count as usize * h.dim as usize);
     coords.extend(
-        body[QUERY_HEADER_LEN..]
+        body[QueryHeader::len_for(version)..]
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
     );
@@ -213,6 +237,10 @@ pub fn decode_reply(body: &[u8]) -> Result<QueryReply, FrameError> {
     Ok(QueryReply {
         ok: h.flags & FLAG_OK != 0,
         shed: h.flags & FLAG_SHED != 0,
+        degraded: h.flags & FLAG_DEGRADED != 0,
+        epsilon_hat: h.epsilon_hat,
+        covered: h.covered,
+        shards_total: h.shards_total,
         error: None,
         indices,
         scores,
@@ -257,14 +285,15 @@ impl Codec for BinaryCodec {
                 Ok(Some(WireRequest::Line(text)))
             }
             frame::OP_QUERY => {
-                let h = QueryHeader::parse(f.body)?;
+                let h = QueryHeader::parse(f.body, f.version)?;
                 let mode = mode_from_byte(h.mode)?;
                 let storage = storage_from_byte(h.storage)?;
                 let deadline =
                     (h.deadline_ns > 0).then(|| Duration::from_nanos(h.deadline_ns));
+                let budget_flops = (h.budget_flops > 0).then_some(h.budget_flops);
                 let dim = h.dim as usize;
                 let mut requests = Vec::with_capacity(h.count as usize);
-                let mut off = QUERY_HEADER_LEN;
+                let mut off = QueryHeader::len_for(f.version);
                 for _ in 0..h.count {
                     // The one unavoidable copy: bulk LE bytes → the
                     // owned coordinate vector the coordinator takes.
@@ -283,6 +312,7 @@ impl Codec for BinaryCodec {
                         mode,
                         seed: h.seed,
                         deadline,
+                        budget_flops,
                         storage,
                         decode_ns: 0,
                     });
@@ -305,14 +335,26 @@ impl Codec for BinaryCodec {
 
     fn encode_reply(&mut self, resp: &QueryResponse, out: &mut Vec<u8>) {
         let at = frame::begin_frame(frame::RESP_QUERY, out);
+        // Three-way split on the wire: shed (empty), degraded
+        // (harvested / partial coverage), or exact-complete (plain OK).
+        let flags = if resp.shed {
+            FLAG_SHED
+        } else if resp.degraded {
+            FLAG_OK | FLAG_DEGRADED
+        } else {
+            FLAG_OK
+        };
         RespHeader {
-            flags: if resp.shed { FLAG_SHED } else { FLAG_OK },
+            flags,
             storage: storage_to_byte(Some(resp.storage)),
+            covered: resp.shards.min(u8::MAX as usize) as u8,
+            shards_total: resp.shards_total.min(u8::MAX as usize) as u8,
             count: resp.indices.len() as u32,
             flops: resp.flops,
             service_ns: resp.service.as_nanos() as u64,
             generation: resp.generation,
             batch: resp.batch_size as u32,
+            epsilon_hat: resp.epsilon_hat as f32,
         }
         .write(out);
         for &i in &resp.indices {
@@ -399,9 +441,14 @@ mod tests {
             batch_size: 7,
             worker: 2,
             shed: false,
+            degraded: false,
+            epsilon_hat: 0.0,
             shards: 1,
+            shards_total: 1,
             storage: Storage::Bf16,
             generation: 5,
+            applied_epsilon: None,
+            applied_k: None,
         };
         let mut codec = BinaryCodec::new();
         let mut wire = Vec::new();
@@ -434,9 +481,14 @@ mod tests {
             batch_size: 0,
             worker: usize::MAX,
             shed: true,
+            degraded: false,
+            epsilon_hat: 0.0,
             shards: 0,
+            shards_total: 2,
             storage: Storage::F32,
             generation: 0,
+            applied_epsilon: None,
+            applied_k: None,
         };
         let mut codec = BinaryCodec::new();
         let mut wire = Vec::new();
@@ -445,8 +497,71 @@ mod tests {
         dec.feed(&wire);
         let f = dec.try_frame().unwrap().unwrap();
         let reply = decode_reply(f.body).unwrap();
-        assert!(!reply.ok && reply.shed);
+        assert!(!reply.ok && reply.shed && !reply.degraded);
         assert!(reply.indices.is_empty() && reply.scores.is_empty());
+        assert_eq!((reply.covered, reply.shards_total), (0, 2));
+    }
+
+    #[test]
+    fn degraded_reply_roundtrips_flags_and_epsilon_hat() {
+        let resp = QueryResponse {
+            indices: vec![3, 8],
+            scores: vec![1.5, 0.75],
+            flops: 4200,
+            queue_wait: Duration::from_micros(5),
+            service: Duration::from_micros(80),
+            batch_size: 1,
+            worker: 0,
+            shed: false,
+            degraded: true,
+            epsilon_hat: 0.0625,
+            shards: 3,
+            shards_total: 4,
+            storage: Storage::F32,
+            generation: 2,
+            applied_epsilon: None,
+            applied_k: None,
+        };
+        let mut codec = BinaryCodec::new();
+        let mut wire = Vec::new();
+        codec.encode_reply(&resp, &mut wire);
+        let mut dec = frame::FrameDecoder::new();
+        dec.feed(&wire);
+        let f = dec.try_frame().unwrap().unwrap();
+        let reply = decode_reply(f.body).unwrap();
+        assert!(reply.ok && !reply.shed && reply.degraded);
+        assert_eq!(reply.indices, vec![3, 8]);
+        assert_eq!(reply.epsilon_hat, 0.0625);
+        assert_eq!((reply.covered, reply.shards_total), (3, 4));
+    }
+
+    #[test]
+    fn budget_flops_promotes_frame_to_v2_and_roundtrips() {
+        let v: Vec<f32> = (0..8).map(|i| i as f32 * 0.125).collect();
+        let opts =
+            QueryOpts { budget_flops: Some(5_000), ..Default::default() };
+        let mut wire = Vec::new();
+        encode_query_frame(&[&v], &opts, &mut wire).unwrap();
+        assert_eq!(&wire[..4], &frame::MAGIC_V2);
+        let mut codec = BinaryCodec::new();
+        codec.feed(&wire);
+        let Ok(Some(WireRequest::Query(reqs))) = codec.try_decode() else {
+            panic!("expected a query batch");
+        };
+        assert_eq!(reqs[0].budget_flops, Some(5_000));
+        for (a, b) in reqs[0].vector.iter().zip(&v) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // No budget ⇒ the frame stays v1, byte-for-byte.
+        let mut v1_wire = Vec::new();
+        encode_query_frame(&[&v], &QueryOpts::default(), &mut v1_wire).unwrap();
+        assert_eq!(&v1_wire[..4], &frame::MAGIC);
+        let mut codec = BinaryCodec::new();
+        codec.feed(&v1_wire);
+        let Ok(Some(WireRequest::Query(reqs))) = codec.try_decode() else {
+            panic!("expected a query batch");
+        };
+        assert_eq!(reqs[0].budget_flops, None);
     }
 
     #[test]
@@ -457,7 +572,7 @@ mod tests {
         let body = &wire[frame::PREAMBLE_LEN..];
         let mut coords = Vec::new();
         for _ in 0..3 {
-            let h = decode_query_payload(body, &mut coords).unwrap();
+            let h = decode_query_payload(body, 1, &mut coords).unwrap();
             assert_eq!((h.count, h.dim), (1, 128));
             assert_eq!(coords.len(), 128);
             for (a, b) in coords.iter().zip(&v) {
@@ -475,7 +590,7 @@ mod tests {
         // header's count·dim claim.
         let body = &wire[frame::PREAMBLE_LEN..wire.len() - 4];
         assert!(matches!(
-            QueryHeader::parse(body),
+            QueryHeader::parse(body, 1),
             Err(FrameError::BadHeader(_))
         ));
     }

@@ -10,17 +10,22 @@
 //! └────────────┴────┴─────────────┴──────────────┴────────────┘
 //! ```
 //!
-//! The magic's last byte is the protocol version (`'1'`), so a future
-//! layout bumps the magic instead of growing a separate field; the
-//! reserved bytes are written as zeroes and ignored on decode. A
-//! `body_len` of zero or above [`MAX_BODY`] is rejected as soon as the
-//! 12-byte preamble is visible — **before** any buffer is sized to it,
-//! so a hostile length prefix cannot make the server allocate.
+//! The magic's last byte is the protocol version: `'1'` is the
+//! original layout, `'2'` is a minor revision whose only change is an
+//! extra `budget_flops` u64 at the tail of [`QueryHeader`] (encoders
+//! emit `'1'` whenever the budget is zero, so v1-only peers never see a
+//! v2 frame they didn't ask for). A `body_len` of zero or above
+//! [`MAX_BODY`] is rejected as soon as the 12-byte preamble is visible
+//! — **before** any buffer is sized to it, so a hostile length prefix
+//! cannot make the server allocate.
 
 use std::fmt;
 
-/// Frame magic; the last byte is the wire-format version.
+/// Frame magic (version 1); the last byte is the wire-format version.
 pub const MAGIC: [u8; 4] = *b"PLW1";
+/// Frame magic for the version-2 minor revision ([`QueryHeader`] grows
+/// a trailing `budget_flops`; responses are layout-identical to v1).
+pub const MAGIC_V2: [u8; 4] = *b"PLW2";
 /// Bytes before the body: magic + op + 3 reserved + `body_len` u32.
 pub const PREAMBLE_LEN: usize = 12;
 /// Upper bound on `body_len` (64 MiB ≈ a 4096-dim f32 batch of 4096
@@ -92,6 +97,8 @@ impl std::error::Error for FrameError {}
 pub struct FrameRef<'a> {
     /// The frame's op byte (`OP_*` / `RESP_*`).
     pub op: u8,
+    /// Wire-format version the magic carried (`1` or `2`).
+    pub version: u8,
     /// The frame body.
     pub body: &'a [u8],
 }
@@ -149,7 +156,8 @@ impl FrameDecoder {
             return Ok(None);
         }
         let p = self.start;
-        if self.buf[p..p + 4] != MAGIC {
+        // "PLW" + a version byte we understand ('1' or '2').
+        if self.buf[p..p + 3] != MAGIC[..3] || !matches!(self.buf[p + 3], b'1' | b'2') {
             return Err(FrameError::BadMagic([
                 self.buf[p],
                 self.buf[p + 1],
@@ -157,6 +165,7 @@ impl FrameDecoder {
                 self.buf[p + 3],
             ]));
         }
+        let version = self.buf[p + 3] - b'0';
         let op = self.buf[p + 4];
         let body_len = u32::from_le_bytes([
             self.buf[p + 8],
@@ -176,7 +185,7 @@ impl FrameDecoder {
         let body_start = p + PREAMBLE_LEN;
         let end = body_start + body_len;
         self.start = end;
-        Ok(Some(FrameRef { op, body: &self.buf[body_start..end] }))
+        Ok(Some(FrameRef { op, version, body: &self.buf[body_start..end] }))
     }
 }
 
@@ -189,9 +198,14 @@ pub fn encode_frame(op: u8, body: &[u8], out: &mut Vec<u8>) {
 
 /// Start a frame whose body is written directly into `out` (avoids a
 /// staging buffer for vector payloads); returns the patch cookie for
-/// [`end_frame`].
+/// [`end_frame`]. Emits the version-1 magic.
 pub fn begin_frame(op: u8, out: &mut Vec<u8>) -> usize {
-    out.extend_from_slice(&MAGIC);
+    begin_frame_v(op, 1, out)
+}
+
+/// [`begin_frame`] with an explicit wire-format version (1 or 2).
+pub fn begin_frame_v(op: u8, version: u8, out: &mut Vec<u8>) -> usize {
+    out.extend_from_slice(if version >= 2 { &MAGIC_V2 } else { &MAGIC });
     out.push(op);
     out.extend_from_slice(&[0u8; 3]);
     let at = out.len();
@@ -231,13 +245,39 @@ pub struct QueryHeader {
     pub count: u32,
     /// Coordinates per vector (≥ 1).
     pub dim: u32,
+    /// Anytime FLOP budget (0 = none). Rides only v2 frames: the
+    /// encoder emits the v1 layout whenever this is zero, so a
+    /// budget-free stream is byte-identical to the original protocol.
+    pub budget_flops: u64,
 }
 
-/// Bytes of a serialized [`QueryHeader`].
+/// Bytes of a serialized version-1 [`QueryHeader`].
 pub const QUERY_HEADER_LEN: usize = 48;
+/// Bytes of a serialized version-2 [`QueryHeader`] (v1 + `budget_flops`).
+pub const QUERY_HEADER_LEN_V2: usize = 56;
 
 impl QueryHeader {
-    /// Serialize into `out` (exactly [`QUERY_HEADER_LEN`] bytes).
+    /// Wire-format version this header needs: v2 iff it carries a
+    /// non-zero `budget_flops`.
+    pub fn version(&self) -> u8 {
+        if self.budget_flops > 0 {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Header length for a given wire-format version.
+    pub fn len_for(version: u8) -> usize {
+        if version >= 2 {
+            QUERY_HEADER_LEN_V2
+        } else {
+            QUERY_HEADER_LEN
+        }
+    }
+
+    /// Serialize into `out` ([`QUERY_HEADER_LEN`] bytes for v1,
+    /// [`QUERY_HEADER_LEN_V2`] for v2 — pick by [`Self::version`]).
     pub fn write(&self, out: &mut Vec<u8>) {
         out.extend_from_slice(&self.k.to_le_bytes());
         out.extend_from_slice(&self.epsilon.to_le_bytes());
@@ -249,14 +289,18 @@ impl QueryHeader {
         out.extend_from_slice(&[0u8; 2]);
         out.extend_from_slice(&self.count.to_le_bytes());
         out.extend_from_slice(&self.dim.to_le_bytes());
+        if self.version() >= 2 {
+            out.extend_from_slice(&self.budget_flops.to_le_bytes());
+        }
     }
 
-    /// Parse from an [`OP_QUERY`] body, validating the payload length
-    /// against `count · dim` (in u64 so a hostile header cannot
-    /// overflow the check itself).
-    pub fn parse(body: &[u8]) -> Result<QueryHeader, FrameError> {
-        if body.len() < QUERY_HEADER_LEN {
-            return Err(FrameError::Truncated { need: QUERY_HEADER_LEN, got: body.len() });
+    /// Parse from an [`OP_QUERY`] body of the given wire-format
+    /// `version`, validating the payload length against `count · dim`
+    /// (in u64 so a hostile header cannot overflow the check itself).
+    pub fn parse(body: &[u8], version: u8) -> Result<QueryHeader, FrameError> {
+        let header_len = Self::len_for(version);
+        if body.len() < header_len {
+            return Err(FrameError::Truncated { need: header_len, got: body.len() });
         }
         let h = QueryHeader {
             k: u32::from_le_bytes(body[0..4].try_into().unwrap()),
@@ -268,6 +312,11 @@ impl QueryHeader {
             storage: body[37],
             count: u32::from_le_bytes(body[40..44].try_into().unwrap()),
             dim: u32::from_le_bytes(body[44..48].try_into().unwrap()),
+            budget_flops: if version >= 2 {
+                u64::from_le_bytes(body[48..56].try_into().unwrap())
+            } else {
+                0
+            },
         };
         if h.count == 0 {
             return Err(FrameError::BadHeader("query count must be >= 1"));
@@ -275,7 +324,7 @@ impl QueryHeader {
         if h.dim == 0 {
             return Err(FrameError::BadHeader("query dim must be >= 1"));
         }
-        let want = QUERY_HEADER_LEN as u64 + h.count as u64 * h.dim as u64 * 4;
+        let want = header_len as u64 + h.count as u64 * h.dim as u64 * 4;
         if body.len() as u64 != want {
             return Err(FrameError::BadHeader("payload length != count * dim * 4"));
         }
@@ -284,14 +333,23 @@ impl QueryHeader {
 }
 
 /// Fixed header of a [`RESP_QUERY`] body, followed by `count` u64 LE
-/// indices then `count` f32 LE scores.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// indices then `count` f32 LE scores. The layout is version-1 stable:
+/// the degradation fields live in bytes that were previously reserved
+/// zeroes, so an exact-complete reply is byte-identical to the original
+/// protocol and v1 peers that ignored the reserved bytes keep working.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RespHeader {
-    /// [`FLAG_OK`] / [`FLAG_SHED`] bits.
+    /// [`FLAG_OK`] / [`FLAG_SHED`] / [`FLAG_DEGRADED`] bits.
     pub flags: u8,
     /// Storage tier the answer sampled on (`storage_to_byte` of a
     /// concrete tier, never 0).
     pub storage: u8,
+    /// Shards whose partials the answer folded (equals `shards_total`
+    /// for exact-complete replies, 0 for shed ones).
+    pub covered: u8,
+    /// Shards the deployment serves (0 on pre-degradation replies,
+    /// whose reserved byte was always zero).
+    pub shards_total: u8,
     /// Result entries in the payload.
     pub count: u32,
     /// Flops the query spent.
@@ -302,28 +360,36 @@ pub struct RespHeader {
     pub generation: u64,
     /// Batch size the query rode in.
     pub batch: u32,
+    /// Achieved confidence width ε̂ of a degraded reply (0 otherwise).
+    pub epsilon_hat: f32,
 }
 
 /// Bytes of a serialized [`RespHeader`].
 pub const RESP_HEADER_LEN: usize = 40;
 /// [`RespHeader::flags`] bit: the query produced results.
 pub const FLAG_OK: u8 = 1;
-/// [`RespHeader::flags`] bit: the query was shed (deadline exceeded;
-/// no results).
+/// [`RespHeader::flags`] bit: the query was shed (deadline exceeded
+/// with nothing harvestable; no results).
 pub const FLAG_SHED: u8 = 2;
+/// [`RespHeader::flags`] bit: the reply is degraded — a mid-run harvest
+/// and/or partial shard coverage; results are present and `epsilon_hat`
+/// / `covered` report the achieved fidelity. Exact-complete replies set
+/// neither [`FLAG_SHED`] nor this bit.
+pub const FLAG_DEGRADED: u8 = 4;
 
 impl RespHeader {
     /// Serialize into `out` (exactly [`RESP_HEADER_LEN`] bytes).
     pub fn write(&self, out: &mut Vec<u8>) {
         out.push(self.flags);
         out.push(self.storage);
-        out.extend_from_slice(&[0u8; 2]);
+        out.push(self.covered);
+        out.push(self.shards_total);
         out.extend_from_slice(&self.count.to_le_bytes());
         out.extend_from_slice(&self.flops.to_le_bytes());
         out.extend_from_slice(&self.service_ns.to_le_bytes());
         out.extend_from_slice(&self.generation.to_le_bytes());
         out.extend_from_slice(&self.batch.to_le_bytes());
-        out.extend_from_slice(&[0u8; 4]);
+        out.extend_from_slice(&self.epsilon_hat.to_le_bytes());
     }
 
     /// Parse from a [`RESP_QUERY`] body, validating the payload length
@@ -335,11 +401,14 @@ impl RespHeader {
         let h = RespHeader {
             flags: body[0],
             storage: body[1],
+            covered: body[2],
+            shards_total: body[3],
             count: u32::from_le_bytes(body[4..8].try_into().unwrap()),
             flops: u64::from_le_bytes(body[8..16].try_into().unwrap()),
             service_ns: u64::from_le_bytes(body[16..24].try_into().unwrap()),
             generation: u64::from_le_bytes(body[24..32].try_into().unwrap()),
             batch: u32::from_le_bytes(body[32..36].try_into().unwrap()),
+            epsilon_hat: f32::from_le_bytes(body[36..40].try_into().unwrap()),
         };
         let want = RESP_HEADER_LEN as u64 + h.count as u64 * 12;
         if body.len() as u64 != want {
@@ -420,17 +489,65 @@ mod tests {
             storage: 2,
             count: 3,
             dim: 4,
+            budget_flops: 0,
         };
+        assert_eq!(h.version(), 1);
         let mut body = Vec::new();
         h.write(&mut body);
         assert_eq!(body.len(), QUERY_HEADER_LEN);
         body.extend_from_slice(&[0u8; 3 * 4 * 4]); // count * dim * 4
-        assert_eq!(QueryHeader::parse(&body).unwrap(), h);
+        assert_eq!(QueryHeader::parse(&body, 1).unwrap(), h);
         // Any other payload length is rejected.
         body.push(0);
-        assert!(matches!(QueryHeader::parse(&body), Err(FrameError::BadHeader(_))));
+        assert!(matches!(QueryHeader::parse(&body, 1), Err(FrameError::BadHeader(_))));
         body.truncate(QUERY_HEADER_LEN - 1);
-        assert!(matches!(QueryHeader::parse(&body), Err(FrameError::Truncated { .. })));
+        assert!(matches!(QueryHeader::parse(&body, 1), Err(FrameError::Truncated { .. })));
+    }
+
+    #[test]
+    fn query_header_v2_carries_budget() {
+        let h = QueryHeader {
+            k: 2,
+            epsilon: 0.2,
+            delta: 0.1,
+            seed: 7,
+            deadline_ns: 0,
+            mode: 0,
+            storage: 0,
+            count: 1,
+            dim: 8,
+            budget_flops: 123_456,
+        };
+        assert_eq!(h.version(), 2);
+        let mut body = Vec::new();
+        h.write(&mut body);
+        assert_eq!(body.len(), QUERY_HEADER_LEN_V2);
+        body.extend_from_slice(&[0u8; 8 * 4]); // count * dim * 4
+        assert_eq!(QueryHeader::parse(&body, 2).unwrap(), h);
+        // A v1 parse of a v2 body fails the length check instead of
+        // silently mis-slicing the vector payload.
+        assert!(matches!(QueryHeader::parse(&body, 1), Err(FrameError::BadHeader(_))));
+        body.truncate(QUERY_HEADER_LEN_V2 - 1);
+        assert!(matches!(QueryHeader::parse(&body, 2), Err(FrameError::Truncated { .. })));
+    }
+
+    #[test]
+    fn v2_magic_negotiated_per_frame() {
+        let mut wire = Vec::new();
+        let at = begin_frame_v(OP_QUERY, 2, &mut wire);
+        wire.extend_from_slice(b"xx");
+        end_frame(at, &mut wire);
+        encode_frame(OP_JSON, b"{}", &mut wire); // v1 alongside
+        let mut dec = FrameDecoder::new();
+        dec.feed(&wire);
+        let f = dec.try_frame().unwrap().unwrap();
+        assert_eq!((f.op, f.version), (OP_QUERY, 2));
+        let f = dec.try_frame().unwrap().unwrap();
+        assert_eq!((f.op, f.version), (OP_JSON, 1));
+        // Unknown versions are rejected as bad magic.
+        let mut dec = FrameDecoder::new();
+        dec.feed(b"PLW3\x00\x00\x00\x00\x01\x00\x00\x00");
+        assert!(matches!(dec.try_frame(), Err(FrameError::BadMagic(_))));
     }
 
     #[test]
@@ -438,11 +555,14 @@ mod tests {
         let h = RespHeader {
             flags: FLAG_OK,
             storage: 1,
+            covered: 0,
+            shards_total: 0,
             count: 2,
             flops: 12345,
             service_ns: 67890,
             generation: 3,
             batch: 8,
+            epsilon_hat: 0.0,
         };
         let mut body = Vec::new();
         h.write(&mut body);
@@ -451,6 +571,34 @@ mod tests {
         assert_eq!(RespHeader::parse(&body).unwrap(), h);
         body.pop();
         assert!(matches!(RespHeader::parse(&body), Err(FrameError::BadHeader(_))));
+    }
+
+    #[test]
+    fn resp_header_degraded_fields_roundtrip() {
+        let h = RespHeader {
+            flags: FLAG_OK | FLAG_DEGRADED,
+            storage: 1,
+            covered: 3,
+            shards_total: 4,
+            count: 0,
+            flops: 10,
+            service_ns: 20,
+            generation: 0,
+            batch: 1,
+            epsilon_hat: 0.125,
+        };
+        let mut body = Vec::new();
+        h.write(&mut body);
+        // count = 0 ⇒ header-only body, still length-checked.
+        assert_eq!(RespHeader::parse(&body).unwrap(), h);
+        // The degradation fields live where v1 wrote reserved zeroes:
+        // an exact-complete reply still zeroes them.
+        let plain = RespHeader { flags: FLAG_OK, covered: 0, shards_total: 0, epsilon_hat: 0.0, ..h };
+        let mut body = Vec::new();
+        plain.write(&mut body);
+        assert_eq!(body[2], 0);
+        assert_eq!(body[3], 0);
+        assert_eq!(&body[36..40], &[0u8; 4]);
     }
 
     #[test]

@@ -11,8 +11,11 @@ use crate::jsonlite::Json;
 
 /// Build the line protocol's successful query reply object (the
 /// single source for both codecs' JSON paths and `handle_line`).
+/// Degradation fields mirror the binary codec's [`super::frame`]
+/// response header: `degraded` + `epsilon_hat` + shard coverage, plus
+/// the admission-degradation knobs when the coordinator applied any.
 pub fn query_response_json(resp: &QueryResponse) -> Json {
-    Json::obj([
+    let mut pairs = vec![
         ("ok", Json::Bool(true)),
         ("indices", Json::usizes(&resp.indices)),
         ("scores", Json::f32s(&resp.scores)),
@@ -21,7 +24,18 @@ pub fn query_response_json(resp: &QueryResponse) -> Json {
         ("batch", Json::Num(resp.batch_size as f64)),
         ("storage", Json::Str(resp.storage.label().into())),
         ("generation", Json::Num(resp.generation as f64)),
-    ])
+        ("degraded", Json::Bool(resp.degraded)),
+        ("epsilon_hat", Json::Num(resp.epsilon_hat)),
+        ("shards", Json::Num(resp.shards as f64)),
+        ("shards_total", Json::Num(resp.shards_total as f64)),
+    ];
+    if let Some(eps) = resp.applied_epsilon {
+        pairs.push(("applied_epsilon", Json::Num(eps)));
+    }
+    if let Some(k) = resp.applied_k {
+        pairs.push(("applied_k", Json::Num(k as f64)));
+    }
+    Json::obj(pairs)
 }
 
 /// Newline-delimited JSON codec (the negotiation default).

@@ -15,11 +15,18 @@
 //!   over binary frames produces byte-identical answers (indices, score
 //!   bits, flops, storage, generation);
 //! * per-request storage-tier overrides ride both codecs;
+//! * the three-way reply contract (exact-complete / degraded / shed)
+//!   rides both codecs: binary via the response-header flag bits +
+//!   ε̂, JSON via `degraded`/`epsilon_hat` fields (shed stays the
+//!   pre-anytime error shape);
+//! * a FLOP budget promotes the query frame to `PLW2` per-frame — a
+//!   budget-free frame on the same live connection stays v1;
 //! * every line-protocol op works over binary transport (the CI `wire`
 //!   leg pins `RUST_PALLAS_WIRE=binary` and replays the TCP batteries
 //!   through the binary codec).
 
 use bandit_mips::algos::ground_truth;
+use bandit_mips::bandit::force_no_degrade_requested;
 use bandit_mips::coordinator::server::{Client, Server};
 use bandit_mips::coordinator::{Coordinator, CoordinatorConfig, QueryMode};
 use bandit_mips::data::quant::Storage;
@@ -530,6 +537,215 @@ fn hedged_sharded_load_over_negotiated_codec() {
     for h in handles {
         h.join().unwrap();
     }
+    server.shutdown();
+}
+
+/// The three-way reply contract — exact-complete, degraded, shed —
+/// rides both codecs off one live server and the two codecs agree on
+/// every fidelity field:
+///
+/// * exact-complete: plain OK, `degraded == false`, ε̂ == 0, full
+///   shard coverage;
+/// * degraded: a FLOP budget of 1 forces a round-1 harvest on every
+///   BOUNDEDME instance with n − k ≥ 2 (the halving schedule always
+///   runs ≥ 2 rounds), so the reply carries `FLAG_DEGRADED` + ε̂ > 0
+///   over binary and `degraded:true` + the same ε̂ over JSON;
+/// * shed: an already-expired deadline on an unarmed (exact) query
+///   sheds whole — `FLAG_SHED` with an empty body over binary, the
+///   pre-anytime `"deadline exceeded (shed)"` error shape over JSON.
+///
+/// On the CI degrade leg (`RUST_PALLAS_FORCE_NO_DEGRADE=1`) harvesting
+/// is pinned off, so the budget queries run to completion and must
+/// reply clean — same frames, same wire, no degraded bit.
+#[test]
+fn three_way_reply_flags_ride_both_codecs() {
+    let (server, _) = serve(2, Storage::F32);
+    let mut json = Client::connect_json(server.addr()).unwrap();
+    let mut bin = Client::connect_binary(server.addr()).unwrap();
+    let q: Vec<f32> = (0..DIM).map(|i| (i as f32 * 0.23).sin()).collect();
+
+    // --- exact-complete: BOUNDEDME without any budget or deadline.
+    let clean = bin
+        .query_binary(
+            &[&q],
+            &QueryOpts {
+                k: 3,
+                epsilon: 0.1,
+                delta: 0.1,
+                seed: 7,
+                mode: QueryMode::BoundedMe,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .remove(0);
+    assert!(clean.ok && !clean.shed && !clean.degraded);
+    assert_eq!(clean.epsilon_hat, 0.0);
+    assert_eq!((clean.covered, clean.shards_total), (2, 2));
+
+    // --- degraded: FLOP budget of 1 harvests after round 1.
+    let b = bin
+        .query_binary(
+            &[&q],
+            &QueryOpts {
+                k: 3,
+                epsilon: 0.1,
+                delta: 0.1,
+                seed: 7,
+                mode: QueryMode::BoundedMe,
+                budget_flops: Some(1),
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .remove(0);
+    let j = json
+        .call(&Json::obj([
+            ("op", Json::Str("query".into())),
+            ("vector", Json::f32s(&q)),
+            ("k", Json::Num(3.0)),
+            ("epsilon", Json::Num(0.1)),
+            ("delta", Json::Num(0.1)),
+            ("seed", Json::Num(7.0)),
+            ("mode", Json::Str("bounded_me".into())),
+            ("budget_flops", Json::Num(1.0)),
+        ]))
+        .unwrap();
+    assert!(b.ok && !b.shed, "{:?}", b.error);
+    assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(b.indices.len(), 3);
+    if force_no_degrade_requested() {
+        assert!(!b.degraded);
+        assert_eq!(b.epsilon_hat, 0.0);
+        assert_eq!(j.get("degraded").unwrap().as_bool(), Some(false));
+    } else {
+        assert!(b.degraded, "budget_flops=1 must harvest");
+        assert!(b.epsilon_hat > 0.0 && b.epsilon_hat <= 0.1 + 1e-6);
+        assert_eq!((b.covered, b.shards_total), (2, 2));
+        assert_eq!(j.get("degraded").unwrap().as_bool(), Some(true));
+        // Same query, same seed, per-item execution on both paths:
+        // the codecs must agree on the achieved ε̂ to f32 bit-exactness
+        // and on the harvested answer itself.
+        let j_eps = j.get("epsilon_hat").unwrap().as_f64().unwrap() as f32;
+        assert_eq!(j_eps.to_bits(), b.epsilon_hat.to_bits(), "ε̂ disagrees across codecs");
+        let jindices: Vec<u64> = j
+            .get("indices")
+            .unwrap()
+            .as_f32_vec()
+            .unwrap()
+            .iter()
+            .map(|&x| x as u64)
+            .collect();
+        assert_eq!(jindices, b.indices, "harvested indices disagree across codecs");
+    }
+    assert_eq!(
+        j.get("shards_total").unwrap().as_usize().unwrap() as u8,
+        b.shards_total
+    );
+
+    // --- shed: an exact query whose deadline expired before admission.
+    let s = bin
+        .query_binary(
+            &[&q],
+            &QueryOpts {
+                k: 3,
+                mode: QueryMode::Exact,
+                deadline: Some(Duration::from_nanos(1)),
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .remove(0);
+    assert!(!s.ok && s.shed && !s.degraded);
+    assert!(s.indices.is_empty() && s.scores.is_empty());
+    assert_eq!(s.epsilon_hat, 0.0);
+    assert_eq!((s.covered, s.shards_total), (0, 2));
+    // JSON keeps the pre-anytime contract: shed is an error reply.
+    let js = json
+        .call(&Json::obj([
+            ("op", Json::Str("query".into())),
+            ("vector", Json::f32s(&q)),
+            ("k", Json::Num(3.0)),
+            ("mode", Json::Str("exact".into())),
+            ("deadline_ms", Json::Num(1e-6)),
+        ]))
+        .unwrap();
+    assert_eq!(js.get("ok").unwrap().as_bool(), Some(false));
+    assert!(js.get("error").unwrap().as_str().unwrap().contains("shed"));
+
+    // The degraded traffic landed in the three-way metrics split
+    // (one shed per codec, one harvest per codec).
+    let m = json.call(&Json::obj([("op", Json::Str("metrics".into()))])).unwrap();
+    assert_eq!(m.get("shed").unwrap().as_usize(), Some(2));
+    let degraded = m.get("degraded").unwrap().as_usize().unwrap();
+    if force_no_degrade_requested() {
+        assert_eq!(degraded, 0);
+    } else {
+        assert_eq!(degraded, 2, "one budget harvest per codec");
+    }
+    server.shutdown();
+}
+
+/// The wire revision is negotiated **per frame**, not per connection: a
+/// FLOP budget promotes its own query frame to `PLW2` (the v2 header
+/// carries the extra `budget_flops` word), while a budget-free frame on
+/// the very same socket stays byte-compatible v1 `PLW1` — and both are
+/// answered correctly in order.
+#[test]
+fn plw2_negotiates_per_frame_over_tcp() {
+    let (server, data) = serve(1, Storage::F32);
+    let q: Vec<f32> = (0..DIM).map(|i| (i as f32 * 0.31).cos()).collect();
+
+    let mut v2_wire = Vec::new();
+    binary::encode_query_frame(
+        &[&q],
+        &QueryOpts {
+            k: 3,
+            epsilon: 0.1,
+            delta: 0.1,
+            mode: QueryMode::BoundedMe,
+            budget_flops: Some(1),
+            ..Default::default()
+        },
+        &mut v2_wire,
+    )
+    .unwrap();
+    assert_eq!(&v2_wire[..4], &frame::MAGIC_V2, "budgeted frame must lead with PLW2");
+
+    let mut v1_wire = Vec::new();
+    binary::encode_query_frame(
+        &[&q],
+        &QueryOpts { k: 3, epsilon: 1e-9, mode: QueryMode::BoundedMe, ..Default::default() },
+        &mut v1_wire,
+    )
+    .unwrap();
+    assert_eq!(&v1_wire[..4], &MAGIC, "budget-free frame must stay v1");
+
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    let mut dec = FrameDecoder::new();
+
+    // v2 first (it also negotiates binary via the leading 'P').
+    stream.write_all(&v2_wire).unwrap();
+    let (op, body) = read_raw_frame(&mut stream, &mut dec);
+    assert_eq!(op, frame::RESP_QUERY);
+    let r2 = binary::decode_reply(&body).unwrap();
+    assert!(r2.ok, "{:?}", r2.error);
+    assert_eq!(r2.indices.len(), 3);
+    if !force_no_degrade_requested() {
+        assert!(r2.degraded && r2.epsilon_hat > 0.0);
+    }
+
+    // v1 on the same connection still decodes and answers exactly.
+    stream.write_all(&v1_wire).unwrap();
+    let (op, body) = read_raw_frame(&mut stream, &mut dec);
+    assert_eq!(op, frame::RESP_QUERY);
+    let r1 = binary::decode_reply(&body).unwrap();
+    assert!(r1.ok && !r1.degraded && !r1.shed);
+    let mut got: Vec<usize> = r1.indices.iter().map(|&i| i as usize).collect();
+    got.sort_unstable();
+    let mut want = ground_truth(&data, &q, 3);
+    want.sort_unstable();
+    assert_eq!(got, want);
     server.shutdown();
 }
 

@@ -3,15 +3,21 @@
 
 Usage: bench_diff.py CURRENT BASELINE [--threshold 0.10]
 
-Matches benchmark rows by (name, storage, churn, codec) — `storage` is
-the optional per-row tier tag the mixed-precision rows carry ("f16",
-"int8", ...), `churn` the optional live-mutation rate tag the serving
-churn rows carry ("0%", "1%", "10%"), `codec` the optional wire-codec
-tag the serving wire rows carry ("json", "binary"); untagged rows key
-on name alone — and compares `mean_s`. Regressions beyond
-the threshold are printed as GitHub advisory annotations (`::warning::`)
-so CI surfaces them without failing the build — bench runners are noisy,
-a hard gate would flap. Rows with no baseline counterpart (newly added
+Matches benchmark rows by (name, storage, churn, codec, offered_load) —
+`storage` is the optional per-row tier tag the mixed-precision rows
+carry ("f16", "int8", ...), `churn` the optional live-mutation rate tag
+the serving churn rows carry ("0%", "1%", "10%"), `codec` the optional
+wire-codec tag the serving wire rows carry ("json", "binary"),
+`offered_load` the optional overload-sweep multiplier the anytime
+degradation rows carry (1.0, 2.0, 4.0); untagged rows key on name alone
+— and compares `mean_s`. Regressions beyond the threshold are printed
+as GitHub advisory annotations (`::warning::`) so CI surfaces them
+without failing the build — bench runners are noisy, a hard gate would
+flap. Rows tagged `answered_within_deadline` (the serving overload
+sweep) are quality rows, not latency rows: their `mean_s` is the
+fraction of submitted queries answered within the deadline, so HIGHER
+is better and the regression test flips — a current fraction more than
+the threshold below baseline warns. Rows with no baseline counterpart (newly added
 benches, e.g. `pull_panel/*` before the next scheduled baseline refresh)
 are informational only: they are listed in one `::notice::` annotation
 and never diffed or counted as regressions. Exits 0 always unless the
@@ -36,14 +42,17 @@ def load_rows(path):
             row.get("storage", ""),
             row.get("churn", ""),
             row.get("codec", ""),
+            str(row.get("offered_load", "")),
         ): row
         for row in doc.get("results", [])
     }
 
 
 def label(key):
-    name, storage, churn, codec = key
-    tags = "/".join(t for t in (storage, churn, codec) if t)
+    name, storage, churn, codec, load = key
+    if load:
+        load = f"load={load}x"
+    tags = "/".join(t for t in (storage, churn, codec, load) if t)
     return f"{name} [{tags}]" if tags else name
 
 
@@ -85,7 +94,22 @@ def main(argv):
             continue
         ratio = cur_mean / base_mean
         delta_pct = (ratio - 1.0) * 100.0
-        if ratio > 1.0 + threshold:
+        if "answered_within_deadline" in row or "answered_within_deadline" in base:
+            # Quality row: mean_s is the answered-within-deadline
+            # fraction — higher is better, so the direction flips.
+            if ratio < 1.0 - threshold:
+                regressions += 1
+                print(
+                    f"::warning title=answered-within-deadline regression::"
+                    f"{label(key)}: {base_mean:.3f} -> {cur_mean:.3f} "
+                    f"answered fraction ({delta_pct:+.1f}%)"
+                )
+            else:
+                print(
+                    f"bench diff: {label(key)}: {delta_pct:+.1f}% "
+                    f"(answered fraction, higher is better)"
+                )
+        elif ratio > 1.0 + threshold:
             regressions += 1
             print(
                 f"::warning title=bench regression::{label(key)}: "
